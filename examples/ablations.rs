@@ -1,0 +1,68 @@
+//! Tables 5 & 6 style ablations on one model: pruning structure
+//! (coupled FASP vs per-operator Wanda) and Q/K pruning vs skipping.
+//!
+//! ```bash
+//! cargo run --release --example ablations [-- model]
+//! ```
+
+use fasp::bench_support::table::Table;
+use fasp::experiments::common::{fmt_ppl, ExpCtx};
+use fasp::prune::{Method, PruneOpts};
+use fasp::runtime::Manifest;
+
+fn main() -> fasp::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "opt_tiny".into());
+    let manifest = Manifest::load(&fasp::artifacts_dir())?;
+    let ctx = ExpCtx::new(manifest, false);
+    let p = ctx.prepared(&model)?;
+    let sparsities = [0.10, 0.20, 0.30];
+
+    let mut t5 = Table::new(
+        &format!("Ablation: pruning structure ({model})"),
+        &["", "10%", "20%", "30%"],
+    );
+    for (label, method) in [("Wanda (uncoupled)", Method::WandaStruct), ("FASP", Method::Fasp)] {
+        let mut row = vec![label.to_string()];
+        for &s in &sparsities {
+            row.push(fmt_ppl(p.prune_and_eval(&ctx, method, s)?.0));
+        }
+        t5.row(row);
+    }
+    t5.print();
+
+    let mut t6 = Table::new(
+        &format!("Ablation: pruning W_Q/W_K ({model})"),
+        &["", "10%", "20%", "30%"],
+    );
+    for (label, prune_qk) in [("Pruning W_Q and W_K", true), ("FASP (skip Q/K)", false)] {
+        let mut row = vec![label.to_string()];
+        for &s in &sparsities {
+            let mut opts = PruneOpts::new(Method::Fasp, s);
+            opts.calib_batches = ctx.calib_batches;
+            opts.prune_qk = prune_qk;
+            let (w, _, _) = p.prune_with(&opts)?;
+            row.push(fmt_ppl(p.ppl_of(&ctx, &w)?));
+        }
+        t6.row(row);
+    }
+    t6.print();
+
+    // bonus: restoration on/off — the §3.3 mechanism in isolation
+    let mut t7 = Table::new(
+        &format!("Ablation: restoration ({model})"),
+        &["", "10%", "20%", "30%"],
+    );
+    for (label, restore) in [("FASP w/o restoration", false), ("FASP", true)] {
+        let mut row = vec![label.to_string()];
+        for &s in &sparsities {
+            let mut opts = PruneOpts::new(Method::Fasp, s);
+            opts.calib_batches = ctx.calib_batches;
+            opts.restore = restore;
+            let (w, _, _) = p.prune_with(&opts)?;
+            row.push(fmt_ppl(p.ppl_of(&ctx, &w)?));
+        }
+        t7.row(row);
+    }
+    t7.print();
+    Ok(())
+}

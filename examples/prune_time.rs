@@ -1,0 +1,46 @@
+//! Table 4 style pruning-time comparison across methods and model sizes,
+//! with the per-phase breakdown that explains the ordering.
+//!
+//! ```bash
+//! cargo run --release --example prune_time [-- fast]
+//! ```
+
+use fasp::bench_support::table::Table;
+use fasp::experiments::common::ExpCtx;
+use fasp::model::zoo;
+use fasp::prune::Method;
+use fasp::runtime::Manifest;
+
+fn main() -> fasp::Result<()> {
+    let fast = std::env::args().any(|a| a == "fast");
+    let manifest = Manifest::load(&fasp::artifacts_dir())?;
+    let ctx = ExpCtx::new(manifest, fast);
+    let models: &[&str] = if fast {
+        &["llama_tiny"]
+    } else {
+        &zoo::LLAMA_MODELS
+    };
+
+    let mut t = Table::new(
+        "Pruning wall-time at 20% sparsity",
+        &["Method", "model", "total", "capture", "metric", "restore", "other"],
+    );
+    for model in models {
+        let p = ctx.prepared(model)?;
+        for method in Method::all() {
+            let (_, rep) = p.prune_and_eval(&ctx, method, 0.20)?;
+            let known = rep.phase("capture") + rep.phase("metric") + rep.phase("restore");
+            t.row(vec![
+                method.label().to_string(),
+                model.to_string(),
+                format!("{:.2}s", rep.total_s),
+                format!("{:.2}s", rep.phase("capture")),
+                format!("{:.2}s", rep.phase("metric") + rep.phase("gradcol")),
+                format!("{:.2}s", rep.phase("restore") + rep.phase("pca")),
+                format!("{:.2}s", (rep.total_s - known).max(0.0)),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: the one-screen FASP workflow.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Loads (or trains on first run) the tiny LLaMA-style model, prunes 20%
+//! with FASP, and prints dense-vs-pruned perplexity plus the pruning-time
+//! breakdown — the paper's headline workflow end to end.
+
+use fasp::data::{Corpus, Dataset};
+use fasp::eval::perplexity;
+use fasp::prune::{prune, Method, PruneOpts};
+use fasp::runtime::{Manifest, ModelEngine};
+
+fn main() -> fasp::Result<()> {
+    let model = "llama_tiny";
+    let manifest = Manifest::load(&fasp::artifacts_dir())?;
+    let engine = ModelEngine::new(&manifest, model)?;
+    let spec = engine.spec.clone();
+    println!(
+        "model {model}: {} layers, d={}, {} params",
+        spec.n_layers,
+        spec.d_model,
+        spec.n_params_elems()
+    );
+
+    // dataset + cached checkpoint (trains ~1 min on first run)
+    let corpus = Corpus::new(spec.vocab, 42 ^ spec.vocab as u64);
+    let dataset = Dataset::new(corpus, spec.batch, spec.seq, 300);
+    let weights = fasp::train::ensure_trained(&manifest, model, &dataset)?;
+
+    let eval = dataset.valid_batches(8);
+    let dense_ppl = perplexity(&engine, &weights, &eval)?;
+    println!("dense perplexity: {dense_ppl:.3}");
+
+    // FASP at 20% sparsity
+    let opts = PruneOpts::new(Method::Fasp, 0.20);
+    let (pruned, mask, report) = prune(&engine, &weights, &dataset, &opts)?;
+    let pruned_ppl = perplexity(&engine, &pruned, &eval)?;
+
+    println!(
+        "FASP 20%: achieved sparsity {:.1}% ({} params removed)",
+        report.achieved_sparsity * 100.0,
+        report.params_removed
+    );
+    println!("pruned perplexity: {pruned_ppl:.3} (dense {dense_ppl:.3})");
+    println!(
+        "pruning time {:.2}s — {}",
+        report.total_s,
+        report
+            .phase_s
+            .iter()
+            .map(|(n, s)| format!("{n} {s:.2}s"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    mask.validate(&spec)?;
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Figures 3–4 style sweep: perplexity vs sparsity for several methods on
+//! one model, printed as ASCII chart + CSV.
+//!
+//! ```bash
+//! cargo run --release --example sparsity_sweep [-- model [fast]]
+//! ```
+
+use fasp::experiments::common::ExpCtx;
+use fasp::bench_support::table::ascii_chart;
+use fasp::prune::Method;
+use fasp::runtime::Manifest;
+
+fn main() -> fasp::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("llama_tiny");
+    let fast = args.iter().any(|a| a == "fast");
+
+    let manifest = Manifest::load(&fasp::artifacts_dir())?;
+    let ctx = ExpCtx::new(manifest, fast);
+    let p = ctx.prepared(model)?;
+
+    let sweep = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5];
+    let methods = [Method::Magnitude, Method::Flap, Method::Fasp];
+    let dense = p.dense_ppl(&ctx)?;
+
+    let mut series = Vec::new();
+    println!("sparsity,{}", methods.map(|m| m.label()).join(","));
+    let mut rows = vec![vec![0.0f64; methods.len()]; sweep.len()];
+    for (mi, &method) in methods.iter().enumerate() {
+        let mut ys = Vec::new();
+        for (si, &s) in sweep.iter().enumerate() {
+            let ppl = if s == 0.0 {
+                dense
+            } else {
+                p.prune_and_eval(&ctx, method, s)?.0
+            };
+            ys.push(ppl.ln());
+            rows[si][mi] = ppl;
+        }
+        series.push((method.label().to_string(), ys));
+    }
+    for (si, &s) in sweep.iter().enumerate() {
+        println!(
+            "{:.2},{}",
+            s,
+            rows[si]
+                .iter()
+                .map(|v| format!("{v:.3}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+    }
+    println!(
+        "{}",
+        ascii_chart(
+            &format!("log(PPL) vs sparsity — {model}"),
+            &sweep,
+            &series,
+            14
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! END-TO-END driver (DESIGN.md §4): proves all layers compose on a real
+//! small workload.
+//!
+//! 1. trains the LLaMA-style `small` model for a few hundred steps on the
+//!    synthetic corpus **through the AOT `train_step` artifact** (L1
+//!    Pallas kernels → L2 JAX graph → PJRT runtime → L3 trainer), logging
+//!    the loss curve;
+//! 2. prunes the trained model at 20% with FASP and every baseline;
+//! 3. evaluates perplexity and the seven zero-shot suites for each;
+//! 4. prints the comparison and writes `results/e2e.md`.
+//!
+//! Recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_prune_eval
+//! ```
+
+use fasp::bench_support::table::Table;
+use fasp::data::tasks::{TaskKind, TaskSuite};
+use fasp::data::{Corpus, Dataset};
+use fasp::eval::{eval_suite, perplexity};
+use fasp::model::zoo;
+use fasp::prune::{prune, Method, PruneOpts};
+use fasp::runtime::{Manifest, ModelEngine};
+use fasp::train::{train, TrainOpts};
+
+fn main() -> fasp::Result<()> {
+    let model = "llama_small";
+    let manifest = Manifest::load(&fasp::artifacts_dir())?;
+    let engine = ModelEngine::new(&manifest, model)?;
+    let spec = engine.spec.clone();
+
+    // ---- 1. train through the PJRT train_step artifact -----------------
+    let mut opts = TrainOpts::for_model(model);
+    if std::env::var("FASP_E2E_FAST").is_ok() {
+        opts.steps = 60;
+    }
+    let corpus = Corpus::new(spec.vocab, 42 ^ spec.vocab as u64);
+    let dataset = Dataset::new(corpus, spec.batch, spec.seq, opts.steps + 8);
+    println!(
+        "training {model} ({} params) for {} steps on the synthetic corpus…",
+        spec.n_params_elems(),
+        opts.steps
+    );
+    let (weights, report) = train(&manifest, model, &dataset, &opts)?;
+    weights.save(&zoo::checkpoint_path(model))?;
+    println!(
+        "loss curve: start {:.3} → mid {:.3} → final {:.3}  ({:.1}s total, {:.2}s/step)",
+        report.losses.first().unwrap(),
+        report.losses[report.losses.len() / 2],
+        report.losses.last().unwrap(),
+        report.wall_s,
+        report.wall_s / report.steps as f64
+    );
+    // compact curve printout (every ~10%)
+    let stride = (report.losses.len() / 10).max(1);
+    let curve: Vec<String> = report
+        .losses
+        .iter()
+        .step_by(stride)
+        .map(|l| format!("{l:.2}"))
+        .collect();
+    println!("curve: {}", curve.join(" → "));
+
+    // ---- 2+3. prune with every method, evaluate -------------------------
+    let eval_batches = dataset.valid_batches(10);
+    let dense_ppl = perplexity(&engine, &weights, &eval_batches)?;
+    let suites: Vec<TaskSuite> = TaskKind::all()
+        .iter()
+        .map(|&k| TaskSuite::generate(&dataset.corpus, k, 80, 42))
+        .collect();
+    let zs = |w: &fasp::model::Weights| -> fasp::Result<f64> {
+        let mut acc = 0.0;
+        for s in &suites {
+            acc += eval_suite(&engine, w, s)?.accuracy;
+        }
+        Ok(acc / suites.len() as f64)
+    };
+
+    let mut t = Table::new(
+        "End-to-end: train → prune (20%) → evaluate, llama_small",
+        &["Method", "PPL ↓", "zero-shot mean ↑", "prune time", "achieved sparsity"],
+    );
+    t.row(vec![
+        "Dense".into(),
+        format!("{dense_ppl:.3}"),
+        format!("{:.2}%", zs(&weights)?),
+        "—".into(),
+        "0%".into(),
+    ]);
+    for method in Method::all() {
+        let mut popts = PruneOpts::new(method, 0.20);
+        popts.calib_batches = 6;
+        let (pw, _, rep) = prune(&engine, &weights, &dataset, &popts)?;
+        let ppl = perplexity(&engine, &pw, &eval_batches)?;
+        t.row(vec![
+            method.label().to_string(),
+            format!("{ppl:.3}"),
+            format!("{:.2}%", zs(&pw)?),
+            format!("{:.2}s", rep.total_s),
+            format!("{:.1}%", rep.achieved_sparsity * 100.0),
+        ]);
+        println!("{} done ({:.2}s)", method.label(), rep.total_s);
+    }
+    let rendered = t.render();
+    println!("{rendered}");
+    let out = fasp::repo_root().join("results");
+    std::fs::create_dir_all(&out)?;
+    std::fs::write(out.join("e2e.md"), rendered)?;
+    println!("written to results/e2e.md");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Table 3 style zero-shot comparison on one model: dense vs FASP vs a
+//! baseline, all seven suites.
+//!
+//! ```bash
+//! cargo run --release --example zero_shot [-- model]
+//! ```
+
+use fasp::bench_support::table::Table;
+use fasp::data::tasks::{TaskKind, TaskSuite};
+use fasp::eval::eval_suite;
+use fasp::experiments::common::ExpCtx;
+use fasp::prune::Method;
+use fasp::runtime::Manifest;
+
+fn main() -> fasp::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "llama_tiny".into());
+    let manifest = Manifest::load(&fasp::artifacts_dir())?;
+    let ctx = ExpCtx::new(manifest, false);
+    let p = ctx.prepared(&model)?;
+
+    let suites: Vec<TaskSuite> = TaskKind::all()
+        .iter()
+        .map(|&k| TaskSuite::generate(&p.dataset.corpus, k, ctx.tasks_per_suite, ctx.seed))
+        .collect();
+
+    let mut headers = vec!["Model"];
+    let labels: Vec<&'static str> = suites.iter().map(|s| s.kind.label()).collect();
+    headers.extend(labels.iter());
+    headers.push("Mean");
+    let mut t = Table::new(&format!("Zero-shot accuracy (%) — {model}"), &headers);
+
+    let mut add = |name: &str, w: &fasp::model::Weights| -> fasp::Result<()> {
+        let mut row = vec![name.to_string()];
+        let mut sum = 0.0;
+        for s in &suites {
+            let r = eval_suite(&p.engine, w, s)?;
+            sum += r.accuracy;
+            row.push(format!("{:.1}", r.accuracy));
+        }
+        row.push(format!("{:.1}", sum / suites.len() as f64));
+        t.row(row);
+        Ok(())
+    };
+
+    add("Dense", &p.weights)?;
+    for (label, method) in
+        [("FASP 20%", Method::Fasp), ("FLAP 20%", Method::Flap), ("Magnitude 20%", Method::Magnitude)]
+    {
+        let (w, _, _) = p.prune_only(&ctx, method, 0.20)?;
+        add(label, &w)?;
+    }
+    t.print();
+    Ok(())
+}

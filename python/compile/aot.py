@@ -1,0 +1,229 @@
+"""AOT compiler: lowers every L2 entry (which embed the L1 Pallas kernels)
+to HLO *text* artifacts + a manifest the rust coordinator consumes.
+
+Run once at build time (`make artifacts`); python never runs again.
+
+    cd python && python -m compile.aot --out-dir ../artifacts [--only REGEX]
+
+Artifacts per model (6 zoo configs):
+    {model}_fwd_loss    (params..., tokens, targets) -> (mean, seq_nll, tok_nll)
+    {model}_train_step  (params..., m..., v..., tokens, targets, t, lr)
+                        -> (loss, params'..., m'..., v'...)
+    {model}_capture     (params..., tokens) -> per-layer Gram/mean stats
+    {model}_gradcol     (params..., tokens, targets) -> per-layer Taylor scores
+Shared:
+    wanda_metric_{m}x{n}   (w, xnorm) -> scores      [L1 pallas kernel]
+    gram_{s}x{n}           (x) -> X^T X              [L1 pallas kernel]
+    latency_llama_small_s{pct}  sliced decoder layer (speedup bench)
+
+Interchange is HLO text — see aot_util.to_hlo_text for why.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .aot_util import to_hlo_text
+from .capture import CAPTURE_LEAVES, capture
+from .configs import MODEL_CONFIGS, ModelConfig, param_count, param_spec
+from .gradcol import GRADCOL_LEAVES, gradcol
+from .latency import layer_fwd_sliced, sliced_dims
+from .model import fwd_loss
+from .train import train_step
+from .kernels.attention import causal_attention
+from .kernels.gram import gram
+from .kernels.wanda import wanda_scores
+
+F32, I32 = "f32", "i32"
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dt(dtype):
+    return I32 if dtype in ("i32", jnp.int32) else F32
+
+
+class Builder:
+    def __init__(self, out_dir: str, only: str | None):
+        self.out_dir = out_dir
+        self.only = re.compile(only) if only else None
+        self.manifest = {
+            "format": 1,
+            "capture_leaves": CAPTURE_LEAVES,
+            "gradcol_leaves": GRADCOL_LEAVES,
+            "models": {},
+            "artifacts": {},
+            "latency": {},
+        }
+
+    def want(self, name: str) -> bool:
+        return self.only is None or bool(self.only.search(name))
+
+    def add_model(self, cfg: ModelConfig):
+        self.manifest["models"][cfg.name] = {
+            "family": cfg.family,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+            "params": [[n, list(s)] for n, s in param_spec(cfg)],
+        }
+
+    def emit(self, name: str, fn, in_specs, in_names):
+        """Lower fn(*in_specs) and record artifact metadata."""
+        if not self.want(name):
+            return
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        out_tree = jax.eval_shape(fn, *in_specs)
+        leaves = jax.tree_util.tree_leaves(out_tree)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(f"{self.out_dir}/{fname}", "w") as f:
+            f.write(text)
+        flat_in = jax.tree_util.tree_leaves(in_specs)
+        assert len(flat_in) == len(in_names), (name, len(flat_in), len(in_names))
+        self.manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [
+                [n, _dt(s.dtype), list(s.shape)]
+                for n, s in zip(in_names, flat_in)
+            ],
+            "outputs": [[_dt(l.dtype), list(l.shape)] for l in leaves],
+        }
+        print(f"  {name}: {len(text) / 1e6:.2f} MB HLO, "
+              f"{len(flat_in)} in / {len(leaves)} out, {time.time()-t0:.1f}s",
+              flush=True)
+
+    def finish(self):
+        path = f"{self.out_dir}/manifest.json"
+        if self.only is not None and os.path.exists(path):
+            # partial build: merge into the existing manifest instead of
+            # clobbering entries the filter skipped
+            with open(path) as f:
+                old = json.load(f)
+            for key in ("artifacts", "models", "latency"):
+                merged = old.get(key, {})
+                merged.update(self.manifest[key])
+                self.manifest[key] = merged
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"manifest: {len(self.manifest['artifacts'])} artifacts")
+
+
+def build_model_entries(b: Builder, cfg: ModelConfig):
+    p_len = param_count(cfg)
+    packed = _spec((p_len,))
+    state = _spec((3 * p_len,))
+    toks = _spec((cfg.batch, cfg.seq), jnp.int32)
+    b.emit(
+        f"{cfg.name}_fwd_loss",
+        fwd_loss(cfg),
+        (packed, toks, toks),
+        ["params", "tokens", "targets"],
+    )
+    b.emit(
+        f"{cfg.name}_capture",
+        capture(cfg),
+        (packed, toks),
+        ["params", "tokens"],
+    )
+    b.emit(
+        f"{cfg.name}_gradcol",
+        gradcol(cfg),
+        (packed, toks, toks),
+        ["params", "tokens", "targets"],
+    )
+    scalar = _spec(())
+    b.emit(
+        f"{cfg.name}_train_step",
+        train_step(cfg),
+        (state, toks, toks, scalar, scalar),
+        ["state", "tokens", "targets", "t", "lr"],
+    )
+
+
+def build_kernel_entries(b: Builder):
+    # Wanda metric kernels for every prunable-target shape in the zoo:
+    # fc2/down [d, f] and out-proj [d, d].
+    shapes = set()
+    for cfg in MODEL_CONFIGS.values():
+        shapes.add((cfg.d_model, cfg.d_ff))
+        shapes.add((cfg.d_model, cfg.d_model))
+    for m, n in sorted(shapes):
+        b.emit(
+            f"wanda_metric_{m}x{n}",
+            lambda w, x: (wanda_scores(w, x),),
+            (_spec((m, n)), _spec((n,))),
+            ["w", "xnorm"],
+        )
+    # Standalone gram kernels (S = batch*seq rows) for benches/tests.
+    cfg = MODEL_CONFIGS["llama_small"]
+    s = cfg.batch * cfg.seq
+    for n in sorted({cfg.d_model, cfg.d_ff}):
+        b.emit(
+            f"gram_{s}x{n}",
+            lambda x: (gram(x),),
+            (_spec((s, n)),),
+            ["x"],
+        )
+    # Flash-attention kernel artifact (single head at llama_small shape).
+    dh = cfg.head_dim
+    b.emit(
+        f"flash_attn_{cfg.seq}x{dh}",
+        lambda q, k, v: (causal_attention(q, k, v),),
+        (_spec((cfg.seq, dh)), _spec((cfg.seq, dh)), _spec((cfg.seq, dh))),
+        ["q", "k", "v"],
+    )
+
+
+def build_latency_entries(b: Builder):
+    cfg = MODEL_CONFIGS["llama_small"]
+    for pct in (0, 10, 20, 30, 40, 50):
+        name = f"latency_llama_small_s{pct}"
+        if not b.want(name):
+            continue
+        fn, shapes = layer_fwd_sliced(cfg, pct / 100.0)
+        f_s, dk_s = sliced_dims(cfg, pct / 100.0)
+        names = ["x", "ln1_g", "wq", "wk", "wv", "wo",
+                 "ln2_g", "w_gate", "w_up", "w_down"]
+        b.emit(name, fn, tuple(_spec(s) for s in shapes), names)
+        b.manifest["latency"][name] = {
+            "sparsity": pct / 100.0, "f_s": f_s, "dk_s": dk_s,
+        }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="regex filter on artifact names")
+    args = ap.parse_args()
+
+    b = Builder(args.out_dir, args.only)
+    t0 = time.time()
+    for cfg in MODEL_CONFIGS.values():
+        b.add_model(cfg)
+        print(f"model {cfg.name}", flush=True)
+        build_model_entries(b, cfg)
+    build_kernel_entries(b)
+    build_latency_entries(b)
+    b.finish()
+    print(f"total {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

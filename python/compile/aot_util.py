@@ -1,0 +1,20 @@
+"""Shared AOT lowering helpers.
+
+Interchange format is HLO *text*: jax >= 0.5 serializes HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the runtime linked by the
+`xla` rust crate) rejects; the HLO text parser reassigns ids and
+round-trips cleanly. Lower with return_tuple=True and unwrap on the rust
+side.
+"""
+from __future__ import annotations
+
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered object to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

@@ -1,0 +1,55 @@
+"""L2 calibration-capture entry: one dense forward that accumulates the
+per-layer statistics FASP and every baseline consume (DESIGN.md §6).
+
+Per decoder layer we emit (sums over the B*T sample rows, additive across
+calibration batches so the rust coordinator can stream batches):
+
+  G_ln1   [d, d]  Gram of the qkv input      (SliceGPT PCA, QK ablation)
+  G_ln2   [d, d]  Gram of the fc1/gate input (SliceGPT PCA, FLAP)
+  G_attn  [d, d]  Gram of the W_out input    (FASP out/V restoration)
+  G_ffn   [f, f]  Gram of the fc2/down input (FASP FFN restoration;
+                  diag is the Wanda ||X_j||^2)
+  m_ln1/m_ln2/m_attn/m_ffn  column sums (means for FLAP fluctuation and
+                  bias compensation)
+
+All four Grams go through the L1 Pallas `gram` kernel so the paper's
+calibration hot spot lowers into this artifact's HLO.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.gram import gram
+from .model import forward_hidden, unpack_params
+
+# Per-layer leaf names, in emission order (manifest + rust mirror this).
+CAPTURE_LEAVES = [
+    "G_ln1", "G_ln2", "G_attn", "G_ffn",
+    "m_ln1", "m_ln2", "m_attn", "m_ffn",
+]
+
+
+def capture(cfg: ModelConfig):
+    """Entry: (packed[P], tokens) -> flat per-layer stats tuple.
+
+    Output order: layer 0 leaves (CAPTURE_LEAVES order), layer 1 leaves, ...
+    """
+
+    def fn(packed, tokens):
+        p = unpack_params(cfg, packed)
+        _, caps = forward_hidden(cfg, p, tokens, collect=True)
+        outs = []
+        for cap in caps:
+            ln1 = cap["ln1"].reshape(-1, cfg.d_model)
+            ln2 = cap["ln2"].reshape(-1, cfg.d_model)
+            ctx = cap["attn_ctx"].reshape(-1, cfg.d_model)
+            ffn = cap["ffn_h"].reshape(-1, cfg.d_ff)
+            outs += [
+                gram(ln1), gram(ln2), gram(ctx), gram(ffn),
+                jnp.sum(ln1, axis=0), jnp.sum(ln2, axis=0),
+                jnp.sum(ctx, axis=0), jnp.sum(ffn, axis=0),
+            ]
+        return tuple(outs)
+
+    return fn

@@ -1,0 +1,121 @@
+"""Model zoo configurations, mirrored by rust/src/model/config.rs.
+
+The zoo spans the paper's two families at three sizes each. The paper used
+OPT-{125M,1.3B,2.7B} and LLaMA-{7B,13B,30B}; on the 1-core CPU testbed we
+keep the *axes* (family x size x sparsity) and shrink the magnitudes so the
+full experiment suite runs in minutes (see DESIGN.md substitution table).
+
+Conventions shared with the rust side:
+  * weights are [out, in] (PyTorch orientation); forward computes x @ W.T
+  * params are a FLAT LIST of f32 arrays in the exact order produced by
+    `param_spec`; the order is exported in artifacts/manifest.json and
+    consumed by rust/src/model/weights.rs
+  * batch and sequence length are baked into each artifact (static shapes)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str          # "opt" | "llama"
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ff: int
+    vocab: int
+    seq: int = 64
+    batch: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def _opt(name, d, h, l, f, v):
+    return ModelConfig(name=name, family="opt", d_model=d, n_heads=h,
+                       n_layers=l, d_ff=f, vocab=v)
+
+
+def _llama(name, d, h, l, f, v):
+    return ModelConfig(name=name, family="llama", d_model=d, n_heads=h,
+                       n_layers=l, d_ff=f, vocab=v)
+
+
+# name -> config; sizes: tiny ~0.1M, small ~1M, medium ~7M params
+MODEL_CONFIGS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        _opt("opt_tiny", 64, 4, 2, 256, 256),
+        _opt("opt_small", 128, 4, 4, 512, 512),
+        _opt("opt_medium", 256, 8, 6, 1024, 1024),
+        _llama("llama_tiny", 64, 4, 2, 256, 256),
+        _llama("llama_small", 128, 4, 4, 512, 512),
+        _llama("llama_medium", 256, 8, 6, 1024, 1024),
+    ]
+}
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Total number of f32 elements across all parameters."""
+    total = 0
+    for _, shape in param_spec(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def param_offsets(cfg: ModelConfig) -> list[tuple[str, int, tuple[int, ...]]]:
+    """(name, start offset, shape) for each parameter in the packed vector."""
+    out, off = [], 0
+    for name, shape in param_spec(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        out.append((name, off, shape))
+        off += n
+    return out
+
+
+def param_spec(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Flat, ordered parameter spec. The single source of truth for the
+    parameter ordering used by every artifact of this model."""
+    d, f, v, t = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq
+    spec: list[tuple[str, tuple[int, ...]]] = [("tok_emb", (v, d))]
+    if cfg.family == "opt":
+        spec.append(("pos_emb", (t, d)))
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        if cfg.family == "opt":
+            spec += [
+                (p + "ln1_g", (d,)), (p + "ln1_b", (d,)),
+                (p + "wq", (d, d)), (p + "bq", (d,)),
+                (p + "wk", (d, d)), (p + "bk", (d,)),
+                (p + "wv", (d, d)), (p + "bv", (d,)),
+                (p + "wo", (d, d)), (p + "bo", (d,)),
+                (p + "ln2_g", (d,)), (p + "ln2_b", (d,)),
+                (p + "fc1", (f, d)), (p + "bfc1", (f,)),
+                (p + "fc2", (d, f)), (p + "bfc2", (d,)),
+            ]
+        else:
+            # bo / b_down are zero-init "compensation" biases: not part of
+            # vanilla LLaMA, but they give FLAP's bias-compensation
+            # mechanism a landing spot on this family (DESIGN.md §1).
+            spec += [
+                (p + "ln1_g", (d,)),
+                (p + "wq", (d, d)), (p + "wk", (d, d)),
+                (p + "wv", (d, d)), (p + "wo", (d, d)), (p + "bo", (d,)),
+                (p + "ln2_g", (d,)),
+                (p + "w_gate", (f, d)), (p + "w_up", (f, d)),
+                (p + "w_down", (d, f)), (p + "b_down", (d,)),
+            ]
+    if cfg.family == "opt":
+        spec += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    else:
+        spec += [("lnf_g", (d,))]
+    return spec

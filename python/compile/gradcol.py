@@ -1,0 +1,54 @@
+"""L2 entry for the LLM-Pruner-like baseline: first-order Taylor column
+importance from calibration gradients.
+
+LLM-Pruner scores coupled structures by |W . dL/dW| aggregated over the
+structure; we compute, in-graph (so no full gradients ever reach the
+host):
+
+  ffn_score [f]  per hidden unit:   sum_i |W2 * g2|[i, j]
+                 + coupled row sums of |W1 * g1| (fc1 / gate+up)
+  ov_score  [d]  per context dim:   col sums of |Wo * go|
+                 + row sums of |Wv * gv|
+
+Output order: layer 0 (ffn_score, ov_score), layer 1 (...), ...
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .model import nll, unpack_params
+
+GRADCOL_LEAVES = ["ffn_score", "ov_score"]
+
+
+def _taylor(w, g):
+    return jnp.abs(w * g)
+
+
+def gradcol(cfg: ModelConfig):
+    def fn(packed, tokens, targets):
+        def loss_fn(pk):
+            p = unpack_params(cfg, pk)
+            return jnp.mean(nll(cfg, p, tokens, targets))
+
+        grad_packed = jax.grad(loss_fn)(packed)
+        p = unpack_params(cfg, packed)
+        g = unpack_params(cfg, grad_packed)
+        outs = []
+        for i in range(cfg.n_layers):
+            pre = f"layers.{i}."
+            if cfg.family == "opt":
+                ffn = _taylor(p[pre + "fc2"], g[pre + "fc2"]).sum(axis=0)
+                ffn += _taylor(p[pre + "fc1"], g[pre + "fc1"]).sum(axis=1)
+            else:
+                ffn = _taylor(p[pre + "w_down"], g[pre + "w_down"]).sum(axis=0)
+                ffn += _taylor(p[pre + "w_up"], g[pre + "w_up"]).sum(axis=1)
+                ffn += _taylor(p[pre + "w_gate"], g[pre + "w_gate"]).sum(axis=1)
+            ov = _taylor(p[pre + "wo"], g[pre + "wo"]).sum(axis=0)
+            ov += _taylor(p[pre + "wv"], g[pre + "wv"]).sum(axis=1)
+            outs += [ffn, ov]
+        return tuple(outs)
+
+    return fn

@@ -1,0 +1,88 @@
+"""Pallas causal flash-attention kernel (single head).
+
+The paper's serving-side hot spot is the attention block whose V/out dims
+FASP prunes; this kernel shows the pruned shapes still compose with a
+production-style attention schedule. Flash-style: the query-tile grid
+streams K/V tiles through VMEM, keeping a running (max, denominator,
+accumulator) triple so the full [S, S] score matrix never materializes.
+
+TPU mapping: grid (S/bq,); per step the kernel holds one [bq, dh] Q tile,
+iterates over [bk, dh] K/V tiles with an in-kernel fori_loop (the
+HBM→VMEM pipeline the paper's GPU kernels express with warps), and runs
+[bq × bk] MXU matmuls. VMEM per step ≈ (bq + 2·bk)·dh + bq·bk floats —
+64×64 tiles at dh≤128 stay under 200 KiB.
+
+interpret=True as everywhere (CPU PJRT cannot run Mosaic custom calls).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, scale: float):
+    qi = pl.program_id(0)
+    q = q_ref[...]  # [bq, dh]
+    s_total = k_ref.shape[0]
+    n_kb = s_total // bk
+    dh = q.shape[-1]
+
+    def body(kb, carry):
+        acc, m_run, l_run = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[...], kb * bk, bk, axis=0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[...], kb * bk, bk, axis=0)
+        scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        # causal mask: query row (qi*bq + i) attends keys <= that position
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        scores = jnp.where(k_pos <= q_pos, scores, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(scores, axis=1))
+        p = jnp.exp(scores - m_new[:, None])
+        correction = jnp.exp(m_run - m_new)
+        l_new = l_run * correction + jnp.sum(p, axis=1)
+        acc = acc * correction[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, dh), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, _m, l = jax.lax.fori_loop(0, n_kb, body, (acc0, m0, l0))
+    o_ref[...] = acc / l[:, None]
+
+
+def _pick_block(n: int, pref: int) -> int:
+    b = min(n, pref)
+    while n % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk"))
+def causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     bq: int = 64, bk: int = 64) -> jnp.ndarray:
+    """q, k, v [S, dh] -> out [S, dh], causal, scale 1/sqrt(dh)."""
+    s, dh = q.shape
+    bq = _pick_block(s, bq)
+    bk = _pick_block(s, bk)
+    kern = functools.partial(
+        _attn_kernel, bq=bq, bk=bk, scale=1.0 / (dh ** 0.5)
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(s // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, dh), lambda i: (i, 0)),
+            pl.BlockSpec((s, dh), lambda i: (0, 0)),
+            pl.BlockSpec((s, dh), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)

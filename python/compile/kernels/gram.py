@@ -1,0 +1,69 @@
+"""Pallas Gram-accumulation kernel: G = X^T X over sample rows.
+
+This is FASP's calibration hot spot: every decoder layer contributes three
+Gram matrices (qkv-input, out-proj-input, fc2/down-input) per calibration
+batch; restoration (paper Eq. 8) consumes them and the Wanda metric reads
+diag(G) = ||X_j||^2.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid (n/bn, n/bn, S/bs) with
+the reduction axis innermost; each step loads two [bs, bn] X tiles into
+VMEM and feeds a [bn x bn] MXU matmul, accumulating into the output tile
+resident in VMEM across the k-steps (revisiting: out index map ignores k).
+
+Tile choice (EXPERIMENTS.md §Perf iter 3): 256x512 tiles instead of
+128x128 — VMEM per step rises to 2*bs*bn + bn*bn = 2*512*256 + 256*256
+floats = 1.25 MiB (still ~8% of a 16 MiB core), but the grid shrinks
+16x, which matters twice: fewer while-loop iterations under CPU
+interpret (the capture artifact dropped ~2.4x end-to-end) and, on real
+TPU, fewer HBM revisits of the accumulator tile per unit of work.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are identical, wall-clock is not a TPU proxy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x1_ref, x2_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x1_ref[...].T, x2_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(n: int, pref: int) -> int:
+    b = min(n, pref)
+    while n % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bs"))
+def gram(x: jnp.ndarray, bn: int = 256, bs: int = 512) -> jnp.ndarray:
+    """x [S, n] -> X^T X [n, n]. S and n need not be multiples of the
+    preferred tile; blocks shrink to the largest power-of-two divisor."""
+    s, n = x.shape
+    bn = _pick_block(n, bn)
+    bs = _pick_block(s, bs)
+    grid = (n // bn, n // bn, s // bs)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bn), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bs, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(x, x)

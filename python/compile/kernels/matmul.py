@@ -1,0 +1,60 @@
+"""Pallas tiled matmul kernel (linear layer: y = x @ W^T, W is [out,in]).
+
+Used by the standalone latency artifacts and available to L2 model code;
+demonstrates the HBM<->VMEM schedule the paper's GPU kernels expressed with
+threadblocks (DESIGN.md §Hardware-Adaptation): grid (s/bs, o/bo, k/bk) with
+k innermost; each step drives a [bs,bk]x[bk,bo] MXU matmul accumulating in
+the VMEM-resident output tile.
+
+VMEM per step: bs*bk + bo*bk + bs*bo floats = 3*128*128*4 B = 192 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(n: int, pref: int) -> int:
+    b = min(n, pref)
+    while n % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bo", "bk"))
+def linear(x: jnp.ndarray, w: jnp.ndarray,
+           bs: int = 128, bo: int = 128, bk: int = 128) -> jnp.ndarray:
+    """x [s, k] @ w [o, k].T -> [s, o]."""
+    s, kdim = x.shape
+    o, kdim2 = w.shape
+    assert kdim == kdim2, (x.shape, w.shape)
+    bs = _pick_block(s, bs)
+    bo = _pick_block(o, bo)
+    bk = _pick_block(kdim, bk)
+    grid = (s // bs, o // bo, kdim // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bo, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bs, bo), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, o), jnp.float32),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has a reference here; pytest sweeps shapes and
+dtypes (hypothesis) and asserts allclose between kernel and oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Gram matrix of sample rows: x [S, n] -> X^T X [n, n] (sum over S)."""
+    return x.T @ x
+
+
+def wanda_ref(w: jnp.ndarray, xnorm: jnp.ndarray) -> jnp.ndarray:
+    """Structured Wanda column score (paper Eq. 7 summed over rows).
+
+    w [m, n] (out,in), xnorm [n] = ||X_j||_2 per input feature.
+    score_j = sum_i |W_ij| * xnorm_j = ||W_:,j||_1 * xnorm_j
+    """
+    return jnp.sum(jnp.abs(w), axis=0) * xnorm
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x [s, k] @ w[out, in=k].T -> [s, out] (PyTorch linear orientation)."""
+    return x @ w.T
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Causal single-head attention oracle: q, k, v [S, dh] -> [S, dh]."""
+    s, dh = q.shape
+    scores = (q @ k.T) / (dh ** 0.5)
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    import jax
+
+    return jax.nn.softmax(scores, axis=-1) @ v

@@ -1,0 +1,64 @@
+"""L2 entries for the structured-speedup claim (paper §1/§2: structured
+pruning yields inference speedups "achievable on any hardware").
+
+We emit one physically *sliced* LLaMA-style decoder layer per sparsity
+level: FASP's coupled structure removes rows/columns, so at sparsity s the
+FFN hidden dim shrinks to f_s and the attention V/out dim to dk_s (kept a
+multiple of n_heads so heads stay even). Q/K stay dense (FASP skips them).
+`bench_layer_latency` measures these artifacts end-to-end on the PJRT CPU
+client.
+
+The FFN matmuls route through the L1 Pallas `linear` kernel so the sliced
+hot path exercises the same kernel the paper would ship.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.matmul import linear
+from .model import rms_norm, rope_tables, apply_rope, causal_attention
+
+
+def sliced_dims(cfg: ModelConfig, sparsity: float) -> tuple[int, int]:
+    """(f_s, dk_s): FFN hidden and attention V/out dims at `sparsity`."""
+    f_s = max(cfg.n_heads, int(round(cfg.d_ff * (1.0 - sparsity))))
+    dk = int(round(cfg.d_model * (1.0 - sparsity) / cfg.n_heads)) * cfg.n_heads
+    dk_s = max(cfg.n_heads, dk)
+    return f_s, dk_s
+
+
+def layer_fwd_sliced(cfg: ModelConfig, sparsity: float):
+    """Entry: (x[B,T,d], ln1_g, wq, wk, wv', wo', ln2_g, gate', up', down')
+    -> y [B,T,d] where primed weights carry the sliced dims."""
+    f_s, dk_s = sliced_dims(cfg, sparsity)
+    d, h = cfg.d_model, cfg.n_heads
+    dh, dhk = d // h, dk_s // h
+
+    def fn(x, ln1_g, wq, wk, wv, wo, ln2_g, w_gate, w_up, w_down):
+        b, t, _ = x.shape
+        x_ln = rms_norm(x, ln1_g)
+        flat = x_ln.reshape(-1, d)
+        q = (flat @ wq.T).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        k = (flat @ wk.T).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        v = (flat @ wv.T).reshape(b, t, h, dhk).transpose(0, 2, 1, 3)
+        cos, sin = rope_tables(t, dh)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        ctx = causal_attention(q, k, v, dh)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(-1, dk_s)
+        x = x + (ctx @ wo.T).reshape(b, t, d)
+        x_ln2 = rms_norm(x, ln2_g).reshape(-1, d)
+        g = linear(x_ln2, w_gate)
+        u = linear(x_ln2, w_up)
+        hdn = u * jax.nn.silu(g)
+        y = linear(hdn, w_down)
+        return x + y.reshape(b, t, d)
+
+    shapes = [
+        (cfg.batch, cfg.seq, d), (d,),
+        (d, d), (d, d), (dk_s, d), (d, dk_s),
+        (d,), (f_s, d), (f_s, d), (d, f_s),
+    ]
+    return fn, shapes

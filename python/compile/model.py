@@ -1,0 +1,206 @@
+"""L2: JAX forward/loss for the OPT-style and LLaMA-style model families.
+
+Pure jax (no flax): parameters are a flat list of f32 arrays in
+`configs.param_spec` order. Everything here is lowered ONCE by aot.py to
+HLO text; python never runs at serving/pruning time.
+
+Architecture notes (mirrors rust/src/model/{opt,llama}.rs, the host
+reference used for cross-checking the PJRT path):
+  * OPT-style: pre-LN decoder, learned positional embeddings, ReLU FFN,
+    LayerNorm with bias, biases on all linears, tied LM head.
+  * LLaMA-style: pre-RMSNorm decoder, RoPE on q/k, SwiGLU FFN, no biases,
+    tied LM head.
+  * Causal MHA; softmax in f32; teacher-forced next-token NLL loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, param_offsets, param_spec
+
+
+# ---------------------------------------------------------------- helpers
+
+def params_to_dict(cfg: ModelConfig, flat: list) -> dict:
+    spec = param_spec(cfg)
+    assert len(flat) == len(spec), (len(flat), len(spec))
+    return {name: arr for (name, _), arr in zip(spec, flat)}
+
+
+def unpack_params(cfg: ModelConfig, packed) -> dict:
+    """Unpack a single flat f32[P] vector into the parameter dict.
+
+    The packed layout (param_offsets order) is the runtime currency: the
+    rust coordinator ships ONE literal per call instead of ~100, and the
+    training state round-trips device-side without per-tensor decomposes.
+    XLA fuses the slices away.
+    """
+    out = {}
+    for name, off, shape in param_offsets(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        out[name] = jax.lax.dynamic_slice(packed, (off,), (n,)).reshape(shape)
+    return out
+
+
+def pack_params(cfg: ModelConfig, p: dict):
+    """Inverse of unpack_params (used by train_step outputs)."""
+    return jnp.concatenate(
+        [p[name].reshape(-1) for name, _ in param_spec(cfg)]
+    )
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def rms_norm(x, g, eps=1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * g
+
+
+def rope_tables(seq: int, head_dim: int):
+    """Rotary embedding cos/sin tables [seq, head_dim/2]."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv_freq)                      # [T, half]
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x, cos, sin):
+    """x [B, H, T, dh]; rotate-half convention on the dh axis."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def causal_attention(q, k, v, head_dim):
+    """q,k,v [B, H, T, dh] -> context [B, H, T, dh]."""
+    t = q.shape[2]
+    scores = jnp.einsum("bhid,bhjd->bhij", q, k) / jnp.sqrt(
+        jnp.float32(head_dim)
+    )
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhij,bhjd->bhid", probs, v)
+
+
+def _split_heads(x, n_heads):
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+# ---------------------------------------------------------------- forward
+
+def _attn_block(cfg, p, prefix, x_ln, rope):
+    """Returns (attn_out_pre_oproj [B,T,d], out [B,T,d]).
+
+    The pre-o-proj context is the calibration input of W_out — the
+    activation FASP's out/V coupling and restoration consume.
+    """
+    d = cfg.d_model
+    if cfg.family == "opt":
+        q = x_ln @ p[prefix + "wq"].T + p[prefix + "bq"]
+        k = x_ln @ p[prefix + "wk"].T + p[prefix + "bk"]
+        v = x_ln @ p[prefix + "wv"].T + p[prefix + "bv"]
+    else:
+        q = x_ln @ p[prefix + "wq"].T
+        k = x_ln @ p[prefix + "wk"].T
+        v = x_ln @ p[prefix + "wv"].T
+    qh, kh, vh = (_split_heads(a, cfg.n_heads) for a in (q, k, v))
+    if cfg.family == "llama":
+        cos, sin = rope
+        qh = apply_rope(qh, cos, sin)
+        kh = apply_rope(kh, cos, sin)
+    ctx = _merge_heads(causal_attention(qh, kh, vh, cfg.head_dim))
+    out = ctx @ p[prefix + "wo"].T + p[prefix + "bo"]
+    return ctx, out
+
+
+def _ffn_block(cfg, p, prefix, x_ln):
+    """Returns (ffn2_in [B,T,f], out [B,T,d]).
+
+    ffn2_in is the input of W_fc2 / W_down — the activation FASP's FFN
+    coupling, Wanda metric (||X_j||) and restoration Gram consume.
+    """
+    if cfg.family == "opt":
+        h = jax.nn.relu(x_ln @ p[prefix + "fc1"].T + p[prefix + "bfc1"])
+        out = h @ p[prefix + "fc2"].T + p[prefix + "bfc2"]
+    else:
+        g = x_ln @ p[prefix + "w_gate"].T
+        u = x_ln @ p[prefix + "w_up"].T
+        h = u * jax.nn.silu(g)
+        out = h @ p[prefix + "w_down"].T + p[prefix + "b_down"]
+    return h, out
+
+
+def forward_hidden(cfg: ModelConfig, p: dict, tokens, collect=False):
+    """tokens i32 [B, T] -> final hidden [B, T, d].
+
+    With collect=True also returns the per-layer calibration activations:
+    list of dicts {ln1, ln2, attn_ctx, ffn_h} (pre-flattening shapes)."""
+    x = p["tok_emb"][tokens]
+    if cfg.family == "opt":
+        x = x + p["pos_emb"][None, :, :]
+        rope = None
+    else:
+        rope = rope_tables(cfg.seq, cfg.head_dim)
+    captures = []
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}."
+        if cfg.family == "opt":
+            x_ln1 = layer_norm(x, p[pre + "ln1_g"], p[pre + "ln1_b"])
+        else:
+            x_ln1 = rms_norm(x, p[pre + "ln1_g"])
+        ctx, attn_out = _attn_block(cfg, p, pre, x_ln1, rope)
+        x = x + attn_out
+        if cfg.family == "opt":
+            x_ln2 = layer_norm(x, p[pre + "ln2_g"], p[pre + "ln2_b"])
+        else:
+            x_ln2 = rms_norm(x, p[pre + "ln2_g"])
+        h, ffn_out = _ffn_block(cfg, p, pre, x_ln2)
+        x = x + ffn_out
+        if collect:
+            captures.append(
+                {"ln1": x_ln1, "ln2": x_ln2, "attn_ctx": ctx, "ffn_h": h}
+            )
+    if cfg.family == "opt":
+        x = layer_norm(x, p["lnf_g"], p["lnf_b"])
+    else:
+        x = rms_norm(x, p["lnf_g"])
+    return (x, captures) if collect else x
+
+
+def nll(cfg: ModelConfig, p: dict, tokens, targets):
+    """Per-token next-token NLL (tied LM head). Returns [B, T] f32."""
+    hid = forward_hidden(cfg, p, tokens)
+    logits = hid @ p["tok_emb"].T                       # [B, T, V]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt_logit = jnp.take_along_axis(
+        logits, targets[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    return logz - tgt_logit
+
+
+def fwd_loss(cfg: ModelConfig):
+    """Entry: (packed[P], tokens, targets) -> (mean_nll, seq_nll[B], tok_nll[B,T])."""
+
+    def fn(packed, tokens, targets):
+        p = unpack_params(cfg, packed)
+        tok = nll(cfg, p, tokens, targets)
+        return jnp.mean(tok), jnp.sum(tok, axis=-1), tok
+
+    return fn

@@ -1,0 +1,40 @@
+"""Spike: de-risk the jax -> HLO-text -> rust/PJRT path for the shapes we need.
+
+Checks (rust side in rust/src/bin or test_runtime):
+  1. multi-output functions (tuple root) — how many leaves PJRT returns
+  2. i32 inputs (token ids) + gather (embedding lookup)
+  3. many parameters (flattened weight list)
+Run: python -m compile.spike /root/repo/artifacts/spike.hlo.txt
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from .aot_util import to_hlo_text
+
+
+def fn(tokens, emb, w):
+    # tokens: i32[2,3], emb: f32[16,4], w: f32[4,4]
+    x = emb[tokens]                 # gather
+    y = jnp.dot(x, w)
+    loss = jnp.mean(y * y)
+    seq = jnp.sum(y * y, axis=(1, 2))
+    return loss, seq, y             # 3 leaves: f32[], f32[2], f32[2,3,4]
+
+
+def main():
+    out = sys.argv[1] if len(sys.argv) > 1 else "/root/repo/artifacts/spike.hlo.txt"
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((2, 3), jnp.int32),
+        jax.ShapeDtypeStruct((16, 4), jnp.float32),
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+    )
+    text = to_hlo_text(lowered)
+    with open(out, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {out}")
+
+
+if __name__ == "__main__":
+    main()

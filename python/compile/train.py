@@ -1,0 +1,48 @@
+"""L2 training entry: one fused Adam step over a single packed state
+vector, AOT-lowered so the rust trainer feeds the returned state literal
+straight back into the next call — no per-tensor decomposition, no python.
+
+State layout: f32[3P] = [params | m | v] (P = packed parameter length,
+offsets in configs.param_offsets order).
+
+Entry signature:
+  inputs : state f32[3P], tokens i32[B,T], targets i32[B,T],
+           t f32[] (1-based step, for Adam bias correction), lr f32[]
+  outputs: (loss f32[], state' f32[3P])
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, param_count
+from .model import nll, unpack_params
+
+BETA1, BETA2, EPS = 0.9, 0.999, 1e-8
+GRAD_CLIP = 1.0
+
+
+def train_step(cfg: ModelConfig):
+    p_len = param_count(cfg)
+
+    def fn(state, tokens, targets, t, lr):
+        params = state[:p_len]
+        m = state[p_len:2 * p_len]
+        v = state[2 * p_len:]
+
+        def loss_fn(pk):
+            p = unpack_params(cfg, pk)
+            return jnp.mean(nll(cfg, p, tokens, targets))
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        gnorm = jnp.sqrt(jnp.sum(g * g) + 1e-12)
+        g = g * jnp.minimum(1.0, GRAD_CLIP / gnorm)
+
+        m2 = BETA1 * m + (1.0 - BETA1) * g
+        v2 = BETA2 * v + (1.0 - BETA2) * g * g
+        mhat = m2 / (1.0 - BETA1 ** t)
+        vhat = v2 / (1.0 - BETA2 ** t)
+        params2 = params - lr * mhat / (jnp.sqrt(vhat) + EPS)
+        return loss, jnp.concatenate([params2, m2, v2])
+
+    return fn

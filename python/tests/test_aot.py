@@ -1,0 +1,70 @@
+"""AOT contract tests: manifest consistency and HLO-text generation."""
+import json
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot_util import to_hlo_text
+from compile.configs import MODEL_CONFIGS, param_count
+from compile.latency import sliced_dims
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_hlo_text_roundtrippable():
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    low = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = to_hlo_text(low)
+    assert "HloModule" in text
+    assert "ROOT" in text
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_manifest_consistent_with_configs():
+    man = json.loads((ART / "manifest.json").read_text())
+    assert set(man["models"]) == set(MODEL_CONFIGS)
+    for name, cfg in MODEL_CONFIGS.items():
+        m = man["models"][name]
+        assert m["d_model"] == cfg.d_model
+        assert m["n_layers"] == cfg.n_layers
+        total = sum(int(jnp.prod(jnp.array(s))) for _, s in m["params"])
+        assert total == param_count(cfg)
+        # four entries per model
+        for entry in ["fwd_loss", "capture", "gradcol", "train_step"]:
+            art = man["artifacts"][f"{name}_{entry}"]
+            assert (ART / art["file"]).exists()
+    # every artifact's file exists and is non-trivial HLO text
+    for art in man["artifacts"].values():
+        path = ART / art["file"]
+        assert path.exists(), path
+        head = path.read_text()[:200]
+        assert "HloModule" in head
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_train_step_io_shapes():
+    man = json.loads((ART / "manifest.json").read_text())
+    for name, cfg in MODEL_CONFIGS.items():
+        art = man["artifacts"][f"{name}_train_step"]
+        p = param_count(cfg)
+        ins = art["inputs"]
+        assert ins[0] == ["state", "f32", [3 * p]]
+        assert ins[1] == ["tokens", "i32", [cfg.batch, cfg.seq]]
+        outs = art["outputs"]
+        assert outs[0] == ["f32", []]
+        assert outs[1] == ["f32", [3 * p]]
+
+
+def test_sliced_dims_monotone():
+    cfg = MODEL_CONFIGS["llama_small"]
+    prev = (cfg.d_ff + 1, cfg.d_model + 1)
+    for pct in (0, 10, 20, 30, 40, 50):
+        f_s, dk_s = sliced_dims(cfg, pct / 100.0)
+        assert f_s <= prev[0] and dk_s <= prev[1]
+        assert dk_s % cfg.n_heads == 0
+        prev = (f_s, dk_s)

@@ -1,0 +1,124 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles, hypothesis-swept
+over shapes and value ranges. This is the kernel-level correctness signal
+the whole stack rests on."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.attention import causal_attention
+from compile.kernels.gram import gram
+from compile.kernels.matmul import linear
+from compile.kernels.wanda import wanda_scores
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+@hypothesis.given(
+    s=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_gram_matches_ref(s, n, seed):
+    x = rand(seed, (s, n))
+    got = gram(x)
+    want = ref.gram_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@hypothesis.given(
+    m=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_wanda_matches_ref(m, n, seed):
+    w = rand(seed, (m, n))
+    xn = jnp.abs(rand(seed + 1, (n,)))
+    got = wanda_scores(w, xn)
+    want = ref.wanda_ref(w, xn)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.given(
+    s=st.integers(1, 80),
+    k=st.integers(1, 80),
+    o=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_matmul_matches_ref(s, k, o, seed):
+    x = rand(seed, (s, k))
+    w = rand(seed + 1, (o, k))
+    got = linear(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@hypothesis.given(
+    s=st.integers(2, 64),
+    dh=st.integers(2, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_attention_matches_ref(s, dh, seed):
+    q = rand(seed, (s, dh))
+    k = rand(seed + 1, (s, dh))
+    v = rand(seed + 2, (s, dh))
+    got = causal_attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_is_causal():
+    # perturbing future K/V must not change earlier outputs
+    s, dh = 32, 16
+    q, k, v = rand(1, (s, dh)), rand(2, (s, dh)), rand(3, (s, dh))
+    base = causal_attention(q, k, v)
+    k2 = k.at[-1].set(99.0)
+    v2 = v.at[-1].set(-99.0)
+    pert = causal_attention(q, k2, v2)
+    np.testing.assert_allclose(base[: s - 1], pert[: s - 1], rtol=1e-5, atol=1e-5)
+
+
+def test_attention_rows_are_convex_combos():
+    # with v = const c, output must be exactly c
+    s, dh = 16, 8
+    q, k = rand(4, (s, dh)), rand(5, (s, dh))
+    v = jnp.full((s, dh), 3.5)
+    out = causal_attention(q, k, v)
+    np.testing.assert_allclose(out, v, rtol=1e-5)
+
+
+def test_gram_large_block_shapes():
+    # exercise the 128-tile fast path exactly
+    x = rand(7, (512, 256))
+    np.testing.assert_allclose(gram(x), ref.gram_ref(x), rtol=1e-4, atol=5e-3)
+
+
+def test_wanda_zero_weight_gives_zero_scores():
+    w = jnp.zeros((32, 16))
+    xn = jnp.ones((16,))
+    assert float(jnp.max(jnp.abs(wanda_scores(w, xn)))) == 0.0
+
+
+def test_gram_psd():
+    x = rand(3, (64, 32))
+    g = np.asarray(gram(x))
+    evals = np.linalg.eigvalsh(g)
+    assert evals.min() > -1e-3
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_matmul_dtype(dtype):
+    x = rand(0, (16, 16)).astype(dtype)
+    w = rand(1, (16, 16)).astype(dtype)
+    assert linear(x, w).dtype == jnp.float32

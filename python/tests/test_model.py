@@ -1,0 +1,119 @@
+"""L2 correctness: model entries (shapes, loss sanity, training signal,
+capture/gradcol contracts) for both families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.capture import CAPTURE_LEAVES, capture
+from compile.configs import MODEL_CONFIGS, param_count, param_offsets, param_spec
+from compile.gradcol import gradcol
+from compile.model import fwd_loss, pack_params, unpack_params
+from compile.train import train_step
+
+TINY = ["opt_tiny", "llama_tiny"]
+
+
+def make_params(cfg, seed=0, scale=0.05):
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for i, (name, shape) in enumerate(param_spec(cfg)):
+        k = jax.random.fold_in(key, i)
+        if name.endswith("_g"):
+            chunks.append(jnp.ones(shape).reshape(-1))
+        else:
+            chunks.append((jax.random.normal(k, shape) * scale).reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+def make_tokens(cfg, seed=1):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.randint(key, (cfg.batch, cfg.seq), 0, cfg.vocab)
+
+
+@pytest.mark.parametrize("name", TINY)
+def test_fwd_loss_shapes_and_range(name):
+    cfg = MODEL_CONFIGS[name]
+    packed = make_params(cfg)
+    toks = make_tokens(cfg)
+    mean, seq, tok = jax.jit(fwd_loss(cfg))(packed, toks, toks)
+    assert seq.shape == (cfg.batch,)
+    assert tok.shape == (cfg.batch, cfg.seq)
+    # random init ⇒ loss near log(V)
+    assert abs(float(mean) - np.log(cfg.vocab)) < 1.0
+    np.testing.assert_allclose(float(jnp.mean(tok)), float(mean), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(jnp.sum(tok, axis=-1)), np.asarray(seq), rtol=1e-5)
+
+
+@pytest.mark.parametrize("name", TINY)
+def test_pack_unpack_roundtrip(name):
+    cfg = MODEL_CONFIGS[name]
+    packed = make_params(cfg)
+    d = unpack_params(cfg, packed)
+    repacked = pack_params(cfg, d)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(repacked))
+    # offsets consistent with spec order
+    off = param_offsets(cfg)
+    assert off[0][1] == 0
+    assert sum(int(np.prod(s)) for _, _, s in off) == param_count(cfg)
+
+
+@pytest.mark.parametrize("name", TINY)
+def test_capture_gram_is_gram(name):
+    """The capture artifact's G_ffn must equal X^T X of the actual hidden
+    activations — checked against an independent recomputation."""
+    cfg = MODEL_CONFIGS[name]
+    packed = make_params(cfg)
+    toks = make_tokens(cfg)
+    outs = jax.jit(capture(cfg))(packed, toks)
+    per = len(CAPTURE_LEAVES)
+    assert len(outs) == per * cfg.n_layers
+    for l in range(cfg.n_layers):
+        g_ffn = outs[l * per + 3]
+        assert g_ffn.shape == (cfg.d_ff, cfg.d_ff)
+        g = np.asarray(g_ffn)
+        # symmetric PSD
+        np.testing.assert_allclose(g, g.T, rtol=1e-4, atol=1e-2)
+        evals = np.linalg.eigvalsh(g.astype(np.float64))
+        assert evals.min() > -1e-2 * max(1.0, evals.max())
+        # diag(G) are squared norms ⇒ non-negative
+        assert np.diag(g).min() >= -1e-4
+
+
+@pytest.mark.parametrize("name", TINY)
+def test_gradcol_scores_nonnegative(name):
+    cfg = MODEL_CONFIGS[name]
+    packed = make_params(cfg)
+    toks = make_tokens(cfg)
+    outs = jax.jit(gradcol(cfg))(packed, toks, toks)
+    assert len(outs) == 2 * cfg.n_layers
+    for l in range(cfg.n_layers):
+        assert outs[2 * l].shape == (cfg.d_ff,)
+        assert outs[2 * l + 1].shape == (cfg.d_model,)
+        assert float(jnp.min(outs[2 * l])) >= 0.0
+        assert float(jnp.min(outs[2 * l + 1])) >= 0.0
+
+
+@pytest.mark.parametrize("name", TINY)
+def test_train_step_decreases_loss(name):
+    cfg = MODEL_CONFIGS[name]
+    p = param_count(cfg)
+    packed = make_params(cfg)
+    state = jnp.concatenate([packed, jnp.zeros(p), jnp.zeros(p)])
+    toks = make_tokens(cfg)
+    tgts = make_tokens(cfg, seed=2)
+    step = jax.jit(train_step(cfg))
+    loss0, state = step(state, toks, tgts, jnp.float32(1.0), jnp.float32(5e-3))
+    lossn = loss0
+    for i in range(2, 12):
+        lossn, state = step(state, toks, tgts, jnp.float32(i), jnp.float32(5e-3))
+    assert float(lossn) < float(loss0) - 0.05, (float(loss0), float(lossn))
+
+
+def test_opt_and_llama_differ():
+    """Families must be genuinely different architectures."""
+    co, cl = MODEL_CONFIGS["opt_tiny"], MODEL_CONFIGS["llama_tiny"]
+    names_o = {n for n, _ in param_spec(co)}
+    names_l = {n for n, _ in param_spec(cl)}
+    assert "pos_emb" in names_o and "pos_emb" not in names_l
+    assert "layers.0.w_gate" in names_l and "layers.0.w_gate" not in names_o

@@ -1,0 +1,46 @@
+//! Bench: evaluation-path throughput — fwd_loss tokens/sec per model,
+//! capture cost per calibration batch, train_step time. These are the
+//! denominators of every experiment's wall-time.
+
+use fasp::bench_support::Bencher;
+use fasp::data::{Corpus, Dataset};
+use fasp::model::Weights;
+use fasp::runtime::{Manifest, ModelEngine};
+
+fn main() {
+    let manifest = Manifest::load(&fasp::artifacts_dir()).expect("make artifacts");
+    let fast = std::env::var("FASP_BENCH_FAST").is_ok();
+    let models: &[&str] = if fast {
+        &["llama_tiny"]
+    } else {
+        &["opt_tiny", "llama_tiny", "llama_small", "llama_medium"]
+    };
+    let mut b = Bencher::default();
+
+    for model in models {
+        let engine = ModelEngine::new(&manifest, model).unwrap();
+        let spec = engine.spec.clone();
+        let w = Weights::init(&spec, 5);
+        let ds = Dataset::new(Corpus::new(spec.vocab, 2), spec.batch, spec.seq, 2);
+        let batch = ds.train_batch(0);
+        let tokens = spec.batch * spec.seq;
+
+        b.bench(&format!("{model}/fwd_loss"), || {
+            let _ = engine.fwd_loss(&w.packed, &batch.tokens, &batch.targets).unwrap();
+        });
+        println!("  -> {:.0} tokens/s", b.last_throughput(tokens));
+
+        b.bench(&format!("{model}/capture"), || {
+            let _ = engine.capture(&w.packed, &[batch.tokens.clone()]).unwrap();
+        });
+
+        let mut state = engine.init_train_state(&w.packed).unwrap();
+        b.bench(&format!("{model}/train_step"), || {
+            let (_, ns) = engine
+                .train_step(&state, &batch.tokens, &batch.targets, 1.0, 1e-3)
+                .unwrap();
+            state = ns;
+        });
+        println!("  -> {:.0} tokens/s (train)", b.last_throughput(tokens));
+    }
+}

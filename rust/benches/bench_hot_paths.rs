@@ -1,0 +1,60 @@
+//! Bench: L3 hot paths in isolation — restoration solve (Cholesky vs
+//! ADMM, the §3.3 comparison), host matmul, Wanda metric (host vs Pallas
+//! artifact). Drives the §Perf iteration log in EXPERIMENTS.md.
+
+use fasp::bench_support::Bencher;
+use fasp::linalg::admm_restore;
+use fasp::prune::metric::{wanda_scores_host, KernelMetric};
+use fasp::prune::restore::restore_columns;
+use fasp::runtime::Manifest;
+use fasp::tensor::matmul::{matmul, matmul_bt};
+use fasp::tensor::Tensor;
+use fasp::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Rng::new(1);
+
+    // ---- restoration: closed form vs ADMM at the real shapes ----------
+    for &(m, n) in &[(128usize, 512usize), (256, 1024)] {
+        let w = Tensor::randn(&[m, n], 1.0, &mut rng);
+        let x = Tensor::randn(&[512, n], 1.0, &mut rng);
+        let g = matmul(&x.t(), &x);
+        let kept: Vec<bool> = (0..n).map(|j| j % 5 != 0).collect();
+        b.bench(&format!("restore/closed_form {m}x{n}"), || {
+            let _ = restore_columns(&w, &g, &kept, 1e-2).unwrap();
+        });
+        let mut greg: Vec<f64> = g.data.iter().map(|&v| v as f64).collect();
+        for i in 0..n {
+            greg[i * n + i] += 1.0;
+        }
+        b.bench(&format!("restore/admm_32it {m}x{n}"), || {
+            let _ = admm_restore(&w, &greg, &kept, 100.0, 32).unwrap();
+        });
+    }
+
+    // ---- metric: host vs Pallas artifact --------------------------------
+    let w = Tensor::randn(&[256, 1024], 1.0, &mut rng);
+    let xnorm: Vec<f32> = (0..1024).map(|i| 0.1 + i as f32 * 1e-3).collect();
+    b.bench("metric/wanda_host 256x1024", || {
+        let _ = wanda_scores_host(&w, &xnorm);
+    });
+    if let Ok(manifest) = Manifest::load(&fasp::artifacts_dir()) {
+        let km = KernelMetric::new(&manifest);
+        b.bench("metric/wanda_pallas 256x1024", || {
+            let _ = km.wanda_scores(&w, &xnorm).unwrap();
+        });
+    }
+
+    // ---- host matmuls at restoration shapes -----------------------------
+    let a = Tensor::randn(&[256, 1024], 1.0, &mut rng);
+    let g = Tensor::randn(&[1024, 1024], 1.0, &mut rng);
+    b.bench("matmul/256x1024x1024 (W*G)", || {
+        let _ = matmul(&a, &g);
+    });
+    let x = Tensor::randn(&[512, 256], 1.0, &mut rng);
+    let wt = Tensor::randn(&[1024, 256], 1.0, &mut rng);
+    b.bench("matmul_bt/512x256->1024 (linear)", || {
+        let _ = matmul_bt(&x, &wt);
+    });
+}

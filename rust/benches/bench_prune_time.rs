@@ -1,0 +1,39 @@
+//! Bench: Table 4 — pruning wall-time by method × model size.
+//! `cargo bench --bench bench_prune_time` (set FASP_BENCH_FAST=1 to
+//! shrink). Reports per-method mean time on llama_{tiny,small} plus the
+//! phase breakdown; the paper's claim is the ordering FASP ≈ FLAP ≪
+//! SliceGPT ≪ NASLLM/LLM-Pruner.
+
+use fasp::bench_support::{fmt_s, Bencher};
+use fasp::data::{Corpus, Dataset};
+use fasp::model::Weights;
+use fasp::prune::{prune, Method, PruneOpts};
+use fasp::runtime::{Manifest, ModelEngine};
+
+fn main() {
+    let manifest = Manifest::load(&fasp::artifacts_dir()).expect("make artifacts");
+    let fast = std::env::var("FASP_BENCH_FAST").is_ok();
+    let models: &[&str] = if fast { &["llama_tiny"] } else { &["llama_tiny", "llama_small"] };
+    let mut b = Bencher::default();
+
+    println!("# Table 4 analog — pruning time (20% sparsity)\n");
+    for model in models {
+        let engine = ModelEngine::new(&manifest, model).unwrap();
+        let spec = engine.spec.clone();
+        let ds = Dataset::new(Corpus::new(spec.vocab, 3), spec.batch, spec.seq, 4);
+        let weights = Weights::init(&spec, 7);
+        for method in Method::all() {
+            let mut opts = PruneOpts::new(method, 0.20);
+            opts.calib_batches = 2;
+            opts.admm_iters = if fast { 8 } else { 32 };
+            b.bench(&format!("{model}/{:?}", method), || {
+                let _ = prune(&engine, &weights, &ds, &opts).unwrap();
+            });
+        }
+    }
+
+    println!("\n## summary (mean seconds)\n");
+    for r in &b.results {
+        println!("{:<40} {}", r.name, fmt_s(r.mean_s()));
+    }
+}

@@ -1,0 +1,110 @@
+//! Criterion-lite bench harness (criterion is not in the offline vendor
+//! set): warmup + adaptive sampling + robust stats + markdown tables.
+//! Used by every target in `rust/benches/`.
+
+pub mod table;
+
+use crate::util::{mean, stddev};
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        mean(&self.samples)
+    }
+    pub fn std_s(&self) -> f64 {
+        stddev(&self.samples)
+    }
+    pub fn min_s(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} mean {:>10} ± {:>9}  min {:>10}  (n={})",
+            self.name,
+            fmt_s(self.mean_s()),
+            fmt_s(self.std_s()),
+            fmt_s(self.min_s()),
+            self.samples.len()
+        )
+    }
+}
+
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3}s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+/// Bench runner: time-budgeted adaptive sampling.
+pub struct Bencher {
+    /// minimum samples per case
+    pub min_samples: usize,
+    /// soft time budget per case (seconds)
+    pub budget_s: f64,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // honor a CLI-ish env knob so `make bench FAST=1` can shrink runs
+        let fast = std::env::var("FASP_BENCH_FAST").is_ok();
+        Bencher {
+            min_samples: if fast { 3 } else { 5 },
+            budget_s: if fast { 1.0 } else { 3.0 },
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    /// Run `f` repeatedly; each invocation is one sample.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // one warmup
+        f();
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_samples
+            || (start.elapsed().as_secs_f64() < self.budget_s && samples.len() < 200)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let r = BenchResult { name: name.to_string(), samples };
+        println!("{}", r.summary());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Throughput helper: items/sec for the most recent result.
+    pub fn last_throughput(&self, items: usize) -> f64 {
+        self.results
+            .last()
+            .map(|r| items as f64 / r.mean_s())
+            .unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples() {
+        let mut b = Bencher { min_samples: 3, budget_s: 0.01, results: vec![] };
+        b.bench("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(b.results[0].samples.len() >= 3);
+        assert!(b.results[0].mean_s() >= 0.0);
+    }
+}

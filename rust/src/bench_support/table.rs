@@ -1,0 +1,148 @@
+//! Markdown/ASCII table printer for the experiment outputs (every paper
+//! table is regenerated through this).
+
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut width = vec![0usize; cols];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n\n", self.title));
+        let fmt_row = |cells: &[String], width: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(width) {
+                line.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &width));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &width {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Render an ASCII line chart (for the figure reproductions): one series
+/// per (label, points) with shared x.
+pub fn ascii_chart(
+    title: &str,
+    xs: &[f64],
+    series: &[(String, Vec<f64>)],
+    height: usize,
+) -> String {
+    let mut out = format!("\n## {title}\n\n");
+    let all: Vec<f64> = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .filter(|y| y.is_finite())
+        .collect();
+    if all.is_empty() {
+        return out;
+    }
+    let (ymin, ymax) = all
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &y| {
+            (lo.min(y), hi.max(y))
+        });
+    let span = (ymax - ymin).max(1e-9);
+    let width = xs.len();
+    let marks = ['*', 'o', '+', 'x', '#', '@', '%'];
+    let mut grid = vec![vec![' '; width * 3]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (xi, &y) in ys.iter().enumerate() {
+            if !y.is_finite() {
+                continue;
+            }
+            let row = ((ymax - y) / span * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][xi * 3 + 1] = marks[si % marks.len()];
+        }
+    }
+    for (i, row) in grid.iter().enumerate() {
+        let y = ymax - span * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{:>9.2} |{}\n", y, row.iter().collect::<String>()));
+    }
+    out.push_str(&format!(
+        "{:>9} +{}\n", "", "-".repeat(width * 3)
+    ));
+    out.push_str(&format!(
+        "{:>10} {}\n",
+        "x:",
+        xs.iter().map(|x| format!("{:<3.0}", x * 100.0)).collect::<String>()
+    ));
+    for (si, (label, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", marks[si % marks.len()], label));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_markdown() {
+        let mut t = Table::new("Test", &["a", "b"]);
+        t.row(vec!["1".into(), "xx".into()]);
+        let s = t.render();
+        assert!(s.contains("| a | b  |"));
+        assert!(s.contains("| 1 | xx |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn chart_contains_series() {
+        let s = ascii_chart(
+            "C",
+            &[0.0, 0.1, 0.2],
+            &[("m".into(), vec![1.0, 2.0, 3.0])],
+            5,
+        );
+        assert!(s.contains('*'));
+        assert!(s.contains("m"));
+    }
+}

@@ -1,0 +1,107 @@
+//! Flag parser: `command --key value --bool-flag`.
+
+use crate::Result;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub bools: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: Iterator<Item = String>>(mut it: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut pending: Option<String> = None;
+        if let Some(first) = it.next() {
+            if first.starts_with("--") {
+                pending = Some(first.trim_start_matches('-').to_string());
+            } else {
+                args.command = Some(first);
+            }
+        }
+        for tok in it {
+            if let Some(key) = pending.take() {
+                if tok.starts_with("--") {
+                    args.bools.push(key);
+                    pending = Some(tok.trim_start_matches('-').to_string());
+                } else {
+                    args.flags.insert(key, tok);
+                }
+            } else if tok.starts_with("--") {
+                pending = Some(tok.trim_start_matches('-').to_string());
+            } else {
+                anyhow::bail!("unexpected positional argument '{tok}'");
+            }
+        }
+        if let Some(key) = pending {
+            args.bools.push(key);
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} wants a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} wants an integer, got '{v}'")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_bools() {
+        let a = parse("prune --model llama_small --sparsity 0.2 --fast");
+        assert_eq!(a.command.as_deref(), Some("prune"));
+        assert_eq!(a.get("model"), Some("llama_small"));
+        assert_eq!(a.get_f64("sparsity", 0.0).unwrap(), 0.2);
+        assert!(a.has("fast"));
+        assert!(!a.has("slow"));
+    }
+
+    #[test]
+    fn bool_before_kv() {
+        let a = parse("eval --fast --model x");
+        assert!(a.has("fast"));
+        assert_eq!(a.get("model"), Some("x"));
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(
+            "eval stray".split_whitespace().map(str::to_string)
+        )
+        .is_err());
+    }
+}

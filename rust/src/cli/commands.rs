@@ -1,0 +1,222 @@
+//! Subcommand implementations.
+
+use super::args::Args;
+use crate::bench_support::table::Table;
+use crate::data::tasks::{TaskKind, TaskSuite};
+use crate::data::{Corpus, Dataset};
+use crate::eval::{eval_suite, perplexity};
+use crate::experiments::common::ExpCtx;
+use crate::model::zoo;
+use crate::prune::{Method, PruneOpts};
+use crate::runtime::{Manifest, ModelEngine};
+use crate::util::timer::fmt_duration;
+use crate::Result;
+use std::time::Duration;
+
+fn manifest() -> Result<Manifest> {
+    Manifest::load(&crate::artifacts_dir())
+}
+
+fn ctx_from(args: &Args) -> Result<ExpCtx> {
+    let mut ctx = ExpCtx::new(manifest()?, args.has("fast"));
+    ctx.eval_batches = args.get_usize("eval-batches", ctx.eval_batches)?;
+    ctx.calib_batches = args.get_usize("calib", ctx.calib_batches)?;
+    ctx.seed = args.get_usize("seed", ctx.seed as usize)? as u64;
+    Ok(ctx)
+}
+
+fn model_arg(args: &Args) -> Result<String> {
+    args.get("model")
+        .map(str::to_string)
+        .ok_or_else(|| anyhow::anyhow!("--model is required (one of {:?})", zoo::all_models()))
+}
+
+fn method_arg(args: &Args) -> Result<Method> {
+    let name = args.get_or("method", "fasp");
+    Method::parse(&name).ok_or_else(|| anyhow::anyhow!("unknown --method '{name}'"))
+}
+
+pub fn info(_args: &Args) -> Result<()> {
+    let m = manifest()?;
+    let mut t = Table::new(
+        "Model zoo",
+        &["model", "paper analog", "d", "heads", "layers", "d_ff", "vocab", "params", "ckpt"],
+    );
+    for (name, spec) in &m.models {
+        t.row(vec![
+            name.clone(),
+            zoo::paper_label(name).to_string(),
+            spec.d_model.to_string(),
+            spec.n_heads.to_string(),
+            spec.n_layers.to_string(),
+            spec.d_ff.to_string(),
+            spec.vocab.to_string(),
+            format!("{:.2}M", spec.n_params_elems() as f64 / 1e6),
+            if zoo::checkpoint_path(name).exists() { "yes" } else { "no" }.into(),
+        ]);
+    }
+    t.print();
+    println!(
+        "{} artifacts in {}",
+        m.artifacts.len(),
+        m.dir.display()
+    );
+    Ok(())
+}
+
+pub fn train(args: &Args) -> Result<()> {
+    let m = manifest()?;
+    let model = model_arg(args)?;
+    let spec = m.model(&model)?;
+    let mut opts = crate::train::TrainOpts::for_model(&model);
+    opts.steps = args.get_usize("steps", opts.steps)?;
+    opts.lr = args.get_f64("lr", opts.lr as f64)? as f32;
+    let corpus = Corpus::new(spec.vocab, 42 ^ spec.vocab as u64);
+    let dataset = Dataset::new(corpus, spec.batch, spec.seq, opts.steps + 8);
+    let (w, report) = crate::train::train(&m, &model, &dataset, &opts)?;
+    let path = zoo::checkpoint_path(&model);
+    w.save(&path)?;
+    println!(
+        "trained {model}: {} steps, final loss {:.4}, {} → {}",
+        report.steps,
+        report.losses.last().copied().unwrap_or(f32::NAN),
+        fmt_duration(Duration::from_secs_f64(report.wall_s)),
+        path.display()
+    );
+    Ok(())
+}
+
+pub fn eval(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let model = model_arg(args)?;
+    let p = ctx.prepared(&model)?;
+    let ppl = p.dense_ppl(&ctx)?;
+    println!("{model}: perplexity {ppl:.3} over {} batches", ctx.eval_batches);
+    Ok(())
+}
+
+pub fn prune(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let model = model_arg(args)?;
+    let method = method_arg(args)?;
+    let sparsity = args.get_f64("sparsity", 0.2)?;
+    let p = ctx.prepared(&model)?;
+
+    let mut opts = PruneOpts::new(method, sparsity);
+    opts.calib_batches = ctx.calib_batches;
+    if args.has("no-restore") {
+        opts.restore = false;
+    }
+    opts.prune_qk = args.has("prune-qk");
+    opts.sequential = args.has("sequential");
+
+    let dense = p.dense_ppl(&ctx)?;
+    let (w, mask, report) = p.prune_with(&opts)?;
+    let ppl = p.ppl_of(&ctx, &w)?;
+    println!(
+        "{model} {}: target {:.0}% achieved {:.1}% ({} params removed)",
+        method.label(),
+        sparsity * 100.0,
+        report.achieved_sparsity * 100.0,
+        report.params_removed
+    );
+    println!("perplexity: dense {dense:.3} → pruned {ppl:.3}");
+    println!(
+        "time: total {} | {}",
+        fmt_duration(Duration::from_secs_f64(report.total_s)),
+        report
+            .phase_s
+            .iter()
+            .map(|(n, s)| format!("{n} {:.2}s", s))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    );
+    if let Some(out) = args.get("out") {
+        w.save(std::path::Path::new(out))?;
+        println!("pruned weights → {out}");
+    }
+    if args.has("report") {
+        let rec = crate::prune::report::RunRecord {
+            model: model.clone(),
+            report,
+            dense_ppl: Some(dense),
+            pruned_ppl: Some(ppl),
+            zero_shot_mean: None,
+        };
+        println!("report → {}", rec.save()?.display());
+    }
+    let _ = mask;
+    Ok(())
+}
+
+pub fn zeroshot(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let model = model_arg(args)?;
+    let p = ctx.prepared(&model)?;
+    let sparsity = args.get_f64("sparsity", 0.0)?;
+    let w = if sparsity > 0.0 {
+        let method = method_arg(args)?;
+        p.prune_only(&ctx, method, sparsity)?.0
+    } else {
+        p.weights.clone()
+    };
+    let mut t = Table::new(
+        &format!("Zero-shot accuracy — {model} at {:.0}% sparsity", sparsity * 100.0),
+        &["suite", "accuracy %", "n"],
+    );
+    let mut total = 0.0;
+    let kinds = TaskKind::all();
+    for kind in kinds {
+        let suite = TaskSuite::generate(&p.dataset.corpus, kind, ctx.tasks_per_suite, ctx.seed);
+        let r = eval_suite(&p.engine, &w, &suite)?;
+        total += r.accuracy;
+        t.row(vec![r.kind.to_string(), format!("{:.2}", r.accuracy), r.n.to_string()]);
+    }
+    t.row(vec![
+        "Mean".into(),
+        format!("{:.2}", total / kinds.len() as f64),
+        "".into(),
+    ]);
+    t.print();
+    Ok(())
+}
+
+pub fn tables(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let id = args.get_or("id", "all");
+    crate::experiments::run_by_id(&ctx, &id)
+}
+
+pub fn latency(args: &Args) -> Result<()> {
+    let m = manifest()?;
+    let reps = args.get_usize("reps", 20)?;
+    let points = crate::eval::speed::layer_latency_sweep(&m, reps)?;
+    let mut t = Table::new(
+        "Sliced decoder-layer latency (structured speedup)",
+        &["sparsity", "d_ff kept", "ov kept", "latency", "speedup"],
+    );
+    for p in points {
+        t.row(vec![
+            format!("{:.0}%", p.sparsity * 100.0),
+            p.f_s.to_string(),
+            p.dk_s.to_string(),
+            format!("{:.3}ms", p.mean_ms),
+            format!("{:.2}x", p.speedup),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+pub fn eval_ppl_of(
+    manifest: &Manifest,
+    model: &str,
+    weights: &crate::model::Weights,
+    batches: usize,
+) -> Result<f64> {
+    let engine = ModelEngine::new(manifest, model)?;
+    let spec = engine.spec.clone();
+    let corpus = Corpus::new(spec.vocab, 42 ^ spec.vocab as u64);
+    let dataset = Dataset::new(corpus, spec.batch, spec.seq, 8);
+    perplexity(&engine, weights, &dataset.valid_batches(batches))
+}

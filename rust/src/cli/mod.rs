@@ -1,0 +1,62 @@
+//! Hand-rolled CLI (clap is not in the offline vendor set): a small
+//! positional/flag parser plus the subcommand implementations.
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+use crate::Result;
+
+pub const USAGE: &str = "\
+fasp — Fast and Accurate Structured Pruning (paper reproduction)
+
+USAGE: fasp <COMMAND> [OPTIONS]
+
+COMMANDS:
+  info                         manifest + zoo summary
+  train      --model M         train (or re-train) a zoo model
+  eval       --model M         perplexity of the (trained) model
+  prune      --model M --method X --sparsity S   prune + evaluate
+  zeroshot   --model M [--method X --sparsity S] zero-shot suites
+  tables     --id table1|...|fig4|all            regenerate paper tables
+  latency                      sliced decoder-layer latency sweep
+  help                         this message
+
+COMMON OPTIONS:
+  --fast                 shrink eval/calibration budgets
+  --steps N              override training steps (train)
+  --method NAME          fasp|wanda|magnitude|flap|slicegpt|llm_pruner|nasllm
+  --sparsity F           target sparsity in [0,1) (default 0.2)
+  --calib N              calibration batches (default 8)
+  --eval-batches N       perplexity batches (default 12)
+  --no-restore           disable FASP restoration (ablation)
+  --prune-qk             also prune W_Q/W_K rows (Table 6 ablation)
+  --sequential           re-capture activations after each pruned layer
+  --report               persist a JSON run record under results/reports/
+  --out PATH             save the pruned weights as a checkpoint
+  --seed N               experiment seed (default 42)
+
+Artifacts must exist (`make artifacts`). Checkpoints are cached under
+checkpoints/ and reused across runs.
+";
+
+pub fn run() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.command.as_deref() {
+        Some("info") => commands::info(&args),
+        Some("train") => commands::train(&args),
+        Some("eval") => commands::eval(&args),
+        Some("prune") => commands::prune(&args),
+        Some("zeroshot") => commands::zeroshot(&args),
+        Some("tables") => commands::tables(&args),
+        Some("latency") => commands::latency(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => {
+            anyhow::bail!("unknown command '{other}'\n\n{USAGE}")
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Synthetic data substrate — the WikiText-2 / zero-shot-benchmark
+//! substitution (DESIGN.md §1). A seeded order-2 Markov–Zipf generator
+//! produces a corpus with learnable structure; calibration sets,
+//! perplexity splits and the seven zero-shot suites are all derived from
+//! it deterministically.
+
+pub mod corpus;
+pub mod dataset;
+pub mod tasks;
+
+pub use corpus::Corpus;
+pub use dataset::{Batch, Dataset};
+pub use tasks::{Task, TaskKind, TaskSuite};

@@ -1,0 +1,211 @@
+//! Seven synthetic zero-shot suites — the BoolQ/PIQA/HellaSwag/
+//! WinoGrande/ARC-e/ARC-c/OBQA substitution (Table 3).
+//!
+//! Each task is likelihood ranking, exactly like lm-eval-harness: a
+//! prompt sampled from the corpus, `n_choices` candidate continuations
+//! (one drawn from the generator's grammar, distractors per task kind),
+//! scored by the summed NLL of the candidate span given the prompt.
+//! Ground truth comes from the generator itself, so accuracy measures how
+//! much of the learned grammar survives pruning — the same signal the
+//! paper's zero-shot tables carry.
+
+use super::corpus::Corpus;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// 2-way true-vs-shuffled continuation (yes/no flavor).
+    BoolQS,
+    /// 2-way short continuation ranking.
+    PiqaS,
+    /// 4-way long continuation ranking.
+    HellaSwagS,
+    /// 2-way single-token cloze.
+    WinograndeS,
+    /// 4-way, distractors far from the grammar (easy margin).
+    ArcES,
+    /// 4-way, distractors drawn from the state's own successor set (hard).
+    ArcCS,
+    /// 4-way short continuation.
+    ObqaS,
+}
+
+impl TaskKind {
+    pub fn all() -> [TaskKind; 7] {
+        [
+            TaskKind::BoolQS,
+            TaskKind::PiqaS,
+            TaskKind::HellaSwagS,
+            TaskKind::WinograndeS,
+            TaskKind::ArcES,
+            TaskKind::ArcCS,
+            TaskKind::ObqaS,
+        ]
+    }
+
+    /// Column label used in Table 3 output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TaskKind::BoolQS => "BoolQ-s",
+            TaskKind::PiqaS => "PIQA-s",
+            TaskKind::HellaSwagS => "HellaSwag-s",
+            TaskKind::WinograndeS => "WinoGrande-s",
+            TaskKind::ArcES => "ARC-e-s",
+            TaskKind::ArcCS => "ARC-c-s",
+            TaskKind::ObqaS => "OBQA-s",
+        }
+    }
+
+    pub fn n_choices(&self) -> usize {
+        match self {
+            TaskKind::BoolQS | TaskKind::PiqaS | TaskKind::WinograndeS => 2,
+            _ => 4,
+        }
+    }
+
+    pub fn cont_len(&self) -> usize {
+        match self {
+            TaskKind::WinograndeS => 1,
+            TaskKind::ObqaS => 4,
+            TaskKind::PiqaS | TaskKind::BoolQS => 8,
+            TaskKind::ArcES | TaskKind::ArcCS => 6,
+            TaskKind::HellaSwagS => 12,
+        }
+    }
+}
+
+/// One ranking instance.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub prompt: Vec<i32>,
+    /// candidate continuations, all the same length.
+    pub choices: Vec<Vec<i32>>,
+    pub answer: usize,
+}
+
+/// A generated suite of tasks of one kind.
+pub struct TaskSuite {
+    pub kind: TaskKind,
+    pub tasks: Vec<Task>,
+}
+
+impl TaskSuite {
+    pub fn generate(corpus: &Corpus, kind: TaskKind, n: usize, seed: u64) -> TaskSuite {
+        let mut rng = Rng::new(seed ^ (kind as u64).wrapping_mul(0xABCD_EF12));
+        let mut tasks = Vec::with_capacity(n);
+        let prompt_len = 16;
+        while tasks.len() < n {
+            let prompt = corpus.generate(prompt_len, &mut rng);
+            if let Some(t) = make_task(corpus, kind, &prompt, &mut rng) {
+                tasks.push(t);
+            }
+        }
+        TaskSuite { kind, tasks }
+    }
+}
+
+fn make_task(corpus: &Corpus, kind: TaskKind, prompt: &[i32], rng: &mut Rng) -> Option<Task> {
+    let len = kind.cont_len();
+    let truth = corpus.greedy_continuation(prompt, len);
+    let n_choices = kind.n_choices();
+    let mut choices = Vec::with_capacity(n_choices);
+    choices.push(truth.clone());
+    for _ in 1..n_choices {
+        let d = distractor(corpus, kind, prompt, &truth, rng);
+        choices.push(d);
+    }
+    // all-same choices make the task degenerate — skip
+    if choices[1..].iter().any(|c| *c == choices[0]) {
+        return None;
+    }
+    // shuffle: answer position uniform
+    let answer_pos = rng.below(n_choices);
+    choices.swap(0, answer_pos);
+    Some(Task { prompt: prompt.to_vec(), choices, answer: answer_pos })
+}
+
+fn distractor(
+    corpus: &Corpus,
+    kind: TaskKind,
+    prompt: &[i32],
+    truth: &[i32],
+    rng: &mut Rng,
+) -> Vec<i32> {
+    let len = truth.len();
+    match kind {
+        // shuffled copy of the true continuation (order destroyed)
+        TaskKind::BoolQS => {
+            let mut d = truth.to_vec();
+            for _ in 0..8 {
+                rng.shuffle(&mut d);
+                if d != truth {
+                    break;
+                }
+            }
+            d
+        }
+        // continuation from an unrelated random state
+        TaskKind::PiqaS | TaskKind::HellaSwagS | TaskKind::ObqaS => {
+            let fake_prefix = [rng.below(corpus.vocab) as i32, rng.below(corpus.vocab) as i32];
+            corpus.greedy_continuation(&fake_prefix, len)
+        }
+        // cloze: a different token at the blank
+        TaskKind::WinograndeS => {
+            let mut tok = rng.below(corpus.vocab) as i32;
+            while tok == truth[0] {
+                tok = rng.below(corpus.vocab) as i32;
+            }
+            vec![tok]
+        }
+        // easy: uniform random tokens (far off-grammar)
+        TaskKind::ArcES => (0..len).map(|_| rng.below(corpus.vocab) as i32).collect(),
+        // hard: walk the grammar but start from a *non-modal* successor
+        TaskKind::ArcCS => {
+            let (a, b) = (prompt[prompt.len() - 2], prompt[prompt.len() - 1]);
+            let succ = corpus.successors(a, b);
+            let alt = succ[1 + rng.below(succ.len() - 1)];
+            let mut d = vec![alt];
+            let mut pre = vec![b, alt];
+            d.extend(corpus.greedy_continuation(&pre.split_off(0), len - 1));
+            d.truncate(len);
+            d
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_generate() {
+        let corpus = Corpus::new(256, 11);
+        for kind in TaskKind::all() {
+            let suite = TaskSuite::generate(&corpus, kind, 20, 5);
+            assert_eq!(suite.tasks.len(), 20);
+            for t in &suite.tasks {
+                assert_eq!(t.choices.len(), kind.n_choices());
+                assert!(t.answer < t.choices.len());
+                let len = t.choices[0].len();
+                assert!(t.choices.iter().all(|c| c.len() == len));
+                // the answer differs from every distractor
+                for (i, c) in t.choices.iter().enumerate() {
+                    if i != t.answer {
+                        assert_ne!(*c, t.choices[t.answer]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let corpus = Corpus::new(256, 11);
+        let a = TaskSuite::generate(&corpus, TaskKind::PiqaS, 5, 1);
+        let b = TaskSuite::generate(&corpus, TaskKind::PiqaS, 5, 1);
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+}

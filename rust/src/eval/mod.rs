@@ -1,0 +1,10 @@
+//! Evaluation harness: teacher-forced perplexity (Tables 1–2, Figures
+//! 3–4), zero-shot likelihood ranking (Table 3), and sliced-layer
+//! latency (the structured-speedup claim).
+
+pub mod perplexity;
+pub mod zeroshot;
+pub mod speed;
+
+pub use perplexity::perplexity;
+pub use zeroshot::eval_suite;

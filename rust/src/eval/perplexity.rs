@@ -1,0 +1,39 @@
+//! Teacher-forced perplexity over held-out batches via the `fwd_loss`
+//! artifact: PPL = exp(mean over all target tokens of NLL).
+
+use crate::data::Batch;
+use crate::model::Weights;
+use crate::runtime::ModelEngine;
+use anyhow::Result;
+
+/// Perplexity of `weights` on the given batches.
+pub fn perplexity(
+    engine: &ModelEngine,
+    weights: &Weights,
+    batches: &[Batch],
+) -> Result<f64> {
+    anyhow::ensure!(!batches.is_empty(), "need at least one eval batch");
+    let params = engine.params_literal(&weights.packed)?; // upload once
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for b in batches {
+        let out = engine.fwd_loss_lit(&params, &b.tokens, &b.targets)?;
+        total += out.mean_nll as f64 * b.tokens.numel() as f64;
+        count += b.tokens.numel();
+    }
+    Ok((total / count as f64).exp())
+}
+
+/// Host-side fallback perplexity (no artifacts needed) — used by tests
+/// as an independent cross-check of the PJRT path.
+pub fn perplexity_host(weights: &Weights, batches: &[Batch]) -> Result<f64> {
+    use crate::model::host::forward_nll;
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for b in batches {
+        let (nll, _) = forward_nll(weights, &b.tokens, &b.targets, false)?;
+        total += nll.data.iter().map(|&x| x as f64).sum::<f64>();
+        count += nll.numel();
+    }
+    Ok((total / count as f64).exp())
+}

@@ -1,0 +1,56 @@
+//! Sliced decoder-layer latency: the structured-speedup claim (the paper
+//! §1–2: structured pruning yields hardware-agnostic inference
+//! speedups). Runs the physically sliced `latency_llama_small_s{pct}`
+//! artifacts and reports latency vs sparsity.
+
+use crate::runtime::executable::{Artifact, In};
+use crate::runtime::Manifest;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+pub struct LatencyPoint {
+    pub sparsity: f64,
+    pub f_s: usize,
+    pub dk_s: usize,
+    pub mean_ms: f64,
+    pub speedup: f64,
+}
+
+/// Measure each sliced-layer artifact; `reps` timed runs after 2 warmups.
+pub fn layer_latency_sweep(manifest: &Manifest, reps: usize) -> Result<Vec<LatencyPoint>> {
+    let mut names: Vec<&String> = manifest.latency.keys().collect();
+    names.sort();
+    let mut points = Vec::new();
+    let mut base_ms = None;
+    let mut rng = Rng::new(123);
+    for name in names {
+        let meta = &manifest.latency[name];
+        let art = Artifact::load(manifest, name)?;
+        // random inputs with the right sliced shapes
+        let inputs: Vec<Tensor> = art
+            .spec
+            .inputs
+            .iter()
+            .map(|io| Tensor::randn(&io.shape, 0.05, &mut rng))
+            .collect();
+        let ins: Vec<In> = inputs.iter().map(In::F).collect();
+        for _ in 0..2 {
+            art.call(&ins)?;
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            art.call(&ins)?;
+        }
+        let mean_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let base = *base_ms.get_or_insert(mean_ms);
+        points.push(LatencyPoint {
+            sparsity: meta.sparsity,
+            f_s: meta.f_s,
+            dk_s: meta.dk_s,
+            mean_ms,
+            speedup: base / mean_ms,
+        });
+    }
+    Ok(points)
+}

@@ -1,0 +1,105 @@
+//! Zero-shot likelihood-ranking evaluation (Table 3 substitution).
+//!
+//! Every (prompt, candidate) pair becomes one row of a [B, T] batch for
+//! the `fwd_loss` artifact; the candidate span's summed NLL (extracted
+//! from the per-token NLL output with the standard shift: position i
+//! predicts token i+1) ranks the choices, lm-eval-harness style.
+
+use crate::data::tasks::TaskSuite;
+use crate::model::Weights;
+use crate::runtime::ModelEngine;
+use crate::tensor::IntTensor;
+use anyhow::Result;
+
+/// One scored row: which task, which choice, candidate span in the row.
+struct RowRef {
+    task: usize,
+    choice: usize,
+    span: (usize, usize), // [start, end) in tok_nll position space
+}
+
+pub struct SuiteResult {
+    pub kind: &'static str,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+/// Evaluate one suite. Packs rows densely into fixed [B, T] batches.
+pub fn eval_suite(
+    engine: &ModelEngine,
+    weights: &Weights,
+    suite: &TaskSuite,
+) -> Result<SuiteResult> {
+    let b = engine.spec.batch;
+    let t = engine.spec.seq;
+
+    // Build all rows.
+    let mut rows: Vec<(Vec<i32>, RowRef)> = Vec::new();
+    for (ti, task) in suite.tasks.iter().enumerate() {
+        for (ci, choice) in task.choices.iter().enumerate() {
+            let mut toks = task.prompt.clone();
+            let plen = toks.len();
+            toks.extend_from_slice(choice);
+            let clen = choice.len();
+            anyhow::ensure!(toks.len() < t, "row longer than artifact seq");
+            toks.resize(t, 0);
+            rows.push((
+                toks,
+                RowRef { task: ti, choice: ci, span: (plen - 1, plen - 1 + clen) },
+            ));
+        }
+    }
+
+    // Score rows batch by batch; tail batch padded with row 0.
+    let params = engine.params_literal(&weights.packed)?; // upload once
+    let mut nll_per_row: Vec<f64> = vec![0.0; rows.len()];
+    let mut idx = 0usize;
+    while idx < rows.len() {
+        let mut tokens = Vec::with_capacity(b * t);
+        let mut targets = Vec::with_capacity(b * t);
+        let mut live = Vec::with_capacity(b);
+        for r in 0..b {
+            let row = if idx + r < rows.len() {
+                live.push(idx + r);
+                &rows[idx + r].0
+            } else {
+                &rows[0].0
+            };
+            tokens.extend_from_slice(row);
+            // shifted targets within the row; last target is a dummy 0
+            targets.extend_from_slice(&row[1..]);
+            targets.push(0);
+        }
+        let toks = IntTensor::new(vec![b, t], tokens);
+        let tgts = IntTensor::new(vec![b, t], targets);
+        let out = engine.fwd_loss_lit(&params, &toks, &tgts)?;
+        for (r, &row_idx) in live.iter().enumerate() {
+            let (s, e) = rows[row_idx].1.span;
+            let mut sum = 0.0f64;
+            for p in s..e {
+                sum += out.tok_nll.data[r * t + p] as f64;
+            }
+            nll_per_row[row_idx] = sum;
+        }
+        idx += b;
+    }
+
+    // Rank per task.
+    let mut correct = 0usize;
+    for (ti, task) in suite.tasks.iter().enumerate() {
+        let mut best = (f64::INFINITY, 0usize);
+        for (row, rf) in rows.iter().map(|(_, rf)| rf).enumerate() {
+            if rf.task == ti && nll_per_row[row] < best.0 {
+                best = (nll_per_row[row], rf.choice);
+            }
+        }
+        if best.1 == task.answer {
+            correct += 1;
+        }
+    }
+    Ok(SuiteResult {
+        kind: suite.kind.label(),
+        accuracy: 100.0 * correct as f64 / suite.tasks.len() as f64,
+        n: suite.tasks.len(),
+    })
+}

@@ -1,0 +1,112 @@
+//! Shared experiment plumbing: per-model preparation (dataset, engine,
+//! cached trained weights), method runs, and PPL formatting.
+
+use crate::data::{Corpus, Dataset};
+use crate::eval::perplexity;
+use crate::model::Weights;
+use crate::prune::{self, Method, PruneOpts, PruneReport};
+use crate::runtime::{Manifest, ModelEngine};
+use crate::Result;
+
+/// Experiment context: manifest + budget knobs (shrunk by `--fast`).
+pub struct ExpCtx {
+    pub manifest: Manifest,
+    pub eval_batches: usize,
+    pub calib_batches: usize,
+    pub tasks_per_suite: usize,
+    pub seed: u64,
+}
+
+impl ExpCtx {
+    pub fn new(manifest: Manifest, fast: bool) -> ExpCtx {
+        ExpCtx {
+            manifest,
+            eval_batches: if fast { 4 } else { 12 },
+            calib_batches: if fast { 4 } else { 8 },
+            tasks_per_suite: if fast { 40 } else { 120 },
+            seed: 42,
+        }
+    }
+
+    /// Engine + dataset + trained weights for one zoo model.
+    pub fn prepared(&self, model: &str) -> Result<Prepared<'_>> {
+        let engine = ModelEngine::new(&self.manifest, model)?;
+        let spec = engine.spec.clone();
+        let (steps, _) = crate::model::zoo::train_budget(model);
+        let corpus = Corpus::new(spec.vocab, self.seed ^ spec.vocab as u64);
+        let dataset = Dataset::new(corpus, spec.batch, spec.seq, steps + 8);
+        let weights = crate::train::ensure_trained(&self.manifest, model, &dataset)?;
+        Ok(Prepared { engine, dataset, weights })
+    }
+}
+
+pub struct Prepared<'m> {
+    pub engine: ModelEngine<'m>,
+    pub dataset: Dataset,
+    pub weights: Weights,
+}
+
+impl<'m> Prepared<'m> {
+    pub fn dense_ppl(&self, ctx: &ExpCtx) -> Result<f64> {
+        perplexity(
+            &self.engine,
+            &self.weights,
+            &self.dataset.valid_batches(ctx.eval_batches),
+        )
+    }
+
+    /// Prune with `method` at `sparsity`; return (ppl, report).
+    pub fn prune_and_eval(
+        &self,
+        ctx: &ExpCtx,
+        method: Method,
+        sparsity: f64,
+    ) -> Result<(f64, PruneReport)> {
+        let (pruned, _mask, report) = self.prune_only(ctx, method, sparsity)?;
+        let ppl = perplexity(
+            &self.engine,
+            &pruned,
+            &self.dataset.valid_batches(ctx.eval_batches),
+        )?;
+        crate::info!(
+            "{} {} s={:.0}% → ppl {:.2} ({:.2}s)",
+            self.engine.spec.name,
+            method.label(),
+            sparsity * 100.0,
+            ppl,
+            report.total_s
+        );
+        Ok((ppl, report))
+    }
+
+    pub fn prune_only(
+        &self,
+        ctx: &ExpCtx,
+        method: Method,
+        sparsity: f64,
+    ) -> Result<(Weights, crate::model::PruneMask, PruneReport)> {
+        let mut opts = PruneOpts::new(method, sparsity);
+        opts.calib_batches = ctx.calib_batches;
+        prune::prune(&self.engine, &self.weights, &self.dataset, &opts)
+    }
+
+    /// Pruned weights with explicit opts (ablations).
+    pub fn prune_with(
+        &self,
+        opts: &PruneOpts,
+    ) -> Result<(Weights, crate::model::PruneMask, PruneReport)> {
+        prune::prune(&self.engine, &self.weights, &self.dataset, opts)
+    }
+
+    pub fn ppl_of(&self, ctx: &ExpCtx, w: &Weights) -> Result<f64> {
+        perplexity(&self.engine, w, &self.dataset.valid_batches(ctx.eval_batches))
+    }
+}
+
+pub fn fmt_ppl(p: f64) -> String {
+    if p > 9999.0 {
+        format!("{:.2e}", p)
+    } else {
+        format!("{:.2}", p)
+    }
+}

@@ -1,0 +1,92 @@
+//! Beyond-paper extension experiments (DESIGN.md process step 5):
+//!
+//! * `ext_adaptive` — the paper's §5 future-work idea: adaptive per-layer
+//!   sparsity (global z-scored selection) vs the default uniform ratios.
+//! * `ext_admm` — the §3.3 efficiency/accuracy argument quantified: ADMM
+//!   iteration count vs wall-time vs resulting perplexity, against the
+//!   closed-form restoration.
+//! * `ext_calib` — calibration-budget sensitivity of FASP (the paper
+//!   fixes 128 samples; how robust is the method to fewer?).
+
+use super::common::{fmt_ppl, ExpCtx};
+use crate::bench_support::table::Table;
+use crate::prune::{Method, PruneOpts};
+use crate::Result;
+
+const MODEL: &str = "llama_tiny";
+
+pub fn run_adaptive(ctx: &ExpCtx) -> Result<String> {
+    let mut out = String::new();
+    for model in ["opt_tiny", "llama_tiny"] {
+        let p = ctx.prepared(model)?;
+        let mut t = Table::new(
+            &format!("Extension — adaptive per-layer sparsity ({model}, PPL ↓)"),
+            &["", "20%", "30%", "40%"],
+        );
+        for (label, adaptive) in [("FASP uniform", false), ("FASP adaptive", true)] {
+            let mut row = vec![label.to_string()];
+            for &s in &[0.20, 0.30, 0.40] {
+                let mut opts = PruneOpts::new(Method::Fasp, s);
+                opts.calib_batches = ctx.calib_batches;
+                opts.adaptive = adaptive;
+                let (w, _, _) = p.prune_with(&opts)?;
+                row.push(fmt_ppl(p.ppl_of(ctx, &w)?));
+            }
+            t.row(row);
+        }
+        out.push_str(&t.render());
+    }
+    Ok(out)
+}
+
+pub fn run_admm(ctx: &ExpCtx) -> Result<String> {
+    let p = ctx.prepared(MODEL)?;
+    let mut t = Table::new(
+        "Extension — restoration solver trade-off at 30% sparsity (llama_tiny)",
+        &["restorer", "PPL ↓", "restore time", "total time"],
+    );
+    // closed form (FASP)
+    {
+        let mut opts = PruneOpts::new(Method::Fasp, 0.30);
+        opts.calib_batches = ctx.calib_batches;
+        let (w, _, rep) = p.prune_with(&opts)?;
+        t.row(vec![
+            "closed form (Eq. 8)".into(),
+            fmt_ppl(p.ppl_of(ctx, &w)?),
+            format!("{:.3}s", rep.phase("restore")),
+            format!("{:.2}s", rep.total_s),
+        ]);
+    }
+    for iters in [2usize, 8, 32, 128] {
+        let mut opts = PruneOpts::new(Method::NasllmAdmm, 0.30);
+        opts.calib_batches = ctx.calib_batches;
+        opts.admm_iters = iters;
+        let (w, _, rep) = p.prune_with(&opts)?;
+        t.row(vec![
+            format!("ADMM {iters} iters"),
+            fmt_ppl(p.ppl_of(ctx, &w)?),
+            format!("{:.3}s", rep.phase("restore")),
+            format!("{:.2}s", rep.total_s),
+        ]);
+    }
+    Ok(t.render())
+}
+
+pub fn run_calib(ctx: &ExpCtx) -> Result<String> {
+    let p = ctx.prepared(MODEL)?;
+    let mut t = Table::new(
+        "Extension — calibration-budget sensitivity, FASP 30% (llama_tiny)",
+        &["calib batches (×B×T rows)", "PPL ↓", "capture time"],
+    );
+    for &n in &[1usize, 2, 4, 8, 16] {
+        let mut opts = PruneOpts::new(Method::Fasp, 0.30);
+        opts.calib_batches = n;
+        let (w, _, rep) = p.prune_with(&opts)?;
+        t.row(vec![
+            n.to_string(),
+            fmt_ppl(p.ppl_of(ctx, &w)?),
+            format!("{:.2}s", rep.phase("capture")),
+        ]);
+    }
+    Ok(t.render())
+}

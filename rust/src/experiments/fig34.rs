@@ -1,0 +1,77 @@
+//! Figures 3 & 4: perplexity-vs-sparsity curves. Emits both an ASCII
+//! chart and a CSV block so the curves can be replotted externally.
+
+use super::common::ExpCtx;
+use crate::bench_support::table::ascii_chart;
+use crate::prune::Method;
+use crate::Result;
+use std::fmt::Write as _;
+
+const SWEEP: [f64; 6] = [0.0, 0.10, 0.20, 0.30, 0.40, 0.50];
+
+fn sweep(ctx: &ExpCtx, model: &str, methods: &[Method], title: &str) -> Result<String> {
+    let p = ctx.prepared(model)?;
+    let dense = p.dense_ppl(ctx)?;
+    let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut csv = String::from("sparsity");
+    for m in methods {
+        csv.push(',');
+        csv.push_str(m.label());
+    }
+    csv.push('\n');
+    let mut rows: Vec<Vec<f64>> = vec![vec![0.0; methods.len()]; SWEEP.len()];
+    for (mi, &method) in methods.iter().enumerate() {
+        let mut ys = Vec::with_capacity(SWEEP.len());
+        for (si, &s) in SWEEP.iter().enumerate() {
+            let ppl = if s == 0.0 {
+                dense
+            } else {
+                p.prune_and_eval(ctx, method, s)?.0
+            };
+            ys.push(ppl.ln()); // log-scale like the paper's figures
+            rows[si][mi] = ppl;
+        }
+        series.push((method.label().to_string(), ys));
+    }
+    for (si, &s) in SWEEP.iter().enumerate() {
+        let _ = write!(csv, "{:.2}", s);
+        for v in &rows[si] {
+            let _ = write!(csv, ",{:.4}", v);
+        }
+        csv.push('\n');
+    }
+    let mut out = ascii_chart(
+        &format!("{title} — log(PPL) vs sparsity, {model}"),
+        &SWEEP,
+        &series,
+        16,
+    );
+    out.push_str("\n```csv\n");
+    out.push_str(&csv);
+    out.push_str("```\n");
+    Ok(out)
+}
+
+pub fn run_fig3(ctx: &ExpCtx) -> Result<String> {
+    let methods = [Method::SliceGptLike, Method::NasllmAdmm, Method::Fasp];
+    let mut out = String::new();
+    for model in ["opt_small", "opt_medium"] {
+        out.push_str(&sweep(ctx, model, &methods, "Figure 3")?);
+    }
+    Ok(out)
+}
+
+pub fn run_fig4(ctx: &ExpCtx) -> Result<String> {
+    let methods = [
+        Method::LlmPrunerLike,
+        Method::SliceGptLike,
+        Method::NasllmAdmm,
+        Method::Flap,
+        Method::Fasp,
+    ];
+    let mut out = String::new();
+    for model in ["llama_small", "llama_medium"] {
+        out.push_str(&sweep(ctx, model, &methods, "Figure 4")?);
+    }
+    Ok(out)
+}

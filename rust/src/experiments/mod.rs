@@ -1,0 +1,63 @@
+//! Experiment registry: one module per paper table/figure (DESIGN.md §4).
+//! Every experiment regenerates its table/figure from scratch — training
+//! checkpoints are cached under `checkpoints/`, outputs land in
+//! `results/<id>.md` and on stdout.
+
+pub mod common;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+pub mod fig34;
+pub mod extensions;
+
+use crate::Result;
+use common::ExpCtx;
+
+pub struct Experiment {
+    pub id: &'static str,
+    pub paper_ref: &'static str,
+    pub run: fn(&ExpCtx) -> Result<String>,
+}
+
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment { id: "table1", paper_ref: "Table 1: OPT perplexity vs sparsity", run: table1::run },
+        Experiment { id: "table2", paper_ref: "Table 2: LLaMA perplexity vs sparsity", run: table2::run },
+        Experiment { id: "table3", paper_ref: "Table 3: zero-shot accuracy (LLaMA)", run: table3::run },
+        Experiment { id: "table4", paper_ref: "Table 4: pruning wall-time", run: table4::run },
+        Experiment { id: "table5", paper_ref: "Table 5: pruning-structure ablation", run: table5::run },
+        Experiment { id: "table6", paper_ref: "Table 6: Q/K pruning ablation", run: table6::run },
+        Experiment { id: "fig3", paper_ref: "Figure 3: PPL-vs-sparsity curves (OPT)", run: fig34::run_fig3 },
+        Experiment { id: "fig4", paper_ref: "Figure 4: PPL-vs-sparsity curves (LLaMA)", run: fig34::run_fig4 },
+        Experiment { id: "ext_adaptive", paper_ref: "Extension: adaptive per-layer sparsity (§5 future work)", run: extensions::run_adaptive },
+        Experiment { id: "ext_admm", paper_ref: "Extension: ADMM-vs-closed-form trade-off (§3.3)", run: extensions::run_admm },
+        Experiment { id: "ext_calib", paper_ref: "Extension: calibration-budget sensitivity", run: extensions::run_calib },
+    ]
+}
+
+/// Run one experiment by id (or "all") and persist outputs.
+pub fn run_by_id(ctx: &ExpCtx, id: &str) -> Result<()> {
+    let reg = registry();
+    let selected: Vec<&Experiment> = if id == "all" {
+        reg.iter().collect()
+    } else {
+        reg.iter().filter(|e| e.id == id).collect()
+    };
+    anyhow::ensure!(
+        !selected.is_empty(),
+        "unknown experiment '{id}' (have: {}, all)",
+        reg.iter().map(|e| e.id).collect::<Vec<_>>().join(", ")
+    );
+    let dir = crate::repo_root().join("results");
+    std::fs::create_dir_all(&dir)?;
+    for exp in selected {
+        crate::info!("=== {} — {} ===", exp.id, exp.paper_ref);
+        let out = (exp.run)(ctx)?;
+        println!("{out}");
+        std::fs::write(dir.join(format!("{}.md", exp.id)), &out)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Table 1: WikiText perplexity of pruned OPT models under various
+//! sparsity — FASP vs SliceGPT vs NASLLM, three model sizes.
+
+use super::common::{fmt_ppl, ExpCtx};
+use crate::bench_support::table::Table;
+use crate::model::zoo;
+use crate::prune::Method;
+use crate::Result;
+
+const METHODS: [Method; 3] = [Method::SliceGptLike, Method::NasllmAdmm, Method::Fasp];
+const SPARSITIES: [f64; 3] = [0.10, 0.20, 0.30];
+
+pub fn run(ctx: &ExpCtx) -> Result<String> {
+    let mut t = Table::new(
+        "Table 1 — perplexity (↓) of pruned OPT-family models (synthetic-corpus analog)",
+        &["Method", "Sparsity", "OPT-125M*", "OPT-1.3B*", "OPT-2.7B*"],
+    );
+    let prepared: Vec<_> = zoo::OPT_MODELS
+        .iter()
+        .map(|m| ctx.prepared(m))
+        .collect::<Result<_>>()?;
+
+    let mut dense = vec!["Dense".to_string(), "0%".to_string()];
+    for p in &prepared {
+        dense.push(fmt_ppl(p.dense_ppl(ctx)?));
+    }
+    t.row(dense);
+
+    for &s in &SPARSITIES {
+        for method in METHODS {
+            let mut row = vec![method.label().to_string(), format!("{:.0}%", s * 100.0)];
+            for p in &prepared {
+                let (ppl, _) = p.prune_and_eval(ctx, method, s)?;
+                row.push(fmt_ppl(ppl));
+            }
+            t.row(row);
+        }
+    }
+    Ok(t.render())
+}

@@ -1,0 +1,46 @@
+//! Table 2: perplexity of pruned LLaMA-family models — FASP vs
+//! LLM-Pruner / SliceGPT / NASLLM / FLAP across three sizes.
+
+use super::common::{fmt_ppl, ExpCtx};
+use crate::bench_support::table::Table;
+use crate::model::zoo;
+use crate::prune::Method;
+use crate::Result;
+
+const METHODS: [Method; 5] = [
+    Method::LlmPrunerLike,
+    Method::SliceGptLike,
+    Method::NasllmAdmm,
+    Method::Flap,
+    Method::Fasp,
+];
+const SPARSITIES: [f64; 3] = [0.10, 0.20, 0.30];
+
+pub fn run(ctx: &ExpCtx) -> Result<String> {
+    let mut t = Table::new(
+        "Table 2 — perplexity (↓) of pruned LLaMA-family models (synthetic-corpus analog)",
+        &["Method", "Sparsity", "LLaMA-7B*", "LLaMA-13B*", "LLaMA-30B*"],
+    );
+    let prepared: Vec<_> = zoo::LLAMA_MODELS
+        .iter()
+        .map(|m| ctx.prepared(m))
+        .collect::<Result<_>>()?;
+
+    let mut dense = vec!["Dense".to_string(), "0%".to_string()];
+    for p in &prepared {
+        dense.push(fmt_ppl(p.dense_ppl(ctx)?));
+    }
+    t.row(dense);
+
+    for &s in &SPARSITIES {
+        for method in METHODS {
+            let mut row = vec![method.label().to_string(), format!("{:.0}%", s * 100.0)];
+            for p in &prepared {
+                let (ppl, _) = p.prune_and_eval(ctx, method, s)?;
+                row.push(fmt_ppl(ppl));
+            }
+            t.row(row);
+        }
+    }
+    Ok(t.render())
+}

@@ -1,0 +1,62 @@
+//! Table 3: zero-shot accuracy of the pruned LLaMA-7B analog on the
+//! seven synthetic suites at 10% / 20% sparsity.
+
+use super::common::ExpCtx;
+use crate::bench_support::table::Table;
+use crate::data::tasks::{TaskKind, TaskSuite};
+use crate::eval::eval_suite;
+use crate::model::Weights;
+use crate::prune::Method;
+use crate::Result;
+
+const METHODS: [Method; 4] =
+    [Method::LlmPrunerLike, Method::SliceGptLike, Method::Flap, Method::Fasp];
+const MODEL: &str = "llama_small";
+
+pub fn run(ctx: &ExpCtx) -> Result<String> {
+    let p = ctx.prepared(MODEL)?;
+    let suites: Vec<TaskSuite> = TaskKind::all()
+        .iter()
+        .map(|&k| TaskSuite::generate(&p.dataset.corpus, k, ctx.tasks_per_suite, ctx.seed))
+        .collect();
+
+    let mut headers: Vec<&str> = vec!["Method", "Sparsity"];
+    let labels: Vec<&'static str> = suites.iter().map(|s| s.kind.label()).collect();
+    headers.extend(labels.iter());
+    headers.push("Mean");
+    let mut t = Table::new(
+        "Table 3 — zero-shot accuracy (↑, %) of pruned LLaMA-7B* on the synthetic suites",
+        &headers,
+    );
+
+    let score = |w: &Weights| -> Result<Vec<f64>> {
+        let mut accs = Vec::with_capacity(suites.len());
+        for s in &suites {
+            accs.push(eval_suite(&p.engine, w, s)?.accuracy);
+        }
+        Ok(accs)
+    };
+    let add_row = |t: &mut Table, name: &str, sp: &str, accs: &[f64]| {
+        let mut row = vec![name.to_string(), sp.to_string()];
+        for a in accs {
+            row.push(format!("{:.2}", a));
+        }
+        let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+        row.push(format!("{:.2}", mean));
+        t.row(row);
+    };
+
+    add_row(&mut t, "Dense", "0%", &score(&p.weights)?);
+    for &s in &[0.10, 0.20] {
+        for method in METHODS {
+            let (w, _, _) = p.prune_only(ctx, method, s)?;
+            add_row(
+                &mut t,
+                method.label(),
+                &format!("{:.0}%", s * 100.0),
+                &score(&w)?,
+            );
+        }
+    }
+    Ok(t.render())
+}

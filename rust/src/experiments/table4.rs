@@ -1,0 +1,49 @@
+//! Table 4: pruning wall-time by method and model size (LLaMA family).
+//! The paper's claim is the cost *ordering* — FASP ≈ FLAP ≪ SliceGPT ≪
+//! NASLLM/LLM-Pruner — which this regenerates on the shared substrate,
+//! including the per-phase breakdown that explains it.
+
+use super::common::ExpCtx;
+use crate::bench_support::table::Table;
+use crate::model::zoo;
+use crate::prune::Method;
+use crate::util::timer::fmt_duration;
+use crate::Result;
+use std::time::Duration;
+
+const METHODS: [Method; 5] = [
+    Method::NasllmAdmm,
+    Method::LlmPrunerLike,
+    Method::SliceGptLike,
+    Method::Flap,
+    Method::Fasp,
+];
+
+pub fn run(ctx: &ExpCtx) -> Result<String> {
+    let mut t = Table::new(
+        "Table 4 — pruning wall-time at 20% sparsity (lower is better)",
+        &["Method", "LLaMA-7B*", "LLaMA-13B*", "LLaMA-30B*", "phase breakdown (30B*)"],
+    );
+    let prepared: Vec<_> = zoo::LLAMA_MODELS
+        .iter()
+        .map(|m| ctx.prepared(m))
+        .collect::<Result<_>>()?;
+
+    for method in METHODS {
+        let mut row = vec![method.label().to_string()];
+        let mut last_phases = String::new();
+        for p in &prepared {
+            let (_, report) = p.prune_and_eval(ctx, method, 0.20)?;
+            row.push(fmt_duration(Duration::from_secs_f64(report.total_s)));
+            last_phases = report
+                .phase_s
+                .iter()
+                .map(|(n, s)| format!("{n} {:.2}s", s))
+                .collect::<Vec<_>>()
+                .join(", ");
+        }
+        row.push(last_phases);
+        t.row(row);
+    }
+    Ok(t.render())
+}

@@ -1,0 +1,29 @@
+//! Table 5 ablation: the pruning *structure*. "Wanda" row = per-operator
+//! column pruning with evenly distributed sparsity + optimal update but
+//! no coupling; "FASP" row = the coupled structure with Q/K skipped.
+//! Paper model: OPT-125M (our `opt_tiny`).
+
+use super::common::{fmt_ppl, ExpCtx};
+use crate::bench_support::table::Table;
+use crate::prune::Method;
+use crate::Result;
+
+const MODEL: &str = "opt_tiny";
+const SPARSITIES: [f64; 3] = [0.10, 0.20, 0.30];
+
+pub fn run(ctx: &ExpCtx) -> Result<String> {
+    let p = ctx.prepared(MODEL)?;
+    let mut t = Table::new(
+        "Table 5 — ablation on the pruning structure (perplexity ↓, OPT-125M*)",
+        &["", "10%", "20%", "30%"],
+    );
+    for (label, method) in [("Wanda", Method::WandaStruct), ("FASP", Method::Fasp)] {
+        let mut row = vec![label.to_string()];
+        for &s in &SPARSITIES {
+            let (ppl, _) = p.prune_and_eval(ctx, method, s)?;
+            row.push(fmt_ppl(ppl));
+        }
+        t.row(row);
+    }
+    Ok(t.render())
+}

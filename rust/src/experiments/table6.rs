@@ -1,0 +1,31 @@
+//! Table 6 ablation: pruning W_Q/W_K rows (with evenly distributed
+//! sparsity) vs FASP's default of skipping them and rebalancing.
+//! Paper model: OPT-125M (our `opt_tiny`).
+
+use super::common::{fmt_ppl, ExpCtx};
+use crate::bench_support::table::Table;
+use crate::prune::{Method, PruneOpts};
+use crate::Result;
+
+const MODEL: &str = "opt_tiny";
+const SPARSITIES: [f64; 3] = [0.10, 0.20, 0.30];
+
+pub fn run(ctx: &ExpCtx) -> Result<String> {
+    let p = ctx.prepared(MODEL)?;
+    let mut t = Table::new(
+        "Table 6 — ablation on pruning W_Q and W_K (perplexity ↓, OPT-125M*)",
+        &["", "10%", "20%", "30%"],
+    );
+    for (label, prune_qk) in [("Pruning W_Q and W_K", true), ("FASP", false)] {
+        let mut row = vec![label.to_string()];
+        for &s in &SPARSITIES {
+            let mut opts = PruneOpts::new(Method::Fasp, s);
+            opts.calib_batches = ctx.calib_batches;
+            opts.prune_qk = prune_qk;
+            let (w, _, _) = p.prune_with(&opts)?;
+            row.push(fmt_ppl(p.ppl_of(ctx, &w)?));
+        }
+        t.row(row);
+    }
+    Ok(t.render())
+}

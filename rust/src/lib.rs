@@ -1,0 +1,61 @@
+//! # FASP — Fast and Accurate Structured Pruning of Large Language Models
+//!
+//! Full-system reproduction of the FASP paper on a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: pruning pipeline, calibration
+//!   batching, restoration solver, model zoo, trainer, evaluation harness
+//!   and experiment registry. Python is never on this path.
+//! * **L2** — JAX model definitions (`python/compile/`), AOT-lowered once
+//!   to HLO-text artifacts consumed through [`runtime`].
+//! * **L1** — Pallas kernels (Gram accumulation, Wanda column metric,
+//!   tiled matmul) embedded in the L2 entries.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index
+//! mapping every paper table/figure to a module, and `EXPERIMENTS.md` for
+//! measured results.
+
+pub mod util;
+pub mod tensor;
+pub mod linalg;
+pub mod runtime;
+pub mod model;
+pub mod data;
+pub mod train;
+pub mod prune;
+pub mod eval;
+pub mod bench_support;
+pub mod experiments;
+pub mod cli;
+
+/// Crate-wide result alias (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;
+
+/// Repository root discovery: honors `FASP_ROOT`, else walks up from the
+/// current directory looking for `Cargo.toml`/`artifacts`.
+pub fn repo_root() -> std::path::PathBuf {
+    if let Ok(r) = std::env::var("FASP_ROOT") {
+        return std::path::PathBuf::from(r);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        if dir.join("Cargo.toml").exists() || dir.join("artifacts").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return ".".into();
+        }
+    }
+}
+
+/// Default artifacts directory.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    repo_root().join("artifacts")
+}
+
+/// Default checkpoints directory (created on demand).
+pub fn checkpoints_dir() -> std::path::PathBuf {
+    let d = repo_root().join("checkpoints");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}

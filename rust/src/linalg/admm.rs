@@ -1,0 +1,159 @@
+//! ADMM restoration baseline (the NASLLM approach the paper argues
+//! against in §3.3).
+//!
+//! Solves the same masked least-squares problem as FASP's closed form —
+//! `min ‖W' X − W X‖²  s.t.  W'[:, pruned] = 0` — but by ADMM splitting
+//! `W' = Z` with the column-support constraint on `Z`:
+//!
+//! ```text
+//! W_{k+1} = (W G + ρ (Z_k − U_k)) (G + ρI)⁻¹
+//! Z_{k+1} = Π_M (W_{k+1} + U_k)        (project: zero pruned columns)
+//! U_{k+1} = U_k + W_{k+1} − Z_{k+1}
+//! ```
+//!
+//! As the paper notes, the `(G + ρI)⁻¹` factorization already costs as
+//! much as FASP's single solve, and the iterations converge slowly near
+//! the optimum — `experiments/table4.rs` measures exactly that trade-off.
+
+use super::cholesky::cholesky;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// ADMM solve. `w` is the dense [m,n] weight, `g` the n×n Gram (f64
+/// row-major), `kept` the kept-column mask. Returns the restored [m,n]
+/// weight with pruned columns exactly zero, plus the iteration count run.
+pub fn admm_restore(
+    w: &Tensor,
+    g: &[f64],
+    kept: &[bool],
+    rho: f64,
+    iters: usize,
+) -> Result<(Tensor, usize)> {
+    let (m, n) = w.dims2();
+    assert_eq!(g.len(), n * n);
+    assert_eq!(kept.len(), n);
+
+    // factor (G + ρI) once
+    let mut greg = g.to_vec();
+    for i in 0..n {
+        greg[i * n + i] += rho;
+    }
+    let factor = cholesky(&greg, n)?;
+
+    // B = W·G, rows in f64
+    let mut b = vec![0.0f64; m * n];
+    for i in 0..m {
+        let wrow = w.row(i);
+        for k in 0..n {
+            let wik = wrow[k] as f64;
+            if wik == 0.0 {
+                continue;
+            }
+            let grow = &g[k * n..(k + 1) * n];
+            let brow = &mut b[i * n..(i + 1) * n];
+            for j in 0..n {
+                brow[j] += wik * grow[j];
+            }
+        }
+    }
+
+    let mut wk = vec![0.0f64; m * n]; // W iterate
+    let mut z = vec![0.0f64; m * n]; // projected iterate
+    let mut u = vec![0.0f64; m * n]; // scaled dual
+    let mut rhs = vec![0.0f64; n];
+    let mut done = iters;
+    for it in 0..iters {
+        let mut primal_res = 0.0f64;
+        for i in 0..m {
+            let brow = &b[i * n..(i + 1) * n];
+            for j in 0..n {
+                rhs[j] = brow[j] + rho * (z[i * n + j] - u[i * n + j]);
+            }
+            factor.solve_in_place(&mut rhs);
+            wk[i * n..(i + 1) * n].copy_from_slice(&rhs);
+        }
+        for i in 0..m {
+            for j in 0..n {
+                let idx = i * n + j;
+                let zn = if kept[j] { wk[idx] + u[idx] } else { 0.0 };
+                primal_res += (wk[idx] - zn) * (wk[idx] - zn);
+                u[idx] += wk[idx] - zn;
+                z[idx] = zn;
+            }
+        }
+        if primal_res.sqrt() < 1e-9 * (m as f64).sqrt() {
+            done = it + 1;
+            break;
+        }
+    }
+
+    let out: Vec<f32> = z.iter().map(|&x| x as f32).collect();
+    Ok((Tensor::new(vec![m, n], out), done))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// ADMM must converge towards the closed-form restoration.
+    #[test]
+    fn approaches_closed_form() {
+        let mut rng = Rng::new(0);
+        let (m, n, s) = (6usize, 10usize, 40usize);
+        let w = Tensor::randn(&[m, n], 1.0, &mut rng);
+        // G from random activations X [s, n]
+        let x = Tensor::randn(&[s, n], 1.0, &mut rng);
+        let mut g = vec![0.0f64; n * n];
+        for r in 0..s {
+            for i in 0..n {
+                for j in 0..n {
+                    g[i * n + j] += (x.at2(r, i) * x.at2(r, j)) as f64;
+                }
+            }
+        }
+        for i in 0..n {
+            g[i * n + i] += 1e-3;
+        }
+        let kept: Vec<bool> = (0..n).map(|j| j % 3 != 0).collect();
+
+        let (w_admm, iters) = admm_restore(&w, &g, &kept, 1.0, 400).unwrap();
+        assert!(iters <= 400);
+        // closed form via kept-block solve
+        let kept_idx: Vec<usize> = (0..n).filter(|&j| kept[j]).collect();
+        let kn = kept_idx.len();
+        let mut gk = vec![0.0f64; kn * kn];
+        for (a, &ia) in kept_idx.iter().enumerate() {
+            for (b2, &ib) in kept_idx.iter().enumerate() {
+                gk[a * kn + b2] = g[ia * n + ib];
+            }
+        }
+        let f = cholesky(&gk, kn).unwrap();
+        for i in 0..m {
+            // rhs = (W G)[i, kept]
+            let mut rhs = vec![0.0f64; kn];
+            for (a, &ja) in kept_idx.iter().enumerate() {
+                let mut sum = 0.0;
+                for k in 0..n {
+                    sum += w.at2(i, k) as f64 * g[k * n + ja];
+                }
+                rhs[a] = sum;
+            }
+            f.solve_in_place(&mut rhs);
+            for (a, &ja) in kept_idx.iter().enumerate() {
+                assert!(
+                    (w_admm.at2(i, ja) as f64 - rhs[a]).abs() < 1e-3,
+                    "row {i} col {ja}"
+                );
+            }
+        }
+        // pruned columns exactly zero
+        for i in 0..m {
+            for j in 0..n {
+                if !kept[j] {
+                    assert_eq!(w_admm.at2(i, j), 0.0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Cyclic Jacobi eigendecomposition for symmetric matrices.
+//!
+//! Powers the SliceGPT-like baseline: PCA of activation covariances
+//! (Gram matrices from calibration capture) yields the rotation whose
+//! trailing principal directions are sliced. The paper criticizes
+//! SliceGPT for needing 64-bit PCA on large calibration sets — running it
+//! here on the same Gram matrices makes the cost comparison direct
+//! (Table 4 analog).
+
+/// Eigendecomposition A = V · diag(w) · Vᵀ of a symmetric matrix
+/// (row-major n×n, f64). Returns (eigenvalues ascending, V column-major
+/// by eigenvector: v[k*n..][..n] is the k-th eigenvector).
+pub fn jacobi_eigh(a_in: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a_in.len(), n * n);
+    let mut a = a_in.to_vec();
+    // v starts as identity; rows are eigenvectors at the end
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius mass
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += a[i * n + j] * a[i * n + j];
+            }
+        }
+        if off.sqrt() < 1e-11 * (1.0 + frob(&a, n)) {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = a[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[p * n + p];
+                let aqq = a[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q of A
+                for k in 0..n {
+                    let akp = a[k * n + p];
+                    let akq = a[k * n + q];
+                    a[k * n + p] = c * akp - s * akq;
+                    a[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[p * n + k];
+                    let aqk = a[q * n + k];
+                    a[p * n + k] = c * apk - s * aqk;
+                    a[q * n + k] = s * apk + c * aqk;
+                }
+                // accumulate rotations into V (rows = eigenvectors)
+                for k in 0..n {
+                    let vpk = v[p * n + k];
+                    let vqk = v[q * n + k];
+                    v[p * n + k] = c * vpk - s * vqk;
+                    v[q * n + k] = s * vpk + c * vqk;
+                }
+            }
+        }
+    }
+    let mut w: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
+    // sort ascending, permuting eigenvectors accordingly
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&x, &y| w[x].partial_cmp(&w[y]).unwrap());
+    let w_sorted: Vec<f64> = idx.iter().map(|&i| w[i]).collect();
+    let mut v_sorted = vec![0.0f64; n * n];
+    for (k, &i) in idx.iter().enumerate() {
+        v_sorted[k * n..(k + 1) * n].copy_from_slice(&v[i * n..(i + 1) * n]);
+    }
+    w = w_sorted;
+    (w, v_sorted)
+}
+
+fn frob(a: &[f64], n: usize) -> f64 {
+    a.iter().take(n * n).map(|x| x * x).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = vec![3.0, 0.0, 0.0, 1.0];
+        let (w, _v) = jacobi_eigh(&a, 2);
+        assert!((w[0] - 1.0).abs() < 1e-10);
+        assert!((w[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn reconstructs_random_symmetric() {
+        let mut rng = Rng::new(0);
+        let n = 24;
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.normal();
+                a[i * n + j] = x;
+                a[j * n + i] = x;
+            }
+        }
+        let (w, v) = jacobi_eigh(&a, n);
+        // check A ≈ Σ_k w_k v_k v_kᵀ and orthonormality
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                let mut dot = 0.0;
+                for k in 0..n {
+                    s += w[k] * v[k * n + i] * v[k * n + j];
+                    dot += v[i * n + k] * v[j * n + k];
+                }
+                assert!((s - a[i * n + j]).abs() < 1e-7, "recon ({i},{j})");
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-8, "ortho ({i},{j})");
+            }
+        }
+        // ascending order
+        for k in 1..n {
+            assert!(w[k] >= w[k - 1]);
+        }
+    }
+}

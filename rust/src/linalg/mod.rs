@@ -1,0 +1,19 @@
+//! Dense linear algebra substrate. The xla_extension 0.5.1 runtime cannot
+//! execute jax's LAPACK FFI custom calls, so every dense solve lives here
+//! on the host (DESIGN.md §7-L2):
+//!
+//! * [`cholesky`] / [`solve_posdef`] — the FASP restoration normal
+//!   equation (paper Eq. 8).
+//! * [`jacobi_eigh`] — symmetric eigendecomposition for the
+//!   SliceGPT-like PCA baseline.
+//! * [`admm`] — the NASLLM-style ADMM restorer baseline (paper §3.3
+//!   discussion), kept to measure the efficiency/accuracy trade-off
+//!   the paper argues about.
+
+pub mod cholesky;
+pub mod eigh;
+pub mod admm;
+
+pub use admm::admm_restore;
+pub use cholesky::{cholesky, solve_posdef, solve_posdef_many, CholeskyFactor};
+pub use eigh::jacobi_eigh;

@@ -1,0 +1,8 @@
+//! `fasp` CLI entrypoint — see `fasp help`.
+
+fn main() {
+    if let Err(e) = fasp::cli::run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

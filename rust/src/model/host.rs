@@ -1,0 +1,295 @@
+//! Host-side reference forward pass for both families. This is the
+//! independent implementation used to cross-check the PJRT artifacts
+//! (test_runtime) and as an offline fallback when artifacts are absent.
+//! Mirrors `python/compile/model.py` exactly — any drift is a test
+//! failure, not a silent divergence.
+
+use crate::runtime::manifest::ModelSpec;
+use crate::tensor::matmul::{matmul_bt, matmul};
+use crate::tensor::ops::logsumexp;
+use crate::tensor::{IntTensor, Tensor};
+use super::weights::Weights;
+use anyhow::Result;
+
+const LN_EPS: f32 = 1e-5;
+
+fn layer_norm(x: &mut [f32], d: usize, g: &[f32], b: &[f32]) {
+    for row in x.chunks_exact_mut(d) {
+        let mu: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = (*v - mu) * inv * g[i] + b[i];
+        }
+    }
+}
+
+fn rms_norm(x: &mut [f32], d: usize, g: &[f32]) {
+    for row in x.chunks_exact_mut(d) {
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + LN_EPS).sqrt();
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = *v * inv * g[i];
+        }
+    }
+}
+
+/// cos/sin tables [t, dh/2] matching python rope_tables.
+fn rope_tables(t: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
+    let half = dh / 2;
+    let mut cos = vec![0.0f32; t * half];
+    let mut sin = vec![0.0f32; t * half];
+    for ti in 0..t {
+        for k in 0..half {
+            let inv_freq = 1.0f64 / 10000f64.powf(k as f64 / half as f64);
+            let ang = ti as f64 * inv_freq;
+            cos[ti * half + k] = ang.cos() as f32;
+            sin[ti * half + k] = ang.sin() as f32;
+        }
+    }
+    (cos, sin)
+}
+
+/// Rotate-half RoPE applied in place to [t, dh] rows of one head.
+fn apply_rope(x: &mut [f32], t: usize, dh: usize, cos: &[f32], sin: &[f32]) {
+    let half = dh / 2;
+    for ti in 0..t {
+        let row = &mut x[ti * dh..(ti + 1) * dh];
+        for k in 0..half {
+            let c = cos[ti * half + k];
+            let s = sin[ti * half + k];
+            let x1 = row[k];
+            let x2 = row[half + k];
+            row[k] = x1 * c - x2 * s;
+            row[half + k] = x1 * s + x2 * c;
+        }
+    }
+}
+
+/// Linear y = x·Wᵀ (+ b). x is [rows, in], w is [out, in].
+fn linear(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Tensor {
+    let mut y = matmul_bt(x, w);
+    if let Some(b) = b {
+        let (rows, out) = y.dims2();
+        for r in 0..rows {
+            let row = &mut y.data[r * out..(r + 1) * out];
+            for (v, bv) in row.iter_mut().zip(&b.data) {
+                *v += bv;
+            }
+        }
+    }
+    y
+}
+
+/// Per-layer calibration activations (host mirror of capture.py), used by
+/// tests to validate the capture artifact's Gram matrices.
+pub struct HostCaptures {
+    pub ln1: Tensor,
+    pub ln2: Tensor,
+    pub attn_ctx: Tensor,
+    pub ffn_h: Tensor,
+}
+
+/// Full host forward: per-token NLL [b, t] of `targets` under the model
+/// given `tokens` (teacher forcing, same contract as the fwd_loss
+/// artifact), plus optionally the per-layer capture activations.
+pub fn forward_nll(
+    w: &Weights,
+    tokens: &IntTensor,
+    targets: &IntTensor,
+    collect: bool,
+) -> Result<(Tensor, Vec<HostCaptures>)> {
+    let spec = &w.spec;
+    let (b, t) = (tokens.shape[0], tokens.shape[1]);
+    let d = spec.d_model;
+    let rows = b * t;
+
+    let tok_emb = w.get("tok_emb")?;
+    // x [rows, d]
+    let mut x = Tensor::zeros(&[rows, d]);
+    for (r, &tokid) in tokens.data.iter().enumerate() {
+        x.row_mut(r).copy_from_slice(tok_emb.row(tokid as usize));
+    }
+    let is_opt = spec.family == "opt";
+    if is_opt {
+        let pos = w.get("pos_emb")?;
+        for bi in 0..b {
+            for ti in 0..t {
+                let r = bi * t + ti;
+                for (v, p) in x.row_mut(r).iter_mut().zip(pos.row(ti)) {
+                    *v += p;
+                }
+            }
+        }
+    }
+    let (cos, sin) = rope_tables(t, spec.head_dim());
+
+    let mut captures = Vec::new();
+    for l in 0..spec.n_layers {
+        // ---- attention
+        let mut x_ln = x.clone();
+        if is_opt {
+            layer_norm(
+                &mut x_ln.data,
+                d,
+                &w.get_l(l, "ln1_g")?.data,
+                &w.get_l(l, "ln1_b")?.data,
+            );
+        } else {
+            rms_norm(&mut x_ln.data, d, &w.get_l(l, "ln1_g")?.data);
+        }
+        let (q, k, v) = if is_opt {
+            (
+                linear(&x_ln, &w.get_l(l, "wq")?, Some(&w.get_l(l, "bq")?)),
+                linear(&x_ln, &w.get_l(l, "wk")?, Some(&w.get_l(l, "bk")?)),
+                linear(&x_ln, &w.get_l(l, "wv")?, Some(&w.get_l(l, "bv")?)),
+            )
+        } else {
+            (
+                linear(&x_ln, &w.get_l(l, "wq")?, None),
+                linear(&x_ln, &w.get_l(l, "wk")?, None),
+                linear(&x_ln, &w.get_l(l, "wv")?, None),
+            )
+        };
+        let ctx = attention(spec, b, t, &q, &k, &v, &cos, &sin, !is_opt);
+        // both families carry an out-proj bias (llama's is the zero-init
+        // FLAP-compensation slot, see configs.py)
+        let attn_out = linear(&ctx, &w.get_l(l, "wo")?, Some(&w.get_l(l, "bo")?));
+        for (xv, av) in x.data.iter_mut().zip(&attn_out.data) {
+            *xv += av;
+        }
+
+        // ---- ffn
+        let mut x_ln2 = x.clone();
+        if is_opt {
+            layer_norm(
+                &mut x_ln2.data,
+                d,
+                &w.get_l(l, "ln2_g")?.data,
+                &w.get_l(l, "ln2_b")?.data,
+            );
+        } else {
+            rms_norm(&mut x_ln2.data, d, &w.get_l(l, "ln2_g")?.data);
+        }
+        let h = if is_opt {
+            let mut h = linear(&x_ln2, &w.get_l(l, "fc1")?, Some(&w.get_l(l, "bfc1")?));
+            for v in h.data.iter_mut() {
+                *v = v.max(0.0); // relu
+            }
+            h
+        } else {
+            let g = linear(&x_ln2, &w.get_l(l, "w_gate")?, None);
+            let u = linear(&x_ln2, &w.get_l(l, "w_up")?, None);
+            let mut h = u;
+            for (hv, gv) in h.data.iter_mut().zip(&g.data) {
+                let silu = gv / (1.0 + (-gv).exp());
+                *hv *= silu;
+            }
+            h
+        };
+        let ffn_out = if is_opt {
+            linear(&h, &w.get_l(l, "fc2")?, Some(&w.get_l(l, "bfc2")?))
+        } else {
+            linear(&h, &w.get_l(l, "w_down")?, Some(&w.get_l(l, "b_down")?))
+        };
+        for (xv, fv) in x.data.iter_mut().zip(&ffn_out.data) {
+            *xv += fv;
+        }
+        if collect {
+            captures.push(HostCaptures { ln1: x_ln, ln2: x_ln2, attn_ctx: ctx, ffn_h: h });
+        }
+    }
+
+    if is_opt {
+        layer_norm(&mut x.data, d, &w.get("lnf_g")?.data, &w.get("lnf_b")?.data);
+    } else {
+        rms_norm(&mut x.data, d, &w.get("lnf_g")?.data);
+    }
+
+    // logits = x · tok_embᵀ; per-token NLL without materializing softmax
+    let logits = matmul_bt(&x, &tok_emb); // [rows, V]
+    let mut nll = Tensor::zeros(&[b, t]);
+    for r in 0..rows {
+        let row = logits.row(r);
+        let z = logsumexp(row);
+        let tgt = targets.data[r] as usize;
+        nll.data[r] = z - row[tgt];
+    }
+    Ok((nll, captures))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn attention(
+    spec: &ModelSpec,
+    b: usize,
+    t: usize,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cos: &[f32],
+    sin: &[f32],
+    rope: bool,
+) -> Tensor {
+    let d = spec.d_model;
+    let h = spec.n_heads;
+    let dh = spec.head_dim();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut ctx = Tensor::zeros(&[b * t, d]);
+    // per (batch, head): gather [t, dh] slices, optional rope, attention
+    let mut qh = vec![0.0f32; t * dh];
+    let mut kh = vec![0.0f32; t * dh];
+    let mut vh = vec![0.0f32; t * dh];
+    for bi in 0..b {
+        for hi in 0..h {
+            for ti in 0..t {
+                let r = bi * t + ti;
+                let src = hi * dh..(hi + 1) * dh;
+                qh[ti * dh..(ti + 1) * dh].copy_from_slice(&q.row(r)[src.clone()]);
+                kh[ti * dh..(ti + 1) * dh].copy_from_slice(&k.row(r)[src.clone()]);
+                vh[ti * dh..(ti + 1) * dh].copy_from_slice(&v.row(r)[src]);
+            }
+            if rope {
+                apply_rope(&mut qh, t, dh, cos, sin);
+                apply_rope(&mut kh, t, dh, cos, sin);
+            }
+            // causal attention rows
+            for ti in 0..t {
+                let qrow = &qh[ti * dh..(ti + 1) * dh];
+                // scores over [0..=ti]
+                let mut scores = Vec::with_capacity(ti + 1);
+                for tj in 0..=ti {
+                    let krow = &kh[tj * dh..(tj + 1) * dh];
+                    scores.push(
+                        crate::tensor::matmul::dot(qrow, krow) * scale,
+                    );
+                }
+                let m = scores.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+                let mut z = 0.0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - m).exp();
+                    z += *s;
+                }
+                let out = &mut ctx.row_mut(bi * t + ti)[hi * dh..(hi + 1) * dh];
+                for (tj, w) in scores.iter().enumerate() {
+                    let vrow = &vh[tj * dh..(tj + 1) * dh];
+                    let wz = w / z;
+                    for (o, vv) in out.iter_mut().zip(vrow) {
+                        *o += wz * vv;
+                    }
+                }
+            }
+        }
+    }
+    ctx
+}
+
+/// Host Gram accumulation X^T X (cross-check against the capture artifact).
+pub fn host_gram(x: &Tensor) -> Tensor {
+    matmul(&x.t(), x)
+}
+
+/// Mean NLL over a batch.
+pub fn mean_nll(w: &Weights, tokens: &IntTensor, targets: &IntTensor) -> Result<f32> {
+    let (nll, _) = forward_nll(w, tokens, targets, false)?;
+    Ok(nll.data.iter().sum::<f32>() / nll.numel() as f32)
+}

@@ -1,0 +1,12 @@
+//! Model zoo: weight storage (packed, manifest-ordered), deterministic
+//! initialization, checkpoints, a host-side reference forward (numerics
+//! cross-check for the PJRT path + offline fallback), and the pruning
+//! mask bookkeeping.
+
+pub mod weights;
+pub mod host;
+pub mod mask;
+pub mod zoo;
+
+pub use mask::PruneMask;
+pub use weights::Weights;

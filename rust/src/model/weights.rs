@@ -1,0 +1,151 @@
+//! Weight store: a single packed f32 vector in manifest parameter order
+//! (the runtime currency), with named 2-D/1-D views for the pruning math.
+
+use crate::runtime::manifest::ModelSpec;
+use crate::tensor::io::TensorFile;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone)]
+pub struct Weights {
+    pub spec: ModelSpec,
+    /// Packed parameters, `spec.params` order.
+    pub packed: Tensor,
+    offsets: BTreeMap<String, (usize, Vec<usize>)>,
+}
+
+impl Weights {
+    fn build_offsets(spec: &ModelSpec) -> BTreeMap<String, (usize, Vec<usize>)> {
+        let mut map = BTreeMap::new();
+        let mut off = 0usize;
+        for (name, shape) in &spec.params {
+            let n: usize = shape.iter().product();
+            map.insert(name.clone(), (off, shape.clone()));
+            off += n;
+        }
+        map
+    }
+
+    /// All-zero weights (useful for tests).
+    pub fn zeros(spec: &ModelSpec) -> Weights {
+        Weights {
+            spec: spec.clone(),
+            packed: Tensor::zeros(&[spec.n_params_elems()]),
+            offsets: Self::build_offsets(spec),
+        }
+    }
+
+    /// Deterministic initialization: N(0, 0.02) for embeddings and linear
+    /// weights (GPT-style), ones for norm gains, zeros for biases.
+    pub fn init(spec: &ModelSpec, seed: u64) -> Weights {
+        let mut w = Weights::zeros(spec);
+        let mut rng = Rng::new(seed);
+        for (name, shape) in spec.params.clone() {
+            let n: usize = shape.iter().product();
+            let is_gain = name.ends_with("ln1_g")
+                || name.ends_with("ln2_g")
+                || name.ends_with("lnf_g");
+            let is_bias = shape.len() == 1 && !is_gain;
+            let data = if is_gain {
+                vec![1.0f32; n]
+            } else if is_bias {
+                vec![0.0f32; n]
+            } else {
+                // scale residual-path projections down by depth (GPT-2 trick)
+                let base = 0.02f32;
+                let std = if name.ends_with("wo") || name.ends_with("fc2") || name.ends_with("w_down") {
+                    base / (2.0 * spec.n_layers as f32).sqrt()
+                } else {
+                    base
+                };
+                rng.normal_vec(n, std)
+            };
+            w.set_raw(&name, &data);
+        }
+        w
+    }
+
+    pub fn offset(&self, name: &str) -> Result<(usize, Vec<usize>)> {
+        self.offsets
+            .get(name)
+            .cloned()
+            .with_context(|| format!("param '{name}' not found"))
+    }
+
+    /// Copy a parameter out as a Tensor.
+    pub fn get(&self, name: &str) -> Result<Tensor> {
+        let (off, shape) = self.offset(name)?;
+        let n: usize = shape.iter().product();
+        Ok(Tensor::new(shape, self.packed.data[off..off + n].to_vec()))
+    }
+
+    /// Write a parameter back (shape-checked).
+    pub fn set(&mut self, name: &str, t: &Tensor) -> Result<()> {
+        let (off, shape) = self.offset(name)?;
+        anyhow::ensure!(
+            t.shape == shape,
+            "set {name}: shape {:?} != {:?}",
+            t.shape,
+            shape
+        );
+        self.packed.data[off..off + t.numel()].copy_from_slice(&t.data);
+        Ok(())
+    }
+
+    fn set_raw(&mut self, name: &str, data: &[f32]) {
+        let (off, _) = self.offsets[name].clone();
+        self.packed.data[off..off + data.len()].copy_from_slice(data);
+    }
+
+    /// Layer-scoped param name, e.g. `pname(2, "wq") == "layers.2.wq"`.
+    pub fn pname(layer: usize, short: &str) -> String {
+        format!("layers.{layer}.{short}")
+    }
+
+    pub fn get_l(&self, layer: usize, short: &str) -> Result<Tensor> {
+        self.get(&Self::pname(layer, short))
+    }
+
+    pub fn set_l(&mut self, layer: usize, short: &str, t: &Tensor) -> Result<()> {
+        self.set(&Self::pname(layer, short), t)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.offsets.contains_key(name)
+    }
+
+    /// Fraction of exactly-zero parameter entries (mask-sparsity probe).
+    pub fn zero_fraction(&self) -> f64 {
+        let z = self.packed.data.iter().filter(|&&x| x == 0.0).count();
+        z as f64 / self.packed.numel().max(1) as f64
+    }
+
+    // ---- checkpoints -----------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut tf = TensorFile::new();
+        tf.insert("packed", self.packed.clone());
+        tf.insert("version", Tensor::scalar(1.0));
+        tf.save(path)
+    }
+
+    pub fn load(spec: &ModelSpec, path: &Path) -> Result<Weights> {
+        let tf = TensorFile::load(path)?;
+        let packed = tf.get("packed")?.clone();
+        anyhow::ensure!(
+            packed.numel() == spec.n_params_elems(),
+            "checkpoint size {} != model {} ({})",
+            packed.numel(),
+            spec.n_params_elems(),
+            spec.name,
+        );
+        Ok(Weights {
+            spec: spec.clone(),
+            packed: Tensor::new(vec![spec.n_params_elems()], packed.data),
+            offsets: Self::build_offsets(spec),
+        })
+    }
+}

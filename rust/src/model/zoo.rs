@@ -1,0 +1,51 @@
+//! Zoo registry: maps the paper's model axis onto the in-repo configs and
+//! owns checkpoint paths. The paper's sizes and our analogs
+//! (DESIGN.md substitution table):
+//!
+//! | paper        | zoo           |
+//! |--------------|---------------|
+//! | OPT-125M     | `opt_tiny`    |
+//! | OPT-1.3B     | `opt_small`   |
+//! | OPT-2.7B     | `opt_medium`  |
+//! | LLaMA-7B     | `llama_tiny`* |
+//! | LLaMA-13B    | `llama_small` |
+//! | LLaMA-30B    | `llama_medium`|
+//!
+//! *size ordering is what matters: each family spans three sizes.
+
+use std::path::PathBuf;
+
+pub const OPT_MODELS: [&str; 3] = ["opt_tiny", "opt_small", "opt_medium"];
+pub const LLAMA_MODELS: [&str; 3] = ["llama_tiny", "llama_small", "llama_medium"];
+
+pub fn all_models() -> Vec<&'static str> {
+    OPT_MODELS.iter().chain(LLAMA_MODELS.iter()).copied().collect()
+}
+
+/// Paper-size label for table headers.
+pub fn paper_label(model: &str) -> &'static str {
+    match model {
+        "opt_tiny" => "OPT-125M*",
+        "opt_small" => "OPT-1.3B*",
+        "opt_medium" => "OPT-2.7B*",
+        "llama_tiny" => "LLaMA-7B*",
+        "llama_small" => "LLaMA-13B*",
+        "llama_medium" => "LLaMA-30B*",
+        _ => "?",
+    }
+}
+
+/// Default training budget per model (steps, lr) — sized for the 1-core
+/// CPU testbed; enough for the corpus structure to be learned so pruning
+/// damage is measurable.
+pub fn train_budget(model: &str) -> (usize, f32) {
+    match model {
+        m if m.ends_with("tiny") => (260, 3e-3),
+        m if m.ends_with("small") => (220, 1.5e-3),
+        _ => (140, 1e-3),
+    }
+}
+
+pub fn checkpoint_path(model: &str) -> PathBuf {
+    crate::checkpoints_dir().join(format!("{model}.ftns"))
+}

@@ -1,0 +1,11 @@
+//! Baseline pruning methods with their own pipelines (the
+//! structure-sharing baselines — magnitude, FLAP, LLM-Pruner-like,
+//! NASLLM-ADMM — live inside [`super::pipeline`]):
+//!
+//! * [`wanda_struct`] — Table 5's "Wanda" row: per-operator column
+//!   pruning, evenly distributed sparsity, optimal update, no coupling.
+//! * [`slicegpt`] — SliceGPT-like PCA slicing: exact per-head rotation of
+//!   the OV pair, activation-energy metric on FFN hidden units.
+
+pub mod slicegpt;
+pub mod wanda_struct;

@@ -1,0 +1,238 @@
+//! SliceGPT-like baseline: PCA rotation + slicing.
+//!
+//! Faithful-to-mechanism simplification of SliceGPT (Ashkboos et al.
+//! 2024) for the masked-evaluation setting (DESIGN.md §1):
+//!
+//! * **OV pair (exact)** — the attention output is linear in V per head,
+//!   so a per-head orthogonal rotation `Q_h` (eigenvectors of that head's
+//!   block of the context Gram) commutes with attention:
+//!   `wv_h ← Q_hᵀ wv_h`, `wo_h ← wo_h Q_h`. Slicing the lowest-variance
+//!   rotated directions is then PCA-optimal for that head.
+//! * **FFN hidden units (metric only)** — rotations do not commute with
+//!   the ReLU/SwiGLU nonlinearity, so (like SliceGPT's reliance on
+//!   activations alone, which the paper critiques) units are ranked by
+//!   their activation energy `E‖X_j‖²  = diag(G_ffn)` and sliced without
+//!   restoration.
+//!
+//! The eigendecompositions (host Jacobi, f64) dominate the method's
+//! pruning time, reproducing Table 4's cost ordering.
+
+use crate::data::Dataset;
+use crate::linalg::jacobi_eigh;
+use crate::model::mask::PruneMask;
+use crate::model::Weights;
+use crate::prune::metric::lowest_k;
+use crate::prune::structure::{plan, units};
+use crate::prune::types::{PruneOpts, PruneReport};
+use crate::runtime::ModelEngine;
+use crate::tensor::ops::{zero_cols, zero_elems, zero_rows};
+use crate::tensor::Tensor;
+use crate::util::timer::Stopwatch;
+use anyhow::Result;
+
+pub fn prune_slicegpt(
+    engine: &ModelEngine,
+    weights: &Weights,
+    dataset: &Dataset,
+    opts: &PruneOpts,
+) -> Result<(Weights, PruneMask, PruneReport)> {
+    let spec = engine.spec.clone();
+    let mut w = weights.clone();
+    let mut mask = PruneMask::full(&spec);
+    let mut sw = Stopwatch::start();
+
+    let calib = dataset.calib_batches(opts.calib_batches);
+    let calib_tokens: Vec<_> = calib.iter().map(|b| b.tokens.clone()).collect();
+    let stats = engine.capture(&w.packed, &calib_tokens)?;
+    sw.split("capture");
+
+    let group_plan = plan(&spec, opts.sparsity, false);
+    let d = spec.d_model;
+    let h = spec.n_heads;
+    let dh = spec.head_dim();
+
+    for l in 0..spec.n_layers {
+        // ---- OV pair: per-head PCA rotation + slice -----------------------
+        let mut wv = w.get_l(l, "wv")?;
+        let mut wo = w.get_l(l, "wo")?;
+        let k_ov = units(d, group_plan.ov_ratio);
+        // distribute sliced dims evenly across heads
+        let per_head = k_ov / h;
+        let mut pruned_ov: Vec<usize> = Vec::with_capacity(per_head * h);
+        for head in 0..h {
+            let base = head * dh;
+            // head block of the context Gram, f64
+            let mut gb = vec![0.0f64; dh * dh];
+            for a in 0..dh {
+                for b in 0..dh {
+                    gb[a * dh + b] =
+                        stats.layers[l].g_attn.at2(base + a, base + b) as f64;
+                }
+            }
+            let (_evals, evecs) = jacobi_eigh(&gb, dh); // ascending
+            sw.split("pca");
+            // rotate: wv_h ← Qᵀ wv_h (rows), wo_h ← wo_h Q (cols);
+            // eigenvector k is evecs[k*dh..(k+1)*dh]; ascending order means
+            // the FIRST per_head rotated dims carry the least variance.
+            rotate_rows(&mut wv, base, dh, &evecs);
+            rotate_cols(&mut wo, base, dh, &evecs);
+            for k in 0..per_head {
+                pruned_ov.push(base + k);
+            }
+        }
+        sw.split("rotate");
+        zero_rows(&mut wv, &pruned_ov);
+        zero_cols(&mut wo, &pruned_ov);
+        w.set_l(l, "wv", &wv)?;
+        w.set_l(l, "wo", &wo)?;
+        if spec.family == "opt" {
+            // V bias lives in the rotated basis too: rotate then zero
+            let mut bv = w.get_l(l, "bv")?;
+            for head in 0..h {
+                let base = head * dh;
+                let mut gb = vec![0.0f64; dh * dh];
+                for a in 0..dh {
+                    for b in 0..dh {
+                        gb[a * dh + b] =
+                            stats.layers[l].g_attn.at2(base + a, base + b) as f64;
+                    }
+                }
+                let (_e, evecs) = jacobi_eigh(&gb, dh);
+                let old: Vec<f32> = (0..dh).map(|i| bv.data[base + i]).collect();
+                for k in 0..dh {
+                    let mut s = 0.0f64;
+                    for i in 0..dh {
+                        s += evecs[k * dh + i] * old[i] as f64;
+                    }
+                    bv.data[base + k] = s as f32;
+                }
+            }
+            zero_elems(&mut bv, &pruned_ov);
+            w.set_l(l, "bv", &bv)?;
+        }
+        for &j in &pruned_ov {
+            mask.layers[l].ov[j] = false;
+        }
+        sw.split("apply");
+
+        // ---- FFN: activation-energy slice (no restoration) ----------------
+        let energies: Vec<f32> =
+            (0..spec.d_ff).map(|i| stats.layers[l].g_ffn.at2(i, i)).collect();
+        let k_ffn = units(spec.d_ff, group_plan.ffn_ratio);
+        let pruned_ffn = lowest_k(&energies, k_ffn);
+        sw.split("metric");
+        let later = if spec.family == "opt" { "fc2" } else { "w_down" };
+        let mut w_later = w.get_l(l, later)?;
+        zero_cols(&mut w_later, &pruned_ffn);
+        w.set_l(l, later, &w_later)?;
+        if spec.family == "opt" {
+            let mut fc1 = w.get_l(l, "fc1")?;
+            zero_rows(&mut fc1, &pruned_ffn);
+            w.set_l(l, "fc1", &fc1)?;
+            let mut b1 = w.get_l(l, "bfc1")?;
+            zero_elems(&mut b1, &pruned_ffn);
+            w.set_l(l, "bfc1", &b1)?;
+        } else {
+            for name in ["w_gate", "w_up"] {
+                let mut m = w.get_l(l, name)?;
+                zero_rows(&mut m, &pruned_ffn);
+                w.set_l(l, name, &m)?;
+            }
+        }
+        for &j in &pruned_ffn {
+            mask.layers[l].ffn[j] = false;
+        }
+        sw.split("apply");
+    }
+
+    mask.validate(&spec)?;
+    let report = PruneReport {
+        method: opts.method,
+        target_sparsity: opts.sparsity,
+        achieved_sparsity: mask.sparsity(&spec),
+        params_removed: mask.params_removed(&spec),
+        phase_s: sw
+            .splits
+            .iter()
+            .map(|(n, d)| (n.clone(), d.as_secs_f64()))
+            .collect(),
+        total_s: sw.total().as_secs_f64(),
+    };
+    Ok((w, mask, report))
+}
+
+/// rows base..base+dh of `m` ← Qᵀ · rows  (Q rows = eigenvectors).
+fn rotate_rows(m: &mut Tensor, base: usize, dh: usize, evecs: &[f64]) {
+    let (_r, c) = m.dims2();
+    let mut block: Vec<f32> = Vec::with_capacity(dh * c);
+    for i in 0..dh {
+        block.extend_from_slice(m.row(base + i));
+    }
+    for k in 0..dh {
+        let out = m.row_mut(base + k);
+        for j in 0..c {
+            let mut s = 0.0f64;
+            for i in 0..dh {
+                s += evecs[k * dh + i] * block[i * c + j] as f64;
+            }
+            out[j] = s as f32;
+        }
+    }
+}
+
+/// cols base..base+dh of `m` ← cols · Q  (so new col k = Σ_i old_i Q_ik,
+/// with Q_ik = evecs[k*dh + i]).
+fn rotate_cols(m: &mut Tensor, base: usize, dh: usize, evecs: &[f64]) {
+    let (r, c) = m.dims2();
+    let mut block = vec![0.0f32; r * dh];
+    for i in 0..r {
+        for j in 0..dh {
+            block[i * dh + j] = m.data[i * c + base + j];
+        }
+    }
+    for i in 0..r {
+        for k in 0..dh {
+            let mut s = 0.0f64;
+            for j in 0..dh {
+                s += block[i * dh + j] as f64 * evecs[k * dh + j];
+            }
+            m.data[i * c + base + k] = s as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Rotating rows of wv by Qᵀ and cols of wo by Q must leave the
+    /// product wo · wv unchanged (the forward pass is invariant).
+    #[test]
+    fn rotation_preserves_product() {
+        let mut rng = Rng::new(0);
+        let dh = 8;
+        let d = 16;
+        let mut wv = Tensor::randn(&[d, d], 1.0, &mut rng);
+        let mut wo = Tensor::randn(&[d, d], 1.0, &mut rng);
+        let before = crate::tensor::matmul::matmul(&wo, &wv);
+        // random symmetric → eigenvectors are a valid orthogonal basis
+        let mut sym = vec![0.0f64; dh * dh];
+        for i in 0..dh {
+            for j in 0..=i {
+                let v = rng.normal();
+                sym[i * dh + j] = v;
+                sym[j * dh + i] = v;
+            }
+        }
+        let (_e, q) = jacobi_eigh(&sym, dh);
+        rotate_rows(&mut wv, 0, dh, &q);
+        rotate_cols(&mut wo, 0, dh, &q);
+        let after = crate::tensor::matmul::matmul(&wo, &wv);
+        assert!(
+            before.max_abs_diff(&after) < 1e-3,
+            "product changed by {}",
+            before.max_abs_diff(&after)
+        );
+    }
+}

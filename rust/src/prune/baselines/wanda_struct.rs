@@ -1,0 +1,125 @@
+//! Table 5 ablation baseline ("Wanda" row): prune every operator's input
+//! columns independently with evenly distributed sparsity — Wanda column
+//! selection + the optimal update — but WITHOUT FASP's coupled structure
+//! (no free row removals, no Q/K skipping/rebalancing).
+//!
+//! The point of the ablation: at equal *parameter* sparsity, spending the
+//! budget on uncoupled per-operator columns wrecks more of the network
+//! than FASP's coupled removals, because (a) zeroed input columns of
+//! q/k/v/fc1 delete information that IS still used downstream, and (b) no
+//! rows come off for free.
+
+use crate::data::Dataset;
+use crate::model::mask::PruneMask;
+use crate::model::Weights;
+use crate::prune::metric::{lowest_k, KernelMetric};
+use crate::prune::restore::restore_columns;
+use crate::prune::types::{PruneOpts, PruneReport};
+use crate::runtime::ModelEngine;
+use crate::tensor::ops::zero_cols;
+use crate::tensor::Tensor;
+use crate::util::timer::Stopwatch;
+use anyhow::Result;
+
+pub fn prune_wanda_struct(
+    engine: &ModelEngine,
+    weights: &Weights,
+    dataset: &Dataset,
+    opts: &PruneOpts,
+) -> Result<(Weights, PruneMask, PruneReport)> {
+    let spec = engine.spec.clone();
+    let mut w = weights.clone();
+    let mut sw = Stopwatch::start();
+
+    let calib = dataset.calib_batches(opts.calib_batches);
+    let calib_tokens: Vec<_> = calib.iter().map(|b| b.tokens.clone()).collect();
+    let stats = engine.capture(&w.packed, &calib_tokens)?;
+    sw.split("capture");
+
+    let metric = KernelMetric::new(engine.manifest);
+    let mut removed = 0usize;
+    // (operator names, which Gram supplies its input activations)
+    let ops_per_layer: Vec<(&str, GramKind)> = if spec.family == "opt" {
+        vec![
+            ("wq", GramKind::Ln1),
+            ("wk", GramKind::Ln1),
+            ("wv", GramKind::Ln1),
+            ("wo", GramKind::Attn),
+            ("fc1", GramKind::Ln2),
+            ("fc2", GramKind::Ffn),
+        ]
+    } else {
+        vec![
+            ("wq", GramKind::Ln1),
+            ("wk", GramKind::Ln1),
+            ("wv", GramKind::Ln1),
+            ("wo", GramKind::Attn),
+            ("w_gate", GramKind::Ln2),
+            ("w_up", GramKind::Ln2),
+            ("w_down", GramKind::Ffn),
+        ]
+    };
+
+    for l in 0..spec.n_layers {
+        for (name, gk) in &ops_per_layer {
+            let wt = w.get_l(l, name)?;
+            let (rows_w, n) = wt.dims2();
+            let gram = gram_of(&stats.layers[l], *gk);
+            let xnorm: Vec<f32> =
+                (0..n).map(|i| gram.at2(i, i).max(0.0).sqrt()).collect();
+            let scores = metric.wanda_scores(&wt, &xnorm)?;
+            let k = ((n as f64) * opts.sparsity).floor() as usize;
+            let pruned = lowest_k(&scores, k);
+            sw.split("metric");
+            let mut kept = vec![true; n];
+            for &j in &pruned {
+                kept[j] = false;
+            }
+            let new_w = if opts.restore {
+                restore_columns(&wt, gram, &kept, opts.delta)?
+            } else {
+                let mut t = wt.clone();
+                zero_cols(&mut t, &pruned);
+                t
+            };
+            w.set_l(l, name, &new_w)?;
+            removed += pruned.len() * rows_w;
+            sw.split("restore");
+        }
+    }
+
+    // No coupled structure → the structural mask stays full; report the
+    // achieved sparsity from the raw zeroed-column count.
+    let mask = PruneMask::full(&spec);
+    let pool = crate::model::mask::prunable_params(&spec);
+    let report = PruneReport {
+        method: opts.method,
+        target_sparsity: opts.sparsity,
+        achieved_sparsity: removed as f64 / pool as f64,
+        params_removed: removed,
+        phase_s: sw
+            .splits
+            .iter()
+            .map(|(n, d)| (n.clone(), d.as_secs_f64()))
+            .collect(),
+        total_s: sw.total().as_secs_f64(),
+    };
+    Ok((w, mask, report))
+}
+
+#[derive(Clone, Copy)]
+enum GramKind {
+    Ln1,
+    Ln2,
+    Attn,
+    Ffn,
+}
+
+fn gram_of(stats: &crate::runtime::engine::LayerStats, k: GramKind) -> &Tensor {
+    match k {
+        GramKind::Ln1 => &stats.g_ln1,
+        GramKind::Ln2 => &stats.g_ln2,
+        GramKind::Attn => &stats.g_attn,
+        GramKind::Ffn => &stats.g_ffn,
+    }
+}

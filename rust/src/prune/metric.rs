@@ -1,0 +1,168 @@
+//! Pruning metrics (paper §3.2 plus baselines).
+//!
+//! The FASP metric scores column `j` of the later matrix `W` by
+//! `‖W_:,j‖₁ · ‖X_j‖₂` — the column sum of Wanda's elementwise scores.
+//! The preferred implementation routes through the AOT Pallas kernel
+//! (`wanda_metric_{m}x{n}` artifact, L1 on the pruning path); the host
+//! fallback computes the same number and cross-checks it in tests.
+
+use crate::runtime::executable::{Artifact, In};
+use crate::runtime::Manifest;
+use crate::tensor::ops::{col_abs_sum, col_sq_sum};
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Host Wanda-column scores: `score[j] = ||W_:,j||_1 * xnorm[j]`.
+pub fn wanda_scores_host(w: &Tensor, xnorm: &[f32]) -> Vec<f32> {
+    col_abs_sum(w)
+        .iter()
+        .zip(xnorm)
+        .map(|(c, x)| c * x)
+        .collect()
+}
+
+/// Magnitude-only column scores: `||W_:,j||_1`.
+pub fn magnitude_scores(w: &Tensor) -> Vec<f32> {
+    col_abs_sum(w)
+}
+
+/// FLAP-style fluctuation scores: `Var(X_j) · ||W_:,j||²` where the
+/// variance comes from the capture sums (`Var = Σx²/N − (Σx/N)²`).
+pub fn flap_scores(w: &Tensor, g_diag: &[f32], mean_sum: &[f32], rows: usize) -> Vec<f32> {
+    let n = rows as f32;
+    col_sq_sum(w)
+        .iter()
+        .enumerate()
+        .map(|(j, wsq)| {
+            let ex2 = g_diag[j] / n;
+            let ex = mean_sum[j] / n;
+            let var = (ex2 - ex * ex).max(0.0);
+            var * wsq
+        })
+        .collect()
+}
+
+/// Scores via the Pallas kernel artifact, falling back to the host
+/// implementation when the shape has no artifact. Artifacts are compiled
+/// once per shape and cached process-wide.
+pub struct KernelMetric<'m> {
+    manifest: &'m Manifest,
+    cache: Mutex<HashMap<String, Option<&'static Artifact>>>,
+}
+
+impl<'m> KernelMetric<'m> {
+    pub fn new(manifest: &'m Manifest) -> Self {
+        KernelMetric { manifest, cache: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn wanda_scores(&self, w: &Tensor, xnorm: &[f32]) -> Result<Vec<f32>> {
+        let (m, n) = w.dims2();
+        let name = format!("wanda_metric_{m}x{n}");
+        let mut cache = self.cache.lock().unwrap();
+        let entry = cache.entry(name.clone()).or_insert_with(|| {
+            if self.manifest.artifacts.contains_key(&name) {
+                match Artifact::load(self.manifest, &name) {
+                    // leak: artifacts live for the process; tiny and few
+                    Ok(a) => Some(Box::leak(Box::new(a)) as &'static Artifact),
+                    Err(e) => {
+                        crate::warn!("kernel metric {name} failed to load: {e}");
+                        None
+                    }
+                }
+            } else {
+                None
+            }
+        });
+        if let Some(art) = entry {
+            let xn = Tensor::new(vec![n], xnorm.to_vec());
+            let out = art.call_tensors(&[In::F(w), In::F(&xn)])?;
+            Ok(out[0].data.clone())
+        } else {
+            Ok(wanda_scores_host(w, xnorm))
+        }
+    }
+}
+
+/// Pick the `k` smallest-score indices (the pruned set).
+pub fn lowest_k(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[a]
+            .partial_cmp(&scores[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Global adaptive selection (FLAP): z-normalize scores per layer, rank
+/// globally, prune the lowest `total_units`. Returns per-layer pruned
+/// index lists.
+pub fn global_lowest(per_layer: &[Vec<f32>], total_units: usize) -> Vec<Vec<usize>> {
+    let mut pool: Vec<(f32, usize, usize)> = Vec::new(); // (z, layer, idx)
+    for (l, scores) in per_layer.iter().enumerate() {
+        let m = scores.iter().sum::<f32>() / scores.len().max(1) as f32;
+        let var = scores.iter().map(|s| (s - m) * (s - m)).sum::<f32>()
+            / scores.len().max(1) as f32;
+        let sd = var.sqrt().max(1e-12);
+        for (j, &s) in scores.iter().enumerate() {
+            pool.push(((s - m) / sd, l, j));
+        }
+    }
+    pool.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    let mut out = vec![Vec::new(); per_layer.len()];
+    for &(_, l, j) in pool.iter().take(total_units) {
+        out[l].push(j);
+    }
+    // guard: never empty a whole layer (keep at least 4 units)
+    for (l, pruned) in out.iter_mut().enumerate() {
+        let n = per_layer[l].len();
+        if pruned.len() + 4 > n {
+            pruned.sort();
+            pruned.truncate(n.saturating_sub(4));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wanda_host_formula() {
+        let w = Tensor::new(vec![2, 3], vec![1., -2., 3., -4., 5., -6.]);
+        let s = wanda_scores_host(&w, &[1.0, 0.5, 2.0]);
+        assert_eq!(s, vec![5.0, 3.5, 18.0]);
+    }
+
+    #[test]
+    fn lowest_k_orders() {
+        let s = vec![5.0, 1.0, 3.0, 0.5];
+        assert_eq!(lowest_k(&s, 2), vec![3, 1]);
+        assert_eq!(lowest_k(&s, 0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn flap_variance() {
+        // X col with rows [1, 3]: Σx=4, Σx²=10, N=2 → var = 5 - 4 = 1
+        let w = Tensor::new(vec![1, 1], vec![2.0]);
+        let s = flap_scores(&w, &[10.0], &[4.0], 2);
+        assert!((s[0] - 4.0).abs() < 1e-6); // var 1 * ||w||² 4
+    }
+
+    #[test]
+    fn global_budget_respected() {
+        let per_layer = vec![
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0],
+            vec![10.0, 20.0, 30.0, 40.0, 50.0, 60.0, 70.0, 80.0],
+        ];
+        let pruned = global_lowest(&per_layer, 6);
+        let total: usize = pruned.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 6);
+        // z-normalized: both layers should lose some units
+        assert!(!pruned[0].is_empty() && !pruned[1].is_empty());
+    }
+}

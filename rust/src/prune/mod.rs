@@ -1,0 +1,25 @@
+//! FASP structured pruning — the paper's contribution (§3) plus every
+//! baseline the evaluation compares against.
+//!
+//! * [`structure`] — the coupled pruning structure (§3.1): later-layer
+//!   columns ↔ earlier-layer rows, Q/K skipping, sparsity rebalancing.
+//! * [`metric`]    — the Wanda-inspired column metric (§3.2) and the
+//!   baseline metrics (magnitude, FLAP fluctuation, Taylor).
+//! * [`restore`]   — the closed-form least-squares restoration (§3.3,
+//!   Eq. 8) via the host Cholesky, plus FLAP bias compensation.
+//! * [`pipeline`]  — the coordinator: calibration capture → scores →
+//!   selection → apply/restore, with per-phase wall-time accounting.
+//! * [`baselines`] — SliceGPT-like PCA slicing (rotation on the OV pair,
+//!   energy metric on FFN), and method plumbing for LLM-Pruner-like /
+//!   NASLLM-ADMM variants.
+
+pub mod types;
+pub mod structure;
+pub mod metric;
+pub mod restore;
+pub mod pipeline;
+pub mod baselines;
+pub mod report;
+
+pub use pipeline::prune;
+pub use types::{Method, PruneOpts, PruneReport};

@@ -1,0 +1,424 @@
+//! The pruning coordinator: capture → metric → select → restore/apply,
+//! with per-phase wall-time accounting (Table 4). One entry point serves
+//! FASP and all structure-sharing baselines; SliceGPT-like dispatches to
+//! its own rotation-based path in [`super::baselines`].
+
+use super::metric::{
+    flap_scores, global_lowest, lowest_k, magnitude_scores, KernelMetric,
+};
+use super::restore::{bias_compensation, restore_columns};
+use super::structure::{plan, rope_pairs, units};
+use super::types::{Method, PruneOpts, PruneReport};
+use crate::data::Dataset;
+use crate::model::mask::{LayerMask, PruneMask};
+use crate::model::{Weights};
+use crate::runtime::engine::CalibStats;
+use crate::runtime::ModelEngine;
+use crate::tensor::ops::{zero_cols, zero_elems, zero_rows};
+use crate::util::timer::Stopwatch;
+use anyhow::Result;
+
+/// Prune `weights` in place (on a clone) and return the pruned weights,
+/// the structural mask and the phase report.
+pub fn prune(
+    engine: &ModelEngine,
+    weights: &Weights,
+    dataset: &Dataset,
+    opts: &PruneOpts,
+) -> Result<(Weights, PruneMask, PruneReport)> {
+    if opts.method == Method::SliceGptLike {
+        return super::baselines::slicegpt::prune_slicegpt(engine, weights, dataset, opts);
+    }
+    if opts.method == Method::WandaStruct {
+        return super::baselines::wanda_struct::prune_wanda_struct(
+            engine, weights, dataset, opts,
+        );
+    }
+
+    let spec = engine.spec.clone();
+    let mut w = weights.clone();
+    let mut mask = PruneMask::full(&spec);
+    let mut sw = Stopwatch::start();
+
+    let calib = dataset.calib_batches(opts.calib_batches);
+    let calib_tokens: Vec<_> = calib.iter().map(|b| b.tokens.clone()).collect();
+
+    // LLM-Pruner-like needs gradients once (dense model).
+    let grad_scores = if opts.method == Method::LlmPrunerLike {
+        let batches: Vec<_> = calib
+            .iter()
+            .map(|b| (b.tokens.clone(), b.targets.clone()))
+            .collect();
+        let g = engine.gradcol(&w.packed, &batches)?;
+        sw.split("gradcol");
+        Some(g)
+    } else {
+        None
+    };
+
+    let group_plan = plan(&spec, opts.sparsity, opts.prune_qk);
+    let layer_order: Vec<usize> = (0..spec.n_layers).collect();
+
+    // Either one dense capture, or re-capture per layer (sequential).
+    let mut stats = engine.capture(&w.packed, &calib_tokens)?;
+    sw.split("capture");
+
+    // FLAP selects globally: gather scores for all layers first.
+    if opts.method == Method::Flap {
+        let (ffn_pruned, ov_pruned) = flap_select(&spec, &w, &stats, &group_plan)?;
+        sw.split("select");
+        for l in 0..spec.n_layers {
+            apply_ffn(&mut w, &stats, l, &ffn_pruned[l], opts, &mut mask.layers[l], &mut sw)?;
+            apply_ov(&mut w, &stats, l, &ov_pruned[l], opts, &mut mask.layers[l], &mut sw)?;
+        }
+        return finish(&spec, w, mask, opts, sw);
+    }
+
+    let kernel_metric = KernelMetric::new(engine.manifest);
+
+    // Adaptive mode (paper §5 future work): gather Wanda scores for every
+    // layer, z-normalize, select pruned units globally, then apply with
+    // restoration as usual.
+    if opts.adaptive && matches!(opts.method, Method::Fasp | Method::Magnitude) {
+        let later = if spec.family == "opt" { "fc2" } else { "w_down" };
+        let mut ffn_scores = Vec::with_capacity(spec.n_layers);
+        let mut ov_scores = Vec::with_capacity(spec.n_layers);
+        for l in 0..spec.n_layers {
+            let w_later = w.get_l(l, later)?;
+            let w_o = w.get_l(l, "wo")?;
+            if opts.method == Method::Magnitude {
+                ffn_scores.push(magnitude_scores(&w_later));
+                ov_scores.push(magnitude_scores(&w_o));
+            } else {
+                ffn_scores.push(kernel_metric.wanda_scores(&w_later, &stats.ffn_xnorm(l))?);
+                ov_scores.push(kernel_metric.wanda_scores(&w_o, &stats.attn_xnorm(l))?);
+            }
+        }
+        let ffn_total = units(spec.d_ff, group_plan.ffn_ratio) * spec.n_layers;
+        let ov_total = units(spec.d_model, group_plan.ov_ratio) * spec.n_layers;
+        let ffn_pruned = global_lowest(&ffn_scores, ffn_total);
+        let ov_pruned = global_lowest(&ov_scores, ov_total);
+        sw.split("metric");
+        for l in 0..spec.n_layers {
+            apply_ffn(&mut w, &stats, l, &ffn_pruned[l], opts, &mut mask.layers[l], &mut sw)?;
+            apply_ov(&mut w, &stats, l, &ov_pruned[l], opts, &mut mask.layers[l], &mut sw)?;
+        }
+        return finish(&spec, w, mask, opts, sw);
+    }
+
+    for &l in &layer_order {
+        if opts.sequential && l > 0 {
+            // propagate pruning effects into the calibration activations
+            stats = engine.capture(&w.packed, &calib_tokens)?;
+            sw.split("capture");
+        }
+        // ---- FFN group ---------------------------------------------------
+        let later = if spec.family == "opt" { "fc2" } else { "w_down" };
+        let w_later = w.get_l(l, later)?;
+        let ffn_scores: Vec<f32> = match (&opts.method, &grad_scores) {
+            (Method::LlmPrunerLike, Some(g)) => g[l].ffn.clone(),
+            (Method::Magnitude, _) => magnitude_scores(&w_later),
+            _ => kernel_metric.wanda_scores(&w_later, &stats.ffn_xnorm(l))?,
+        };
+        let k_ffn = units(spec.d_ff, group_plan.ffn_ratio);
+        let ffn_pruned = lowest_k(&ffn_scores, k_ffn);
+        sw.split("metric");
+        apply_ffn(&mut w, &stats, l, &ffn_pruned, opts, &mut mask.layers[l], &mut sw)?;
+
+        // ---- OV group ----------------------------------------------------
+        let w_o = w.get_l(l, "wo")?;
+        let ov_scores: Vec<f32> = match (&opts.method, &grad_scores) {
+            (Method::LlmPrunerLike, Some(g)) => g[l].ov.clone(),
+            (Method::Magnitude, _) => magnitude_scores(&w_o),
+            _ => kernel_metric.wanda_scores(&w_o, &stats.attn_xnorm(l))?,
+        };
+        let k_ov = units(spec.d_model, group_plan.ov_ratio);
+        let ov_pruned = lowest_k(&ov_scores, k_ov);
+        sw.split("metric");
+        apply_ov(&mut w, &stats, l, &ov_pruned, opts, &mut mask.layers[l], &mut sw)?;
+
+        // ---- QK group (Table 6 ablation) ----------------------------------
+        if opts.prune_qk && group_plan.qk_ratio > 0.0 {
+            let qk_pruned = select_qk(&spec, &w, &stats, l, group_plan.qk_ratio)?;
+            sw.split("metric");
+            apply_qk(&mut w, l, &qk_pruned, &mut mask.layers[l])?;
+            sw.split("apply");
+        }
+    }
+
+    finish(&spec, w, mask, opts, sw)
+}
+
+fn finish(
+    spec: &crate::runtime::manifest::ModelSpec,
+    w: Weights,
+    mask: PruneMask,
+    opts: &PruneOpts,
+    sw: Stopwatch,
+) -> Result<(Weights, PruneMask, PruneReport)> {
+    mask.validate(spec)?;
+    let report = PruneReport {
+        method: opts.method,
+        target_sparsity: opts.sparsity,
+        achieved_sparsity: mask.sparsity(spec),
+        params_removed: mask.params_removed(spec),
+        phase_s: sw
+            .splits
+            .iter()
+            .map(|(n, d)| (n.clone(), d.as_secs_f64()))
+            .collect(),
+        total_s: sw.total().as_secs_f64(),
+    };
+    Ok((w, mask, report))
+}
+
+/// Zero/restore the FFN coupled group of layer `l`.
+fn apply_ffn(
+    w: &mut Weights,
+    stats: &CalibStats,
+    l: usize,
+    pruned: &[usize],
+    opts: &PruneOpts,
+    lmask: &mut LayerMask,
+    sw: &mut Stopwatch,
+) -> Result<()> {
+    if pruned.is_empty() {
+        return Ok(());
+    }
+    let is_opt = w.spec.family == "opt";
+    let later = if is_opt { "fc2" } else { "w_down" };
+    let bias = if is_opt { "bfc2" } else { "b_down" };
+    let mut kept = vec![true; w.spec.d_ff];
+    for &j in pruned {
+        kept[j] = false;
+    }
+
+    let w_later = w.get_l(l, later)?;
+    if opts.method == Method::Flap {
+        // bias-only compensation, then plain zeroing
+        let delta =
+            bias_compensation(&w_later, &stats.layers[l].m_ffn.data, stats.rows, &kept);
+        let mut b = w.get_l(l, bias)?;
+        for (bv, dv) in b.data.iter_mut().zip(&delta) {
+            *bv += dv;
+        }
+        w.set_l(l, bias, &b)?;
+    }
+    let new_later = if opts.restore {
+        match opts.method {
+            Method::NasllmAdmm => {
+                let g64: Vec<f64> =
+                    stats.layers[l].g_ffn.data.iter().map(|&x| x as f64).collect();
+                let mut greg = g64;
+                let n = w.spec.d_ff;
+                let mean_diag: f64 =
+                    (0..n).map(|i| greg[i * n + i]).sum::<f64>() / n as f64;
+                for i in 0..n {
+                    greg[i * n + i] += opts.delta * mean_diag.max(1e-30);
+                }
+                let (t, _iters) = crate::linalg::admm_restore(
+                    &w_later,
+                    &greg,
+                    &kept,
+                    mean_diag.max(1e-6),
+                    opts.admm_iters,
+                )?;
+                t
+            }
+            _ => restore_columns(&w_later, &stats.layers[l].g_ffn, &kept, opts.delta)?,
+        }
+    } else {
+        let mut t = w_later.clone();
+        zero_cols(&mut t, pruned);
+        t
+    };
+    w.set_l(l, later, &new_later)?;
+    sw.split("restore");
+
+    // coupled rows are free removals (§3.1)
+    if is_opt {
+        let mut fc1 = w.get_l(l, "fc1")?;
+        zero_rows(&mut fc1, pruned);
+        w.set_l(l, "fc1", &fc1)?;
+        let mut b1 = w.get_l(l, "bfc1")?;
+        zero_elems(&mut b1, pruned);
+        w.set_l(l, "bfc1", &b1)?;
+    } else {
+        for name in ["w_gate", "w_up"] {
+            let mut m = w.get_l(l, name)?;
+            zero_rows(&mut m, pruned);
+            w.set_l(l, name, &m)?;
+        }
+    }
+    for &j in pruned {
+        lmask.ffn[j] = false;
+    }
+    sw.split("apply");
+    Ok(())
+}
+
+/// Zero/restore the OV coupled group of layer `l`.
+fn apply_ov(
+    w: &mut Weights,
+    stats: &CalibStats,
+    l: usize,
+    pruned: &[usize],
+    opts: &PruneOpts,
+    lmask: &mut LayerMask,
+    sw: &mut Stopwatch,
+) -> Result<()> {
+    if pruned.is_empty() {
+        return Ok(());
+    }
+    let is_opt = w.spec.family == "opt";
+    let mut kept = vec![true; w.spec.d_model];
+    for &j in pruned {
+        kept[j] = false;
+    }
+    let w_o = w.get_l(l, "wo")?;
+    if opts.method == Method::Flap {
+        let delta =
+            bias_compensation(&w_o, &stats.layers[l].m_attn.data, stats.rows, &kept);
+        let mut b = w.get_l(l, "bo")?;
+        for (bv, dv) in b.data.iter_mut().zip(&delta) {
+            *bv += dv;
+        }
+        w.set_l(l, "bo", &b)?;
+    }
+    let new_wo = if opts.restore {
+        match opts.method {
+            Method::NasllmAdmm => {
+                let n = w.spec.d_model;
+                let mut g64: Vec<f64> =
+                    stats.layers[l].g_attn.data.iter().map(|&x| x as f64).collect();
+                let mean_diag: f64 =
+                    (0..n).map(|i| g64[i * n + i]).sum::<f64>() / n as f64;
+                for i in 0..n {
+                    g64[i * n + i] += opts.delta * mean_diag.max(1e-30);
+                }
+                let (t, _) = crate::linalg::admm_restore(
+                    &w_o,
+                    &g64,
+                    &kept,
+                    mean_diag.max(1e-6),
+                    opts.admm_iters,
+                )?;
+                t
+            }
+            _ => restore_columns(&w_o, &stats.layers[l].g_attn, &kept, opts.delta)?,
+        }
+    } else {
+        let mut t = w_o.clone();
+        zero_cols(&mut t, pruned);
+        t
+    };
+    w.set_l(l, "wo", &new_wo)?;
+    sw.split("restore");
+
+    let mut wv = w.get_l(l, "wv")?;
+    zero_rows(&mut wv, pruned);
+    w.set_l(l, "wv", &wv)?;
+    if is_opt {
+        let mut bv = w.get_l(l, "bv")?;
+        zero_elems(&mut bv, pruned);
+        w.set_l(l, "bv", &bv)?;
+    }
+    for &j in pruned {
+        lmask.ov[j] = false;
+    }
+    sw.split("apply");
+    Ok(())
+}
+
+/// Score Q/K rows (Wanda on rows of both matrices against the ln1 input
+/// norms); LLaMA selects whole RoPE pairs.
+fn select_qk(
+    spec: &crate::runtime::manifest::ModelSpec,
+    w: &Weights,
+    stats: &CalibStats,
+    l: usize,
+    ratio: f64,
+) -> Result<Vec<usize>> {
+    let xnorm = stats.ln1_xnorm(l);
+    let wq = w.get_l(l, "wq")?;
+    let wk = w.get_l(l, "wk")?;
+    let d = spec.d_model;
+    let mut row_score = vec![0.0f32; d];
+    for j in 0..d {
+        let mut s = 0.0f32;
+        for (i, &xn) in xnorm.iter().enumerate() {
+            s += (wq.at2(j, i).abs() + wk.at2(j, i).abs()) * xn;
+        }
+        row_score[j] = s;
+    }
+    if spec.family == "llama" {
+        // prune whole RoPE pairs
+        let pairs = rope_pairs(d, spec.n_heads);
+        let pair_scores: Vec<f32> =
+            pairs.iter().map(|&(a, b)| row_score[a] + row_score[b]).collect();
+        let k_pairs = units(pairs.len(), ratio);
+        let mut pruned = Vec::with_capacity(2 * k_pairs);
+        for pi in lowest_k(&pair_scores, k_pairs) {
+            pruned.push(pairs[pi].0);
+            pruned.push(pairs[pi].1);
+        }
+        Ok(pruned)
+    } else {
+        Ok(lowest_k(&row_score, units(d, ratio)))
+    }
+}
+
+fn apply_qk(
+    w: &mut Weights,
+    l: usize,
+    pruned: &[usize],
+    lmask: &mut LayerMask,
+) -> Result<()> {
+    if pruned.is_empty() {
+        return Ok(());
+    }
+    for name in ["wq", "wk"] {
+        let mut m = w.get_l(l, name)?;
+        zero_rows(&mut m, pruned);
+        w.set_l(l, name, &m)?;
+    }
+    if w.spec.family == "opt" {
+        for name in ["bq", "bk"] {
+            let mut b = w.get_l(l, name)?;
+            zero_elems(&mut b, pruned);
+            w.set_l(l, name, &b)?;
+        }
+    }
+    for &j in pruned {
+        lmask.qk[j] = false;
+    }
+    Ok(())
+}
+
+/// FLAP's global adaptive selection over both groups.
+fn flap_select(
+    spec: &crate::runtime::manifest::ModelSpec,
+    w: &Weights,
+    stats: &CalibStats,
+    plan: &super::structure::GroupPlan,
+) -> Result<(Vec<Vec<usize>>, Vec<Vec<usize>>)> {
+    let later = if spec.family == "opt" { "fc2" } else { "w_down" };
+    let mut ffn_scores = Vec::with_capacity(spec.n_layers);
+    let mut ov_scores = Vec::with_capacity(spec.n_layers);
+    for l in 0..spec.n_layers {
+        let wl = w.get_l(l, later)?;
+        let gd: Vec<f32> =
+            (0..spec.d_ff).map(|i| stats.layers[l].g_ffn.at2(i, i)).collect();
+        ffn_scores.push(flap_scores(&wl, &gd, &stats.layers[l].m_ffn.data, stats.rows));
+        let wo = w.get_l(l, "wo")?;
+        let gd: Vec<f32> =
+            (0..spec.d_model).map(|i| stats.layers[l].g_attn.at2(i, i)).collect();
+        ov_scores.push(flap_scores(&wo, &gd, &stats.layers[l].m_attn.data, stats.rows));
+    }
+    let ffn_total = units(spec.d_ff, plan.ffn_ratio) * spec.n_layers;
+    let ov_total = units(spec.d_model, plan.ov_ratio) * spec.n_layers;
+    Ok((
+        global_lowest(&ffn_scores, ffn_total),
+        global_lowest(&ov_scores, ov_total),
+    ))
+}

@@ -1,0 +1,94 @@
+//! Pruning-report persistence: serialize `PruneReport`s (plus eval
+//! results) to JSON under `results/reports/` so experiment runs are
+//! auditable and EXPERIMENTS.md can cite concrete files.
+
+use super::types::PruneReport;
+use crate::util::json::Json;
+use crate::Result;
+use std::path::PathBuf;
+
+/// A report enriched with evaluation outcomes.
+pub struct RunRecord {
+    pub model: String,
+    pub report: PruneReport,
+    pub dense_ppl: Option<f64>,
+    pub pruned_ppl: Option<f64>,
+    pub zero_shot_mean: Option<f64>,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("model", Json::Str(self.model.clone())),
+            ("method", Json::Str(self.report.method.label().to_string())),
+            ("target_sparsity", Json::Num(self.report.target_sparsity)),
+            ("achieved_sparsity", Json::Num(self.report.achieved_sparsity)),
+            ("params_removed", Json::Num(self.report.params_removed as f64)),
+            ("total_s", Json::Num(self.report.total_s)),
+            (
+                "phases",
+                Json::Obj(
+                    self.report
+                        .phase_s
+                        .iter()
+                        .map(|(n, s)| (n.clone(), Json::Num(*s)))
+                        .collect(),
+                ),
+            ),
+        ];
+        if let Some(p) = self.dense_ppl {
+            fields.push(("dense_ppl", Json::Num(p)));
+        }
+        if let Some(p) = self.pruned_ppl {
+            fields.push(("pruned_ppl", Json::Num(p)));
+        }
+        if let Some(z) = self.zero_shot_mean {
+            fields.push(("zero_shot_mean", Json::Num(z)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Persist under results/reports/<model>_<method>_<sparsity>.json.
+    pub fn save(&self) -> Result<PathBuf> {
+        let dir = crate::repo_root().join("results").join("reports");
+        std::fs::create_dir_all(&dir)?;
+        let name = format!(
+            "{}_{}_{:02.0}.json",
+            self.model,
+            format!("{:?}", self.report.method).to_lowercase(),
+            self.report.target_sparsity * 100.0
+        );
+        let path = dir.join(name);
+        std::fs::write(&path, self.to_json().pretty())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prune::Method;
+
+    #[test]
+    fn json_roundtrip() {
+        let rec = RunRecord {
+            model: "llama_tiny".into(),
+            report: PruneReport {
+                method: Method::Fasp,
+                target_sparsity: 0.2,
+                achieved_sparsity: 0.197,
+                params_removed: 25856,
+                phase_s: vec![("capture".into(), 1.2), ("restore".into(), 0.1)],
+                total_s: 1.4,
+            },
+            dense_ppl: Some(9.76),
+            pruned_ppl: Some(9.80),
+            zero_shot_mean: None,
+        };
+        let j = rec.to_json();
+        let re = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(re.get("method").as_str().unwrap(), "FASP (ours)");
+        assert_eq!(re.get("phases").get("capture").as_f64().unwrap(), 1.2);
+        assert_eq!(re.get("pruned_ppl").as_f64().unwrap(), 9.80);
+    }
+}

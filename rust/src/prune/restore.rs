@@ -1,0 +1,215 @@
+//! Weight restoration (paper §3.3).
+//!
+//! After choosing kept columns `M` for a down/out projection `W` [m,n]
+//! with input Gram `G = X Xᵀ` [n,n], the optimal update solves
+//!
+//! ```text
+//! min_{W*_{:,M}} ½ ‖W*_{:,M} X_{M,:} − W X‖²_F
+//! ⇒ W*_{:,M} = (W G)_{:,M} (G_{M,M} + δ̂ I)⁻¹        (Eq. 8)
+//! ```
+//!
+//! where `δ̂ = delta · mean(diag G)` scales the ridge to the data. Each
+//! output row is an independent RHS of the same SPD system, so one
+//! Cholesky factorization + m triangular solves suffice — exactly the
+//! efficiency argument the paper makes against ADMM.
+//!
+//! Masked-evaluation equivalence (DESIGN.md §5): returning the full [m,n]
+//! matrix with pruned columns zeroed makes the dense masked forward
+//! numerically identical to the sliced forward.
+
+use crate::linalg::cholesky::cholesky;
+use crate::model::mask::kept_indices;
+use crate::tensor::matmul::matmul;
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+
+/// Closed-form restoration. `g` is the f32 Gram sums from capture.
+/// Returns the restored weight (pruned columns exactly zero).
+pub fn restore_columns(
+    w: &Tensor,
+    g: &Tensor,
+    kept: &[bool],
+    delta: f64,
+) -> Result<Tensor> {
+    let (m, n) = w.dims2();
+    let (gn, gm) = g.dims2();
+    anyhow::ensure!(gn == n && gm == n, "gram shape {:?} vs weight {:?}", g.shape, w.shape);
+    anyhow::ensure!(kept.len() == n, "mask length");
+    let kept_idx = kept_indices(kept);
+    let kn = kept_idx.len();
+    if kn == n {
+        return Ok(w.clone()); // nothing pruned
+    }
+    if kn == 0 {
+        return Ok(Tensor::zeros(&[m, n]));
+    }
+
+    // ridge scaled by the mean Gram diagonal
+    let mean_diag: f64 =
+        (0..n).map(|i| g.at2(i, i) as f64).sum::<f64>() / n as f64;
+    let ridge = delta * mean_diag.max(1e-30);
+
+    // G_MM in f64 + ridge
+    let mut gkk = vec![0.0f64; kn * kn];
+    for (a, &ia) in kept_idx.iter().enumerate() {
+        for (b, &ib) in kept_idx.iter().enumerate() {
+            gkk[a * kn + b] = g.at2(ia, ib) as f64;
+        }
+        gkk[a * kn + a] += ridge;
+    }
+    let factor = cholesky(&gkk, kn).context("restoration Gram not PD")?;
+
+    // B = W · G (f32 blocked matmul), then gather kept columns per row.
+    let b = matmul(w, g);
+    let mut out = Tensor::zeros(&[m, n]);
+    let mut rhs = vec![0.0f64; kn];
+    for i in 0..m {
+        let brow = b.row(i);
+        for (a, &ja) in kept_idx.iter().enumerate() {
+            rhs[a] = brow[ja] as f64;
+        }
+        factor.solve_in_place(&mut rhs);
+        let orow = out.row_mut(i);
+        for (a, &ja) in kept_idx.iter().enumerate() {
+            orow[ja] = rhs[a] as f32;
+        }
+    }
+    Ok(out)
+}
+
+/// FLAP bias compensation: `Δb = W_:,pruned · mean(X_pruned)` — the
+/// expected output of the removed units is folded into the layer bias.
+pub fn bias_compensation(
+    w: &Tensor,
+    mean_sum: &[f32],
+    rows: usize,
+    kept: &[bool],
+) -> Vec<f32> {
+    let (m, n) = w.dims2();
+    assert_eq!(mean_sum.len(), n);
+    let inv = 1.0 / rows.max(1) as f32;
+    let mut delta = vec![0.0f32; m];
+    for j in 0..n {
+        if kept[j] {
+            continue;
+        }
+        let mx = mean_sum[j] * inv;
+        if mx == 0.0 {
+            continue;
+        }
+        for (i, d) in delta.iter_mut().enumerate() {
+            *d += w.at2(i, j) * mx;
+        }
+    }
+    delta
+}
+
+/// Reconstruction error ‖W' G W'ᵀ − ...‖ proxy used in tests: the exact
+/// least-squares objective ½‖(W' − W) X‖² expressed through the Gram:
+/// `tr((W'−W) G (W'−W)ᵀ)`.
+pub fn recon_objective(w_new: &Tensor, w_old: &Tensor, g: &Tensor) -> f64 {
+    let (m, n) = w_old.dims2();
+    let mut total = 0.0f64;
+    // D = W' − W; total = Σ_i d_i G d_iᵀ
+    let mut d = vec![0.0f32; n];
+    let mut gd = vec![0.0f64; n];
+    for i in 0..m {
+        for j in 0..n {
+            d[j] = w_new.at2(i, j) - w_old.at2(i, j);
+        }
+        for j in 0..n {
+            let mut s = 0.0f64;
+            for k in 0..n {
+                s += g.at2(j, k) as f64 * d[k] as f64;
+            }
+            gd[j] = s;
+        }
+        for j in 0..n {
+            total += d[j] as f64 * gd[j];
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn make_gram(x: &Tensor) -> Tensor {
+        // G = Xᵀ X for X [s, n]
+        matmul(&x.t(), x)
+    }
+
+    #[test]
+    fn restoration_beats_plain_zeroing() {
+        let mut rng = Rng::new(0);
+        let (m, n, s) = (8, 16, 64);
+        let w = Tensor::randn(&[m, n], 1.0, &mut rng);
+        let x = Tensor::randn(&[s, n], 1.0, &mut rng);
+        let g = make_gram(&x);
+        let kept: Vec<bool> = (0..n).map(|j| j % 4 != 0).collect();
+
+        let restored = restore_columns(&w, &g, &kept, 1e-6).unwrap();
+        let mut zeroed = w.clone();
+        crate::tensor::ops::zero_cols(
+            &mut zeroed,
+            &crate::model::mask::pruned_indices(&kept),
+        );
+        let err_restored = recon_objective(&restored, &w, &g);
+        let err_zeroed = recon_objective(&zeroed, &w, &g);
+        assert!(
+            err_restored < err_zeroed * 0.9,
+            "restored {err_restored} vs zeroed {err_zeroed}"
+        );
+        // pruned columns exactly zero
+        for i in 0..m {
+            for j in 0..n {
+                if !kept[j] {
+                    assert_eq!(restored.at2(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    /// KKT check: at the optimum, the residual (W* − W) G must vanish on
+    /// the kept columns (up to the ridge term).
+    #[test]
+    fn normal_equation_stationarity() {
+        let mut rng = Rng::new(1);
+        let (m, n, s) = (4, 10, 80);
+        let w = Tensor::randn(&[m, n], 1.0, &mut rng);
+        let x = Tensor::randn(&[s, n], 1.0, &mut rng);
+        let g = make_gram(&x);
+        let kept: Vec<bool> = (0..n).map(|j| j != 2 && j != 7).collect();
+        let restored = restore_columns(&w, &g, &kept, 1e-10).unwrap();
+        // residual R = (W* − W) G ; R[:, kept] ≈ 0
+        let mut diff = restored.clone();
+        for (dv, wv) in diff.data.iter_mut().zip(&w.data) {
+            *dv -= wv;
+        }
+        let r = matmul(&diff, &g);
+        let scale = crate::tensor::ops::fro_norm(&r).max(1e-12);
+        for i in 0..m {
+            for j in 0..n {
+                if kept[j] {
+                    assert!(
+                        r.at2(i, j).abs() / scale < 1e-3,
+                        "KKT violated at ({i},{j}): {}",
+                        r.at2(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bias_compensation_formula() {
+        let w = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        // mean over 2 rows: X means = [0.5, 1.0, 2.0]
+        let mean_sum = vec![1.0, 2.0, 4.0];
+        let kept = vec![true, false, true];
+        let d = bias_compensation(&w, &mean_sum, 2, &kept);
+        assert_eq!(d, vec![2.0 * 1.0, 5.0 * 1.0]);
+    }
+}

@@ -1,0 +1,152 @@
+//! The FASP pruning structure (paper §3.1): coupled column/row groups and
+//! the sparsity rebalancing that compensates for skipping Q/K.
+//!
+//! Coupled groups per decoder layer:
+//!
+//! | group | later layer (columns) | earlier layer (rows, removed free) |
+//! |-------|------------------------|------------------------------------|
+//! | FFN   | `fc2` / `w_down`       | `fc1`(+bias) / `w_gate`+`w_up`     |
+//! | OV    | `wo`                   | `wv`(+bias)                        |
+//! | QK    | — (rows of both `wq` and `wk`, through QKᵀ; skipped by      |
+//! |       |   default per Table 6, RoPE-pair-aware for LLaMA)           |
+
+use crate::model::mask::prunable_params;
+use crate::runtime::manifest::ModelSpec;
+
+/// How many structures to remove per layer for each group.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GroupPlan {
+    /// fraction of FFN hidden units to prune
+    pub ffn_ratio: f64,
+    /// fraction of OV context dims to prune
+    pub ov_ratio: f64,
+    /// fraction of Q/K rows to prune (0 unless the Table 6 ablation)
+    pub qk_ratio: f64,
+}
+
+/// Parameters removed when one unit of each group is pruned (counting the
+/// coupled row(s) and bias element(s) — the "free" removals of §3.1).
+pub fn unit_costs(spec: &ModelSpec) -> (usize, usize, usize) {
+    let d = spec.d_model;
+    if spec.family == "opt" {
+        // FFN: fc2 col (d) + fc1 row (d) + fc1 bias (1)
+        // OV:  wo col (d) + wv row (d) + wv bias (1)
+        // QK:  wq row (d) + bias + wk row (d) + bias
+        (2 * d + 1, 2 * d + 1, 2 * d + 2)
+    } else {
+        (3 * d, 2 * d, 2 * d)
+    }
+}
+
+/// Compute per-group ratios achieving global `sparsity` over the
+/// prunable pool (paper: "we increase the sparsity level of the other
+/// layers uniformly to satisfy the overall sparsity requirements").
+pub fn plan(spec: &ModelSpec, sparsity: f64, prune_qk: bool) -> GroupPlan {
+    let (ffn_c, ov_c, qk_c) = unit_costs(spec);
+    let f = spec.d_ff as f64;
+    let d = spec.d_model as f64;
+    let pool = prunable_params(spec) as f64 / spec.n_layers as f64;
+    let removable = f * ffn_c as f64
+        + d * ov_c as f64
+        + if prune_qk { d * qk_c as f64 } else { 0.0 };
+    let r = (sparsity * pool / removable).clamp(0.0, 1.0);
+    GroupPlan {
+        ffn_ratio: r,
+        ov_ratio: r,
+        qk_ratio: if prune_qk { r } else { 0.0 },
+    }
+}
+
+/// Units to prune given a ratio (floor — never exceed the target).
+pub fn units(n: usize, ratio: f64) -> usize {
+    ((n as f64 * ratio).floor() as usize).min(n)
+}
+
+/// RoPE pairs (LLaMA): Q/K rows must be pruned in (j, j+half) pairs
+/// within each head so the rotation stays closed (DESIGN.md §5). Returns
+/// the index pairs for one model dim `d` with `h` heads.
+pub fn rope_pairs(d: usize, h: usize) -> Vec<(usize, usize)> {
+    let dh = d / h;
+    let half = dh / 2;
+    let mut pairs = Vec::with_capacity(d / 2);
+    for head in 0..h {
+        let base = head * dh;
+        for k in 0..half {
+            pairs.push((base + k, base + half + k));
+        }
+    }
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ModelSpec;
+
+    fn spec(family: &str) -> ModelSpec {
+        ModelSpec {
+            name: "t".into(),
+            family: family.into(),
+            d_model: 128,
+            n_heads: 4,
+            n_layers: 4,
+            d_ff: 512,
+            vocab: 512,
+            seq: 64,
+            batch: 8,
+            params: vec![],
+        }
+    }
+
+    #[test]
+    fn plan_hits_target_sparsity() {
+        for fam in ["opt", "llama"] {
+            let s = spec(fam);
+            for &target in &[0.1, 0.2, 0.3, 0.5] {
+                let p = plan(&s, target, false);
+                let (ffn_c, ov_c, _) = unit_costs(&s);
+                let removed = p.ffn_ratio * s.d_ff as f64 * ffn_c as f64
+                    + p.ov_ratio * s.d_model as f64 * ov_c as f64;
+                let achieved =
+                    removed * s.n_layers as f64 / prunable_params(&s) as f64;
+                assert!(
+                    (achieved - target).abs() < 1e-9,
+                    "{fam} target {target} achieved {achieved}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qk_pruning_lowers_other_ratios() {
+        let s = spec("llama");
+        let with = plan(&s, 0.3, true);
+        let without = plan(&s, 0.3, false);
+        assert!(with.ffn_ratio < without.ffn_ratio);
+        assert!(with.qk_ratio > 0.0);
+        assert_eq!(without.qk_ratio, 0.0);
+    }
+
+    #[test]
+    fn rope_pairs_cover_all_dims_once() {
+        let pairs = rope_pairs(32, 4);
+        assert_eq!(pairs.len(), 16);
+        let mut seen = vec![false; 32];
+        for (a, b) in pairs {
+            assert!(!seen[a] && !seen[b]);
+            seen[a] = true;
+            seen[b] = true;
+            // both in the same head, half apart
+            assert_eq!(a / 8, b / 8);
+            assert_eq!(b - a, 4);
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn units_floor() {
+        assert_eq!(units(512, 0.1), 51);
+        assert_eq!(units(512, 0.0), 0);
+        assert_eq!(units(512, 1.0), 512);
+    }
+}

@@ -1,0 +1,143 @@
+//! Pruning method taxonomy and option/report types.
+
+use std::fmt;
+
+/// Pruning methods — FASP plus every baseline in the paper's tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// The paper's method: coupled structure + Wanda-column metric +
+    /// closed-form restoration, Q/K skipped.
+    Fasp,
+    /// Table 5 ablation row "Wanda": per-operator column pruning with
+    /// evenly distributed sparsity + restoration, no coupling.
+    WandaStruct,
+    /// Weight-magnitude column metric on the FASP structure, no
+    /// restoration.
+    Magnitude,
+    /// FLAP: fluctuation metric, global adaptive selection, bias-only
+    /// compensation (no weight restoration).
+    Flap,
+    /// SliceGPT-like: PCA rotation + slicing (exact on the OV pair,
+    /// energy-metric on FFN), no restoration.
+    SliceGptLike,
+    /// LLM-Pruner-like: first-order Taylor column importance from
+    /// calibration gradients, no restoration (and no fine-tuning).
+    LlmPrunerLike,
+    /// NASLLM-like: FASP structure/metric but the ADMM restorer.
+    NasllmAdmm,
+}
+
+impl Method {
+    pub fn all() -> [Method; 7] {
+        [
+            Method::Fasp,
+            Method::WandaStruct,
+            Method::Magnitude,
+            Method::Flap,
+            Method::SliceGptLike,
+            Method::LlmPrunerLike,
+            Method::NasllmAdmm,
+        ]
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "fasp" => Method::Fasp,
+            "wanda" | "wanda_struct" => Method::WandaStruct,
+            "magnitude" | "mag" => Method::Magnitude,
+            "flap" => Method::Flap,
+            "slicegpt" | "slicegpt_like" => Method::SliceGptLike,
+            "llm_pruner" | "llm_pruner_like" => Method::LlmPrunerLike,
+            "nasllm" | "nasllm_admm" | "admm" => Method::NasllmAdmm,
+            _ => return None,
+        })
+    }
+
+    /// Paper-table label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Fasp => "FASP (ours)",
+            Method::WandaStruct => "Wanda-struct",
+            Method::Magnitude => "Magnitude",
+            Method::Flap => "FLAP*",
+            Method::SliceGptLike => "SliceGPT*",
+            Method::LlmPrunerLike => "LLM-Pruner*",
+            Method::NasllmAdmm => "NASLLM*",
+        }
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// Options for one pruning run.
+#[derive(Clone, Debug)]
+pub struct PruneOpts {
+    pub method: Method,
+    /// Target sparsity over the prunable pool (0.0–~0.6).
+    pub sparsity: f64,
+    /// Calibration batches to stream through capture.
+    pub calib_batches: usize,
+    /// FASP restoration on/off (structure ablation keeps selection but
+    /// may disable the update).
+    pub restore: bool,
+    /// Table 6 ablation: also prune Q/K rows.
+    pub prune_qk: bool,
+    /// Ridge δ (relative to mean Gram diagonal) in Eq. 8.
+    pub delta: f64,
+    /// Re-capture activations after each pruned layer (SparseGPT-style
+    /// propagation) instead of one dense pass.
+    pub sequential: bool,
+    /// Adaptive per-layer sparsity (paper §5 future work): select pruned
+    /// units globally across layers by z-normalized score instead of a
+    /// uniform per-layer ratio. FASP/magnitude only.
+    pub adaptive: bool,
+    /// ADMM iterations (NasllmAdmm only).
+    pub admm_iters: usize,
+    pub seed: u64,
+}
+
+impl PruneOpts {
+    pub fn new(method: Method, sparsity: f64) -> PruneOpts {
+        PruneOpts {
+            method,
+            sparsity,
+            calib_batches: 8,
+            restore: matches!(
+                method,
+                Method::Fasp | Method::WandaStruct | Method::NasllmAdmm
+            ),
+            prune_qk: false,
+            delta: 1e-2,
+            sequential: false,
+            adaptive: false,
+            admm_iters: 48,
+            seed: 42,
+        }
+    }
+}
+
+/// Outcome of one pruning run.
+#[derive(Clone, Debug)]
+pub struct PruneReport {
+    pub method: Method,
+    pub target_sparsity: f64,
+    pub achieved_sparsity: f64,
+    pub params_removed: usize,
+    /// (phase name, seconds)
+    pub phase_s: Vec<(String, f64)>,
+    pub total_s: f64,
+}
+
+impl PruneReport {
+    pub fn phase(&self, name: &str) -> f64 {
+        self.phase_s
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+}

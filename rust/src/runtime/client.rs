@@ -1,0 +1,27 @@
+//! Thread-local PJRT CPU client. `PjRtClient` is `Rc`-backed (not
+//! `Send`/`Sync`), and the whole runtime is single-threaded on this
+//! 1-core testbed, so the client lives in a thread-local and every PJRT
+//! call stays on the calling thread.
+
+use anyhow::Result;
+use once_cell::unsync::OnceCell;
+
+thread_local! {
+    static CLIENT: OnceCell<xla::PjRtClient> = const { OnceCell::new() };
+}
+
+/// Run `f` with the shared (per-thread) CPU client.
+pub fn with_client<R>(f: impl FnOnce(&xla::PjRtClient) -> Result<R>) -> Result<R> {
+    CLIENT.with(|cell| {
+        if cell.get().is_none() {
+            let c = xla::PjRtClient::cpu()?;
+            crate::debug!(
+                "PJRT client: platform={} devices={}",
+                c.platform_name(),
+                c.device_count()
+            );
+            let _ = cell.set(c);
+        }
+        f(cell.get().unwrap())
+    })
+}

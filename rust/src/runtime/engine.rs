@@ -1,0 +1,283 @@
+//! Model-level runtime facade. One `ModelEngine` per zoo model binds the
+//! four AOT entries (`fwd_loss`, `capture`, `gradcol`, `train_step`) and
+//! exposes typed, batched operations to the coordinator. Artifacts
+//! compile lazily (first use) and are cached for the engine's lifetime.
+
+use super::executable::{Artifact, In};
+use super::manifest::{Manifest, ModelSpec};
+use crate::tensor::{IntTensor, Tensor};
+use crate::tensor::ops::add_assign;
+use anyhow::{Context, Result};
+use once_cell::sync::OnceCell;
+
+/// Per-layer calibration statistics (sums over sample rows; additive
+/// across batches). Mirrors `python/compile/capture.py::CAPTURE_LEAVES`.
+#[derive(Clone)]
+pub struct LayerStats {
+    /// Gram of the qkv input (post-ln1), d×d.
+    pub g_ln1: Tensor,
+    /// Gram of the fc1/gate/up input (post-ln2), d×d.
+    pub g_ln2: Tensor,
+    /// Gram of the W_out input (attention context), d×d.
+    pub g_attn: Tensor,
+    /// Gram of the W_fc2/W_down input (FFN hidden), f×f.
+    pub g_ffn: Tensor,
+    pub m_ln1: Tensor,
+    pub m_ln2: Tensor,
+    pub m_attn: Tensor,
+    pub m_ffn: Tensor,
+}
+
+/// Accumulated calibration statistics for a whole model.
+pub struct CalibStats {
+    pub layers: Vec<LayerStats>,
+    /// Number of sample rows accumulated (batches × B × T).
+    pub rows: usize,
+}
+
+impl CalibStats {
+    /// ‖X_j‖₂ per FFN hidden unit of layer `l` (from diag of the Gram).
+    pub fn ffn_xnorm(&self, l: usize) -> Vec<f32> {
+        diag_sqrt(&self.layers[l].g_ffn)
+    }
+    /// ‖X_j‖₂ per attention-context dim of layer `l`.
+    pub fn attn_xnorm(&self, l: usize) -> Vec<f32> {
+        diag_sqrt(&self.layers[l].g_attn)
+    }
+    /// ‖X_j‖₂ per qkv-input dim (used by the Q/K ablation).
+    pub fn ln1_xnorm(&self, l: usize) -> Vec<f32> {
+        diag_sqrt(&self.layers[l].g_ln1)
+    }
+}
+
+fn diag_sqrt(g: &Tensor) -> Vec<f32> {
+    let (n, _) = g.dims2();
+    (0..n).map(|i| g.at2(i, i).max(0.0).sqrt()).collect()
+}
+
+/// Per-layer Taylor scores for the LLM-Pruner-like baseline.
+#[derive(Clone)]
+pub struct GradScores {
+    pub ffn: Vec<f32>,
+    pub ov: Vec<f32>,
+}
+
+pub struct FwdOut {
+    pub mean_nll: f32,
+    pub seq_nll: Vec<f32>,
+    pub tok_nll: Tensor,
+}
+
+pub struct ModelEngine<'m> {
+    pub manifest: &'m Manifest,
+    pub spec: ModelSpec,
+    fwd: OnceCell<Artifact>,
+    capture: OnceCell<Artifact>,
+    gradcol: OnceCell<Artifact>,
+    train: OnceCell<Artifact>,
+}
+
+impl<'m> ModelEngine<'m> {
+    pub fn new(manifest: &'m Manifest, model: &str) -> Result<Self> {
+        let spec = manifest.model(model)?.clone();
+        Ok(ModelEngine {
+            manifest,
+            spec,
+            fwd: OnceCell::new(),
+            capture: OnceCell::new(),
+            gradcol: OnceCell::new(),
+            train: OnceCell::new(),
+        })
+    }
+
+    fn art<'a>(&self, cell: &'a OnceCell<Artifact>, entry: &str) -> Result<&'a Artifact> {
+        // OnceCell::get_or_try_init would move; emulate with get/set.
+        if cell.get().is_none() {
+            let a = Artifact::load(self.manifest, &format!("{}_{entry}", self.spec.name))?;
+            let _ = cell.set(a);
+        }
+        Ok(cell.get().unwrap())
+    }
+
+    pub fn fwd_artifact(&self) -> Result<&Artifact> {
+        self.art(&self.fwd, "fwd_loss")
+    }
+
+    /// Teacher-forced loss on one batch.
+    pub fn fwd_loss(
+        &self,
+        params: &Tensor,
+        tokens: &IntTensor,
+        targets: &IntTensor,
+    ) -> Result<FwdOut> {
+        let a = self.fwd_artifact()?;
+        let leaves = a.call(&[In::F(params), In::I(tokens), In::I(targets)])?;
+        Self::unpack_fwd(a, leaves)
+    }
+
+    /// Pre-uploaded packed-params literal for multi-batch loops: building
+    /// the [P] literal once amortizes the dominant host→literal copy
+    /// (EXPERIMENTS.md §Perf).
+    pub fn params_literal(&self, params: &Tensor) -> Result<xla::Literal> {
+        anyhow::ensure!(
+            params.numel() == self.spec.n_params_elems(),
+            "param length {} != {}",
+            params.numel(),
+            self.spec.n_params_elems()
+        );
+        Ok(super::executable::f32_literal(&[params.numel()], &params.data))
+    }
+
+    /// `fwd_loss` with a cached params literal.
+    pub fn fwd_loss_lit(
+        &self,
+        params: &xla::Literal,
+        tokens: &IntTensor,
+        targets: &IntTensor,
+    ) -> Result<FwdOut> {
+        let a = self.fwd_artifact()?;
+        let leaves = a.call(&[In::Lit(params), In::I(tokens), In::I(targets)])?;
+        Self::unpack_fwd(a, leaves)
+    }
+
+    fn unpack_fwd(a: &Artifact, leaves: Vec<xla::Literal>) -> Result<FwdOut> {
+        let mean = leaves[0].to_vec::<f32>()?[0];
+        let seq = leaves[1].to_vec::<f32>()?;
+        let tok = a.to_tensor(2, &leaves[2])?;
+        Ok(FwdOut { mean_nll: mean, seq_nll: seq, tok_nll: tok })
+    }
+
+    /// Run capture over `batches` and accumulate the per-layer stats.
+    pub fn capture(
+        &self,
+        params: &Tensor,
+        batches: &[IntTensor],
+    ) -> Result<CalibStats> {
+        let a = self.art(&self.capture, "capture")?;
+        let leaves_per_layer = self.manifest.capture_leaves.len();
+        let n_layers = self.spec.n_layers;
+        let params_lit = self.params_literal(params)?; // upload once
+        let mut acc: Option<Vec<LayerStats>> = None;
+        let mut rows = 0usize;
+        for toks in batches {
+            let outs = a.call_tensors(&[In::Lit(&params_lit), In::I(toks)])?;
+            anyhow::ensure!(
+                outs.len() == leaves_per_layer * n_layers,
+                "capture output arity"
+            );
+            rows += toks.numel();
+            let mut layers = Vec::with_capacity(n_layers);
+            for l in 0..n_layers {
+                let b = l * leaves_per_layer;
+                layers.push(LayerStats {
+                    g_ln1: outs[b].clone(),
+                    g_ln2: outs[b + 1].clone(),
+                    g_attn: outs[b + 2].clone(),
+                    g_ffn: outs[b + 3].clone(),
+                    m_ln1: outs[b + 4].clone(),
+                    m_ln2: outs[b + 5].clone(),
+                    m_attn: outs[b + 6].clone(),
+                    m_ffn: outs[b + 7].clone(),
+                });
+            }
+            match &mut acc {
+                None => acc = Some(layers),
+                Some(acc) => {
+                    for (a_l, n_l) in acc.iter_mut().zip(&layers) {
+                        add_assign(&mut a_l.g_ln1, &n_l.g_ln1);
+                        add_assign(&mut a_l.g_ln2, &n_l.g_ln2);
+                        add_assign(&mut a_l.g_attn, &n_l.g_attn);
+                        add_assign(&mut a_l.g_ffn, &n_l.g_ffn);
+                        add_assign(&mut a_l.m_ln1, &n_l.m_ln1);
+                        add_assign(&mut a_l.m_ln2, &n_l.m_ln2);
+                        add_assign(&mut a_l.m_attn, &n_l.m_attn);
+                        add_assign(&mut a_l.m_ffn, &n_l.m_ffn);
+                    }
+                }
+            }
+        }
+        Ok(CalibStats {
+            layers: acc.context("capture needs at least one batch")?,
+            rows,
+        })
+    }
+
+    /// Taylor column scores accumulated over calibration batches.
+    pub fn gradcol(
+        &self,
+        params: &Tensor,
+        batches: &[(IntTensor, IntTensor)],
+    ) -> Result<Vec<GradScores>> {
+        let a = self.art(&self.gradcol, "gradcol")?;
+        let n_layers = self.spec.n_layers;
+        let mut acc: Vec<GradScores> = Vec::new();
+        for (toks, tgts) in batches {
+            let outs = a.call_tensors(&[In::F(params), In::I(toks), In::I(tgts)])?;
+            anyhow::ensure!(outs.len() == 2 * n_layers, "gradcol output arity");
+            if acc.is_empty() {
+                for l in 0..n_layers {
+                    acc.push(GradScores {
+                        ffn: outs[2 * l].data.clone(),
+                        ov: outs[2 * l + 1].data.clone(),
+                    });
+                }
+            } else {
+                for l in 0..n_layers {
+                    for (x, y) in acc[l].ffn.iter_mut().zip(&outs[2 * l].data) {
+                        *x += y;
+                    }
+                    for (x, y) in acc[l].ov.iter_mut().zip(&outs[2 * l + 1].data) {
+                        *x += y;
+                    }
+                }
+            }
+        }
+        anyhow::ensure!(!acc.is_empty(), "gradcol needs at least one batch");
+        Ok(acc)
+    }
+
+    pub fn train_artifact(&self) -> Result<&Artifact> {
+        self.art(&self.train, "train_step")
+    }
+
+    /// One Adam step. `state` is the packed [3P] literal; returns
+    /// (loss, new state literal) — the state never unpacks on the host.
+    pub fn train_step(
+        &self,
+        state: &xla::Literal,
+        tokens: &IntTensor,
+        targets: &IntTensor,
+        t: f32,
+        lr: f32,
+    ) -> Result<(f32, xla::Literal)> {
+        let a = self.train_artifact()?;
+        let t_s = Tensor::scalar(t);
+        let lr_s = Tensor::scalar(lr);
+        let mut leaves = a.call(&[
+            In::Lit(state),
+            In::I(tokens),
+            In::I(targets),
+            In::F(&t_s),
+            In::F(&lr_s),
+        ])?;
+        let loss = leaves[0].to_vec::<f32>()?[0];
+        Ok((loss, leaves.remove(1)))
+    }
+
+    /// Build a fresh packed train state [3P] from packed params [P].
+    pub fn init_train_state(&self, params: &Tensor) -> Result<xla::Literal> {
+        let p = params.numel();
+        anyhow::ensure!(p == self.spec.n_params_elems(), "param length");
+        let mut state = vec![0.0f32; 3 * p];
+        state[..p].copy_from_slice(&params.data);
+        Ok(super::executable::f32_literal(&[3 * p], &state))
+    }
+
+    /// Extract packed params [P] from a packed train-state literal [3P].
+    pub fn params_from_state(&self, state: &xla::Literal) -> Result<Tensor> {
+        let all: Vec<f32> = state.to_vec()?;
+        let p = self.spec.n_params_elems();
+        anyhow::ensure!(all.len() == 3 * p, "state length {}", all.len());
+        Ok(Tensor::new(vec![p], all[..p].to_vec()))
+    }
+}

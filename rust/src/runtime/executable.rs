@@ -1,0 +1,211 @@
+//! One compiled artifact: HLO text → `XlaComputation` → PJRT executable,
+//! plus typed input construction and output unpacking.
+//!
+//! Conventions (set by `python/compile/aot_util.py`):
+//! * the computation root is a tuple (`return_tuple=True`) — PJRT hands
+//!   back ONE tuple buffer, which we decompose on the host;
+//! * inputs are passed positionally in manifest order;
+//! * shapes/dtypes are validated against the manifest before execution so
+//!   a drifted artifact fails loudly, not with garbage numerics.
+
+use super::manifest::{ArtifactSpec, DType, Manifest};
+use crate::tensor::{IntTensor, Tensor};
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Borrowed host value for artifact inputs.
+#[derive(Clone, Copy)]
+pub enum In<'a> {
+    F(&'a Tensor),
+    I(&'a IntTensor),
+    /// An opaque literal already in artifact-output form (fed back, e.g.
+    /// the packed train state). Shape-checked against the input spec.
+    Lit(&'a xla::Literal),
+}
+
+/// Running counters for the perf breakdown (EXPERIMENTS.md §Perf).
+#[derive(Default)]
+pub struct ExecStats {
+    pub calls: AtomicU64,
+    pub upload_ns: AtomicU64,
+    pub exec_ns: AtomicU64,
+    pub download_ns: AtomicU64,
+}
+
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    pub stats: ExecStats,
+}
+
+pub(crate) fn f32_literal(shape: &[usize], data: &[f32]) -> xla::Literal {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )
+    .expect("f32 literal")
+}
+
+pub(crate) fn i32_literal(shape: &[usize], data: &[i32]) -> xla::Literal {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes,
+    )
+    .expect("i32 literal")
+}
+
+impl Artifact {
+    /// Load and compile `name` from the manifest's artifact directory.
+    pub fn load(manifest: &Manifest, name: &str) -> Result<Artifact> {
+        let spec = manifest.artifact(name)?.clone();
+        let path = manifest.artifact_path(&spec);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = super::client::with_client(|c| {
+            c.compile(&comp)
+                .with_context(|| format!("XLA compile of '{name}'"))
+        })?;
+        crate::debug!("compiled {name} in {:.2?}", t0.elapsed());
+        Ok(Artifact { spec, exe, stats: ExecStats::default() })
+    }
+
+    /// Execute with typed host inputs; returns output leaves as literals.
+    pub fn call(&self, inputs: &[In]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, artifact wants {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let t0 = std::time::Instant::now();
+        let mut lits: Vec<xla::Literal> = Vec::with_capacity(inputs.len());
+        // borrowed literals are referenced via index into `inputs`
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(inputs.len());
+        for (i, (inp, spec)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            match inp {
+                In::F(t) => {
+                    if t.shape != spec.shape || spec.dtype != DType::F32 {
+                        bail!(
+                            "{} input {} ('{}'): got f32{:?}, want {:?}{:?}",
+                            self.spec.name, i, spec.name, t.shape, spec.dtype, spec.shape
+                        );
+                    }
+                    lits.push(f32_literal(&t.shape, &t.data));
+                }
+                In::I(t) => {
+                    if t.shape != spec.shape || spec.dtype != DType::I32 {
+                        bail!(
+                            "{} input {} ('{}'): got i32{:?}, want {:?}{:?}",
+                            self.spec.name, i, spec.name, t.shape, spec.dtype, spec.shape
+                        );
+                    }
+                    lits.push(i32_literal(&t.shape, &t.data));
+                }
+                In::Lit(l) => {
+                    let n = l.element_count();
+                    if n != spec.numel() {
+                        bail!(
+                            "{} input {} ('{}'): literal has {} elems, want {:?}",
+                            self.spec.name, i, spec.name, n, spec.shape
+                        );
+                    }
+                    refs.push(l);
+                }
+            }
+        }
+        // Build the positional argument list preserving order.
+        let mut all: Vec<&xla::Literal> = Vec::with_capacity(inputs.len());
+        let mut li = 0;
+        let mut ri = 0;
+        for inp in inputs {
+            match inp {
+                In::Lit(_) => {
+                    all.push(refs[ri]);
+                    ri += 1;
+                }
+                _ => {
+                    all.push(&lits[li]);
+                    li += 1;
+                }
+            }
+        }
+        let upload = t0.elapsed();
+
+        let t1 = std::time::Instant::now();
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&all)
+            .with_context(|| format!("execute {}", self.spec.name))?;
+        let exec = t1.elapsed();
+
+        let t2 = std::time::Instant::now();
+        let buf = &result[0][0];
+        let root = buf
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {}", self.spec.name))?;
+        let leaves = root.to_tuple().context("decompose output tuple")?;
+        if leaves.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: {} output leaves, manifest says {}",
+                self.spec.name,
+                leaves.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let download = t2.elapsed();
+
+        self.stats.calls.fetch_add(1, Ordering::Relaxed);
+        self.stats.upload_ns.fetch_add(upload.as_nanos() as u64, Ordering::Relaxed);
+        self.stats.exec_ns.fetch_add(exec.as_nanos() as u64, Ordering::Relaxed);
+        self.stats
+            .download_ns
+            .fetch_add(download.as_nanos() as u64, Ordering::Relaxed);
+        Ok(leaves)
+    }
+
+    /// Convert an output leaf literal to a host Tensor (f32).
+    pub fn to_tensor(&self, leaf_idx: usize, lit: &xla::Literal) -> Result<Tensor> {
+        let spec = &self.spec.outputs[leaf_idx];
+        if spec.dtype != DType::F32 {
+            bail!("{} out{} is not f32", self.spec.name, leaf_idx);
+        }
+        let v: Vec<f32> = lit.to_vec().context("literal to_vec")?;
+        if v.len() != spec.numel() {
+            bail!(
+                "{} out{}: {} elems, want {:?}",
+                self.spec.name, leaf_idx, v.len(), spec.shape
+            );
+        }
+        Ok(Tensor::new(spec.shape.clone(), v))
+    }
+
+    /// Convenience: execute and convert every f32 leaf to a Tensor.
+    pub fn call_tensors(&self, inputs: &[In]) -> Result<Vec<Tensor>> {
+        let leaves = self.call(inputs)?;
+        leaves
+            .iter()
+            .enumerate()
+            .map(|(i, l)| self.to_tensor(i, l))
+            .collect()
+    }
+
+    /// Mean wall-clock per call of the pure execute phase.
+    pub fn mean_exec_ms(&self) -> f64 {
+        let calls = self.stats.calls.load(Ordering::Relaxed).max(1);
+        self.stats.exec_ns.load(Ordering::Relaxed) as f64 / calls as f64 / 1e6
+    }
+}

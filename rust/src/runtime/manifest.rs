@@ -1,0 +1,242 @@
+//! Typed view of `artifacts/manifest.json` — the contract between
+//! `python/compile/aot.py` (producer) and the Rust runtime (consumer).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype '{other}'"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    /// Output leaves (unnamed: dtype + shape), in tuple order.
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Mirror of `python/compile/configs.py::ModelConfig` + parameter order.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub family: String,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    /// (param name, shape) in artifact input order.
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+impl ModelSpec {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|(n, _)| n == name)
+    }
+    pub fn n_params_elems(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// Sparsity metadata for the sliced latency artifacts.
+#[derive(Debug, Clone)]
+pub struct LatencySpec {
+    pub sparsity: f64,
+    pub f_s: usize,
+    pub dk_s: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub latency: BTreeMap<String, LatencySpec>,
+    pub capture_leaves: Vec<String>,
+    pub gradcol_leaves: Vec<String>,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    Ok(j.as_arr()
+        .context("shape not an array")?
+        .iter()
+        .map(|d| d.as_usize().unwrap_or(0))
+        .collect())
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "read {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let root = Json::parse(&text).context("parse manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root.get("models").as_obj().context("models")? {
+            let params = m
+                .get("params")
+                .as_arr()
+                .context("params")?
+                .iter()
+                .map(|p| {
+                    let a = p.as_arr().context("param entry")?;
+                    Ok((
+                        a[0].as_str().context("param name")?.to_string(),
+                        shape_of(&a[1])?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let get = |k: &str| -> Result<usize> {
+                m.get(k).as_usize().with_context(|| format!("model field {k}"))
+            };
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    name: name.clone(),
+                    family: m.get("family").as_str().context("family")?.to_string(),
+                    d_model: get("d_model")?,
+                    n_heads: get("n_heads")?,
+                    n_layers: get("n_layers")?,
+                    d_ff: get("d_ff")?,
+                    vocab: get("vocab")?,
+                    seq: get("seq")?,
+                    batch: get("batch")?,
+                    params,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in root.get("artifacts").as_obj().context("artifacts")? {
+            let inputs = a
+                .get("inputs")
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(|e| {
+                    let t = e.as_arr().context("input entry")?;
+                    Ok(IoSpec {
+                        name: t[0].as_str().context("input name")?.to_string(),
+                        dtype: DType::parse(t[1].as_str().context("dtype")?)?,
+                        shape: shape_of(&t[2])?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .enumerate()
+                .map(|(i, e)| {
+                    let t = e.as_arr().context("output entry")?;
+                    Ok(IoSpec {
+                        name: format!("out{i}"),
+                        dtype: DType::parse(t[0].as_str().context("dtype")?)?,
+                        shape: shape_of(&t[1])?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: a.get("file").as_str().context("file")?.to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let mut latency = BTreeMap::new();
+        if let Some(obj) = root.get("latency").as_obj() {
+            for (name, l) in obj {
+                latency.insert(
+                    name.clone(),
+                    LatencySpec {
+                        sparsity: l.get("sparsity").as_f64().context("sparsity")?,
+                        f_s: l.get("f_s").as_usize().context("f_s")?,
+                        dk_s: l.get("dk_s").as_usize().context("dk_s")?,
+                    },
+                );
+            }
+        }
+
+        let leaves = |k: &str| -> Vec<String> {
+            root.get(k)
+                .as_arr()
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            models,
+            artifacts,
+            latency,
+            capture_leaves: leaves("capture_leaves"),
+            gradcol_leaves: leaves("gradcol_leaves"),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "model '{name}' not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn artifact_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}

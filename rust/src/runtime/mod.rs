@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! This is the only boundary between the Rust coordinator and the
+//! JAX/Pallas compute — python never runs at this point.
+//!
+//! * [`manifest`] — typed view of `artifacts/manifest.json` (input/output
+//!   shapes, model parameter orders, capture leaf layout).
+//! * [`client`] — process-wide `PjRtClient` singleton.
+//! * [`executable`] — one compiled artifact: literal execution + shape
+//!   checking + output unpacking.
+//! * [`engine`] — model-level facade: `fwd_loss`, `capture`, `gradcol`,
+//!   `train_step` (with persistent device buffers for the training state).
+
+pub mod client;
+pub mod engine;
+pub mod executable;
+pub mod manifest;
+
+pub use engine::ModelEngine;
+pub use executable::Artifact;
+pub use manifest::{ArtifactSpec, Manifest, ModelSpec};

@@ -1,0 +1,170 @@
+//! Core tensor types.
+
+use crate::util::rng::Rng;
+
+/// Owned, contiguous, row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Owned i32 tensor (token ids).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(numel(&shape), data.len(), "shape {:?} vs len {}", shape, data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; numel(shape)] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    /// N(0, std) initialization.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(numel(shape), std) }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows/cols of a 2-D tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.shape.len(), 2, "expected 2-D, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn dims3(&self) -> (usize, usize, usize) {
+        assert_eq!(self.shape.len(), 3, "expected 3-D, got {:?}", self.shape);
+        (self.shape[0], self.shape[1], self.shape[2])
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.shape[1] + j]
+    }
+
+    /// Row slice of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (_, c) = self.dims2();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.shape[1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(numel(shape), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Transposed copy of a 2-D tensor.
+    pub fn t(&self) -> Tensor {
+        let (r, c) = self.dims2();
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::new(vec![c, r], out)
+    }
+
+    /// Maximum |a - b| between same-shape tensors.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative Frobenius error ||a-b|| / max(||b||, eps).
+    pub fn rel_err(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let num: f32 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        let den: f32 = other.data.iter().map(|b| b * b).sum();
+        (num.sqrt()) / den.sqrt().max(1e-12)
+    }
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(numel(&shape), data.len());
+        IntTensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        IntTensor { shape: shape.to_vec(), data: vec![0; numel(shape)] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.t();
+        assert_eq!(tt.shape, vec![3, 2]);
+        assert_eq!(tt.at2(2, 1), 6.0);
+        assert_eq!(tt.t(), t);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn randn_scale() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(&[100, 100], 0.02, &mut rng);
+        let var: f32 =
+            t.data.iter().map(|x| x * x).sum::<f32>() / t.numel() as f32;
+        assert!((var.sqrt() - 0.02).abs() < 0.002);
+    }
+}

@@ -1,0 +1,176 @@
+//! Binary tensor container ("FTNS"): a minimal named-tensor archive used
+//! for model checkpoints and cached calibration stats. Little-endian,
+//! single file, no compression:
+//!
+//! ```text
+//! magic "FTNS" | u32 version | u32 count
+//! per entry: u32 name_len | name bytes | u8 dtype (0=f32,1=i32)
+//!            | u32 ndim | u64 dims... | payload
+//! ```
+
+use super::{IntTensor, Tensor};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"FTNS";
+const VERSION: u32 = 1;
+
+/// An ordered collection of named tensors.
+#[derive(Default, Clone)]
+pub struct TensorFile {
+    pub tensors: BTreeMap<String, Tensor>,
+    pub ints: BTreeMap<String, IntTensor>,
+}
+
+impl TensorFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn insert_int(&mut self, name: &str, t: IntTensor) {
+        self.ints.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).with_context(|| format!("tensor '{name}' missing"))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("create {}", path.display()))?,
+        );
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        let count = (self.tensors.len() + self.ints.len()) as u32;
+        w.write_all(&count.to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            write_header(&mut w, name, 0, &t.shape)?;
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+            };
+            w.write_all(bytes)?;
+        }
+        for (name, t) in &self.ints {
+            write_header(&mut w, name, 1, &t.shape)?;
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+            };
+            w.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not a FTNS file", path.display());
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("unsupported FTNS version {version}");
+        }
+        let count = read_u32(&mut r)?;
+        let mut out = TensorFile::new();
+        for _ in 0..count {
+            let name_len = read_u32(&mut r)? as usize;
+            if name_len > 4096 {
+                bail!("corrupt FTNS: name_len {name_len}");
+            }
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("tensor name not utf-8")?;
+            let mut dt = [0u8; 1];
+            r.read_exact(&mut dt)?;
+            let ndim = read_u32(&mut r)? as usize;
+            if ndim > 8 {
+                bail!("corrupt FTNS: ndim {ndim}");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let mut b = [0u8; 8];
+                r.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut payload = vec![0u8; n * 4];
+            r.read_exact(&mut payload)?;
+            match dt[0] {
+                0 => {
+                    let data = payload
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    out.tensors.insert(name, Tensor::new(shape, data));
+                }
+                1 => {
+                    let data = payload
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    out.ints.insert(name, IntTensor::new(shape, data));
+                }
+                d => bail!("unknown dtype tag {d}"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn write_header<W: Write>(w: &mut W, name: &str, dtype: u8, shape: &[usize]) -> Result<()> {
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name.as_bytes())?;
+    w.write_all(&[dtype])?;
+    w.write_all(&(shape.len() as u32).to_le_bytes())?;
+    for &d in shape {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(0);
+        let mut tf = TensorFile::new();
+        tf.insert("w", Tensor::randn(&[3, 4], 1.0, &mut rng));
+        tf.insert("b", Tensor::randn(&[7], 1.0, &mut rng));
+        tf.insert_int("toks", IntTensor::new(vec![2, 2], vec![1, 2, 3, 4]));
+        let path = std::env::temp_dir().join("fasp_io_test.ftns");
+        tf.save(&path).unwrap();
+        let re = TensorFile::load(&path).unwrap();
+        assert_eq!(re.tensors["w"], tf.tensors["w"]);
+        assert_eq!(re.tensors["b"], tf.tensors["b"]);
+        assert_eq!(re.ints["toks"], tf.ints["toks"]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let path = std::env::temp_dir().join("fasp_io_bad.ftns");
+        std::fs::write(&path, b"NOPE").unwrap();
+        assert!(TensorFile::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,12 @@
+//! Host tensor substrate: owned, contiguous, row-major f32/i32 tensors
+//! with the operations the coordinator needs on the host side (metric
+//! math, restoration assembly, reference model forward). The runtime hot
+//! path stays on PJRT device buffers; these tensors are the host-side
+//! currency.
+
+mod core;
+pub mod ops;
+pub mod matmul;
+pub mod io;
+
+pub use core::{IntTensor, Tensor};

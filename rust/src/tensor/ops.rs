@@ -1,0 +1,208 @@
+//! Elementwise / reduction / selection operations on host tensors.
+//! Everything the pruning math needs: column norms/sums, masked zeroing,
+//! gathers by index set, softmax and friends for the host reference model.
+
+use super::Tensor;
+
+/// Column-wise L1 norm of |W| for a 2-D tensor: out[j] = Σ_i |W_ij|.
+pub fn col_abs_sum(w: &Tensor) -> Vec<f32> {
+    let (r, c) = w.dims2();
+    let mut out = vec![0.0f32; c];
+    for i in 0..r {
+        let row = &w.data[i * c..(i + 1) * c];
+        for (o, x) in out.iter_mut().zip(row) {
+            *o += x.abs();
+        }
+    }
+    out
+}
+
+/// Row-wise L1 norm: out[i] = Σ_j |W_ij|.
+pub fn row_abs_sum(w: &Tensor) -> Vec<f32> {
+    let (r, c) = w.dims2();
+    (0..r)
+        .map(|i| w.data[i * c..(i + 1) * c].iter().map(|x| x.abs()).sum())
+        .collect()
+}
+
+/// Column-wise squared L2 norm.
+pub fn col_sq_sum(w: &Tensor) -> Vec<f32> {
+    let (r, c) = w.dims2();
+    let mut out = vec![0.0f32; c];
+    for i in 0..r {
+        let row = &w.data[i * c..(i + 1) * c];
+        for (o, x) in out.iter_mut().zip(row) {
+            *o += x * x;
+        }
+    }
+    out
+}
+
+/// Zero the given columns of a 2-D tensor in place.
+pub fn zero_cols(w: &mut Tensor, cols: &[usize]) {
+    let (r, c) = w.dims2();
+    for i in 0..r {
+        let row = &mut w.data[i * c..(i + 1) * c];
+        for &j in cols {
+            row[j] = 0.0;
+        }
+    }
+}
+
+/// Zero the given rows of a 2-D tensor in place.
+pub fn zero_rows(w: &mut Tensor, rows: &[usize]) {
+    let c = w.shape[1];
+    for &i in rows {
+        w.data[i * c..(i + 1) * c].fill(0.0);
+    }
+}
+
+/// Zero entries of a 1-D tensor in place.
+pub fn zero_elems(b: &mut Tensor, idx: &[usize]) {
+    for &i in idx {
+        b.data[i] = 0.0;
+    }
+}
+
+/// Gather columns: out[:, k] = w[:, cols[k]].
+pub fn gather_cols(w: &Tensor, cols: &[usize]) -> Tensor {
+    let (r, c) = w.dims2();
+    let mut out = vec![0.0f32; r * cols.len()];
+    for i in 0..r {
+        let row = &w.data[i * c..(i + 1) * c];
+        for (k, &j) in cols.iter().enumerate() {
+            out[i * cols.len() + k] = row[j];
+        }
+    }
+    Tensor::new(vec![r, cols.len()], out)
+}
+
+/// Gather rows: out[k, :] = w[rows[k], :].
+pub fn gather_rows(w: &Tensor, rows: &[usize]) -> Tensor {
+    let (_, c) = w.dims2();
+    let mut out = Vec::with_capacity(rows.len() * c);
+    for &i in rows {
+        out.extend_from_slice(&w.data[i * c..(i + 1) * c]);
+    }
+    Tensor::new(vec![rows.len(), c], out)
+}
+
+/// Scatter columns back: w[:, cols[k]] = src[:, k].
+pub fn scatter_cols(w: &mut Tensor, cols: &[usize], src: &Tensor) {
+    let (r, c) = w.dims2();
+    let (sr, sc) = src.dims2();
+    assert_eq!(sr, r);
+    assert_eq!(sc, cols.len());
+    for i in 0..r {
+        for (k, &j) in cols.iter().enumerate() {
+            w.data[i * c + j] = src.data[i * sc + k];
+        }
+    }
+}
+
+/// out = a + b (same shape).
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape, b.shape);
+    Tensor::new(
+        a.shape.clone(),
+        a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect(),
+    )
+}
+
+/// a += b in place.
+pub fn add_assign(a: &mut Tensor, b: &Tensor) {
+    assert_eq!(a.shape, b.shape);
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x += y;
+    }
+}
+
+/// a *= s in place.
+pub fn scale(a: &mut Tensor, s: f32) {
+    for x in a.data.iter_mut() {
+        *x *= s;
+    }
+}
+
+/// In-place stable softmax over the last axis of a 2-D tensor.
+pub fn softmax_rows(x: &mut Tensor) {
+    let (r, c) = x.dims2();
+    for i in 0..r {
+        let row = &mut x.data[i * c..(i + 1) * c];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut z = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            z += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= z;
+        }
+    }
+}
+
+/// log-sum-exp over a slice.
+pub fn logsumexp(row: &[f32]) -> f32 {
+    let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    m + row.iter().map(|&v| (v - m).exp()).sum::<f32>().ln()
+}
+
+/// Frobenius norm.
+pub fn fro_norm(a: &Tensor) -> f32 {
+    a.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t23() -> Tensor {
+        Tensor::new(vec![2, 3], vec![1., -2., 3., -4., 5., -6.])
+    }
+
+    #[test]
+    fn col_row_sums() {
+        let w = t23();
+        assert_eq!(col_abs_sum(&w), vec![5., 7., 9.]);
+        assert_eq!(row_abs_sum(&w), vec![6., 15.]);
+        assert_eq!(col_sq_sum(&w), vec![17., 29., 45.]);
+    }
+
+    #[test]
+    fn zero_and_gather() {
+        let mut w = t23();
+        zero_cols(&mut w, &[1]);
+        assert_eq!(w.data, vec![1., 0., 3., -4., 0., -6.]);
+        let g = gather_cols(&w, &[0, 2]);
+        assert_eq!(g.shape, vec![2, 2]);
+        assert_eq!(g.data, vec![1., 3., -4., -6.]);
+        let r = gather_rows(&w, &[1]);
+        assert_eq!(r.data, vec![-4., 0., -6.]);
+    }
+
+    #[test]
+    fn scatter_inverts_gather() {
+        let w = t23();
+        let cols = vec![0usize, 2];
+        let g = gather_cols(&w, &cols);
+        let mut w2 = Tensor::zeros(&[2, 3]);
+        scatter_cols(&mut w2, &cols, &g);
+        assert_eq!(w2.data, vec![1., 0., 3., -4., 0., -6.]);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut x = t23();
+        softmax_rows(&mut x);
+        for i in 0..2 {
+            let s: f32 = x.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn logsumexp_stable() {
+        let v = logsumexp(&[1000.0, 1000.0]);
+        assert!((v - (1000.0 + (2.0f32).ln())).abs() < 1e-3);
+    }
+}

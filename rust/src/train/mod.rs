@@ -1,0 +1,144 @@
+//! Trainer: drives the AOT `train_step` artifact. The packed [3P] state
+//! literal round-trips device↔host as a single opaque buffer per step —
+//! the host never unpacks it until checkpointing. This is the in-repo
+//! "pretraining" that stands in for the paper's HuggingFace checkpoints
+//! (DESIGN.md §1) and the end-to-end driver of `examples/train_prune_eval`.
+
+use crate::data::Dataset;
+use crate::model::{zoo, Weights};
+use crate::runtime::{Manifest, ModelEngine};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::timer::{fmt_duration, Stopwatch};
+use anyhow::Result;
+
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub steps: usize,
+    pub wall_s: f64,
+}
+
+pub struct TrainOpts {
+    pub steps: usize,
+    pub lr: f32,
+    /// linear warmup steps
+    pub warmup: usize,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl TrainOpts {
+    pub fn for_model(model: &str) -> TrainOpts {
+        let (steps, lr) = zoo::train_budget(model);
+        TrainOpts { steps, lr, warmup: 20, log_every: 20, seed: 42 }
+    }
+}
+
+/// Train from scratch; returns final weights + loss curve.
+pub fn train(
+    manifest: &Manifest,
+    model: &str,
+    dataset: &Dataset,
+    opts: &TrainOpts,
+) -> Result<(Weights, TrainReport)> {
+    let engine = ModelEngine::new(manifest, model)?;
+    let spec = engine.spec.clone();
+    let init = Weights::init(&spec, opts.seed);
+    let mut sw = Stopwatch::start();
+    let mut state = engine.init_train_state(&init.packed)?;
+    sw.split("init");
+
+    let mut losses = Vec::with_capacity(opts.steps);
+    for step in 0..opts.steps {
+        let batch = dataset.train_batch(step);
+        let lr = schedule(opts, step);
+        let (loss, new_state) =
+            engine.train_step(&state, &batch.tokens, &batch.targets, (step + 1) as f32, lr)?;
+        state = new_state;
+        losses.push(loss);
+        if step % opts.log_every == 0 || step + 1 == opts.steps {
+            crate::info!(
+                "train {model} step {step}/{} loss {loss:.4} lr {lr:.2e} ({})",
+                opts.steps,
+                fmt_duration(sw.total())
+            );
+        }
+    }
+    sw.split("steps");
+
+    let packed = engine.params_from_state(&state)?;
+    let mut weights = Weights::zeros(&spec);
+    weights.packed = Tensor::new(vec![packed.numel()], packed.data);
+    let report = TrainReport {
+        losses,
+        steps: opts.steps,
+        wall_s: sw.total().as_secs_f64(),
+    };
+    Ok((weights, report))
+}
+
+fn schedule(opts: &TrainOpts, step: usize) -> f32 {
+    if step < opts.warmup {
+        opts.lr * (step + 1) as f32 / opts.warmup as f32
+    } else {
+        // cosine decay to 10%
+        let p = (step - opts.warmup) as f32 / (opts.steps - opts.warmup).max(1) as f32;
+        let min = 0.1 * opts.lr;
+        min + 0.5 * (opts.lr - min) * (1.0 + (std::f32::consts::PI * p).cos())
+    }
+}
+
+/// Load the cached checkpoint or train + persist it (plus the loss curve
+/// as JSON next to it, for EXPERIMENTS.md).
+pub fn ensure_trained(
+    manifest: &Manifest,
+    model: &str,
+    dataset: &Dataset,
+) -> Result<Weights> {
+    let spec = manifest.model(model)?;
+    let path = zoo::checkpoint_path(model);
+    if path.exists() {
+        match Weights::load(spec, &path) {
+            Ok(w) => {
+                crate::debug!("loaded checkpoint {}", path.display());
+                return Ok(w);
+            }
+            Err(e) => crate::warn!("checkpoint {} unusable ({e}); retraining", path.display()),
+        }
+    }
+    let opts = TrainOpts::for_model(model);
+    crate::info!("no checkpoint for {model}; training {} steps", opts.steps);
+    let (weights, report) = train(manifest, model, dataset, &opts)?;
+    weights.save(&path)?;
+    let curve = Json::obj(vec![
+        ("model", Json::Str(model.into())),
+        ("steps", Json::Num(report.steps as f64)),
+        ("wall_s", Json::Num(report.wall_s)),
+        ("losses", Json::arr_f64(&report.losses.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+    ]);
+    std::fs::write(
+        path.with_extension("losses.json"),
+        curve.pretty(),
+    )?;
+    Ok(weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_then_decay() {
+        let opts = TrainOpts { steps: 100, lr: 1e-3, warmup: 10, log_every: 1000, seed: 0 };
+        assert!(schedule(&opts, 0) < 2e-4);
+        assert!((schedule(&opts, 9) - 1e-3).abs() < 1e-9);
+        assert!(schedule(&opts, 99) < 2.1e-4);
+        // monotone decay after warmup
+        let mut prev = schedule(&opts, 10);
+        for s in 11..100 {
+            let cur = schedule(&opts, s);
+            assert!(cur <= prev + 1e-12);
+            prev = cur;
+        }
+    }
+}

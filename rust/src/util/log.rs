@@ -1,0 +1,71 @@
+//! Tiny leveled logger (the `log` crate facade is vendored but a full
+//! env_logger is not; this is all we need). Level comes from `FASP_LOG`
+//! (error|warn|info|debug, default info).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, PartialEq, PartialOrd)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+
+pub fn level() -> Level {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v == 255 {
+        let lv = match std::env::var("FASP_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            _ => Level::Info,
+        };
+        LEVEL.store(lv as u8, Ordering::Relaxed);
+        lv
+    } else {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            3 => Level::Debug,
+            _ => Level::Info,
+        }
+    }
+}
+
+pub fn set_level(lv: Level) {
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(lv: Level) -> bool {
+    (lv as u8) <= (level() as u8)
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Info) {
+            eprintln!("[info] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Debug) {
+            eprintln!("[debug] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Warn) {
+            eprintln!("[warn] {}", format!($($arg)*));
+        }
+    };
+}

@@ -1,0 +1,35 @@
+//! Cross-cutting substrates: JSON, PRNG, timing, logging, property
+//! testing. These exist because the offline vendor set has no
+//! serde/rand/criterion/proptest — each is a small, tested, in-repo
+//! equivalent (see DESIGN.md §3).
+
+pub mod json;
+pub mod rng;
+pub mod timer;
+pub mod quickcheck;
+pub mod log;
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (0.0 for n < 2).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Argsort descending by key.
+pub fn argsort_desc(keys: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..keys.len()).collect();
+    idx.sort_by(|&a, &b| keys[b].partial_cmp(&keys[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}

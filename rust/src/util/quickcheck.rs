@@ -1,0 +1,97 @@
+//! Mini property-testing framework (proptest is not in the offline vendor
+//! set): random case generation with linear shrinking for sized inputs.
+//!
+//! Usage:
+//! ```no_run
+//! use fasp::util::quickcheck::{Gen, forall};
+//! forall(100, 42, |g: &mut Gen| {
+//!     let xs = g.vec_f32(1..64, -10.0..10.0);
+//!     let sum: f32 = xs.iter().sum();
+//!     let sum2: f32 = xs.iter().rev().sum();
+//!     ((sum - sum2).abs() < 1e-3, format!("sum mismatch {sum} {sum2}"))
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::ops::Range;
+
+/// Case generator: a seeded RNG with convenience draws that record the
+/// "size" choices so failures can be replayed/shrunk.
+pub struct Gen {
+    pub rng: Rng,
+    /// current size multiplier in (0, 1]; shrink passes lower it.
+    pub scale: f64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        let span = (r.end - r.start).max(1);
+        let scaled = ((span as f64 * self.scale).ceil() as usize).max(1);
+        r.start + self.rng.below(scaled.min(span))
+    }
+
+    pub fn f32_in(&mut self, r: Range<f32>) -> f32 {
+        r.start + self.rng.f32() * (r.end - r.start)
+    }
+
+    pub fn vec_f32(&mut self, len: Range<usize>, range: Range<f32>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(range.clone())).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run `cases` random cases of `prop`. On failure, retries the same seed
+/// at smaller scales (shrink-lite) and panics with the smallest failing
+/// report.
+pub fn forall<F>(cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> (bool, String),
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64 * 0x9E37);
+        let mut g = Gen { rng: Rng::new(case_seed), scale: 1.0 };
+        let (ok, msg) = prop(&mut g);
+        if ok {
+            continue;
+        }
+        // shrink: replay the same stream with smaller size scales
+        let mut smallest = (1.0f64, msg);
+        for &scale in &[0.5, 0.25, 0.1, 0.05] {
+            let mut g = Gen { rng: Rng::new(case_seed), scale };
+            let (ok, msg) = prop(&mut g);
+            if !ok {
+                smallest = (scale, msg);
+            }
+        }
+        panic!(
+            "property failed (case {case}, seed {case_seed}, scale {}): {}",
+            smallest.0, smallest.1
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(50, 1, |g| {
+            let xs = g.vec_f32(1..32, -1.0..1.0);
+            (xs.iter().all(|x| x.abs() <= 1.0), "bounds".into())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn catches_violation() {
+        forall(50, 2, |g| {
+            let n = g.usize_in(1..100);
+            (n < 50, format!("n={n}"))
+        });
+    }
+}

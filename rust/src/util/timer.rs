@@ -1,0 +1,83 @@
+//! Wall-clock timing helpers used by the pruning pipeline phase breakdown
+//! (Table 4) and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch with named splits.
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+    pub splits: Vec<(String, Duration)>,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, last: now, splits: Vec::new() }
+    }
+
+    /// Record time since the previous split under `name`.
+    pub fn split(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        // accumulate into an existing split of the same name
+        if let Some(e) = self.splits.iter_mut().find(|(n, _)| n == name) {
+            e.1 += d;
+        } else {
+            self.splits.push((name.to_string(), d));
+        }
+        d
+    }
+
+    pub fn total(&self) -> Duration {
+        Instant::now() - self.start
+    }
+
+    /// "phase1 1.2s | phase2 300ms | total 1.5s"
+    pub fn report(&self) -> String {
+        let mut parts: Vec<String> = self
+            .splits
+            .iter()
+            .map(|(n, d)| format!("{} {}", n, fmt_duration(*d)))
+            .collect();
+        parts.push(format!("total {}", fmt_duration(self.total())));
+        parts.join(" | ")
+    }
+}
+
+/// Human-friendly duration.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 60.0 {
+        format!("{:.0}m{:02.0}s", (s / 60.0).floor(), s % 60.0)
+    } else if s >= 1.0 {
+        format!("{:.2}s", s)
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_accumulate() {
+        let mut sw = Stopwatch::start();
+        sw.split("a");
+        sw.split("b");
+        sw.split("a");
+        assert_eq!(sw.splits.len(), 2);
+        assert!(sw.report().contains("total"));
+    }
+
+    #[test]
+    fn fmt() {
+        assert_eq!(fmt_duration(Duration::from_secs(90)), "1m30s");
+        assert_eq!(fmt_duration(Duration::from_millis(1500)), "1.50s");
+        assert!(fmt_duration(Duration::from_micros(12)).ends_with("µs"));
+    }
+}

@@ -1,0 +1,292 @@
+//! Property-based tests over the pruning-math invariants, via the
+//! in-repo quickcheck substrate (no artifacts needed).
+
+use fasp::linalg::cholesky::cholesky;
+use fasp::model::mask::{kept_indices, pruned_indices};
+use fasp::prune::metric::{lowest_k, wanda_scores_host};
+use fasp::prune::restore::{recon_objective, restore_columns};
+use fasp::prune::structure::{plan, rope_pairs, units};
+use fasp::runtime::manifest::ModelSpec;
+use fasp::tensor::matmul::{matmul, matmul_bt};
+use fasp::tensor::ops::{col_abs_sum, gather_cols, scatter_cols, zero_cols};
+use fasp::tensor::Tensor;
+use fasp::util::quickcheck::{forall, Gen};
+
+fn rand_tensor(g: &mut Gen, r: usize, c: usize) -> Tensor {
+    Tensor::new(
+        vec![r, c],
+        (0..r * c).map(|_| g.f32_in(-2.0..2.0)).collect(),
+    )
+}
+
+/// Restoration optimality: for random (W, X, mask), the closed form never
+/// loses to plain zeroing on the least-squares objective.
+#[test]
+fn prop_restore_at_least_as_good_as_zeroing() {
+    forall(40, 101, |g| {
+        let m = g.usize_in(1..10);
+        let n = g.usize_in(2..24);
+        let s = n + g.usize_in(1..40);
+        let w = rand_tensor(g, m, n);
+        let x = rand_tensor(g, s, n);
+        let gram = matmul(&x.t(), &x);
+        let mut kept = vec![true; n];
+        let n_prune = g.usize_in(1..n.max(2));
+        for _ in 0..n_prune {
+            let j = g.usize_in(0..n);
+            kept[j] = false;
+        }
+        if kept.iter().all(|&k| !k) {
+            kept[0] = true;
+        }
+        let restored = match restore_columns(&w, &gram, &kept, 1e-6) {
+            Ok(r) => r,
+            Err(e) => return (false, format!("restore failed: {e}")),
+        };
+        let mut zeroed = w.clone();
+        zero_cols(&mut zeroed, &pruned_indices(&kept));
+        let o_r = recon_objective(&restored, &w, &gram);
+        let o_z = recon_objective(&zeroed, &w, &gram);
+        (
+            o_r <= o_z + 1e-4 * o_z.abs().max(1.0),
+            format!("restored {o_r} worse than zeroed {o_z} (m={m},n={n})"),
+        )
+    });
+}
+
+/// Restored pruned columns are exactly zero; kept support is preserved.
+#[test]
+fn prop_restore_support() {
+    forall(40, 202, |g| {
+        let m = g.usize_in(1..8);
+        let n = g.usize_in(2..20);
+        let s = n + 8;
+        let w = rand_tensor(g, m, n);
+        let x = rand_tensor(g, s, n);
+        let gram = matmul(&x.t(), &x);
+        let kept: Vec<bool> = (0..n).map(|_| g.bool()).collect();
+        let kept = if kept.iter().all(|&k| !k) {
+            let mut k2 = kept;
+            k2[0] = true;
+            k2
+        } else {
+            kept
+        };
+        let restored = restore_columns(&w, &gram, &kept, 1e-4).unwrap();
+        for i in 0..m {
+            for j in 0..n {
+                if !kept[j] && restored.at2(i, j) != 0.0 {
+                    return (false, format!("support violated at ({i},{j})"));
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+/// Wanda scores scale linearly with the activation norms.
+#[test]
+fn prop_wanda_linear_in_xnorm() {
+    forall(60, 303, |g| {
+        let m = g.usize_in(1..12);
+        let n = g.usize_in(1..16);
+        let w = rand_tensor(g, m, n);
+        let xn: Vec<f32> = (0..n).map(|_| g.f32_in(0.0..3.0)).collect();
+        let c = g.f32_in(0.1..5.0);
+        let s1 = wanda_scores_host(&w, &xn);
+        let xn2: Vec<f32> = xn.iter().map(|v| v * c).collect();
+        let s2 = wanda_scores_host(&w, &xn2);
+        for j in 0..n {
+            if (s2[j] - c * s1[j]).abs() > 1e-3 * s1[j].abs().max(1.0) {
+                return (false, format!("nonlinear at {j}: {} vs {}", s2[j], c * s1[j]));
+            }
+        }
+        (true, String::new())
+    });
+}
+
+/// lowest_k actually returns the k smallest, and is a subset of 0..n.
+#[test]
+fn prop_lowest_k_correct() {
+    forall(80, 404, |g| {
+        let scores = g.vec_f32(1..64, -10.0..10.0);
+        let k = g.usize_in(0..scores.len() + 1);
+        let picked = lowest_k(&scores, k);
+        if picked.len() != k.min(scores.len()) {
+            return (false, "wrong count".into());
+        }
+        let max_picked = picked
+            .iter()
+            .map(|&i| scores[i])
+            .fold(f32::NEG_INFINITY, f32::max);
+        let unpicked_min = (0..scores.len())
+            .filter(|i| !picked.contains(i))
+            .map(|i| scores[i])
+            .fold(f32::INFINITY, f32::min);
+        (
+            picked.is_empty() || max_picked <= unpicked_min + 1e-6,
+            format!("picked max {max_picked} > unpicked min {unpicked_min}"),
+        )
+    });
+}
+
+/// gather→scatter of columns is the identity on the gathered set.
+#[test]
+fn prop_gather_scatter_roundtrip() {
+    forall(60, 505, |g| {
+        let r = g.usize_in(1..10);
+        let c = g.usize_in(1..16);
+        let t = rand_tensor(g, r, c);
+        let cols: Vec<usize> = (0..c).filter(|_| g.bool()).collect();
+        if cols.is_empty() {
+            return (true, String::new());
+        }
+        let gathered = gather_cols(&t, &cols);
+        let mut out = Tensor::zeros(&[r, c]);
+        scatter_cols(&mut out, &cols, &gathered);
+        for i in 0..r {
+            for (ci, &j) in cols.iter().enumerate() {
+                if out.at2(i, j) != gathered.at2(i, ci) {
+                    return (false, format!("mismatch at ({i},{j})"));
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+/// matmul_bt(A, B) == matmul(A, Bᵀ) for random shapes.
+#[test]
+fn prop_matmul_bt_equiv() {
+    forall(40, 606, |g| {
+        let m = g.usize_in(1..12);
+        let k = g.usize_in(1..12);
+        let n = g.usize_in(1..12);
+        let a = rand_tensor(g, m, k);
+        let b = rand_tensor(g, n, k);
+        let c1 = matmul_bt(&a, &b);
+        let c2 = matmul(&a, &b.t());
+        let d = c1.max_abs_diff(&c2);
+        (d < 1e-3, format!("diff {d} (m={m},k={k},n={n})"))
+    });
+}
+
+/// Cholesky solve residual ‖Ax − b‖ is small for random SPD systems.
+#[test]
+fn prop_cholesky_residual() {
+    forall(40, 707, |g| {
+        let n = g.usize_in(1..24);
+        let s = n + 4;
+        let x = rand_tensor(g, s, n);
+        let gram = matmul(&x.t(), &x);
+        let mut a: Vec<f64> = gram.data.iter().map(|&v| v as f64).collect();
+        for i in 0..n {
+            a[i * n + i] += 0.5;
+        }
+        let b: Vec<f64> = (0..n).map(|_| g.f32_in(-3.0..3.0) as f64).collect();
+        let f = match cholesky(&a, n) {
+            Ok(f) => f,
+            Err(e) => return (false, format!("cholesky failed: {e}")),
+        };
+        let mut sol = b.clone();
+        f.solve_in_place(&mut sol);
+        let mut worst = 0.0f64;
+        for i in 0..n {
+            let mut ax = 0.0;
+            for j in 0..n {
+                ax += a[i * n + j] * sol[j];
+            }
+            worst = worst.max((ax - b[i]).abs());
+        }
+        (worst < 1e-6, format!("residual {worst} at n={n}"))
+    });
+}
+
+/// Structure plan: achieved fraction equals target for any sparsity/fam.
+#[test]
+fn prop_plan_exact() {
+    forall(60, 808, |g| {
+        let d = 8 * g.usize_in(1..32);
+        let h = 4;
+        let f = d * g.usize_in(2..5);
+        let spec = ModelSpec {
+            name: "p".into(),
+            family: if g.bool() { "opt" } else { "llama" }.into(),
+            d_model: d,
+            n_heads: h,
+            n_layers: g.usize_in(1..8),
+            d_ff: f,
+            vocab: 64,
+            seq: 16,
+            batch: 2,
+            params: vec![],
+        };
+        let target = g.f32_in(0.01..0.6) as f64;
+        let p = plan(&spec, target, g.bool());
+        let (ffn_c, ov_c, qk_c) = fasp::prune::structure::unit_costs(&spec);
+        let removed = (p.ffn_ratio * f as f64 * ffn_c as f64
+            + p.ov_ratio * d as f64 * ov_c as f64
+            + p.qk_ratio * d as f64 * qk_c as f64)
+            * spec.n_layers as f64;
+        let frac = removed / fasp::model::mask::prunable_params(&spec) as f64;
+        // ratios clamp at 1.0; below the clamp the plan must be exact
+        let exact = p.ffn_ratio < 1.0 - 1e-12;
+        (
+            !exact || (frac - target).abs() < 1e-9,
+            format!("target {target} achieved {frac}"),
+        )
+    });
+}
+
+/// RoPE pairs partition [0, d) for any valid (d, h) with even head dim.
+#[test]
+fn prop_rope_pairs_partition() {
+    forall(60, 909, |g| {
+        let h = g.usize_in(1..8);
+        let dh = 2 * g.usize_in(1..16);
+        let d = h * dh;
+        let pairs = rope_pairs(d, h);
+        let mut seen = vec![false; d];
+        for (a, b) in &pairs {
+            if *a >= d || *b >= d || seen[*a] || seen[*b] {
+                return (false, format!("bad pair ({a},{b}) d={d}"));
+            }
+            seen[*a] = true;
+            seen[*b] = true;
+        }
+        (seen.iter().all(|&s| s), format!("not a partition d={d} h={h}"))
+    });
+}
+
+/// kept/pruned indices always partition the mask.
+#[test]
+fn prop_mask_partition() {
+    forall(80, 1010, |g| {
+        let n = g.usize_in(1..128);
+        let mask: Vec<bool> = (0..n).map(|_| g.bool()).collect();
+        let k = kept_indices(&mask);
+        let p = pruned_indices(&mask);
+        if k.len() + p.len() != n {
+            return (false, "not a partition".into());
+        }
+        for &i in &k {
+            if !mask[i] {
+                return (false, "kept contains pruned".into());
+            }
+        }
+        (true, String::new())
+    });
+}
+
+/// units() never exceeds n and is monotone in the ratio.
+#[test]
+fn prop_units_monotone() {
+    forall(80, 1111, |g| {
+        let n = g.usize_in(1..2048);
+        let r1 = g.f32_in(0.0..1.0) as f64;
+        let r2 = (r1 + g.f32_in(0.0..0.5) as f64).min(1.0);
+        let u1 = units(n, r1);
+        let u2 = units(n, r2);
+        (u1 <= u2 && u2 <= n, format!("n={n} r1={r1} r2={r2}"))
+    });
+}

@@ -1,0 +1,73 @@
+//! End-to-end smoke at test scale: train → prune → eval → zero-shot on
+//! the tiny model through the full three-layer stack, asserting the
+//! paper's qualitative ordering where it is robust. Requires
+//! `make artifacts`. (The full-size driver is
+//! `examples/train_prune_eval.rs`.)
+
+use fasp::data::tasks::{TaskKind, TaskSuite};
+use fasp::data::{Corpus, Dataset};
+use fasp::eval::{eval_suite, perplexity};
+use fasp::prune::{prune, Method, PruneOpts};
+use fasp::runtime::{Manifest, ModelEngine};
+use fasp::train::{train, TrainOpts};
+
+#[test]
+fn train_prune_eval_zero_shot_pipeline() {
+    let model = "llama_tiny";
+    let manifest = Manifest::load(&fasp::artifacts_dir()).expect("make artifacts");
+    let engine = ModelEngine::new(&manifest, model).unwrap();
+    let spec = engine.spec.clone();
+
+    // ---- train briefly (enough to beat the random-model baseline) -----
+    let opts = TrainOpts { steps: 120, lr: 8e-3, warmup: 10, log_every: 1000, seed: 1 };
+    let corpus = Corpus::new(spec.vocab, 42 ^ spec.vocab as u64);
+    let dataset = Dataset::new(corpus, spec.batch, spec.seq, opts.steps + 8);
+    let (weights, report) = train(&manifest, model, &dataset, &opts).unwrap();
+    let first = report.losses.first().copied().unwrap();
+    let last = report.losses.last().copied().unwrap();
+    assert!(last < first - 0.8, "training too weak: {first} → {last}");
+
+    // ---- perplexity sanity: trained ≪ random-token ppl -----------------
+    let eval_b = dataset.valid_batches(4);
+    let dense_ppl = perplexity(&engine, &weights, &eval_b).unwrap();
+    assert!(
+        dense_ppl < spec.vocab as f64 * 0.5,
+        "dense ppl {dense_ppl} vs vocab {}",
+        spec.vocab
+    );
+
+    // ---- prune 20% with FASP and magnitude -----------------------------
+    let mut fasp_opts = PruneOpts::new(Method::Fasp, 0.20);
+    fasp_opts.calib_batches = 3;
+    let (w_fasp, mask, rep) = prune(&engine, &weights, &dataset, &fasp_opts).unwrap();
+    assert!((rep.achieved_sparsity - 0.20).abs() < 0.04);
+    mask.validate(&spec).unwrap();
+
+    let mut mag_opts = PruneOpts::new(Method::Magnitude, 0.20);
+    mag_opts.calib_batches = 3;
+    let (w_mag, _, _) = prune(&engine, &weights, &dataset, &mag_opts).unwrap();
+
+    let ppl_fasp = perplexity(&engine, &w_fasp, &eval_b).unwrap();
+    let ppl_mag = perplexity(&engine, &w_mag, &eval_b).unwrap();
+    assert!(ppl_fasp.is_finite() && ppl_mag.is_finite());
+    // the paper's core ordering: restoration+metric beats magnitude
+    assert!(
+        ppl_fasp <= ppl_mag * 1.02,
+        "FASP ({ppl_fasp:.3}) worse than magnitude ({ppl_mag:.3})"
+    );
+    // pruning shouldn't destroy the model at 20%
+    assert!(
+        ppl_fasp < dense_ppl * 3.0,
+        "FASP 20% destroyed the model: {dense_ppl:.2} → {ppl_fasp:.2}"
+    );
+
+    // ---- zero-shot: trained model beats chance on the easy suite -------
+    let suite = TaskSuite::generate(&dataset.corpus, TaskKind::ArcES, 60, 7);
+    let dense_acc = eval_suite(&engine, &weights, &suite).unwrap().accuracy;
+    assert!(
+        dense_acc > 35.0,
+        "trained model near chance on ARC-e-s: {dense_acc:.1}%"
+    );
+    let fasp_acc = eval_suite(&engine, &w_fasp, &suite).unwrap().accuracy;
+    assert!(fasp_acc > 25.0, "pruned model collapsed: {fasp_acc:.1}%");
+}

@@ -1,0 +1,155 @@
+//! Failure injection: the system must fail loudly and legibly, never with
+//! garbage numerics — corrupt manifests, truncated checkpoints, missing
+//! artifacts, impossible pruning requests.
+
+use fasp::model::Weights;
+use fasp::runtime::{Manifest, ModelEngine};
+use fasp::tensor::io::TensorFile;
+use fasp::tensor::Tensor;
+use std::io::Write;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("fasp_fail_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_is_a_clear_error() {
+    let d = tmpdir("nomanifest");
+    let err = Manifest::load(&d).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn corrupt_manifest_json_rejected() {
+    let d = tmpdir("badjson");
+    std::fs::write(d.join("manifest.json"), "{ not json !!").unwrap();
+    assert!(Manifest::load(&d).is_err());
+}
+
+#[test]
+fn manifest_missing_fields_rejected() {
+    let d = tmpdir("missingfields");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"models": {"x": {"family": "opt"}}, "artifacts": {}}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&d).is_err());
+}
+
+#[test]
+fn unknown_model_and_artifact_errors() {
+    let m = Manifest::load(&fasp::artifacts_dir()).expect("make artifacts");
+    assert!(m.model("gpt5_huge").is_err());
+    assert!(m.artifact("nonexistent_entry").is_err());
+    assert!(ModelEngine::new(&m, "gpt5_huge").is_err());
+}
+
+#[test]
+fn artifact_with_garbage_hlo_fails_at_load() {
+    let m = Manifest::load(&fasp::artifacts_dir()).expect("make artifacts");
+    // copy the manifest dir entry but point at a garbage file
+    let d = tmpdir("badhlo");
+    let manifest_text =
+        std::fs::read_to_string(fasp::artifacts_dir().join("manifest.json")).unwrap();
+    std::fs::write(d.join("manifest.json"), manifest_text).unwrap();
+    // write garbage for one artifact the test will load
+    let spec = m.artifact("wanda_metric_64x64").unwrap();
+    let mut f = std::fs::File::create(d.join(&spec.file)).unwrap();
+    writeln!(f, "this is not HLO").unwrap();
+    let m2 = Manifest::load(&d).unwrap();
+    let res = fasp::runtime::Artifact::load(&m2, "wanda_metric_64x64");
+    assert!(res.is_err(), "garbage HLO must not load");
+}
+
+#[test]
+fn truncated_checkpoint_rejected() {
+    let m = Manifest::load(&fasp::artifacts_dir()).expect("make artifacts");
+    let spec = m.model("opt_tiny").unwrap();
+    let w = Weights::init(spec, 1);
+    let path = std::env::temp_dir().join("fasp_fail_trunc.ftns");
+    w.save(&path).unwrap();
+    // truncate the file body
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(Weights::load(spec, &path).is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn checkpoint_for_wrong_model_rejected() {
+    let m = Manifest::load(&fasp::artifacts_dir()).expect("make artifacts");
+    let tiny = m.model("opt_tiny").unwrap();
+    let small = m.model("opt_small").unwrap();
+    let w = Weights::init(tiny, 1);
+    let path = std::env::temp_dir().join("fasp_fail_wrongmodel.ftns");
+    w.save(&path).unwrap();
+    let err = match Weights::load(small, &path) {
+        Err(e) => e,
+        Ok(_) => panic!("wrong-model checkpoint accepted"),
+    };
+    assert!(format!("{err}").contains("checkpoint size"));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn tensorfile_wrong_magic_rejected() {
+    let path = std::env::temp_dir().join("fasp_fail_magic.ftns");
+    std::fs::write(&path, b"XXXX\x01\x00\x00\x00").unwrap();
+    assert!(TensorFile::load(&path).is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn restoration_rejects_degenerate_gram() {
+    // an indefinite "Gram" (can arise from corrupted stats) must error,
+    // not return NaNs
+    let w = Tensor::new(vec![1, 2], vec![1.0, 2.0]);
+    let g = Tensor::new(vec![2, 2], vec![1.0, 2.0, 2.0, 1.0]); // indefinite
+    let kept = vec![true, false];
+    // delta too small to fix indefiniteness in the kept block? kept block
+    // here is [1.0] which IS pd; craft a negative-diagonal case instead:
+    let g_bad = Tensor::new(vec![2, 2], vec![-1.0, 0.0, 0.0, -1.0]);
+    let res = fasp::prune::restore::restore_columns(&w, &g_bad, &kept, 1e-6);
+    assert!(res.is_err(), "negative-definite gram accepted");
+    let _ = g;
+}
+
+#[test]
+fn sparsity_one_empties_groups_but_stays_finite() {
+    let m = Manifest::load(&fasp::artifacts_dir()).expect("make artifacts");
+    let engine = ModelEngine::new(&m, "llama_tiny").unwrap();
+    let spec = engine.spec.clone();
+    let w = Weights::init(&spec, 3);
+    let ds = fasp::data::Dataset::new(
+        fasp::data::Corpus::new(spec.vocab, 1),
+        spec.batch,
+        spec.seq,
+        2,
+    );
+    let mut opts = fasp::prune::PruneOpts::new(fasp::prune::Method::Fasp, 0.99);
+    opts.calib_batches = 1;
+    // must not panic; ratios clamp at 1.0
+    let (pw, _, rep) = fasp::prune::prune(&engine, &w, &ds, &opts).unwrap();
+    assert!(rep.achieved_sparsity <= 1.0);
+    let out = engine
+        .fwd_loss(&pw.packed, &ds.train_batch(0).tokens, &ds.train_batch(0).targets)
+        .unwrap();
+    assert!(out.mean_nll.is_finite());
+}
+
+#[test]
+fn cli_rejects_unknown_method_and_command() {
+    use fasp::cli::args::Args;
+    let a = Args::parse(
+        "prune --model x --method bogus"
+            .split_whitespace()
+            .map(str::to_string),
+    )
+    .unwrap();
+    assert!(fasp::prune::Method::parse(a.get("method").unwrap()).is_none());
+}

@@ -1,0 +1,177 @@
+//! Integration: the full pruning pipeline (every method) on trained-ish
+//! tiny models — the paper's qualitative claims at small scale:
+//! restoration helps, coupling helps, Q/K pruning hurts, sparsity
+//! accounting is honest. Requires `make artifacts`.
+
+use fasp::data::{Corpus, Dataset};
+use fasp::eval::perplexity;
+use fasp::model::Weights;
+use fasp::prune::{self, Method, PruneOpts};
+use fasp::runtime::{Manifest, ModelEngine};
+
+fn manifest() -> Manifest {
+    Manifest::load(&fasp::artifacts_dir()).expect("run `make artifacts` first")
+}
+
+/// Train a quick llama_tiny once per process for the pruning tests.
+fn quick_trained(m: &Manifest, model: &str, steps: usize) -> (Weights, Dataset) {
+    let engine = ModelEngine::new(m, model).unwrap();
+    let spec = engine.spec.clone();
+    let ds = Dataset::new(Corpus::new(spec.vocab, 13), spec.batch, spec.seq, steps + 4);
+    let init = Weights::init(&spec, 4242);
+    let mut state = engine.init_train_state(&init.packed).unwrap();
+    for step in 0..steps {
+        let b = ds.train_batch(step);
+        let (_, ns) = engine
+            .train_step(&state, &b.tokens, &b.targets, (step + 1) as f32, 8e-3)
+            .unwrap();
+        state = ns;
+    }
+    let packed = engine.params_from_state(&state).unwrap();
+    let mut w = Weights::zeros(&spec);
+    w.packed = packed;
+    (w, ds)
+}
+
+fn ppl(m: &Manifest, model: &str, w: &Weights, ds: &Dataset) -> f64 {
+    let engine = ModelEngine::new(m, model).unwrap();
+    perplexity(&engine, w, &ds.valid_batches(4)).unwrap()
+}
+
+#[test]
+fn every_method_runs_and_reports_sparsity() {
+    let m = manifest();
+    let model = "llama_tiny";
+    let (w, ds) = quick_trained(&m, model, 60);
+    let engine = ModelEngine::new(&m, model).unwrap();
+    let dense_ppl = ppl(&m, model, &w, &ds);
+
+    for method in Method::all() {
+        let mut opts = PruneOpts::new(method, 0.20);
+        opts.calib_batches = 2;
+        opts.admm_iters = 12;
+        let (pruned, mask, report) =
+            prune::prune(&engine, &w, &ds, &opts).unwrap_or_else(|e| {
+                panic!("{method:?} failed: {e:#}")
+            });
+        // sparsity within tolerance of target (floor rounding loses a bit)
+        assert!(
+            (report.achieved_sparsity - 0.20).abs() < 0.05,
+            "{method:?}: achieved {:.3}",
+            report.achieved_sparsity
+        );
+        assert!(report.total_s > 0.0);
+        mask.validate(&engine.spec).unwrap();
+        // pruned model still evaluates to something finite & sane
+        let p = ppl(&m, model, &pruned, &ds);
+        assert!(p.is_finite() && p > 1.0, "{method:?} ppl {p}");
+        assert!(
+            p < dense_ppl * 50.0,
+            "{method:?} destroyed the model: dense {dense_ppl:.2} → {p:.2}"
+        );
+        // weights actually changed
+        assert!(pruned.packed.max_abs_diff(&w.packed) > 1e-6, "{method:?}");
+    }
+}
+
+#[test]
+fn restoration_improves_over_plain_zeroing() {
+    let m = manifest();
+    let model = "llama_tiny";
+    let (w, ds) = quick_trained(&m, model, 80);
+    let engine = ModelEngine::new(&m, model).unwrap();
+
+    let mut with = PruneOpts::new(Method::Fasp, 0.30);
+    with.calib_batches = 3;
+    let mut without = with.clone();
+    without.restore = false;
+
+    let (wr, _, _) = prune::prune(&engine, &w, &ds, &with).unwrap();
+    let (wz, _, _) = prune::prune(&engine, &w, &ds, &without).unwrap();
+    let ppl_restored = ppl(&m, model, &wr, &ds);
+    let ppl_zeroed = ppl(&m, model, &wz, &ds);
+    assert!(
+        ppl_restored < ppl_zeroed + 1e-9,
+        "restoration did not help: {ppl_restored:.3} vs {ppl_zeroed:.3}"
+    );
+}
+
+#[test]
+fn qk_pruning_hurts_more_than_default() {
+    let m = manifest();
+    let model = "opt_tiny";
+    let (w, ds) = quick_trained(&m, model, 80);
+    let engine = ModelEngine::new(&m, model).unwrap();
+
+    let mut default = PruneOpts::new(Method::Fasp, 0.30);
+    default.calib_batches = 3;
+    let mut qk = default.clone();
+    qk.prune_qk = true;
+
+    let (wd, _, rd) = prune::prune(&engine, &w, &ds, &default).unwrap();
+    let (wq, _, rq) = prune::prune(&engine, &w, &ds, &qk).unwrap();
+    // equal global sparsity by construction
+    assert!((rd.achieved_sparsity - rq.achieved_sparsity).abs() < 0.03);
+    let ppl_default = ppl(&m, model, &wd, &ds);
+    let ppl_qk = ppl(&m, model, &wq, &ds);
+    assert!(
+        ppl_default <= ppl_qk * 1.05,
+        "Q/K pruning unexpectedly better: default {ppl_default:.3} vs qk {ppl_qk:.3}"
+    );
+}
+
+#[test]
+fn deeper_sparsity_monotonically_degrades() {
+    let m = manifest();
+    let model = "llama_tiny";
+    let (w, ds) = quick_trained(&m, model, 80);
+    let engine = ModelEngine::new(&m, model).unwrap();
+    let mut prev = ppl(&m, model, &w, &ds);
+    for &s in &[0.1, 0.3, 0.5] {
+        let mut opts = PruneOpts::new(Method::Fasp, s);
+        opts.calib_batches = 2;
+        let (pw, _, _) = prune::prune(&engine, &w, &ds, &opts).unwrap();
+        let p = ppl(&m, model, &pw, &ds);
+        // allow small non-monotonicity at low sparsity (restoration noise)
+        assert!(
+            p > prev * 0.9,
+            "ppl dropped hard with more sparsity: {prev:.3} → {p:.3} at s={s}"
+        );
+        prev = p;
+    }
+}
+
+#[test]
+fn sequential_mode_runs() {
+    let m = manifest();
+    let model = "llama_tiny";
+    let (w, ds) = quick_trained(&m, model, 40);
+    let engine = ModelEngine::new(&m, model).unwrap();
+    let mut opts = PruneOpts::new(Method::Fasp, 0.2);
+    opts.calib_batches = 2;
+    opts.sequential = true;
+    let (pw, _, report) = prune::prune(&engine, &w, &ds, &opts).unwrap();
+    assert!(ppl(&m, model, &pw, &ds).is_finite());
+    // sequential re-captures per layer → capture phase dominates
+    assert!(report.phase("capture") > 0.0);
+}
+
+#[test]
+fn flap_compensates_bias() {
+    let m = manifest();
+    let model = "llama_tiny";
+    let (w, ds) = quick_trained(&m, model, 60);
+    let engine = ModelEngine::new(&m, model).unwrap();
+    let mut opts = PruneOpts::new(Method::Flap, 0.3);
+    opts.calib_batches = 2;
+    let (pw, _, _) = prune::prune(&engine, &w, &ds, &opts).unwrap();
+    // the compensation biases must now be non-zero somewhere
+    let mut nonzero = false;
+    for l in 0..engine.spec.n_layers {
+        let b = pw.get_l(l, "b_down").unwrap();
+        if b.data.iter().any(|&x| x != 0.0) {
+            nonzero = true;
+        }
+    }
+    assert!(nonzero, "FLAP did not write compensation biases");
+}

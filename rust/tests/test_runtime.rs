@@ -1,0 +1,206 @@
+//! Integration: the AOT HLO artifacts executed through PJRT must agree
+//! with the independent host-side reference implementation — the
+//! spike-level guarantee everything else rests on. Requires
+//! `make artifacts`.
+
+use fasp::data::{Corpus, Dataset};
+use fasp::model::{host, Weights};
+use fasp::runtime::{Manifest, ModelEngine};
+use fasp::tensor::Tensor;
+
+fn manifest() -> Manifest {
+    Manifest::load(&fasp::artifacts_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_loads_and_knows_the_zoo() {
+    let m = manifest();
+    for name in fasp::model::zoo::all_models() {
+        let spec = m.model(name).unwrap();
+        assert_eq!(spec.d_model % spec.n_heads, 0);
+        assert!(m.artifacts.contains_key(&format!("{name}_fwd_loss")));
+        assert!(m.artifacts.contains_key(&format!("{name}_capture")));
+        assert!(m.artifacts.contains_key(&format!("{name}_gradcol")));
+        assert!(m.artifacts.contains_key(&format!("{name}_train_step")));
+    }
+    assert!(!m.capture_leaves.is_empty());
+}
+
+/// PJRT fwd_loss vs host forward — both families.
+#[test]
+fn fwd_loss_matches_host_reference() {
+    for model in ["opt_tiny", "llama_tiny"] {
+        let m = manifest();
+        let engine = ModelEngine::new(&m, model).unwrap();
+        let spec = engine.spec.clone();
+        let weights = Weights::init(&spec, 7);
+        let ds = Dataset::new(Corpus::new(spec.vocab, 3), spec.batch, spec.seq, 2);
+        let b = ds.train_batch(0);
+
+        let out = engine.fwd_loss(&weights.packed, &b.tokens, &b.targets).unwrap();
+        let host_nll = host::mean_nll(&weights, &b.tokens, &b.targets).unwrap();
+        let diff = (out.mean_nll - host_nll).abs();
+        assert!(
+            diff < 2e-3 * host_nll.abs().max(1.0),
+            "{model}: pjrt {} vs host {host_nll}",
+            out.mean_nll
+        );
+        // per-token consistency
+        let (host_tok, _) = host::forward_nll(&weights, &b.tokens, &b.targets, false).unwrap();
+        let max = out.tok_nll.max_abs_diff(&host_tok);
+        assert!(max < 5e-2, "{model}: max tok nll diff {max}");
+    }
+}
+
+/// The capture artifact's Gram matrices equal host-recomputed X^T X.
+#[test]
+fn capture_grams_match_host_activations() {
+    let m = manifest();
+    let engine = ModelEngine::new(&m, "opt_tiny").unwrap();
+    let spec = engine.spec.clone();
+    let weights = Weights::init(&spec, 11);
+    let ds = Dataset::new(Corpus::new(spec.vocab, 5), spec.batch, spec.seq, 2);
+    let b = ds.train_batch(0);
+
+    let stats = engine.capture(&weights.packed, &[b.tokens.clone()]).unwrap();
+    assert_eq!(stats.layers.len(), spec.n_layers);
+    assert_eq!(stats.rows, spec.batch * spec.seq);
+
+    let (_, caps) = host::forward_nll(&weights, &b.tokens, &b.targets, true).unwrap();
+    for (l, cap) in caps.iter().enumerate() {
+        let g_host = host::host_gram(&cap.ffn_h);
+        let rel = stats.layers[l].g_ffn.rel_err(&g_host);
+        assert!(rel < 2e-2, "layer {l} g_ffn rel err {rel}");
+        let g_host = host::host_gram(&cap.attn_ctx);
+        let rel = stats.layers[l].g_attn.rel_err(&g_host);
+        assert!(rel < 2e-2, "layer {l} g_attn rel err {rel}");
+        // mean vectors: column sums of the activations
+        let (_, f) = cap.ffn_h.dims2();
+        let mut sums = vec![0.0f32; f];
+        for r in 0..cap.ffn_h.shape[0] {
+            for (s, v) in sums.iter_mut().zip(cap.ffn_h.row(r)) {
+                *s += v;
+            }
+        }
+        let m_ffn = &stats.layers[l].m_ffn;
+        let host_m = Tensor::new(vec![f], sums);
+        assert!(m_ffn.rel_err(&host_m) < 2e-2, "layer {l} m_ffn");
+    }
+}
+
+/// train_step reduces loss and the state literal round-trips opaquely.
+#[test]
+fn train_step_learns_on_tiny_model() {
+    let m = manifest();
+    let engine = ModelEngine::new(&m, "llama_tiny").unwrap();
+    let spec = engine.spec.clone();
+    let init = Weights::init(&spec, 42);
+    let ds = Dataset::new(Corpus::new(spec.vocab, 9), spec.batch, spec.seq, 40);
+
+    let mut state = engine.init_train_state(&init.packed).unwrap();
+    let mut first = None;
+    let mut last = 0.0f32;
+    for step in 0..60 {
+        let b = ds.train_batch(step);
+        let (loss, ns) = engine
+            .train_step(&state, &b.tokens, &b.targets, (step + 1) as f32, 8e-3)
+            .unwrap();
+        state = ns;
+        first.get_or_insert(loss);
+        last = loss;
+        assert!(loss.is_finite(), "step {step} loss {loss}");
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first - 0.3,
+        "training did not reduce loss: {first} → {last}"
+    );
+    // params extracted from the state differ from init (learning happened)
+    let trained = engine.params_from_state(&state).unwrap();
+    let diff = trained.max_abs_diff(&init.packed);
+    assert!(diff > 1e-3, "params unchanged after training");
+}
+
+/// gradcol returns finite, non-negative, correctly-shaped scores.
+#[test]
+fn gradcol_scores_shapes() {
+    let m = manifest();
+    let engine = ModelEngine::new(&m, "llama_tiny").unwrap();
+    let spec = engine.spec.clone();
+    let weights = Weights::init(&spec, 1);
+    let ds = Dataset::new(Corpus::new(spec.vocab, 2), spec.batch, spec.seq, 2);
+    let b = ds.train_batch(0);
+    let scores = engine
+        .gradcol(&weights.packed, &[(b.tokens.clone(), b.targets.clone())])
+        .unwrap();
+    assert_eq!(scores.len(), spec.n_layers);
+    for s in &scores {
+        assert_eq!(s.ffn.len(), spec.d_ff);
+        assert_eq!(s.ov.len(), spec.d_model);
+        assert!(s.ffn.iter().all(|x| x.is_finite() && *x >= 0.0));
+        assert!(s.ov.iter().all(|x| x.is_finite() && *x >= 0.0));
+    }
+}
+
+/// Shape validation must reject wrong inputs loudly.
+#[test]
+fn wrong_shapes_rejected() {
+    let m = manifest();
+    let engine = ModelEngine::new(&m, "opt_tiny").unwrap();
+    let spec = engine.spec.clone();
+    let weights = Weights::init(&spec, 1);
+    let bad = fasp::tensor::IntTensor::zeros(&[1, 3]); // wrong batch/seq
+    let err = engine.fwd_loss(&weights.packed, &bad, &bad);
+    assert!(err.is_err());
+}
+
+/// The Pallas wanda-metric artifact agrees with the host metric.
+#[test]
+fn wanda_kernel_artifact_matches_host() {
+    let m = manifest();
+    let km = fasp::prune::metric::KernelMetric::new(&m);
+    let mut rng = fasp::util::rng::Rng::new(3);
+    // (64, 256) exists as an artifact (opt_tiny fc2 shape)
+    let w = Tensor::randn(&[64, 256], 1.0, &mut rng);
+    let xnorm: Vec<f32> = (0..256).map(|i| (i as f32 * 0.01) + 0.1).collect();
+    let got = km.wanda_scores(&w, &xnorm).unwrap();
+    let want = fasp::prune::metric::wanda_scores_host(&w, &xnorm);
+    for (g, w2) in got.iter().zip(&want) {
+        assert!((g - w2).abs() < 1e-2 * w2.abs().max(1.0), "{g} vs {w2}");
+    }
+}
+
+/// Masked evaluation exactness (DESIGN.md §5): zeroing a fc2 column and
+/// its coupled fc1 row must not change the loss at all vs zeroing the
+/// column alone.
+#[test]
+fn coupled_row_removal_is_free() {
+    let m = manifest();
+    let engine = ModelEngine::new(&m, "opt_tiny").unwrap();
+    let spec = engine.spec.clone();
+    let base = Weights::init(&spec, 21);
+    let ds = Dataset::new(Corpus::new(spec.vocab, 8), spec.batch, spec.seq, 2);
+    let b = ds.train_batch(0);
+
+    // zero column 5 of fc2 in layer 0
+    let mut w_col = base.clone();
+    let mut fc2 = w_col.get_l(0, "fc2").unwrap();
+    fasp::tensor::ops::zero_cols(&mut fc2, &[5]);
+    w_col.set_l(0, "fc2", &fc2).unwrap();
+    let loss_col = engine.fwd_loss(&w_col.packed, &b.tokens, &b.targets).unwrap().mean_nll;
+
+    // additionally zero the coupled fc1 row + bias element
+    let mut w_both = w_col.clone();
+    let mut fc1 = w_both.get_l(0, "fc1").unwrap();
+    fasp::tensor::ops::zero_rows(&mut fc1, &[5]);
+    w_both.set_l(0, "fc1", &fc1).unwrap();
+    let mut b1 = w_both.get_l(0, "bfc1").unwrap();
+    fasp::tensor::ops::zero_elems(&mut b1, &[5]);
+    w_both.set_l(0, "bfc1", &b1).unwrap();
+    let loss_both = engine.fwd_loss(&w_both.packed, &b.tokens, &b.targets).unwrap().mean_nll;
+
+    assert!(
+        (loss_col - loss_both).abs() < 1e-6,
+        "coupled removal changed loss: {loss_col} vs {loss_both}"
+    );
+}

@@ -1,0 +1,190 @@
+//! Integration over the pure-host substrates (no artifacts needed):
+//! linalg vs tensor ops, JSON round-trips of realistic payloads, the
+//! bench harness, masks and structure planning.
+
+use fasp::linalg::{admm_restore, jacobi_eigh, solve_posdef};
+use fasp::model::mask::{kept_indices, pruned_indices, prunable_params, PruneMask};
+use fasp::prune::restore::{recon_objective, restore_columns};
+use fasp::prune::structure::{plan, unit_costs};
+use fasp::runtime::manifest::ModelSpec;
+use fasp::tensor::matmul::matmul;
+use fasp::tensor::Tensor;
+use fasp::util::json::Json;
+use fasp::util::rng::Rng;
+
+fn toy_spec(family: &str) -> ModelSpec {
+    ModelSpec {
+        name: format!("{family}_toy"),
+        family: family.into(),
+        d_model: 32,
+        n_heads: 4,
+        n_layers: 2,
+        d_ff: 64,
+        vocab: 64,
+        seq: 16,
+        batch: 2,
+        params: vec![],
+    }
+}
+
+#[test]
+fn restoration_is_optimal_among_candidates() {
+    // the closed-form solution must beat any perturbed candidate
+    let mut rng = Rng::new(5);
+    let (m, n, s) = (6, 12, 48);
+    let w = Tensor::randn(&[m, n], 1.0, &mut rng);
+    let x = Tensor::randn(&[s, n], 1.0, &mut rng);
+    let g = matmul(&x.t(), &x);
+    let kept: Vec<bool> = (0..n).map(|j| j % 3 != 1).collect();
+    let opt = restore_columns(&w, &g, &kept, 1e-8).unwrap();
+    let base = recon_objective(&opt, &w, &g);
+    for trial in 0..10 {
+        let mut cand = opt.clone();
+        let mut r2 = Rng::new(100 + trial);
+        for v in cand.data.iter_mut() {
+            *v += (r2.f32() - 0.5) * 0.05;
+        }
+        // keep the support constraint
+        for i in 0..m {
+            for j in 0..n {
+                if !kept[j] {
+                    *cand.at2_mut(i, j) = 0.0;
+                }
+            }
+        }
+        let c = recon_objective(&cand, &w, &g);
+        assert!(c >= base - 1e-6, "perturbation beat the optimum: {c} < {base}");
+    }
+}
+
+#[test]
+fn admm_matches_closed_form_given_iterations() {
+    let mut rng = Rng::new(7);
+    let (m, n, s) = (4, 10, 60);
+    let w = Tensor::randn(&[m, n], 1.0, &mut rng);
+    let x = Tensor::randn(&[s, n], 1.0, &mut rng);
+    let g32 = matmul(&x.t(), &x);
+    let g: Vec<f64> = g32.data.iter().map(|&v| v as f64).collect();
+    let kept: Vec<bool> = (0..n).map(|j| j != 0 && j != 5).collect();
+    let mut greg = g.clone();
+    for i in 0..n {
+        greg[i * n + i] += 1e-6;
+    }
+    let (w_admm, _) = admm_restore(&w, &greg, &kept, 50.0, 500).unwrap();
+    let w_cf = restore_columns(&w, &g32, &kept, 1e-9).unwrap();
+    let diff = w_admm.max_abs_diff(&w_cf);
+    assert!(diff < 5e-2, "ADMM far from closed form: {diff}");
+    // and closed form is never worse on the objective
+    let o_admm = recon_objective(&w_admm, &w, &g32);
+    let o_cf = recon_objective(&w_cf, &w, &g32);
+    assert!(o_cf <= o_admm + 1e-6, "{o_cf} vs {o_admm}");
+}
+
+#[test]
+fn eigh_solves_match() {
+    // A x = b solved via eigendecomposition must match cholesky solve
+    let mut rng = Rng::new(9);
+    let n = 16;
+    let x = Tensor::randn(&[40, n], 1.0, &mut rng);
+    let g32 = matmul(&x.t(), &x);
+    let mut a: Vec<f64> = g32.data.iter().map(|&v| v as f64).collect();
+    for i in 0..n {
+        a[i * n + i] += 1.0;
+    }
+    let b: Vec<f64> = (0..n).map(|i| i as f64 * 0.3 - 1.0).collect();
+    let x_chol = solve_posdef(&a, n, &b).unwrap();
+    let (w, v) = jacobi_eigh(&a, n);
+    // x = Σ_k (v_k·b / λ_k) v_k
+    let mut x_eig = vec![0.0f64; n];
+    for k in 0..n {
+        let vk = &v[k * n..(k + 1) * n];
+        let coef: f64 = vk.iter().zip(&b).map(|(a, b)| a * b).sum::<f64>() / w[k];
+        for i in 0..n {
+            x_eig[i] += coef * vk[i];
+        }
+    }
+    for i in 0..n {
+        assert!((x_chol[i] - x_eig[i]).abs() < 1e-7, "i={i}");
+    }
+}
+
+#[test]
+fn json_handles_experiment_payloads() {
+    let payload = Json::obj(vec![
+        ("model", Json::Str("llama_small".into())),
+        ("ppl", Json::Num(12.345678)),
+        ("curve", Json::arr_f64(&[1.0, 0.5, 0.25])),
+        (
+            "phases",
+            Json::obj(vec![("capture", Json::Num(0.12)), ("solve", Json::Num(0.03))]),
+        ),
+        ("notes", Json::Str("line1\nline2 \"quoted\"".into())),
+    ]);
+    let text = payload.pretty();
+    let re = Json::parse(&text).unwrap();
+    assert_eq!(re, payload);
+    assert_eq!(re.get("phases").get("solve").as_f64().unwrap(), 0.03);
+}
+
+#[test]
+fn mask_accounting_consistent_with_unit_costs() {
+    for fam in ["opt", "llama"] {
+        let spec = toy_spec(fam);
+        let mut mask = PruneMask::full(&spec);
+        // prune 8 ffn units in layer 0, 4 ov dims in layer 1
+        for j in 0..8 {
+            mask.layers[0].ffn[j] = false;
+        }
+        for j in 0..4 {
+            mask.layers[1].ov[j] = false;
+        }
+        let (ffn_c, ov_c, _) = unit_costs(&spec);
+        assert_eq!(mask.params_removed(&spec), 8 * ffn_c + 4 * ov_c, "{fam}");
+        assert!(mask.sparsity(&spec) > 0.0);
+        assert!(mask.sparsity(&spec) < 1.0);
+        mask.validate(&spec).unwrap();
+    }
+}
+
+#[test]
+fn plan_respects_pool_size() {
+    for fam in ["opt", "llama"] {
+        let spec = toy_spec(fam);
+        let p = plan(&spec, 0.25, false);
+        // removing the planned units must match 25% of the pool
+        let (ffn_c, ov_c, _) = unit_costs(&spec);
+        let removed = (p.ffn_ratio * spec.d_ff as f64 * ffn_c as f64
+            + p.ov_ratio * spec.d_model as f64 * ov_c as f64)
+            * spec.n_layers as f64;
+        let frac = removed / prunable_params(&spec) as f64;
+        assert!((frac - 0.25).abs() < 1e-9, "{fam}: {frac}");
+    }
+}
+
+#[test]
+fn kept_pruned_partition() {
+    let mask = vec![true, false, true, false, false];
+    let k = kept_indices(&mask);
+    let p = pruned_indices(&mask);
+    assert_eq!(k, vec![0, 2]);
+    assert_eq!(p, vec![1, 3, 4]);
+    assert_eq!(k.len() + p.len(), mask.len());
+}
+
+#[test]
+fn bench_harness_runs() {
+    let mut b = fasp::bench_support::Bencher {
+        min_samples: 3,
+        budget_s: 0.05,
+        results: vec![],
+    };
+    let mut acc = 0u64;
+    b.bench("spin", || {
+        for i in 0..1000u64 {
+            acc = acc.wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+    });
+    assert!(b.results[0].mean_s() >= 0.0);
+    assert!(b.last_throughput(1000) > 0.0);
+}
