@@ -1,0 +1,19 @@
+.PHONY: artifacts verify test build bench
+
+# Regenerate the host-artifact manifest + stamp files (committed, so this
+# is only needed after changing model configs or entry contracts).
+artifacts:
+	cd python && python3 -m compile.gen_host_artifacts --out-dir ../artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Tier-1 verify + perf check (writes BENCH_prune_time.json).
+verify:
+	./verify.sh
+
+bench:
+	cargo bench

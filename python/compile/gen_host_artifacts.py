@@ -1,0 +1,188 @@
+"""Host-artifact generator: writes artifacts/manifest.json plus one stamp
+file per entry for the in-process host runtime backend.
+
+This replaces the original `aot.py` JAX lowering step in offline builds:
+the rust runtime executes every entry natively (rust/src/runtime/
+host_exec.rs), so an "artifact" is its manifest contract (exact
+input/output shapes, identical to what aot.py produced) plus a small
+on-disk stamp the loader validates. Entry names, shapes and leaf orders
+are byte-compatible with the AOT pipeline so the rust side needs no
+special cases.
+
+    cd python && python -m compile.gen_host_artifacts --out-dir ../artifacts
+
+No third-party imports — runs on a bare python3.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# allow running as a plain script too
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile.configs import MODEL_CONFIGS, ModelConfig, param_count, param_spec  # noqa: E402
+from compile.capture import CAPTURE_LEAVES  # noqa: E402
+from compile.gradcol import GRADCOL_LEAVES  # noqa: E402
+from compile.latency import sliced_dims  # noqa: E402
+
+MAGIC = "FASP-HOST-ARTIFACT v1"
+F32, I32 = "f32", "i32"
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {
+            "format": 2,
+            "backend": "host",
+            "capture_leaves": CAPTURE_LEAVES,
+            "gradcol_leaves": GRADCOL_LEAVES,
+            "models": {},
+            "artifacts": {},
+            "latency": {},
+        }
+
+    def add_model(self, cfg: ModelConfig):
+        self.manifest["models"][cfg.name] = {
+            "family": cfg.family,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+            "params": [[n, list(s)] for n, s in param_spec(cfg)],
+        }
+
+    def emit(self, name: str, inputs, outputs):
+        """inputs: [(name, dtype, shape)], outputs: [(dtype, shape)]."""
+        fname = f"{name}.entry.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(f"{MAGIC}\n")
+            f.write(f"entry: {name}\n")
+            f.write("backend: host\n")
+            f.write(f"inputs: {len(inputs)}\n")
+            f.write(f"outputs: {len(outputs)}\n")
+        self.manifest["artifacts"][name] = {
+            "file": fname,
+            "kind": "host",
+            "inputs": [[n, dt, list(s)] for n, dt, s in inputs],
+            "outputs": [[dt, list(s)] for dt, s in outputs],
+        }
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"manifest: {len(self.manifest['artifacts'])} artifacts")
+
+
+def model_entries(b: Builder, cfg: ModelConfig):
+    p = param_count(cfg)
+    bt = [cfg.batch, cfg.seq]
+    d, f = cfg.d_model, cfg.d_ff
+    b.emit(
+        f"{cfg.name}_fwd_loss",
+        [("params", F32, [p]), ("tokens", I32, bt), ("targets", I32, bt)],
+        [(F32, []), (F32, [cfg.batch]), (F32, bt)],
+    )
+    cap_out = []
+    for _ in range(cfg.n_layers):
+        cap_out += [
+            (F32, [d, d]), (F32, [d, d]), (F32, [d, d]), (F32, [f, f]),
+            (F32, [d]), (F32, [d]), (F32, [d]), (F32, [f]),
+        ]
+    b.emit(
+        f"{cfg.name}_capture",
+        [("params", F32, [p]), ("tokens", I32, bt)],
+        cap_out,
+    )
+    grad_out = []
+    for _ in range(cfg.n_layers):
+        grad_out += [(F32, [f]), (F32, [d])]
+    b.emit(
+        f"{cfg.name}_gradcol",
+        [("params", F32, [p]), ("tokens", I32, bt), ("targets", I32, bt)],
+        grad_out,
+    )
+    b.emit(
+        f"{cfg.name}_train_step",
+        [
+            ("state", F32, [3 * p]),
+            ("tokens", I32, bt),
+            ("targets", I32, bt),
+            ("t", F32, []),
+            ("lr", F32, []),
+        ],
+        [(F32, []), (F32, [3 * p])],
+    )
+
+
+def kernel_entries(b: Builder):
+    shapes = set()
+    for cfg in MODEL_CONFIGS.values():
+        shapes.add((cfg.d_model, cfg.d_ff))
+        shapes.add((cfg.d_model, cfg.d_model))
+    for m, n in sorted(shapes):
+        b.emit(
+            f"wanda_metric_{m}x{n}",
+            [("w", F32, [m, n]), ("xnorm", F32, [n])],
+            [(F32, [n])],
+        )
+    cfg = MODEL_CONFIGS["llama_small"]
+    s = cfg.batch * cfg.seq
+    for n in sorted({cfg.d_model, cfg.d_ff}):
+        b.emit(f"gram_{s}x{n}", [("x", F32, [s, n])], [(F32, [n, n])])
+    dh = cfg.head_dim
+    b.emit(
+        f"flash_attn_{cfg.seq}x{dh}",
+        [("q", F32, [cfg.seq, dh]), ("k", F32, [cfg.seq, dh]), ("v", F32, [cfg.seq, dh])],
+        [(F32, [cfg.seq, dh])],
+    )
+
+
+def latency_entries(b: Builder):
+    cfg = MODEL_CONFIGS["llama_small"]
+    d = cfg.d_model
+    for pct in (0, 10, 20, 30, 40, 50):
+        name = f"latency_llama_small_s{pct}"
+        f_s, dk_s = sliced_dims(cfg, pct / 100.0)
+        inputs = [
+            ("x", F32, [cfg.batch, cfg.seq, d]),
+            ("ln1_g", F32, [d]),
+            ("wq", F32, [d, d]),
+            ("wk", F32, [d, d]),
+            ("wv", F32, [dk_s, d]),
+            ("wo", F32, [d, dk_s]),
+            ("ln2_g", F32, [d]),
+            ("w_gate", F32, [f_s, d]),
+            ("w_up", F32, [f_s, d]),
+            ("w_down", F32, [d, f_s]),
+        ]
+        b.emit(name, inputs, [(F32, [cfg.batch, cfg.seq, d])])
+        b.manifest["latency"][name] = {
+            "sparsity": pct / 100.0, "f_s": f_s, "dk_s": dk_s,
+        }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    b = Builder(args.out_dir)
+    for cfg in MODEL_CONFIGS.values():
+        b.add_model(cfg)
+        model_entries(b, cfg)
+    kernel_entries(b)
+    latency_entries(b)
+    b.finish()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,22 +1,32 @@
-//! Bench: Table 4 — pruning wall-time by method × model size.
+//! Bench: Table 4 — pruning wall-time by method × model size, plus the
+//! compact-export `repack` stage.
 //! `cargo bench --bench bench_prune_time` (set FASP_BENCH_FAST=1 to
-//! shrink). Reports per-method mean time on llama_{tiny,small} plus the
-//! phase breakdown; the paper's claim is the ordering FASP ≈ FLAP ≪
-//! SliceGPT ≪ NASLLM/LLM-Pruner.
+//! shrink; FASP_BENCH_CHECK=1 runs the fast matrix AND writes
+//! BENCH_prune_time.json so CI can diff repack/prune regressions).
+//! The paper's claim is the ordering FASP ≈ FLAP ≪ SliceGPT ≪
+//! NASLLM/LLM-Pruner; the repack stage must stay a small fraction of the
+//! prune time.
 
 use fasp::bench_support::{fmt_s, Bencher};
 use fasp::data::{Corpus, Dataset};
 use fasp::model::Weights;
-use fasp::prune::{prune, Method, PruneOpts};
+use fasp::prune::{prune, prune_compact, Method, PruneOpts};
 use fasp::runtime::{Manifest, ModelEngine};
+use fasp::util::json::Json;
 
 fn main() {
     let manifest = Manifest::load(&fasp::artifacts_dir()).expect("make artifacts");
-    let fast = std::env::var("FASP_BENCH_FAST").is_ok();
+    let check = std::env::var("FASP_BENCH_CHECK").is_ok();
+    let fast = check || std::env::var("FASP_BENCH_FAST").is_ok();
     let models: &[&str] = if fast { &["llama_tiny"] } else { &["llama_tiny", "llama_small"] };
     let mut b = Bencher::default();
+    if check {
+        b.min_samples = 3;
+        b.budget_s = 0.5;
+    }
 
     println!("# Table 4 analog — pruning time (20% sparsity)\n");
+    let mut repack_frac = 0.0f64;
     for model in models {
         let engine = ModelEngine::new(&manifest, model).unwrap();
         let spec = engine.spec.clone();
@@ -30,10 +40,44 @@ fn main() {
                 let _ = prune(&engine, &weights, &ds, &opts).unwrap();
             });
         }
+        // the repack stage in isolation: prune once, bench only the
+        // physical slicing (the metric the BENCH record guards)
+        let mut opts = PruneOpts::new(Method::Fasp, 0.20);
+        opts.calib_batches = 2;
+        let out = prune_compact(&engine, &weights, &ds, &opts, "bench_repack").unwrap();
+        repack_frac = out.report.phase("repack") / out.report.total_s.max(1e-9);
+        let (pruned, mask) = (out.pruned, out.mask);
+        b.bench(&format!("{model}/repack"), || {
+            let _ = fasp::model::compact::compact_from_mask(&pruned, &mask, "bench_repack")
+                .unwrap();
+        });
     }
 
     println!("\n## summary (mean seconds)\n");
     for r in &b.results {
         println!("{:<40} {}", r.name, fmt_s(r.mean_s()));
+    }
+    println!("\nrepack fraction of last prune+repack run: {:.1}%", repack_frac * 100.0);
+
+    // machine-readable record for regression diffing (check mode only, so
+    // ad-hoc bench runs don't overwrite the CI record)
+    if check {
+        let record = Json::obj(vec![
+            ("bench", Json::Str("prune_time".into())),
+            ("fast", Json::Bool(fast)),
+            ("repack_fraction", Json::Num(repack_frac)),
+            (
+                "mean_s",
+                Json::Obj(
+                    b.results
+                        .iter()
+                        .map(|r| (r.name.clone(), Json::Num(r.mean_s())))
+                        .collect(),
+                ),
+            ),
+        ]);
+        let path = fasp::repo_root().join("BENCH_prune_time.json");
+        std::fs::write(&path, record.pretty()).unwrap();
+        println!("record → {}", path.display());
     }
 }

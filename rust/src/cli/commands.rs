@@ -135,6 +135,26 @@ pub fn prune(args: &Args) -> Result<()> {
         w.save(std::path::Path::new(out))?;
         println!("pruned weights → {out}");
     }
+    if args.has("export-compact") {
+        let default_name = compact_name(&model, method, sparsity);
+        let name = args.get_or("name", &default_name);
+        anyhow::ensure!(
+            !ctx.manifest.models.contains_key(&name)
+                || ctx.manifest.compact.contains_key(&name),
+            "--name '{name}' collides with an existing model; pick another"
+        );
+        let cm = crate::model::compact::compact_from_mask(&w, &mask, &name)?;
+        let jp = crate::model::compact::save_compact(
+            &crate::artifacts_dir().join("compact"),
+            &cm,
+        )?;
+        println!(
+            "compact artifact → {} ({} → {} params)",
+            jp.display(),
+            w.spec.n_params_elems(),
+            cm.spec.n_params_elems()
+        );
+    }
     if args.has("report") {
         let rec = crate::prune::report::RunRecord {
             model: model.clone(),
@@ -145,7 +165,87 @@ pub fn prune(args: &Args) -> Result<()> {
         };
         println!("report → {}", rec.save()?.display());
     }
-    let _ = mask;
+    Ok(())
+}
+
+fn compact_name(model: &str, method: Method, sparsity: f64) -> String {
+    format!(
+        "{model}_{}_s{:02.0}",
+        format!("{method:?}").to_lowercase(),
+        sparsity * 100.0
+    )
+}
+
+/// `fasp compact`: prune + physically repack + save the compact artifact,
+/// then evaluate it end to end (perplexity parity with the masked model,
+/// dense-vs-compact latency).
+pub fn compact(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let model = model_arg(args)?;
+    let method = method_arg(args)?;
+    let sparsity = args.get_f64("sparsity", 0.3)?;
+    let default_name = compact_name(&model, method, sparsity);
+    let name = args.get_or("name", &default_name);
+    anyhow::ensure!(
+        !ctx.manifest.models.contains_key(&name)
+            || ctx.manifest.compact.contains_key(&name),
+        "--name '{name}' collides with an existing model; pick another"
+    );
+    let reps = args.get_usize("reps", 10)?;
+
+    anyhow::ensure!(
+        !args.has("prune-qk"),
+        "compact export does not support --prune-qk (Q/K rows stay dense \
+         under FASP §3.1); run `fasp prune --prune-qk` for the ablation"
+    );
+    let p = ctx.prepared(&model)?;
+    let mut opts = PruneOpts::new(method, sparsity);
+    opts.calib_batches = ctx.calib_batches;
+    if args.has("no-restore") {
+        opts.restore = false;
+    }
+    opts.sequential = args.has("sequential");
+    let out = crate::prune::prune_compact(&p.engine, &p.weights, &p.dataset, &opts, &name)?;
+    let jpath = crate::model::compact::save_compact(
+        &crate::artifacts_dir().join("compact"),
+        &out.compact,
+    )?;
+    println!(
+        "compact artifact → {} ({} → {} params, repack {:.3}s)",
+        jpath.display(),
+        p.weights.spec.n_params_elems(),
+        out.compact.spec.n_params_elems(),
+        out.report.phase("repack")
+    );
+
+    // fresh manifest load picks up the exported artifact
+    let m2 = manifest()?;
+    let cw = m2.compact_weights(&name)?;
+    let ce = ModelEngine::new(&m2, &name)?;
+    let eval_b = p.dataset.valid_batches(ctx.eval_batches);
+    let ppl_dense = p.dense_ppl(&ctx)?;
+    let ppl_masked = p.ppl_of(&ctx, &out.pruned)?;
+    let ppl_compact = perplexity(&ce, &cw, &eval_b)?;
+    let cmp = crate::eval::speed::compare_dense_compact(
+        &m2, &model, &p.weights, &name, &cw, reps,
+    )?;
+
+    let mut t = Table::new(
+        &format!("Compact export — {model} @ {:.0}% ({})", sparsity * 100.0, method.label()),
+        &["variant", "ppl", "latency"],
+    );
+    t.row(vec![
+        "dense".into(),
+        format!("{ppl_dense:.3}"),
+        format!("{:.3}ms", cmp.dense_ms),
+    ]);
+    t.row(vec!["masked".into(), format!("{ppl_masked:.3}"), "—".into()]);
+    t.row(vec![
+        "compact".into(),
+        format!("{ppl_compact:.3}"),
+        format!("{:.3}ms ({:.2}x)", cmp.compact_ms, cmp.speedup),
+    ]);
+    t.print();
     Ok(())
 }
 

@@ -18,6 +18,9 @@ COMMANDS:
   train      --model M         train (or re-train) a zoo model
   eval       --model M         perplexity of the (trained) model
   prune      --model M --method X --sparsity S   prune + evaluate
+  compact    --model M --sparsity S  prune, physically repack and save a
+                               compact model artifact; evaluates ppl
+                               parity and dense-vs-compact latency
   zeroshot   --model M [--method X --sparsity S] zero-shot suites
   tables     --id table1|...|fig4|all            regenerate paper tables
   latency                      sliced decoder-layer latency sweep
@@ -31,6 +34,8 @@ COMMON OPTIONS:
   --calib N              calibration batches (default 8)
   --eval-batches N       perplexity batches (default 12)
   --no-restore           disable FASP restoration (ablation)
+  --export-compact       (prune) also save a compact artifact of the mask
+  --name NAME            compact artifact name (default <model>_<method>_sNN)
   --prune-qk             also prune W_Q/W_K rows (Table 6 ablation)
   --sequential           re-capture activations after each pruned layer
   --report               persist a JSON run record under results/reports/
@@ -48,6 +53,7 @@ pub fn run() -> Result<()> {
         Some("train") => commands::train(&args),
         Some("eval") => commands::eval(&args),
         Some("prune") => commands::prune(&args),
+        Some("compact") => commands::compact(&args),
         Some("zeroshot") => commands::zeroshot(&args),
         Some("tables") => commands::tables(&args),
         Some("latency") => commands::latency(&args),

@@ -1,10 +1,19 @@
-//! Sliced decoder-layer latency: the structured-speedup claim (the paper
-//! §1–2: structured pruning yields hardware-agnostic inference
-//! speedups). Runs the physically sliced `latency_llama_small_s{pct}`
-//! artifacts and reports latency vs sparsity.
+//! Structured-speedup measurements (the paper §1–2: structured pruning
+//! yields hardware-agnostic inference speedups):
+//!
+//! * [`layer_latency_sweep`] — the physically sliced
+//!   `latency_llama_small_s{pct}` single-layer artifacts, latency vs
+//!   sparsity.
+//! * [`compare_dense_compact`] — end-to-end model latency of a dense
+//!   model vs its compact (physically repacked) export, through the same
+//!   `fwd_loss` path perplexity uses. This is the receipt the compact
+//!   artifact must produce: a genuinely smaller model that runs faster
+//!   with no masks.
 
+use crate::data::{Batch, Corpus, Dataset};
+use crate::model::Weights;
 use crate::runtime::executable::{Artifact, In};
-use crate::runtime::Manifest;
+use crate::runtime::{Manifest, ModelEngine};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -53,4 +62,47 @@ pub fn layer_latency_sweep(manifest: &Manifest, reps: usize) -> Result<Vec<Laten
         });
     }
     Ok(points)
+}
+
+/// Dense-vs-compact end-to-end latency comparison.
+pub struct CompactCompare {
+    pub dense_ms: f64,
+    pub compact_ms: f64,
+    pub speedup: f64,
+}
+
+/// Best-of-`reps` wall-clock of one `fwd_loss` call (params uploaded
+/// once, like the perplexity loop). Min-of-reps is robust to scheduler
+/// noise on the 1-core testbed.
+fn time_fwd(engine: &ModelEngine, w: &Weights, batch: &Batch, reps: usize) -> Result<f64> {
+    let lit = engine.params_literal(&w.packed)?;
+    engine.fwd_loss_lit(&lit, &batch.tokens, &batch.targets)?; // warmup
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = std::time::Instant::now();
+        engine.fwd_loss_lit(&lit, &batch.tokens, &batch.targets)?;
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(best)
+}
+
+/// Measure a dense model against its compact export on identical token
+/// batches. Both models must be registered in the manifest (the compact
+/// one via its `compact/` artifact or `Manifest::register_compact`).
+pub fn compare_dense_compact(
+    manifest: &Manifest,
+    dense_model: &str,
+    dense_w: &Weights,
+    compact_model: &str,
+    compact_w: &Weights,
+    reps: usize,
+) -> Result<CompactCompare> {
+    let de = ModelEngine::new(manifest, dense_model)?;
+    let ce = ModelEngine::new(manifest, compact_model)?;
+    let spec = de.spec.clone();
+    let ds = Dataset::new(Corpus::new(spec.vocab, 0x5eed), spec.batch, spec.seq, 2);
+    let b = ds.train_batch(0);
+    let dense_ms = time_fwd(&de, dense_w, &b, reps)?;
+    let compact_ms = time_fwd(&ce, compact_w, &b, reps)?;
+    Ok(CompactCompare { dense_ms, compact_ms, speedup: dense_ms / compact_ms })
 }

@@ -1,0 +1,491 @@
+//! Compact repacking (the deployable-artifact half of FASP §3): given a
+//! `(Weights, PruneMask)` pair, physically slice out the pruned FFN
+//! columns and OV head dims — the interlinked row/column removals the
+//! coupled structure makes free — and emit shrunken dense tensors plus a
+//! per-layer [`ModelSpec`] that the runtime executes with no masks.
+//!
+//! Exactness: pruned fc2/w_down columns pair with zeroed fc1/gate/up rows
+//! (so the removed hidden units are exactly dead), and pruned wo columns
+//! pair with zeroed wv rows (dead context dims). Removing dead terms from
+//! a sum does not change it, so the compact forward equals the masked
+//! dense forward up to matmul re-blocking (≤ 1e-5 on tiny models), and a
+//! sparsity-0 export is bit-identical.
+//!
+//! On-disk artifact (`<artifacts>/compact/`):
+//! * `<name>.compact.json` — self-describing spec: base model, family,
+//!   per-layer dims (`d_ff`, `d_ov`, `head_splits`), sparsity, weights
+//!   file name. Parameter shapes are reconstructed from the dims via
+//!   [`build_params`], so spec/weights mismatches fail loudly.
+//! * `<name>.ftns` — the packed weights (same container as checkpoints).
+//!
+//! Both files are written via temp-file + rename so a concurrent
+//! `Manifest::load` never observes a half-written artifact.
+
+use super::mask::{kept_indices, PruneMask};
+use super::weights::Weights;
+use crate::runtime::manifest::{CompactInfo, LayerDims, ModelSpec};
+use crate::tensor::ops::{gather_cols, gather_elems, gather_rows};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A physically sliced model ready to save or run.
+pub struct CompactModel {
+    pub spec: ModelSpec,
+    pub weights: Weights,
+    pub base_model: String,
+    pub sparsity: f64,
+}
+
+/// `layers.<l>.<short>` → `(l, short)`.
+fn split_layer_param(name: &str) -> Option<(usize, &str)> {
+    let rest = name.strip_prefix("layers.")?;
+    let dot = rest.find('.')?;
+    let l: usize = rest[..dot].parse().ok()?;
+    Some((l, &rest[dot + 1..]))
+}
+
+/// The packed parameter order for a (possibly per-layer-sliced) model —
+/// mirrors `python/compile/configs.py::param_spec` with per-layer dims.
+pub fn build_params(
+    family: &str,
+    d_model: usize,
+    n_layers: usize,
+    vocab: usize,
+    seq: usize,
+    layer_dims: &[LayerDims],
+) -> Vec<(String, Vec<usize>)> {
+    let d = d_model;
+    let mut params: Vec<(String, Vec<usize>)> = vec![("tok_emb".into(), vec![vocab, d])];
+    if family == "opt" {
+        params.push(("pos_emb".into(), vec![seq, d]));
+    }
+    for (i, ld) in layer_dims.iter().enumerate().take(n_layers) {
+        let p = format!("layers.{i}.");
+        let f = ld.d_ff;
+        let ov = ld.d_ov;
+        if family == "opt" {
+            for (n, s) in [
+                ("ln1_g", vec![d]),
+                ("ln1_b", vec![d]),
+                ("wq", vec![d, d]),
+                ("bq", vec![d]),
+                ("wk", vec![d, d]),
+                ("bk", vec![d]),
+                ("wv", vec![ov, d]),
+                ("bv", vec![ov]),
+                ("wo", vec![d, ov]),
+                ("bo", vec![d]),
+                ("ln2_g", vec![d]),
+                ("ln2_b", vec![d]),
+                ("fc1", vec![f, d]),
+                ("bfc1", vec![f]),
+                ("fc2", vec![d, f]),
+                ("bfc2", vec![d]),
+            ] {
+                params.push((format!("{p}{n}"), s));
+            }
+        } else {
+            for (n, s) in [
+                ("ln1_g", vec![d]),
+                ("wq", vec![d, d]),
+                ("wk", vec![d, d]),
+                ("wv", vec![ov, d]),
+                ("wo", vec![d, ov]),
+                ("bo", vec![d]),
+                ("ln2_g", vec![d]),
+                ("w_gate", vec![f, d]),
+                ("w_up", vec![f, d]),
+                ("w_down", vec![d, f]),
+                ("b_down", vec![d]),
+            ] {
+                params.push((format!("{p}{n}"), s));
+            }
+        }
+    }
+    params.push(("lnf_g".into(), vec![d]));
+    if family == "opt" {
+        params.push(("lnf_b".into(), vec![d]));
+    }
+    params
+}
+
+/// Physically repack `base` under `mask` into a compact model named
+/// `name`. The mask must keep Q/K dense (FASP's default) and at least one
+/// unit per group per layer.
+pub fn compact_from_mask(
+    base: &Weights,
+    mask: &PruneMask,
+    name: &str,
+) -> Result<CompactModel> {
+    let spec = &base.spec;
+    mask.validate(spec)
+        .context("compact export: mask does not fit the model spec")?;
+
+    let mut kept_ffn: Vec<Vec<usize>> = Vec::with_capacity(spec.n_layers);
+    let mut kept_ov: Vec<Vec<usize>> = Vec::with_capacity(spec.n_layers);
+    let mut layer_dims: Vec<LayerDims> = Vec::with_capacity(spec.n_layers);
+    for (l, lm) in mask.layers.iter().enumerate() {
+        anyhow::ensure!(
+            lm.qk.iter().all(|&k| k),
+            "layer {l}: compact export does not support Q/K-pruned masks \
+             (FASP §3.1 keeps Q/K dense); re-run without --prune-qk"
+        );
+        let kf = kept_indices(&lm.ffn);
+        let ko = kept_indices(&lm.ov);
+        anyhow::ensure!(
+            !kf.is_empty() && !ko.is_empty(),
+            "layer {l}: compact export needs at least one kept unit per \
+             group (ffn kept {}, ov kept {})",
+            kf.len(),
+            ko.len()
+        );
+        // map kept OV dims onto the base model's per-head blocks
+        let base_splits = spec.head_splits_l(l);
+        let mut offs = vec![0usize; base_splits.len() + 1];
+        for (hi, &s) in base_splits.iter().enumerate() {
+            offs[hi + 1] = offs[hi] + s;
+        }
+        let head_splits: Vec<usize> = (0..spec.n_heads)
+            .map(|hi| {
+                ko.iter()
+                    .filter(|&&j| j >= offs[hi] && j < offs[hi + 1])
+                    .count()
+            })
+            .collect();
+        layer_dims.push(LayerDims {
+            d_ff: kf.len(),
+            d_ov: ko.len(),
+            head_splits,
+        });
+        kept_ffn.push(kf);
+        kept_ov.push(ko);
+    }
+
+    let params = build_params(
+        &spec.family,
+        spec.d_model,
+        spec.n_layers,
+        spec.vocab,
+        spec.seq,
+        &layer_dims,
+    );
+    let new_spec = ModelSpec {
+        name: name.to_string(),
+        family: spec.family.clone(),
+        d_model: spec.d_model,
+        n_heads: spec.n_heads,
+        n_layers: spec.n_layers,
+        d_ff: spec.d_ff,
+        vocab: spec.vocab,
+        seq: spec.seq,
+        batch: spec.batch,
+        params,
+        layer_dims,
+    };
+
+    let mut out = Weights::zeros(&new_spec);
+    for (pname, _) in new_spec.params.clone() {
+        let src = base.get(&pname)?;
+        let dst = match split_layer_param(&pname) {
+            Some((l, short)) => match short {
+                "fc1" | "w_gate" | "w_up" => gather_rows(&src, &kept_ffn[l]),
+                "bfc1" => gather_elems(&src, &kept_ffn[l]),
+                "fc2" | "w_down" => gather_cols(&src, &kept_ffn[l]),
+                "wv" => gather_rows(&src, &kept_ov[l]),
+                "bv" => gather_elems(&src, &kept_ov[l]),
+                "wo" => gather_cols(&src, &kept_ov[l]),
+                _ => src,
+            },
+            None => src,
+        };
+        out.set(&pname, &dst)?;
+    }
+
+    Ok(CompactModel {
+        spec: new_spec,
+        weights: out,
+        base_model: spec.name.clone(),
+        sparsity: mask.sparsity(spec),
+    })
+}
+
+// ---------------------------------------------------------------- disk io
+
+fn spec_to_json(cm: &CompactModel, weights_file: &str) -> Json {
+    let s = &cm.spec;
+    let dims = Json::Arr(
+        s.layer_dims
+            .iter()
+            .map(|ld| {
+                Json::obj(vec![
+                    ("d_ff", Json::Num(ld.d_ff as f64)),
+                    ("d_ov", Json::Num(ld.d_ov as f64)),
+                    (
+                        "head_splits",
+                        Json::Arr(
+                            ld.head_splits.iter().map(|&x| Json::Num(x as f64)).collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("format", Json::Num(1.0)),
+        ("kind", Json::Str("compact".into())),
+        ("name", Json::Str(s.name.clone())),
+        ("base_model", Json::Str(cm.base_model.clone())),
+        ("family", Json::Str(s.family.clone())),
+        ("sparsity", Json::Num(cm.sparsity)),
+        ("d_model", Json::Num(s.d_model as f64)),
+        ("n_heads", Json::Num(s.n_heads as f64)),
+        ("n_layers", Json::Num(s.n_layers as f64)),
+        ("d_ff", Json::Num(s.d_ff as f64)),
+        ("vocab", Json::Num(s.vocab as f64)),
+        ("seq", Json::Num(s.seq as f64)),
+        ("batch", Json::Num(s.batch as f64)),
+        ("layer_dims", dims),
+        ("weights", Json::Str(weights_file.to_string())),
+    ])
+}
+
+/// Write `<name>.ftns` + `<name>.compact.json` under `dir` (created on
+/// demand), atomically. Returns the json path.
+pub fn save_compact(dir: &Path, cm: &CompactModel) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create {}", dir.display()))?;
+    let wname = format!("{}.ftns", cm.spec.name);
+    let wtmp = dir.join(format!("{wname}.tmp"));
+    cm.weights.save(&wtmp)?;
+    std::fs::rename(&wtmp, dir.join(&wname))
+        .with_context(|| format!("publish {}", wname))?;
+
+    let jname = format!("{}.compact.json", cm.spec.name);
+    let jtmp = dir.join(format!("{jname}.tmp"));
+    std::fs::write(&jtmp, spec_to_json(cm, &wname).pretty())
+        .with_context(|| format!("write {}", jtmp.display()))?;
+    let jpath = dir.join(&jname);
+    std::fs::rename(&jtmp, &jpath)
+        .with_context(|| format!("publish {}", jpath.display()))?;
+    Ok(jpath)
+}
+
+/// Parse and validate a `*.compact.json` descriptor (no weights read).
+/// Dimension inconsistencies (head splits not summing to `d_ov`, wrong
+/// layer counts, bad fields) fail loudly here.
+pub fn load_compact_spec(path: &Path) -> Result<(ModelSpec, CompactInfo)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read compact spec {}", path.display()))?;
+    let j = Json::parse(&text)
+        .with_context(|| format!("parse compact spec {}", path.display()))?;
+    match j.get("kind").as_str() {
+        Some("compact") => {}
+        other => bail!(
+            "{}: not a compact artifact (kind = {:?})",
+            path.display(),
+            other
+        ),
+    }
+    let name = j.get("name").as_str().context("compact field 'name'")?.to_string();
+    let family = j.get("family").as_str().context("compact field 'family'")?.to_string();
+    anyhow::ensure!(
+        family == "opt" || family == "llama",
+        "compact '{name}': unknown family '{family}'"
+    );
+    let base_model = j
+        .get("base_model")
+        .as_str()
+        .context("compact field 'base_model'")?
+        .to_string();
+    let sparsity = j.get("sparsity").as_f64().context("compact field 'sparsity'")?;
+    let get = |k: &str| -> Result<usize> {
+        j.get(k).as_usize().with_context(|| format!("compact field '{k}'"))
+    };
+    let d_model = get("d_model")?;
+    let n_heads = get("n_heads")?;
+    let n_layers = get("n_layers")?;
+    let d_ff = get("d_ff")?;
+    let vocab = get("vocab")?;
+    let seq = get("seq")?;
+    let batch = get("batch")?;
+    anyhow::ensure!(n_heads > 0 && d_model % n_heads == 0, "compact '{name}': d_model {d_model} not divisible by {n_heads} heads");
+
+    let dims_json = j.get("layer_dims").as_arr().context("compact field 'layer_dims'")?;
+    anyhow::ensure!(
+        dims_json.len() == n_layers,
+        "compact '{name}': {} layer_dims entries for {} layers",
+        dims_json.len(),
+        n_layers
+    );
+    let mut layer_dims = Vec::with_capacity(n_layers);
+    for (l, ld) in dims_json.iter().enumerate() {
+        let lf = ld.get("d_ff").as_usize().with_context(|| format!("layer {l} d_ff"))?;
+        let lov = ld.get("d_ov").as_usize().with_context(|| format!("layer {l} d_ov"))?;
+        let splits: Vec<usize> = ld
+            .get("head_splits")
+            .as_arr()
+            .with_context(|| format!("layer {l} head_splits"))?
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+                    .map(|v| v as usize)
+                    .with_context(|| {
+                        format!("layer {l} head_splits: entry is not a non-negative integer")
+                    })
+            })
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(
+            splits.len() == n_heads,
+            "compact '{name}' layer {l}: {} head splits for {} heads — \
+             spec/mask dimension mismatch",
+            splits.len(),
+            n_heads
+        );
+        let sum: usize = splits.iter().sum();
+        anyhow::ensure!(
+            sum == lov,
+            "compact '{name}' layer {l}: head_splits sum {sum} != d_ov {lov} — \
+             spec/mask dimension mismatch"
+        );
+        anyhow::ensure!(
+            lf >= 1 && lov >= 1,
+            "compact '{name}' layer {l}: degenerate dims (d_ff {lf}, d_ov {lov})"
+        );
+        layer_dims.push(LayerDims { d_ff: lf, d_ov: lov, head_splits: splits });
+    }
+
+    let params = build_params(&family, d_model, n_layers, vocab, seq, &layer_dims);
+    let spec = ModelSpec {
+        name,
+        family,
+        d_model,
+        n_heads,
+        n_layers,
+        d_ff,
+        vocab,
+        seq,
+        batch,
+        params,
+        layer_dims,
+    };
+
+    let wfile = j.get("weights").as_str().context("compact field 'weights'")?;
+    let weights_path = path
+        .parent()
+        .unwrap_or_else(|| Path::new("."))
+        .join(wfile);
+    let info = CompactInfo { base_model, sparsity, weights_path };
+    Ok((spec, info))
+}
+
+/// Load a full compact model (spec + weights) from its descriptor.
+pub fn load_compact(path: &Path) -> Result<CompactModel> {
+    let (spec, info) = load_compact_spec(path)?;
+    anyhow::ensure!(
+        info.weights_path.exists(),
+        "compact '{}': weights file {} missing",
+        spec.name,
+        info.weights_path.display()
+    );
+    let weights = Weights::load(&spec, &info.weights_path).with_context(|| {
+        format!(
+            "load compact weights {} (truncated or corrupt?)",
+            info.weights_path.display()
+        )
+    })?;
+    Ok(CompactModel {
+        spec,
+        weights,
+        base_model: info.base_model,
+        sparsity: info.sparsity,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::mask::PruneMask;
+
+    fn toy_spec() -> ModelSpec {
+        let layer_dims = vec![
+            LayerDims { d_ff: 16, d_ov: 8, head_splits: vec![4, 4] },
+            LayerDims { d_ff: 16, d_ov: 8, head_splits: vec![4, 4] },
+        ];
+        let params = build_params("llama", 8, 2, 32, 16, &layer_dims);
+        ModelSpec {
+            name: "toy".into(),
+            family: "llama".into(),
+            d_model: 8,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 16,
+            vocab: 32,
+            seq: 16,
+            batch: 2,
+            params,
+            layer_dims,
+        }
+    }
+
+    #[test]
+    fn zero_sparsity_export_is_identity() {
+        let spec = toy_spec();
+        let w = Weights::init(&spec, 5);
+        let mask = PruneMask::full(&spec);
+        let cm = compact_from_mask(&w, &mask, "toy_c").unwrap();
+        assert_eq!(cm.spec.params, spec.params);
+        assert_eq!(cm.weights.packed, w.packed); // bit-identical
+        assert!(cm.spec.is_uniform());
+    }
+
+    #[test]
+    fn export_shrinks_declared_dims() {
+        let spec = toy_spec();
+        let w = Weights::init(&spec, 6);
+        let mut mask = PruneMask::full(&spec);
+        mask.layers[0].ffn[3] = false;
+        mask.layers[0].ffn[7] = false;
+        mask.layers[1].ov[5] = false; // head 1 loses a dim
+        let cm = compact_from_mask(&w, &mask, "toy_c").unwrap();
+        assert_eq!(cm.spec.d_ff_l(0), 14);
+        assert_eq!(cm.spec.d_ff_l(1), 16);
+        assert_eq!(cm.spec.d_ov_l(1), 7);
+        assert_eq!(cm.spec.head_splits_l(1), vec![4, 3]);
+        assert!(!cm.spec.is_uniform());
+        assert!(cm.spec.n_params_elems() < spec.n_params_elems());
+        // sliced tensors have the declared shapes
+        assert_eq!(cm.weights.get_l(0, "w_down").unwrap().shape, vec![8, 14]);
+        assert_eq!(cm.weights.get_l(1, "wv").unwrap().shape, vec![7, 8]);
+        assert_eq!(cm.weights.get_l(1, "wo").unwrap().shape, vec![8, 7]);
+    }
+
+    #[test]
+    fn qk_pruned_mask_rejected() {
+        let spec = toy_spec();
+        let w = Weights::init(&spec, 7);
+        let mut mask = PruneMask::full(&spec);
+        mask.layers[0].qk[2] = false;
+        let err = compact_from_mask(&w, &mask, "x").unwrap_err();
+        assert!(format!("{err:#}").contains("Q/K"), "{err:#}");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let spec = toy_spec();
+        let w = Weights::init(&spec, 8);
+        let mut mask = PruneMask::full(&spec);
+        mask.layers[0].ffn[0] = false;
+        mask.layers[1].ov[1] = false;
+        let cm = compact_from_mask(&w, &mask, "toy_rt").unwrap();
+        let dir = std::env::temp_dir().join("fasp_compact_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let jpath = save_compact(&dir, &cm).unwrap();
+        let re = load_compact(&jpath).unwrap();
+        assert_eq!(re.spec, cm.spec);
+        assert_eq!(re.weights.packed, cm.weights.packed);
+        assert_eq!(re.base_model, "toy");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,8 +1,14 @@
-//! Host-side reference forward pass for both families. This is the
-//! independent implementation used to cross-check the PJRT artifacts
-//! (test_runtime) and as an offline fallback when artifacts are absent.
+//! Host-side reference forward pass for both families — the execution
+//! engine of the host runtime backend (see `runtime::host_exec`) and the
+//! independent numerics baseline every test pins down.
 //! Mirrors `python/compile/model.py` exactly — any drift is a test
 //! failure, not a silent divergence.
+//!
+//! Per-layer dims: a compact (physically sliced) model keeps a different
+//! number of FFN hidden units and attention V/out dims in every layer
+//! (`ModelSpec::layer_dims`), with the V/out dims split unevenly across
+//! heads. The forward reads those dims per layer, so masked-dense and
+//! compact models run through the same code path.
 
 use crate::runtime::manifest::ModelSpec;
 use crate::tensor::matmul::{matmul_bt, matmul};
@@ -11,9 +17,9 @@ use crate::tensor::{IntTensor, Tensor};
 use super::weights::Weights;
 use anyhow::Result;
 
-const LN_EPS: f32 = 1e-5;
+pub(crate) const LN_EPS: f32 = 1e-5;
 
-fn layer_norm(x: &mut [f32], d: usize, g: &[f32], b: &[f32]) {
+pub(crate) fn layer_norm(x: &mut [f32], d: usize, g: &[f32], b: &[f32]) {
     for row in x.chunks_exact_mut(d) {
         let mu: f32 = row.iter().sum::<f32>() / d as f32;
         let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
@@ -24,7 +30,7 @@ fn layer_norm(x: &mut [f32], d: usize, g: &[f32], b: &[f32]) {
     }
 }
 
-fn rms_norm(x: &mut [f32], d: usize, g: &[f32]) {
+pub(crate) fn rms_norm(x: &mut [f32], d: usize, g: &[f32]) {
     for row in x.chunks_exact_mut(d) {
         let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
         let inv = 1.0 / (ms + LN_EPS).sqrt();
@@ -35,7 +41,7 @@ fn rms_norm(x: &mut [f32], d: usize, g: &[f32]) {
 }
 
 /// cos/sin tables [t, dh/2] matching python rope_tables.
-fn rope_tables(t: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
+pub(crate) fn rope_tables(t: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
     let half = dh / 2;
     let mut cos = vec![0.0f32; t * half];
     let mut sin = vec![0.0f32; t * half];
@@ -51,7 +57,7 @@ fn rope_tables(t: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
 }
 
 /// Rotate-half RoPE applied in place to [t, dh] rows of one head.
-fn apply_rope(x: &mut [f32], t: usize, dh: usize, cos: &[f32], sin: &[f32]) {
+pub(crate) fn apply_rope(x: &mut [f32], t: usize, dh: usize, cos: &[f32], sin: &[f32]) {
     let half = dh / 2;
     for ti in 0..t {
         let row = &mut x[ti * dh..(ti + 1) * dh];
@@ -67,7 +73,7 @@ fn apply_rope(x: &mut [f32], t: usize, dh: usize, cos: &[f32], sin: &[f32]) {
 }
 
 /// Linear y = x·Wᵀ (+ b). x is [rows, in], w is [out, in].
-fn linear(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Tensor {
+pub(crate) fn linear(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Tensor {
     let mut y = matmul_bt(x, w);
     if let Some(b) = b {
         let (rows, out) = y.dims2();
@@ -82,7 +88,7 @@ fn linear(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Tensor {
 }
 
 /// Per-layer calibration activations (host mirror of capture.py), used by
-/// tests to validate the capture artifact's Gram matrices.
+/// the capture entry and by tests to validate the Gram matrices.
 pub struct HostCaptures {
     pub ln1: Tensor,
     pub ln2: Tensor,
@@ -151,7 +157,20 @@ pub fn forward_nll(
                 linear(&x_ln, &w.get_l(l, "wv")?, None),
             )
         };
-        let ctx = attention(spec, b, t, &q, &k, &v, &cos, &sin, !is_opt);
+        let splits = spec.head_splits_l(l);
+        let ctx = attention(
+            b,
+            t,
+            spec.n_heads,
+            spec.head_dim(),
+            &splits,
+            &q,
+            &k,
+            &v,
+            &cos,
+            &sin,
+            !is_opt,
+        );
         // both families carry an out-proj bias (llama's is the zero-init
         // FLAP-compensation slot, see configs.py)
         let attn_out = linear(&ctx, &w.get_l(l, "wo")?, Some(&w.get_l(l, "bo")?));
@@ -218,11 +237,20 @@ pub fn forward_nll(
     Ok((nll, captures))
 }
 
+/// Causal multi-head attention with per-head V widths.
+///
+/// `q`/`k` are [b·t, n_heads·dh] (full Q/K head dim); `v` is
+/// [b·t, Σ splits] with head `h`'s value dims occupying the contiguous
+/// column block given by the prefix sums of `splits`. Returns the context
+/// [b·t, Σ splits] in the same column layout (the input layout of the
+/// sliced `wo`).
 #[allow(clippy::too_many_arguments)]
-fn attention(
-    spec: &ModelSpec,
+pub(crate) fn attention(
     b: usize,
     t: usize,
+    n_heads: usize,
+    dh: usize,
+    splits: &[usize],
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
@@ -230,23 +258,35 @@ fn attention(
     sin: &[f32],
     rope: bool,
 ) -> Tensor {
-    let d = spec.d_model;
-    let h = spec.n_heads;
-    let dh = spec.head_dim();
+    assert_eq!(splits.len(), n_heads);
+    let dov: usize = splits.iter().sum();
+    let mut offs = Vec::with_capacity(n_heads + 1);
+    let mut acc = 0usize;
+    offs.push(0);
+    for &s in splits {
+        acc += s;
+        offs.push(acc);
+    }
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut ctx = Tensor::zeros(&[b * t, d]);
-    // per (batch, head): gather [t, dh] slices, optional rope, attention
+    let mut ctx = Tensor::zeros(&[b * t, dov]);
+    // per (batch, head): gather [t, dh]/[t, dv] slices, optional rope,
+    // causal attention
     let mut qh = vec![0.0f32; t * dh];
     let mut kh = vec![0.0f32; t * dh];
-    let mut vh = vec![0.0f32; t * dh];
     for bi in 0..b {
-        for hi in 0..h {
+        for hi in 0..n_heads {
+            let dv = splits[hi];
+            if dv == 0 {
+                continue; // head fully sliced away: nothing reads its scores
+            }
+            let vo = offs[hi];
+            let mut vh = vec![0.0f32; t * dv];
             for ti in 0..t {
                 let r = bi * t + ti;
                 let src = hi * dh..(hi + 1) * dh;
                 qh[ti * dh..(ti + 1) * dh].copy_from_slice(&q.row(r)[src.clone()]);
-                kh[ti * dh..(ti + 1) * dh].copy_from_slice(&k.row(r)[src.clone()]);
-                vh[ti * dh..(ti + 1) * dh].copy_from_slice(&v.row(r)[src]);
+                kh[ti * dh..(ti + 1) * dh].copy_from_slice(&k.row(r)[src]);
+                vh[ti * dv..(ti + 1) * dv].copy_from_slice(&v.row(r)[vo..vo + dv]);
             }
             if rope {
                 apply_rope(&mut qh, t, dh, cos, sin);
@@ -269,9 +309,9 @@ fn attention(
                     *s = (*s - m).exp();
                     z += *s;
                 }
-                let out = &mut ctx.row_mut(bi * t + ti)[hi * dh..(hi + 1) * dh];
+                let out = &mut ctx.row_mut(bi * t + ti)[vo..vo + dv];
                 for (tj, w) in scores.iter().enumerate() {
-                    let vrow = &vh[tj * dh..(tj + 1) * dh];
+                    let vrow = &vh[tj * dv..(tj + 1) * dv];
                     let wz = w / z;
                     for (o, vv) in out.iter_mut().zip(vrow) {
                         *o += wz * vv;
@@ -292,4 +332,62 @@ pub fn host_gram(x: &Tensor) -> Tensor {
 pub fn mean_nll(w: &Weights, tokens: &IntTensor, targets: &IntTensor) -> Result<f32> {
     let (nll, _) = forward_nll(w, tokens, targets, false)?;
     Ok(nll.data.iter().sum::<f32>() / nll.numel() as f32)
+}
+
+/// One physically sliced LLaMA-style decoder layer (the latency artifact
+/// entry, mirroring `python/compile/latency.py::layer_fwd_sliced`).
+/// Inputs, in order: x [b,t,d], ln1_g [d], wq [d,d], wk [d,d],
+/// wv [dk_s,d], wo [d,dk_s], ln2_g [d], w_gate [f_s,d], w_up [f_s,d],
+/// w_down [d,f_s]. Returns y [b,t,d].
+pub fn sliced_layer_fwd(
+    b: usize,
+    t: usize,
+    n_heads: usize,
+    inputs: &[Tensor],
+) -> Result<Tensor> {
+    anyhow::ensure!(inputs.len() == 10, "sliced layer wants 10 inputs");
+    let x3 = &inputs[0];
+    let (bb, tt, d) = x3.dims3();
+    anyhow::ensure!(bb == b && tt == t, "sliced layer batch/seq mismatch");
+    let ln1_g = &inputs[1];
+    let wq = &inputs[2];
+    let wk = &inputs[3];
+    let wv = &inputs[4];
+    let wo = &inputs[5];
+    let ln2_g = &inputs[6];
+    let w_gate = &inputs[7];
+    let w_up = &inputs[8];
+    let w_down = &inputs[9];
+    let dk_s = wv.shape[0];
+    anyhow::ensure!(dk_s % n_heads == 0, "dk_s {} not divisible by heads", dk_s);
+    let dh = d / n_heads;
+    let rows = b * t;
+
+    let mut x = Tensor::new(vec![rows, d], x3.data.clone());
+    let mut x_ln = x.clone();
+    rms_norm(&mut x_ln.data, d, &ln1_g.data);
+    let q = linear(&x_ln, wq, None);
+    let k = linear(&x_ln, wk, None);
+    let v = linear(&x_ln, wv, None);
+    let (cos, sin) = rope_tables(t, dh);
+    let splits = vec![dk_s / n_heads; n_heads];
+    let ctx = attention(b, t, n_heads, dh, &splits, &q, &k, &v, &cos, &sin, true);
+    let attn_out = linear(&ctx, wo, None);
+    for (xv, av) in x.data.iter_mut().zip(&attn_out.data) {
+        *xv += av;
+    }
+    let mut x_ln2 = x.clone();
+    rms_norm(&mut x_ln2.data, d, &ln2_g.data);
+    let g = linear(&x_ln2, w_gate, None);
+    let u = linear(&x_ln2, w_up, None);
+    let mut h = u;
+    for (hv, gv) in h.data.iter_mut().zip(&g.data) {
+        let silu = gv / (1.0 + (-gv).exp());
+        *hv *= silu;
+    }
+    let y = linear(&h, w_down, None);
+    for (xv, yv) in x.data.iter_mut().zip(&y.data) {
+        *xv += yv;
+    }
+    Ok(Tensor::new(vec![b, t, d], x.data))
 }

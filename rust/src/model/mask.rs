@@ -7,7 +7,13 @@
 //! while keeping artifact shapes static. The mask tracks which structures
 //! were removed so (a) coupled rows/biases are zeroed too (the actual
 //! sparsity win), (b) parameter accounting matches the paper's notion of
-//! sparsity, and (c) invariants are property-testable.
+//! sparsity, (c) invariants are property-testable, and (d) the compact
+//! exporter (`model::compact`) knows exactly which rows/columns to slice
+//! out physically.
+//!
+//! Mask vector lengths follow the model's *per-layer* dims
+//! (`ModelSpec::layer_dims`), so compact models can be re-masked and
+//! re-pruned through the same machinery.
 
 use crate::runtime::manifest::ModelSpec;
 use anyhow::Result;
@@ -15,19 +21,21 @@ use anyhow::Result;
 /// Per-layer kept masks. `true` = kept.
 #[derive(Clone, Debug)]
 pub struct LayerMask {
-    /// FFN hidden units (columns of fc2/down ↔ rows of fc1/gate/up), len f.
+    /// FFN hidden units (columns of fc2/down ↔ rows of fc1/gate/up),
+    /// len `spec.d_ff_l(l)`.
     pub ffn: Vec<bool>,
-    /// Attention context dims (columns of W_out ↔ rows of W_V), len d.
+    /// Attention context dims (columns of W_out ↔ rows of W_V),
+    /// len `spec.d_ov_l(l)`.
     pub ov: Vec<bool>,
-    /// Q/K rows (ablation only; FASP default keeps all), len d.
+    /// Q/K rows (ablation only; FASP default keeps all), len d_model.
     pub qk: Vec<bool>,
 }
 
 impl LayerMask {
-    pub fn full(spec: &ModelSpec) -> LayerMask {
+    pub fn full(spec: &ModelSpec, l: usize) -> LayerMask {
         LayerMask {
-            ffn: vec![true; spec.d_ff],
-            ov: vec![true; spec.d_model],
+            ffn: vec![true; spec.d_ff_l(l)],
+            ov: vec![true; spec.d_ov_l(l)],
             qk: vec![true; spec.d_model],
         }
     }
@@ -50,7 +58,7 @@ pub fn pruned_indices(mask: &[bool]) -> Vec<usize> {
 impl PruneMask {
     pub fn full(spec: &ModelSpec) -> PruneMask {
         PruneMask {
-            layers: (0..spec.n_layers).map(|_| LayerMask::full(spec)).collect(),
+            layers: (0..spec.n_layers).map(|l| LayerMask::full(spec, l)).collect(),
         }
     }
 
@@ -89,12 +97,22 @@ impl PruneMask {
     }
 
     /// Structural consistency checks (property-tested):
-    /// mask vector lengths match the model dims.
+    /// mask vector lengths match the model's per-layer dims.
     pub fn validate(&self, spec: &ModelSpec) -> Result<()> {
         anyhow::ensure!(self.layers.len() == spec.n_layers, "layer count");
         for (l, lm) in self.layers.iter().enumerate() {
-            anyhow::ensure!(lm.ffn.len() == spec.d_ff, "layer {l} ffn mask len");
-            anyhow::ensure!(lm.ov.len() == spec.d_model, "layer {l} ov mask len");
+            anyhow::ensure!(
+                lm.ffn.len() == spec.d_ff_l(l),
+                "layer {l} ffn mask len {} != {}",
+                lm.ffn.len(),
+                spec.d_ff_l(l)
+            );
+            anyhow::ensure!(
+                lm.ov.len() == spec.d_ov_l(l),
+                "layer {l} ov mask len {} != {}",
+                lm.ov.len(),
+                spec.d_ov_l(l)
+            );
             anyhow::ensure!(lm.qk.len() == spec.d_model, "layer {l} qk mask len");
         }
         Ok(())
@@ -102,15 +120,21 @@ impl PruneMask {
 }
 
 /// Total parameters in the prunable pool (all decoder-block linears,
-/// counted with their biases where present).
+/// counted with their biases where present), summed over the per-layer
+/// dims so compact models account honestly.
 pub fn prunable_params(spec: &ModelSpec) -> usize {
     let d = spec.d_model;
-    let f = spec.d_ff;
-    let per_layer = if spec.family == "opt" {
-        // wq,wk,wv,wo: 4 d² + 4 d biases; fc1: f·d + f; fc2: d·f + d
-        4 * d * d + 4 * d + 2 * d * f + f + d
-    } else {
-        4 * d * d + 3 * d * f
-    };
-    per_layer * spec.n_layers
+    let mut total = 0usize;
+    for l in 0..spec.n_layers {
+        let f = spec.d_ff_l(l);
+        let ov = spec.d_ov_l(l);
+        total += if spec.family == "opt" {
+            // wq,wk: 2(d² + d); wv: ov·d + ov; wo: d·ov + d;
+            // fc1: f·d + f; fc2: d·f + d
+            2 * (d * d + d) + (ov * d + ov) + (d * ov + d) + (2 * d * f + f + d)
+        } else {
+            2 * d * d + 2 * ov * d + 3 * d * f
+        };
+    }
+    total
 }

@@ -1,12 +1,15 @@
 //! Model zoo: weight storage (packed, manifest-ordered), deterministic
-//! initialization, checkpoints, a host-side reference forward (numerics
-//! cross-check for the PJRT path + offline fallback), and the pruning
-//! mask bookkeeping.
+//! initialization, checkpoints, the host forward/backward (the runtime's
+//! execution engine and the numerics baseline), the pruning mask
+//! bookkeeping, and the compact (physically sliced) export path.
 
 pub mod weights;
 pub mod host;
+pub mod host_grad;
 pub mod mask;
+pub mod compact;
 pub mod zoo;
 
+pub use compact::CompactModel;
 pub use mask::PruneMask;
 pub use weights::Weights;

@@ -38,6 +38,22 @@ impl Weights {
         }
     }
 
+    /// Wrap an existing packed parameter vector (length-checked).
+    pub fn from_packed(spec: &ModelSpec, data: Vec<f32>) -> Result<Weights> {
+        anyhow::ensure!(
+            data.len() == spec.n_params_elems(),
+            "packed length {} != model {} ({})",
+            data.len(),
+            spec.n_params_elems(),
+            spec.name,
+        );
+        Ok(Weights {
+            spec: spec.clone(),
+            packed: Tensor::new(vec![data.len()], data),
+            offsets: Self::build_offsets(spec),
+        })
+    }
+
     /// Deterministic initialization: N(0, 0.02) for embeddings and linear
     /// weights (GPT-style), ones for norm gains, zeros for biases.
     pub fn init(spec: &ModelSpec, seed: u64) -> Weights {

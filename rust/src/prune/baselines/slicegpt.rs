@@ -37,6 +37,12 @@ pub fn prune_slicegpt(
     opts: &PruneOpts,
 ) -> Result<(Weights, PruneMask, PruneReport)> {
     let spec = engine.spec.clone();
+    // the per-head rotation assumes every head owns a full dh-block of
+    // the context Gram — only true for uniform (non-compact) specs
+    anyhow::ensure!(
+        spec.is_uniform(),
+        "SliceGPT-like baseline requires a uniform (non-compact) model spec"
+    );
     let mut w = weights.clone();
     let mut mask = PruneMask::full(&spec);
     let mut sw = Stopwatch::start();

@@ -8,7 +8,9 @@
 //! * [`restore`]   — the closed-form least-squares restoration (§3.3,
 //!   Eq. 8) via the host Cholesky, plus FLAP bias compensation.
 //! * [`pipeline`]  — the coordinator: calibration capture → scores →
-//!   selection → apply/restore, with per-phase wall-time accounting.
+//!   selection → apply/restore, with per-phase wall-time accounting,
+//!   plus the `repack` stage that exports a compact (physically sliced)
+//!   model artifact.
 //! * [`baselines`] — SliceGPT-like PCA slicing (rotation on the OV pair,
 //!   energy metric on FFN), and method plumbing for LLM-Pruner-like /
 //!   NASLLM-ADMM variants.
@@ -21,5 +23,5 @@ pub mod pipeline;
 pub mod baselines;
 pub mod report;
 
-pub use pipeline::prune;
+pub use pipeline::{prune, prune_compact, CompactOutcome};
 pub use types::{Method, PruneOpts, PruneReport};

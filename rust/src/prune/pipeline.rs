@@ -94,8 +94,12 @@ pub fn prune(
                 ov_scores.push(kernel_metric.wanda_scores(&w_o, &stats.attn_xnorm(l))?);
             }
         }
-        let ffn_total = units(spec.d_ff, group_plan.ffn_ratio) * spec.n_layers;
-        let ov_total = units(spec.d_model, group_plan.ov_ratio) * spec.n_layers;
+        let ffn_total: usize = (0..spec.n_layers)
+            .map(|l| units(spec.d_ff_l(l), group_plan.ffn_ratio))
+            .sum();
+        let ov_total: usize = (0..spec.n_layers)
+            .map(|l| units(spec.d_ov_l(l), group_plan.ov_ratio))
+            .sum();
         let ffn_pruned = global_lowest(&ffn_scores, ffn_total);
         let ov_pruned = global_lowest(&ov_scores, ov_total);
         sw.split("metric");
@@ -120,7 +124,7 @@ pub fn prune(
             (Method::Magnitude, _) => magnitude_scores(&w_later),
             _ => kernel_metric.wanda_scores(&w_later, &stats.ffn_xnorm(l))?,
         };
-        let k_ffn = units(spec.d_ff, group_plan.ffn_ratio);
+        let k_ffn = units(spec.d_ff_l(l), group_plan.ffn_ratio);
         let ffn_pruned = lowest_k(&ffn_scores, k_ffn);
         sw.split("metric");
         apply_ffn(&mut w, &stats, l, &ffn_pruned, opts, &mut mask.layers[l], &mut sw)?;
@@ -132,7 +136,7 @@ pub fn prune(
             (Method::Magnitude, _) => magnitude_scores(&w_o),
             _ => kernel_metric.wanda_scores(&w_o, &stats.attn_xnorm(l))?,
         };
-        let k_ov = units(spec.d_model, group_plan.ov_ratio);
+        let k_ov = units(spec.d_ov_l(l), group_plan.ov_ratio);
         let ov_pruned = lowest_k(&ov_scores, k_ov);
         sw.split("metric");
         apply_ov(&mut w, &stats, l, &ov_pruned, opts, &mut mask.layers[l], &mut sw)?;
@@ -188,7 +192,7 @@ fn apply_ffn(
     let is_opt = w.spec.family == "opt";
     let later = if is_opt { "fc2" } else { "w_down" };
     let bias = if is_opt { "bfc2" } else { "b_down" };
-    let mut kept = vec![true; w.spec.d_ff];
+    let mut kept = vec![true; w.spec.d_ff_l(l)];
     for &j in pruned {
         kept[j] = false;
     }
@@ -210,7 +214,7 @@ fn apply_ffn(
                 let g64: Vec<f64> =
                     stats.layers[l].g_ffn.data.iter().map(|&x| x as f64).collect();
                 let mut greg = g64;
-                let n = w.spec.d_ff;
+                let n = w.spec.d_ff_l(l);
                 let mean_diag: f64 =
                     (0..n).map(|i| greg[i * n + i]).sum::<f64>() / n as f64;
                 for i in 0..n {
@@ -271,7 +275,7 @@ fn apply_ov(
         return Ok(());
     }
     let is_opt = w.spec.family == "opt";
-    let mut kept = vec![true; w.spec.d_model];
+    let mut kept = vec![true; w.spec.d_ov_l(l)];
     for &j in pruned {
         kept[j] = false;
     }
@@ -288,7 +292,7 @@ fn apply_ov(
     let new_wo = if opts.restore {
         match opts.method {
             Method::NasllmAdmm => {
-                let n = w.spec.d_model;
+                let n = w.spec.d_ov_l(l);
                 let mut g64: Vec<f64> =
                     stats.layers[l].g_attn.data.iter().map(|&x| x as f64).collect();
                 let mean_diag: f64 =
@@ -408,17 +412,51 @@ fn flap_select(
     for l in 0..spec.n_layers {
         let wl = w.get_l(l, later)?;
         let gd: Vec<f32> =
-            (0..spec.d_ff).map(|i| stats.layers[l].g_ffn.at2(i, i)).collect();
+            (0..spec.d_ff_l(l)).map(|i| stats.layers[l].g_ffn.at2(i, i)).collect();
         ffn_scores.push(flap_scores(&wl, &gd, &stats.layers[l].m_ffn.data, stats.rows));
         let wo = w.get_l(l, "wo")?;
         let gd: Vec<f32> =
-            (0..spec.d_model).map(|i| stats.layers[l].g_attn.at2(i, i)).collect();
+            (0..spec.d_ov_l(l)).map(|i| stats.layers[l].g_attn.at2(i, i)).collect();
         ov_scores.push(flap_scores(&wo, &gd, &stats.layers[l].m_attn.data, stats.rows));
     }
-    let ffn_total = units(spec.d_ff, plan.ffn_ratio) * spec.n_layers;
-    let ov_total = units(spec.d_model, plan.ov_ratio) * spec.n_layers;
+    let ffn_total: usize = (0..spec.n_layers)
+        .map(|l| units(spec.d_ff_l(l), plan.ffn_ratio))
+        .sum();
+    let ov_total: usize = (0..spec.n_layers)
+        .map(|l| units(spec.d_ov_l(l), plan.ov_ratio))
+        .sum();
     Ok((
         global_lowest(&ffn_scores, ffn_total),
         global_lowest(&ov_scores, ov_total),
     ))
+}
+
+/// Outcome of [`prune_compact`]: the masked weights, the structural
+/// mask, the phase report (with the extra `repack` stage), and the
+/// physically sliced compact model ready to save/run.
+pub struct CompactOutcome {
+    pub pruned: Weights,
+    pub mask: PruneMask,
+    pub report: PruneReport,
+    pub compact: crate::model::compact::CompactModel,
+}
+
+/// Prune, then physically repack the result into a compact model named
+/// `name`. The repack wall-time lands in the report as a `repack` phase
+/// (Table-4-style accounting), so the export cost is visible next to
+/// capture/metric/restore.
+pub fn prune_compact(
+    engine: &ModelEngine,
+    weights: &Weights,
+    dataset: &Dataset,
+    opts: &PruneOpts,
+    name: &str,
+) -> Result<CompactOutcome> {
+    let (pruned, mask, mut report) = prune(engine, weights, dataset, opts)?;
+    let t0 = std::time::Instant::now();
+    let compact = crate::model::compact::compact_from_mask(&pruned, &mask, name)?;
+    let repack_s = t0.elapsed().as_secs_f64();
+    report.phase_s.push(("repack".to_string(), repack_s));
+    report.total_s += repack_s;
+    Ok(CompactOutcome { pruned, mask, report, compact })
 }

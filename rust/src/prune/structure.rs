@@ -41,14 +41,18 @@ pub fn unit_costs(spec: &ModelSpec) -> (usize, usize, usize) {
 /// Compute per-group ratios achieving global `sparsity` over the
 /// prunable pool (paper: "we increase the sparsity level of the other
 /// layers uniformly to satisfy the overall sparsity requirements").
+/// Per-layer dims (compact models) are summed, so the same uniform ratio
+/// stays exact for heterogeneous layers.
 pub fn plan(spec: &ModelSpec, sparsity: f64, prune_qk: bool) -> GroupPlan {
     let (ffn_c, ov_c, qk_c) = unit_costs(spec);
-    let f = spec.d_ff as f64;
     let d = spec.d_model as f64;
-    let pool = prunable_params(spec) as f64 / spec.n_layers as f64;
-    let removable = f * ffn_c as f64
-        + d * ov_c as f64
-        + if prune_qk { d * qk_c as f64 } else { 0.0 };
+    let pool = prunable_params(spec) as f64;
+    let mut removable = 0.0f64;
+    for l in 0..spec.n_layers {
+        removable += spec.d_ff_l(l) as f64 * ffn_c as f64
+            + spec.d_ov_l(l) as f64 * ov_c as f64
+            + if prune_qk { d * qk_c as f64 } else { 0.0 };
+    }
     let r = (sparsity * pool / removable).clamp(0.0, 1.0);
     GroupPlan {
         ffn_ratio: r,
@@ -95,6 +99,7 @@ mod tests {
             seq: 64,
             batch: 8,
             params: vec![],
+            layer_dims: vec![],
         }
     }
 

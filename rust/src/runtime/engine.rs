@@ -4,6 +4,7 @@
 //! compile lazily (first use) and are cached for the engine's lifetime.
 
 use super::executable::{Artifact, In};
+use super::literal::Literal;
 use super::manifest::{Manifest, ModelSpec};
 use crate::tensor::{IntTensor, Tensor};
 use crate::tensor::ops::add_assign;
@@ -115,23 +116,25 @@ impl<'m> ModelEngine<'m> {
         Self::unpack_fwd(a, leaves)
     }
 
-    /// Pre-uploaded packed-params literal for multi-batch loops: building
-    /// the [P] literal once amortizes the dominant host→literal copy
-    /// (EXPERIMENTS.md §Perf).
-    pub fn params_literal(&self, params: &Tensor) -> Result<xla::Literal> {
+    /// Pre-built packed-params literal for multi-batch loops: building
+    /// the [P] literal once skips the per-call tensor→literal copy and
+    /// shape re-validation at the artifact boundary (the host backend
+    /// still takes its own working copy per call, which is small next to
+    /// the forward compute).
+    pub fn params_literal(&self, params: &Tensor) -> Result<Literal> {
         anyhow::ensure!(
             params.numel() == self.spec.n_params_elems(),
             "param length {} != {}",
             params.numel(),
             self.spec.n_params_elems()
         );
-        Ok(super::executable::f32_literal(&[params.numel()], &params.data))
+        Ok(Literal::from_f32(&[params.numel()], params.data.clone()))
     }
 
     /// `fwd_loss` with a cached params literal.
     pub fn fwd_loss_lit(
         &self,
-        params: &xla::Literal,
+        params: &Literal,
         tokens: &IntTensor,
         targets: &IntTensor,
     ) -> Result<FwdOut> {
@@ -140,9 +143,9 @@ impl<'m> ModelEngine<'m> {
         Self::unpack_fwd(a, leaves)
     }
 
-    fn unpack_fwd(a: &Artifact, leaves: Vec<xla::Literal>) -> Result<FwdOut> {
-        let mean = leaves[0].to_vec::<f32>()?[0];
-        let seq = leaves[1].to_vec::<f32>()?;
+    fn unpack_fwd(a: &Artifact, leaves: Vec<Literal>) -> Result<FwdOut> {
+        let mean = leaves[0].as_f32()?[0];
+        let seq = leaves[1].as_f32()?.to_vec();
         let tok = a.to_tensor(2, &leaves[2])?;
         Ok(FwdOut { mean_nll: mean, seq_nll: seq, tok_nll: tok })
     }
@@ -244,12 +247,12 @@ impl<'m> ModelEngine<'m> {
     /// (loss, new state literal) — the state never unpacks on the host.
     pub fn train_step(
         &self,
-        state: &xla::Literal,
+        state: &Literal,
         tokens: &IntTensor,
         targets: &IntTensor,
         t: f32,
         lr: f32,
-    ) -> Result<(f32, xla::Literal)> {
+    ) -> Result<(f32, Literal)> {
         let a = self.train_artifact()?;
         let t_s = Tensor::scalar(t);
         let lr_s = Tensor::scalar(lr);
@@ -260,22 +263,22 @@ impl<'m> ModelEngine<'m> {
             In::F(&t_s),
             In::F(&lr_s),
         ])?;
-        let loss = leaves[0].to_vec::<f32>()?[0];
+        let loss = leaves[0].as_f32()?[0];
         Ok((loss, leaves.remove(1)))
     }
 
     /// Build a fresh packed train state [3P] from packed params [P].
-    pub fn init_train_state(&self, params: &Tensor) -> Result<xla::Literal> {
+    pub fn init_train_state(&self, params: &Tensor) -> Result<Literal> {
         let p = params.numel();
         anyhow::ensure!(p == self.spec.n_params_elems(), "param length");
         let mut state = vec![0.0f32; 3 * p];
         state[..p].copy_from_slice(&params.data);
-        Ok(super::executable::f32_literal(&[3 * p], &state))
+        Ok(Literal::from_f32(&[3 * p], state))
     }
 
     /// Extract packed params [P] from a packed train-state literal [3P].
-    pub fn params_from_state(&self, state: &xla::Literal) -> Result<Tensor> {
-        let all: Vec<f32> = state.to_vec()?;
+    pub fn params_from_state(&self, state: &Literal) -> Result<Tensor> {
+        let all = state.as_f32()?;
         let p = self.spec.n_params_elems();
         anyhow::ensure!(all.len() == 3 * p, "state length {}", all.len());
         Ok(Tensor::new(vec![p], all[..p].to_vec()))

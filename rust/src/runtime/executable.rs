@@ -1,26 +1,35 @@
-//! One compiled artifact: HLO text → `XlaComputation` → PJRT executable,
-//! plus typed input construction and output unpacking.
+//! One loaded artifact: manifest entry → resolved host implementation,
+//! plus typed input construction and output validation.
 //!
-//! Conventions (set by `python/compile/aot_util.py`):
-//! * the computation root is a tuple (`return_tuple=True`) — PJRT hands
-//!   back ONE tuple buffer, which we decompose on the host;
+//! Conventions (inherited from the original AOT pipeline):
+//! * outputs form an ordered tuple of leaves, returned as [`Literal`]s;
 //! * inputs are passed positionally in manifest order;
 //! * shapes/dtypes are validated against the manifest before execution so
 //!   a drifted artifact fails loudly, not with garbage numerics.
+//!
+//! Host artifacts carry a small on-disk stamp file (written by
+//! `gen_host_artifacts.py`); loading validates it so a corrupt or
+//! garbage artifact file is rejected up front. Entries synthesized
+//! in-memory (compact models) have no file and skip that check.
 
-use super::manifest::{ArtifactSpec, DType, Manifest};
+use super::host_exec::HostEntry;
+use super::literal::Literal;
+use super::manifest::{ArtifactKind, ArtifactSpec, DType, Manifest};
 use crate::tensor::{IntTensor, Tensor};
 use anyhow::{bail, Context, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// First line of every host artifact stamp file.
+pub const HOST_ARTIFACT_MAGIC: &str = "FASP-HOST-ARTIFACT v1";
 
 /// Borrowed host value for artifact inputs.
 #[derive(Clone, Copy)]
 pub enum In<'a> {
     F(&'a Tensor),
     I(&'a IntTensor),
-    /// An opaque literal already in artifact-output form (fed back, e.g.
-    /// the packed train state). Shape-checked against the input spec.
-    Lit(&'a xla::Literal),
+    /// An opaque literal already in artifact form (fed back, e.g. the
+    /// packed train state). Shape-checked against the input spec.
+    Lit(&'a Literal),
 }
 
 /// Running counters for the perf breakdown (EXPERIMENTS.md §Perf).
@@ -34,55 +43,53 @@ pub struct ExecStats {
 
 pub struct Artifact {
     pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+    entry: HostEntry,
     pub stats: ExecStats,
 }
 
-pub(crate) fn f32_literal(shape: &[usize], data: &[f32]) -> xla::Literal {
-    let bytes = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-    };
-    xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        shape,
-        bytes,
-    )
-    .expect("f32 literal")
-}
-
-pub(crate) fn i32_literal(shape: &[usize], data: &[i32]) -> xla::Literal {
-    let bytes = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-    };
-    xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::S32,
-        shape,
-        bytes,
-    )
-    .expect("i32 literal")
+/// Validate a host artifact stamp file: magic line + matching entry name.
+fn validate_stamp(path: &std::path::Path, name: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read artifact file {}", path.display()))?;
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(l) if l.trim() == HOST_ARTIFACT_MAGIC => {}
+        _ => bail!(
+            "{}: not a host artifact (bad magic; expected '{HOST_ARTIFACT_MAGIC}')",
+            path.display()
+        ),
+    }
+    let entry_line = format!("entry: {name}");
+    if !lines.any(|l| l.trim() == entry_line) {
+        bail!("{}: artifact stamp does not declare '{entry_line}'", path.display());
+    }
+    Ok(())
 }
 
 impl Artifact {
-    /// Load and compile `name` from the manifest's artifact directory.
+    /// Load `name` from the manifest: validate its stamp file (when it
+    /// has one) and resolve the host implementation.
     pub fn load(manifest: &Manifest, name: &str) -> Result<Artifact> {
         let spec = manifest.artifact(name)?.clone();
-        let path = manifest.artifact_path(&spec);
+        if spec.kind == ArtifactKind::Hlo {
+            bail!(
+                "artifact '{name}' is an AOT HLO entry; this build executes \
+                 host artifacts only — regenerate with gen_host_artifacts.py"
+            );
+        }
         let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = super::client::with_client(|c| {
-            c.compile(&comp)
-                .with_context(|| format!("XLA compile of '{name}'"))
-        })?;
-        crate::debug!("compiled {name} in {:.2?}", t0.elapsed());
-        Ok(Artifact { spec, exe, stats: ExecStats::default() })
+        if !spec.file.is_empty() {
+            let path = manifest.artifact_path(&spec);
+            validate_stamp(&path, name)
+                .with_context(|| format!("load artifact '{name}'"))?;
+        }
+        let entry = HostEntry::resolve(manifest, name)?;
+        crate::debug!("loaded {name} in {:.2?}", t0.elapsed());
+        Ok(Artifact { spec, entry, stats: ExecStats::default() })
     }
 
     /// Execute with typed host inputs; returns output leaves as literals.
-    pub fn call(&self, inputs: &[In]) -> Result<Vec<xla::Literal>> {
+    pub fn call(&self, inputs: &[In]) -> Result<Vec<Literal>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
                 "{}: got {} inputs, artifact wants {}",
@@ -92,10 +99,9 @@ impl Artifact {
             );
         }
         let t0 = std::time::Instant::now();
-        let mut lits: Vec<xla::Literal> = Vec::with_capacity(inputs.len());
-        // borrowed literals are referenced via index into `inputs`
-        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(inputs.len());
-        for (i, (inp, spec)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+        // owned literals for tensor inputs; borrowed passed through
+        let mut owned: Vec<Literal> = Vec::with_capacity(inputs.len());
+        for (i, (inp, spec)) in inputs.iter().copied().zip(&self.spec.inputs).enumerate() {
             match inp {
                 In::F(t) => {
                     if t.shape != spec.shape || spec.dtype != DType::F32 {
@@ -104,7 +110,7 @@ impl Artifact {
                             self.spec.name, i, spec.name, t.shape, spec.dtype, spec.shape
                         );
                     }
-                    lits.push(f32_literal(&t.shape, &t.data));
+                    owned.push(Literal::from_tensor(t));
                 }
                 In::I(t) => {
                     if t.shape != spec.shape || spec.dtype != DType::I32 {
@@ -113,7 +119,7 @@ impl Artifact {
                             self.spec.name, i, spec.name, t.shape, spec.dtype, spec.shape
                         );
                     }
-                    lits.push(i32_literal(&t.shape, &t.data));
+                    owned.push(Literal::from_int_tensor(t));
                 }
                 In::Lit(l) => {
                     let n = l.element_count();
@@ -123,41 +129,31 @@ impl Artifact {
                             self.spec.name, i, spec.name, n, spec.shape
                         );
                     }
-                    refs.push(l);
                 }
             }
         }
-        // Build the positional argument list preserving order.
-        let mut all: Vec<&xla::Literal> = Vec::with_capacity(inputs.len());
-        let mut li = 0;
-        let mut ri = 0;
-        for inp in inputs {
+        // positional argument list preserving order
+        let mut all: Vec<&Literal> = Vec::with_capacity(inputs.len());
+        let mut oi = 0usize;
+        for inp in inputs.iter().copied() {
             match inp {
-                In::Lit(_) => {
-                    all.push(refs[ri]);
-                    ri += 1;
-                }
+                In::Lit(l) => all.push(l),
                 _ => {
-                    all.push(&lits[li]);
-                    li += 1;
+                    all.push(&owned[oi]);
+                    oi += 1;
                 }
             }
         }
         let upload = t0.elapsed();
 
         let t1 = std::time::Instant::now();
-        let result = self
-            .exe
-            .execute::<&xla::Literal>(&all)
+        let leaves = self
+            .entry
+            .execute(&all)
             .with_context(|| format!("execute {}", self.spec.name))?;
         let exec = t1.elapsed();
 
         let t2 = std::time::Instant::now();
-        let buf = &result[0][0];
-        let root = buf
-            .to_literal_sync()
-            .with_context(|| format!("fetch result of {}", self.spec.name))?;
-        let leaves = root.to_tuple().context("decompose output tuple")?;
         if leaves.len() != self.spec.outputs.len() {
             bail!(
                 "{}: {} output leaves, manifest says {}",
@@ -165,6 +161,19 @@ impl Artifact {
                 leaves.len(),
                 self.spec.outputs.len()
             );
+        }
+        for (i, (leaf, spec)) in leaves.iter().zip(&self.spec.outputs).enumerate() {
+            if leaf.element_count() != spec.numel() || leaf.dtype() != spec.dtype {
+                bail!(
+                    "{} out{}: {} {:?} elems, manifest wants {:?}{:?}",
+                    self.spec.name,
+                    i,
+                    leaf.element_count(),
+                    leaf.dtype(),
+                    spec.dtype,
+                    spec.shape
+                );
+            }
         }
         let download = t2.elapsed();
 
@@ -177,20 +186,21 @@ impl Artifact {
         Ok(leaves)
     }
 
-    /// Convert an output leaf literal to a host Tensor (f32).
-    pub fn to_tensor(&self, leaf_idx: usize, lit: &xla::Literal) -> Result<Tensor> {
+    /// Convert an output leaf literal to a host Tensor (f32), shaped per
+    /// the manifest.
+    pub fn to_tensor(&self, leaf_idx: usize, lit: &Literal) -> Result<Tensor> {
         let spec = &self.spec.outputs[leaf_idx];
         if spec.dtype != DType::F32 {
             bail!("{} out{} is not f32", self.spec.name, leaf_idx);
         }
-        let v: Vec<f32> = lit.to_vec().context("literal to_vec")?;
+        let v = lit.as_f32()?;
         if v.len() != spec.numel() {
             bail!(
                 "{} out{}: {} elems, want {:?}",
                 self.spec.name, leaf_idx, v.len(), spec.shape
             );
         }
-        Ok(Tensor::new(spec.shape.clone(), v))
+        Ok(Tensor::new(spec.shape.clone(), v.to_vec()))
     }
 
     /// Convenience: execute and convert every f32 leaf to a Tensor.

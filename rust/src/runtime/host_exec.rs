@@ -1,0 +1,221 @@
+//! Host entry interpreter: executes every manifest artifact kind
+//! in-process, with the exact input/output contracts the original AOT
+//! HLO entries had (`python/compile/aot.py`). This is the runtime's
+//! execution engine — model entries route through the host reference
+//! forward ([`crate::model::host`]) and the manual backward
+//! ([`crate::model::host_grad`]), kernel entries through the tensor ops.
+//!
+//! Because execution is spec-driven, a compact model's synthesized
+//! entries run through the same code with per-layer dims — no masks, no
+//! special cases.
+
+use super::literal::Literal;
+use super::manifest::{Manifest, ModelSpec};
+use crate::model::{host, host_grad, Weights};
+use crate::tensor::{IntTensor, Tensor};
+use anyhow::{bail, Context, Result};
+
+/// One resolvable host entry.
+pub enum HostEntry {
+    FwdLoss(ModelSpec),
+    Capture(ModelSpec),
+    GradCol(ModelSpec),
+    TrainStep(ModelSpec),
+    WandaMetric { n: usize },
+    Gram { n: usize },
+    FlashAttn { t: usize, dh: usize },
+    LatencyLayer { n_heads: usize },
+}
+
+impl HostEntry {
+    /// Map an artifact name onto its host implementation.
+    pub fn resolve(manifest: &Manifest, name: &str) -> Result<HostEntry> {
+        for (suffix, which) in [
+            ("_fwd_loss", 0usize),
+            ("_capture", 1),
+            ("_gradcol", 2),
+            ("_train_step", 3),
+        ] {
+            if let Some(model) = name.strip_suffix(suffix) {
+                if let Some(spec) = manifest.models.get(model) {
+                    let spec = spec.clone();
+                    return Ok(match which {
+                        0 => HostEntry::FwdLoss(spec),
+                        1 => HostEntry::Capture(spec),
+                        2 => HostEntry::GradCol(spec),
+                        _ => HostEntry::TrainStep(spec),
+                    });
+                }
+            }
+        }
+        if let Some(dims) = name.strip_prefix("wanda_metric_") {
+            let (_, n) = parse_dims(dims, name)?;
+            return Ok(HostEntry::WandaMetric { n });
+        }
+        if let Some(dims) = name.strip_prefix("gram_") {
+            let (_, n) = parse_dims(dims, name)?;
+            return Ok(HostEntry::Gram { n });
+        }
+        if let Some(dims) = name.strip_prefix("flash_attn_") {
+            let (t, dh) = parse_dims(dims, name)?;
+            return Ok(HostEntry::FlashAttn { t, dh });
+        }
+        if manifest.latency.contains_key(name) {
+            let spec = manifest
+                .model("llama_small")
+                .context("latency artifacts need the llama_small spec")?;
+            return Ok(HostEntry::LatencyLayer { n_heads: spec.n_heads });
+        }
+        bail!("no host implementation for artifact '{name}'")
+    }
+
+    /// Execute with shape-validated inputs (the caller, `Artifact::call`,
+    /// checks shapes against the manifest first).
+    pub fn execute(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        match self {
+            HostEntry::FwdLoss(spec) => {
+                let w = weights_from(spec, inputs[0])?;
+                let toks = tokens_checked(inputs[1], spec.vocab, "tokens")?;
+                let tgts = tokens_checked(inputs[2], spec.vocab, "targets")?;
+                let (nll, _) = host::forward_nll(&w, &toks, &tgts, false)?;
+                Ok(fwd_outputs(&nll))
+            }
+            HostEntry::Capture(spec) => {
+                let w = weights_from(spec, inputs[0])?;
+                let toks = tokens_checked(inputs[1], spec.vocab, "tokens")?;
+                // capture needs no targets; reuse tokens as dummies
+                let (_, caps) = host::forward_nll(&w, &toks, &toks, true)?;
+                let mut out = Vec::with_capacity(caps.len() * 8);
+                for cap in &caps {
+                    out.push(Literal::from_tensor(&host::host_gram(&cap.ln1)));
+                    out.push(Literal::from_tensor(&host::host_gram(&cap.ln2)));
+                    out.push(Literal::from_tensor(&host::host_gram(&cap.attn_ctx)));
+                    out.push(Literal::from_tensor(&host::host_gram(&cap.ffn_h)));
+                    out.push(col_sum_literal(&cap.ln1));
+                    out.push(col_sum_literal(&cap.ln2));
+                    out.push(col_sum_literal(&cap.attn_ctx));
+                    out.push(col_sum_literal(&cap.ffn_h));
+                }
+                Ok(out)
+            }
+            HostEntry::GradCol(spec) => {
+                let w = weights_from(spec, inputs[0])?;
+                let toks = tokens_checked(inputs[1], spec.vocab, "tokens")?;
+                let tgts = tokens_checked(inputs[2], spec.vocab, "targets")?;
+                let (_, grad) = host_grad::loss_and_grad(&w, &toks, &tgts)?;
+                let scores = host_grad::taylor_scores(&w, &grad)?;
+                let mut out = Vec::with_capacity(scores.len() * 2);
+                for (ffn, ov) in scores {
+                    let nf = ffn.len();
+                    let no = ov.len();
+                    out.push(Literal::from_f32(&[nf], ffn));
+                    out.push(Literal::from_f32(&[no], ov));
+                }
+                Ok(out)
+            }
+            HostEntry::TrainStep(spec) => {
+                let state = inputs[0].as_f32()?;
+                let toks = tokens_checked(inputs[1], spec.vocab, "tokens")?;
+                let tgts = tokens_checked(inputs[2], spec.vocab, "targets")?;
+                let t = inputs[3].as_f32()?[0];
+                let lr = inputs[4].as_f32()?[0];
+                let (loss, new_state) =
+                    host_grad::train_step_host(spec, state, &toks, &tgts, t, lr)?;
+                let n = new_state.len();
+                Ok(vec![
+                    Literal::scalar_f32(loss),
+                    Literal::from_f32(&[n], new_state),
+                ])
+            }
+            HostEntry::WandaMetric { n } => {
+                let w = inputs[0].to_tensor()?;
+                let xnorm = inputs[1].as_f32()?;
+                let scores = crate::prune::metric::wanda_scores_host(&w, xnorm);
+                Ok(vec![Literal::from_f32(&[*n], scores)])
+            }
+            HostEntry::Gram { n } => {
+                let x = inputs[0].to_tensor()?;
+                let g = host::host_gram(&x);
+                let _ = n;
+                Ok(vec![Literal::from_tensor(&g)])
+            }
+            HostEntry::FlashAttn { t, dh } => {
+                let q = inputs[0].to_tensor()?;
+                let k = inputs[1].to_tensor()?;
+                let v = inputs[2].to_tensor()?;
+                let ctx = host::attention(
+                    1,
+                    *t,
+                    1,
+                    *dh,
+                    &[*dh],
+                    &q,
+                    &k,
+                    &v,
+                    &[],
+                    &[],
+                    false,
+                );
+                Ok(vec![Literal::from_tensor(&ctx)])
+            }
+            HostEntry::LatencyLayer { n_heads } => {
+                let tensors: Vec<Tensor> = inputs
+                    .iter()
+                    .map(|l| l.to_tensor())
+                    .collect::<Result<_>>()?;
+                let (b, t, _) = tensors[0].dims3();
+                let y = host::sliced_layer_fwd(b, t, *n_heads, &tensors)?;
+                Ok(vec![Literal::from_tensor(&y)])
+            }
+        }
+    }
+}
+
+fn parse_dims(s: &str, name: &str) -> Result<(usize, usize)> {
+    let (a, b) = s
+        .split_once('x')
+        .with_context(|| format!("artifact '{name}': expected <m>x<n> dims"))?;
+    let m = a.parse::<usize>().with_context(|| format!("artifact '{name}' dims"))?;
+    let n = b.parse::<usize>().with_context(|| format!("artifact '{name}' dims"))?;
+    Ok((m, n))
+}
+
+fn weights_from(spec: &ModelSpec, params: &Literal) -> Result<Weights> {
+    Weights::from_packed(spec, params.as_f32()?.to_vec())
+}
+
+fn tokens_checked(lit: &Literal, vocab: usize, what: &str) -> Result<IntTensor> {
+    let t = lit.to_int_tensor()?;
+    for &id in &t.data {
+        anyhow::ensure!(
+            id >= 0 && (id as usize) < vocab,
+            "{what}: token id {id} outside vocab {vocab}"
+        );
+    }
+    Ok(t)
+}
+
+fn fwd_outputs(nll: &Tensor) -> Vec<Literal> {
+    let (b, t) = nll.dims2();
+    let mean = nll.data.iter().map(|&x| x as f64).sum::<f64>() / nll.numel() as f64;
+    let seq: Vec<f32> = (0..b)
+        .map(|r| nll.row(r).iter().sum::<f32>())
+        .collect();
+    let _ = t;
+    vec![
+        Literal::scalar_f32(mean as f32),
+        Literal::from_f32(&[b], seq),
+        Literal::from_tensor(nll),
+    ]
+}
+
+fn col_sum_literal(x: &Tensor) -> Literal {
+    let (r, c) = x.dims2();
+    let mut sums = vec![0.0f32; c];
+    for i in 0..r {
+        for (s, v) in sums.iter_mut().zip(x.row(i)) {
+            *s += v;
+        }
+    }
+    Literal::from_f32(&[c], sums)
+}

@@ -1,0 +1,122 @@
+//! Host literal: the typed value currency of the runtime boundary.
+//!
+//! Historically this was `xla::Literal` (a PJRT device-adjacent buffer).
+//! The runtime now executes entries through the in-process host backend
+//! ([`super::host_exec`]), so a literal is a plain owned array — but the
+//! engine API keeps the same shape: params upload once into a `Literal`
+//! and multi-batch loops reuse it, and the packed train state round-trips
+//! opaquely without per-tensor decomposition.
+
+use crate::tensor::{IntTensor, Tensor};
+use anyhow::{bail, Result};
+
+use super::manifest::DType;
+
+/// An owned, shaped, typed host value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Literal {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Literal {
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Literal {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Literal::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Literal {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Literal::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_tensor(t: &Tensor) -> Literal {
+        Literal::F32 { shape: t.shape.clone(), data: t.data.clone() }
+    }
+
+    pub fn from_int_tensor(t: &IntTensor) -> Literal {
+        Literal::I32 { shape: t.shape.clone(), data: t.data.clone() }
+    }
+
+    pub fn scalar_f32(v: f32) -> Literal {
+        Literal::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Literal::F32 { shape, .. } | Literal::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Literal::F32 { .. } => DType::F32,
+            Literal::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::I32 { data, .. } => data.len(),
+        }
+    }
+
+    /// Borrow the f32 payload (errors on dtype mismatch).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Literal::F32 { data, .. } => Ok(data),
+            Literal::I32 { .. } => bail!("literal is i32, expected f32"),
+        }
+    }
+
+    /// Borrow the i32 payload (errors on dtype mismatch).
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Literal::I32 { data, .. } => Ok(data),
+            Literal::F32 { .. } => bail!("literal is f32, expected i32"),
+        }
+    }
+
+    /// Convert an f32 literal to a host tensor.
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        match self {
+            Literal::F32 { shape, data } => Ok(Tensor::new(shape.clone(), data.clone())),
+            Literal::I32 { .. } => bail!("literal is i32, expected f32"),
+        }
+    }
+
+    /// Convert an i32 literal to a host int tensor.
+    pub fn to_int_tensor(&self) -> Result<IntTensor> {
+        match self {
+            Literal::I32 { shape, data } => {
+                Ok(IntTensor::new(shape.clone(), data.clone()))
+            }
+            Literal::F32 { .. } => bail!("literal is f32, expected i32"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_and_type_checks() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let l = Literal::from_tensor(&t);
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.shape(), &[2, 2]);
+        assert_eq!(l.to_tensor().unwrap(), t);
+        assert!(l.as_i32().is_err());
+
+        let it = IntTensor::new(vec![3], vec![1, 2, 3]);
+        let li = Literal::from_int_tensor(&it);
+        assert_eq!(li.as_i32().unwrap(), &[1, 2, 3]);
+        assert!(li.to_tensor().is_err());
+
+        let s = Literal::scalar_f32(7.0);
+        assert_eq!(s.element_count(), 1);
+        assert!(s.shape().is_empty());
+    }
+}

@@ -1,5 +1,17 @@
-//! Typed view of `artifacts/manifest.json` — the contract between
-//! `python/compile/aot.py` (producer) and the Rust runtime (consumer).
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! artifact generator (`python/compile/gen_host_artifacts.py`, mirroring
+//! the original `aot.py` entry shapes) and the Rust runtime.
+//!
+//! Two artifact kinds exist:
+//! * `host` — executed by the in-process host backend
+//!   ([`super::host_exec`]); the manifest carries the full input/output
+//!   shape contract and a small on-disk stamp file per entry.
+//! * `compact` — a physically sliced model exported by
+//!   `prune::prune_compact` / `fasp compact`: a self-describing
+//!   `*.compact.json` spec plus a packed-weights `.ftns` file under
+//!   `<artifacts>/compact/`. `Manifest::load` scans that directory and
+//!   registers each compact model as a first-class [`ModelSpec`] with
+//!   synthesized host entries, so `ModelEngine` runs it with no masks.
 
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -22,6 +34,16 @@ impl DType {
     }
 }
 
+/// How an artifact executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// In-process host backend (the only executable kind in this build).
+    Host,
+    /// Legacy AOT HLO text for a PJRT client; kept so a drifted manifest
+    /// fails with a clear message instead of a parse error.
+    Hlo,
+}
+
 #[derive(Debug, Clone)]
 pub struct IoSpec {
     pub name: String,
@@ -38,37 +60,88 @@ impl IoSpec {
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
     pub name: String,
+    /// On-disk stamp file, relative to the manifest dir. Empty for
+    /// entries synthesized in-memory (compact models).
     pub file: String,
+    pub kind: ArtifactKind,
     pub inputs: Vec<IoSpec>,
     /// Output leaves (unnamed: dtype + shape), in tuple order.
     pub outputs: Vec<IoSpec>,
 }
 
-/// Mirror of `python/compile/configs.py::ModelConfig` + parameter order.
-#[derive(Debug, Clone)]
+/// Per-layer structural dimensions. Uniform (all equal to the model-level
+/// `d_ff` / `d_model`) for dense zoo models; heterogeneous for compact
+/// (physically sliced) models, where every layer keeps its own number of
+/// FFN hidden units and attention V/out dims.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerDims {
+    /// FFN hidden width of this layer.
+    pub d_ff: usize,
+    /// Attention V/out (context) width of this layer.
+    pub d_ov: usize,
+    /// Kept V/out dims per head (len `n_heads`, sums to `d_ov`). The
+    /// Q/K head dim stays `d_model / n_heads`; only the value path is
+    /// sliced (FASP skips Q/K by default).
+    pub head_splits: Vec<usize>,
+}
+
+/// Mirror of `python/compile/configs.py::ModelConfig` + parameter order,
+/// extended with per-layer dims for compact models.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpec {
     pub name: String,
     pub family: String,
     pub d_model: usize,
     pub n_heads: usize,
     pub n_layers: usize,
+    /// Nominal (maximum / dense) FFN width; per-layer widths live in
+    /// `layer_dims`.
     pub d_ff: usize,
     pub vocab: usize,
     pub seq: usize,
     pub batch: usize,
     /// (param name, shape) in artifact input order.
     pub params: Vec<(String, Vec<usize>)>,
+    /// Per-layer structural dims. Empty means "uniform" (every layer at
+    /// `d_ff` / `d_model`) — the representation dense zoo models use.
+    pub layer_dims: Vec<LayerDims>,
 }
 
 impl ModelSpec {
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads
     }
+
     pub fn param_index(&self, name: &str) -> Option<usize> {
         self.params.iter().position(|(n, _)| n == name)
     }
+
     pub fn n_params_elems(&self) -> usize {
         self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    /// FFN hidden width of layer `l`.
+    pub fn d_ff_l(&self, l: usize) -> usize {
+        self.layer_dims.get(l).map(|ld| ld.d_ff).unwrap_or(self.d_ff)
+    }
+
+    /// Attention V/out width of layer `l`.
+    pub fn d_ov_l(&self, l: usize) -> usize {
+        self.layer_dims.get(l).map(|ld| ld.d_ov).unwrap_or(self.d_model)
+    }
+
+    /// Kept V/out dims per head of layer `l`.
+    pub fn head_splits_l(&self, l: usize) -> Vec<usize> {
+        match self.layer_dims.get(l) {
+            Some(ld) if !ld.head_splits.is_empty() => ld.head_splits.clone(),
+            _ => vec![self.head_dim(); self.n_heads],
+        }
+    }
+
+    /// True when every layer sits at the dense dims (no slicing).
+    pub fn is_uniform(&self) -> bool {
+        (0..self.n_layers)
+            .all(|l| self.d_ff_l(l) == self.d_ff && self.d_ov_l(l) == self.d_model)
     }
 }
 
@@ -80,12 +153,23 @@ pub struct LatencySpec {
     pub dk_s: usize,
 }
 
+/// A registered compact model artifact (spec lives in `models`).
+#[derive(Debug, Clone)]
+pub struct CompactInfo {
+    pub base_model: String,
+    pub sparsity: f64,
+    /// Absolute path of the packed-weights `.ftns` file.
+    pub weights_path: PathBuf,
+}
+
 #[derive(Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
     pub models: BTreeMap<String, ModelSpec>,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
     pub latency: BTreeMap<String, LatencySpec>,
+    /// Compact models registered from `<dir>/compact/*.compact.json`.
+    pub compact: BTreeMap<String, CompactInfo>,
     pub capture_leaves: Vec<String>,
     pub gradcol_leaves: Vec<String>,
 }
@@ -140,6 +224,7 @@ impl Manifest {
                     seq: get("seq")?,
                     batch: get("batch")?,
                     params,
+                    layer_dims: Vec::new(), // uniform
                 },
             );
         }
@@ -175,11 +260,17 @@ impl Manifest {
                     })
                 })
                 .collect::<Result<Vec<_>>>()?;
+            let kind = match a.get("kind").as_str() {
+                None | Some("host") => ArtifactKind::Host,
+                Some("hlo") => ArtifactKind::Hlo,
+                Some(other) => bail!("artifact '{name}': unknown kind '{other}'"),
+            };
             artifacts.insert(
                 name.clone(),
                 ArtifactSpec {
                     name: name.clone(),
                     file: a.get("file").as_str().context("file")?.to_string(),
+                    kind,
                     inputs,
                     outputs,
                 },
@@ -211,13 +302,89 @@ impl Manifest {
                 .unwrap_or_default()
         };
 
-        Ok(Manifest {
+        let mut manifest = Manifest {
             dir: dir.to_path_buf(),
             models,
             artifacts,
             latency,
+            compact: BTreeMap::new(),
             capture_leaves: leaves("capture_leaves"),
             gradcol_leaves: leaves("gradcol_leaves"),
+        };
+
+        // Register compact exports (physically sliced models).
+        let cdir = dir.join("compact");
+        if cdir.is_dir() {
+            let mut paths: Vec<PathBuf> = std::fs::read_dir(&cdir)
+                .with_context(|| format!("scan {}", cdir.display()))?
+                .filter_map(|e| e.ok())
+                .map(|e| e.path())
+                .filter(|p| {
+                    p.file_name()
+                        .and_then(|n| n.to_str())
+                        .map(|n| n.ends_with(".compact.json"))
+                        .unwrap_or(false)
+                })
+                .collect();
+            paths.sort();
+            let mut seen = std::collections::BTreeSet::new();
+            for p in paths {
+                let name = manifest.register_compact(&p)?;
+                anyhow::ensure!(
+                    seen.insert(name.clone()),
+                    "compact model '{name}' is declared by multiple descriptors \
+                     under {} — remove the stale one",
+                    cdir.display()
+                );
+            }
+        }
+        Ok(manifest)
+    }
+
+    /// Register one compact model artifact from its `*.compact.json`
+    /// descriptor: validates the spec, checks the weights file exists,
+    /// inserts the model and synthesizes its host entries.
+    pub fn register_compact(&mut self, path: &Path) -> Result<String> {
+        let (spec, info) = crate::model::compact::load_compact_spec(path)
+            .with_context(|| format!("register compact artifact {}", path.display()))?;
+        anyhow::ensure!(
+            info.weights_path.exists(),
+            "compact artifact '{}' points at missing weights file {} — \
+             delete the stale descriptor {} or restore the weights file",
+            spec.name,
+            info.weights_path.display(),
+            path.display()
+        );
+        // never clobber a non-compact model: a compact artifact named like
+        // a zoo model would silently replace its spec and entries
+        anyhow::ensure!(
+            !self.models.contains_key(&spec.name) || self.compact.contains_key(&spec.name),
+            "compact artifact '{}' collides with an existing model — rename \
+             or delete {}",
+            spec.name,
+            path.display()
+        );
+        let name = spec.name.clone();
+        for art in synthesize_model_entries(&spec) {
+            self.artifacts.insert(art.name.clone(), art);
+        }
+        self.models.insert(name.clone(), spec);
+        self.compact.insert(name.clone(), info);
+        Ok(name)
+    }
+
+    /// Load the packed weights of a registered compact model.
+    pub fn compact_weights(&self, name: &str) -> Result<crate::model::Weights> {
+        let info = self
+            .compact
+            .get(name)
+            .with_context(|| format!("'{name}' is not a registered compact model"))?;
+        let spec = self.model(name)?;
+        crate::model::Weights::load(spec, &info.weights_path).with_context(|| {
+            format!(
+                "load compact weights {} (truncated or corrupt?)",
+                info.weights_path.display()
+            )
         })
     }
 
@@ -239,4 +406,102 @@ impl Manifest {
     pub fn artifact_path(&self, spec: &ArtifactSpec) -> PathBuf {
         self.dir.join(&spec.file)
     }
+}
+
+/// Build the four host entries (`fwd_loss`, `capture`, `gradcol`,
+/// `train_step`) for a model spec, with exact per-layer output shapes —
+/// the same contract `gen_host_artifacts.py` writes for the dense zoo.
+pub(crate) fn synthesize_model_entries(spec: &ModelSpec) -> Vec<ArtifactSpec> {
+    let p = spec.n_params_elems();
+    let (b, t) = (spec.batch, spec.seq);
+    let d = spec.d_model;
+    let f32_in = |name: &str, shape: Vec<usize>| IoSpec {
+        name: name.to_string(),
+        dtype: DType::F32,
+        shape,
+    };
+    let i32_in = |name: &str, shape: Vec<usize>| IoSpec {
+        name: name.to_string(),
+        dtype: DType::I32,
+        shape,
+    };
+    let f32_out = |i: usize, shape: Vec<usize>| IoSpec {
+        name: format!("out{i}"),
+        dtype: DType::F32,
+        shape,
+    };
+
+    let mut out = Vec::with_capacity(4);
+
+    out.push(ArtifactSpec {
+        name: format!("{}_fwd_loss", spec.name),
+        file: String::new(),
+        kind: ArtifactKind::Host,
+        inputs: vec![
+            f32_in("params", vec![p]),
+            i32_in("tokens", vec![b, t]),
+            i32_in("targets", vec![b, t]),
+        ],
+        outputs: vec![
+            f32_out(0, vec![]),
+            f32_out(1, vec![b]),
+            f32_out(2, vec![b, t]),
+        ],
+    });
+
+    let mut cap_outputs = Vec::new();
+    for l in 0..spec.n_layers {
+        let fl = spec.d_ff_l(l);
+        let ol = spec.d_ov_l(l);
+        let i0 = cap_outputs.len();
+        cap_outputs.push(f32_out(i0, vec![d, d]));
+        cap_outputs.push(f32_out(i0 + 1, vec![d, d]));
+        cap_outputs.push(f32_out(i0 + 2, vec![ol, ol]));
+        cap_outputs.push(f32_out(i0 + 3, vec![fl, fl]));
+        cap_outputs.push(f32_out(i0 + 4, vec![d]));
+        cap_outputs.push(f32_out(i0 + 5, vec![d]));
+        cap_outputs.push(f32_out(i0 + 6, vec![ol]));
+        cap_outputs.push(f32_out(i0 + 7, vec![fl]));
+    }
+    out.push(ArtifactSpec {
+        name: format!("{}_capture", spec.name),
+        file: String::new(),
+        kind: ArtifactKind::Host,
+        inputs: vec![f32_in("params", vec![p]), i32_in("tokens", vec![b, t])],
+        outputs: cap_outputs,
+    });
+
+    let mut grad_outputs = Vec::new();
+    for l in 0..spec.n_layers {
+        let i0 = grad_outputs.len();
+        grad_outputs.push(f32_out(i0, vec![spec.d_ff_l(l)]));
+        grad_outputs.push(f32_out(i0 + 1, vec![spec.d_ov_l(l)]));
+    }
+    out.push(ArtifactSpec {
+        name: format!("{}_gradcol", spec.name),
+        file: String::new(),
+        kind: ArtifactKind::Host,
+        inputs: vec![
+            f32_in("params", vec![p]),
+            i32_in("tokens", vec![b, t]),
+            i32_in("targets", vec![b, t]),
+        ],
+        outputs: grad_outputs,
+    });
+
+    out.push(ArtifactSpec {
+        name: format!("{}_train_step", spec.name),
+        file: String::new(),
+        kind: ArtifactKind::Host,
+        inputs: vec![
+            f32_in("state", vec![3 * p]),
+            i32_in("tokens", vec![b, t]),
+            i32_in("targets", vec![b, t]),
+            f32_in("t", vec![]),
+            f32_in("lr", vec![]),
+        ],
+        outputs: vec![f32_out(0, vec![]), f32_out(1, vec![3 * p])],
+    });
+
+    out
 }

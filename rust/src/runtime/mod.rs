@@ -1,21 +1,26 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client.
-//! This is the only boundary between the Rust coordinator and the
-//! JAX/Pallas compute — python never runs at this point.
+//! Runtime: loads the artifact manifest and executes every entry through
+//! the in-process host backend. The original PJRT/HLO boundary survives
+//! as the artifact *contract* (manifest-declared shapes, opaque literals,
+//! positional inputs), so the coordinator code is backend-agnostic.
 //!
 //! * [`manifest`] — typed view of `artifacts/manifest.json` (input/output
-//!   shapes, model parameter orders, capture leaf layout).
-//! * [`client`] — process-wide `PjRtClient` singleton.
-//! * [`executable`] — one compiled artifact: literal execution + shape
-//!   checking + output unpacking.
+//!   shapes, model parameter orders, capture leaf layout, per-layer dims,
+//!   compact-model registration).
+//! * [`literal`] — the typed value currency (owned host arrays).
+//! * [`host_exec`] — the host entry interpreter (forward, capture,
+//!   gradcol, fused Adam train step, kernels, sliced layers).
+//! * [`executable`] — one loaded artifact: literal execution + shape
+//!   checking + output validation + perf counters.
 //! * [`engine`] — model-level facade: `fwd_loss`, `capture`, `gradcol`,
-//!   `train_step` (with persistent device buffers for the training state).
+//!   `train_step` (with a reusable packed-params literal).
 
-pub mod client;
 pub mod engine;
 pub mod executable;
+pub mod host_exec;
+pub mod literal;
 pub mod manifest;
 
 pub use engine::ModelEngine;
 pub use executable::Artifact;
+pub use literal::Literal;
 pub use manifest::{ArtifactSpec, Manifest, ModelSpec};

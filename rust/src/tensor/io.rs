@@ -105,7 +105,13 @@ impl TensorFile {
             }
             let n: usize = shape.iter().product();
             let mut payload = vec![0u8; n * 4];
-            r.read_exact(&mut payload)?;
+            r.read_exact(&mut payload).with_context(|| {
+                format!(
+                    "read {}-byte payload of tensor '{name}' in {} — file truncated?",
+                    n * 4,
+                    path.display()
+                )
+            })?;
             match dt[0] {
                 0 => {
                     let data = payload

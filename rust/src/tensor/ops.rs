@@ -87,6 +87,23 @@ pub fn gather_rows(w: &Tensor, rows: &[usize]) -> Tensor {
     Tensor::new(vec![rows.len(), c], out)
 }
 
+/// Gather elements of a 1-D tensor: out[k] = b[idx[k]].
+pub fn gather_elems(b: &Tensor, idx: &[usize]) -> Tensor {
+    assert_eq!(b.ndim(), 1, "gather_elems wants 1-D, got {:?}", b.shape);
+    Tensor::new(vec![idx.len()], idx.iter().map(|&i| b.data[i]).collect())
+}
+
+/// Scatter rows back: w[rows[k], :] = src[k, :] (inverse of gather_rows).
+pub fn scatter_rows(w: &mut Tensor, rows: &[usize], src: &Tensor) {
+    let (_, c) = w.dims2();
+    let (sr, sc) = src.dims2();
+    assert_eq!(sc, c);
+    assert_eq!(sr, rows.len());
+    for (k, &i) in rows.iter().enumerate() {
+        w.data[i * c..(i + 1) * c].copy_from_slice(src.row(k));
+    }
+}
+
 /// Scatter columns back: w[:, cols[k]] = src[:, k].
 pub fn scatter_cols(w: &mut Tensor, cols: &[usize], src: &Tensor) {
     let (r, c) = w.dims2();

@@ -8,7 +8,10 @@ use fasp::prune::restore::{recon_objective, restore_columns};
 use fasp::prune::structure::{plan, rope_pairs, units};
 use fasp::runtime::manifest::ModelSpec;
 use fasp::tensor::matmul::{matmul, matmul_bt};
-use fasp::tensor::ops::{col_abs_sum, gather_cols, scatter_cols, zero_cols};
+use fasp::tensor::ops::{
+    col_abs_sum, gather_cols, gather_elems, gather_rows, scatter_cols, scatter_rows,
+    zero_cols,
+};
 use fasp::tensor::Tensor;
 use fasp::util::quickcheck::{forall, Gen};
 
@@ -220,6 +223,7 @@ fn prop_plan_exact() {
             seq: 16,
             batch: 2,
             params: vec![],
+            layer_dims: vec![],
         };
         let target = g.f32_in(0.01..0.6) as f64;
         let p = plan(&spec, target, g.bool());
@@ -288,5 +292,79 @@ fn prop_units_monotone() {
         let u1 = units(n, r1);
         let u2 = units(n, r2);
         (u1 <= u2 && u2 <= n, format!("n={n} r1={r1} r2={r2}"))
+    });
+}
+
+/// gather_rows shape/content invariants + scatter_rows inverse.
+#[test]
+fn prop_gather_scatter_rows_roundtrip() {
+    forall(60, 1212, |g| {
+        let r = g.usize_in(1..12);
+        let c = g.usize_in(1..16);
+        let t = rand_tensor(g, r, c);
+        let rows: Vec<usize> = (0..r).filter(|_| g.bool()).collect();
+        let gathered = gather_rows(&t, &rows);
+        if gathered.shape != vec![rows.len(), c] {
+            return (false, format!("bad shape {:?}", gathered.shape));
+        }
+        for (k, &i) in rows.iter().enumerate() {
+            for j in 0..c {
+                if gathered.at2(k, j) != t.at2(i, j) {
+                    return (false, format!("content mismatch at ({k},{j})"));
+                }
+            }
+        }
+        if rows.is_empty() {
+            return (true, String::new());
+        }
+        let mut out = Tensor::zeros(&[r, c]);
+        scatter_rows(&mut out, &rows, &gathered);
+        for (k, &i) in rows.iter().enumerate() {
+            for j in 0..c {
+                if out.at2(i, j) != gathered.at2(k, j) {
+                    return (false, format!("scatter mismatch at ({i},{j})"));
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+/// gather_elems matches direct indexing and preserves order.
+#[test]
+fn prop_gather_elems_indexing() {
+    forall(80, 1313, |g| {
+        let n = g.usize_in(1..64);
+        let data = g.vec_f32(n..n + 1, -5.0..5.0);
+        let t = Tensor::new(vec![n], data);
+        let idx: Vec<usize> = (0..n).filter(|_| g.bool()).collect();
+        let out = gather_elems(&t, &idx);
+        if out.shape != vec![idx.len()] {
+            return (false, "bad shape".into());
+        }
+        for (k, &i) in idx.iter().enumerate() {
+            if out.data[k] != t.data[i] {
+                return (false, format!("mismatch at {k}"));
+            }
+        }
+        (true, String::new())
+    });
+}
+
+/// Gathers never introduce NaN/Inf: every output element is drawn
+/// verbatim from the (finite) input.
+#[test]
+fn prop_gathers_introduce_no_nan() {
+    forall(60, 1414, |g| {
+        let r = g.usize_in(1..10);
+        let c = g.usize_in(1..14);
+        let t = rand_tensor(g, r, c);
+        let cols: Vec<usize> = (0..c).filter(|_| g.bool()).collect();
+        let rows: Vec<usize> = (0..r).filter(|_| g.bool()).collect();
+        let gc = gather_cols(&t, &cols);
+        let gr = gather_rows(&t, &rows);
+        let ok = gc.data.iter().all(|x| x.is_finite())
+            && gr.data.iter().all(|x| x.is_finite());
+        (ok, "non-finite value out of a finite input".into())
     });
 }

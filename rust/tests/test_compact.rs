@@ -1,0 +1,272 @@
+//! Compact-export test matrix (see rust/tests/README.md):
+//! the physically sliced model must be a faithful, loadable, *faster*
+//! stand-in for the masked dense model.
+//!
+//! * round-trip: compact → save → manifest register → engine load →
+//!   forward/perplexity parity with the masked model (±1e-3);
+//! * property: random masks → compact forward equals masked forward to
+//!   1e-5 (both families);
+//! * identity: sparsity-0 export is bit-identical;
+//! * speed: compact latency strictly below dense at sparsity ≥ 0.3.
+
+use fasp::data::{Corpus, Dataset};
+use fasp::eval::perplexity;
+use fasp::model::{compact, host, Weights};
+use fasp::prune::{self, Method, PruneOpts};
+use fasp::runtime::manifest::LayerDims;
+use fasp::runtime::{Manifest, ModelEngine, ModelSpec};
+use fasp::tensor::ops::{zero_cols, zero_elems, zero_rows};
+use fasp::util::quickcheck::{forall, Gen};
+
+fn manifest() -> Manifest {
+    Manifest::load(&fasp::artifacts_dir()).expect("run `make artifacts` first")
+}
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("fasp_compact_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A free-standing tiny spec (no manifest needed) for property tests.
+fn tiny_spec(family: &str) -> ModelSpec {
+    let (d, f, v) = (32usize, 64usize, 64usize);
+    let dims: Vec<LayerDims> = (0..2)
+        .map(|_| LayerDims { d_ff: f, d_ov: d, head_splits: vec![d / 4; 4] })
+        .collect();
+    let params = compact::build_params(family, d, 2, v, 8, &dims);
+    ModelSpec {
+        name: format!("tiny_{family}"),
+        family: family.into(),
+        d_model: d,
+        n_heads: 4,
+        n_layers: 2,
+        d_ff: f,
+        vocab: v,
+        seq: 8,
+        batch: 2,
+        params,
+        layer_dims: dims,
+    }
+}
+
+/// Apply a mask to dense weights exactly like the pruning pipeline does
+/// (zero later-layer columns + coupled earlier rows/bias elements).
+fn apply_mask(w: &mut Weights, mask: &fasp::model::PruneMask) {
+    let is_opt = w.spec.family == "opt";
+    let later = if is_opt { "fc2" } else { "w_down" };
+    for (l, lm) in mask.layers.iter().enumerate() {
+        let ffn_pruned = fasp::model::mask::pruned_indices(&lm.ffn);
+        let ov_pruned = fasp::model::mask::pruned_indices(&lm.ov);
+        if !ffn_pruned.is_empty() {
+            let mut t = w.get_l(l, later).unwrap();
+            zero_cols(&mut t, &ffn_pruned);
+            w.set_l(l, later, &t).unwrap();
+            if is_opt {
+                let mut fc1 = w.get_l(l, "fc1").unwrap();
+                zero_rows(&mut fc1, &ffn_pruned);
+                w.set_l(l, "fc1", &fc1).unwrap();
+                let mut b1 = w.get_l(l, "bfc1").unwrap();
+                zero_elems(&mut b1, &ffn_pruned);
+                w.set_l(l, "bfc1", &b1).unwrap();
+            } else {
+                for name in ["w_gate", "w_up"] {
+                    let mut m = w.get_l(l, name).unwrap();
+                    zero_rows(&mut m, &ffn_pruned);
+                    w.set_l(l, name, &m).unwrap();
+                }
+            }
+        }
+        if !ov_pruned.is_empty() {
+            let mut wo = w.get_l(l, "wo").unwrap();
+            zero_cols(&mut wo, &ov_pruned);
+            w.set_l(l, "wo", &wo).unwrap();
+            let mut wv = w.get_l(l, "wv").unwrap();
+            zero_rows(&mut wv, &ov_pruned);
+            w.set_l(l, "wv", &wv).unwrap();
+            if is_opt {
+                let mut bv = w.get_l(l, "bv").unwrap();
+                zero_elems(&mut bv, &ov_pruned);
+                w.set_l(l, "bv", &bv).unwrap();
+            }
+        }
+    }
+}
+
+/// Property: for random masks, the compact forward equals the masked
+/// dense forward to 1e-5 — both families, including uneven head splits.
+#[test]
+fn prop_random_masks_compact_equals_masked() {
+    for fam in ["opt", "llama"] {
+        let spec = tiny_spec(fam);
+        forall(10, 777, |g: &mut Gen| {
+            let seed = g.rng.next_u64();
+            let dense = Weights::init(&spec, seed);
+            let mut mask = fasp::model::PruneMask::full(&spec);
+            for lm in mask.layers.iter_mut() {
+                for b in lm.ffn.iter_mut() {
+                    *b = g.f32_in(0.0..1.0) < 0.7;
+                }
+                for b in lm.ov.iter_mut() {
+                    *b = g.f32_in(0.0..1.0) < 0.7;
+                }
+                if lm.ffn.iter().all(|&k| !k) {
+                    lm.ffn[0] = true;
+                }
+                if lm.ov.iter().all(|&k| !k) {
+                    lm.ov[0] = true;
+                }
+            }
+            let mut masked = dense.clone();
+            apply_mask(&mut masked, &mask);
+            let cm = match compact::compact_from_mask(&masked, &mask, "prop_c") {
+                Ok(c) => c,
+                Err(e) => return (false, format!("export failed: {e:#}")),
+            };
+            let ds = Dataset::new(Corpus::new(spec.vocab, seed ^ 1), spec.batch, spec.seq, 2);
+            let b = ds.train_batch(0);
+            let (nll_m, _) = host::forward_nll(&masked, &b.tokens, &b.targets, false).unwrap();
+            let (nll_c, _) = host::forward_nll(&cm.weights, &b.tokens, &b.targets, false).unwrap();
+            let diff = nll_m.max_abs_diff(&nll_c);
+            (diff < 1e-5, format!("{fam}: masked vs compact nll diff {diff}"))
+        });
+    }
+}
+
+#[test]
+fn zero_sparsity_export_is_bit_identical() {
+    let m = manifest();
+    let spec = m.model("llama_tiny").unwrap().clone();
+    let w = Weights::init(&spec, 42);
+    let mask = fasp::model::PruneMask::full(&spec);
+    let cm = compact::compact_from_mask(&w, &mask, "llama_tiny_id").unwrap();
+    assert_eq!(cm.weights.packed, w.packed, "sparsity-0 export must be bit-identical");
+    assert_eq!(cm.spec.params, spec.params);
+    assert!(cm.spec.is_uniform());
+}
+
+/// Full round trip at test scale: train a little, prune with FASP,
+/// repack, save, re-register in the manifest, run through ModelEngine —
+/// perplexity must match the masked model within 1e-3.
+#[test]
+fn compact_round_trip_matches_masked_perplexity() {
+    let m = manifest();
+    let model = "llama_tiny";
+    let engine = ModelEngine::new(&m, model).unwrap();
+    let spec = engine.spec.clone();
+    let ds = Dataset::new(Corpus::new(spec.vocab, 99), spec.batch, spec.seq, 44);
+
+    // brief training so pruning acts on structured weights
+    let init = Weights::init(&spec, 7);
+    let mut state = engine.init_train_state(&init.packed).unwrap();
+    for step in 0..40 {
+        let b = ds.train_batch(step);
+        let (_, ns) = engine
+            .train_step(&state, &b.tokens, &b.targets, (step + 1) as f32, 8e-3)
+            .unwrap();
+        state = ns;
+    }
+    let mut trained = Weights::zeros(&spec);
+    trained.packed = engine.params_from_state(&state).unwrap();
+
+    let mut opts = PruneOpts::new(Method::Fasp, 0.3);
+    opts.calib_batches = 2;
+    let out = prune::prune_compact(&engine, &trained, &ds, &opts, "llama_tiny_rt").unwrap();
+    assert!(out.report.phase("repack") > 0.0, "repack phase not accounted");
+    assert!(
+        out.compact.spec.n_params_elems() < spec.n_params_elems(),
+        "compact model did not shrink"
+    );
+
+    // save + register + reload through a second manifest instance
+    let dir = tmpdir("roundtrip");
+    let jpath = compact::save_compact(&dir, &out.compact).unwrap();
+    let mut m2 = manifest();
+    let name = m2.register_compact(&jpath).unwrap();
+    assert_eq!(name, "llama_tiny_rt");
+    let cw = m2.compact_weights(&name).unwrap();
+    assert_eq!(cw.packed, out.compact.weights.packed);
+
+    let ce = ModelEngine::new(&m2, &name).unwrap();
+    let eval_b = ds.valid_batches(3);
+    let ppl_masked = perplexity(&engine, &out.pruned, &eval_b).unwrap();
+    let ppl_compact = perplexity(&ce, &cw, &eval_b).unwrap();
+    assert!(
+        (ppl_masked - ppl_compact).abs() < 1e-3 * ppl_masked.max(1.0),
+        "masked ppl {ppl_masked} vs compact ppl {ppl_compact}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The compact model must be strictly faster than the dense model at
+/// sparsity ≥ 0.3 (the structured-speedup receipt).
+#[test]
+fn compact_latency_strictly_below_dense_at_30pct() {
+    let mut m = manifest();
+    let model = "llama_small";
+    let engine = ModelEngine::new(&m, model).unwrap();
+    let spec = engine.spec.clone();
+    let w = Weights::init(&spec, 5);
+    let ds = Dataset::new(Corpus::new(spec.vocab, 5), spec.batch, spec.seq, 2);
+
+    let mut opts = PruneOpts::new(Method::Magnitude, 0.35);
+    opts.calib_batches = 1;
+    let out = prune::prune_compact(&engine, &w, &ds, &opts, "llama_small_fast").unwrap();
+
+    let dir = tmpdir("latency");
+    let jpath = compact::save_compact(&dir, &out.compact).unwrap();
+    let name = m.register_compact(&jpath).unwrap();
+    let cw = m.compact_weights(&name).unwrap();
+
+    let cmp = fasp::eval::speed::compare_dense_compact(&m, model, &w, &name, &cw, 8).unwrap();
+    assert!(
+        cmp.compact_ms < cmp.dense_ms,
+        "compact ({:.3}ms) not faster than dense ({:.3}ms)",
+        cmp.compact_ms,
+        cmp.dense_ms
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Compact specs survive the manifest scan path too: drop the artifact
+/// into a manifest dir's compact/ subdir and Manifest::load finds it.
+#[test]
+fn manifest_scan_discovers_compact_artifacts() {
+    let m = manifest();
+    let spec = m.model("opt_tiny").unwrap().clone();
+    let w = Weights::init(&spec, 11);
+    let mut mask = fasp::model::PruneMask::full(&spec);
+    for j in 0..32 {
+        mask.layers[0].ffn[j] = false;
+    }
+    let mut masked = w.clone();
+    apply_mask(&mut masked, &mask);
+    let cm = compact::compact_from_mask(&masked, &mask, "opt_tiny_scan").unwrap();
+
+    // a private manifest dir: copy manifest.json + stamp files refs stay
+    let d = tmpdir("scan");
+    std::fs::copy(
+        fasp::artifacts_dir().join("manifest.json"),
+        d.join("manifest.json"),
+    )
+    .unwrap();
+    compact::save_compact(&d.join("compact"), &cm).unwrap();
+    let m2 = Manifest::load(&d).unwrap();
+    assert!(m2.models.contains_key("opt_tiny_scan"));
+    assert!(m2.compact.contains_key("opt_tiny_scan"));
+    assert!(m2.artifacts.contains_key("opt_tiny_scan_fwd_loss"));
+    let spec2 = m2.model("opt_tiny_scan").unwrap();
+    assert_eq!(spec2.d_ff_l(0), spec.d_ff - 32);
+    assert_eq!(spec2.d_ff_l(1), spec.d_ff);
+    assert!(!spec2.is_uniform());
+
+    // and the engine can run it from the scanned manifest
+    let cw = m2.compact_weights("opt_tiny_scan").unwrap();
+    let ce = ModelEngine::new(&m2, "opt_tiny_scan").unwrap();
+    let ds = Dataset::new(Corpus::new(spec.vocab, 2), spec.batch, spec.seq, 2);
+    let b = ds.train_batch(0);
+    let out = ce.fwd_loss(&cw.packed, &b.tokens, &b.targets).unwrap();
+    assert!(out.mean_nll.is_finite());
+    std::fs::remove_dir_all(&d).ok();
+}

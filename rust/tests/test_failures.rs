@@ -153,3 +153,77 @@ fn cli_rejects_unknown_method_and_command() {
     .unwrap();
     assert!(fasp::prune::Method::parse(a.get("method").unwrap()).is_none());
 }
+
+// ---- compact-artifact failure injection --------------------------------
+
+/// Build a small valid compact artifact in `dir` and return its json path.
+fn make_compact_artifact(dir: &std::path::Path, name: &str) -> std::path::PathBuf {
+    let m = Manifest::load(&fasp::artifacts_dir()).expect("make artifacts");
+    let spec = m.model("llama_tiny").unwrap().clone();
+    let w = Weights::init(&spec, 3);
+    let mut mask = fasp::model::PruneMask::full(&spec);
+    for j in 0..16 {
+        mask.layers[0].ffn[j] = false;
+    }
+    let cm = fasp::model::compact::compact_from_mask(&w, &mask, name).unwrap();
+    fasp::model::compact::save_compact(dir, &cm).unwrap()
+}
+
+#[test]
+fn truncated_compact_weights_rejected() {
+    let d = tmpdir("compact_trunc");
+    let jpath = make_compact_artifact(&d, "trunc_model");
+    let wpath = d.join("trunc_model.ftns");
+    let bytes = std::fs::read(&wpath).unwrap();
+    std::fs::write(&wpath, &bytes[..bytes.len() / 3]).unwrap();
+    let err = match fasp::model::compact::load_compact(&jpath) {
+        Err(e) => e,
+        Ok(_) => panic!("truncated compact weights accepted"),
+    };
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("truncated") || msg.contains("corrupt"),
+        "unhelpful truncation error: {msg}"
+    );
+}
+
+#[test]
+fn compact_dimension_mismatch_rejected() {
+    let d = tmpdir("compact_dims");
+    let jpath = make_compact_artifact(&d, "dims_model");
+    // corrupt the spec: head_splits no longer sum to d_ov
+    let text = std::fs::read_to_string(&jpath).unwrap();
+    let bad = text.replacen("\"d_ov\": 64", "\"d_ov\": 63", 1);
+    assert_ne!(bad, text, "fixture drifted: d_ov field not found");
+    std::fs::write(&jpath, bad).unwrap();
+    let err = match fasp::model::compact::load_compact(&jpath) {
+        Err(e) => e,
+        Ok(_) => panic!("dimension-mismatched compact spec accepted"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("dimension mismatch"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn compact_missing_weights_rejected_at_registration() {
+    let d = tmpdir("compact_missing");
+    let jpath = make_compact_artifact(&d, "missing_model");
+    std::fs::remove_file(d.join("missing_model.ftns")).unwrap();
+    let mut m = Manifest::load(&fasp::artifacts_dir()).expect("make artifacts");
+    let err = match m.register_compact(&jpath) {
+        Err(e) => e,
+        Ok(_) => panic!("compact artifact with missing weights registered"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("missing"), "unhelpful error: {msg}");
+    // and a manifest-dir scan with the same broken artifact fails loudly too
+    std::fs::copy(
+        fasp::artifacts_dir().join("manifest.json"),
+        d.join("manifest.json"),
+    )
+    .unwrap();
+    let cdir = d.join("compact");
+    std::fs::create_dir_all(&cdir).unwrap();
+    std::fs::rename(&jpath, cdir.join("missing_model.compact.json")).unwrap();
+    assert!(Manifest::load(&d).is_err(), "scan accepted missing weights");
+}

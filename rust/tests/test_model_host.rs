@@ -60,6 +60,7 @@ fn spec(family: &str) -> ModelSpec {
         seq: 16,
         batch: 2,
         params,
+        layer_dims: vec![],
     }
 }
 

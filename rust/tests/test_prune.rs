@@ -175,3 +175,34 @@ fn flap_compensates_bias() {
     }
     assert!(nonzero, "FLAP did not write compensation biases");
 }
+
+/// Round trip through the pipeline's export stage: prune → repack →
+/// compact forward parity with the masked model, repack wall-time
+/// accounted, and a sparsity-0 export is bit-identical.
+#[test]
+fn compact_export_round_trip_from_pipeline() {
+    let m = manifest();
+    let model = "llama_tiny";
+    let (w, ds) = quick_trained(&m, model, 40);
+    let engine = ModelEngine::new(&m, model).unwrap();
+
+    let mut opts = PruneOpts::new(Method::Fasp, 0.2);
+    opts.calib_batches = 2;
+    let out = prune::prune_compact(&engine, &w, &ds, &opts, "llama_tiny_pr").unwrap();
+    assert!(out.report.phase("repack") > 0.0, "repack phase missing from report");
+    assert!(out.compact.spec.n_params_elems() < engine.spec.n_params_elems());
+
+    let b = ds.train_batch(0);
+    let (nll_masked, _) =
+        fasp::model::host::forward_nll(&out.pruned, &b.tokens, &b.targets, false).unwrap();
+    let (nll_compact, _) =
+        fasp::model::host::forward_nll(&out.compact.weights, &b.tokens, &b.targets, false)
+            .unwrap();
+    let diff = nll_masked.max_abs_diff(&nll_compact);
+    assert!(diff < 1e-5, "masked vs compact forward diff {diff}");
+
+    // sparsity-0 export: identity
+    let full = fasp::model::PruneMask::full(&engine.spec);
+    let cm0 = fasp::model::compact::compact_from_mask(&w, &full, "llama_tiny_id").unwrap();
+    assert_eq!(cm0.weights.packed, w.packed, "sparsity-0 export not bit-identical");
+}

@@ -24,6 +24,7 @@ fn toy_spec(family: &str) -> ModelSpec {
         seq: 16,
         batch: 2,
         params: vec![],
+            layer_dims: vec![],
     }
 }
 

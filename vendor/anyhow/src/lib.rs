@@ -1,0 +1,210 @@
+//! Offline mini-`anyhow`: the subset of the real crate's API that this
+//! repository uses, implemented with no dependencies so the build works
+//! without a crates.io mirror (same policy as the in-repo serde/rand
+//! substitutes — see rust/src/util/mod.rs).
+//!
+//! Supported surface:
+//! * `anyhow::Error` — a context chain of messages (outermost first).
+//! * `anyhow::Result<T>` — alias with `Error` as the default error.
+//! * `anyhow!`, `bail!`, `ensure!` — format-style constructors.
+//! * `Context` — `.context(..)` / `.with_context(..)` on `Result` (for
+//!   any error convertible into `Error`, including `Error` itself) and on
+//!   `Option`.
+//! * `Display` prints the outermost message; `{:#}` prints the full chain
+//!   joined by `": "`; `Debug` prints the chain as a `Caused by:` list —
+//!   all matching real-anyhow semantics closely enough for log/grep use.
+
+use std::fmt;
+
+/// Error: an ordered chain of human-readable messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Push a new outermost context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn to_string_outer(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// The full chain, outermost first.
+    pub fn chain_messages(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, "outer: inner: root"
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts into `Error`, capturing its source chain.
+/// (`Error` itself deliberately does NOT implement `std::error::Error`,
+/// exactly like real anyhow, so this blanket impl cannot self-overlap.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on fallible values.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into().context(c)),
+        }
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into().context(f())),
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(c)),
+        }
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading config")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing thing");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u8> = None;
+        let e = none.context("absent").unwrap_err();
+        assert_eq!(format!("{e}"), "absent");
+
+        fn fails(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert!(fails(5).is_ok());
+        assert_eq!(format!("{}", fails(-1).unwrap_err()), "x must be positive, got -1");
+        assert_eq!(format!("{}", fails(200).unwrap_err()), "too big: 200");
+        let e = anyhow!("ad hoc {}", 7);
+        assert_eq!(format!("{e}"), "ad hoc 7");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer 1: inner");
+    }
+}

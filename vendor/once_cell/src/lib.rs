@@ -1,0 +1,31 @@
+//! Offline mini-`once_cell`: the two cell types this repo uses, aliased
+//! onto their std equivalents (stable since Rust 1.70) so the build needs
+//! no crates.io access.
+
+pub mod sync {
+    /// Thread-safe once-initialized cell (`std::sync::OnceLock` has the
+    /// same `new`/`get`/`set`/`get_or_init` surface as once_cell's).
+    pub type OnceCell<T> = std::sync::OnceLock<T>;
+}
+
+pub mod unsync {
+    /// Single-threaded once-initialized cell.
+    pub type OnceCell<T> = std::cell::OnceCell<T>;
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn sync_cell_works() {
+        let c: super::sync::OnceCell<u32> = super::sync::OnceCell::new();
+        assert!(c.get().is_none());
+        assert!(c.set(7).is_ok());
+        assert_eq!(*c.get_or_init(|| 9), 7);
+    }
+
+    #[test]
+    fn unsync_cell_works() {
+        let c: super::unsync::OnceCell<String> = super::unsync::OnceCell::new();
+        assert_eq!(c.get_or_init(|| "x".to_string()), "x");
+    }
+}

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 verification + perf check for CI and pre-merge runs:
+#   1. release build
+#   2. full test suite (quiet)
+#   3. bench_prune_time in check mode — a shrunk matrix that writes
+#      BENCH_prune_time.json (method mean times + the repack stage's
+#      fraction of prune wall-time) so perf regressions in the pruning
+#      or compact-repack paths show up as a diffable artifact.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== bench_prune_time (check mode) =="
+FASP_BENCH_CHECK=1 cargo bench --bench bench_prune_time
+
+echo "== verify OK =="
+[ -f BENCH_prune_time.json ] && echo "perf record: BENCH_prune_time.json"
