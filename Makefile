@@ -11,7 +11,8 @@ build:
 test:
 	cargo test -q
 
-# Tier-1 verify + perf check (writes BENCH_prune_time.json).
+# Tier-1 verify + perf check: tests under FASP_THREADS=1 and the default
+# threaded backend (writes BENCH_prune_time.json + BENCH_host_threads.json).
 verify:
 	./verify.sh
 

@@ -11,13 +11,13 @@
 use fasp::data::{Corpus, Dataset};
 use fasp::eval::perplexity;
 use fasp::prune::{prune, Method, PruneOpts};
-use fasp::runtime::{Manifest, ModelEngine};
+use fasp::runtime::{Manifest, Session};
 
 fn main() -> fasp::Result<()> {
     let model = "llama_tiny";
     let manifest = Manifest::load(&fasp::artifacts_dir())?;
-    let engine = ModelEngine::new(&manifest, model)?;
-    let spec = engine.spec.clone();
+    let session = Session::new(&manifest, model)?;
+    let spec = session.spec.clone();
     println!(
         "model {model}: {} layers, d={}, {} params",
         spec.n_layers,
@@ -31,13 +31,13 @@ fn main() -> fasp::Result<()> {
     let weights = fasp::train::ensure_trained(&manifest, model, &dataset)?;
 
     let eval = dataset.valid_batches(8);
-    let dense_ppl = perplexity(&engine, &weights, &eval)?;
+    let dense_ppl = perplexity(&session, &weights, &eval)?;
     println!("dense perplexity: {dense_ppl:.3}");
 
     // FASP at 20% sparsity
     let opts = PruneOpts::new(Method::Fasp, 0.20);
-    let (pruned, mask, report) = prune(&engine, &weights, &dataset, &opts)?;
-    let pruned_ppl = perplexity(&engine, &pruned, &eval)?;
+    let (pruned, mask, report) = prune(&session, &weights, &dataset, &opts)?;
+    let pruned_ppl = perplexity(&session, &pruned, &eval)?;
 
     println!(
         "FASP 20%: achieved sparsity {:.1}% ({} params removed)",

@@ -21,14 +21,14 @@ use fasp::data::{Corpus, Dataset};
 use fasp::eval::{eval_suite, perplexity};
 use fasp::model::zoo;
 use fasp::prune::{prune, Method, PruneOpts};
-use fasp::runtime::{Manifest, ModelEngine};
+use fasp::runtime::{Manifest, Session};
 use fasp::train::{train, TrainOpts};
 
 fn main() -> fasp::Result<()> {
     let model = "llama_small";
     let manifest = Manifest::load(&fasp::artifacts_dir())?;
-    let engine = ModelEngine::new(&manifest, model)?;
-    let spec = engine.spec.clone();
+    let session = Session::new(&manifest, model)?;
+    let spec = session.spec.clone();
 
     // ---- 1. train through the PJRT train_step artifact -----------------
     let mut opts = TrainOpts::for_model(model);
@@ -64,7 +64,7 @@ fn main() -> fasp::Result<()> {
 
     // ---- 2+3. prune with every method, evaluate -------------------------
     let eval_batches = dataset.valid_batches(10);
-    let dense_ppl = perplexity(&engine, &weights, &eval_batches)?;
+    let dense_ppl = perplexity(&session, &weights, &eval_batches)?;
     let suites: Vec<TaskSuite> = TaskKind::all()
         .iter()
         .map(|&k| TaskSuite::generate(&dataset.corpus, k, 80, 42))
@@ -72,7 +72,7 @@ fn main() -> fasp::Result<()> {
     let zs = |w: &fasp::model::Weights| -> fasp::Result<f64> {
         let mut acc = 0.0;
         for s in &suites {
-            acc += eval_suite(&engine, w, s)?.accuracy;
+            acc += eval_suite(&session, w, s)?.accuracy;
         }
         Ok(acc / suites.len() as f64)
     };
@@ -91,8 +91,8 @@ fn main() -> fasp::Result<()> {
     for method in Method::all() {
         let mut popts = PruneOpts::new(method, 0.20);
         popts.calib_batches = 6;
-        let (pw, _, rep) = prune(&engine, &weights, &dataset, &popts)?;
-        let ppl = perplexity(&engine, &pw, &eval_batches)?;
+        let (pw, _, rep) = prune(&session, &weights, &dataset, &popts)?;
+        let ppl = perplexity(&session, &pw, &eval_batches)?;
         t.row(vec![
             method.label().to_string(),
             format!("{ppl:.3}"),

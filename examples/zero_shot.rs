@@ -33,7 +33,7 @@ fn main() -> fasp::Result<()> {
         let mut row = vec![name.to_string()];
         let mut sum = 0.0;
         for s in &suites {
-            let r = eval_suite(&p.engine, w, s)?;
+            let r = eval_suite(&p.session, w, s)?;
             sum += r.accuracy;
             row.push(format!("{:.1}", r.accuracy));
         }

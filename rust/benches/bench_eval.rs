@@ -5,7 +5,7 @@
 use fasp::bench_support::Bencher;
 use fasp::data::{Corpus, Dataset};
 use fasp::model::Weights;
-use fasp::runtime::{Manifest, ModelEngine};
+use fasp::runtime::{Manifest, Session};
 
 fn main() {
     let manifest = Manifest::load(&fasp::artifacts_dir()).expect("make artifacts");
@@ -18,28 +18,28 @@ fn main() {
     let mut b = Bencher::default();
 
     for model in models {
-        let engine = ModelEngine::new(&manifest, model).unwrap();
-        let spec = engine.spec.clone();
+        let session = Session::new(&manifest, model).unwrap();
+        let spec = session.spec.clone();
         let w = Weights::init(&spec, 5);
         let ds = Dataset::new(Corpus::new(spec.vocab, 2), spec.batch, spec.seq, 2);
         let batch = ds.train_batch(0);
         let tokens = spec.batch * spec.seq;
+        let params = session.pack(&w.packed).unwrap();
 
         b.bench(&format!("{model}/fwd_loss"), || {
-            let _ = engine.fwd_loss(&w.packed, &batch.tokens, &batch.targets).unwrap();
+            let _ = session.fwd_loss(&params, &batch.tokens, &batch.targets).unwrap();
         });
         println!("  -> {:.0} tokens/s", b.last_throughput(tokens));
 
         b.bench(&format!("{model}/capture"), || {
-            let _ = engine.capture(&w.packed, &[batch.tokens.clone()]).unwrap();
+            let _ = session.capture(&params, &[batch.tokens.clone()]).unwrap();
         });
 
-        let mut state = engine.init_train_state(&w.packed).unwrap();
+        let mut state = session.init_train(&w.packed).unwrap();
         b.bench(&format!("{model}/train_step"), || {
-            let (_, ns) = engine
-                .train_step(&state, &batch.tokens, &batch.targets, 1.0, 1e-3)
+            let _ = session
+                .train_step(&mut state, &batch.tokens, &batch.targets, 1.0, 1e-3)
                 .unwrap();
-            state = ns;
         });
         println!("  -> {:.0} tokens/s (train)", b.last_throughput(tokens));
     }

@@ -1,18 +1,34 @@
 //! Bench: L3 hot paths in isolation — restoration solve (Cholesky vs
 //! ADMM, the §3.3 comparison), host matmul, Wanda metric (host vs Pallas
-//! artifact). Drives the §Perf iteration log in EXPERIMENTS.md.
+//! artifact), and the threaded-vs-single host_exec comparison (the
+//! backend-parallelism receipt). Drives the §Perf iteration log in
+//! EXPERIMENTS.md.
+//!
+//! `FASP_BENCH_CHECK=1` shrinks the matrix AND writes
+//! `BENCH_host_threads.json` (single/threaded fwd latency + bitwise
+//! identity) so CI can diff backend-parallelism regressions.
 
 use fasp::bench_support::Bencher;
+use fasp::data::{Corpus, Dataset};
+use fasp::eval::speed::compare_backends;
 use fasp::linalg::admm_restore;
+use fasp::model::Weights;
 use fasp::prune::metric::{wanda_scores_host, KernelMetric};
 use fasp::prune::restore::restore_columns;
-use fasp::runtime::Manifest;
+use fasp::runtime::{HostBackend, Manifest, Session, ThreadedHostBackend};
 use fasp::tensor::matmul::{matmul, matmul_bt};
 use fasp::tensor::Tensor;
+use fasp::util::json::Json;
 use fasp::util::rng::Rng;
+use std::sync::Arc;
 
 fn main() {
+    let check = std::env::var("FASP_BENCH_CHECK").is_ok();
     let mut b = Bencher::default();
+    if check {
+        b.min_samples = 3;
+        b.budget_s = 0.5;
+    }
     let mut rng = Rng::new(1);
 
     // ---- restoration: closed form vs ADMM at the real shapes ----------
@@ -28,8 +44,9 @@ fn main() {
         for i in 0..n {
             greg[i * n + i] += 1.0;
         }
-        b.bench(&format!("restore/admm_32it {m}x{n}"), || {
-            let _ = admm_restore(&w, &greg, &kept, 100.0, 32).unwrap();
+        let admm_iters = if check { 8 } else { 32 };
+        b.bench(&format!("restore/admm_{admm_iters}it {m}x{n}"), || {
+            let _ = admm_restore(&w, &greg, &kept, 100.0, admm_iters).unwrap();
         });
     }
 
@@ -57,4 +74,56 @@ fn main() {
     b.bench("matmul_bt/512x256->1024 (linear)", || {
         let _ = matmul_bt(&x, &wt);
     });
+
+    // ---- host_exec: single-threaded vs thread-pooled backend ------------
+    if let Ok(manifest) = Manifest::load(&fasp::artifacts_dir()) {
+        let model = "llama_small";
+        let threads = fasp::util::pool::default_threads().max(4);
+        let spec = manifest.model(model).expect("llama_small in manifest").clone();
+        let wts = Weights::init(&spec, 5);
+        let ds = Dataset::new(Corpus::new(spec.vocab, 2), spec.batch, spec.seq, 2);
+        let batch = ds.train_batch(0);
+
+        let single =
+            Session::with_backend(&manifest, model, Arc::new(HostBackend::new())).unwrap();
+        let sp = single.pack(&wts.packed).unwrap();
+        b.bench(&format!("host_exec/{model} fwd_loss x1"), || {
+            let _ = single.fwd_loss(&sp, &batch.tokens, &batch.targets).unwrap();
+        });
+        let threaded = Session::with_backend(
+            &manifest,
+            model,
+            Arc::new(ThreadedHostBackend::new(threads)),
+        )
+        .unwrap();
+        let tp = threaded.pack(&wts.packed).unwrap();
+        b.bench(&format!("host_exec/{model} fwd_loss x{threads}"), || {
+            let _ = threaded.fwd_loss(&tp, &batch.tokens, &batch.targets).unwrap();
+        });
+
+        let reps = if check { 5 } else { 20 };
+        let cmp = compare_backends(&manifest, model, &wts, reps, threads).unwrap();
+        println!(
+            "\nhost_exec {model}: single {:.3}ms vs threaded(x{}) {:.3}ms → {:.2}x, \
+             outputs bit-identical: {}",
+            cmp.single_ms, cmp.threads, cmp.threaded_ms, cmp.speedup, cmp.identical
+        );
+        assert!(cmp.identical, "backend outputs diverged — determinism broken");
+
+        // machine-readable record for regression diffing (check mode only)
+        if check {
+            let record = Json::obj(vec![
+                ("bench", Json::Str("host_threads".into())),
+                ("model", Json::Str(model.into())),
+                ("threads", Json::Num(cmp.threads as f64)),
+                ("single_ms", Json::Num(cmp.single_ms)),
+                ("threaded_ms", Json::Num(cmp.threaded_ms)),
+                ("speedup", Json::Num(cmp.speedup)),
+                ("identical", Json::Bool(cmp.identical)),
+            ]);
+            let path = fasp::repo_root().join("BENCH_host_threads.json");
+            std::fs::write(&path, record.pretty()).unwrap();
+            println!("record → {}", path.display());
+        }
+    }
 }

@@ -11,7 +11,7 @@ use fasp::bench_support::{fmt_s, Bencher};
 use fasp::data::{Corpus, Dataset};
 use fasp::model::Weights;
 use fasp::prune::{prune, prune_compact, Method, PruneOpts};
-use fasp::runtime::{Manifest, ModelEngine};
+use fasp::runtime::{Manifest, Session};
 use fasp::util::json::Json;
 
 fn main() {
@@ -28,8 +28,8 @@ fn main() {
     println!("# Table 4 analog — pruning time (20% sparsity)\n");
     let mut repack_frac = 0.0f64;
     for model in models {
-        let engine = ModelEngine::new(&manifest, model).unwrap();
-        let spec = engine.spec.clone();
+        let session = Session::new(&manifest, model).unwrap();
+        let spec = session.spec.clone();
         let ds = Dataset::new(Corpus::new(spec.vocab, 3), spec.batch, spec.seq, 4);
         let weights = Weights::init(&spec, 7);
         for method in Method::all() {
@@ -37,14 +37,14 @@ fn main() {
             opts.calib_batches = 2;
             opts.admm_iters = if fast { 8 } else { 32 };
             b.bench(&format!("{model}/{:?}", method), || {
-                let _ = prune(&engine, &weights, &ds, &opts).unwrap();
+                let _ = prune(&session, &weights, &ds, &opts).unwrap();
             });
         }
         // the repack stage in isolation: prune once, bench only the
         // physical slicing (the metric the BENCH record guards)
         let mut opts = PruneOpts::new(Method::Fasp, 0.20);
         opts.calib_batches = 2;
-        let out = prune_compact(&engine, &weights, &ds, &opts, "bench_repack").unwrap();
+        let out = prune_compact(&session, &weights, &ds, &opts, "bench_repack").unwrap();
         repack_frac = out.report.phase("repack") / out.report.total_s.max(1e-9);
         let (pruned, mask) = (out.pruned, out.mask);
         b.bench(&format!("{model}/repack"), || {

@@ -8,7 +8,7 @@ use crate::eval::{eval_suite, perplexity};
 use crate::experiments::common::ExpCtx;
 use crate::model::zoo;
 use crate::prune::{Method, PruneOpts};
-use crate::runtime::{Manifest, ModelEngine};
+use crate::runtime::{Backend, Manifest, Session};
 use crate::util::timer::fmt_duration;
 use crate::Result;
 use std::time::Duration;
@@ -60,6 +60,13 @@ pub fn info(_args: &Args) -> Result<()> {
         "{} artifacts in {}",
         m.artifacts.len(),
         m.dir.display()
+    );
+    let backend = crate::runtime::default_backend();
+    println!(
+        "host backend: {} ({} thread{}; set FASP_THREADS to resize)",
+        backend.name(),
+        backend.threads(),
+        if backend.threads() == 1 { "" } else { "s" }
     );
     Ok(())
 }
@@ -205,7 +212,7 @@ pub fn compact(args: &Args) -> Result<()> {
         opts.restore = false;
     }
     opts.sequential = args.has("sequential");
-    let out = crate::prune::prune_compact(&p.engine, &p.weights, &p.dataset, &opts, &name)?;
+    let out = crate::prune::prune_compact(&p.session, &p.weights, &p.dataset, &opts, &name)?;
     let jpath = crate::model::compact::save_compact(
         &crate::artifacts_dir().join("compact"),
         &out.compact,
@@ -221,7 +228,7 @@ pub fn compact(args: &Args) -> Result<()> {
     // fresh manifest load picks up the exported artifact
     let m2 = manifest()?;
     let cw = m2.compact_weights(&name)?;
-    let ce = ModelEngine::new(&m2, &name)?;
+    let ce = Session::new(&m2, &name)?;
     let eval_b = p.dataset.valid_batches(ctx.eval_batches);
     let ppl_dense = p.dense_ppl(&ctx)?;
     let ppl_masked = p.ppl_of(&ctx, &out.pruned)?;
@@ -268,7 +275,7 @@ pub fn zeroshot(args: &Args) -> Result<()> {
     let kinds = TaskKind::all();
     for kind in kinds {
         let suite = TaskSuite::generate(&p.dataset.corpus, kind, ctx.tasks_per_suite, ctx.seed);
-        let r = eval_suite(&p.engine, &w, &suite)?;
+        let r = eval_suite(&p.session, &w, &suite)?;
         total += r.accuracy;
         t.row(vec![r.kind.to_string(), format!("{:.2}", r.accuracy), r.n.to_string()]);
     }
@@ -314,9 +321,9 @@ pub fn eval_ppl_of(
     weights: &crate::model::Weights,
     batches: usize,
 ) -> Result<f64> {
-    let engine = ModelEngine::new(manifest, model)?;
-    let spec = engine.spec.clone();
+    let session = Session::new(manifest, model)?;
+    let spec = session.spec.clone();
     let corpus = Corpus::new(spec.vocab, 42 ^ spec.vocab as u64);
     let dataset = Dataset::new(corpus, spec.batch, spec.seq, 8);
-    perplexity(&engine, weights, &dataset.valid_batches(batches))
+    perplexity(&session, weights, &dataset.valid_batches(batches))
 }

@@ -42,6 +42,11 @@ COMMON OPTIONS:
   --out PATH             save the pruned weights as a checkpoint
   --seed N               experiment seed (default 42)
 
+ENVIRONMENT:
+  FASP_THREADS=N         host-backend worker count (1 = single-threaded
+                         reference backend; default: cores, capped at 8;
+                         outputs are bit-identical at every width)
+
 Artifacts must exist (`make artifacts`). Checkpoints are cached under
 checkpoints/ and reused across runs.
 ";

@@ -1,23 +1,23 @@
 //! Teacher-forced perplexity over held-out batches via the `fwd_loss`
-//! artifact: PPL = exp(mean over all target tokens of NLL).
+//! entry: PPL = exp(mean over all target tokens of NLL).
 
 use crate::data::Batch;
 use crate::model::Weights;
-use crate::runtime::ModelEngine;
+use crate::runtime::Session;
 use anyhow::Result;
 
 /// Perplexity of `weights` on the given batches.
 pub fn perplexity(
-    engine: &ModelEngine,
+    session: &Session,
     weights: &Weights,
     batches: &[Batch],
 ) -> Result<f64> {
     anyhow::ensure!(!batches.is_empty(), "need at least one eval batch");
-    let params = engine.params_literal(&weights.packed)?; // upload once
+    let params = session.pack(&weights.packed)?; // pack once
     let mut total = 0.0f64;
     let mut count = 0usize;
     for b in batches {
-        let out = engine.fwd_loss_lit(&params, &b.tokens, &b.targets)?;
+        let out = session.fwd_loss(&params, &b.tokens, &b.targets)?;
         total += out.mean_nll as f64 * b.tokens.numel() as f64;
         count += b.tokens.numel();
     }
@@ -25,7 +25,7 @@ pub fn perplexity(
 }
 
 /// Host-side fallback perplexity (no artifacts needed) — used by tests
-/// as an independent cross-check of the PJRT path.
+/// as an independent cross-check of the session path.
 pub fn perplexity_host(weights: &Weights, batches: &[Batch]) -> Result<f64> {
     use crate::model::host::forward_nll;
     let mut total = 0.0f64;

@@ -9,14 +9,19 @@
 //!   `fwd_loss` path perplexity uses. This is the receipt the compact
 //!   artifact must produce: a genuinely smaller model that runs faster
 //!   with no masks.
+//! * [`compare_backends`] — the same forward on [`HostBackend`] vs
+//!   [`ThreadedHostBackend`]: the threaded backend must be faster on
+//!   multi-core while producing bit-identical outputs (the receipt the
+//!   backend redesign must produce).
 
 use crate::data::{Batch, Corpus, Dataset};
 use crate::model::Weights;
 use crate::runtime::executable::{Artifact, In};
-use crate::runtime::{Manifest, ModelEngine};
+use crate::runtime::{HostBackend, Manifest, Session, ThreadedHostBackend};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use anyhow::Result;
+use std::sync::Arc;
 
 pub struct LatencyPoint {
     pub sparsity: f64,
@@ -71,16 +76,16 @@ pub struct CompactCompare {
     pub speedup: f64,
 }
 
-/// Best-of-`reps` wall-clock of one `fwd_loss` call (params uploaded
-/// once, like the perplexity loop). Min-of-reps is robust to scheduler
-/// noise on the 1-core testbed.
-fn time_fwd(engine: &ModelEngine, w: &Weights, batch: &Batch, reps: usize) -> Result<f64> {
-    let lit = engine.params_literal(&w.packed)?;
-    engine.fwd_loss_lit(&lit, &batch.tokens, &batch.targets)?; // warmup
+/// Best-of-`reps` wall-clock of one `fwd_loss` call (params packed once,
+/// like the perplexity loop). Min-of-reps is robust to scheduler noise
+/// on small testbeds.
+fn time_fwd(session: &Session, w: &Weights, batch: &Batch, reps: usize) -> Result<f64> {
+    let params = session.pack(&w.packed)?;
+    session.fwd_loss(&params, &batch.tokens, &batch.targets)?; // warmup
     let mut best = f64::INFINITY;
     for _ in 0..reps.max(1) {
         let t0 = std::time::Instant::now();
-        engine.fwd_loss_lit(&lit, &batch.tokens, &batch.targets)?;
+        session.fwd_loss(&params, &batch.tokens, &batch.targets)?;
         best = best.min(t0.elapsed().as_secs_f64() * 1e3);
     }
     Ok(best)
@@ -97,12 +102,68 @@ pub fn compare_dense_compact(
     compact_w: &Weights,
     reps: usize,
 ) -> Result<CompactCompare> {
-    let de = ModelEngine::new(manifest, dense_model)?;
-    let ce = ModelEngine::new(manifest, compact_model)?;
-    let spec = de.spec.clone();
+    let ds_sess = Session::new(manifest, dense_model)?;
+    let cs_sess = Session::new(manifest, compact_model)?;
+    let spec = ds_sess.spec.clone();
     let ds = Dataset::new(Corpus::new(spec.vocab, 0x5eed), spec.batch, spec.seq, 2);
     let b = ds.train_batch(0);
-    let dense_ms = time_fwd(&de, dense_w, &b, reps)?;
-    let compact_ms = time_fwd(&ce, compact_w, &b, reps)?;
+    let dense_ms = time_fwd(&ds_sess, dense_w, &b, reps)?;
+    let compact_ms = time_fwd(&cs_sess, compact_w, &b, reps)?;
     Ok(CompactCompare { dense_ms, compact_ms, speedup: dense_ms / compact_ms })
+}
+
+/// Single-threaded vs thread-pooled host execution of the same forward.
+pub struct BackendCompare {
+    /// Worker count of the threaded backend measured.
+    pub threads: usize,
+    pub single_ms: f64,
+    pub threaded_ms: f64,
+    pub speedup: f64,
+    /// Bitwise equality of mean/seq/token NLL between the two backends.
+    pub identical: bool,
+}
+
+/// Time `fwd_loss` on `model` under [`HostBackend`] and under
+/// [`ThreadedHostBackend`] with `threads` workers, and verify the outputs
+/// are bit-identical. The determinism receipt plus the latency receipt
+/// in one measurement (used by `bench_hot_paths` and `test_backend`).
+pub fn compare_backends(
+    manifest: &Manifest,
+    model: &str,
+    w: &Weights,
+    reps: usize,
+    threads: usize,
+) -> Result<BackendCompare> {
+    let single = Session::with_backend(manifest, model, Arc::new(HostBackend::new()))?;
+    let threaded =
+        Session::with_backend(manifest, model, Arc::new(ThreadedHostBackend::new(threads)))?;
+    let spec = single.spec.clone();
+    let ds = Dataset::new(Corpus::new(spec.vocab, 0xbac), spec.batch, spec.seq, 2);
+    let b = ds.train_batch(0);
+
+    let o1 = single.fwd_loss(&single.pack(&w.packed)?, &b.tokens, &b.targets)?;
+    let o2 = threaded.fwd_loss(&threaded.pack(&w.packed)?, &b.tokens, &b.targets)?;
+    let identical = o1.mean_nll.to_bits() == o2.mean_nll.to_bits()
+        && o1.seq_nll.len() == o2.seq_nll.len()
+        && o1
+            .seq_nll
+            .iter()
+            .zip(&o2.seq_nll)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+        && o1
+            .tok_nll
+            .data
+            .iter()
+            .zip(&o2.tok_nll.data)
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+
+    let single_ms = time_fwd(&single, w, &b, reps)?;
+    let threaded_ms = time_fwd(&threaded, w, &b, reps)?;
+    Ok(BackendCompare {
+        threads,
+        single_ms,
+        threaded_ms,
+        speedup: single_ms / threaded_ms,
+        identical,
+    })
 }

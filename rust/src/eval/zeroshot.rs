@@ -7,7 +7,7 @@
 
 use crate::data::tasks::TaskSuite;
 use crate::model::Weights;
-use crate::runtime::ModelEngine;
+use crate::runtime::Session;
 use crate::tensor::IntTensor;
 use anyhow::Result;
 
@@ -26,12 +26,12 @@ pub struct SuiteResult {
 
 /// Evaluate one suite. Packs rows densely into fixed [B, T] batches.
 pub fn eval_suite(
-    engine: &ModelEngine,
+    session: &Session,
     weights: &Weights,
     suite: &TaskSuite,
 ) -> Result<SuiteResult> {
-    let b = engine.spec.batch;
-    let t = engine.spec.seq;
+    let b = session.spec.batch;
+    let t = session.spec.seq;
 
     // Build all rows.
     let mut rows: Vec<(Vec<i32>, RowRef)> = Vec::new();
@@ -51,7 +51,7 @@ pub fn eval_suite(
     }
 
     // Score rows batch by batch; tail batch padded with row 0.
-    let params = engine.params_literal(&weights.packed)?; // upload once
+    let params = session.pack(&weights.packed)?; // pack once
     let mut nll_per_row: Vec<f64> = vec![0.0; rows.len()];
     let mut idx = 0usize;
     while idx < rows.len() {
@@ -72,7 +72,7 @@ pub fn eval_suite(
         }
         let toks = IntTensor::new(vec![b, t], tokens);
         let tgts = IntTensor::new(vec![b, t], targets);
-        let out = engine.fwd_loss_lit(&params, &toks, &tgts)?;
+        let out = session.fwd_loss(&params, &toks, &tgts)?;
         for (r, &row_idx) in live.iter().enumerate() {
             let (s, e) = rows[row_idx].1.span;
             let mut sum = 0.0f64;

@@ -1,11 +1,11 @@
-//! Shared experiment plumbing: per-model preparation (dataset, engine,
+//! Shared experiment plumbing: per-model preparation (dataset, session,
 //! cached trained weights), method runs, and PPL formatting.
 
 use crate::data::{Corpus, Dataset};
 use crate::eval::perplexity;
 use crate::model::Weights;
 use crate::prune::{self, Method, PruneOpts, PruneReport};
-use crate::runtime::{Manifest, ModelEngine};
+use crate::runtime::{Manifest, Session};
 use crate::Result;
 
 /// Experiment context: manifest + budget knobs (shrunk by `--fast`).
@@ -28,20 +28,20 @@ impl ExpCtx {
         }
     }
 
-    /// Engine + dataset + trained weights for one zoo model.
+    /// Session + dataset + trained weights for one zoo model.
     pub fn prepared(&self, model: &str) -> Result<Prepared<'_>> {
-        let engine = ModelEngine::new(&self.manifest, model)?;
-        let spec = engine.spec.clone();
+        let session = Session::new(&self.manifest, model)?;
+        let spec = session.spec.clone();
         let (steps, _) = crate::model::zoo::train_budget(model);
         let corpus = Corpus::new(spec.vocab, self.seed ^ spec.vocab as u64);
         let dataset = Dataset::new(corpus, spec.batch, spec.seq, steps + 8);
         let weights = crate::train::ensure_trained(&self.manifest, model, &dataset)?;
-        Ok(Prepared { engine, dataset, weights })
+        Ok(Prepared { session, dataset, weights })
     }
 }
 
 pub struct Prepared<'m> {
-    pub engine: ModelEngine<'m>,
+    pub session: Session<'m>,
     pub dataset: Dataset,
     pub weights: Weights,
 }
@@ -49,7 +49,7 @@ pub struct Prepared<'m> {
 impl<'m> Prepared<'m> {
     pub fn dense_ppl(&self, ctx: &ExpCtx) -> Result<f64> {
         perplexity(
-            &self.engine,
+            &self.session,
             &self.weights,
             &self.dataset.valid_batches(ctx.eval_batches),
         )
@@ -64,13 +64,13 @@ impl<'m> Prepared<'m> {
     ) -> Result<(f64, PruneReport)> {
         let (pruned, _mask, report) = self.prune_only(ctx, method, sparsity)?;
         let ppl = perplexity(
-            &self.engine,
+            &self.session,
             &pruned,
             &self.dataset.valid_batches(ctx.eval_batches),
         )?;
         crate::info!(
             "{} {} s={:.0}% → ppl {:.2} ({:.2}s)",
-            self.engine.spec.name,
+            self.session.spec.name,
             method.label(),
             sparsity * 100.0,
             ppl,
@@ -87,7 +87,7 @@ impl<'m> Prepared<'m> {
     ) -> Result<(Weights, crate::model::PruneMask, PruneReport)> {
         let mut opts = PruneOpts::new(method, sparsity);
         opts.calib_batches = ctx.calib_batches;
-        prune::prune(&self.engine, &self.weights, &self.dataset, &opts)
+        prune::prune(&self.session, &self.weights, &self.dataset, &opts)
     }
 
     /// Pruned weights with explicit opts (ablations).
@@ -95,11 +95,11 @@ impl<'m> Prepared<'m> {
         &self,
         opts: &PruneOpts,
     ) -> Result<(Weights, crate::model::PruneMask, PruneReport)> {
-        prune::prune(&self.engine, &self.weights, &self.dataset, opts)
+        prune::prune(&self.session, &self.weights, &self.dataset, opts)
     }
 
     pub fn ppl_of(&self, ctx: &ExpCtx, w: &Weights) -> Result<f64> {
-        perplexity(&self.engine, w, &self.dataset.valid_batches(ctx.eval_batches))
+        perplexity(&self.session, w, &self.dataset.valid_batches(ctx.eval_batches))
     }
 }
 

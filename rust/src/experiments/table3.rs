@@ -32,7 +32,7 @@ pub fn run(ctx: &ExpCtx) -> Result<String> {
     let score = |w: &Weights| -> Result<Vec<f64>> {
         let mut accs = Vec::with_capacity(suites.len());
         for s in &suites {
-            accs.push(eval_suite(&p.engine, w, s)?.accuracy);
+            accs.push(eval_suite(&p.session, w, s)?.accuracy);
         }
         Ok(accs)
     };

@@ -20,11 +20,17 @@
 //!
 //! Both files are written via temp-file + rename so a concurrent
 //! `Manifest::load` never observes a half-written artifact.
+//!
+//! The per-layer tensor slicing fans out on the shared worker pool
+//! (`util::pool`), so the `repack` phase of `PruneReport` shrinks on
+//! multi-core hosts; gathers are pure copies, so the exported weights
+//! are identical for any pool width.
 
 use super::mask::{kept_indices, PruneMask};
 use super::weights::Weights;
 use crate::runtime::manifest::{CompactInfo, LayerDims, ModelSpec};
 use crate::tensor::ops::{gather_cols, gather_elems, gather_rows};
+use crate::tensor::Tensor;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -184,10 +190,18 @@ pub fn compact_from_mask(
         layer_dims,
     };
 
+    // Per-parameter slicing is embarrassingly parallel (disjoint source
+    // reads, disjoint destination tensors): fan out on the ambient worker
+    // pool — the session's backend pool when called from `prune_compact`
+    // — then write the slices back in parameter order. Gathers are pure
+    // copies, so the result is pool-width-independent.
     let mut out = Weights::zeros(&new_spec);
-    for (pname, _) in new_spec.params.clone() {
-        let src = base.get(&pname)?;
-        let dst = match split_layer_param(&pname) {
+    let names: Vec<String> = new_spec.params.iter().map(|(n, _)| n.clone()).collect();
+    let pool = crate::util::pool::current();
+    let sliced: Vec<Result<Tensor>> = pool.map(names.len(), |i| {
+        let pname = &names[i];
+        let src = base.get(pname)?;
+        Ok(match split_layer_param(pname) {
             Some((l, short)) => match short {
                 "fc1" | "w_gate" | "w_up" => gather_rows(&src, &kept_ffn[l]),
                 "bfc1" => gather_elems(&src, &kept_ffn[l]),
@@ -198,8 +212,10 @@ pub fn compact_from_mask(
                 _ => src,
             },
             None => src,
-        };
-        out.set(&pname, &dst)?;
+        })
+    });
+    for (pname, dst) in names.iter().zip(sliced) {
+        out.set(pname, &dst?)?;
     }
 
     Ok(CompactModel {

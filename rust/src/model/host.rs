@@ -9,6 +9,11 @@
 //! (`ModelSpec::layer_dims`), with the V/out dims split unevenly across
 //! heads. The forward reads those dims per layer, so masked-dense and
 //! compact models run through the same code path.
+//!
+//! Parallelism: attention (batch, head) blocks and per-token NLL rows fan
+//! out on the ambient worker pool (`util::pool`), installed by the
+//! session's backend. Every fan-out keeps the serial reduction order, so
+//! outputs are bit-identical for any pool width.
 
 use crate::runtime::manifest::ModelSpec;
 use crate::tensor::matmul::{matmul_bt, matmul};
@@ -225,14 +230,25 @@ pub fn forward_nll(
         rms_norm(&mut x.data, d, &w.get("lnf_g")?.data);
     }
 
-    // logits = x · tok_embᵀ; per-token NLL without materializing softmax
+    // logits = x · tok_embᵀ; per-token NLL without materializing softmax.
+    // Rows are independent: fan out over row chunks of the NLL buffer.
     let logits = matmul_bt(&x, &tok_emb); // [rows, V]
+    let vocab = spec.vocab;
     let mut nll = Tensor::zeros(&[b, t]);
-    for r in 0..rows {
-        let row = logits.row(r);
-        let z = logsumexp(row);
-        let tgt = targets.data[r] as usize;
-        nll.data[r] = z - row[tgt];
+    let nll_rows = |r0: usize, chunk: &mut [f32]| {
+        for (i, nv) in chunk.iter_mut().enumerate() {
+            let r = r0 + i;
+            let row = logits.row(r);
+            let z = logsumexp(row);
+            let tgt = targets.data[r] as usize;
+            *nv = z - row[tgt];
+        }
+    };
+    let pool = crate::util::pool::current();
+    if pool.workers() > 1 && rows * vocab >= crate::util::pool::PAR_THRESHOLD {
+        pool.run_rows1(&mut nll.data, 1, nll_rows);
+    } else {
+        nll_rows(0, &mut nll.data);
     }
     Ok((nll, captures))
 }
@@ -244,6 +260,11 @@ pub fn forward_nll(
 /// column block given by the prefix sums of `splits`. Returns the context
 /// [b·t, Σ splits] in the same column layout (the input layout of the
 /// sliced `wo`).
+///
+/// The (batch, head) blocks are independent; large inputs fan out on the
+/// ambient worker pool, each block computing its own [t, dv] context
+/// slice with the serial loop order — outputs are bit-identical across
+/// pool widths.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn attention(
     b: usize,
@@ -269,55 +290,84 @@ pub(crate) fn attention(
     }
     let scale = 1.0 / (dh as f32).sqrt();
     let mut ctx = Tensor::zeros(&[b * t, dov]);
+
     // per (batch, head): gather [t, dh]/[t, dv] slices, optional rope,
-    // causal attention
-    let mut qh = vec![0.0f32; t * dh];
-    let mut kh = vec![0.0f32; t * dh];
-    for bi in 0..b {
-        for hi in 0..n_heads {
-            let dv = splits[hi];
-            if dv == 0 {
-                continue; // head fully sliced away: nothing reads its scores
+    // causal attention into a local [t, dv] block. The serial path pays
+    // a per-block scratch allocation + one [t, dv] copy vs the old
+    // buffer-reusing loop — accepted so both backends execute this one
+    // closure and the bitwise-identity contract holds by construction.
+    let block = |bi: usize, hi: usize| -> Vec<f32> {
+        let dv = splits[hi];
+        if dv == 0 {
+            return Vec::new(); // head fully sliced away: nothing reads its scores
+        }
+        let vo = offs[hi];
+        let mut qh = vec![0.0f32; t * dh];
+        let mut kh = vec![0.0f32; t * dh];
+        let mut vh = vec![0.0f32; t * dv];
+        for ti in 0..t {
+            let r = bi * t + ti;
+            let src = hi * dh..(hi + 1) * dh;
+            qh[ti * dh..(ti + 1) * dh].copy_from_slice(&q.row(r)[src.clone()]);
+            kh[ti * dh..(ti + 1) * dh].copy_from_slice(&k.row(r)[src]);
+            vh[ti * dv..(ti + 1) * dv].copy_from_slice(&v.row(r)[vo..vo + dv]);
+        }
+        if rope {
+            apply_rope(&mut qh, t, dh, cos, sin);
+            apply_rope(&mut kh, t, dh, cos, sin);
+        }
+        let mut out = vec![0.0f32; t * dv];
+        // causal attention rows
+        for ti in 0..t {
+            let qrow = &qh[ti * dh..(ti + 1) * dh];
+            // scores over [0..=ti]
+            let mut scores = Vec::with_capacity(ti + 1);
+            for tj in 0..=ti {
+                let krow = &kh[tj * dh..(tj + 1) * dh];
+                scores.push(crate::tensor::matmul::dot(qrow, krow) * scale);
             }
-            let vo = offs[hi];
-            let mut vh = vec![0.0f32; t * dv];
-            for ti in 0..t {
-                let r = bi * t + ti;
-                let src = hi * dh..(hi + 1) * dh;
-                qh[ti * dh..(ti + 1) * dh].copy_from_slice(&q.row(r)[src.clone()]);
-                kh[ti * dh..(ti + 1) * dh].copy_from_slice(&k.row(r)[src]);
-                vh[ti * dv..(ti + 1) * dv].copy_from_slice(&v.row(r)[vo..vo + dv]);
+            let m = scores.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let mut z = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - m).exp();
+                z += *s;
             }
-            if rope {
-                apply_rope(&mut qh, t, dh, cos, sin);
-                apply_rope(&mut kh, t, dh, cos, sin);
-            }
-            // causal attention rows
-            for ti in 0..t {
-                let qrow = &qh[ti * dh..(ti + 1) * dh];
-                // scores over [0..=ti]
-                let mut scores = Vec::with_capacity(ti + 1);
-                for tj in 0..=ti {
-                    let krow = &kh[tj * dh..(tj + 1) * dh];
-                    scores.push(
-                        crate::tensor::matmul::dot(qrow, krow) * scale,
-                    );
+            let orow = &mut out[ti * dv..(ti + 1) * dv];
+            for (tj, w) in scores.iter().enumerate() {
+                let vrow = &vh[tj * dv..(tj + 1) * dv];
+                let wz = w / z;
+                for (o, vv) in orow.iter_mut().zip(vrow) {
+                    *o += wz * vv;
                 }
-                let m = scores.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
-                let mut z = 0.0f32;
-                for s in scores.iter_mut() {
-                    *s = (*s - m).exp();
-                    z += *s;
-                }
-                let out = &mut ctx.row_mut(bi * t + ti)[vo..vo + dv];
-                for (tj, w) in scores.iter().enumerate() {
-                    let vrow = &vh[tj * dv..(tj + 1) * dv];
-                    let wz = w / z;
-                    for (o, vv) in out.iter_mut().zip(vrow) {
-                        *o += wz * vv;
-                    }
-                }
             }
+        }
+        out
+    };
+
+    let n_blocks = b * n_heads;
+    let pool = crate::util::pool::current();
+    let work = n_blocks * t * t * (dh + dov / n_heads.max(1));
+    let mut place = |i: usize, blk: Vec<f32>| {
+        let (bi, hi) = (i / n_heads, i % n_heads);
+        let dv = splits[hi];
+        if dv == 0 {
+            return;
+        }
+        let vo = offs[hi];
+        for ti in 0..t {
+            ctx.row_mut(bi * t + ti)[vo..vo + dv]
+                .copy_from_slice(&blk[ti * dv..(ti + 1) * dv]);
+        }
+    };
+    if pool.workers() > 1 && n_blocks > 1 && work >= crate::util::pool::PAR_THRESHOLD {
+        let blocks = pool.map(n_blocks, |i| block(i / n_heads, i % n_heads));
+        for (i, blk) in blocks.into_iter().enumerate() {
+            place(i, blk);
+        }
+    } else {
+        // serial: compute and place one block at a time (no block list)
+        for i in 0..n_blocks {
+            place(i, block(i / n_heads, i % n_heads));
         }
     }
     ctx

@@ -10,6 +10,13 @@
 //!
 //! Supports per-layer dims (`ModelSpec::layer_dims`) — compact models
 //! train and produce Taylor scores through the same code path.
+//!
+//! Parallelism: attention (batch, head) blocks — forward and backward —
+//! and the softmax/NLL row loops fan out on the ambient worker pool
+//! (`util::pool`). Every reduction keeps a fixed, pool-width-independent
+//! order (per-block local accumulators, serial f64 loss sum over the
+//! per-row NLL buffer), so gradients and losses are bit-identical across
+//! backends.
 
 use super::host::{rope_tables, LN_EPS};
 use super::weights::Weights;
@@ -331,40 +338,72 @@ pub fn loss_and_grad(
         }
         let mut ctx = Tensor::zeros(&[rows, dov]);
         let mut probs = vec![0.0f32; b * n_heads * t * t];
-        for bi in 0..b {
-            for hi in 0..n_heads {
-                let dv = splits[hi];
-                let vo = offs[hi];
-                let qb = hi * dh;
-                for ti in 0..t {
-                    let rq = bi * t + ti;
-                    let qrow = &q.row(rq)[qb..qb + dh];
-                    let mut scores = Vec::with_capacity(ti + 1);
-                    for tj in 0..=ti {
-                        let krow = &k.row(bi * t + tj)[qb..qb + dh];
-                        scores.push(crate::tensor::matmul::dot(qrow, krow) * scale);
-                    }
-                    let m = scores.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
-                    let mut z = 0.0f32;
-                    for s in scores.iter_mut() {
-                        *s = (*s - m).exp();
-                        z += *s;
-                    }
-                    let pbase = ((bi * n_heads + hi) * t + ti) * t;
+        // independent (batch, head) blocks, fanned out on the ambient
+        // pool; each returns its contiguous probs block [t,t] and its
+        // context slice [t, dv]
+        let fwd_block = |bi: usize, hi: usize| -> (Vec<f32>, Vec<f32>) {
+            let dv = splits[hi];
+            let vo = offs[hi];
+            let qb = hi * dh;
+            let mut pb = vec![0.0f32; t * t];
+            let mut cb = vec![0.0f32; t * dv];
+            for ti in 0..t {
+                let rq = bi * t + ti;
+                let qrow = &q.row(rq)[qb..qb + dh];
+                let mut scores = Vec::with_capacity(ti + 1);
+                for tj in 0..=ti {
+                    let krow = &k.row(bi * t + tj)[qb..qb + dh];
+                    scores.push(crate::tensor::matmul::dot(qrow, krow) * scale);
+                }
+                let m = scores.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+                let mut z = 0.0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - m).exp();
+                    z += *s;
+                }
+                for (tj, s) in scores.iter().enumerate() {
+                    pb[ti * t + tj] = s / z;
+                }
+                if dv > 0 {
+                    let out = &mut cb[ti * dv..(ti + 1) * dv];
                     for (tj, s) in scores.iter().enumerate() {
-                        probs[pbase + tj] = s / z;
-                    }
-                    if dv > 0 {
-                        let out = &mut ctx.row_mut(rq)[vo..vo + dv];
-                        for (tj, s) in scores.iter().enumerate() {
-                            let wz = s / z;
-                            let vrow = &v.row(bi * t + tj)[vo..vo + dv];
-                            for (o, vv) in out.iter_mut().zip(vrow) {
-                                *o += wz * vv;
-                            }
+                        let wz = s / z;
+                        let vrow = &v.row(bi * t + tj)[vo..vo + dv];
+                        for (o, vv) in out.iter_mut().zip(vrow) {
+                            *o += wz * vv;
                         }
                     }
                 }
+            }
+            (pb, cb)
+        };
+        let n_blocks = b * n_heads;
+        let pool = crate::util::pool::current();
+        let attn_work = n_blocks * t * t * (dh + dov / n_heads.max(1));
+        let mut place = |i: usize, (pb, cb): (Vec<f32>, Vec<f32>)| {
+            let (bi, hi) = (i / n_heads, i % n_heads);
+            let base = (bi * n_heads + hi) * t * t;
+            probs[base..base + t * t].copy_from_slice(&pb);
+            let dv = splits[hi];
+            if dv == 0 {
+                return;
+            }
+            let vo = offs[hi];
+            for ti in 0..t {
+                ctx.row_mut(bi * t + ti)[vo..vo + dv]
+                    .copy_from_slice(&cb[ti * dv..(ti + 1) * dv]);
+            }
+        };
+        if pool.workers() > 1 && n_blocks > 1 && attn_work >= crate::util::pool::PAR_THRESHOLD
+        {
+            let blocks = pool.map(n_blocks, |i| fwd_block(i / n_heads, i % n_heads));
+            for (i, blk) in blocks.into_iter().enumerate() {
+                place(i, blk);
+            }
+        } else {
+            // serial: stream each block straight into probs/ctx
+            for i in 0..n_blocks {
+                place(i, fwd_block(i / n_heads, i % n_heads));
             }
         }
         let attn_out = linear_fwd(&ctx, &w.get_l(l, "wo")?, Some(&w.get_l(l, "bo")?));
@@ -427,27 +466,41 @@ pub fn loss_and_grad(
         rms_norm_fwd(&x, &w.get("lnf_g")?.data)
     };
 
-    // logits → loss → dlogits (probs materialized in place of logits)
+    // logits → loss → dlogits (probs materialized in place of logits).
+    // Rows are independent; the per-row NLLs land in a buffer and the
+    // f64 loss reduction stays serial in row order, so the loss is
+    // bit-identical for any pool width.
     let mut logits = crate::tensor::matmul::matmul_bt(&x_n, &tok_emb); // [R, V]
     let vocab = spec.vocab;
-    let mut loss_sum = 0.0f64;
-    for r in 0..rows {
-        let row = &mut logits.data[r * vocab..(r + 1) * vocab];
-        let tgt = targets.data[r] as usize;
-        let tgt_logit = row[tgt];
-        let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
-        let mut z = 0.0f32;
-        for v in row.iter_mut() {
-            *v = (*v - m).exp();
-            z += *v;
+    let mut row_nll = vec![0.0f32; rows];
+    let softmax_rows = |r0: usize, lrows: &mut [f32], nrows: &mut [f32]| {
+        for (i, nv) in nrows.iter_mut().enumerate() {
+            let r = r0 + i;
+            let row = &mut lrows[i * vocab..(i + 1) * vocab];
+            let tgt = targets.data[r] as usize;
+            let tgt_logit = row[tgt];
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let mut z = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - m).exp();
+                z += *v;
+            }
+            // nll = logsumexp - logit[tgt] (stable: exp is shifted by m)
+            *nv = m + z.ln() - tgt_logit;
+            // row becomes softmax probs
+            for v in row.iter_mut() {
+                *v /= z;
+            }
         }
-        // nll = logsumexp - logit[tgt] (stable: exp is shifted by m)
-        loss_sum += (m + z.ln() - tgt_logit) as f64;
-        // row becomes softmax probs
-        for v in row.iter_mut() {
-            *v /= z;
-        }
+    };
+    let pool = crate::util::pool::current();
+    let logits_par = pool.workers() > 1 && rows * vocab >= crate::util::pool::PAR_THRESHOLD;
+    if logits_par {
+        pool.run_rows2(&mut logits.data, vocab, &mut row_nll, 1, softmax_rows);
+    } else {
+        softmax_rows(0, &mut logits.data, &mut row_nll);
     }
+    let loss_sum: f64 = row_nll.iter().map(|&x| x as f64).sum();
     let loss = (loss_sum / rows as f64) as f32;
 
     // ---- backward ------------------------------------------------------
@@ -455,13 +508,19 @@ pub fn loss_and_grad(
 
     // dlogits = (probs − onehot)/R, reusing the probs buffer
     let inv_r = 1.0 / rows as f32;
-    for r in 0..rows {
-        let tgt = targets.data[r] as usize;
-        let row = &mut logits.data[r * vocab..(r + 1) * vocab];
-        row[tgt] -= 1.0;
-        for v in row.iter_mut() {
-            *v *= inv_r;
+    let dlogit_rows = |r0: usize, lrows: &mut [f32]| {
+        for (i, row) in lrows.chunks_exact_mut(vocab).enumerate() {
+            let tgt = targets.data[r0 + i] as usize;
+            row[tgt] -= 1.0;
+            for v in row.iter_mut() {
+                *v *= inv_r;
+            }
         }
+    };
+    if logits_par {
+        pool.run_rows1(&mut logits.data, vocab, dlogit_rows);
+    } else {
+        dlogit_rows(0, &mut logits.data);
     }
     let dlogits = logits;
 
@@ -574,58 +633,91 @@ pub fn loss_and_grad(
         let mut dq = Tensor::zeros(&[rows, d]);
         let mut dk = Tensor::zeros(&[rows, d]);
         let mut dv = Tensor::zeros(&[rows, dov]);
-        for bi in 0..b {
-            for hi in 0..n_heads {
-                let dvw = splits[hi];
-                let vo = offs[hi];
-                let qb = hi * dh;
-                // dP and softmax backward, row ti at a time
-                for ti in 0..t {
-                    let rq = bi * t + ti;
-                    let pbase = ((bi * n_heads + hi) * t + ti) * t;
-                    // dP[ti][tj] = dctx_row · v_row ; also dv += P * dctx
-                    let dch = &dctx.row(rq)[vo..vo + dvw];
-                    let mut dp = vec![0.0f32; ti + 1];
-                    for tj in 0..=ti {
-                        let p = c.probs[pbase + tj];
-                        if dvw > 0 {
-                            let vrow = &c.v.row(bi * t + tj)[vo..vo + dvw];
-                            let mut s = 0.0f32;
-                            let dvrow = &mut dv.row_mut(bi * t + tj)[vo..vo + dvw];
-                            for ((dvv, &vv), &dc) in
-                                dvrow.iter_mut().zip(vrow).zip(dch.iter())
-                            {
-                                *dvv += p * dc;
-                                s += dc * vv;
-                            }
-                            dp[tj] = s;
-                        }
-                    }
-                    // softmax backward: ds = P ⊙ (dP − Σ dP·P)
-                    let mut dot_pp = 0.0f32;
-                    for tj in 0..=ti {
-                        dot_pp += dp[tj] * c.probs[pbase + tj];
-                    }
-                    for tj in 0..=ti {
-                        let p = c.probs[pbase + tj];
-                        let ds = p * (dp[tj] - dot_pp) * scale;
-                        if ds == 0.0 {
-                            continue;
-                        }
-                        let krow = &c.k.row(bi * t + tj)[qb..qb + dh];
-                        let qrow = &c.q.row(rq)[qb..qb + dh];
+        // independent (batch, head) blocks again: each accumulates its own
+        // [t, dh]/[t, dvw] gradient slices with the serial inner order
+        let bwd_block = |bi: usize, hi: usize| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+            let dvw = splits[hi];
+            let vo = offs[hi];
+            let qb = hi * dh;
+            let mut dqb = vec![0.0f32; t * dh];
+            let mut dkb = vec![0.0f32; t * dh];
+            let mut dvb = vec![0.0f32; t * dvw];
+            // dP and softmax backward, row ti at a time
+            for ti in 0..t {
+                let rq = bi * t + ti;
+                let pbase = ((bi * n_heads + hi) * t + ti) * t;
+                // dP[ti][tj] = dctx_row · v_row ; also dv += P * dctx
+                let dch = &dctx.row(rq)[vo..vo + dvw];
+                let mut dp = vec![0.0f32; ti + 1];
+                for tj in 0..=ti {
+                    let p = c.probs[pbase + tj];
+                    if dvw > 0 {
+                        let vrow = &c.v.row(bi * t + tj)[vo..vo + dvw];
+                        let mut s = 0.0f32;
+                        let dvrow = &mut dvb[tj * dvw..(tj + 1) * dvw];
+                        for ((dvv, &vv), &dc) in
+                            dvrow.iter_mut().zip(vrow).zip(dch.iter())
                         {
-                            let dq_row = &mut dq.row_mut(rq)[qb..qb + dh];
-                            for (o, &kv) in dq_row.iter_mut().zip(krow) {
-                                *o += ds * kv;
-                            }
+                            *dvv += p * dc;
+                            s += dc * vv;
                         }
-                        let dk_row = &mut dk.row_mut(bi * t + tj)[qb..qb + dh];
-                        for (o, &qv) in dk_row.iter_mut().zip(qrow) {
-                            *o += ds * qv;
-                        }
+                        dp[tj] = s;
                     }
                 }
+                // softmax backward: ds = P ⊙ (dP − Σ dP·P)
+                let mut dot_pp = 0.0f32;
+                for tj in 0..=ti {
+                    dot_pp += dp[tj] * c.probs[pbase + tj];
+                }
+                for tj in 0..=ti {
+                    let p = c.probs[pbase + tj];
+                    let ds = p * (dp[tj] - dot_pp) * scale;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let krow = &c.k.row(bi * t + tj)[qb..qb + dh];
+                    let qrow = &c.q.row(rq)[qb..qb + dh];
+                    {
+                        let dq_row = &mut dqb[ti * dh..(ti + 1) * dh];
+                        for (o, &kv) in dq_row.iter_mut().zip(krow) {
+                            *o += ds * kv;
+                        }
+                    }
+                    let dk_row = &mut dkb[tj * dh..(tj + 1) * dh];
+                    for (o, &qv) in dk_row.iter_mut().zip(qrow) {
+                        *o += ds * qv;
+                    }
+                }
+            }
+            (dqb, dkb, dvb)
+        };
+        let n_blocks = b * n_heads;
+        let attn_work = n_blocks * t * t * (dh + dov / n_heads.max(1));
+        let mut place = |i: usize, (dqb, dkb, dvb): (Vec<f32>, Vec<f32>, Vec<f32>)| {
+            let (bi, hi) = (i / n_heads, i % n_heads);
+            let dvw = splits[hi];
+            let vo = offs[hi];
+            let qb = hi * dh;
+            for ti in 0..t {
+                let r = bi * t + ti;
+                dq.row_mut(r)[qb..qb + dh].copy_from_slice(&dqb[ti * dh..(ti + 1) * dh]);
+                dk.row_mut(r)[qb..qb + dh].copy_from_slice(&dkb[ti * dh..(ti + 1) * dh]);
+                if dvw > 0 {
+                    dv.row_mut(r)[vo..vo + dvw]
+                        .copy_from_slice(&dvb[ti * dvw..(ti + 1) * dvw]);
+                }
+            }
+        };
+        if pool.workers() > 1 && n_blocks > 1 && attn_work >= crate::util::pool::PAR_THRESHOLD
+        {
+            let blocks = pool.map(n_blocks, |i| bwd_block(i / n_heads, i % n_heads));
+            for (i, blk) in blocks.into_iter().enumerate() {
+                place(i, blk);
+            }
+        } else {
+            // serial: stream each block straight into dq/dk/dv
+            for i in 0..n_blocks {
+                place(i, bwd_block(i / n_heads, i % n_heads));
             }
         }
         if !is_opt {

@@ -24,19 +24,19 @@ use crate::model::Weights;
 use crate::prune::metric::lowest_k;
 use crate::prune::structure::{plan, units};
 use crate::prune::types::{PruneOpts, PruneReport};
-use crate::runtime::ModelEngine;
+use crate::runtime::Session;
 use crate::tensor::ops::{zero_cols, zero_elems, zero_rows};
 use crate::tensor::Tensor;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
 
 pub fn prune_slicegpt(
-    engine: &ModelEngine,
+    session: &Session,
     weights: &Weights,
     dataset: &Dataset,
     opts: &PruneOpts,
 ) -> Result<(Weights, PruneMask, PruneReport)> {
-    let spec = engine.spec.clone();
+    let spec = session.spec.clone();
     // the per-head rotation assumes every head owns a full dh-block of
     // the context Gram — only true for uniform (non-compact) specs
     anyhow::ensure!(
@@ -49,7 +49,7 @@ pub fn prune_slicegpt(
 
     let calib = dataset.calib_batches(opts.calib_batches);
     let calib_tokens: Vec<_> = calib.iter().map(|b| b.tokens.clone()).collect();
-    let stats = engine.capture(&w.packed, &calib_tokens)?;
+    let stats = session.capture(&session.pack(&w.packed)?, &calib_tokens)?;
     sw.split("capture");
 
     let group_plan = plan(&spec, opts.sparsity, false);

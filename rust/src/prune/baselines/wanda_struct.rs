@@ -15,28 +15,28 @@ use crate::model::Weights;
 use crate::prune::metric::{lowest_k, KernelMetric};
 use crate::prune::restore::restore_columns;
 use crate::prune::types::{PruneOpts, PruneReport};
-use crate::runtime::ModelEngine;
+use crate::runtime::Session;
 use crate::tensor::ops::zero_cols;
 use crate::tensor::Tensor;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
 
 pub fn prune_wanda_struct(
-    engine: &ModelEngine,
+    session: &Session,
     weights: &Weights,
     dataset: &Dataset,
     opts: &PruneOpts,
 ) -> Result<(Weights, PruneMask, PruneReport)> {
-    let spec = engine.spec.clone();
+    let spec = session.spec.clone();
     let mut w = weights.clone();
     let mut sw = Stopwatch::start();
 
     let calib = dataset.calib_batches(opts.calib_batches);
     let calib_tokens: Vec<_> = calib.iter().map(|b| b.tokens.clone()).collect();
-    let stats = engine.capture(&w.packed, &calib_tokens)?;
+    let stats = session.capture(&session.pack(&w.packed)?, &calib_tokens)?;
     sw.split("capture");
 
-    let metric = KernelMetric::new(engine.manifest);
+    let metric = KernelMetric::new(session.manifest);
     let mut removed = 0usize;
     // (operator names, which Gram supplies its input activations)
     let ops_per_layer: Vec<(&str, GramKind)> = if spec.family == "opt" {
@@ -115,7 +115,7 @@ enum GramKind {
     Ffn,
 }
 
-fn gram_of(stats: &crate::runtime::engine::LayerStats, k: GramKind) -> &Tensor {
+fn gram_of(stats: &crate::runtime::session::LayerStats, k: GramKind) -> &Tensor {
     match k {
         GramKind::Ln1 => &stats.g_ln1,
         GramKind::Ln2 => &stats.g_ln2,

@@ -72,6 +72,13 @@ impl<'m> KernelMetric<'m> {
                     }
                 }
             } else {
+                // compact (per-layer-sliced) shapes have no pre-built
+                // kernel artifact — say so once per shape instead of
+                // silently degrading (ROADMAP: compact-aware metrics)
+                crate::warn!(
+                    "no '{name}' kernel artifact for shape {m}x{n} (compact \
+                     re-pruning?); using the shape-generic host Wanda metric"
+                );
                 None
             }
         });

@@ -12,8 +12,8 @@ use super::types::{Method, PruneOpts, PruneReport};
 use crate::data::Dataset;
 use crate::model::mask::{LayerMask, PruneMask};
 use crate::model::{Weights};
-use crate::runtime::engine::CalibStats;
-use crate::runtime::ModelEngine;
+use crate::runtime::session::CalibStats;
+use crate::runtime::Session;
 use crate::tensor::ops::{zero_cols, zero_elems, zero_rows};
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
@@ -21,21 +21,21 @@ use anyhow::Result;
 /// Prune `weights` in place (on a clone) and return the pruned weights,
 /// the structural mask and the phase report.
 pub fn prune(
-    engine: &ModelEngine,
+    session: &Session,
     weights: &Weights,
     dataset: &Dataset,
     opts: &PruneOpts,
 ) -> Result<(Weights, PruneMask, PruneReport)> {
     if opts.method == Method::SliceGptLike {
-        return super::baselines::slicegpt::prune_slicegpt(engine, weights, dataset, opts);
+        return super::baselines::slicegpt::prune_slicegpt(session, weights, dataset, opts);
     }
     if opts.method == Method::WandaStruct {
         return super::baselines::wanda_struct::prune_wanda_struct(
-            engine, weights, dataset, opts,
+            session, weights, dataset, opts,
         );
     }
 
-    let spec = engine.spec.clone();
+    let spec = session.spec.clone();
     let mut w = weights.clone();
     let mut mask = PruneMask::full(&spec);
     let mut sw = Stopwatch::start();
@@ -43,13 +43,18 @@ pub fn prune(
     let calib = dataset.calib_batches(opts.calib_batches);
     let calib_tokens: Vec<_> = calib.iter().map(|b| b.tokens.clone()).collect();
 
+    // Pack the dense params once; gradcol and the first capture both see
+    // the same unmodified weights. (Sequential mode re-packs per layer
+    // below because `w` mutates between captures.)
+    let dense_packed = session.pack(&w.packed)?;
+
     // LLM-Pruner-like needs gradients once (dense model).
     let grad_scores = if opts.method == Method::LlmPrunerLike {
         let batches: Vec<_> = calib
             .iter()
             .map(|b| (b.tokens.clone(), b.targets.clone()))
             .collect();
-        let g = engine.gradcol(&w.packed, &batches)?;
+        let g = session.gradcol(&dense_packed, &batches)?;
         sw.split("gradcol");
         Some(g)
     } else {
@@ -60,7 +65,7 @@ pub fn prune(
     let layer_order: Vec<usize> = (0..spec.n_layers).collect();
 
     // Either one dense capture, or re-capture per layer (sequential).
-    let mut stats = engine.capture(&w.packed, &calib_tokens)?;
+    let mut stats = session.capture(&dense_packed, &calib_tokens)?;
     sw.split("capture");
 
     // FLAP selects globally: gather scores for all layers first.
@@ -74,7 +79,7 @@ pub fn prune(
         return finish(&spec, w, mask, opts, sw);
     }
 
-    let kernel_metric = KernelMetric::new(engine.manifest);
+    let kernel_metric = KernelMetric::new(session.manifest);
 
     // Adaptive mode (paper §5 future work): gather Wanda scores for every
     // layer, z-normalize, select pruned units globally, then apply with
@@ -113,7 +118,7 @@ pub fn prune(
     for &l in &layer_order {
         if opts.sequential && l > 0 {
             // propagate pruning effects into the calibration activations
-            stats = engine.capture(&w.packed, &calib_tokens)?;
+            stats = session.capture(&session.pack(&w.packed)?, &calib_tokens)?;
             sw.split("capture");
         }
         // ---- FFN group ---------------------------------------------------
@@ -444,17 +449,21 @@ pub struct CompactOutcome {
 /// Prune, then physically repack the result into a compact model named
 /// `name`. The repack wall-time lands in the report as a `repack` phase
 /// (Table-4-style accounting), so the export cost is visible next to
-/// capture/metric/restore.
+/// capture/metric/restore. The repack runs on the session's backend
+/// pool, so it parallelizes exactly like the entries do.
 pub fn prune_compact(
-    engine: &ModelEngine,
+    session: &Session,
     weights: &Weights,
     dataset: &Dataset,
     opts: &PruneOpts,
     name: &str,
 ) -> Result<CompactOutcome> {
-    let (pruned, mask, mut report) = prune(engine, weights, dataset, opts)?;
+    let (pruned, mask, mut report) = prune(session, weights, dataset, opts)?;
     let t0 = std::time::Instant::now();
-    let compact = crate::model::compact::compact_from_mask(&pruned, &mask, name)?;
+    let compact = {
+        let _exec = session.exec_scope();
+        crate::model::compact::compact_from_mask(&pruned, &mask, name)?
+    };
     let repack_s = t0.elapsed().as_secs_f64();
     report.phase_s.push(("repack".to_string(), repack_s));
     report.total_s += repack_s;

@@ -1,0 +1,140 @@
+//! Pluggable execution backends for the host runtime.
+//!
+//! A [`Backend`] decides *how* an entry executes — today that means which
+//! worker [`Pool`] the interpreter fans out on. Two implementations ship:
+//!
+//! * [`HostBackend`] — the single-threaded interpreter, kept as the
+//!   determinism reference every other backend is measured against.
+//! * [`ThreadedHostBackend`] — the same interpreter fanning out over
+//!   batch rows, attention heads and matmul row blocks on a scoped
+//!   worker pool ([`crate::util::pool`]), sized by `FASP_THREADS` with a
+//!   sane default. All fan-outs preserve the serial reduction order, so
+//!   its outputs are bit-identical to `HostBackend` (locked in by
+//!   `rust/tests/test_backend.rs`).
+//!
+//! Backends are installed per [`super::Session`]; entry execution runs
+//! inside `backend.enter()`, which scopes the backend's pool onto the
+//! current thread (see [`crate::util::pool::current`]). Code outside any
+//! session scope (benches poking artifacts directly, the compact
+//! repacker from the CLI) sees the process-default pool instead.
+
+use crate::util::pool::{self, Pool, PoolScope};
+use once_cell::sync::OnceCell;
+use std::sync::Arc;
+
+/// An execution strategy for host entries. Implementations must be
+/// deterministic: the same inputs produce bit-identical outputs on every
+/// backend (see the determinism contract in `rust/tests/test_backend.rs`).
+pub trait Backend: Send + Sync {
+    /// Short human-readable name for logs and bench rows.
+    fn name(&self) -> &'static str;
+
+    /// The worker pool entry execution fans out on.
+    fn pool(&self) -> &Arc<Pool>;
+
+    /// Worker count (1 for the serial reference).
+    fn threads(&self) -> usize {
+        self.pool().workers()
+    }
+
+    /// Install this backend's pool on the current thread for the duration
+    /// of the returned scope (entry execution happens inside it).
+    fn enter(&self) -> PoolScope {
+        pool::enter(self.pool().clone())
+    }
+}
+
+/// The single-threaded reference interpreter.
+pub struct HostBackend {
+    pool: Arc<Pool>,
+}
+
+impl HostBackend {
+    pub fn new() -> HostBackend {
+        HostBackend { pool: pool::serial() }
+    }
+}
+
+impl Default for HostBackend {
+    fn default() -> Self {
+        HostBackend::new()
+    }
+}
+
+impl Backend for HostBackend {
+    fn name(&self) -> &'static str {
+        "host"
+    }
+    fn pool(&self) -> &Arc<Pool> {
+        &self.pool
+    }
+}
+
+/// The thread-pooled interpreter: identical numerics, parallel fan-out.
+pub struct ThreadedHostBackend {
+    pool: Arc<Pool>,
+}
+
+impl ThreadedHostBackend {
+    /// Fixed worker count (≥ 1; 1 degenerates to the serial reference).
+    pub fn new(threads: usize) -> ThreadedHostBackend {
+        ThreadedHostBackend { pool: Arc::new(Pool::new(threads)) }
+    }
+
+    /// Sized by `FASP_THREADS`, else the machine default (capped at 8).
+    pub fn from_env() -> ThreadedHostBackend {
+        ThreadedHostBackend::new(pool::default_threads())
+    }
+}
+
+impl Backend for ThreadedHostBackend {
+    fn name(&self) -> &'static str {
+        "threaded-host"
+    }
+    fn pool(&self) -> &Arc<Pool> {
+        &self.pool
+    }
+}
+
+/// The process-default backend, chosen once from `FASP_THREADS` / core
+/// count: threaded when more than one worker is available, else the
+/// serial reference. `Session::new` uses this.
+pub fn default_backend() -> Arc<dyn Backend> {
+    static CACHE: OnceCell<Arc<dyn Backend>> = OnceCell::new();
+    CACHE
+        .get_or_init(|| {
+            if pool::default_threads() > 1 {
+                Arc::new(ThreadedHostBackend::from_env()) as Arc<dyn Backend>
+            } else {
+                Arc::new(HostBackend::new()) as Arc<dyn Backend>
+            }
+        })
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backends_report_their_pools() {
+        let h = HostBackend::new();
+        assert_eq!(h.threads(), 1);
+        assert_eq!(h.name(), "host");
+        let t = ThreadedHostBackend::new(4);
+        assert_eq!(t.threads(), 4);
+        assert_eq!(t.name(), "threaded-host");
+    }
+
+    #[test]
+    fn enter_installs_the_backend_pool() {
+        let t = ThreadedHostBackend::new(3);
+        {
+            let _g = t.enter();
+            assert_eq!(pool::current().workers(), 3);
+        }
+        let h = HostBackend::new();
+        let _g = h.enter();
+        assert_eq!(pool::current().workers(), 1);
+    }
+}

@@ -8,6 +8,11 @@
 //! Because execution is spec-driven, a compact model's synthesized
 //! entries run through the same code with per-layer dims — no masks, no
 //! special cases.
+//!
+//! Execution fans out over batch rows and attention heads through the
+//! ambient worker pool (`util::pool`), installed by the session's
+//! backend (`runtime::backend`) — serial under [`crate::runtime::HostBackend`],
+//! pooled under [`crate::runtime::ThreadedHostBackend`], bit-identical under both.
 
 use super::literal::Literal;
 use super::manifest::{Manifest, ModelSpec};

@@ -1,11 +1,12 @@
 //! Host literal: the typed value currency of the runtime boundary.
 //!
 //! Historically this was `xla::Literal` (a PJRT device-adjacent buffer).
-//! The runtime now executes entries through the in-process host backend
+//! The runtime now executes entries through the in-process host backends
 //! ([`super::host_exec`]), so a literal is a plain owned array — but the
-//! engine API keeps the same shape: params upload once into a `Literal`
-//! and multi-batch loops reuse it, and the packed train state round-trips
-//! opaquely without per-tensor decomposition.
+//! contract keeps the same shape: params upload once (wrapped as
+//! `session::PackedParams`), multi-batch loops reuse them, and the packed
+//! train state round-trips opaquely without per-tensor decomposition.
+//! Literals never cross out of `runtime/`.
 
 use crate::tensor::{IntTensor, Tensor};
 use anyhow::{bail, Result};

@@ -11,7 +11,8 @@
 //!   `*.compact.json` spec plus a packed-weights `.ftns` file under
 //!   `<artifacts>/compact/`. `Manifest::load` scans that directory and
 //!   registers each compact model as a first-class [`ModelSpec`] with
-//!   synthesized host entries, so `ModelEngine` runs it with no masks.
+//!   synthesized host entries, so a [`super::Session`] runs it with no
+//!   masks.
 
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};

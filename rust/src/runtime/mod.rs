@@ -1,26 +1,36 @@
 //! Runtime: loads the artifact manifest and executes every entry through
-//! the in-process host backend. The original PJRT/HLO boundary survives
-//! as the artifact *contract* (manifest-declared shapes, opaque literals,
+//! a pluggable host backend. The original PJRT/HLO boundary survives as
+//! the artifact *contract* (manifest-declared shapes, opaque literals,
 //! positional inputs), so the coordinator code is backend-agnostic.
 //!
 //! * [`manifest`] — typed view of `artifacts/manifest.json` (input/output
 //!   shapes, model parameter orders, capture leaf layout, per-layer dims,
 //!   compact-model registration).
-//! * [`literal`] — the typed value currency (owned host arrays).
+//! * [`literal`] — the typed value currency (owned host arrays). Never
+//!   constructed outside runtime/: callers hold [`session::PackedParams`]
+//!   and [`session::TrainState`] instead.
+//! * [`backend`] — the [`Backend`] trait plus [`HostBackend`] (serial
+//!   determinism reference) and [`ThreadedHostBackend`] (scoped worker
+//!   pool, `FASP_THREADS`, bit-identical outputs).
 //! * [`host_exec`] — the host entry interpreter (forward, capture,
-//!   gradcol, fused Adam train step, kernels, sliced layers).
+//!   gradcol, fused Adam train step, kernels, sliced layers); fans out
+//!   over batch rows / attention heads on the backend's pool.
 //! * [`executable`] — one loaded artifact: literal execution + shape
 //!   checking + output validation + perf counters.
-//! * [`engine`] — model-level facade: `fwd_loss`, `capture`, `gradcol`,
-//!   `train_step` (with a reusable packed-params literal).
+//! * [`session`] — the typed model session: `fwd_loss`, `capture`,
+//!   `gradcol`, `train_step` over packed params / train state.
 
-pub mod engine;
+pub mod backend;
 pub mod executable;
 pub mod host_exec;
 pub mod literal;
 pub mod manifest;
+pub mod session;
 
-pub use engine::ModelEngine;
+pub use backend::{default_backend, Backend, HostBackend, ThreadedHostBackend};
 pub use executable::Artifact;
 pub use literal::Literal;
 pub use manifest::{ArtifactSpec, Manifest, ModelSpec};
+pub use session::{
+    CalibStats, Entry, FwdOut, GradScores, LayerStats, PackedParams, Session, TrainState,
+};

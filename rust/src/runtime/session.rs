@@ -1,15 +1,51 @@
-//! Model-level runtime facade. One `ModelEngine` per zoo model binds the
-//! four AOT entries (`fwd_loss`, `capture`, `gradcol`, `train_step`) and
-//! exposes typed, batched operations to the coordinator. Artifacts
-//! compile lazily (first use) and are cached for the engine's lifetime.
+//! Typed model session — the single execution surface every coordinator
+//! (prune pipeline, baselines, trainer, eval harness, benches) drives.
+//!
+//! A [`Session`] binds one model spec to a [`Backend`] and exposes the
+//! four entries as typed operations: [`Session::fwd_loss`],
+//! [`Session::capture`], [`Session::gradcol`], [`Session::train_step`].
+//! All [`Literal`] packing and unpacking lives here, once:
+//!
+//! * [`PackedParams`] — the params vector uploaded into artifact form
+//!   exactly once per weight set ([`Session::pack`]); multi-batch loops
+//!   reuse it without per-call copies or re-validation.
+//! * [`TrainState`] — the opaque packed Adam state `[3P]`, mutated in
+//!   place by [`Session::train_step`] and only unpacked on request.
+//!
+//! No caller outside `runtime/` touches a `Literal` for entry I/O.
+//! Artifacts load lazily (first use of each entry) and are cached for
+//! the session's lifetime.
 
+use super::backend::{default_backend, Backend};
 use super::executable::{Artifact, In};
 use super::literal::Literal;
 use super::manifest::{Manifest, ModelSpec};
-use crate::tensor::{IntTensor, Tensor};
 use crate::tensor::ops::add_assign;
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::pool::PoolScope;
 use anyhow::{Context, Result};
 use once_cell::sync::OnceCell;
+use std::sync::Arc;
+
+/// The four model entries, in manifest suffix order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Entry {
+    FwdLoss = 0,
+    Capture = 1,
+    GradCol = 2,
+    TrainStep = 3,
+}
+
+impl Entry {
+    pub fn suffix(self) -> &'static str {
+        match self {
+            Entry::FwdLoss => "fwd_loss",
+            Entry::Capture => "capture",
+            Entry::GradCol => "gradcol",
+            Entry::TrainStep => "train_step",
+        }
+    }
+}
 
 /// Per-layer calibration statistics (sums over sample rows; additive
 /// across batches). Mirrors `python/compile/capture.py::CAPTURE_LEAVES`.
@@ -69,81 +105,98 @@ pub struct FwdOut {
     pub tok_nll: Tensor,
 }
 
-pub struct ModelEngine<'m> {
-    pub manifest: &'m Manifest,
-    pub spec: ModelSpec,
-    fwd: OnceCell<Artifact>,
-    capture: OnceCell<Artifact>,
-    gradcol: OnceCell<Artifact>,
-    train: OnceCell<Artifact>,
+/// A params vector in artifact form, built once by [`Session::pack`] and
+/// reused across entry calls. Opaque: the literal never leaves runtime/.
+pub struct PackedParams {
+    lit: Literal,
 }
 
-impl<'m> ModelEngine<'m> {
+/// The opaque packed Adam train state `[3P]` (params, m, v). Round-trips
+/// through [`Session::train_step`] without host-side decomposition.
+pub struct TrainState {
+    lit: Literal,
+}
+
+/// One model bound to an execution backend.
+pub struct Session<'m> {
+    pub manifest: &'m Manifest,
+    pub spec: ModelSpec,
+    backend: Arc<dyn Backend>,
+    entries: [OnceCell<Artifact>; 4],
+}
+
+impl<'m> Session<'m> {
+    /// Open a session on the process-default backend (threaded when more
+    /// than one worker is available — see `runtime::backend`).
     pub fn new(manifest: &'m Manifest, model: &str) -> Result<Self> {
+        Session::with_backend(manifest, model, default_backend())
+    }
+
+    /// Open a session on an explicit backend.
+    pub fn with_backend(
+        manifest: &'m Manifest,
+        model: &str,
+        backend: Arc<dyn Backend>,
+    ) -> Result<Self> {
         let spec = manifest.model(model)?.clone();
-        Ok(ModelEngine {
+        Ok(Session {
             manifest,
             spec,
-            fwd: OnceCell::new(),
-            capture: OnceCell::new(),
-            gradcol: OnceCell::new(),
-            train: OnceCell::new(),
+            backend,
+            entries: std::array::from_fn(|_| OnceCell::new()),
         })
     }
 
-    fn art<'a>(&self, cell: &'a OnceCell<Artifact>, entry: &str) -> Result<&'a Artifact> {
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    /// Scope the session's backend onto the current thread — what every
+    /// entry call does internally; exposed so adjacent bulk work (e.g.
+    /// the compact repack) can share the same pool.
+    pub fn exec_scope(&self) -> PoolScope {
+        self.backend.enter()
+    }
+
+    fn entry(&self, e: Entry) -> Result<&Artifact> {
+        let cell = &self.entries[e as usize];
         // OnceCell::get_or_try_init would move; emulate with get/set.
         if cell.get().is_none() {
-            let a = Artifact::load(self.manifest, &format!("{}_{entry}", self.spec.name))?;
+            let a =
+                Artifact::load(self.manifest, &format!("{}_{}", self.spec.name, e.suffix()))?;
             let _ = cell.set(a);
         }
         Ok(cell.get().unwrap())
     }
 
-    pub fn fwd_artifact(&self) -> Result<&Artifact> {
-        self.art(&self.fwd, "fwd_loss")
+    // ------------------------------------------------------------ packing
+
+    /// Upload a packed params vector into artifact form (length-checked).
+    pub fn pack(&self, params: &Tensor) -> Result<PackedParams> {
+        anyhow::ensure!(
+            params.numel() == self.spec.n_params_elems(),
+            "param length {} != {} ({})",
+            params.numel(),
+            self.spec.n_params_elems(),
+            self.spec.name
+        );
+        Ok(PackedParams {
+            lit: Literal::from_f32(&[params.numel()], params.data.clone()),
+        })
     }
+
+    // ------------------------------------------------------------ entries
 
     /// Teacher-forced loss on one batch.
     pub fn fwd_loss(
         &self,
-        params: &Tensor,
+        params: &PackedParams,
         tokens: &IntTensor,
         targets: &IntTensor,
     ) -> Result<FwdOut> {
-        let a = self.fwd_artifact()?;
-        let leaves = a.call(&[In::F(params), In::I(tokens), In::I(targets)])?;
-        Self::unpack_fwd(a, leaves)
-    }
-
-    /// Pre-built packed-params literal for multi-batch loops: building
-    /// the [P] literal once skips the per-call tensor→literal copy and
-    /// shape re-validation at the artifact boundary (the host backend
-    /// still takes its own working copy per call, which is small next to
-    /// the forward compute).
-    pub fn params_literal(&self, params: &Tensor) -> Result<Literal> {
-        anyhow::ensure!(
-            params.numel() == self.spec.n_params_elems(),
-            "param length {} != {}",
-            params.numel(),
-            self.spec.n_params_elems()
-        );
-        Ok(Literal::from_f32(&[params.numel()], params.data.clone()))
-    }
-
-    /// `fwd_loss` with a cached params literal.
-    pub fn fwd_loss_lit(
-        &self,
-        params: &Literal,
-        tokens: &IntTensor,
-        targets: &IntTensor,
-    ) -> Result<FwdOut> {
-        let a = self.fwd_artifact()?;
-        let leaves = a.call(&[In::Lit(params), In::I(tokens), In::I(targets)])?;
-        Self::unpack_fwd(a, leaves)
-    }
-
-    fn unpack_fwd(a: &Artifact, leaves: Vec<Literal>) -> Result<FwdOut> {
+        let a = self.entry(Entry::FwdLoss)?;
+        let _exec = self.backend.enter();
+        let leaves = a.call(&[In::Lit(&params.lit), In::I(tokens), In::I(targets)])?;
         let mean = leaves[0].as_f32()?[0];
         let seq = leaves[1].as_f32()?.to_vec();
         let tok = a.to_tensor(2, &leaves[2])?;
@@ -151,19 +204,20 @@ impl<'m> ModelEngine<'m> {
     }
 
     /// Run capture over `batches` and accumulate the per-layer stats.
+    /// Accumulation is serial in batch order — backend-independent.
     pub fn capture(
         &self,
-        params: &Tensor,
+        params: &PackedParams,
         batches: &[IntTensor],
     ) -> Result<CalibStats> {
-        let a = self.art(&self.capture, "capture")?;
+        let a = self.entry(Entry::Capture)?;
+        let _exec = self.backend.enter();
         let leaves_per_layer = self.manifest.capture_leaves.len();
         let n_layers = self.spec.n_layers;
-        let params_lit = self.params_literal(params)?; // upload once
         let mut acc: Option<Vec<LayerStats>> = None;
         let mut rows = 0usize;
         for toks in batches {
-            let outs = a.call_tensors(&[In::Lit(&params_lit), In::I(toks)])?;
+            let outs = a.call_tensors(&[In::Lit(&params.lit), In::I(toks)])?;
             anyhow::ensure!(
                 outs.len() == leaves_per_layer * n_layers,
                 "capture output arity"
@@ -208,14 +262,15 @@ impl<'m> ModelEngine<'m> {
     /// Taylor column scores accumulated over calibration batches.
     pub fn gradcol(
         &self,
-        params: &Tensor,
+        params: &PackedParams,
         batches: &[(IntTensor, IntTensor)],
     ) -> Result<Vec<GradScores>> {
-        let a = self.art(&self.gradcol, "gradcol")?;
+        let a = self.entry(Entry::GradCol)?;
+        let _exec = self.backend.enter();
         let n_layers = self.spec.n_layers;
         let mut acc: Vec<GradScores> = Vec::new();
         for (toks, tgts) in batches {
-            let outs = a.call_tensors(&[In::F(params), In::I(toks), In::I(tgts)])?;
+            let outs = a.call_tensors(&[In::Lit(&params.lit), In::I(toks), In::I(tgts)])?;
             anyhow::ensure!(outs.len() == 2 * n_layers, "gradcol output arity");
             if acc.is_empty() {
                 for l in 0..n_layers {
@@ -239,46 +294,46 @@ impl<'m> ModelEngine<'m> {
         Ok(acc)
     }
 
-    pub fn train_artifact(&self) -> Result<&Artifact> {
-        self.art(&self.train, "train_step")
+    // ------------------------------------------------------------ training
+
+    /// Build a fresh packed train state `[3P]` from packed params `[P]`.
+    pub fn init_train(&self, params: &Tensor) -> Result<TrainState> {
+        let p = params.numel();
+        anyhow::ensure!(p == self.spec.n_params_elems(), "param length");
+        let mut state = vec![0.0f32; 3 * p];
+        state[..p].copy_from_slice(&params.data);
+        Ok(TrainState { lit: Literal::from_f32(&[3 * p], state) })
     }
 
-    /// One Adam step. `state` is the packed [3P] literal; returns
-    /// (loss, new state literal) — the state never unpacks on the host.
+    /// One Adam step: replaces the state in place, returns the loss at
+    /// the incoming params. The state never unpacks on the host.
     pub fn train_step(
         &self,
-        state: &Literal,
+        state: &mut TrainState,
         tokens: &IntTensor,
         targets: &IntTensor,
         t: f32,
         lr: f32,
-    ) -> Result<(f32, Literal)> {
-        let a = self.train_artifact()?;
+    ) -> Result<f32> {
+        let a = self.entry(Entry::TrainStep)?;
+        let _exec = self.backend.enter();
         let t_s = Tensor::scalar(t);
         let lr_s = Tensor::scalar(lr);
         let mut leaves = a.call(&[
-            In::Lit(state),
+            In::Lit(&state.lit),
             In::I(tokens),
             In::I(targets),
             In::F(&t_s),
             In::F(&lr_s),
         ])?;
         let loss = leaves[0].as_f32()?[0];
-        Ok((loss, leaves.remove(1)))
+        state.lit = leaves.remove(1);
+        Ok(loss)
     }
 
-    /// Build a fresh packed train state [3P] from packed params [P].
-    pub fn init_train_state(&self, params: &Tensor) -> Result<Literal> {
-        let p = params.numel();
-        anyhow::ensure!(p == self.spec.n_params_elems(), "param length");
-        let mut state = vec![0.0f32; 3 * p];
-        state[..p].copy_from_slice(&params.data);
-        Ok(Literal::from_f32(&[3 * p], state))
-    }
-
-    /// Extract packed params [P] from a packed train-state literal [3P].
-    pub fn params_from_state(&self, state: &Literal) -> Result<Tensor> {
-        let all = state.as_f32()?;
+    /// Extract packed params `[P]` from a train state.
+    pub fn train_params(&self, state: &TrainState) -> Result<Tensor> {
+        let all = state.lit.as_f32()?;
         let p = self.spec.n_params_elems();
         anyhow::ensure!(all.len() == 3 * p, "state length {}", all.len());
         Ok(Tensor::new(vec![p], all[..p].to_vec()))

@@ -1,9 +1,13 @@
-//! Blocked host matmul. Off the request hot path (PJRT owns that) but on
-//! the pruning hot path: restoration assembles `B = W·G` (m×n×n) per
-//! pruned operator, and the host reference model uses it for
-//! cross-checking. Cache-blocked with a k-innermost microkernel; the
-//! `bench_hot_paths` bench tracks it (EXPERIMENTS.md §Perf).
+//! Blocked host matmul — the hot path of both the host runtime backend
+//! (every linear layer and the logits product) and the pruning math
+//! (restoration assembles `B = W·G` per pruned operator). Cache-blocked
+//! with a k-innermost microkernel; large products fan out over output-row
+//! chunks on the ambient worker pool (`util::pool::current`). Each output
+//! row is computed by exactly one worker with the serial loop order, so
+//! results are bit-identical for every pool width. The `bench_hot_paths`
+//! bench tracks both paths (EXPERIMENTS.md §Perf).
 
+use crate::util::pool;
 use super::Tensor;
 
 const BLOCK: usize = 64;
@@ -14,7 +18,16 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (k2, n) = b.dims2();
     assert_eq!(k, k2, "matmul inner dim: {:?} x {:?}", a.shape, b.shape);
     let mut c = vec![0.0f32; m * n];
-    matmul_into(&a.data, &b.data, &mut c, m, k, n);
+    let p = pool::current();
+    let flops = m.saturating_mul(k).saturating_mul(n);
+    if p.workers() > 1 && m >= 2 && flops >= pool::PAR_THRESHOLD {
+        p.run_rows1(&mut c, n, |r0, chunk| {
+            let rows = chunk.len() / n;
+            matmul_into(&a.data[r0 * k..(r0 + rows) * k], &b.data, chunk, rows, k, n);
+        });
+    } else {
+        matmul_into(&a.data, &b.data, &mut c, m, k, n);
+    }
     Tensor::new(vec![m, n], c)
 }
 
@@ -136,6 +149,32 @@ mod tests {
         let c1 = matmul_bt(&a, &b);
         let c2 = matmul(&a, &b.t());
         assert!(c1.max_abs_diff(&c2) < 1e-4);
+    }
+
+    #[test]
+    fn parallel_rows_bit_identical_to_serial() {
+        use crate::util::pool;
+        let mut rng = Rng::new(7);
+        // 97·120·110 ≈ 1.28M flops — above PAR_THRESHOLD, so the pooled
+        // path actually engages
+        let a = Tensor::randn(&[97, 120], 1.0, &mut rng);
+        let b = Tensor::randn(&[120, 110], 1.0, &mut rng);
+        let serial = {
+            let _g = pool::enter(pool::serial());
+            matmul(&a, &b)
+        };
+        for workers in [2usize, 3, 8] {
+            let par = {
+                let _g = pool::enter(std::sync::Arc::new(pool::Pool::new(workers)));
+                matmul(&a, &b)
+            };
+            let same = serial
+                .data
+                .iter()
+                .zip(&par.data)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "matmul not bit-identical with {workers} workers");
+        }
     }
 
     #[test]

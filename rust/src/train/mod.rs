@@ -1,12 +1,12 @@
-//! Trainer: drives the AOT `train_step` artifact. The packed [3P] state
-//! literal round-trips device↔host as a single opaque buffer per step —
+//! Trainer: drives the `train_step` entry through a [`Session`]. The
+//! packed [3P] state round-trips as an opaque `TrainState` per step —
 //! the host never unpacks it until checkpointing. This is the in-repo
 //! "pretraining" that stands in for the paper's HuggingFace checkpoints
 //! (DESIGN.md §1) and the end-to-end driver of `examples/train_prune_eval`.
 
 use crate::data::Dataset;
 use crate::model::{zoo, Weights};
-use crate::runtime::{Manifest, ModelEngine};
+use crate::runtime::{Manifest, Session};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::timer::{fmt_duration, Stopwatch};
@@ -41,20 +41,19 @@ pub fn train(
     dataset: &Dataset,
     opts: &TrainOpts,
 ) -> Result<(Weights, TrainReport)> {
-    let engine = ModelEngine::new(manifest, model)?;
-    let spec = engine.spec.clone();
+    let session = Session::new(manifest, model)?;
+    let spec = session.spec.clone();
     let init = Weights::init(&spec, opts.seed);
     let mut sw = Stopwatch::start();
-    let mut state = engine.init_train_state(&init.packed)?;
+    let mut state = session.init_train(&init.packed)?;
     sw.split("init");
 
     let mut losses = Vec::with_capacity(opts.steps);
     for step in 0..opts.steps {
         let batch = dataset.train_batch(step);
         let lr = schedule(opts, step);
-        let (loss, new_state) =
-            engine.train_step(&state, &batch.tokens, &batch.targets, (step + 1) as f32, lr)?;
-        state = new_state;
+        let loss =
+            session.train_step(&mut state, &batch.tokens, &batch.targets, (step + 1) as f32, lr)?;
         losses.push(loss);
         if step % opts.log_every == 0 || step + 1 == opts.steps {
             crate::info!(
@@ -66,7 +65,7 @@ pub fn train(
     }
     sw.split("steps");
 
-    let packed = engine.params_from_state(&state)?;
+    let packed = session.train_params(&state)?;
     let mut weights = Weights::zeros(&spec);
     weights.packed = Tensor::new(vec![packed.numel()], packed.data);
     let report = TrainReport {

@@ -4,6 +4,7 @@
 //! equivalent (see DESIGN.md §3).
 
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod timer;
 pub mod quickcheck;

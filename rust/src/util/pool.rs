@@ -1,0 +1,342 @@
+//! Dependency-free scoped worker pool (std::thread only) — the execution
+//! substrate of the runtime backends (`runtime::backend`).
+//!
+//! Design rules, in priority order:
+//!
+//! 1. **Determinism**: every helper partitions work into disjoint output
+//!    regions computed with exactly the arithmetic (and reduction order)
+//!    the serial code uses. No atomic accumulation, no worker-count-
+//!    dependent reductions — a `Pool` with 1 worker and a `Pool` with 16
+//!    produce bit-identical results.
+//! 2. **Zero dependencies**: scoped `std::thread` fan-out per call. For
+//!    the coarse tasks this repo parallelizes (batch rows, attention
+//!    heads, layer repacks) the spawn cost is noise next to the work.
+//! 3. **No nesting**: worker threads run with a serial pool installed, so
+//!    a parallel matmul inside a parallel attention block never explodes
+//!    into threads².
+//!
+//! Sizing comes from `FASP_THREADS` (see [`default_threads`]). The
+//! process-wide default pool is what ambient code (outside any backend
+//! scope) sees via [`current`]; `runtime::backend` installs its own pool
+//! for the duration of an entry execution.
+
+use once_cell::sync::OnceCell;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Below this many scalar operations a parallel fan-out is not worth the
+/// scoped-spawn overhead; call sites compare their work estimate to it.
+pub const PAR_THRESHOLD: usize = 1 << 20;
+
+/// Hard cap on the default sizing (explicit `FASP_THREADS` may exceed it).
+const DEFAULT_MAX_THREADS: usize = 8;
+
+/// A fixed-width scoped worker pool. Cheap to clone behind an [`Arc`];
+/// holds no threads between calls.
+pub struct Pool {
+    workers: usize,
+}
+
+impl Pool {
+    pub fn new(workers: usize) -> Pool {
+        Pool { workers: workers.max(1) }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Deterministic parallel map: returns `[f(0), f(1), …, f(n-1)]` in
+    /// index order. Tasks are work-stolen off a shared counter; each
+    /// worker collects `(index, value)` pairs locally and the results are
+    /// slotted by index, so scheduling never reorders anything.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.workers == 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let w = self.workers.min(n);
+        let next = AtomicUsize::new(0);
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let f = &f;
+        let next = &next;
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(w - 1);
+            for _ in 0..w - 1 {
+                handles.push(s.spawn(move || {
+                    let _serial = enter(serial());
+                    let mut got: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        got.push((i, f(i)));
+                    }
+                    got
+                }));
+            }
+            {
+                let _serial = enter(serial());
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    slots[i] = Some(f(i));
+                }
+            }
+            for h in handles {
+                for (i, v) in h.join().expect("pool worker panicked") {
+                    slots[i] = Some(v);
+                }
+            }
+        });
+        slots
+            .into_iter()
+            .map(|o| o.expect("pool map: missing slot"))
+            .collect()
+    }
+
+    /// Split `data` (logically rows of `row_len` elements) into one
+    /// contiguous row-range per worker and run `f(first_row, chunk)` on
+    /// each in parallel. Each row is written by exactly one worker with
+    /// the serial arithmetic, so the result is chunking-independent.
+    pub fn run_rows1<F>(&self, data: &mut [f32], row_len: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        let rows = if row_len == 0 { 0 } else { data.len() / row_len };
+        debug_assert_eq!(rows * row_len, data.len(), "run_rows1: ragged data");
+        let w = self.workers.min(rows.max(1));
+        if w <= 1 {
+            f(0, data);
+            return;
+        }
+        let f = &f;
+        std::thread::scope(|s| {
+            let base = rows / w;
+            let extra = rows % w;
+            let mut rest = data;
+            let mut row0 = 0usize;
+            for wi in 0..w {
+                let take_rows = base + usize::from(wi < extra);
+                let (chunk, tail) = rest.split_at_mut(take_rows * row_len);
+                rest = tail;
+                let r0 = row0;
+                row0 += take_rows;
+                if wi + 1 == w {
+                    // last chunk runs on the calling thread
+                    let _serial = enter(serial());
+                    f(r0, chunk);
+                } else {
+                    s.spawn(move || {
+                        let _serial = enter(serial());
+                        f(r0, chunk);
+                    });
+                }
+            }
+        });
+    }
+
+    /// Two-buffer variant of [`run_rows1`]: both slices are split at the
+    /// same row boundaries (`a` has `a_len` elements per row, `b` has
+    /// `b_len`), so `f` sees matching disjoint row ranges of each. Used
+    /// where a row transformation also emits a per-row scalar (e.g. the
+    /// softmax/NLL loop writing probabilities and per-row loss).
+    pub fn run_rows2<F>(
+        &self,
+        a: &mut [f32],
+        a_len: usize,
+        b: &mut [f32],
+        b_len: usize,
+        f: F,
+    ) where
+        F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
+    {
+        let rows = if a_len == 0 { 0 } else { a.len() / a_len };
+        debug_assert_eq!(rows * a_len, a.len(), "run_rows2: ragged a");
+        debug_assert_eq!(rows * b_len, b.len(), "run_rows2: b rows mismatch");
+        let w = self.workers.min(rows.max(1));
+        if w <= 1 {
+            f(0, a, b);
+            return;
+        }
+        let f = &f;
+        std::thread::scope(|s| {
+            let base = rows / w;
+            let extra = rows % w;
+            let mut rest_a = a;
+            let mut rest_b = b;
+            let mut row0 = 0usize;
+            for wi in 0..w {
+                let take_rows = base + usize::from(wi < extra);
+                let (ca, ta) = rest_a.split_at_mut(take_rows * a_len);
+                let (cb, tb) = rest_b.split_at_mut(take_rows * b_len);
+                rest_a = ta;
+                rest_b = tb;
+                let r0 = row0;
+                row0 += take_rows;
+                if wi + 1 == w {
+                    let _serial = enter(serial());
+                    f(r0, ca, cb);
+                } else {
+                    s.spawn(move || {
+                        let _serial = enter(serial());
+                        f(r0, ca, cb);
+                    });
+                }
+            }
+        });
+    }
+}
+
+// ------------------------------------------------------------- sizing
+
+/// Explicit `FASP_THREADS` setting, if present and valid (≥ 1).
+pub fn threads_from_env() -> Option<usize> {
+    std::env::var("FASP_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+}
+
+/// Pool width used when nothing installs a backend: `FASP_THREADS` if
+/// set, else the machine's parallelism capped at 8 (the fan-outs here
+/// are memory-bandwidth-bound well before that).
+pub fn default_threads() -> usize {
+    threads_from_env().unwrap_or_else(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(DEFAULT_MAX_THREADS)
+    })
+}
+
+// ------------------------------------------------------------- ambient pool
+
+static SERIAL: OnceCell<Arc<Pool>> = OnceCell::new();
+static DEFAULT: OnceCell<Arc<Pool>> = OnceCell::new();
+
+thread_local! {
+    static CURRENT: RefCell<Option<Arc<Pool>>> = RefCell::new(None);
+}
+
+/// The shared 1-worker pool (the determinism reference and the pool
+/// installed inside workers to forbid nested fan-out).
+pub fn serial() -> Arc<Pool> {
+    SERIAL.get_or_init(|| Arc::new(Pool::new(1))).clone()
+}
+
+/// The process-default pool, sized by [`default_threads`] once.
+pub fn default_pool() -> Arc<Pool> {
+    DEFAULT
+        .get_or_init(|| Arc::new(Pool::new(default_threads())))
+        .clone()
+}
+
+/// The pool ambient on this thread: the innermost [`enter`] scope, else
+/// the process default.
+pub fn current() -> Arc<Pool> {
+    CURRENT
+        .with(|c| c.borrow().clone())
+        .unwrap_or_else(default_pool)
+}
+
+/// RAII scope installing a pool as this thread's [`current`]; restores
+/// the previous pool on drop. Returned by `Backend::enter`.
+pub struct PoolScope {
+    prev: Option<Arc<Pool>>,
+}
+
+pub fn enter(pool: Arc<Pool>) -> PoolScope {
+    let prev = CURRENT.with(|c| c.borrow_mut().replace(pool));
+    PoolScope { prev }
+}
+
+impl Drop for PoolScope {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CURRENT.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_index_order() {
+        for workers in [1usize, 2, 4, 7] {
+            let pool = Pool::new(workers);
+            let out = pool.map(23, |i| i * i);
+            assert_eq!(out, (0..23).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn run_rows1_covers_every_row_once() {
+        for workers in [1usize, 2, 3, 5] {
+            let pool = Pool::new(workers);
+            let rows = 11;
+            let row_len = 4;
+            let mut data = vec![0.0f32; rows * row_len];
+            pool.run_rows1(&mut data, row_len, |r0, chunk| {
+                for (i, row) in chunk.chunks_exact_mut(row_len).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (r0 + i) as f32 + 1.0;
+                    }
+                }
+            });
+            for r in 0..rows {
+                for j in 0..row_len {
+                    assert_eq!(data[r * row_len + j], (r + 1) as f32, "w={workers} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_rows2_splits_both_buffers_consistently() {
+        let pool = Pool::new(3);
+        let rows = 9;
+        let mut a = vec![1.0f32; rows * 2];
+        let mut b = vec![0.0f32; rows];
+        pool.run_rows2(&mut a, 2, &mut b, 1, |r0, ca, cb| {
+            for i in 0..cb.len() {
+                ca[i * 2] += (r0 + i) as f32;
+                cb[i] = ca[i * 2] + ca[i * 2 + 1];
+            }
+        });
+        for r in 0..rows {
+            assert_eq!(b[r], r as f32 + 2.0);
+        }
+    }
+
+    #[test]
+    fn workers_run_with_serial_pool_installed() {
+        let pool = Pool::new(4);
+        let nested = pool.map(8, |_| current().workers());
+        assert!(nested.iter().all(|&w| w == 1), "nested pools must be serial");
+    }
+
+    #[test]
+    fn enter_scopes_nest_and_restore() {
+        let outer = current().workers();
+        {
+            let _g = enter(Arc::new(Pool::new(5)));
+            assert_eq!(current().workers(), 5);
+            {
+                let _g2 = enter(serial());
+                assert_eq!(current().workers(), 1);
+            }
+            assert_eq!(current().workers(), 5);
+        }
+        assert_eq!(current().workers(), outer);
+    }
+}

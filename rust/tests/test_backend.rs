@@ -1,0 +1,181 @@
+//! Backend determinism contract: `ThreadedHostBackend` (FASP_THREADS-style
+//! pools, here pinned to 4 workers) must produce **bit-identical**
+//! `fwd_loss` / `capture` / `gradcol` / `train_step` outputs and identical
+//! prune masks vs the single-threaded `HostBackend` reference. The
+//! parallel fan-outs use fixed reduction orders and no atomic
+//! accumulation, so this is equality of f32 bit patterns, not tolerance.
+//! Requires `make artifacts`.
+
+use fasp::data::{Corpus, Dataset};
+use fasp::model::Weights;
+use fasp::prune::{self, Method, PruneOpts};
+use fasp::runtime::{Backend, HostBackend, Manifest, Session, ThreadedHostBackend};
+use std::sync::Arc;
+
+const THREADS: usize = 4;
+
+fn manifest() -> Manifest {
+    Manifest::load(&fasp::artifacts_dir()).expect("run `make artifacts` first")
+}
+
+fn sessions<'m>(m: &'m Manifest, model: &str) -> (Session<'m>, Session<'m>) {
+    let single = Session::with_backend(m, model, Arc::new(HostBackend::new())).unwrap();
+    let threaded =
+        Session::with_backend(m, model, Arc::new(ThreadedHostBackend::new(THREADS))).unwrap();
+    (single, threaded)
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn fwd_loss_bit_identical_across_backends() {
+    let m = manifest();
+    for model in ["opt_tiny", "llama_tiny", "llama_small"] {
+        let (single, threaded) = sessions(&m, model);
+        assert_eq!(single.backend().name(), "host");
+        assert_eq!(single.backend().threads(), 1);
+        assert_eq!(threaded.backend().name(), "threaded-host");
+        assert_eq!(threaded.backend().threads(), THREADS);
+        let spec = single.spec.clone();
+        let w = Weights::init(&spec, 7);
+        let ds = Dataset::new(Corpus::new(spec.vocab, 3), spec.batch, spec.seq, 2);
+        let b = ds.train_batch(0);
+
+        let o1 = single.fwd_loss(&single.pack(&w.packed).unwrap(), &b.tokens, &b.targets).unwrap();
+        let o2 =
+            threaded.fwd_loss(&threaded.pack(&w.packed).unwrap(), &b.tokens, &b.targets).unwrap();
+        assert_eq!(
+            o1.mean_nll.to_bits(),
+            o2.mean_nll.to_bits(),
+            "{model}: mean nll diverged"
+        );
+        assert!(bits_eq(&o1.seq_nll, &o2.seq_nll), "{model}: seq nll diverged");
+        assert!(
+            bits_eq(&o1.tok_nll.data, &o2.tok_nll.data),
+            "{model}: token nll diverged"
+        );
+    }
+}
+
+#[test]
+fn capture_and_gradcol_bit_identical_across_backends() {
+    let m = manifest();
+    let (single, threaded) = sessions(&m, "llama_tiny");
+    let spec = single.spec.clone();
+    let w = Weights::init(&spec, 11);
+    let ds = Dataset::new(Corpus::new(spec.vocab, 5), spec.batch, spec.seq, 2);
+    let b = ds.train_batch(0);
+
+    let s1 = single
+        .capture(&single.pack(&w.packed).unwrap(), &[b.tokens.clone()])
+        .unwrap();
+    let s2 = threaded
+        .capture(&threaded.pack(&w.packed).unwrap(), &[b.tokens.clone()])
+        .unwrap();
+    assert_eq!(s1.rows, s2.rows);
+    for (l, (a, c)) in s1.layers.iter().zip(&s2.layers).enumerate() {
+        assert!(bits_eq(&a.g_ln1.data, &c.g_ln1.data), "layer {l} g_ln1");
+        assert!(bits_eq(&a.g_ln2.data, &c.g_ln2.data), "layer {l} g_ln2");
+        assert!(bits_eq(&a.g_attn.data, &c.g_attn.data), "layer {l} g_attn");
+        assert!(bits_eq(&a.g_ffn.data, &c.g_ffn.data), "layer {l} g_ffn");
+        assert!(bits_eq(&a.m_ffn.data, &c.m_ffn.data), "layer {l} m_ffn");
+    }
+
+    let batches = vec![(b.tokens.clone(), b.targets.clone())];
+    let g1 = single.gradcol(&single.pack(&w.packed).unwrap(), &batches).unwrap();
+    let g2 = threaded.gradcol(&threaded.pack(&w.packed).unwrap(), &batches).unwrap();
+    for (l, (a, c)) in g1.iter().zip(&g2).enumerate() {
+        assert!(bits_eq(&a.ffn, &c.ffn), "layer {l} ffn taylor scores diverged");
+        assert!(bits_eq(&a.ov, &c.ov), "layer {l} ov taylor scores diverged");
+    }
+}
+
+#[test]
+fn train_step_bit_identical_across_backends() {
+    let m = manifest();
+    let (single, threaded) = sessions(&m, "llama_tiny");
+    let spec = single.spec.clone();
+    let init = Weights::init(&spec, 42);
+    let ds = Dataset::new(Corpus::new(spec.vocab, 9), spec.batch, spec.seq, 8);
+
+    let mut st1 = single.init_train(&init.packed).unwrap();
+    let mut st2 = threaded.init_train(&init.packed).unwrap();
+    for step in 0..3 {
+        let b = ds.train_batch(step);
+        let l1 = single
+            .train_step(&mut st1, &b.tokens, &b.targets, (step + 1) as f32, 8e-3)
+            .unwrap();
+        let l2 = threaded
+            .train_step(&mut st2, &b.tokens, &b.targets, (step + 1) as f32, 8e-3)
+            .unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits(), "step {step}: loss diverged");
+    }
+    let p1 = single.train_params(&st1).unwrap();
+    let p2 = threaded.train_params(&st2).unwrap();
+    assert!(bits_eq(&p1.data, &p2.data), "trained params diverged");
+}
+
+/// The full pipeline: identical prune masks AND identical pruned weights
+/// under both backends (capture → metric → select → restore all run on
+/// pool-width-independent arithmetic).
+#[test]
+fn prune_masks_identical_across_backends() {
+    let m = manifest();
+    let (single, threaded) = sessions(&m, "llama_tiny");
+    let spec = single.spec.clone();
+    let w = Weights::init(&spec, 21);
+    let ds = Dataset::new(Corpus::new(spec.vocab, 13), spec.batch, spec.seq, 4);
+
+    let mut opts = PruneOpts::new(Method::Fasp, 0.3);
+    opts.calib_batches = 2;
+    let (w1, m1, _) = prune::prune(&single, &w, &ds, &opts).unwrap();
+    let (w2, m2, _) = prune::prune(&threaded, &w, &ds, &opts).unwrap();
+    for (l, (a, b)) in m1.layers.iter().zip(&m2.layers).enumerate() {
+        assert_eq!(a.ffn, b.ffn, "layer {l}: ffn masks diverged");
+        assert_eq!(a.ov, b.ov, "layer {l}: ov masks diverged");
+        assert_eq!(a.qk, b.qk, "layer {l}: qk masks diverged");
+    }
+    assert!(bits_eq(&w1.packed.data, &w2.packed.data), "pruned weights diverged");
+}
+
+/// Compact repack on a wide pool equals the serial repack bit-for-bit
+/// (gathers are pure copies).
+#[test]
+fn compact_repack_identical_across_pool_widths() {
+    use fasp::util::pool;
+    let m = manifest();
+    let spec = m.model("llama_tiny").unwrap().clone();
+    let w = Weights::init(&spec, 5);
+    let mut mask = fasp::model::PruneMask::full(&spec);
+    for j in 0..16 {
+        mask.layers[0].ffn[j] = false;
+        mask.layers[1].ov[j % spec.d_model] = false;
+    }
+    let serial = {
+        let _g = pool::enter(pool::serial());
+        fasp::model::compact::compact_from_mask(&w, &mask, "bk_serial").unwrap()
+    };
+    let pooled = {
+        let _g = pool::enter(Arc::new(pool::Pool::new(THREADS)));
+        fasp::model::compact::compact_from_mask(&w, &mask, "bk_pooled").unwrap()
+    };
+    assert_eq!(serial.spec.layer_dims, pooled.spec.layer_dims);
+    assert!(
+        bits_eq(&serial.weights.packed.data, &pooled.weights.packed.data),
+        "repacked weights diverged across pool widths"
+    );
+}
+
+/// The speed harness agrees: outputs identical, timing fields sane.
+#[test]
+fn compare_backends_reports_identity() {
+    let m = manifest();
+    let spec = m.model("llama_small").unwrap().clone();
+    let w = Weights::init(&spec, 3);
+    let cmp = fasp::eval::speed::compare_backends(&m, "llama_small", &w, 3, THREADS).unwrap();
+    assert!(cmp.identical, "backend outputs diverged");
+    assert_eq!(cmp.threads, THREADS);
+    assert!(cmp.single_ms > 0.0 && cmp.threaded_ms > 0.0);
+}

@@ -2,7 +2,7 @@
 //! the physically sliced model must be a faithful, loadable, *faster*
 //! stand-in for the masked dense model.
 //!
-//! * round-trip: compact → save → manifest register → engine load →
+//! * round-trip: compact → save → manifest register → session load →
 //!   forward/perplexity parity with the masked model (±1e-3);
 //! * property: random masks → compact forward equals masked forward to
 //!   1e-5 (both families);
@@ -14,7 +14,7 @@ use fasp::eval::perplexity;
 use fasp::model::{compact, host, Weights};
 use fasp::prune::{self, Method, PruneOpts};
 use fasp::runtime::manifest::LayerDims;
-use fasp::runtime::{Manifest, ModelEngine, ModelSpec};
+use fasp::runtime::{Manifest, ModelSpec, Session};
 use fasp::tensor::ops::{zero_cols, zero_elems, zero_rows};
 use fasp::util::quickcheck::{forall, Gen};
 
@@ -147,32 +147,31 @@ fn zero_sparsity_export_is_bit_identical() {
 }
 
 /// Full round trip at test scale: train a little, prune with FASP,
-/// repack, save, re-register in the manifest, run through ModelEngine —
+/// repack, save, re-register in the manifest, run through a Session —
 /// perplexity must match the masked model within 1e-3.
 #[test]
 fn compact_round_trip_matches_masked_perplexity() {
     let m = manifest();
     let model = "llama_tiny";
-    let engine = ModelEngine::new(&m, model).unwrap();
-    let spec = engine.spec.clone();
+    let session = Session::new(&m, model).unwrap();
+    let spec = session.spec.clone();
     let ds = Dataset::new(Corpus::new(spec.vocab, 99), spec.batch, spec.seq, 44);
 
     // brief training so pruning acts on structured weights
     let init = Weights::init(&spec, 7);
-    let mut state = engine.init_train_state(&init.packed).unwrap();
+    let mut state = session.init_train(&init.packed).unwrap();
     for step in 0..40 {
         let b = ds.train_batch(step);
-        let (_, ns) = engine
-            .train_step(&state, &b.tokens, &b.targets, (step + 1) as f32, 8e-3)
+        session
+            .train_step(&mut state, &b.tokens, &b.targets, (step + 1) as f32, 8e-3)
             .unwrap();
-        state = ns;
     }
     let mut trained = Weights::zeros(&spec);
-    trained.packed = engine.params_from_state(&state).unwrap();
+    trained.packed = session.train_params(&state).unwrap();
 
     let mut opts = PruneOpts::new(Method::Fasp, 0.3);
     opts.calib_batches = 2;
-    let out = prune::prune_compact(&engine, &trained, &ds, &opts, "llama_tiny_rt").unwrap();
+    let out = prune::prune_compact(&session, &trained, &ds, &opts, "llama_tiny_rt").unwrap();
     assert!(out.report.phase("repack") > 0.0, "repack phase not accounted");
     assert!(
         out.compact.spec.n_params_elems() < spec.n_params_elems(),
@@ -188,9 +187,9 @@ fn compact_round_trip_matches_masked_perplexity() {
     let cw = m2.compact_weights(&name).unwrap();
     assert_eq!(cw.packed, out.compact.weights.packed);
 
-    let ce = ModelEngine::new(&m2, &name).unwrap();
+    let ce = Session::new(&m2, &name).unwrap();
     let eval_b = ds.valid_batches(3);
-    let ppl_masked = perplexity(&engine, &out.pruned, &eval_b).unwrap();
+    let ppl_masked = perplexity(&session, &out.pruned, &eval_b).unwrap();
     let ppl_compact = perplexity(&ce, &cw, &eval_b).unwrap();
     assert!(
         (ppl_masked - ppl_compact).abs() < 1e-3 * ppl_masked.max(1.0),
@@ -205,14 +204,14 @@ fn compact_round_trip_matches_masked_perplexity() {
 fn compact_latency_strictly_below_dense_at_30pct() {
     let mut m = manifest();
     let model = "llama_small";
-    let engine = ModelEngine::new(&m, model).unwrap();
-    let spec = engine.spec.clone();
+    let session = Session::new(&m, model).unwrap();
+    let spec = session.spec.clone();
     let w = Weights::init(&spec, 5);
     let ds = Dataset::new(Corpus::new(spec.vocab, 5), spec.batch, spec.seq, 2);
 
     let mut opts = PruneOpts::new(Method::Magnitude, 0.35);
     opts.calib_batches = 1;
-    let out = prune::prune_compact(&engine, &w, &ds, &opts, "llama_small_fast").unwrap();
+    let out = prune::prune_compact(&session, &w, &ds, &opts, "llama_small_fast").unwrap();
 
     let dir = tmpdir("latency");
     let jpath = compact::save_compact(&dir, &out.compact).unwrap();
@@ -261,12 +260,12 @@ fn manifest_scan_discovers_compact_artifacts() {
     assert_eq!(spec2.d_ff_l(1), spec.d_ff);
     assert!(!spec2.is_uniform());
 
-    // and the engine can run it from the scanned manifest
+    // and a session can run it from the scanned manifest
     let cw = m2.compact_weights("opt_tiny_scan").unwrap();
-    let ce = ModelEngine::new(&m2, "opt_tiny_scan").unwrap();
+    let ce = Session::new(&m2, "opt_tiny_scan").unwrap();
     let ds = Dataset::new(Corpus::new(spec.vocab, 2), spec.batch, spec.seq, 2);
     let b = ds.train_batch(0);
-    let out = ce.fwd_loss(&cw.packed, &b.tokens, &b.targets).unwrap();
+    let out = ce.fwd_loss(&ce.pack(&cw.packed).unwrap(), &b.tokens, &b.targets).unwrap();
     assert!(out.mean_nll.is_finite());
     std::fs::remove_dir_all(&d).ok();
 }

@@ -6,7 +6,7 @@
 use fasp::data::tasks::{TaskKind, TaskSuite};
 use fasp::data::{Corpus, Dataset};
 use fasp::model::{host, Weights};
-use fasp::runtime::{Manifest, ModelEngine};
+use fasp::runtime::{Manifest, Session};
 use fasp::util::rng::Rng;
 
 fn manifest() -> Manifest {
@@ -90,13 +90,13 @@ fn task_suites_solvable_by_oracle() {
 #[test]
 fn random_model_near_chance() {
     let m = manifest();
-    let engine = ModelEngine::new(&m, "llama_tiny").unwrap();
-    let spec = engine.spec.clone();
+    let session = Session::new(&m, "llama_tiny").unwrap();
+    let spec = session.spec.clone();
     let w = Weights::init(&spec, 99);
     let corpus = Corpus::new(spec.vocab, 55);
     for kind in [TaskKind::PiqaS, TaskKind::HellaSwagS] {
         let suite = TaskSuite::generate(&corpus, kind, 60, 5);
-        let r = fasp::eval::eval_suite(&engine, &w, &suite).unwrap();
+        let r = fasp::eval::eval_suite(&session, &w, &suite).unwrap();
         let chance = 100.0 / kind.n_choices() as f64;
         assert!(
             (r.accuracy - chance).abs() < 22.0,
@@ -111,15 +111,15 @@ fn random_model_near_chance() {
 #[test]
 fn perplexity_host_and_pjrt_agree() {
     let m = manifest();
-    let engine = ModelEngine::new(&m, "opt_tiny").unwrap();
-    let spec = engine.spec.clone();
+    let session = Session::new(&m, "opt_tiny").unwrap();
+    let spec = session.spec.clone();
     let w = Weights::init(&spec, 23);
     let ds = Dataset::new(Corpus::new(spec.vocab, 7), spec.batch, spec.seq, 2);
     let batches = ds.valid_batches(2);
-    let p_dev = fasp::eval::perplexity(&engine, &w, &batches).unwrap();
+    let p_dev = fasp::eval::perplexity(&session, &w, &batches).unwrap();
     let p_host = fasp::eval::perplexity::perplexity_host(&w, &batches).unwrap();
     let rel = (p_dev - p_host).abs() / p_host;
-    assert!(rel < 1e-2, "ppl mismatch: pjrt {p_dev} host {p_host}");
+    assert!(rel < 1e-2, "ppl mismatch: session {p_dev} host {p_host}");
 }
 
 #[test]
@@ -138,8 +138,8 @@ fn calib_valid_train_disjoint_streams() {
 #[test]
 fn bigram_oracle_model_high_accuracy() {
     let m = manifest();
-    let engine = ModelEngine::new(&m, "llama_tiny").unwrap();
-    let spec = engine.spec.clone();
+    let session = Session::new(&m, "llama_tiny").unwrap();
+    let spec = session.spec.clone();
     let corpus = Corpus::new(spec.vocab, 77);
     // build a model whose tok_emb rows make logits(next|cur) ≈ log P:
     // cheat by setting the embedding to one-hot-ish and using... instead,

@@ -8,15 +8,15 @@ use fasp::data::tasks::{TaskKind, TaskSuite};
 use fasp::data::{Corpus, Dataset};
 use fasp::eval::{eval_suite, perplexity};
 use fasp::prune::{prune, Method, PruneOpts};
-use fasp::runtime::{Manifest, ModelEngine};
+use fasp::runtime::{Manifest, Session};
 use fasp::train::{train, TrainOpts};
 
 #[test]
 fn train_prune_eval_zero_shot_pipeline() {
     let model = "llama_tiny";
     let manifest = Manifest::load(&fasp::artifacts_dir()).expect("make artifacts");
-    let engine = ModelEngine::new(&manifest, model).unwrap();
-    let spec = engine.spec.clone();
+    let session = Session::new(&manifest, model).unwrap();
+    let spec = session.spec.clone();
 
     // ---- train briefly (enough to beat the random-model baseline) -----
     let opts = TrainOpts { steps: 120, lr: 8e-3, warmup: 10, log_every: 1000, seed: 1 };
@@ -29,7 +29,7 @@ fn train_prune_eval_zero_shot_pipeline() {
 
     // ---- perplexity sanity: trained ≪ random-token ppl -----------------
     let eval_b = dataset.valid_batches(4);
-    let dense_ppl = perplexity(&engine, &weights, &eval_b).unwrap();
+    let dense_ppl = perplexity(&session, &weights, &eval_b).unwrap();
     assert!(
         dense_ppl < spec.vocab as f64 * 0.5,
         "dense ppl {dense_ppl} vs vocab {}",
@@ -39,16 +39,16 @@ fn train_prune_eval_zero_shot_pipeline() {
     // ---- prune 20% with FASP and magnitude -----------------------------
     let mut fasp_opts = PruneOpts::new(Method::Fasp, 0.20);
     fasp_opts.calib_batches = 3;
-    let (w_fasp, mask, rep) = prune(&engine, &weights, &dataset, &fasp_opts).unwrap();
+    let (w_fasp, mask, rep) = prune(&session, &weights, &dataset, &fasp_opts).unwrap();
     assert!((rep.achieved_sparsity - 0.20).abs() < 0.04);
     mask.validate(&spec).unwrap();
 
     let mut mag_opts = PruneOpts::new(Method::Magnitude, 0.20);
     mag_opts.calib_batches = 3;
-    let (w_mag, _, _) = prune(&engine, &weights, &dataset, &mag_opts).unwrap();
+    let (w_mag, _, _) = prune(&session, &weights, &dataset, &mag_opts).unwrap();
 
-    let ppl_fasp = perplexity(&engine, &w_fasp, &eval_b).unwrap();
-    let ppl_mag = perplexity(&engine, &w_mag, &eval_b).unwrap();
+    let ppl_fasp = perplexity(&session, &w_fasp, &eval_b).unwrap();
+    let ppl_mag = perplexity(&session, &w_mag, &eval_b).unwrap();
     assert!(ppl_fasp.is_finite() && ppl_mag.is_finite());
     // the paper's core ordering: restoration+metric beats magnitude
     assert!(
@@ -63,11 +63,11 @@ fn train_prune_eval_zero_shot_pipeline() {
 
     // ---- zero-shot: trained model beats chance on the easy suite -------
     let suite = TaskSuite::generate(&dataset.corpus, TaskKind::ArcES, 60, 7);
-    let dense_acc = eval_suite(&engine, &weights, &suite).unwrap().accuracy;
+    let dense_acc = eval_suite(&session, &weights, &suite).unwrap().accuracy;
     assert!(
         dense_acc > 35.0,
         "trained model near chance on ARC-e-s: {dense_acc:.1}%"
     );
-    let fasp_acc = eval_suite(&engine, &w_fasp, &suite).unwrap().accuracy;
+    let fasp_acc = eval_suite(&session, &w_fasp, &suite).unwrap().accuracy;
     assert!(fasp_acc > 25.0, "pruned model collapsed: {fasp_acc:.1}%");
 }

@@ -3,7 +3,7 @@
 //! artifacts, impossible pruning requests.
 
 use fasp::model::Weights;
-use fasp::runtime::{Manifest, ModelEngine};
+use fasp::runtime::{Manifest, Session};
 use fasp::tensor::io::TensorFile;
 use fasp::tensor::Tensor;
 use std::io::Write;
@@ -46,7 +46,7 @@ fn unknown_model_and_artifact_errors() {
     let m = Manifest::load(&fasp::artifacts_dir()).expect("make artifacts");
     assert!(m.model("gpt5_huge").is_err());
     assert!(m.artifact("nonexistent_entry").is_err());
-    assert!(ModelEngine::new(&m, "gpt5_huge").is_err());
+    assert!(Session::new(&m, "gpt5_huge").is_err());
 }
 
 #[test]
@@ -122,8 +122,8 @@ fn restoration_rejects_degenerate_gram() {
 #[test]
 fn sparsity_one_empties_groups_but_stays_finite() {
     let m = Manifest::load(&fasp::artifacts_dir()).expect("make artifacts");
-    let engine = ModelEngine::new(&m, "llama_tiny").unwrap();
-    let spec = engine.spec.clone();
+    let session = Session::new(&m, "llama_tiny").unwrap();
+    let spec = session.spec.clone();
     let w = Weights::init(&spec, 3);
     let ds = fasp::data::Dataset::new(
         fasp::data::Corpus::new(spec.vocab, 1),
@@ -134,10 +134,14 @@ fn sparsity_one_empties_groups_but_stays_finite() {
     let mut opts = fasp::prune::PruneOpts::new(fasp::prune::Method::Fasp, 0.99);
     opts.calib_batches = 1;
     // must not panic; ratios clamp at 1.0
-    let (pw, _, rep) = fasp::prune::prune(&engine, &w, &ds, &opts).unwrap();
+    let (pw, _, rep) = fasp::prune::prune(&session, &w, &ds, &opts).unwrap();
     assert!(rep.achieved_sparsity <= 1.0);
-    let out = engine
-        .fwd_loss(&pw.packed, &ds.train_batch(0).tokens, &ds.train_batch(0).targets)
+    let out = session
+        .fwd_loss(
+            &session.pack(&pw.packed).unwrap(),
+            &ds.train_batch(0).tokens,
+            &ds.train_batch(0).targets,
+        )
         .unwrap();
     assert!(out.mean_nll.is_finite());
 }

@@ -7,7 +7,7 @@ use fasp::data::{Corpus, Dataset};
 use fasp::eval::perplexity;
 use fasp::model::Weights;
 use fasp::prune::{self, Method, PruneOpts};
-use fasp::runtime::{Manifest, ModelEngine};
+use fasp::runtime::{Manifest, Session};
 
 fn manifest() -> Manifest {
     Manifest::load(&fasp::artifacts_dir()).expect("run `make artifacts` first")
@@ -15,27 +15,26 @@ fn manifest() -> Manifest {
 
 /// Train a quick llama_tiny once per process for the pruning tests.
 fn quick_trained(m: &Manifest, model: &str, steps: usize) -> (Weights, Dataset) {
-    let engine = ModelEngine::new(m, model).unwrap();
-    let spec = engine.spec.clone();
+    let session = Session::new(m, model).unwrap();
+    let spec = session.spec.clone();
     let ds = Dataset::new(Corpus::new(spec.vocab, 13), spec.batch, spec.seq, steps + 4);
     let init = Weights::init(&spec, 4242);
-    let mut state = engine.init_train_state(&init.packed).unwrap();
+    let mut state = session.init_train(&init.packed).unwrap();
     for step in 0..steps {
         let b = ds.train_batch(step);
-        let (_, ns) = engine
-            .train_step(&state, &b.tokens, &b.targets, (step + 1) as f32, 8e-3)
+        session
+            .train_step(&mut state, &b.tokens, &b.targets, (step + 1) as f32, 8e-3)
             .unwrap();
-        state = ns;
     }
-    let packed = engine.params_from_state(&state).unwrap();
+    let packed = session.train_params(&state).unwrap();
     let mut w = Weights::zeros(&spec);
     w.packed = packed;
     (w, ds)
 }
 
 fn ppl(m: &Manifest, model: &str, w: &Weights, ds: &Dataset) -> f64 {
-    let engine = ModelEngine::new(m, model).unwrap();
-    perplexity(&engine, w, &ds.valid_batches(4)).unwrap()
+    let session = Session::new(m, model).unwrap();
+    perplexity(&session, w, &ds.valid_batches(4)).unwrap()
 }
 
 #[test]
@@ -43,7 +42,7 @@ fn every_method_runs_and_reports_sparsity() {
     let m = manifest();
     let model = "llama_tiny";
     let (w, ds) = quick_trained(&m, model, 60);
-    let engine = ModelEngine::new(&m, model).unwrap();
+    let session = Session::new(&m, model).unwrap();
     let dense_ppl = ppl(&m, model, &w, &ds);
 
     for method in Method::all() {
@@ -51,7 +50,7 @@ fn every_method_runs_and_reports_sparsity() {
         opts.calib_batches = 2;
         opts.admm_iters = 12;
         let (pruned, mask, report) =
-            prune::prune(&engine, &w, &ds, &opts).unwrap_or_else(|e| {
+            prune::prune(&session, &w, &ds, &opts).unwrap_or_else(|e| {
                 panic!("{method:?} failed: {e:#}")
             });
         // sparsity within tolerance of target (floor rounding loses a bit)
@@ -61,7 +60,7 @@ fn every_method_runs_and_reports_sparsity() {
             report.achieved_sparsity
         );
         assert!(report.total_s > 0.0);
-        mask.validate(&engine.spec).unwrap();
+        mask.validate(&session.spec).unwrap();
         // pruned model still evaluates to something finite & sane
         let p = ppl(&m, model, &pruned, &ds);
         assert!(p.is_finite() && p > 1.0, "{method:?} ppl {p}");
@@ -79,15 +78,15 @@ fn restoration_improves_over_plain_zeroing() {
     let m = manifest();
     let model = "llama_tiny";
     let (w, ds) = quick_trained(&m, model, 80);
-    let engine = ModelEngine::new(&m, model).unwrap();
+    let session = Session::new(&m, model).unwrap();
 
     let mut with = PruneOpts::new(Method::Fasp, 0.30);
     with.calib_batches = 3;
     let mut without = with.clone();
     without.restore = false;
 
-    let (wr, _, _) = prune::prune(&engine, &w, &ds, &with).unwrap();
-    let (wz, _, _) = prune::prune(&engine, &w, &ds, &without).unwrap();
+    let (wr, _, _) = prune::prune(&session, &w, &ds, &with).unwrap();
+    let (wz, _, _) = prune::prune(&session, &w, &ds, &without).unwrap();
     let ppl_restored = ppl(&m, model, &wr, &ds);
     let ppl_zeroed = ppl(&m, model, &wz, &ds);
     assert!(
@@ -101,15 +100,15 @@ fn qk_pruning_hurts_more_than_default() {
     let m = manifest();
     let model = "opt_tiny";
     let (w, ds) = quick_trained(&m, model, 80);
-    let engine = ModelEngine::new(&m, model).unwrap();
+    let session = Session::new(&m, model).unwrap();
 
     let mut default = PruneOpts::new(Method::Fasp, 0.30);
     default.calib_batches = 3;
     let mut qk = default.clone();
     qk.prune_qk = true;
 
-    let (wd, _, rd) = prune::prune(&engine, &w, &ds, &default).unwrap();
-    let (wq, _, rq) = prune::prune(&engine, &w, &ds, &qk).unwrap();
+    let (wd, _, rd) = prune::prune(&session, &w, &ds, &default).unwrap();
+    let (wq, _, rq) = prune::prune(&session, &w, &ds, &qk).unwrap();
     // equal global sparsity by construction
     assert!((rd.achieved_sparsity - rq.achieved_sparsity).abs() < 0.03);
     let ppl_default = ppl(&m, model, &wd, &ds);
@@ -125,12 +124,12 @@ fn deeper_sparsity_monotonically_degrades() {
     let m = manifest();
     let model = "llama_tiny";
     let (w, ds) = quick_trained(&m, model, 80);
-    let engine = ModelEngine::new(&m, model).unwrap();
+    let session = Session::new(&m, model).unwrap();
     let mut prev = ppl(&m, model, &w, &ds);
     for &s in &[0.1, 0.3, 0.5] {
         let mut opts = PruneOpts::new(Method::Fasp, s);
         opts.calib_batches = 2;
-        let (pw, _, _) = prune::prune(&engine, &w, &ds, &opts).unwrap();
+        let (pw, _, _) = prune::prune(&session, &w, &ds, &opts).unwrap();
         let p = ppl(&m, model, &pw, &ds);
         // allow small non-monotonicity at low sparsity (restoration noise)
         assert!(
@@ -146,11 +145,11 @@ fn sequential_mode_runs() {
     let m = manifest();
     let model = "llama_tiny";
     let (w, ds) = quick_trained(&m, model, 40);
-    let engine = ModelEngine::new(&m, model).unwrap();
+    let session = Session::new(&m, model).unwrap();
     let mut opts = PruneOpts::new(Method::Fasp, 0.2);
     opts.calib_batches = 2;
     opts.sequential = true;
-    let (pw, _, report) = prune::prune(&engine, &w, &ds, &opts).unwrap();
+    let (pw, _, report) = prune::prune(&session, &w, &ds, &opts).unwrap();
     assert!(ppl(&m, model, &pw, &ds).is_finite());
     // sequential re-captures per layer → capture phase dominates
     assert!(report.phase("capture") > 0.0);
@@ -161,13 +160,13 @@ fn flap_compensates_bias() {
     let m = manifest();
     let model = "llama_tiny";
     let (w, ds) = quick_trained(&m, model, 60);
-    let engine = ModelEngine::new(&m, model).unwrap();
+    let session = Session::new(&m, model).unwrap();
     let mut opts = PruneOpts::new(Method::Flap, 0.3);
     opts.calib_batches = 2;
-    let (pw, _, _) = prune::prune(&engine, &w, &ds, &opts).unwrap();
+    let (pw, _, _) = prune::prune(&session, &w, &ds, &opts).unwrap();
     // the compensation biases must now be non-zero somewhere
     let mut nonzero = false;
-    for l in 0..engine.spec.n_layers {
+    for l in 0..session.spec.n_layers {
         let b = pw.get_l(l, "b_down").unwrap();
         if b.data.iter().any(|&x| x != 0.0) {
             nonzero = true;
@@ -184,13 +183,13 @@ fn compact_export_round_trip_from_pipeline() {
     let m = manifest();
     let model = "llama_tiny";
     let (w, ds) = quick_trained(&m, model, 40);
-    let engine = ModelEngine::new(&m, model).unwrap();
+    let session = Session::new(&m, model).unwrap();
 
     let mut opts = PruneOpts::new(Method::Fasp, 0.2);
     opts.calib_batches = 2;
-    let out = prune::prune_compact(&engine, &w, &ds, &opts, "llama_tiny_pr").unwrap();
+    let out = prune::prune_compact(&session, &w, &ds, &opts, "llama_tiny_pr").unwrap();
     assert!(out.report.phase("repack") > 0.0, "repack phase missing from report");
-    assert!(out.compact.spec.n_params_elems() < engine.spec.n_params_elems());
+    assert!(out.compact.spec.n_params_elems() < session.spec.n_params_elems());
 
     let b = ds.train_batch(0);
     let (nll_masked, _) =
@@ -202,7 +201,7 @@ fn compact_export_round_trip_from_pipeline() {
     assert!(diff < 1e-5, "masked vs compact forward diff {diff}");
 
     // sparsity-0 export: identity
-    let full = fasp::model::PruneMask::full(&engine.spec);
+    let full = fasp::model::PruneMask::full(&session.spec);
     let cm0 = fasp::model::compact::compact_from_mask(&w, &full, "llama_tiny_id").unwrap();
     assert_eq!(cm0.weights.packed, w.packed, "sparsity-0 export not bit-identical");
 }

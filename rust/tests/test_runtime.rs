@@ -1,11 +1,10 @@
-//! Integration: the AOT HLO artifacts executed through PJRT must agree
-//! with the independent host-side reference implementation — the
-//! spike-level guarantee everything else rests on. Requires
-//! `make artifacts`.
+//! Integration: the runtime session entries must agree with the
+//! independent host-side reference implementation — the spike-level
+//! guarantee everything else rests on. Requires `make artifacts`.
 
 use fasp::data::{Corpus, Dataset};
 use fasp::model::{host, Weights};
-use fasp::runtime::{Manifest, ModelEngine};
+use fasp::runtime::{Manifest, Session};
 use fasp::tensor::Tensor;
 
 fn manifest() -> Manifest {
@@ -26,23 +25,24 @@ fn manifest_loads_and_knows_the_zoo() {
     assert!(!m.capture_leaves.is_empty());
 }
 
-/// PJRT fwd_loss vs host forward — both families.
+/// Session fwd_loss vs host forward — both families.
 #[test]
 fn fwd_loss_matches_host_reference() {
     for model in ["opt_tiny", "llama_tiny"] {
         let m = manifest();
-        let engine = ModelEngine::new(&m, model).unwrap();
-        let spec = engine.spec.clone();
+        let session = Session::new(&m, model).unwrap();
+        let spec = session.spec.clone();
         let weights = Weights::init(&spec, 7);
         let ds = Dataset::new(Corpus::new(spec.vocab, 3), spec.batch, spec.seq, 2);
         let b = ds.train_batch(0);
 
-        let out = engine.fwd_loss(&weights.packed, &b.tokens, &b.targets).unwrap();
+        let params = session.pack(&weights.packed).unwrap();
+        let out = session.fwd_loss(&params, &b.tokens, &b.targets).unwrap();
         let host_nll = host::mean_nll(&weights, &b.tokens, &b.targets).unwrap();
         let diff = (out.mean_nll - host_nll).abs();
         assert!(
             diff < 2e-3 * host_nll.abs().max(1.0),
-            "{model}: pjrt {} vs host {host_nll}",
+            "{model}: session {} vs host {host_nll}",
             out.mean_nll
         );
         // per-token consistency
@@ -52,17 +52,18 @@ fn fwd_loss_matches_host_reference() {
     }
 }
 
-/// The capture artifact's Gram matrices equal host-recomputed X^T X.
+/// The capture entry's Gram matrices equal host-recomputed X^T X.
 #[test]
 fn capture_grams_match_host_activations() {
     let m = manifest();
-    let engine = ModelEngine::new(&m, "opt_tiny").unwrap();
-    let spec = engine.spec.clone();
+    let session = Session::new(&m, "opt_tiny").unwrap();
+    let spec = session.spec.clone();
     let weights = Weights::init(&spec, 11);
     let ds = Dataset::new(Corpus::new(spec.vocab, 5), spec.batch, spec.seq, 2);
     let b = ds.train_batch(0);
 
-    let stats = engine.capture(&weights.packed, &[b.tokens.clone()]).unwrap();
+    let params = session.pack(&weights.packed).unwrap();
+    let stats = session.capture(&params, &[b.tokens.clone()]).unwrap();
     assert_eq!(stats.layers.len(), spec.n_layers);
     assert_eq!(stats.rows, spec.batch * spec.seq);
 
@@ -88,24 +89,23 @@ fn capture_grams_match_host_activations() {
     }
 }
 
-/// train_step reduces loss and the state literal round-trips opaquely.
+/// train_step reduces loss and the state round-trips opaquely.
 #[test]
 fn train_step_learns_on_tiny_model() {
     let m = manifest();
-    let engine = ModelEngine::new(&m, "llama_tiny").unwrap();
-    let spec = engine.spec.clone();
+    let session = Session::new(&m, "llama_tiny").unwrap();
+    let spec = session.spec.clone();
     let init = Weights::init(&spec, 42);
     let ds = Dataset::new(Corpus::new(spec.vocab, 9), spec.batch, spec.seq, 40);
 
-    let mut state = engine.init_train_state(&init.packed).unwrap();
+    let mut state = session.init_train(&init.packed).unwrap();
     let mut first = None;
     let mut last = 0.0f32;
     for step in 0..60 {
         let b = ds.train_batch(step);
-        let (loss, ns) = engine
-            .train_step(&state, &b.tokens, &b.targets, (step + 1) as f32, 8e-3)
+        let loss = session
+            .train_step(&mut state, &b.tokens, &b.targets, (step + 1) as f32, 8e-3)
             .unwrap();
-        state = ns;
         first.get_or_insert(loss);
         last = loss;
         assert!(loss.is_finite(), "step {step} loss {loss}");
@@ -116,7 +116,7 @@ fn train_step_learns_on_tiny_model() {
         "training did not reduce loss: {first} → {last}"
     );
     // params extracted from the state differ from init (learning happened)
-    let trained = engine.params_from_state(&state).unwrap();
+    let trained = session.train_params(&state).unwrap();
     let diff = trained.max_abs_diff(&init.packed);
     assert!(diff > 1e-3, "params unchanged after training");
 }
@@ -125,13 +125,14 @@ fn train_step_learns_on_tiny_model() {
 #[test]
 fn gradcol_scores_shapes() {
     let m = manifest();
-    let engine = ModelEngine::new(&m, "llama_tiny").unwrap();
-    let spec = engine.spec.clone();
+    let session = Session::new(&m, "llama_tiny").unwrap();
+    let spec = session.spec.clone();
     let weights = Weights::init(&spec, 1);
     let ds = Dataset::new(Corpus::new(spec.vocab, 2), spec.batch, spec.seq, 2);
     let b = ds.train_batch(0);
-    let scores = engine
-        .gradcol(&weights.packed, &[(b.tokens.clone(), b.targets.clone())])
+    let params = session.pack(&weights.packed).unwrap();
+    let scores = session
+        .gradcol(&params, &[(b.tokens.clone(), b.targets.clone())])
         .unwrap();
     assert_eq!(scores.len(), spec.n_layers);
     for s in &scores {
@@ -146,12 +147,16 @@ fn gradcol_scores_shapes() {
 #[test]
 fn wrong_shapes_rejected() {
     let m = manifest();
-    let engine = ModelEngine::new(&m, "opt_tiny").unwrap();
-    let spec = engine.spec.clone();
+    let session = Session::new(&m, "opt_tiny").unwrap();
+    let spec = session.spec.clone();
     let weights = Weights::init(&spec, 1);
+    let params = session.pack(&weights.packed).unwrap();
     let bad = fasp::tensor::IntTensor::zeros(&[1, 3]); // wrong batch/seq
-    let err = engine.fwd_loss(&weights.packed, &bad, &bad);
+    let err = session.fwd_loss(&params, &bad, &bad);
     assert!(err.is_err());
+    // wrong-length params rejected at pack time
+    let short = Tensor::zeros(&[3]);
+    assert!(session.pack(&short).is_err());
 }
 
 /// The Pallas wanda-metric artifact agrees with the host metric.
@@ -176,8 +181,8 @@ fn wanda_kernel_artifact_matches_host() {
 #[test]
 fn coupled_row_removal_is_free() {
     let m = manifest();
-    let engine = ModelEngine::new(&m, "opt_tiny").unwrap();
-    let spec = engine.spec.clone();
+    let session = Session::new(&m, "opt_tiny").unwrap();
+    let spec = session.spec.clone();
     let base = Weights::init(&spec, 21);
     let ds = Dataset::new(Corpus::new(spec.vocab, 8), spec.batch, spec.seq, 2);
     let b = ds.train_batch(0);
@@ -187,7 +192,8 @@ fn coupled_row_removal_is_free() {
     let mut fc2 = w_col.get_l(0, "fc2").unwrap();
     fasp::tensor::ops::zero_cols(&mut fc2, &[5]);
     w_col.set_l(0, "fc2", &fc2).unwrap();
-    let loss_col = engine.fwd_loss(&w_col.packed, &b.tokens, &b.targets).unwrap().mean_nll;
+    let p_col = session.pack(&w_col.packed).unwrap();
+    let loss_col = session.fwd_loss(&p_col, &b.tokens, &b.targets).unwrap().mean_nll;
 
     // additionally zero the coupled fc1 row + bias element
     let mut w_both = w_col.clone();
@@ -197,7 +203,8 @@ fn coupled_row_removal_is_free() {
     let mut b1 = w_both.get_l(0, "bfc1").unwrap();
     fasp::tensor::ops::zero_elems(&mut b1, &[5]);
     w_both.set_l(0, "bfc1", &b1).unwrap();
-    let loss_both = engine.fwd_loss(&w_both.packed, &b.tokens, &b.targets).unwrap().mean_nll;
+    let p_both = session.pack(&w_both.packed).unwrap();
+    let loss_both = session.fwd_loss(&p_both, &b.tokens, &b.targets).unwrap().mean_nll;
 
     assert!(
         (loss_col - loss_both).abs() < 1e-6,

@@ -1,22 +1,35 @@
 #!/usr/bin/env bash
 # Tier-1 verification + perf check for CI and pre-merge runs:
 #   1. release build
-#   2. full test suite (quiet)
+#   2. full test suite (quiet), twice: FASP_THREADS=1 pins the serial
+#      HostBackend; the default run exercises ThreadedHostBackend at the
+#      machine's width. Outputs are bit-identical by contract
+#      (test_backend.rs), so both runs must pass identically.
 #   3. bench_prune_time in check mode — a shrunk matrix that writes
 #      BENCH_prune_time.json (method mean times + the repack stage's
 #      fraction of prune wall-time) so perf regressions in the pruning
 #      or compact-repack paths show up as a diffable artifact.
+#   4. bench_hot_paths in check mode — writes BENCH_host_threads.json
+#      (single vs threaded host_exec fwd latency + bitwise identity) so
+#      backend-parallelism regressions are diffable too.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== cargo test -q =="
+echo "== cargo test -q (FASP_THREADS=1, serial reference backend) =="
+FASP_THREADS=1 cargo test -q
+
+echo "== cargo test -q (default threaded backend) =="
 cargo test -q
 
 echo "== bench_prune_time (check mode) =="
 FASP_BENCH_CHECK=1 cargo bench --bench bench_prune_time
 
+echo "== bench_hot_paths (check mode) =="
+FASP_BENCH_CHECK=1 cargo bench --bench bench_hot_paths
+
 echo "== verify OK =="
 [ -f BENCH_prune_time.json ] && echo "perf record: BENCH_prune_time.json"
+[ -f BENCH_host_threads.json ] && echo "perf record: BENCH_host_threads.json"
