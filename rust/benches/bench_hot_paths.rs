@@ -6,7 +6,9 @@
 //!
 //! `FASP_BENCH_CHECK=1` shrinks the matrix AND writes
 //! `BENCH_host_threads.json` (single/threaded fwd latency + bitwise
-//! identity) so CI can diff backend-parallelism regressions.
+//! identity) plus `BENCH_shard_stream.json` (shard load time, streamed
+//! vs monolithic fwd latency, peak-resident-weights estimate) so CI can
+//! diff backend-parallelism and shard-streaming regressions.
 
 use fasp::bench_support::Bencher;
 use fasp::data::{Corpus, Dataset};
@@ -125,5 +127,74 @@ fn main() {
             std::fs::write(&path, record.pretty()).unwrap();
             println!("record → {}", path.display());
         }
+    }
+
+    // ---- sharded store: stream-load vs monolithic compact ----------------
+    // Export a compact model sharded, then compare the monolithic
+    // (assemble-everything) path against the layer-streaming path: shard
+    // load time, fwd latency, and the peak-resident-weights estimate.
+    if let Ok(mut manifest) = Manifest::load(&fasp::artifacts_dir()) {
+        let model = "llama_small";
+        let spec = manifest.model(model).expect("llama_small in manifest").clone();
+        let w = Weights::init(&spec, 9);
+        let mut mask = fasp::model::PruneMask::full(&spec);
+        for l in 0..spec.n_layers {
+            for j in 0..spec.d_ff / 4 {
+                mask.layers[l].ffn[(j * 3 + l) % spec.d_ff] = false;
+            }
+        }
+        let cm =
+            fasp::model::compact::compact_from_mask(&w, &mask, "bench_shard").unwrap();
+        let dir = std::env::temp_dir().join("fasp_bench_shard");
+        let _ = std::fs::remove_dir_all(&dir);
+        let jp = fasp::model::compact::save_compact_sharded(&dir, &cm).unwrap();
+        manifest.register_compact(&jp).unwrap();
+        let store = manifest.compact_store("bench_shard").unwrap();
+        let reps = if check { 5 } else { 20 };
+        let cmp = fasp::eval::speed::compare_stream_eval(
+            &manifest,
+            "bench_shard",
+            &store,
+            reps,
+        )
+        .unwrap();
+        assert!(cmp.identical, "streamed outputs diverged — store broken");
+        println!(
+            "\nshard_stream {model}: assemble {:.3}ms, fwd mono {:.3}ms vs \
+             streamed {:.3}ms; peak resident {:.2}MB / model {:.2}MB \
+             ({:.0}%), {} shards, mean shard load {:.3}ms",
+            cmp.assemble_ms,
+            cmp.mono_ms,
+            cmp.stream_ms,
+            cmp.peak_resident_bytes as f64 / 1e6,
+            cmp.model_bytes as f64 / 1e6,
+            100.0 * cmp.peak_resident_bytes as f64 / cmp.model_bytes.max(1) as f64,
+            cmp.shards,
+            cmp.shard_load_ms
+        );
+        if check {
+            let record = Json::obj(vec![
+                ("bench", Json::Str("shard_stream".into())),
+                ("model", Json::Str(model.into())),
+                ("assemble_ms", Json::Num(cmp.assemble_ms)),
+                ("mono_fwd_ms", Json::Num(cmp.mono_ms)),
+                ("stream_fwd_ms", Json::Num(cmp.stream_ms)),
+                ("shard_load_ms", Json::Num(cmp.shard_load_ms)),
+                ("shards", Json::Num(cmp.shards as f64)),
+                ("peak_resident_bytes", Json::Num(cmp.peak_resident_bytes as f64)),
+                ("model_bytes", Json::Num(cmp.model_bytes as f64)),
+                (
+                    "resident_frac",
+                    Json::Num(
+                        cmp.peak_resident_bytes as f64 / cmp.model_bytes.max(1) as f64,
+                    ),
+                ),
+                ("identical", Json::Bool(cmp.identical)),
+            ]);
+            let path = fasp::repo_root().join("BENCH_shard_stream.json");
+            std::fs::write(&path, record.pretty()).unwrap();
+            println!("record → {}", path.display());
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

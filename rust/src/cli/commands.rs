@@ -142,7 +142,7 @@ pub fn prune(args: &Args) -> Result<()> {
         w.save(std::path::Path::new(out))?;
         println!("pruned weights → {out}");
     }
-    if args.has("export-compact") {
+    if args.has("export-compact") || args.has("export-sharded") {
         let default_name = compact_name(&model, method, sparsity);
         let name = args.get_or("name", &default_name);
         anyhow::ensure!(
@@ -151,12 +151,20 @@ pub fn prune(args: &Args) -> Result<()> {
             "--name '{name}' collides with an existing model; pick another"
         );
         let cm = crate::model::compact::compact_from_mask(&w, &mask, &name)?;
-        let jp = crate::model::compact::save_compact(
-            &crate::artifacts_dir().join("compact"),
-            &cm,
-        )?;
+        let dir = crate::artifacts_dir().join("compact");
+        // --export-sharded forces shards; --export-compact follows
+        // FASP_EXPORT (default monolithic)
+        let sharded = args.has("export-sharded")
+            || crate::model::compact::ExportMode::from_env()
+                == crate::model::compact::ExportMode::Sharded;
+        let jp = if sharded {
+            crate::model::compact::save_compact_sharded(&dir, &cm)?
+        } else {
+            crate::model::compact::save_compact(&dir, &cm)?
+        };
         println!(
-            "compact artifact → {} ({} → {} params)",
+            "compact artifact ({}) → {} ({} → {} params)",
+            if sharded { "sharded" } else { "monolithic" },
             jp.display(),
             w.spec.n_params_elems(),
             cm.spec.n_params_elems()
@@ -183,29 +191,36 @@ fn compact_name(model: &str, method: Method, sparsity: f64) -> String {
     )
 }
 
-/// `fasp compact`: prune + physically repack + save the compact artifact,
-/// then evaluate it end to end (perplexity parity with the masked model,
-/// dense-vs-compact latency).
-pub fn compact(args: &Args) -> Result<()> {
-    let ctx = ctx_from(args)?;
-    let model = model_arg(args)?;
+/// Shared `fasp compact` / `fasp shard` preamble: resolve method,
+/// sparsity and the collision-checked artifact name from the flags,
+/// reject `--prune-qk` (unsupported by compact export), then prune +
+/// repack. Returns `(name, method, sparsity, prepared, outcome)`.
+fn prune_compact_from_args<'c>(
+    args: &Args,
+    ctx: &'c ExpCtx,
+    model: &str,
+) -> Result<(
+    String,
+    Method,
+    f64,
+    crate::experiments::common::Prepared<'c>,
+    crate::prune::CompactOutcome,
+)> {
     let method = method_arg(args)?;
     let sparsity = args.get_f64("sparsity", 0.3)?;
-    let default_name = compact_name(&model, method, sparsity);
+    let default_name = compact_name(model, method, sparsity);
     let name = args.get_or("name", &default_name);
     anyhow::ensure!(
         !ctx.manifest.models.contains_key(&name)
             || ctx.manifest.compact.contains_key(&name),
         "--name '{name}' collides with an existing model; pick another"
     );
-    let reps = args.get_usize("reps", 10)?;
-
     anyhow::ensure!(
         !args.has("prune-qk"),
         "compact export does not support --prune-qk (Q/K rows stay dense \
          under FASP §3.1); run `fasp prune --prune-qk` for the ablation"
     );
-    let p = ctx.prepared(&model)?;
+    let p = ctx.prepared(model)?;
     let mut opts = PruneOpts::new(method, sparsity);
     opts.calib_batches = ctx.calib_batches;
     if args.has("no-restore") {
@@ -213,7 +228,19 @@ pub fn compact(args: &Args) -> Result<()> {
     }
     opts.sequential = args.has("sequential");
     let out = crate::prune::prune_compact(&p.session, &p.weights, &p.dataset, &opts, &name)?;
-    let jpath = crate::model::compact::save_compact(
+    Ok((name, method, sparsity, p, out))
+}
+
+/// `fasp compact`: prune + physically repack + save the compact artifact,
+/// then evaluate it end to end (perplexity parity with the masked model,
+/// dense-vs-compact latency).
+pub fn compact(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let model = model_arg(args)?;
+    let reps = args.get_usize("reps", 10)?;
+    let (name, method, sparsity, p, out) = prune_compact_from_args(args, &ctx, &model)?;
+    // honors FASP_EXPORT (monolithic default / sharded)
+    let jpath = crate::model::compact::save_compact_auto(
         &crate::artifacts_dir().join("compact"),
         &out.compact,
     )?;
@@ -253,6 +280,85 @@ pub fn compact(args: &Args) -> Result<()> {
         format!("{:.3}ms ({:.2}x)", cmp.compact_ms, cmp.speedup),
     ]);
     t.print();
+    Ok(())
+}
+
+/// `fasp shard`: prune + physically repack + save a **sharded** compact
+/// artifact (one `.ftns` per layer + embed/head shard, checksummed
+/// index), then verify the streaming store end to end: perplexity over
+/// the layer-streaming loader must be bit-identical to the monolithic
+/// (assembled) compact path, with peak resident weights of O(one layer
+/// + prefetch) instead of O(model).
+pub fn shard(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let model = model_arg(args)?;
+    let reps = args.get_usize("reps", 10)?;
+    let (name, method, sparsity, p, out) = prune_compact_from_args(args, &ctx, &model)?;
+    let jpath = crate::model::compact::save_compact_sharded(
+        &crate::artifacts_dir().join("compact"),
+        &out.compact,
+    )?;
+    println!(
+        "sharded compact artifact → {} ({} layers + embed shard, {} → {} \
+         params, repack {:.3}s)",
+        jpath.display(),
+        out.compact.spec.n_layers,
+        p.weights.spec.n_params_elems(),
+        out.compact.spec.n_params_elems(),
+        out.report.phase("repack")
+    );
+
+    // fresh manifest load picks up the sharded artifact
+    let m2 = manifest()?;
+    let store = m2.compact_store(&name)?;
+    let ce = Session::new(&m2, &name)?;
+    let cmp = crate::eval::speed::compare_stream_eval(&m2, &name, &store, reps)?;
+    anyhow::ensure!(
+        cmp.identical,
+        "streamed fwd_loss diverged from the monolithic compact path"
+    );
+
+    let eval_b = p.dataset.valid_batches(ctx.eval_batches);
+    let cw = m2.compact_weights(&name)?;
+    let ppl_mono = perplexity(&ce, &cw, &eval_b)?;
+    store.reset_stats();
+    let ppl_stream = crate::eval::perplexity_streamed(&ce, &store, &eval_b)?;
+    anyhow::ensure!(
+        ppl_mono.to_bits() == ppl_stream.to_bits(),
+        "streamed ppl {ppl_stream} != monolithic ppl {ppl_mono}"
+    );
+    let snap = store.stats();
+
+    let mb = |bytes: usize| format!("{:.2}MB", bytes as f64 / 1e6);
+    let mut t = Table::new(
+        &format!(
+            "Sharded export — {model} @ {:.0}% ({})",
+            sparsity * 100.0,
+            method.label()
+        ),
+        &["path", "ppl", "fwd latency", "resident weights"],
+    );
+    t.row(vec![
+        "monolithic".into(),
+        format!("{ppl_mono:.3}"),
+        format!("{:.3}ms", cmp.mono_ms),
+        format!("{} (assemble {:.2}ms)", mb(cmp.model_bytes), cmp.assemble_ms),
+    ]);
+    t.row(vec![
+        "streamed".into(),
+        format!("{ppl_stream:.3}"),
+        format!("{:.3}ms", cmp.stream_ms),
+        format!(
+            "peak {} ({:.0}% of model)",
+            mb(snap.peak_resident_bytes),
+            100.0 * snap.peak_resident_bytes as f64 / cmp.model_bytes.max(1) as f64
+        ),
+    ]);
+    t.print();
+    println!(
+        "{} shards, mean shard load {:.3}ms; outputs bit-identical: {}",
+        cmp.shards, cmp.shard_load_ms, cmp.identical
+    );
     Ok(())
 }
 

@@ -21,6 +21,11 @@ COMMANDS:
   compact    --model M --sparsity S  prune, physically repack and save a
                                compact model artifact; evaluates ppl
                                parity and dense-vs-compact latency
+  shard      --model M --sparsity S  like compact, but saves a SHARDED
+                               export (one .ftns per layer + embed shard,
+                               checksummed index) and verifies streaming
+                               load: bit-identical ppl at O(one layer)
+                               peak resident weights
   zeroshot   --model M [--method X --sparsity S] zero-shot suites
   tables     --id table1|...|fig4|all            regenerate paper tables
   latency                      sliced decoder-layer latency sweep
@@ -35,6 +40,8 @@ COMMON OPTIONS:
   --eval-batches N       perplexity batches (default 12)
   --no-restore           disable FASP restoration (ablation)
   --export-compact       (prune) also save a compact artifact of the mask
+                         (storage per FASP_EXPORT, default monolithic)
+  --export-sharded       (prune) like --export-compact, but always sharded
   --name NAME            compact artifact name (default <model>_<method>_sNN)
   --prune-qk             also prune W_Q/W_K rows (Table 6 ablation)
   --sequential           re-capture activations after each pruned layer
@@ -46,6 +53,10 @@ ENVIRONMENT:
   FASP_THREADS=N         host-backend worker count (1 = single-threaded
                          reference backend; default: cores, capped at 8;
                          outputs are bit-identical at every width)
+  FASP_EXPORT=MODE       default compact export storage: 'monolithic'
+                         (one packed .ftns, default) or 'sharded' (one
+                         .ftns per layer, stream-loadable); exported
+                         weights are bit-identical either way
 
 Artifacts must exist (`make artifacts`). Checkpoints are cached under
 checkpoints/ and reused across runs.
@@ -59,6 +70,7 @@ pub fn run() -> Result<()> {
         Some("eval") => commands::eval(&args),
         Some("prune") => commands::prune(&args),
         Some("compact") => commands::compact(&args),
+        Some("shard") => commands::shard(&args),
         Some("zeroshot") => commands::zeroshot(&args),
         Some("tables") => commands::tables(&args),
         Some("latency") => commands::latency(&args),

@@ -24,6 +24,27 @@ pub fn perplexity(
     Ok((total / count as f64).exp())
 }
 
+/// Perplexity of a *sharded* compact model, streaming its weights layer
+/// by layer (peak resident weights: embed/head shard + one layer shard
+/// + the backend's prefetch buffer). The per-batch arithmetic is shared
+/// with [`perplexity`], so the result is bit-identical to evaluating
+/// the assembled monolithic weights.
+pub fn perplexity_streamed(
+    session: &Session,
+    store: &crate::runtime::ShardedWeights,
+    batches: &[Batch],
+) -> Result<f64> {
+    anyhow::ensure!(!batches.is_empty(), "need at least one eval batch");
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for b in batches {
+        let out = session.fwd_loss_streamed(store, &b.tokens, &b.targets)?;
+        total += out.mean_nll as f64 * b.tokens.numel() as f64;
+        count += b.tokens.numel();
+    }
+    Ok((total / count as f64).exp())
+}
+
 /// Host-side fallback perplexity (no artifacts needed) — used by tests
 /// as an independent cross-check of the session path.
 pub fn perplexity_host(weights: &Weights, batches: &[Batch]) -> Result<f64> {

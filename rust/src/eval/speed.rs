@@ -13,6 +13,10 @@
 //!   [`ThreadedHostBackend`]: the threaded backend must be faster on
 //!   multi-core while producing bit-identical outputs (the receipt the
 //!   backend redesign must produce).
+//! * [`compare_stream_eval`] — monolithic (assembled) vs shard-streaming
+//!   `fwd_loss` of a sharded compact export: bit-identical NLL with peak
+//!   resident weights of O(one layer + prefetch) instead of O(model)
+//!   (the receipt the sharded store must produce).
 
 use crate::data::{Batch, Corpus, Dataset};
 use crate::model::Weights;
@@ -110,6 +114,85 @@ pub fn compare_dense_compact(
     let dense_ms = time_fwd(&ds_sess, dense_w, &b, reps)?;
     let compact_ms = time_fwd(&cs_sess, compact_w, &b, reps)?;
     Ok(CompactCompare { dense_ms, compact_ms, speedup: dense_ms / compact_ms })
+}
+
+/// Monolithic-load vs shard-streaming comparison of one *sharded*
+/// compact model: the receipt the sharded store must produce — identical
+/// numerics with peak resident weights of O(one layer + prefetch)
+/// instead of O(model).
+pub struct StreamCompare {
+    /// Wall-time to assemble the full monolithic weights from shards.
+    pub assemble_ms: f64,
+    /// Best-of-reps `fwd_loss` over the assembled (resident) weights.
+    pub mono_ms: f64,
+    /// Best-of-reps `fwd_loss_streamed` over the shard store.
+    pub stream_ms: f64,
+    /// Peak resident weight bytes observed while streaming.
+    pub peak_resident_bytes: usize,
+    /// Full model weight bytes (the monolithic path's residency).
+    pub model_bytes: usize,
+    /// Mean per-shard load time during the streamed runs, ms.
+    pub shard_load_ms: f64,
+    /// Number of shards in the store (1 embed + n_layers).
+    pub shards: usize,
+    /// Bitwise equality of mean/seq/token NLL between the two paths.
+    pub identical: bool,
+}
+
+/// Run `fwd_loss` monolithically (assembled weights) and streamed (layer
+/// shards) on the same batch; verify bit-identity, time both, and report
+/// the residency ratio. `model` must be the store's registered compact
+/// model name.
+pub fn compare_stream_eval(
+    manifest: &Manifest,
+    model: &str,
+    store: &crate::runtime::ShardedWeights,
+    reps: usize,
+) -> Result<StreamCompare> {
+    let session = Session::new(manifest, model)?;
+    let spec = session.spec.clone();
+    let ds = Dataset::new(Corpus::new(spec.vocab, 0x5a4d), spec.batch, spec.seq, 2);
+    let b = ds.train_batch(0);
+
+    let t0 = std::time::Instant::now();
+    let w = store.assemble()?;
+    let assemble_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let o1 = session.fwd_loss(&session.pack(&w.packed)?, &b.tokens, &b.targets)?;
+    store.reset_stats();
+    let o2 = session.fwd_loss_streamed(store, &b.tokens, &b.targets)?;
+    let identical = o1.mean_nll.to_bits() == o2.mean_nll.to_bits()
+        && o1.seq_nll.len() == o2.seq_nll.len()
+        && o1
+            .seq_nll
+            .iter()
+            .zip(&o2.seq_nll)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+        && o1
+            .tok_nll
+            .data
+            .iter()
+            .zip(&o2.tok_nll.data)
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+
+    let mono_ms = time_fwd(&session, &w, &b, reps)?;
+    let mut stream_ms = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t = std::time::Instant::now();
+        session.fwd_loss_streamed(store, &b.tokens, &b.targets)?;
+        stream_ms = stream_ms.min(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let snap = store.stats();
+    Ok(StreamCompare {
+        assemble_ms,
+        mono_ms,
+        stream_ms,
+        peak_resident_bytes: snap.peak_resident_bytes,
+        model_bytes: store.total_param_bytes(),
+        shard_load_ms: snap.load_s * 1e3 / snap.loads.max(1) as f64,
+        shards: store.n_shards(),
+        identical,
+    })
 }
 
 /// Single-threaded vs thread-pooled host execution of the same forward.

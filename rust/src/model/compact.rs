@@ -11,24 +11,33 @@
 //! dense forward up to matmul re-blocking (≤ 1e-5 on tiny models), and a
 //! sparsity-0 export is bit-identical.
 //!
-//! On-disk artifact (`<artifacts>/compact/`):
+//! On-disk artifact (`<artifacts>/compact/`), two storage formats:
 //! * `<name>.compact.json` — self-describing spec: base model, family,
-//!   per-layer dims (`d_ff`, `d_ov`, `head_splits`), sparsity, weights
-//!   file name. Parameter shapes are reconstructed from the dims via
-//!   [`build_params`], so spec/weights mismatches fail loudly.
-//! * `<name>.ftns` — the packed weights (same container as checkpoints).
+//!   per-layer dims (`d_ff`, `d_ov`, `head_splits`), sparsity, and the
+//!   storage descriptor — either a `weights` file name (monolithic) or a
+//!   `shards` index (sharded). Parameter shapes are reconstructed from
+//!   the dims via [`build_params`], so spec/weights mismatches fail
+//!   loudly.
+//! * monolithic ([`save_compact`]): `<name>.ftns` — one packed weights
+//!   file (same container as checkpoints).
+//! * sharded ([`save_compact_sharded`]): `<name>.embed.ftns` plus one
+//!   `<name>.layerNNN.ftns` per layer, each checksummed in the spec's
+//!   shard index (`runtime::store`), so multi-GB compact models can
+//!   stream-load with peak resident weights of O(one layer).
 //!
-//! Both files are written via temp-file + rename so a concurrent
+//! All files are written via temp-file + rename so a concurrent
 //! `Manifest::load` never observes a half-written artifact.
 //!
-//! The per-layer tensor slicing fans out on the shared worker pool
-//! (`util::pool`), so the `repack` phase of `PruneReport` shrinks on
-//! multi-core hosts; gathers are pure copies, so the exported weights
-//! are identical for any pool width.
+//! The per-layer tensor slicing (and the per-shard serialization) fans
+//! out on the shared worker pool (`util::pool`), so the `repack` phase
+//! of `PruneReport` shrinks on multi-core hosts; gathers and
+//! serialization are pure, so the exported bytes are identical for any
+//! pool width.
 
 use super::mask::{kept_indices, PruneMask};
 use super::weights::Weights;
-use crate::runtime::manifest::{CompactInfo, LayerDims, ModelSpec};
+use crate::runtime::manifest::{CompactInfo, CompactStorage, LayerDims, ModelSpec};
+use crate::runtime::store::{write_shards, ShardIndex, ShardLayout};
 use crate::tensor::ops::{gather_cols, gather_elems, gather_rows};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -228,7 +237,43 @@ pub fn compact_from_mask(
 
 // ---------------------------------------------------------------- disk io
 
-fn spec_to_json(cm: &CompactModel, weights_file: &str) -> Json {
+/// How a compact export lays its weights on disk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExportMode {
+    /// One packed `.ftns` file (the classic format).
+    Monolithic,
+    /// One `.ftns` shard per layer plus an embed/head shard, with a
+    /// checksummed shard index in the spec (stream-loadable).
+    Sharded,
+}
+
+impl ExportMode {
+    pub fn parse(s: &str) -> Option<ExportMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "monolithic" | "mono" | "packed" => Some(ExportMode::Monolithic),
+            "sharded" | "shard" | "shards" => Some(ExportMode::Sharded),
+            _ => None,
+        }
+    }
+
+    /// The process-default export mode: `FASP_EXPORT` if set and valid
+    /// (`monolithic` | `sharded`), else monolithic. `verify.sh` runs the
+    /// tier-1 suite under both values.
+    pub fn from_env() -> ExportMode {
+        match std::env::var("FASP_EXPORT") {
+            Ok(v) => ExportMode::parse(&v).unwrap_or_else(|| {
+                crate::warn!(
+                    "FASP_EXPORT='{v}' not recognized (want 'monolithic' or \
+                     'sharded'); defaulting to monolithic"
+                );
+                ExportMode::Monolithic
+            }),
+            Err(_) => ExportMode::Monolithic,
+        }
+    }
+}
+
+fn spec_to_json(cm: &CompactModel, storage: (&str, Json)) -> Json {
     let s = &cm.spec;
     let dims = Json::Arr(
         s.layer_dims
@@ -262,8 +307,19 @@ fn spec_to_json(cm: &CompactModel, weights_file: &str) -> Json {
         ("seq", Json::Num(s.seq as f64)),
         ("batch", Json::Num(s.batch as f64)),
         ("layer_dims", dims),
-        ("weights", Json::Str(weights_file.to_string())),
+        storage,
     ])
+}
+
+fn write_spec_json(dir: &Path, cm: &CompactModel, storage: (&str, Json)) -> Result<PathBuf> {
+    let jname = format!("{}.compact.json", cm.spec.name);
+    let jtmp = dir.join(format!("{jname}.tmp"));
+    std::fs::write(&jtmp, spec_to_json(cm, storage).pretty())
+        .with_context(|| format!("write {}", jtmp.display()))?;
+    let jpath = dir.join(&jname);
+    std::fs::rename(&jtmp, &jpath)
+        .with_context(|| format!("publish {}", jpath.display()))?;
+    Ok(jpath)
 }
 
 /// Write `<name>.ftns` + `<name>.compact.json` under `dir` (created on
@@ -276,15 +332,24 @@ pub fn save_compact(dir: &Path, cm: &CompactModel) -> Result<PathBuf> {
     cm.weights.save(&wtmp)?;
     std::fs::rename(&wtmp, dir.join(&wname))
         .with_context(|| format!("publish {}", wname))?;
+    write_spec_json(dir, cm, ("weights", Json::Str(wname)))
+}
 
-    let jname = format!("{}.compact.json", cm.spec.name);
-    let jtmp = dir.join(format!("{jname}.tmp"));
-    std::fs::write(&jtmp, spec_to_json(cm, &wname).pretty())
-        .with_context(|| format!("write {}", jtmp.display()))?;
-    let jpath = dir.join(&jname);
-    std::fs::rename(&jtmp, &jpath)
-        .with_context(|| format!("publish {}", jpath.display()))?;
-    Ok(jpath)
+/// Write a sharded export under `dir`: one `.ftns` shard per layer plus
+/// the embed/head shard (`runtime::store::write_shards`, pool-parallel,
+/// per-shard checksums) and a `<name>.compact.json` carrying the shard
+/// index. Returns the json path.
+pub fn save_compact_sharded(dir: &Path, cm: &CompactModel) -> Result<PathBuf> {
+    let index = write_shards(dir, cm)?;
+    write_spec_json(dir, cm, ("shards", index.to_json()))
+}
+
+/// Save in the process-default [`ExportMode`] (`FASP_EXPORT`).
+pub fn save_compact_auto(dir: &Path, cm: &CompactModel) -> Result<PathBuf> {
+    match ExportMode::from_env() {
+        ExportMode::Monolithic => save_compact(dir, cm),
+        ExportMode::Sharded => save_compact_sharded(dir, cm),
+    }
 }
 
 /// Parse and validate a `*.compact.json` descriptor (no weights read).
@@ -387,30 +452,37 @@ pub fn load_compact_spec(path: &Path) -> Result<(ModelSpec, CompactInfo)> {
         layer_dims,
     };
 
-    let wfile = j.get("weights").as_str().context("compact field 'weights'")?;
-    let weights_path = path
-        .parent()
-        .unwrap_or_else(|| Path::new("."))
-        .join(wfile);
-    let info = CompactInfo { base_model, sparsity, weights_path };
+    let dir = path.parent().unwrap_or_else(|| Path::new(".")).to_path_buf();
+    let storage = match (j.get("weights").as_str(), j.get("shards").as_arr()) {
+        (Some(wfile), None) => CompactStorage::Monolithic {
+            weights_path: dir.join(wfile),
+        },
+        (None, Some(_)) => {
+            let index = ShardIndex::from_json(j.get("shards"))
+                .with_context(|| format!("compact '{}': shard index", spec.name))?;
+            let layout = ShardLayout::of(&spec)?;
+            index.validate(&spec.name, &layout)?;
+            CompactStorage::Sharded { dir, index }
+        }
+        (Some(_), Some(_)) => bail!(
+            "compact '{}': both 'weights' and 'shards' declared — pick one",
+            spec.name
+        ),
+        (None, None) => bail!(
+            "compact '{}': neither 'weights' nor 'shards' declared",
+            spec.name
+        ),
+    };
+    let info = CompactInfo { base_model, sparsity, storage };
     Ok((spec, info))
 }
 
-/// Load a full compact model (spec + weights) from its descriptor.
+/// Load a full compact model (spec + weights) from its descriptor —
+/// either storage format; sharded artifacts are assembled shard by
+/// shard.
 pub fn load_compact(path: &Path) -> Result<CompactModel> {
     let (spec, info) = load_compact_spec(path)?;
-    anyhow::ensure!(
-        info.weights_path.exists(),
-        "compact '{}': weights file {} missing",
-        spec.name,
-        info.weights_path.display()
-    );
-    let weights = Weights::load(&spec, &info.weights_path).with_context(|| {
-        format!(
-            "load compact weights {} (truncated or corrupt?)",
-            info.weights_path.display()
-        )
-    })?;
+    let weights = info.storage.load_weights(&spec)?;
     Ok(CompactModel {
         spec,
         weights,
@@ -503,5 +575,31 @@ mod tests {
         assert_eq!(re.weights.packed, cm.weights.packed);
         assert_eq!(re.base_model, "toy");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_save_load_roundtrip() {
+        let spec = toy_spec();
+        let w = Weights::init(&spec, 12);
+        let mut mask = PruneMask::full(&spec);
+        mask.layers[0].ffn[2] = false;
+        mask.layers[1].ov[3] = false;
+        let cm = compact_from_mask(&w, &mask, "toy_sh").unwrap();
+        let dir = std::env::temp_dir().join("fasp_compact_sharded_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let jpath = save_compact_sharded(&dir, &cm).unwrap();
+        let re = load_compact(&jpath).unwrap();
+        assert_eq!(re.spec, cm.spec);
+        assert_eq!(re.weights.packed, cm.weights.packed, "sharded round trip must be bit-identical");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn export_mode_parses() {
+        assert_eq!(ExportMode::parse("sharded"), Some(ExportMode::Sharded));
+        assert_eq!(ExportMode::parse("Shard"), Some(ExportMode::Sharded));
+        assert_eq!(ExportMode::parse("MONO"), Some(ExportMode::Monolithic));
+        assert_eq!(ExportMode::parse("monolithic"), Some(ExportMode::Monolithic));
+        assert_eq!(ExportMode::parse("bogus"), None);
     }
 }

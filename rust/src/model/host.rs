@@ -110,20 +110,44 @@ pub fn forward_nll(
     targets: &IntTensor,
     collect: bool,
 ) -> Result<(Tensor, Vec<HostCaptures>)> {
-    let spec = &w.spec;
-    let (b, t) = (tokens.shape[0], tokens.shape[1]);
+    forward_nll_src(&mut super::weights::DenseParams(w), tokens, targets, collect)
+}
+
+/// [`forward_nll`] over an arbitrary [`ParamSource`]. Layers are visited
+/// strictly in order and each is released (`layer_done`) before the next
+/// is requested, so a streaming source holds at most one layer's shard
+/// (plus its prefetch buffer) at a time. The embedding/head parameters
+/// (`tok_emb`, the final norm) stay resident for the whole pass — the
+/// tied head reuses `tok_emb` for the logits.
+pub fn forward_nll_src<S: super::weights::ParamSource>(
+    src: &mut S,
+    tokens: &IntTensor,
+    targets: &IntTensor,
+    collect: bool,
+) -> Result<(Tensor, Vec<HostCaptures>)> {
+    // Pull the scalar geometry out up front: `src` hands out tensors
+    // through &mut below, and cloning the whole spec (params table
+    // included) per forward would tax the hot path.
+    let spec = src.spec();
     let d = spec.d_model;
+    let n_layers = spec.n_layers;
+    let n_heads = spec.n_heads;
+    let head_dim = spec.head_dim();
+    let vocab = spec.vocab;
+    let is_opt = spec.family == "opt";
+    let head_splits: Vec<Vec<usize>> =
+        (0..n_layers).map(|l| spec.head_splits_l(l)).collect();
+    let (b, t) = (tokens.shape[0], tokens.shape[1]);
     let rows = b * t;
 
-    let tok_emb = w.get("tok_emb")?;
+    let tok_emb = src.get("tok_emb")?;
     // x [rows, d]
     let mut x = Tensor::zeros(&[rows, d]);
     for (r, &tokid) in tokens.data.iter().enumerate() {
         x.row_mut(r).copy_from_slice(tok_emb.row(tokid as usize));
     }
-    let is_opt = spec.family == "opt";
     if is_opt {
-        let pos = w.get("pos_emb")?;
+        let pos = src.get("pos_emb")?;
         for bi in 0..b {
             for ti in 0..t {
                 let r = bi * t + ti;
@@ -133,42 +157,41 @@ pub fn forward_nll(
             }
         }
     }
-    let (cos, sin) = rope_tables(t, spec.head_dim());
+    let (cos, sin) = rope_tables(t, head_dim);
 
     let mut captures = Vec::new();
-    for l in 0..spec.n_layers {
+    for l in 0..n_layers {
         // ---- attention
         let mut x_ln = x.clone();
         if is_opt {
             layer_norm(
                 &mut x_ln.data,
                 d,
-                &w.get_l(l, "ln1_g")?.data,
-                &w.get_l(l, "ln1_b")?.data,
+                &src.get_l(l, "ln1_g")?.data,
+                &src.get_l(l, "ln1_b")?.data,
             );
         } else {
-            rms_norm(&mut x_ln.data, d, &w.get_l(l, "ln1_g")?.data);
+            rms_norm(&mut x_ln.data, d, &src.get_l(l, "ln1_g")?.data);
         }
         let (q, k, v) = if is_opt {
             (
-                linear(&x_ln, &w.get_l(l, "wq")?, Some(&w.get_l(l, "bq")?)),
-                linear(&x_ln, &w.get_l(l, "wk")?, Some(&w.get_l(l, "bk")?)),
-                linear(&x_ln, &w.get_l(l, "wv")?, Some(&w.get_l(l, "bv")?)),
+                linear(&x_ln, &src.get_l(l, "wq")?, Some(&src.get_l(l, "bq")?)),
+                linear(&x_ln, &src.get_l(l, "wk")?, Some(&src.get_l(l, "bk")?)),
+                linear(&x_ln, &src.get_l(l, "wv")?, Some(&src.get_l(l, "bv")?)),
             )
         } else {
             (
-                linear(&x_ln, &w.get_l(l, "wq")?, None),
-                linear(&x_ln, &w.get_l(l, "wk")?, None),
-                linear(&x_ln, &w.get_l(l, "wv")?, None),
+                linear(&x_ln, &src.get_l(l, "wq")?, None),
+                linear(&x_ln, &src.get_l(l, "wk")?, None),
+                linear(&x_ln, &src.get_l(l, "wv")?, None),
             )
         };
-        let splits = spec.head_splits_l(l);
         let ctx = attention(
             b,
             t,
-            spec.n_heads,
-            spec.head_dim(),
-            &splits,
+            n_heads,
+            head_dim,
+            &head_splits[l],
             &q,
             &k,
             &v,
@@ -178,7 +201,7 @@ pub fn forward_nll(
         );
         // both families carry an out-proj bias (llama's is the zero-init
         // FLAP-compensation slot, see configs.py)
-        let attn_out = linear(&ctx, &w.get_l(l, "wo")?, Some(&w.get_l(l, "bo")?));
+        let attn_out = linear(&ctx, &src.get_l(l, "wo")?, Some(&src.get_l(l, "bo")?));
         for (xv, av) in x.data.iter_mut().zip(&attn_out.data) {
             *xv += av;
         }
@@ -189,21 +212,21 @@ pub fn forward_nll(
             layer_norm(
                 &mut x_ln2.data,
                 d,
-                &w.get_l(l, "ln2_g")?.data,
-                &w.get_l(l, "ln2_b")?.data,
+                &src.get_l(l, "ln2_g")?.data,
+                &src.get_l(l, "ln2_b")?.data,
             );
         } else {
-            rms_norm(&mut x_ln2.data, d, &w.get_l(l, "ln2_g")?.data);
+            rms_norm(&mut x_ln2.data, d, &src.get_l(l, "ln2_g")?.data);
         }
         let h = if is_opt {
-            let mut h = linear(&x_ln2, &w.get_l(l, "fc1")?, Some(&w.get_l(l, "bfc1")?));
+            let mut h = linear(&x_ln2, &src.get_l(l, "fc1")?, Some(&src.get_l(l, "bfc1")?));
             for v in h.data.iter_mut() {
                 *v = v.max(0.0); // relu
             }
             h
         } else {
-            let g = linear(&x_ln2, &w.get_l(l, "w_gate")?, None);
-            let u = linear(&x_ln2, &w.get_l(l, "w_up")?, None);
+            let g = linear(&x_ln2, &src.get_l(l, "w_gate")?, None);
+            let u = linear(&x_ln2, &src.get_l(l, "w_up")?, None);
             let mut h = u;
             for (hv, gv) in h.data.iter_mut().zip(&g.data) {
                 let silu = gv / (1.0 + (-gv).exp());
@@ -212,9 +235,9 @@ pub fn forward_nll(
             h
         };
         let ffn_out = if is_opt {
-            linear(&h, &w.get_l(l, "fc2")?, Some(&w.get_l(l, "bfc2")?))
+            linear(&h, &src.get_l(l, "fc2")?, Some(&src.get_l(l, "bfc2")?))
         } else {
-            linear(&h, &w.get_l(l, "w_down")?, Some(&w.get_l(l, "b_down")?))
+            linear(&h, &src.get_l(l, "w_down")?, Some(&src.get_l(l, "b_down")?))
         };
         for (xv, fv) in x.data.iter_mut().zip(&ffn_out.data) {
             *xv += fv;
@@ -222,18 +245,18 @@ pub fn forward_nll(
         if collect {
             captures.push(HostCaptures { ln1: x_ln, ln2: x_ln2, attn_ctx: ctx, ffn_h: h });
         }
+        src.layer_done(l)?;
     }
 
     if is_opt {
-        layer_norm(&mut x.data, d, &w.get("lnf_g")?.data, &w.get("lnf_b")?.data);
+        layer_norm(&mut x.data, d, &src.get("lnf_g")?.data, &src.get("lnf_b")?.data);
     } else {
-        rms_norm(&mut x.data, d, &w.get("lnf_g")?.data);
+        rms_norm(&mut x.data, d, &src.get("lnf_g")?.data);
     }
 
     // logits = x · tok_embᵀ; per-token NLL without materializing softmax.
     // Rows are independent: fan out over row chunks of the NLL buffer.
     let logits = matmul_bt(&x, &tok_emb); // [rows, V]
-    let vocab = spec.vocab;
     let mut nll = Tensor::zeros(&[b, t]);
     let nll_rows = |r0: usize, chunk: &mut [f32]| {
         for (i, nv) in chunk.iter_mut().enumerate() {
@@ -376,6 +399,20 @@ pub(crate) fn attention(
 /// Host Gram accumulation X^T X (cross-check against the capture artifact).
 pub fn host_gram(x: &Tensor) -> Tensor {
     matmul(&x.t(), x)
+}
+
+/// Column sums of a [rows, c] activation matrix — the capture mean leaves.
+/// Serial accumulation order (row-major), shared by the capture entry and
+/// the streaming capture path so both produce bit-identical sums.
+pub fn col_sums(x: &Tensor) -> Tensor {
+    let (r, c) = x.dims2();
+    let mut sums = vec![0.0f32; c];
+    for i in 0..r {
+        for (s, v) in sums.iter_mut().zip(x.row(i)) {
+            *s += v;
+        }
+    }
+    Tensor::new(vec![c], sums)
 }
 
 /// Mean NLL over a batch.

@@ -12,4 +12,4 @@ pub mod zoo;
 
 pub use compact::CompactModel;
 pub use mask::PruneMask;
-pub use weights::Weights;
+pub use weights::{DenseParams, ParamSource, Weights};

@@ -9,6 +9,48 @@ use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
+/// Where a forward pass gets its parameters from. The host forward
+/// ([`super::host::forward_nll_src`]) pulls globals (`tok_emb`,
+/// `lnf_*`, …) via [`ParamSource::get`] and per-layer tensors via
+/// [`ParamSource::get_l`], calling [`ParamSource::layer_done`] once it
+/// has consumed a layer — layers are always visited in order 0..L.
+///
+/// Two sources exist: [`DenseParams`] (a fully resident [`Weights`],
+/// the classic path) and `runtime::store::StreamingParams` (per-layer
+/// shards loaded lazily with background prefetch, peak-resident weights
+/// of O(one layer)). Both hand back the same bytes, so outputs are
+/// bit-identical by construction.
+pub trait ParamSource {
+    fn spec(&self) -> &ModelSpec;
+
+    /// A non-layer (global) parameter by name.
+    fn get(&mut self, name: &str) -> Result<Tensor>;
+
+    /// A layer-scoped parameter, e.g. `get_l(2, "wq")`.
+    fn get_l(&mut self, l: usize, short: &str) -> Result<Tensor>;
+
+    /// The forward is done reading layer `l` (streaming sources release
+    /// the shard here; dense sources ignore it).
+    fn layer_done(&mut self, _l: usize) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// The trivial [`ParamSource`]: every parameter is already resident.
+pub struct DenseParams<'a>(pub &'a Weights);
+
+impl ParamSource for DenseParams<'_> {
+    fn spec(&self) -> &ModelSpec {
+        &self.0.spec
+    }
+    fn get(&mut self, name: &str) -> Result<Tensor> {
+        self.0.get(name)
+    }
+    fn get_l(&mut self, l: usize, short: &str) -> Result<Tensor> {
+        self.0.get_l(l, short)
+    }
+}
+
 #[derive(Clone)]
 pub struct Weights {
     pub spec: ModelSpec,

@@ -42,6 +42,17 @@ pub trait Backend: Send + Sync {
     fn enter(&self) -> PoolScope {
         pool::enter(self.pool().clone())
     }
+
+    /// How many layer shards a streaming parameter source
+    /// (`runtime::store::StreamingParams`) loads ahead of the layer
+    /// currently executing. 0 = fully synchronous I/O (the serial
+    /// reference); ≥ 1 overlaps shard I/O with compute on background
+    /// threads. Prefetch never changes numerics — only wall-time — and a
+    /// future shard-per-rank backend overrides this to pin shards to
+    /// ranks.
+    fn prefetch_depth(&self) -> usize {
+        1
+    }
 }
 
 /// The single-threaded reference interpreter.
@@ -67,6 +78,11 @@ impl Backend for HostBackend {
     }
     fn pool(&self) -> &Arc<Pool> {
         &self.pool
+    }
+    /// The reference backend does everything on the calling thread,
+    /// including shard I/O.
+    fn prefetch_depth(&self) -> usize {
+        0
     }
 }
 
@@ -121,9 +137,11 @@ mod tests {
         let h = HostBackend::new();
         assert_eq!(h.threads(), 1);
         assert_eq!(h.name(), "host");
+        assert_eq!(h.prefetch_depth(), 0, "serial reference must not prefetch");
         let t = ThreadedHostBackend::new(4);
         assert_eq!(t.threads(), 4);
         assert_eq!(t.name(), "threaded-host");
+        assert_eq!(t.prefetch_depth(), 1);
     }
 
     #[test]

@@ -191,36 +191,42 @@ fn weights_from(spec: &ModelSpec, params: &Literal) -> Result<Weights> {
 
 fn tokens_checked(lit: &Literal, vocab: usize, what: &str) -> Result<IntTensor> {
     let t = lit.to_int_tensor()?;
+    validate_tokens(&t, vocab, what)?;
+    Ok(t)
+}
+
+/// Every token id must be a valid vocab index (shared with the streaming
+/// session entries, which bypass the literal layer).
+pub(crate) fn validate_tokens(t: &IntTensor, vocab: usize, what: &str) -> Result<()> {
     for &id in &t.data {
         anyhow::ensure!(
             id >= 0 && (id as usize) < vocab,
             "{what}: token id {id} outside vocab {vocab}"
         );
     }
-    Ok(t)
+    Ok(())
+}
+
+/// The `fwd_loss` output summaries (mean over all tokens in f64, per-
+/// sequence sums) from the per-token NLL — one implementation, so the
+/// monolithic entry and the streaming path are bit-identical.
+pub(crate) fn nll_summaries(nll: &Tensor) -> (f32, Vec<f32>) {
+    let (b, _t) = nll.dims2();
+    let mean = nll.data.iter().map(|&x| x as f64).sum::<f64>() / nll.numel() as f64;
+    let seq: Vec<f32> = (0..b).map(|r| nll.row(r).iter().sum::<f32>()).collect();
+    (mean as f32, seq)
 }
 
 fn fwd_outputs(nll: &Tensor) -> Vec<Literal> {
-    let (b, t) = nll.dims2();
-    let mean = nll.data.iter().map(|&x| x as f64).sum::<f64>() / nll.numel() as f64;
-    let seq: Vec<f32> = (0..b)
-        .map(|r| nll.row(r).iter().sum::<f32>())
-        .collect();
-    let _ = t;
+    let (b, _t) = nll.dims2();
+    let (mean, seq) = nll_summaries(nll);
     vec![
-        Literal::scalar_f32(mean as f32),
+        Literal::scalar_f32(mean),
         Literal::from_f32(&[b], seq),
         Literal::from_tensor(nll),
     ]
 }
 
 fn col_sum_literal(x: &Tensor) -> Literal {
-    let (r, c) = x.dims2();
-    let mut sums = vec![0.0f32; c];
-    for i in 0..r {
-        for (s, v) in sums.iter_mut().zip(x.row(i)) {
-            *s += v;
-        }
-    }
-    Literal::from_f32(&[c], sums)
+    Literal::from_tensor(&crate::model::host::col_sums(x))
 }

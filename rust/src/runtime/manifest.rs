@@ -7,12 +7,15 @@
 //!   ([`super::host_exec`]); the manifest carries the full input/output
 //!   shape contract and a small on-disk stamp file per entry.
 //! * `compact` — a physically sliced model exported by
-//!   `prune::prune_compact` / `fasp compact`: a self-describing
-//!   `*.compact.json` spec plus a packed-weights `.ftns` file under
-//!   `<artifacts>/compact/`. `Manifest::load` scans that directory and
-//!   registers each compact model as a first-class [`ModelSpec`] with
-//!   synthesized host entries, so a [`super::Session`] runs it with no
-//!   masks.
+//!   `prune::prune_compact` / `fasp compact` / `fasp shard`: a
+//!   self-describing `*.compact.json` spec plus either one packed
+//!   `.ftns` weights file (monolithic) or per-layer shards with a
+//!   checksummed shard index (sharded, stream-loadable via
+//!   [`super::store`]), all under `<artifacts>/compact/`.
+//!   `Manifest::load` scans that directory and registers each compact
+//!   model as a first-class [`ModelSpec`] with synthesized host entries
+//!   (plus per-shape Wanda-metric kernel entries for its sliced
+//!   shapes), so a [`super::Session`] runs it with no masks.
 
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -154,13 +157,71 @@ pub struct LatencySpec {
     pub dk_s: usize,
 }
 
+/// Where a compact model's weights live on disk.
+#[derive(Debug, Clone)]
+pub enum CompactStorage {
+    /// One packed `.ftns` file (the classic format).
+    Monolithic {
+        /// Absolute path of the packed-weights `.ftns` file.
+        weights_path: PathBuf,
+    },
+    /// One `.ftns` shard per layer plus an embed/head shard, with a
+    /// checksummed shard index (stream-loadable via
+    /// [`crate::runtime::store::ShardedWeights`]).
+    Sharded {
+        /// Directory the shard files live in.
+        dir: PathBuf,
+        index: crate::runtime::store::ShardIndex,
+    },
+}
+
+impl CompactStorage {
+    pub fn label(&self) -> &'static str {
+        match self {
+            CompactStorage::Monolithic { .. } => "monolithic",
+            CompactStorage::Sharded { .. } => "sharded",
+        }
+    }
+
+    /// Load the full packed weights of `spec` from this storage — the one
+    /// implementation behind `Manifest::compact_weights` and
+    /// `model::compact::load_compact`. Sharded artifacts are assembled
+    /// shard by shard (checksum-verified).
+    pub fn load_weights(&self, spec: &ModelSpec) -> Result<crate::model::Weights> {
+        match self {
+            CompactStorage::Monolithic { weights_path } => {
+                anyhow::ensure!(
+                    weights_path.exists(),
+                    "compact '{}': weights file {} missing",
+                    spec.name,
+                    weights_path.display()
+                );
+                crate::model::Weights::load(spec, weights_path).with_context(|| {
+                    format!(
+                        "load compact weights {} (truncated or corrupt?)",
+                        weights_path.display()
+                    )
+                })
+            }
+            CompactStorage::Sharded { dir, index } => {
+                crate::runtime::store::ShardedWeights::open(
+                    spec.clone(),
+                    dir.clone(),
+                    index.clone(),
+                )?
+                .assemble()
+                .with_context(|| format!("assemble sharded compact '{}'", spec.name))
+            }
+        }
+    }
+}
+
 /// A registered compact model artifact (spec lives in `models`).
 #[derive(Debug, Clone)]
 pub struct CompactInfo {
     pub base_model: String,
     pub sparsity: f64,
-    /// Absolute path of the packed-weights `.ftns` file.
-    pub weights_path: PathBuf,
+    pub storage: CompactStorage,
 }
 
 #[derive(Debug)]
@@ -328,65 +389,117 @@ impl Manifest {
                 })
                 .collect();
             paths.sort();
-            let mut seen = std::collections::BTreeSet::new();
             for p in paths {
-                let name = manifest.register_compact(&p)?;
-                anyhow::ensure!(
-                    seen.insert(name.clone()),
-                    "compact model '{name}' is declared by multiple descriptors \
-                     under {} — remove the stale one",
-                    cdir.display()
-                );
+                // register_compact rejects duplicate names itself, so two
+                // descriptors declaring the same model fail loudly here
+                manifest.register_compact(&p)?;
             }
         }
         Ok(manifest)
     }
 
     /// Register one compact model artifact from its `*.compact.json`
-    /// descriptor: validates the spec, checks the weights file exists,
-    /// inserts the model and synthesizes its host entries.
+    /// descriptor: validates the spec, checks every weights/shard file
+    /// exists, inserts the model, synthesizes its host entries and the
+    /// per-shape Wanda-metric kernel entries for its sliced shapes.
+    ///
+    /// A model name registers exactly once: a compact artifact colliding
+    /// with a zoo model — or with another compact descriptor declaring
+    /// the same name — is a hard error, never a silent overwrite.
     pub fn register_compact(&mut self, path: &Path) -> Result<String> {
         let (spec, info) = crate::model::compact::load_compact_spec(path)
             .with_context(|| format!("register compact artifact {}", path.display()))?;
-        anyhow::ensure!(
-            info.weights_path.exists(),
-            "compact artifact '{}' points at missing weights file {} — \
-             delete the stale descriptor {} or restore the weights file",
-            spec.name,
-            info.weights_path.display(),
-            path.display()
-        );
-        // never clobber a non-compact model: a compact artifact named like
-        // a zoo model would silently replace its spec and entries
-        anyhow::ensure!(
-            !self.models.contains_key(&spec.name) || self.compact.contains_key(&spec.name),
-            "compact artifact '{}' collides with an existing model — rename \
-             or delete {}",
-            spec.name,
-            path.display()
-        );
+        match &info.storage {
+            CompactStorage::Monolithic { weights_path } => {
+                anyhow::ensure!(
+                    weights_path.exists(),
+                    "compact artifact '{}' points at missing weights file {} — \
+                     delete the stale descriptor {} or restore the weights file",
+                    spec.name,
+                    weights_path.display(),
+                    path.display()
+                );
+            }
+            CompactStorage::Sharded { dir, index } => {
+                for s in &index.shards {
+                    let p = dir.join(&s.file);
+                    anyhow::ensure!(
+                        p.exists(),
+                        "compact artifact '{}' points at missing shard file {} — \
+                         delete the stale descriptor {} or restore the shard",
+                        spec.name,
+                        p.display(),
+                        path.display()
+                    );
+                }
+            }
+        }
+        if self.models.contains_key(&spec.name) {
+            if self.compact.contains_key(&spec.name) {
+                bail!(
+                    "compact model '{}' is declared by multiple descriptors — \
+                     {} duplicates an already-registered artifact; remove the \
+                     stale one",
+                    spec.name,
+                    path.display()
+                );
+            }
+            bail!(
+                "compact artifact '{}' collides with an existing model — rename \
+                 or delete {}",
+                spec.name,
+                path.display()
+            );
+        }
         let name = spec.name.clone();
         for art in synthesize_model_entries(&spec) {
             self.artifacts.insert(art.name.clone(), art);
+        }
+        // compact-aware kernel metrics: give every sliced shape its own
+        // wanda_metric entry so re-pruning a compact model routes through
+        // the kernel path instead of warning + host fallback
+        for art in synthesize_metric_entries(&spec) {
+            self.artifacts.entry(art.name.clone()).or_insert(art);
         }
         self.models.insert(name.clone(), spec);
         self.compact.insert(name.clone(), info);
         Ok(name)
     }
 
-    /// Load the packed weights of a registered compact model.
+    /// Load the full packed weights of a registered compact model (either
+    /// storage format; sharded artifacts are assembled shard by shard).
     pub fn compact_weights(&self, name: &str) -> Result<crate::model::Weights> {
         let info = self
             .compact
             .get(name)
             .with_context(|| format!("'{name}' is not a registered compact model"))?;
+        info.storage.load_weights(self.model(name)?)
+    }
+
+    /// Open the streaming store of a registered *sharded* compact model.
+    pub fn compact_store(
+        &self,
+        name: &str,
+    ) -> Result<crate::runtime::store::ShardedWeights> {
+        let info = self
+            .compact
+            .get(name)
+            .with_context(|| format!("'{name}' is not a registered compact model"))?;
         let spec = self.model(name)?;
-        crate::model::Weights::load(spec, &info.weights_path).with_context(|| {
-            format!(
-                "load compact weights {} (truncated or corrupt?)",
-                info.weights_path.display()
-            )
-        })
+        match &info.storage {
+            CompactStorage::Sharded { dir, index } => {
+                crate::runtime::store::ShardedWeights::open(
+                    spec.clone(),
+                    dir.clone(),
+                    index.clone(),
+                )
+            }
+            CompactStorage::Monolithic { .. } => bail!(
+                "'{name}' is a monolithic compact artifact — load it with \
+                 compact_weights, or re-export sharded (`fasp shard` / \
+                 `--export-sharded`) to stream it"
+            ),
+        }
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelSpec> {
@@ -505,4 +618,46 @@ pub(crate) fn synthesize_model_entries(spec: &ModelSpec) -> Vec<ArtifactSpec> {
     });
 
     out
+}
+
+/// Per-shape `wanda_metric_{m}x{n}` kernel entries for a compact model's
+/// sliced shapes. The FASP pipeline scores the later matrices —
+/// `fc2`/`w_down` ([d, d_ff_l]) and `wo` ([d, d_ov_l]) — and the
+/// wanda_struct baseline additionally scores every operator's input
+/// columns, including the transposed orientations `wv`/`fc1`/`w_gate`/
+/// `w_up` ([d_ff_l | d_ov_l, d]) and `wq`/`wk` ([d, d]). The dense zoo
+/// shapes ship pre-built kernel artifacts, but compact
+/// (per-layer-sliced) shapes don't exist until export time —
+/// synthesizing every scored orientation here (same contract as
+/// `gen_host_artifacts.py` writes: inputs `w [m, n]`, `xnorm [n]`,
+/// output `[n]`) closes the ROADMAP "compact-aware kernel metrics" gap,
+/// so `KernelMetric` stops falling back to the shape-generic host
+/// metric (and stops warning) for freshly exported models.
+pub(crate) fn synthesize_metric_entries(spec: &ModelSpec) -> Vec<ArtifactSpec> {
+    let d = spec.d_model;
+    let mut shapes = std::collections::BTreeSet::new();
+    shapes.insert((d, d));
+    for l in 0..spec.n_layers {
+        for x in [spec.d_ff_l(l), spec.d_ov_l(l)] {
+            shapes.insert((d, x));
+            shapes.insert((x, d));
+        }
+    }
+    shapes
+        .into_iter()
+        .map(|(m, n)| ArtifactSpec {
+            name: format!("wanda_metric_{m}x{n}"),
+            file: String::new(),
+            kind: ArtifactKind::Host,
+            inputs: vec![
+                IoSpec { name: "w".into(), dtype: DType::F32, shape: vec![m, n] },
+                IoSpec { name: "xnorm".into(), dtype: DType::F32, shape: vec![n] },
+            ],
+            outputs: vec![IoSpec {
+                name: "out0".into(),
+                dtype: DType::F32,
+                shape: vec![n],
+            }],
+        })
+        .collect()
 }

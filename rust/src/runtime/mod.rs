@@ -18,7 +18,12 @@
 //! * [`executable`] — one loaded artifact: literal execution + shape
 //!   checking + output validation + perf counters.
 //! * [`session`] — the typed model session: `fwd_loss`, `capture`,
-//!   `gradcol`, `train_step` over packed params / train state.
+//!   `gradcol`, `train_step` over packed params / train state, plus the
+//!   layer-streaming `fwd_loss_streamed` / `capture_streamed` entries.
+//! * [`store`] — the sharded compact model store: per-layer `.ftns`
+//!   shards + embed/head shard with checksummed index, lazy
+//!   [`ShardedWeights`] loads with residency accounting, and the
+//!   background-prefetch [`store::StreamingParams`] source.
 
 pub mod backend;
 pub mod executable;
@@ -26,11 +31,13 @@ pub mod host_exec;
 pub mod literal;
 pub mod manifest;
 pub mod session;
+pub mod store;
 
 pub use backend::{default_backend, Backend, HostBackend, ThreadedHostBackend};
 pub use executable::Artifact;
 pub use literal::Literal;
-pub use manifest::{ArtifactSpec, Manifest, ModelSpec};
+pub use manifest::{ArtifactSpec, CompactStorage, Manifest, ModelSpec};
 pub use session::{
     CalibStats, Entry, FwdOut, GradScores, LayerStats, PackedParams, Session, TrainState,
 };
+pub use store::{ShardIndex, ShardedWeights, StreamSnapshot};

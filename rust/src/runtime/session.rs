@@ -15,11 +15,19 @@
 //! No caller outside `runtime/` touches a `Literal` for entry I/O.
 //! Artifacts load lazily (first use of each entry) and are cached for
 //! the session's lifetime.
+//!
+//! Sharded compact models additionally stream: [`Session::fwd_loss_streamed`]
+//! and [`Session::capture_streamed`] pull weights layer-by-layer from a
+//! [`ShardedWeights`] store (embed/head shard + one layer shard + the
+//! backend's prefetch buffer resident at a time), producing bit-identical
+//! outputs to the monolithic entries.
 
 use super::backend::{default_backend, Backend};
 use super::executable::{Artifact, In};
 use super::literal::Literal;
 use super::manifest::{Manifest, ModelSpec};
+use super::store::{ShardedWeights, StreamingParams};
+use crate::model::host;
 use crate::tensor::ops::add_assign;
 use crate::tensor::{IntTensor, Tensor};
 use crate::util::pool::PoolScope;
@@ -90,6 +98,28 @@ impl CalibStats {
 fn diag_sqrt(g: &Tensor) -> Vec<f32> {
     let (n, _) = g.dims2();
     (0..n).map(|i| g.at2(i, i).max(0.0).sqrt()).collect()
+}
+
+/// Fold one batch's per-layer stats into the running accumulator —
+/// shared by [`Session::capture`] and [`Session::capture_streamed`] so
+/// the two paths cannot drift (the streamed≡monolithic bitwise contract
+/// depends on identical accumulation order).
+fn accumulate_layer_stats(acc: &mut Option<Vec<LayerStats>>, layers: Vec<LayerStats>) {
+    match acc {
+        None => *acc = Some(layers),
+        Some(acc) => {
+            for (a_l, n_l) in acc.iter_mut().zip(&layers) {
+                add_assign(&mut a_l.g_ln1, &n_l.g_ln1);
+                add_assign(&mut a_l.g_ln2, &n_l.g_ln2);
+                add_assign(&mut a_l.g_attn, &n_l.g_attn);
+                add_assign(&mut a_l.g_ffn, &n_l.g_ffn);
+                add_assign(&mut a_l.m_ln1, &n_l.m_ln1);
+                add_assign(&mut a_l.m_ln2, &n_l.m_ln2);
+                add_assign(&mut a_l.m_attn, &n_l.m_attn);
+                add_assign(&mut a_l.m_ffn, &n_l.m_ffn);
+            }
+        }
+    }
 }
 
 /// Per-layer Taylor scores for the LLM-Pruner-like baseline.
@@ -237,21 +267,7 @@ impl<'m> Session<'m> {
                     m_ffn: outs[b + 7].clone(),
                 });
             }
-            match &mut acc {
-                None => acc = Some(layers),
-                Some(acc) => {
-                    for (a_l, n_l) in acc.iter_mut().zip(&layers) {
-                        add_assign(&mut a_l.g_ln1, &n_l.g_ln1);
-                        add_assign(&mut a_l.g_ln2, &n_l.g_ln2);
-                        add_assign(&mut a_l.g_attn, &n_l.g_attn);
-                        add_assign(&mut a_l.g_ffn, &n_l.g_ffn);
-                        add_assign(&mut a_l.m_ln1, &n_l.m_ln1);
-                        add_assign(&mut a_l.m_ln2, &n_l.m_ln2);
-                        add_assign(&mut a_l.m_attn, &n_l.m_attn);
-                        add_assign(&mut a_l.m_ffn, &n_l.m_ffn);
-                    }
-                }
-            }
+            accumulate_layer_stats(&mut acc, layers);
         }
         Ok(CalibStats {
             layers: acc.context("capture needs at least one batch")?,
@@ -292,6 +308,100 @@ impl<'m> Session<'m> {
         }
         anyhow::ensure!(!acc.is_empty(), "gradcol needs at least one batch");
         Ok(acc)
+    }
+
+    // ---------------------------------------------------------- streaming
+
+    fn check_store(&self, store: &ShardedWeights) -> Result<()> {
+        anyhow::ensure!(
+            store.spec().name == self.spec.name
+                && store.spec().params == self.spec.params,
+            "sharded store '{}' does not match session model '{}'",
+            store.spec().name,
+            self.spec.name
+        );
+        Ok(())
+    }
+
+    fn check_batch(&self, tokens: &IntTensor, targets: &IntTensor) -> Result<()> {
+        let want = [self.spec.batch, self.spec.seq];
+        anyhow::ensure!(
+            tokens.shape == want && targets.shape == want,
+            "{}: batch shapes {:?}/{:?}, model wants {:?}",
+            self.spec.name,
+            tokens.shape,
+            targets.shape,
+            want
+        );
+        super::host_exec::validate_tokens(tokens, self.spec.vocab, "tokens")?;
+        super::host_exec::validate_tokens(targets, self.spec.vocab, "targets")?;
+        Ok(())
+    }
+
+    /// Teacher-forced loss on one batch, streaming the weights layer by
+    /// layer from a sharded store: the embed/head shard plus at most one
+    /// layer shard (and the backend's prefetch buffer —
+    /// [`Backend::prefetch_depth`]) are resident at any moment. The
+    /// shards hold the monolithic packed vector's exact bytes and the
+    /// arithmetic is shared with the `fwd_loss` entry, so the outputs
+    /// are **bit-identical** to [`Session::fwd_loss`] on the assembled
+    /// weights.
+    pub fn fwd_loss_streamed(
+        &self,
+        store: &ShardedWeights,
+        tokens: &IntTensor,
+        targets: &IntTensor,
+    ) -> Result<FwdOut> {
+        self.check_store(store)?;
+        self.check_batch(tokens, targets)?;
+        let _exec = self.backend.enter();
+        let mut src = StreamingParams::new(store, self.backend.prefetch_depth())?;
+        let (nll, _) = host::forward_nll_src(&mut src, tokens, targets, false)?;
+        let (mean_nll, seq_nll) = super::host_exec::nll_summaries(&nll);
+        Ok(FwdOut { mean_nll, seq_nll, tok_nll: nll })
+    }
+
+    /// Capture over `batches`, streaming the weights per layer. Leaf
+    /// construction and batch accumulation mirror the capture entry +
+    /// [`Session::capture`] exactly, so the stats are bit-identical to
+    /// the monolithic path while only one layer's weights are resident.
+    pub fn capture_streamed(
+        &self,
+        store: &ShardedWeights,
+        batches: &[IntTensor],
+    ) -> Result<CalibStats> {
+        self.check_store(store)?;
+        let _exec = self.backend.enter();
+        let n_layers = self.spec.n_layers;
+        let mut acc: Option<Vec<LayerStats>> = None;
+        let mut rows = 0usize;
+        for toks in batches {
+            // capture needs no targets; reuse tokens (same as the entry)
+            self.check_batch(toks, toks)?;
+            let mut src = StreamingParams::new(store, self.backend.prefetch_depth())?;
+            let (_, caps) = host::forward_nll_src(&mut src, toks, toks, true)?;
+            drop(src);
+            anyhow::ensure!(caps.len() == n_layers, "capture output arity");
+            rows += toks.numel();
+            let layers: Vec<LayerStats> = caps
+                .iter()
+                .map(|cap| LayerStats {
+                    g_ln1: host::host_gram(&cap.ln1),
+                    g_ln2: host::host_gram(&cap.ln2),
+                    g_attn: host::host_gram(&cap.attn_ctx),
+                    g_ffn: host::host_gram(&cap.ffn_h),
+                    m_ln1: host::col_sums(&cap.ln1),
+                    m_ln2: host::col_sums(&cap.ln2),
+                    m_attn: host::col_sums(&cap.attn_ctx),
+                    m_ffn: host::col_sums(&cap.ffn_h),
+                })
+                .collect();
+            accumulate_layer_stats(&mut acc, layers);
+        }
+        Ok(CalibStats {
+            layers: acc.context("capture needs at least one batch")?,
+            rows,
+        })
     }
 
     // ------------------------------------------------------------ training

@@ -1,0 +1,857 @@
+//! Sharded compact model store: one `.ftns` shard per decoder layer plus
+//! an embedding/head shard, described by a shard index embedded in the
+//! `*.compact.json` spec. This is what lets a multi-GB compact export
+//! stream-load — the prune/eval paths touch only the layers they need,
+//! with peak resident weights of O(one layer) instead of O(model) — and
+//! is the seam a future shard-per-rank (tensor-parallel) backend maps
+//! onto.
+//!
+//! Pieces:
+//! * [`ShardLayout`] — the packed-vector geometry of a spec: the prefix
+//!   (embeddings) / per-layer runs / tail (final norm) ranges. Layer
+//!   parameters are contiguous in manifest order, so every layer shard
+//!   is a contiguous slice of the monolithic packed vector.
+//! * [`ShardIndex`] / [`ShardMeta`] — the on-disk index (file names,
+//!   element counts, FNV-1a checksums of the exact file bytes), stored
+//!   in the compact spec so a stale or truncated shard fails loudly.
+//! * [`write_shards`] — the export side: serializes + checksums every
+//!   shard on the ambient worker pool (pure per-shard work, so the bytes
+//!   are pool-width-independent), then publishes via temp-file + rename.
+//! * [`ShardedWeights`] — the lazy handle: per-shard loads with checksum
+//!   verification, full [`ShardedWeights::assemble`] for non-streaming
+//!   callers, and resident/peak-byte accounting ([`StreamSnapshot`]).
+//! * [`StreamingParams`] — a [`ParamSource`] that serves the host
+//!   forward layer-by-layer, keeping up to `Backend::prefetch_depth`
+//!   shards ahead of the executing layer in flight on background I/O
+//!   threads. Prefetch overlaps I/O with compute only; the bytes and
+//!   therefore the outputs are bit-identical to the monolithic path.
+
+use crate::model::compact::CompactModel;
+use crate::model::weights::{ParamSource, Weights};
+use crate::runtime::manifest::ModelSpec;
+use crate::tensor::io::TensorFile;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// FNV-1a over raw bytes — the shard checksum. Dependency-free, stable,
+/// and plenty for corruption detection (not a cryptographic signature).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardKind {
+    /// Embeddings + final norm (the params before the first and after the
+    /// last layer in packed order). Resident for a whole forward — the
+    /// tied head reuses `tok_emb` for the logits.
+    Embed,
+    /// All parameters of one decoder layer.
+    Layer(usize),
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardMeta {
+    pub kind: ShardKind,
+    /// File name relative to the compact spec's directory.
+    pub file: String,
+    /// f32 element count of the shard's packed tensor.
+    pub elems: usize,
+    /// FNV-1a of the shard file's exact bytes.
+    pub checksum: u64,
+}
+
+/// The shard index written into the compact spec: embed shard first,
+/// then layer shards in order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardIndex {
+    pub shards: Vec<ShardMeta>,
+}
+
+impl ShardIndex {
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.shards
+                .iter()
+                .map(|s| {
+                    let mut fields: Vec<(&str, Json)> = vec![(
+                        "kind",
+                        Json::Str(
+                            match s.kind {
+                                ShardKind::Embed => "embed",
+                                ShardKind::Layer(_) => "layer",
+                            }
+                            .to_string(),
+                        ),
+                    )];
+                    if let ShardKind::Layer(l) = s.kind {
+                        fields.push(("layer", Json::Num(l as f64)));
+                    }
+                    fields.push(("file", Json::Str(s.file.clone())));
+                    fields.push(("elems", Json::Num(s.elems as f64)));
+                    fields.push(("checksum", Json::Str(format!("{:016x}", s.checksum))));
+                    Json::obj(fields)
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShardIndex> {
+        let arr = j.as_arr().context("shard index is not an array")?;
+        let mut shards = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let kind = match e.get("kind").as_str() {
+                Some("embed") => ShardKind::Embed,
+                Some("layer") => ShardKind::Layer(
+                    e.get("layer")
+                        .as_usize()
+                        .with_context(|| format!("shard {i}: 'layer' field"))?,
+                ),
+                other => bail!("shard {i}: unknown shard kind {other:?}"),
+            };
+            let file = e
+                .get("file")
+                .as_str()
+                .with_context(|| format!("shard {i}: 'file' field"))?
+                .to_string();
+            let elems = e
+                .get("elems")
+                .as_usize()
+                .with_context(|| format!("shard {i}: 'elems' field"))?;
+            let csum = e
+                .get("checksum")
+                .as_str()
+                .with_context(|| format!("shard {i}: 'checksum' field"))?;
+            let checksum = u64::from_str_radix(csum, 16)
+                .with_context(|| format!("shard {i}: bad checksum '{csum}'"))?;
+            shards.push(ShardMeta { kind, file, elems, checksum });
+        }
+        Ok(ShardIndex { shards })
+    }
+
+    /// The index must declare exactly one embed shard plus one shard per
+    /// layer, in order, with the element counts the spec implies.
+    pub fn validate(&self, model: &str, layout: &ShardLayout) -> Result<()> {
+        let want = 1 + layout.layers.len();
+        anyhow::ensure!(
+            self.shards.len() == want,
+            "compact '{model}': shard index has {} entries for {} layers \
+             (+1 embed shard) — index/layer-count mismatch",
+            self.shards.len(),
+            layout.layers.len()
+        );
+        anyhow::ensure!(
+            self.shards[0].kind == ShardKind::Embed,
+            "compact '{model}': first shard must be the embed/head shard, \
+             got {:?}",
+            self.shards[0].kind
+        );
+        anyhow::ensure!(
+            self.shards[0].elems == layout.embed_elems(),
+            "compact '{model}': embed shard declares {} elems, spec wants {}",
+            self.shards[0].elems,
+            layout.embed_elems()
+        );
+        for l in 0..layout.layers.len() {
+            let s = &self.shards[1 + l];
+            anyhow::ensure!(
+                s.kind == ShardKind::Layer(l),
+                "compact '{model}': shard {} is {:?}, want layer {l} — \
+                 shard index out of order",
+                1 + l,
+                s.kind
+            );
+            anyhow::ensure!(
+                s.elems == layout.layer_elems(l),
+                "compact '{model}' layer {l}: shard declares {} elems, \
+                 spec wants {} — index/layer-count mismatch",
+                s.elems,
+                layout.layer_elems(l)
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Canonical shard file name for `model`.
+pub fn shard_file(model: &str, kind: ShardKind) -> String {
+    match kind {
+        ShardKind::Embed => format!("{model}.embed.ftns"),
+        ShardKind::Layer(l) => format!("{model}.layer{l:03}.ftns"),
+    }
+}
+
+/// Packed-vector geometry of a spec: `[prefix | layer 0 | … | layer L-1
+/// | tail]`. Derived by scanning `spec.params`, so it holds for any
+/// family and any per-layer (compact) dims; non-contiguous layer
+/// parameter orders are rejected up front.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardLayout {
+    /// Packed range of the params before the first layer (embeddings).
+    pub prefix: (usize, usize),
+    /// Packed range of each layer's params.
+    pub layers: Vec<(usize, usize)>,
+    /// Packed range of the params after the last layer (final norm).
+    pub tail: (usize, usize),
+}
+
+impl ShardLayout {
+    pub fn of(spec: &ModelSpec) -> Result<ShardLayout> {
+        let mut off = 0usize;
+        let mut prefix_end: Option<usize> = None;
+        let mut layers: Vec<(usize, usize)> = Vec::new();
+        let mut tail_start: Option<usize> = None;
+        for (name, shape) in &spec.params {
+            let n: usize = shape.iter().product();
+            let layer = name
+                .strip_prefix("layers.")
+                .and_then(|r| r.split('.').next())
+                .and_then(|s| s.parse::<usize>().ok());
+            match layer {
+                Some(l) => {
+                    anyhow::ensure!(
+                        tail_start.is_none(),
+                        "model '{}': layer param '{name}' appears after the \
+                         tail params — cannot shard a non-contiguous layout",
+                        spec.name
+                    );
+                    if prefix_end.is_none() {
+                        prefix_end = Some(off);
+                    }
+                    if l == layers.len() {
+                        if let Some(prev) = layers.last() {
+                            anyhow::ensure!(
+                                prev.1 == off,
+                                "model '{}': gap before layer {l} params",
+                                spec.name
+                            );
+                        }
+                        layers.push((off, off + n));
+                    } else if l + 1 == layers.len() {
+                        anyhow::ensure!(
+                            layers[l].1 == off,
+                            "model '{}': layer {l} params are not contiguous",
+                            spec.name
+                        );
+                        layers[l].1 = off + n;
+                    } else {
+                        bail!(
+                            "model '{}': layer params out of order at '{name}'",
+                            spec.name
+                        );
+                    }
+                }
+                None => {
+                    if prefix_end.is_some() && tail_start.is_none() {
+                        tail_start = Some(off);
+                    }
+                }
+            }
+            off += n;
+        }
+        anyhow::ensure!(
+            layers.len() == spec.n_layers,
+            "model '{}': found {} layer param runs for {} layers",
+            spec.name,
+            layers.len(),
+            spec.n_layers
+        );
+        let prefix_end = prefix_end.unwrap_or(off);
+        let tail_start = tail_start.unwrap_or(off);
+        Ok(ShardLayout {
+            prefix: (0, prefix_end),
+            layers,
+            tail: (tail_start, off),
+        })
+    }
+
+    pub fn embed_elems(&self) -> usize {
+        (self.prefix.1 - self.prefix.0) + (self.tail.1 - self.tail.0)
+    }
+
+    pub fn layer_elems(&self, l: usize) -> usize {
+        self.layers[l].1 - self.layers[l].0
+    }
+
+    pub fn max_layer_elems(&self) -> usize {
+        self.layers.iter().map(|(a, b)| b - a).max().unwrap_or(0)
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.tail.1
+    }
+}
+
+/// Write one shard file per entry of the canonical index for `cm` under
+/// `dir` (created on demand). Serialization + checksumming fan out on
+/// the ambient worker pool — per-shard work is pure, so the bytes are
+/// identical for any pool width. Files publish via temp-file + rename.
+/// Returns the index to embed in the compact spec.
+pub fn write_shards(dir: &Path, cm: &CompactModel) -> Result<ShardIndex> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create {}", dir.display()))?;
+    let layout = ShardLayout::of(&cm.spec)?;
+    let packed = &cm.weights.packed.data;
+    anyhow::ensure!(
+        packed.len() == layout.total_elems(),
+        "sharded export: packed length {} != spec total {}",
+        packed.len(),
+        layout.total_elems()
+    );
+    let kinds: Vec<ShardKind> = std::iter::once(ShardKind::Embed)
+        .chain((0..layout.layers.len()).map(ShardKind::Layer))
+        .collect();
+    let pool = crate::util::pool::current();
+    let blobs: Vec<Result<Vec<u8>>> = pool.map(kinds.len(), |i| {
+        let data: Vec<f32> = match kinds[i] {
+            ShardKind::Embed => {
+                let mut v = Vec::with_capacity(layout.embed_elems());
+                v.extend_from_slice(&packed[layout.prefix.0..layout.prefix.1]);
+                v.extend_from_slice(&packed[layout.tail.0..layout.tail.1]);
+                v
+            }
+            ShardKind::Layer(l) => {
+                packed[layout.layers[l].0..layout.layers[l].1].to_vec()
+            }
+        };
+        let mut tf = TensorFile::new();
+        let n = data.len();
+        tf.insert("packed", Tensor::new(vec![n], data));
+        tf.to_bytes()
+    });
+    let mut shards = Vec::with_capacity(kinds.len());
+    for (kind, blob) in kinds.into_iter().zip(blobs) {
+        let bytes = blob?;
+        let elems = match kind {
+            ShardKind::Embed => layout.embed_elems(),
+            ShardKind::Layer(l) => layout.layer_elems(l),
+        };
+        let file = shard_file(&cm.spec.name, kind);
+        let tmp = dir.join(format!("{file}.tmp"));
+        std::fs::write(&tmp, &bytes)
+            .with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, dir.join(&file))
+            .with_context(|| format!("publish {file}"))?;
+        shards.push(ShardMeta { kind, file, elems, checksum: fnv1a64(&bytes) });
+    }
+    Ok(ShardIndex { shards })
+}
+
+// ------------------------------------------------------------- residency
+
+/// Live byte accounting for a store: every shard load adds its payload
+/// bytes to `resident` (and bumps `peak`); dropping the buffer subtracts
+/// them. `peak_resident_bytes` is the receipt that streaming eval never
+/// materialized more than one layer (plus prefetch) of weights.
+#[derive(Default)]
+struct StreamStats {
+    resident: AtomicUsize,
+    peak: AtomicUsize,
+    loads: AtomicU64,
+    load_ns: AtomicU64,
+}
+
+impl StreamStats {
+    fn on_load(&self, bytes: usize, ns: u64) {
+        self.loads.fetch_add(1, Ordering::Relaxed);
+        self.load_ns.fetch_add(ns, Ordering::Relaxed);
+        let now = self.resident.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+    fn on_drop(&self, bytes: usize) {
+        self.resident.fetch_sub(bytes, Ordering::Relaxed);
+    }
+}
+
+/// A point-in-time view of a store's load/residency counters.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamSnapshot {
+    pub resident_bytes: usize,
+    pub peak_resident_bytes: usize,
+    pub loads: u64,
+    pub load_s: f64,
+}
+
+// ------------------------------------------------------------- the store
+
+struct StoreInner {
+    spec: ModelSpec,
+    dir: PathBuf,
+    index: ShardIndex,
+    layout: ShardLayout,
+    /// Param name → (packed offset, shape), spec order.
+    offsets: BTreeMap<String, (usize, Vec<usize>)>,
+    stats: StreamStats,
+}
+
+/// Lazy handle on a sharded compact model. Cheap to clone (shared
+/// inner); loads verify the per-shard checksum and element count, so a
+/// truncated, corrupt or stale shard fails loudly, never with garbage
+/// numerics.
+#[derive(Clone)]
+pub struct ShardedWeights {
+    inner: Arc<StoreInner>,
+}
+
+/// One loaded shard's packed payload. Dropping it releases the bytes in
+/// the store's residency accounting.
+pub struct ShardBuf {
+    data: Vec<f32>,
+    store: Arc<StoreInner>,
+}
+
+impl ShardBuf {
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl Drop for ShardBuf {
+    fn drop(&mut self) {
+        self.store.stats.on_drop(self.data.len() * 4);
+    }
+}
+
+impl ShardedWeights {
+    /// Open a store on `dir` with the given spec + index (both come from
+    /// the compact descriptor). Validates the index geometry; shard files
+    /// are only read on demand.
+    pub fn open(spec: ModelSpec, dir: PathBuf, index: ShardIndex) -> Result<ShardedWeights> {
+        let layout = ShardLayout::of(&spec)?;
+        index.validate(&spec.name, &layout)?;
+        let mut offsets = BTreeMap::new();
+        let mut off = 0usize;
+        for (name, shape) in &spec.params {
+            let n: usize = shape.iter().product();
+            offsets.insert(name.clone(), (off, shape.clone()));
+            off += n;
+        }
+        Ok(ShardedWeights {
+            inner: Arc::new(StoreInner {
+                spec,
+                dir,
+                index,
+                layout,
+                offsets,
+                stats: StreamStats::default(),
+            }),
+        })
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.inner.spec
+    }
+
+    pub fn index(&self) -> &ShardIndex {
+        &self.inner.index
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.inner.dir
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.inner.index.shards.len()
+    }
+
+    pub fn embed_bytes(&self) -> usize {
+        self.inner.layout.embed_elems() * 4
+    }
+
+    pub fn max_layer_bytes(&self) -> usize {
+        self.inner.layout.max_layer_elems() * 4
+    }
+
+    pub fn total_param_bytes(&self) -> usize {
+        self.inner.layout.total_elems() * 4
+    }
+
+    pub fn stats(&self) -> StreamSnapshot {
+        let s = &self.inner.stats;
+        StreamSnapshot {
+            resident_bytes: s.resident.load(Ordering::Relaxed),
+            peak_resident_bytes: s.peak.load(Ordering::Relaxed),
+            loads: s.loads.load(Ordering::Relaxed),
+            load_s: s.load_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+
+    /// Reset the peak/load counters to the current residency (bench reps).
+    pub fn reset_stats(&self) {
+        let s = &self.inner.stats;
+        s.peak.store(s.resident.load(Ordering::Relaxed), Ordering::Relaxed);
+        s.loads.store(0, Ordering::Relaxed);
+        s.load_ns.store(0, Ordering::Relaxed);
+    }
+
+    fn read_shard(&self, si: usize) -> Result<ShardBuf> {
+        let meta = &self.inner.index.shards[si];
+        let path = self.inner.dir.join(&meta.file);
+        let t0 = std::time::Instant::now();
+        let bytes = std::fs::read(&path).with_context(|| {
+            format!("read shard file {} — missing or unreadable", path.display())
+        })?;
+        let sum = fnv1a64(&bytes);
+        anyhow::ensure!(
+            sum == meta.checksum,
+            "shard {}: checksum mismatch (file {sum:016x}, index {:016x}) — \
+             truncated or corrupt shard file",
+            path.display(),
+            meta.checksum
+        );
+        let mut tf = TensorFile::from_bytes(&bytes)
+            .with_context(|| format!("parse shard {}", path.display()))?;
+        let t = tf
+            .tensors
+            .remove("packed")
+            .with_context(|| format!("shard {}: missing 'packed' tensor", path.display()))?;
+        anyhow::ensure!(
+            t.numel() == meta.elems,
+            "shard {}: {} elems, index says {}",
+            path.display(),
+            t.numel(),
+            meta.elems
+        );
+        let ns = t0.elapsed().as_nanos() as u64;
+        self.inner.stats.on_load(t.data.len() * 4, ns);
+        Ok(ShardBuf { data: t.data, store: self.inner.clone() })
+    }
+
+    /// Load the embedding/head shard.
+    pub fn load_embed(&self) -> Result<ShardBuf> {
+        self.read_shard(0)
+    }
+
+    /// Load one layer's shard.
+    pub fn load_layer(&self, l: usize) -> Result<ShardBuf> {
+        anyhow::ensure!(
+            l < self.inner.layout.layers.len(),
+            "layer {l} out of range ({} layers)",
+            self.inner.layout.layers.len()
+        );
+        self.read_shard(1 + l)
+    }
+
+    /// Materialize the full monolithic [`Weights`] (for non-streaming
+    /// callers: re-pruning, checkpoints, equivalence tests). Shards load
+    /// one at a time, so even assembly never holds two copies.
+    pub fn assemble(&self) -> Result<Weights> {
+        let layout = &self.inner.layout;
+        let mut packed = vec![0.0f32; layout.total_elems()];
+        {
+            let embed = self.load_embed()?;
+            let plen = layout.prefix.1 - layout.prefix.0;
+            packed[layout.prefix.0..layout.prefix.1].copy_from_slice(&embed.data[..plen]);
+            packed[layout.tail.0..layout.tail.1].copy_from_slice(&embed.data[plen..]);
+        }
+        for l in 0..layout.layers.len() {
+            let shard = self.load_layer(l)?;
+            packed[layout.layers[l].0..layout.layers[l].1].copy_from_slice(&shard.data);
+        }
+        Weights::from_packed(&self.inner.spec, packed)
+    }
+}
+
+// ------------------------------------------------------- streaming source
+
+fn join_shard(h: JoinHandle<Result<ShardBuf>>) -> Result<ShardBuf> {
+    match h.join() {
+        Ok(r) => r,
+        Err(_) => bail!("shard prefetch thread panicked"),
+    }
+}
+
+/// A [`ParamSource`] streaming a [`ShardedWeights`]: the embed/head
+/// shard stays resident for the whole forward; layer shards are served
+/// strictly in order, each released via `layer_done` before the next is
+/// requested. With `prefetch > 0`, up to `prefetch` shards ahead of the
+/// current layer load on background I/O threads while it executes —
+/// peak residency is the embed shard plus at most `1 + prefetch` layer
+/// shards.
+pub struct StreamingParams {
+    store: ShardedWeights,
+    embed: ShardBuf,
+    cur: Option<(usize, ShardBuf)>,
+    /// In-flight prefetches, ascending layer order (front = next layer).
+    pending: VecDeque<(usize, JoinHandle<Result<ShardBuf>>)>,
+    /// The next layer index not yet handed to a prefetch thread.
+    next_spawn: usize,
+    prefetch: usize,
+}
+
+impl StreamingParams {
+    pub fn new(store: &ShardedWeights, prefetch: usize) -> Result<StreamingParams> {
+        let embed = store.load_embed()?;
+        let mut sp = StreamingParams {
+            store: store.clone(),
+            embed,
+            cur: None,
+            pending: VecDeque::new(),
+            next_spawn: 0,
+            prefetch,
+        };
+        sp.top_up();
+        Ok(sp)
+    }
+
+    /// Keep up to `prefetch` shards in flight ahead of the consumer.
+    fn top_up(&mut self) {
+        while self.prefetch > 0
+            && self.pending.len() < self.prefetch
+            && self.next_spawn < self.store.spec().n_layers
+        {
+            let l = self.next_spawn;
+            let st = self.store.clone();
+            self.pending.push_back((l, std::thread::spawn(move || st.load_layer(l))));
+            self.next_spawn += 1;
+        }
+    }
+
+    fn ensure_layer(&mut self, l: usize) -> Result<()> {
+        if matches!(&self.cur, Some((cl, _)) if *cl == l) {
+            return Ok(());
+        }
+        let buf = match self.pending.pop_front() {
+            Some((nl, h)) if nl == l => join_shard(h)?,
+            Some((nl, h)) => {
+                // drain every stale prefetch before failing
+                let _ = join_shard(h);
+                for (_, h) in self.pending.drain(..) {
+                    let _ = join_shard(h);
+                }
+                bail!(
+                    "streaming params read out of order: wanted layer {l}, \
+                     prefetched layer {nl}"
+                );
+            }
+            None => {
+                // no prefetch in flight (depth 0, or a re-read): load
+                // synchronously and restart any prefetch run after `l`
+                self.next_spawn = self.next_spawn.max(l + 1);
+                self.store.load_layer(l)?
+            }
+        };
+        self.cur = Some((l, buf)); // replaces (drops) the previous layer
+        self.top_up();
+        Ok(())
+    }
+}
+
+impl Drop for StreamingParams {
+    fn drop(&mut self) {
+        for (_, h) in self.pending.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl ParamSource for StreamingParams {
+    fn spec(&self) -> &ModelSpec {
+        self.store.spec()
+    }
+
+    fn get(&mut self, name: &str) -> Result<Tensor> {
+        let inner = &self.store.inner;
+        let (off, shape) = inner
+            .offsets
+            .get(name)
+            .cloned()
+            .with_context(|| format!("param '{name}' not found"))?;
+        let n: usize = shape.iter().product();
+        let lay = &inner.layout;
+        let local = if off >= lay.prefix.0 && off + n <= lay.prefix.1 {
+            off - lay.prefix.0
+        } else if off >= lay.tail.0 && off + n <= lay.tail.1 {
+            (lay.prefix.1 - lay.prefix.0) + (off - lay.tail.0)
+        } else {
+            bail!("param '{name}' is a layer parameter — read it via get_l");
+        };
+        Ok(Tensor::new(shape, self.embed.data[local..local + n].to_vec()))
+    }
+
+    fn get_l(&mut self, l: usize, short: &str) -> Result<Tensor> {
+        self.ensure_layer(l)?;
+        let name = Weights::pname(l, short);
+        let inner = &self.store.inner;
+        let (off, shape) = inner
+            .offsets
+            .get(&name)
+            .cloned()
+            .with_context(|| format!("param '{name}' not found"))?;
+        let n: usize = shape.iter().product();
+        let (start, end) = inner.layout.layers[l];
+        anyhow::ensure!(
+            off >= start && off + n <= end,
+            "param '{name}' lies outside layer {l}'s shard range"
+        );
+        let buf = &self.cur.as_ref().expect("ensure_layer set cur").1;
+        Ok(Tensor::new(shape, buf.data[off - start..off - start + n].to_vec()))
+    }
+
+    fn layer_done(&mut self, l: usize) -> Result<()> {
+        if matches!(&self.cur, Some((cl, _)) if *cl == l) {
+            self.cur = None; // drop the shard → residency falls
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::compact::build_params;
+    use crate::runtime::manifest::LayerDims;
+
+    fn toy_spec(family: &str) -> ModelSpec {
+        let layer_dims = vec![
+            LayerDims { d_ff: 16, d_ov: 8, head_splits: vec![4, 4] },
+            LayerDims { d_ff: 12, d_ov: 6, head_splits: vec![3, 3] },
+        ];
+        let params = build_params(family, 8, 2, 32, 16, &layer_dims);
+        ModelSpec {
+            name: format!("store_toy_{family}"),
+            family: family.into(),
+            d_model: 8,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 16,
+            vocab: 32,
+            seq: 16,
+            batch: 2,
+            params,
+            layer_dims,
+        }
+    }
+
+    #[test]
+    fn fnv_is_stable_and_input_sensitive() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a64(b"abc"), fnv1a64(b"abd"));
+    }
+
+    #[test]
+    fn layout_partitions_the_packed_vector() {
+        for fam in ["opt", "llama"] {
+            let spec = toy_spec(fam);
+            let lay = ShardLayout::of(&spec).unwrap();
+            assert_eq!(lay.prefix.0, 0);
+            assert_eq!(lay.layers.len(), 2);
+            assert_eq!(lay.prefix.1, lay.layers[0].0);
+            assert_eq!(lay.layers[0].1, lay.layers[1].0);
+            assert_eq!(lay.layers[1].1, lay.tail.0);
+            assert_eq!(lay.total_elems(), spec.n_params_elems());
+            assert_eq!(
+                lay.embed_elems() + lay.layer_elems(0) + lay.layer_elems(1),
+                spec.n_params_elems()
+            );
+        }
+    }
+
+    #[test]
+    fn index_json_roundtrip() {
+        let idx = ShardIndex {
+            shards: vec![
+                ShardMeta {
+                    kind: ShardKind::Embed,
+                    file: "m.embed.ftns".into(),
+                    elems: 10,
+                    checksum: 0xdead_beef_0102_0304,
+                },
+                ShardMeta {
+                    kind: ShardKind::Layer(0),
+                    file: "m.layer000.ftns".into(),
+                    elems: 20,
+                    checksum: 7,
+                },
+            ],
+        };
+        let re = ShardIndex::from_json(&idx.to_json()).unwrap();
+        assert_eq!(re, idx);
+    }
+
+    #[test]
+    fn index_layer_count_mismatch_rejected() {
+        let spec = toy_spec("llama");
+        let lay = ShardLayout::of(&spec).unwrap();
+        let idx = ShardIndex {
+            shards: vec![ShardMeta {
+                kind: ShardKind::Embed,
+                file: "x.embed.ftns".into(),
+                elems: lay.embed_elems(),
+                checksum: 0,
+            }],
+        };
+        let err = idx.validate(&spec.name, &lay).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("index/layer-count mismatch"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn write_open_assemble_roundtrip() {
+        let spec = toy_spec("llama");
+        let w = Weights::init(&spec, 9);
+        let cm = CompactModel {
+            spec: spec.clone(),
+            weights: w.clone(),
+            base_model: "toy".into(),
+            sparsity: 0.0,
+        };
+        let dir = std::env::temp_dir().join("fasp_store_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let index = write_shards(&dir, &cm).unwrap();
+        assert_eq!(index.shards.len(), 1 + spec.n_layers);
+        let store = ShardedWeights::open(spec.clone(), dir.clone(), index).unwrap();
+        let re = store.assemble().unwrap();
+        assert_eq!(re.packed, w.packed, "assembled shards must be bit-identical");
+        // residency: assembly loads shards one at a time
+        let snap = store.stats();
+        assert_eq!(snap.resident_bytes, 0);
+        assert!(snap.peak_resident_bytes <= store.embed_bytes() + store.max_layer_bytes());
+        assert_eq!(snap.loads as usize, 1 + spec.n_layers);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn streaming_source_serves_identical_tensors() {
+        let spec = toy_spec("opt");
+        let w = Weights::init(&spec, 11);
+        let cm = CompactModel {
+            spec: spec.clone(),
+            weights: w.clone(),
+            base_model: "toy".into(),
+            sparsity: 0.0,
+        };
+        let dir = std::env::temp_dir().join("fasp_store_stream_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let index = write_shards(&dir, &cm).unwrap();
+        let store = ShardedWeights::open(spec.clone(), dir.clone(), index).unwrap();
+        for prefetch in [0usize, 1, 2] {
+            let mut src = StreamingParams::new(&store, prefetch).unwrap();
+            assert_eq!(src.get("tok_emb").unwrap(), w.get("tok_emb").unwrap());
+            assert_eq!(src.get("lnf_g").unwrap(), w.get("lnf_g").unwrap());
+            for l in 0..spec.n_layers {
+                for short in ["wq", "wv", "wo", "fc1", "fc2"] {
+                    assert_eq!(
+                        src.get_l(l, short).unwrap(),
+                        w.get_l(l, short).unwrap(),
+                        "layer {l} {short} (prefetch {prefetch})"
+                    );
+                }
+                src.layer_done(l).unwrap();
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

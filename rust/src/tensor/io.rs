@@ -46,6 +46,19 @@ impl TensorFile {
             std::fs::File::create(path)
                 .with_context(|| format!("create {}", path.display()))?,
         );
+        self.write_to(&mut w)
+    }
+
+    /// Serialize into an in-memory buffer (the shard writer checksums the
+    /// exact bytes before they hit disk). Byte-for-byte identical to what
+    /// [`TensorFile::save`] writes.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        self.write_to(&mut buf)?;
+        Ok(buf)
+    }
+
+    fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
         w.write_all(MAGIC)?;
         w.write_all(&VERSION.to_le_bytes())?;
         let count = (self.tensors.len() + self.ints.len()) as u32;
@@ -72,10 +85,21 @@ impl TensorFile {
             std::fs::File::open(path)
                 .with_context(|| format!("open {}", path.display()))?,
         );
+        Self::read_from(&mut r).with_context(|| format!("read FTNS {}", path.display()))
+    }
+
+    /// Deserialize from an in-memory buffer (shard payloads are checksummed
+    /// as raw bytes first, then parsed through this).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = bytes;
+        Self::read_from(&mut r)
+    }
+
+    fn read_from<R: Read>(r: &mut R) -> Result<Self> {
         let mut magic = [0u8; 4];
-        r.read_exact(&mut magic)?;
+        r.read_exact(&mut magic).context("read FTNS magic")?;
         if &magic != MAGIC {
-            bail!("{}: not a FTNS file", path.display());
+            bail!("not a FTNS file");
         }
         let version = read_u32(&mut r)?;
         if version != VERSION {
@@ -107,9 +131,8 @@ impl TensorFile {
             let mut payload = vec![0u8; n * 4];
             r.read_exact(&mut payload).with_context(|| {
                 format!(
-                    "read {}-byte payload of tensor '{name}' in {} — file truncated?",
-                    n * 4,
-                    path.display()
+                    "read {}-byte payload of tensor '{name}' — file truncated?",
+                    n * 4
                 )
             })?;
             match dt[0] {
@@ -169,6 +192,20 @@ mod tests {
         assert_eq!(re.tensors["w"], tf.tensors["w"]);
         assert_eq!(re.tensors["b"], tf.tensors["b"]);
         assert_eq!(re.ints["toks"], tf.ints["toks"]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bytes_roundtrip_matches_file_bytes() {
+        let mut rng = Rng::new(1);
+        let mut tf = TensorFile::new();
+        tf.insert("w", Tensor::randn(&[2, 5], 1.0, &mut rng));
+        let bytes = tf.to_bytes().unwrap();
+        let path = std::env::temp_dir().join("fasp_io_bytes.ftns");
+        tf.save(&path).unwrap();
+        assert_eq!(bytes, std::fs::read(&path).unwrap());
+        let re = TensorFile::from_bytes(&bytes).unwrap();
+        assert_eq!(re.tensors["w"], tf.tensors["w"]);
         std::fs::remove_file(path).ok();
     }
 

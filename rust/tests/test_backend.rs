@@ -168,6 +168,45 @@ fn compact_repack_identical_across_pool_widths() {
     );
 }
 
+/// Sharded export bytes are pool-width-independent: serializing +
+/// checksumming shards on a wide pool produces byte-identical files and
+/// an identical index vs the serial pool.
+#[test]
+fn sharded_export_bytes_identical_across_pool_widths() {
+    use fasp::util::pool;
+    let m = manifest();
+    let spec = m.model("llama_tiny").unwrap().clone();
+    let w = Weights::init(&spec, 17);
+    let mut mask = fasp::model::PruneMask::full(&spec);
+    for j in 0..24 {
+        mask.layers[0].ffn[j] = false;
+        mask.layers[1].ov[j % spec.d_model] = false;
+    }
+    let cm = fasp::model::compact::compact_from_mask(&w, &mask, "bk_shard").unwrap();
+    let d1 = std::env::temp_dir().join("fasp_bk_shard_serial");
+    let d2 = std::env::temp_dir().join("fasp_bk_shard_pooled");
+    for d in [&d1, &d2] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    let idx1 = {
+        let _g = pool::enter(pool::serial());
+        fasp::runtime::store::write_shards(&d1, &cm).unwrap()
+    };
+    let idx2 = {
+        let _g = pool::enter(Arc::new(pool::Pool::new(THREADS)));
+        fasp::runtime::store::write_shards(&d2, &cm).unwrap()
+    };
+    assert_eq!(idx1, idx2, "shard indices (incl. checksums) diverged");
+    for s in &idx1.shards {
+        let b1 = std::fs::read(d1.join(&s.file)).unwrap();
+        let b2 = std::fs::read(d2.join(&s.file)).unwrap();
+        assert_eq!(b1, b2, "shard {} bytes diverged across pool widths", s.file);
+    }
+    for d in [&d1, &d2] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
 /// The speed harness agrees: outputs identical, timing fields sane.
 #[test]
 fn compare_backends_reports_identity() {

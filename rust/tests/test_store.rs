@@ -1,0 +1,369 @@
+//! Sharded compact store test matrix (see rust/tests/README.md): a
+//! sharded export must be a bit-faithful, stream-loadable twin of the
+//! monolithic compact artifact.
+//!
+//! * equivalence: sharded↔monolithic bit-identical weights, `fwd_loss`
+//!   and perplexity (f64 bit equality) after a save → register → load
+//!   round trip;
+//! * residency: streaming eval never materializes more than the
+//!   embed/head shard + one layer shard (+ the backend's prefetch
+//!   buffer) — strictly less than the whole model;
+//! * failure injection: truncated shard, corrupt shard (checksum
+//!   mismatch), missing shard file, shard-index/layer-count mismatch,
+//!   duplicate compact names;
+//! * compact-aware kernel metrics: registration synthesizes
+//!   `wanda_metric_{m}x{n}` entries for the sliced shapes.
+
+use fasp::data::{Corpus, Dataset};
+use fasp::eval::{perplexity, perplexity_streamed};
+use fasp::model::{compact, CompactModel, Weights};
+use fasp::prune::metric::{wanda_scores_host, KernelMetric};
+use fasp::runtime::{HostBackend, Manifest, Session, ThreadedHostBackend};
+use fasp::tensor::Tensor;
+use fasp::util::json::Json;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn manifest() -> Manifest {
+    Manifest::load(&fasp::artifacts_dir()).expect("run `make artifacts` first")
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fasp_store_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Compact model from `model` with a mixed FFN+OV mask.
+fn make_compact(model: &str, name: &str, seed: u64) -> CompactModel {
+    let m = manifest();
+    let spec = m.model(model).unwrap().clone();
+    let w = Weights::init(&spec, seed);
+    let mut mask = fasp::model::PruneMask::full(&spec);
+    for l in 0..spec.n_layers {
+        for j in 0..spec.d_ff / 4 {
+            mask.layers[l].ffn[(j * 3 + l) % spec.d_ff] = false;
+        }
+        for j in 0..spec.d_model / 8 {
+            mask.layers[l].ov[(j * 5 + l) % spec.d_model] = false;
+        }
+    }
+    compact::compact_from_mask(&w, &mask, name).unwrap()
+}
+
+#[test]
+fn sharded_equals_monolithic_bit_identical_weights_fwd_and_ppl() {
+    let name = "ls_store_eq";
+    let cm = make_compact("llama_small", name, 5);
+    let dmono = tmpdir("eq_mono");
+    let dshard = tmpdir("eq_shard");
+    let jp_m = compact::save_compact(&dmono, &cm).unwrap();
+    let jp_s = compact::save_compact_sharded(&dshard, &cm).unwrap();
+
+    let mut m1 = manifest();
+    m1.register_compact(&jp_m).unwrap();
+    let mut m2 = manifest();
+    m2.register_compact(&jp_s).unwrap();
+
+    // bit-identical packed weights after the round trip, both storages
+    let w_mono = m1.compact_weights(name).unwrap();
+    let w_shard = m2.compact_weights(name).unwrap();
+    assert!(
+        bits_eq(&w_mono.packed.data, &w_shard.packed.data),
+        "sharded assembly diverged from the monolithic weights"
+    );
+    assert!(bits_eq(&w_mono.packed.data, &cm.weights.packed.data));
+
+    let s1 = Session::new(&m1, name).unwrap();
+    let s2 = Session::new(&m2, name).unwrap();
+    let spec = s1.spec.clone();
+    let ds = Dataset::new(Corpus::new(spec.vocab, 7), spec.batch, spec.seq, 6);
+
+    // fwd_loss: monolithic entry vs streaming store, bitwise
+    let b = ds.train_batch(0);
+    let store = m2.compact_store(name).unwrap();
+    let o1 = s1
+        .fwd_loss(&s1.pack(&w_mono.packed).unwrap(), &b.tokens, &b.targets)
+        .unwrap();
+    let o2 = s2.fwd_loss_streamed(&store, &b.tokens, &b.targets).unwrap();
+    assert_eq!(o1.mean_nll.to_bits(), o2.mean_nll.to_bits(), "mean nll diverged");
+    assert!(bits_eq(&o1.seq_nll, &o2.seq_nll), "seq nll diverged");
+    assert!(bits_eq(&o1.tok_nll.data, &o2.tok_nll.data), "token nll diverged");
+
+    // perplexity: f64 bit equality across the two load paths
+    let eval_b = ds.valid_batches(3);
+    let ppl_mono = perplexity(&s1, &w_mono, &eval_b).unwrap();
+    let ppl_stream = perplexity_streamed(&s2, &store, &eval_b).unwrap();
+    assert_eq!(
+        ppl_mono.to_bits(),
+        ppl_stream.to_bits(),
+        "streamed ppl {ppl_stream} != monolithic ppl {ppl_mono}"
+    );
+
+    std::fs::remove_dir_all(&dmono).ok();
+    std::fs::remove_dir_all(&dshard).ok();
+}
+
+/// The streaming path's receipt: peak resident weights stay at the
+/// embed/head shard + one layer (+ prefetch buffer), strictly below the
+/// whole model — on both the serial (prefetch 0) and threaded
+/// (prefetch 1) backends, with bit-identical outputs.
+#[test]
+fn streaming_peak_residency_is_one_layer_plus_prefetch() {
+    let name = "ls_store_resident";
+    let cm = make_compact("llama_small", name, 11);
+    let d = tmpdir("resident");
+    let jp = compact::save_compact_sharded(&d, &cm).unwrap();
+    let mut m = manifest();
+    m.register_compact(&jp).unwrap();
+    let store = m.compact_store(name).unwrap();
+    let spec = m.model(name).unwrap().clone();
+    let ds = Dataset::new(Corpus::new(spec.vocab, 3), spec.batch, spec.seq, 2);
+    let b = ds.train_batch(0);
+
+    let single = Session::with_backend(&m, name, Arc::new(HostBackend::new())).unwrap();
+    store.reset_stats();
+    let o1 = single.fwd_loss_streamed(&store, &b.tokens, &b.targets).unwrap();
+    let snap1 = store.stats();
+    assert_eq!(snap1.resident_bytes, 0, "shards leaked after the forward");
+    assert!(
+        snap1.peak_resident_bytes <= store.embed_bytes() + store.max_layer_bytes(),
+        "serial backend (prefetch 0): peak {} > embed {} + one layer {}",
+        snap1.peak_resident_bytes,
+        store.embed_bytes(),
+        store.max_layer_bytes()
+    );
+
+    let threaded =
+        Session::with_backend(&m, name, Arc::new(ThreadedHostBackend::new(4))).unwrap();
+    store.reset_stats();
+    let o2 = threaded.fwd_loss_streamed(&store, &b.tokens, &b.targets).unwrap();
+    let snap2 = store.stats();
+    assert_eq!(snap2.resident_bytes, 0);
+    assert!(
+        snap2.peak_resident_bytes
+            <= store.embed_bytes() + 2 * store.max_layer_bytes(),
+        "threaded backend (prefetch 1): peak {} > embed + 2 layers",
+        snap2.peak_resident_bytes
+    );
+    assert!(
+        snap2.peak_resident_bytes < store.total_param_bytes(),
+        "streaming never beat full residency: peak {} vs model {}",
+        snap2.peak_resident_bytes,
+        store.total_param_bytes()
+    );
+
+    // prefetch depth changes wall-time only, never numerics
+    assert_eq!(o1.mean_nll.to_bits(), o2.mean_nll.to_bits());
+    assert!(bits_eq(&o1.tok_nll.data, &o2.tok_nll.data));
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn capture_streamed_matches_monolithic_capture_bitwise() {
+    let name = "lt_store_capture";
+    let cm = make_compact("llama_tiny", name, 13);
+    let d = tmpdir("capture");
+    let jp = compact::save_compact_sharded(&d, &cm).unwrap();
+    let mut m = manifest();
+    m.register_compact(&jp).unwrap();
+    let store = m.compact_store(name).unwrap();
+    let session = Session::new(&m, name).unwrap();
+    let spec = session.spec.clone();
+    let ds = Dataset::new(Corpus::new(spec.vocab, 17), spec.batch, spec.seq, 3);
+    let batches: Vec<_> = (0..2).map(|i| ds.train_batch(i).tokens).collect();
+
+    let w = m.compact_weights(name).unwrap();
+    let mono = session.capture(&session.pack(&w.packed).unwrap(), &batches).unwrap();
+    let streamed = session.capture_streamed(&store, &batches).unwrap();
+    assert_eq!(mono.rows, streamed.rows);
+    for (l, (a, b)) in mono.layers.iter().zip(&streamed.layers).enumerate() {
+        assert!(bits_eq(&a.g_ln1.data, &b.g_ln1.data), "layer {l} g_ln1");
+        assert!(bits_eq(&a.g_ln2.data, &b.g_ln2.data), "layer {l} g_ln2");
+        assert!(bits_eq(&a.g_attn.data, &b.g_attn.data), "layer {l} g_attn");
+        assert!(bits_eq(&a.g_ffn.data, &b.g_ffn.data), "layer {l} g_ffn");
+        assert!(bits_eq(&a.m_ln1.data, &b.m_ln1.data), "layer {l} m_ln1");
+        assert!(bits_eq(&a.m_ln2.data, &b.m_ln2.data), "layer {l} m_ln2");
+        assert!(bits_eq(&a.m_attn.data, &b.m_attn.data), "layer {l} m_attn");
+        assert!(bits_eq(&a.m_ffn.data, &b.m_ffn.data), "layer {l} m_ffn");
+    }
+    std::fs::remove_dir_all(&d).ok();
+}
+
+// ---- failure injection --------------------------------------------------
+
+fn make_sharded_artifact(dir: &std::path::Path, name: &str) -> PathBuf {
+    let cm = make_compact("llama_tiny", name, 3);
+    compact::save_compact_sharded(dir, &cm).unwrap()
+}
+
+#[test]
+fn truncated_shard_rejected_by_checksum() {
+    let d = tmpdir("trunc");
+    let jp = make_sharded_artifact(&d, "trunc_shard");
+    let spath = d.join("trunc_shard.layer000.ftns");
+    let bytes = std::fs::read(&spath).unwrap();
+    std::fs::write(&spath, &bytes[..bytes.len() / 2]).unwrap();
+    let mut m = manifest();
+    m.register_compact(&jp).unwrap(); // file still exists; load must fail
+    let err = match m.compact_weights("trunc_shard") {
+        Err(e) => e,
+        Ok(_) => panic!("truncated shard accepted"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("checksum mismatch"), "unhelpful error: {msg}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn corrupt_shard_byte_rejected_by_checksum() {
+    let d = tmpdir("corrupt");
+    let jp = make_sharded_artifact(&d, "corrupt_shard");
+    let spath = d.join("corrupt_shard.layer001.ftns");
+    let mut bytes = std::fs::read(&spath).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40; // same length, different payload
+    std::fs::write(&spath, &bytes).unwrap();
+    let mut m = manifest();
+    m.register_compact(&jp).unwrap();
+    let err = m.compact_weights("corrupt_shard").unwrap_err();
+    assert!(
+        format!("{err:#}").contains("checksum mismatch"),
+        "{err:#}"
+    );
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn missing_shard_file_rejected_at_registration() {
+    let d = tmpdir("missing");
+    let jp = make_sharded_artifact(&d, "missing_shard");
+    std::fs::remove_file(d.join("missing_shard.layer001.ftns")).unwrap();
+    let mut m = manifest();
+    let err = match m.register_compact(&jp) {
+        Err(e) => e,
+        Ok(_) => panic!("artifact with a missing shard registered"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("missing shard file"), "unhelpful error: {msg}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn shard_index_layer_count_mismatch_rejected() {
+    let d = tmpdir("idx");
+    let jp = make_sharded_artifact(&d, "idx_shard");
+    // drop the last shard entry from the index (json stays well-formed)
+    let j = Json::parse(&std::fs::read_to_string(&jp).unwrap()).unwrap();
+    let mut obj = j.as_obj().unwrap().clone();
+    let shards = obj["shards"].as_arr().unwrap().to_vec();
+    obj.insert(
+        "shards".to_string(),
+        Json::Arr(shards[..shards.len() - 1].to_vec()),
+    );
+    std::fs::write(&jp, Json::Obj(obj).pretty()).unwrap();
+    let mut m = manifest();
+    let err = m.register_compact(&jp).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("index/layer-count mismatch"),
+        "{err:#}"
+    );
+    std::fs::remove_dir_all(&d).ok();
+}
+
+/// Two descriptors declaring the same model name must fail the manifest
+/// scan loudly instead of silently overwriting each other (the
+/// `register_compact` duplicate-name fix).
+#[test]
+fn duplicate_compact_names_rejected_at_scan() {
+    let d = tmpdir("dup");
+    std::fs::copy(
+        fasp::artifacts_dir().join("manifest.json"),
+        d.join("manifest.json"),
+    )
+    .unwrap();
+    let cdir = d.join("compact");
+    let cm = make_compact("llama_tiny", "dup_model", 9);
+    compact::save_compact(&cdir, &cm).unwrap();
+    // a second descriptor file declaring the same name
+    std::fs::copy(
+        cdir.join("dup_model.compact.json"),
+        cdir.join("zz_dup.compact.json"),
+    )
+    .unwrap();
+    let err = match Manifest::load(&d) {
+        Err(e) => e,
+        Ok(_) => panic!("duplicate compact names accepted"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("multiple descriptors"), "unhelpful error: {msg}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+// ---- compact-aware kernel metrics ---------------------------------------
+
+/// Registering a compact model synthesizes `wanda_metric_{m}x{n}`
+/// entries for its sliced shapes, and the kernel path computes the same
+/// scores as the host metric — no more once-per-shape fallback warning
+/// for freshly exported models.
+#[test]
+fn compact_registration_synthesizes_metric_entries() {
+    let name = "lt_store_metric";
+    let cm = make_compact("llama_tiny", name, 21);
+    let d = tmpdir("metric");
+    let jp = compact::save_compact_sharded(&d, &cm).unwrap();
+    let mut m = manifest();
+    m.register_compact(&jp).unwrap();
+    let spec = m.model(name).unwrap().clone();
+    let dm = spec.d_model;
+    for l in 0..spec.n_layers {
+        for n in [spec.d_ff_l(l), spec.d_ov_l(l)] {
+            // both orientations: pipeline scores [d, n], the wanda_struct
+            // baseline scores the transposed [n, d] operators
+            for key in [
+                format!("wanda_metric_{dm}x{n}"),
+                format!("wanda_metric_{n}x{dm}"),
+            ] {
+                assert!(m.artifacts.contains_key(&key), "no synthesized {key} entry");
+            }
+        }
+    }
+    // the sliced FFN shape is not a dense zoo shape, so it must have been
+    // synthesized here — and it must agree with the host metric exactly
+    let f0 = spec.d_ff_l(0);
+    assert!(f0 < spec.d_ff, "mask did not slice layer 0");
+    let mut rng = fasp::util::rng::Rng::new(2);
+    let w = Tensor::randn(&[dm, f0], 1.0, &mut rng);
+    let xnorm: Vec<f32> = (0..f0).map(|i| 0.2 + i as f32 * 1e-3).collect();
+    let km = KernelMetric::new(&m);
+    let scores = km.wanda_scores(&w, &xnorm).unwrap();
+    assert!(bits_eq(&scores, &wanda_scores_host(&w, &xnorm)));
+    std::fs::remove_dir_all(&d).ok();
+}
+
+// ---- export-mode env axis ------------------------------------------------
+
+/// `verify.sh` runs the tier-1 suite under both `FASP_EXPORT=monolithic`
+/// and `FASP_EXPORT=sharded`; this round trip follows the ambient mode
+/// through `save_compact_auto`, so both storage paths get end-to-end
+/// coverage from the same test.
+#[test]
+fn auto_export_roundtrip_in_ambient_mode() {
+    let name = "lt_store_auto";
+    let cm = make_compact("llama_tiny", name, 8);
+    let d = tmpdir("auto");
+    let jp = compact::save_compact_auto(&d, &cm).unwrap();
+    let re = compact::load_compact(&jp).unwrap();
+    assert!(bits_eq(&re.weights.packed.data, &cm.weights.packed.data));
+    let mut m = manifest();
+    let registered = m.register_compact(&jp).unwrap();
+    assert_eq!(registered, name);
+    let lw = m.compact_weights(name).unwrap();
+    assert!(bits_eq(&lw.packed.data, &cm.weights.packed.data));
+    std::fs::remove_dir_all(&d).ok();
+}

@@ -1,28 +1,35 @@
 #!/usr/bin/env bash
 # Tier-1 verification + perf check for CI and pre-merge runs:
 #   1. release build
-#   2. full test suite (quiet), twice: FASP_THREADS=1 pins the serial
-#      HostBackend; the default run exercises ThreadedHostBackend at the
-#      machine's width. Outputs are bit-identical by contract
-#      (test_backend.rs), so both runs must pass identically.
+#   2. full test suite (quiet), twice, crossing both matrix axes:
+#      - FASP_THREADS=1 + FASP_EXPORT=monolithic pins the serial
+#        HostBackend and the classic one-file compact export;
+#      - the default (threaded) run sets FASP_EXPORT=sharded so the
+#        env-sensitive export paths (save_compact_auto, `fasp compact`)
+#        exercise the sharded store.
+#      Outputs are bit-identical by contract across both axes
+#      (test_backend.rs for threads, test_store.rs for storage), so both
+#      runs must pass identically.
 #   3. bench_prune_time in check mode — a shrunk matrix that writes
 #      BENCH_prune_time.json (method mean times + the repack stage's
 #      fraction of prune wall-time) so perf regressions in the pruning
 #      or compact-repack paths show up as a diffable artifact.
 #   4. bench_hot_paths in check mode — writes BENCH_host_threads.json
-#      (single vs threaded host_exec fwd latency + bitwise identity) so
-#      backend-parallelism regressions are diffable too.
+#      (single vs threaded host_exec fwd latency + bitwise identity) and
+#      BENCH_shard_stream.json (shard load time, streamed vs monolithic
+#      fwd latency, peak-resident-weights estimate) so backend-
+#      parallelism and shard-streaming regressions are diffable too.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== cargo test -q (FASP_THREADS=1, serial reference backend) =="
-FASP_THREADS=1 cargo test -q
+echo "== cargo test -q (FASP_THREADS=1, serial backend; monolithic export) =="
+FASP_THREADS=1 FASP_EXPORT=monolithic cargo test -q
 
-echo "== cargo test -q (default threaded backend) =="
-cargo test -q
+echo "== cargo test -q (default threaded backend; sharded export) =="
+FASP_EXPORT=sharded cargo test -q
 
 echo "== bench_prune_time (check mode) =="
 FASP_BENCH_CHECK=1 cargo bench --bench bench_prune_time
@@ -33,3 +40,4 @@ FASP_BENCH_CHECK=1 cargo bench --bench bench_hot_paths
 echo "== verify OK =="
 [ -f BENCH_prune_time.json ] && echo "perf record: BENCH_prune_time.json"
 [ -f BENCH_host_threads.json ] && echo "perf record: BENCH_host_threads.json"
+[ -f BENCH_shard_stream.json ] && echo "perf record: BENCH_shard_stream.json"
