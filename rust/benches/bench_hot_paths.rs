@@ -6,9 +6,12 @@
 //!
 //! `FASP_BENCH_CHECK=1` shrinks the matrix AND writes
 //! `BENCH_host_threads.json` (single/threaded fwd latency + bitwise
-//! identity) plus `BENCH_shard_stream.json` (shard load time, streamed
-//! vs monolithic fwd latency, peak-resident-weights estimate) so CI can
-//! diff backend-parallelism and shard-streaming regressions.
+//! identity), `BENCH_shard_stream.json` (shard load time, streamed
+//! vs monolithic fwd latency, peak-resident-weights estimate) and
+//! `BENCH_decode.json` (KV-cached decode: prefill + per-token latency
+//! dense vs OV-sliced compact, the naive re-forward baseline, resident
+//! KV bytes) so CI can diff backend-parallelism, shard-streaming and
+//! decode-path regressions.
 
 use fasp::bench_support::Bencher;
 use fasp::data::{Corpus, Dataset};
@@ -192,6 +195,103 @@ fn main() {
                 ("identical", Json::Bool(cmp.identical)),
             ]);
             let path = fasp::repo_root().join("BENCH_shard_stream.json");
+            std::fs::write(&path, record.pretty()).unwrap();
+            println!("record → {}", path.display());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // ---- KV-cached decode: dense vs compact, cached vs re-forward --------
+    // Export a compact model with BOTH FFN and OV slicing (OV is what
+    // shrinks the value cache), then compare autoregressive decode:
+    // prefill + per-token latency dense vs compact, the naive O(prefix²)
+    // re-forward baseline, and the resident KV bytes of each cache.
+    if let Ok(mut manifest) = Manifest::load(&fasp::artifacts_dir()) {
+        let model = "llama_small";
+        let spec = manifest.model(model).expect("llama_small in manifest").clone();
+        let w = Weights::init(&spec, 13);
+        let dh = spec.head_dim();
+        let mut mask = fasp::model::PruneMask::full(&spec);
+        for l in 0..spec.n_layers {
+            for j in 0..spec.d_ff / 4 {
+                mask.layers[l].ffn[(j * 3 + l) % spec.d_ff] = false;
+            }
+            // slice a quarter of every head's value dims — the KV-cache
+            // shrink FASP's OV pruning promises
+            for hi in 0..spec.n_heads {
+                for j in 0..dh / 4 {
+                    mask.layers[l].ov[hi * dh + (j * 3 + l) % dh] = false;
+                }
+            }
+        }
+        let cm =
+            fasp::model::compact::compact_from_mask(&w, &mask, "bench_decode").unwrap();
+        let dir = std::env::temp_dir().join("fasp_bench_decode");
+        let _ = std::fs::remove_dir_all(&dir);
+        let jp = fasp::model::compact::save_compact(&dir, &cm).unwrap();
+        manifest.register_compact(&jp).unwrap();
+        let cw = manifest.compact_weights("bench_decode").unwrap();
+
+        let (prompt_len, max_new) = (32usize, if check { 8 } else { 16 });
+        let reps = if check { 3 } else { 10 };
+        let cmp = fasp::eval::speed::compare_decode(
+            &manifest,
+            model,
+            &w,
+            "bench_decode",
+            &cw,
+            prompt_len,
+            max_new,
+            reps,
+        )
+        .unwrap();
+        assert!(
+            cmp.identical,
+            "cached decode tokens diverged from the full re-forward — decode broken"
+        );
+        assert!(
+            cmp.compact_kv_bytes < cmp.dense_kv_bytes,
+            "OV-sliced KV cache ({}) not below dense ({})",
+            cmp.compact_kv_bytes,
+            cmp.dense_kv_bytes
+        );
+        println!(
+            "\ndecode {model}: prefill dense {:.3}ms vs compact {:.3}ms; per-token \
+             dense {:.3}ms vs compact {:.3}ms ({:.2}x); re-forward baseline \
+             {:.3}ms/tok ({:.2}x vs cached); kv dense {:.2}KB vs compact \
+             {:.2}KB; cached ≡ re-forward: {}",
+            cmp.dense_prefill_ms,
+            cmp.compact_prefill_ms,
+            cmp.dense_per_token_ms,
+            cmp.compact_per_token_ms,
+            cmp.per_token_speedup,
+            cmp.dense_reforward_per_token_ms,
+            cmp.cache_speedup,
+            cmp.dense_kv_bytes as f64 / 1e3,
+            cmp.compact_kv_bytes as f64 / 1e3,
+            cmp.identical
+        );
+        if check {
+            let record = Json::obj(vec![
+                ("bench", Json::Str("decode".into())),
+                ("model", Json::Str(model.into())),
+                ("prompt_len", Json::Num(cmp.prompt_len as f64)),
+                ("decode_steps", Json::Num(cmp.steps as f64)),
+                ("dense_prefill_ms", Json::Num(cmp.dense_prefill_ms)),
+                ("compact_prefill_ms", Json::Num(cmp.compact_prefill_ms)),
+                ("dense_per_token_ms", Json::Num(cmp.dense_per_token_ms)),
+                ("compact_per_token_ms", Json::Num(cmp.compact_per_token_ms)),
+                (
+                    "dense_reforward_per_token_ms",
+                    Json::Num(cmp.dense_reforward_per_token_ms),
+                ),
+                ("per_token_speedup", Json::Num(cmp.per_token_speedup)),
+                ("cache_speedup", Json::Num(cmp.cache_speedup)),
+                ("dense_kv_bytes", Json::Num(cmp.dense_kv_bytes as f64)),
+                ("compact_kv_bytes", Json::Num(cmp.compact_kv_bytes as f64)),
+                ("identical", Json::Bool(cmp.identical)),
+            ]);
+            let path = fasp::repo_root().join("BENCH_decode.json");
             std::fs::write(&path, record.pretty()).unwrap();
             println!("record → {}", path.display());
         }

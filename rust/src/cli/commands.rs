@@ -362,6 +362,109 @@ pub fn shard(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fasp generate`: batched KV-cached autoregressive generation from a
+/// corpus prompt — greedy by default, seeded top-k with `--top-k`.
+/// Works on zoo models (checkpoint-trained, or `--init` fresh weights)
+/// and on registered compact models; `--stream` decodes a *sharded*
+/// compact model straight from its shard store.
+pub fn generate(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let model = model_arg(args)?;
+    let batch = args.get_usize("batch", 1)?;
+    let prompt_len = args.get_usize("prompt-len", 16)?;
+    let max_new = args.get_usize("max-new", 32)?;
+    let top_k = args.get_usize("top-k", 0)?;
+    let temperature = args.get_f64("temperature", 1.0)? as f32;
+    let m = &ctx.manifest;
+
+    // weight source: --stream never assembles the monolithic weights —
+    // the whole point of decoding from the shard store is O(one layer)
+    // weight residency
+    enum Src {
+        Resident(crate::model::Weights),
+        Streamed(crate::runtime::ShardedWeights),
+    }
+    let (session, src) = if args.has("stream") {
+        (Session::new(m, &model)?, Src::Streamed(m.compact_store(&model)?))
+    } else if m.compact.contains_key(&model) {
+        (Session::new(m, &model)?, Src::Resident(m.compact_weights(&model)?))
+    } else if args.has("init") {
+        // deterministic fresh weights: the decode-path smoke needs no
+        // checkpoint or training run
+        let session = Session::new(m, &model)?;
+        let w = crate::model::Weights::init(&session.spec, ctx.seed);
+        (session, Src::Resident(w))
+    } else {
+        let p = ctx.prepared(&model)?;
+        (p.session, Src::Resident(p.weights))
+    };
+    let spec = session.spec.clone();
+    anyhow::ensure!(
+        spec.family != "opt" || prompt_len + max_new <= spec.seq + 1,
+        "OPT position embeddings cover {} positions; shrink --prompt-len/--max-new",
+        spec.seq
+    );
+
+    let corpus = Corpus::new(spec.vocab, ctx.seed ^ spec.vocab as u64);
+    let prompt = Dataset::new(corpus, batch, prompt_len, 2).valid_batches(1)[0]
+        .tokens
+        .clone();
+    let sampler = if top_k == 0 {
+        crate::model::Sampler::Greedy
+    } else {
+        crate::model::Sampler::TopK { k: top_k, temperature }
+    };
+    let opts = crate::model::GenerateOpts { max_new, sampler, seed: ctx.seed };
+
+    let gen = match &src {
+        Src::Resident(w) => session.generate(w, &prompt, &opts)?,
+        Src::Streamed(store) => session.generate_streamed(store, &prompt, &opts)?,
+    };
+
+    let row0 = gen.tokens.data[..gen.prompt_len + gen.generated].to_vec();
+    let fmt_ids = |ids: &[i32]| {
+        ids.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ")
+    };
+    println!("prompt    [{}]", fmt_ids(&row0[..gen.prompt_len]));
+    println!("generated [{}]", fmt_ids(&row0[gen.prompt_len..]));
+
+    let mut t = Table::new(
+        &format!(
+            "Decode — {model} ({}), batch {batch}, {} sampling",
+            session.backend().name(),
+            if top_k == 0 { "greedy".to_string() } else { format!("top-{top_k}") }
+        ),
+        &["phase", "wall", "per token", "throughput"],
+    );
+    t.row(vec![
+        format!("prefill x{prompt_len}"),
+        format!("{:.3}ms", gen.prefill_s * 1e3),
+        format!("{:.3}ms", gen.prefill_s * 1e3 / prompt_len.max(1) as f64),
+        format!(
+            "{:.0} tok/s",
+            batch as f64 * prompt_len as f64 / gen.prefill_s.max(1e-12)
+        ),
+    ]);
+    t.row(vec![
+        format!("decode x{}", gen.steps),
+        format!("{:.3}ms", gen.decode_s * 1e3),
+        format!("{:.3}ms", gen.per_token_s() * 1e3),
+        format!(
+            "{:.0} tok/s",
+            batch as f64 * gen.steps as f64 / gen.decode_s.max(1e-12)
+        ),
+    ]);
+    t.print();
+    println!(
+        "kv cache: {:.2}KB resident ({} positions x {} layers{})",
+        gen.kv_bytes as f64 / 1e3,
+        prompt_len + max_new - 1,
+        spec.n_layers,
+        if spec.is_uniform() { "" } else { ", OV-sliced" }
+    );
+    Ok(())
+}
+
 pub fn zeroshot(args: &Args) -> Result<()> {
     let ctx = ctx_from(args)?;
     let model = model_arg(args)?;

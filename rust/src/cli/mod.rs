@@ -26,6 +26,10 @@ COMMANDS:
                                checksummed index) and verifies streaming
                                load: bit-identical ppl at O(one layer)
                                peak resident weights
+  generate   --model M         KV-cached autoregressive generation from a
+                               corpus prompt (zoo or compact model):
+                               prefill + per-token decode timings and the
+                               resident KV-cache bytes
   zeroshot   --model M [--method X --sparsity S] zero-shot suites
   tables     --id table1|...|fig4|all            regenerate paper tables
   latency                      sliced decoder-layer latency sweep
@@ -44,6 +48,15 @@ COMMON OPTIONS:
   --export-sharded       (prune) like --export-compact, but always sharded
   --name NAME            compact artifact name (default <model>_<method>_sNN)
   --prune-qk             also prune W_Q/W_K rows (Table 6 ablation)
+  --prompt-len N         (generate) corpus prompt tokens (default 16)
+  --max-new N            (generate) tokens to generate (default 32)
+  --batch N              (generate) sequences decoded in lockstep (default 1)
+  --top-k K              (generate) top-k sampling; 0 = greedy (default 0)
+  --temperature F        (generate) top-k softmax temperature (default 1.0)
+  --init                 (generate) fresh deterministic weights — skip
+                         checkpoint/training (decode smoke tests)
+  --stream               (generate) decode a sharded compact model from
+                         its shard store (layer-streaming weights)
   --sequential           re-capture activations after each pruned layer
   --report               persist a JSON run record under results/reports/
   --out PATH             save the pruned weights as a checkpoint
@@ -71,6 +84,7 @@ pub fn run() -> Result<()> {
         Some("prune") => commands::prune(&args),
         Some("compact") => commands::compact(&args),
         Some("shard") => commands::shard(&args),
+        Some("generate") => commands::generate(&args),
         Some("zeroshot") => commands::zeroshot(&args),
         Some("tables") => commands::tables(&args),
         Some("latency") => commands::latency(&args),

@@ -17,12 +17,19 @@
 //!   `fwd_loss` of a sharded compact export: bit-identical NLL with peak
 //!   resident weights of O(one layer + prefetch) instead of O(model)
 //!   (the receipt the sharded store must produce).
+//! * [`compare_decode`] — KV-cached autoregressive decode, dense vs
+//!   compact on the same prompts, plus the naive O(prefix²) re-forward
+//!   baseline: the compact model must decode faster per token with a
+//!   strictly smaller resident KV cache (the receipt the OV slicing
+//!   must produce at inference; `BENCH_decode.json`).
 
 use crate::data::{Batch, Corpus, Dataset};
+use crate::model::decode::{full_logits, sample_row, GenerateOpts, Sampler};
+use crate::model::weights::DenseParams;
 use crate::model::Weights;
 use crate::runtime::executable::{Artifact, In};
 use crate::runtime::{HostBackend, Manifest, Session, ThreadedHostBackend};
-use crate::tensor::Tensor;
+use crate::tensor::{IntTensor, Tensor};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::sync::Arc;
@@ -191,6 +198,142 @@ pub fn compare_stream_eval(
         model_bytes: store.total_param_bytes(),
         shard_load_ms: snap.load_s * 1e3 / snap.loads.max(1) as f64,
         shards: store.n_shards(),
+        identical,
+    })
+}
+
+/// Dense-vs-compact autoregressive decode comparison on one prompt set
+/// — the receipt FASP's OV slicing must produce at inference: smaller
+/// per-token matvecs *and* a smaller resident KV cache.
+pub struct DecodeCompare {
+    pub prompt_len: usize,
+    /// Cached decode steps timed per generation (`max_new - 1`).
+    pub steps: usize,
+    pub dense_prefill_ms: f64,
+    pub compact_prefill_ms: f64,
+    /// Mean cached-decode wall-time per token, best generation of reps.
+    pub dense_per_token_ms: f64,
+    pub compact_per_token_ms: f64,
+    /// Mean per-token wall-time of naive generation (full-prefix
+    /// re-forward per token) on the dense model — the O(prefix²)
+    /// baseline the KV cache replaces.
+    pub dense_reforward_per_token_ms: f64,
+    /// dense / compact cached per-token latency.
+    pub per_token_speedup: f64,
+    /// reforward / cached per-token latency on the dense model.
+    pub cache_speedup: f64,
+    /// Allocated K/V cache bytes per model (same batch + capacity; the
+    /// compact figure is strictly smaller whenever OV dims were sliced).
+    pub dense_kv_bytes: usize,
+    pub compact_kv_bytes: usize,
+    /// Cached greedy tokens bitwise equal to naive-reforward greedy
+    /// tokens on the dense model (the decode correctness receipt).
+    pub identical: bool,
+}
+
+/// Greedy generation by full-prefix re-forward — no cache, O(prefix²):
+/// re-runs the whole growing sequence for every new token. Returns the
+/// generated tokens and the mean per-token seconds.
+fn naive_generate(
+    w: &Weights,
+    prompt: &IntTensor,
+    max_new: usize,
+) -> Result<(IntTensor, f64)> {
+    let (b, t0) = (prompt.shape[0], prompt.shape[1]);
+    let mut seq = prompt.data.clone(); // [b, t] row-major, grows per step
+    let mut t = t0;
+    let mut steps = 0usize;
+    let t_start = std::time::Instant::now();
+    let mut rng = Rng::new(0); // greedy consumes no randomness
+    for _ in 0..max_new {
+        let toks = IntTensor::new(vec![b, t], seq.clone());
+        let logits = full_logits(&mut DenseParams(w), &toks)?;
+        let mut grown = Vec::with_capacity(b * (t + 1));
+        for bi in 0..b {
+            grown.extend_from_slice(&seq[bi * t..(bi + 1) * t]);
+            grown.push(sample_row(logits.row(bi), Sampler::Greedy, &mut rng) as i32);
+        }
+        seq = grown;
+        t += 1;
+        steps += 1;
+    }
+    let per_token = t_start.elapsed().as_secs_f64() / steps.max(1) as f64;
+    Ok((IntTensor::new(vec![b, t], seq), per_token))
+}
+
+/// Best-of-`reps` greedy generation; returns (tokens, prefill_ms,
+/// per_token_ms, kv_bytes).
+fn time_generate(
+    session: &Session,
+    w: &Weights,
+    prompt: &IntTensor,
+    max_new: usize,
+    reps: usize,
+) -> Result<(IntTensor, f64, f64, usize)> {
+    let opts = GenerateOpts { max_new, sampler: Sampler::Greedy, seed: 0 };
+    let mut best_pre = f64::INFINITY;
+    let mut best_tok = f64::INFINITY;
+    let mut out = None;
+    for _ in 0..reps.max(1) + 1 {
+        // first iteration doubles as warmup; still recorded via min
+        let gen = session.generate(w, prompt, &opts)?;
+        best_pre = best_pre.min(gen.prefill_s * 1e3);
+        best_tok = best_tok.min(gen.per_token_s() * 1e3);
+        out = Some((gen.tokens, gen.kv_bytes));
+    }
+    let (tokens, kv) = out.expect("reps >= 1");
+    Ok((tokens, best_pre, best_tok, kv))
+}
+
+/// Measure KV-cached decode on a dense model vs its compact export on
+/// the same prompt set (same token batch, same generation length), plus
+/// the naive re-forward baseline on the dense model. Greedy throughout,
+/// so the cached-vs-naive token identity doubles as the correctness
+/// receipt.
+pub fn compare_decode(
+    manifest: &Manifest,
+    dense_model: &str,
+    dense_w: &Weights,
+    compact_model: &str,
+    compact_w: &Weights,
+    prompt_len: usize,
+    max_new: usize,
+    reps: usize,
+) -> Result<DecodeCompare> {
+    anyhow::ensure!(max_new >= 2, "compare_decode wants max_new >= 2");
+    let ds_sess = Session::new(manifest, dense_model)?;
+    let cs_sess = Session::new(manifest, compact_model)?;
+    let spec = ds_sess.spec.clone();
+    anyhow::ensure!(
+        cs_sess.spec.vocab == spec.vocab,
+        "dense and compact models must share a vocab"
+    );
+    let ds = Dataset::new(Corpus::new(spec.vocab, 0xdec0de), spec.batch, prompt_len, 2);
+    let prompt = ds.train_batch(0).tokens;
+
+    let (dense_toks, dense_prefill_ms, dense_per_token_ms, dense_kv_bytes) =
+        time_generate(&ds_sess, dense_w, &prompt, max_new, reps)?;
+    let (_, compact_prefill_ms, compact_per_token_ms, compact_kv_bytes) =
+        time_generate(&cs_sess, compact_w, &prompt, max_new, reps)?;
+    let (naive_toks, dense_reforward_per_token_ms) = {
+        let _exec = ds_sess.exec_scope();
+        let (toks, per_s) = naive_generate(dense_w, &prompt, max_new)?;
+        (toks, per_s * 1e3)
+    };
+    let identical = dense_toks.data == naive_toks.data;
+
+    Ok(DecodeCompare {
+        prompt_len,
+        steps: max_new - 1,
+        dense_prefill_ms,
+        compact_prefill_ms,
+        dense_per_token_ms,
+        compact_per_token_ms,
+        dense_reforward_per_token_ms,
+        per_token_speedup: dense_per_token_ms / compact_per_token_ms,
+        cache_speedup: dense_reforward_per_token_ms / dense_per_token_ms,
+        dense_kv_bytes,
+        compact_kv_bytes,
         identical,
     })
 }

@@ -1,0 +1,699 @@
+//! KV-cached autoregressive decode: the inference path where FASP's OV
+//! slicing actually pays off (smaller per-token matvecs *and* a smaller
+//! resident value cache — SlimGPT/FLAP's motivation for structured
+//! pruning).
+//!
+//! Pieces:
+//! * [`KvCache`] — per-layer K/V ring buffers sized by each layer's
+//!   **sliced** dims: keys keep the full `n_heads·head_dim` width (FASP
+//!   leaves Q/K dense), values are `d_ov_l` wide with the per-head
+//!   column blocks given by `head_splits_l`. Buffers are preallocated at
+//!   a fixed capacity with resident-byte accounting ([`KvCache::kv_bytes`],
+//!   the decode-memory receipt); writing past capacity is a loud error,
+//!   never a silent wrap.
+//! * [`prefill_src`] — one full-prompt forward that populates the cache
+//!   (keys stored post-RoPE at their absolute positions) and returns the
+//!   last-position logits.
+//! * [`decode_step_src`] — one token per sequence against the cache:
+//!   O(prefix) work per token (single-row linears + one attention row
+//!   per head) instead of the O(prefix²) full re-forward.
+//! * [`generate_src`] / [`Sampler`] — the batched generation loop with
+//!   greedy and seeded top-k sampling.
+//!
+//! Determinism contract (locked by `rust/tests/test_decode.rs`): the
+//! cached step shares every kernel with the full forward — `attn_row`
+//! for the attention row, `linear`/`matmul_bt` (whose single-row path
+//! keeps the blocked reduction order) for the matvecs, `rope_row` on
+//! the same cached tables — so `decode_step_src` logits are
+//! **bit-identical** to a full-prefix re-forward at every position, on
+//! every backend pool width, from every [`ParamSource`] (dense weights,
+//! compact weights, sharded [`crate::runtime::store::StreamingParams`]).
+
+use super::host::{
+    attention, attn_out_residual, attn_row, embed_tokens, ffn_sublayer, head_logits,
+    norm_input, qkv_proj, rope_cached, rope_row,
+};
+use super::weights::ParamSource;
+use crate::runtime::manifest::ModelSpec;
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// One layer's K/V buffers.
+struct LayerKv {
+    /// Post-RoPE keys, [batch, cap, n_heads·head_dim] row-major (Q/K
+    /// stay dense under FASP, so this width never shrinks).
+    k: Vec<f32>,
+    /// Values, [batch, cap, d_ov_l] — the layer's sliced width; this is
+    /// where OV pruning shrinks the resident cache.
+    v: Vec<f32>,
+    /// Kept V dims per head (prefix sums give each head's column block).
+    splits: Vec<usize>,
+    /// Σ splits — the layer's value width.
+    dv: usize,
+}
+
+/// Preallocated per-layer K/V ring buffers for one decode session.
+/// Geometry is pinned to one model spec at construction; every
+/// prefill/step re-checks it, so a cache built for one model can never
+/// silently serve another (mismatched layer dims are a hard error).
+pub struct KvCache {
+    model: String,
+    family: String,
+    d_model: usize,
+    n_heads: usize,
+    head_dim: usize,
+    kdim: usize,
+    batch: usize,
+    cap: usize,
+    len: usize,
+    layers: Vec<LayerKv>,
+}
+
+impl KvCache {
+    /// Allocate buffers for `batch` sequences of up to `capacity`
+    /// positions under `spec`'s (per-layer, possibly sliced) dims.
+    pub fn for_spec(spec: &ModelSpec, batch: usize, capacity: usize) -> Result<KvCache> {
+        anyhow::ensure!(batch >= 1, "kv cache wants batch >= 1");
+        anyhow::ensure!(capacity >= 1, "kv cache wants capacity >= 1");
+        if spec.family == "opt" {
+            anyhow::ensure!(
+                capacity <= spec.seq,
+                "kv cache capacity {capacity} exceeds the {} learned \
+                 positions of OPT model '{}' (pos_emb covers seq={})",
+                spec.seq,
+                spec.name,
+                spec.seq
+            );
+        }
+        let head_dim = spec.head_dim();
+        let kdim = spec.n_heads * head_dim;
+        let layers = (0..spec.n_layers)
+            .map(|l| {
+                let splits = spec.head_splits_l(l);
+                let dv: usize = splits.iter().sum();
+                LayerKv {
+                    k: vec![0.0; batch * capacity * kdim],
+                    v: vec![0.0; batch * capacity * dv],
+                    splits,
+                    dv,
+                }
+            })
+            .collect();
+        Ok(KvCache {
+            model: spec.name.clone(),
+            family: spec.family.clone(),
+            d_model: spec.d_model,
+            n_heads: spec.n_heads,
+            head_dim,
+            kdim,
+            batch,
+            cap: capacity,
+            len: 0,
+            layers,
+        })
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Cached positions so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Forget all cached positions (buffers stay allocated).
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Allocated resident bytes of the K/V buffers — the decode-memory
+    /// receipt: V buffers are sized by each layer's sliced `d_ov`, so an
+    /// OV-pruned compact model's cache is strictly smaller than its
+    /// dense base at the same capacity.
+    pub fn kv_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| (l.k.len() + l.v.len()) * std::mem::size_of::<f32>())
+            .sum()
+    }
+
+    /// Bytes of `kv_bytes` actually holding live positions.
+    pub fn used_bytes(&self) -> usize {
+        if self.cap == 0 {
+            return 0;
+        }
+        self.kv_bytes() / self.cap * self.len
+    }
+
+    /// The cache only ever serves the exact spec it was built for.
+    fn check_spec(&self, spec: &ModelSpec, batch: usize) -> Result<()> {
+        anyhow::ensure!(
+            self.model == spec.name,
+            "kv cache was built for model '{}' but the forward is running \
+             '{}' — cache/model mismatch",
+            self.model,
+            spec.name
+        );
+        anyhow::ensure!(
+            self.family == spec.family
+                && self.d_model == spec.d_model
+                && self.n_heads == spec.n_heads
+                && self.layers.len() == spec.n_layers,
+            "kv cache geometry (d={}, heads={}, layers={}) does not match \
+             model '{}' — mismatched layer dims",
+            self.d_model,
+            self.n_heads,
+            self.layers.len(),
+            spec.name
+        );
+        for (l, lay) in self.layers.iter().enumerate() {
+            let want = spec.head_splits_l(l);
+            anyhow::ensure!(
+                lay.splits == want,
+                "kv cache layer {l}: head splits {:?} != model '{}' splits \
+                 {:?} — mismatched layer dims",
+                lay.splits,
+                spec.name,
+                want
+            );
+        }
+        anyhow::ensure!(
+            self.batch == batch,
+            "kv cache batch {} != input batch {batch}",
+            self.batch
+        );
+        Ok(())
+    }
+
+    /// Store one position's K/V rows ([batch, kdim] / [batch, dv]) for
+    /// layer `l`. Keys must already be RoPE-rotated at `pos`.
+    fn write_pos(&mut self, l: usize, pos: usize, k_rows: &Tensor, v_rows: &Tensor) {
+        let (kdim, cap, batch) = (self.kdim, self.cap, self.batch);
+        let lay = &mut self.layers[l];
+        let dv = lay.dv;
+        for bi in 0..batch {
+            let ko = (bi * cap + pos) * kdim;
+            lay.k[ko..ko + kdim].copy_from_slice(k_rows.row(bi));
+            let vo = (bi * cap + pos) * dv;
+            lay.v[vo..vo + dv].copy_from_slice(v_rows.row(bi));
+        }
+    }
+
+    /// Store a whole prompt's K/V rows ([batch·t, kdim] / [batch·t, dv])
+    /// for layer `l`, position `ti` of row `bi` landing at slot
+    /// `bi·cap + ti`. Keys must already be RoPE-rotated per position.
+    fn write_prefill(&mut self, l: usize, t: usize, k_rows: &Tensor, v_rows: &Tensor) {
+        let (kdim, cap, batch) = (self.kdim, self.cap, self.batch);
+        let lay = &mut self.layers[l];
+        let dv = lay.dv;
+        for bi in 0..batch {
+            for ti in 0..t {
+                let r = bi * t + ti;
+                let ko = (bi * cap + ti) * kdim;
+                lay.k[ko..ko + kdim].copy_from_slice(k_rows.row(r));
+                let vo = (bi * cap + ti) * dv;
+                lay.v[vo..vo + dv].copy_from_slice(v_rows.row(r));
+            }
+        }
+    }
+}
+
+fn validate_ids(tokens: &IntTensor, vocab: usize) -> Result<()> {
+    for &id in &tokens.data {
+        anyhow::ensure!(
+            id >= 0 && (id as usize) < vocab,
+            "token id {id} outside vocab {vocab}"
+        );
+    }
+    Ok(())
+}
+
+/// Scalar geometry pulled out of a spec up front (the source hands out
+/// tensors through `&mut self` afterwards).
+struct Geom {
+    d: usize,
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    vocab: usize,
+    is_opt: bool,
+    head_splits: Vec<Vec<usize>>,
+}
+
+impl Geom {
+    fn of(spec: &ModelSpec) -> Geom {
+        Geom {
+            d: spec.d_model,
+            n_layers: spec.n_layers,
+            n_heads: spec.n_heads,
+            head_dim: spec.head_dim(),
+            vocab: spec.vocab,
+            is_opt: spec.family == "opt",
+            head_splits: (0..spec.n_layers).map(|l| spec.head_splits_l(l)).collect(),
+        }
+    }
+}
+
+/// Full-prompt forward shared by [`prefill_src`] (cache = Some) and
+/// [`full_logits`] (cache = None): embeds `tokens`, runs every layer
+/// through the same building blocks `forward_nll_src` executes
+/// (`norm_input`/`qkv_proj`/`attention`/`attn_out_residual`/
+/// `ffn_sublayer` — shared code, nothing mirrored), and returns the
+/// **last-position logits** [b, vocab]. With a cache, each layer's
+/// post-RoPE keys and values are stored at their absolute positions.
+fn forward_last_logits<S: ParamSource>(
+    src: &mut S,
+    tokens: &IntTensor,
+    mut cache: Option<&mut KvCache>,
+) -> Result<Tensor> {
+    let g = Geom::of(src.spec());
+    let (b, t) = (tokens.shape[0], tokens.shape[1]);
+    let rows = b * t;
+    validate_ids(tokens, g.vocab)?;
+
+    let (mut x, tok_emb) = embed_tokens(src, tokens, g.d, g.is_opt, 0)?;
+    let rope = rope_cached(t, g.head_dim);
+    let (cos, sin): (&[f32], &[f32]) = (&rope.0, &rope.1);
+
+    for l in 0..g.n_layers {
+        // ---- attention
+        let x_ln = norm_input(src, l, "ln1", &x, g.d, g.is_opt)?;
+        let (q, k, v) = qkv_proj(src, l, &x_ln, g.is_opt)?;
+        if let Some(c) = cache.as_deref_mut() {
+            // keys cache post-RoPE at their absolute positions — the
+            // same per-row rotation `attention` applies to its gathered
+            // buffers, so cached rows are bitwise the rows a re-forward
+            // would rebuild
+            let mut kc = k.clone();
+            if !g.is_opt {
+                for r in 0..rows {
+                    let ti = r % t;
+                    for hi in 0..g.n_heads {
+                        rope_row(
+                            &mut kc.row_mut(r)[hi * g.head_dim..(hi + 1) * g.head_dim],
+                            g.head_dim,
+                            ti,
+                            cos,
+                            sin,
+                        );
+                    }
+                }
+            }
+            c.write_prefill(l, t, &kc, &v);
+        }
+        let ctx = attention(
+            b,
+            t,
+            g.n_heads,
+            g.head_dim,
+            &g.head_splits[l],
+            &q,
+            &k,
+            &v,
+            cos,
+            sin,
+            !g.is_opt,
+        );
+        attn_out_residual(src, l, &ctx, &mut x)?;
+        ffn_sublayer(src, l, &mut x, g.d, g.is_opt)?;
+        src.layer_done(l)?;
+    }
+    if let Some(c) = cache {
+        c.len = t;
+    }
+
+    // last position of each sequence → final norm → logits
+    let mut last = Tensor::zeros(&[b, g.d]);
+    for bi in 0..b {
+        last.row_mut(bi).copy_from_slice(x.row(bi * t + t - 1));
+    }
+    head_logits(src, last, g.d, g.is_opt, &tok_emb)
+}
+
+/// Run the whole prompt through the model once, populating `cache`
+/// (which must be empty and match the source's spec), and return the
+/// last-position logits [b, vocab].
+pub fn prefill_src<S: ParamSource>(
+    src: &mut S,
+    tokens: &IntTensor,
+    cache: &mut KvCache,
+) -> Result<Tensor> {
+    anyhow::ensure!(
+        tokens.shape.len() == 2 && tokens.shape[1] >= 1,
+        "prefill wants [b, t] tokens with t >= 1, got shape {:?}",
+        tokens.shape
+    );
+    let (b, t) = (tokens.shape[0], tokens.shape[1]);
+    cache.check_spec(src.spec(), b)?;
+    anyhow::ensure!(
+        cache.len == 0,
+        "prefill wants an empty cache (len {}); clear() it first",
+        cache.len
+    );
+    anyhow::ensure!(
+        t <= cache.cap,
+        "kv cache overflow: prompt length {t} exceeds capacity {}",
+        cache.cap
+    );
+    forward_last_logits(src, tokens, Some(cache))
+}
+
+/// Full-prefix logits at the last position via the plain (cache-free)
+/// forward machinery — the O(prefix²) re-forward baseline the decode
+/// tests pin [`decode_step_src`] against, and the naive-generation
+/// reference `eval::speed::compare_decode` times.
+pub fn full_logits<S: ParamSource>(src: &mut S, tokens: &IntTensor) -> Result<Tensor> {
+    anyhow::ensure!(
+        tokens.shape.len() == 2 && tokens.shape[1] >= 1,
+        "full_logits wants [b, t] tokens with t >= 1, got shape {:?}",
+        tokens.shape
+    );
+    forward_last_logits(src, tokens, None)
+}
+
+/// Process one token per sequence (position `cache.len()`) against the
+/// cache: O(prefix) per token — single-row linears plus one attention
+/// row per (sequence, head) — instead of re-running the whole prefix.
+/// Appends the new position's K/V and returns the logits [b, vocab].
+///
+/// The per-(sequence, head) cache attention fans out on the ambient
+/// worker pool (the session backend's) with the fixed block order
+/// `attention` uses, so outputs are bit-identical at every pool width.
+pub fn decode_step_src<S: ParamSource>(
+    src: &mut S,
+    tokens: &IntTensor,
+    cache: &mut KvCache,
+) -> Result<Tensor> {
+    let g = Geom::of(src.spec());
+    let b = cache.batch;
+    anyhow::ensure!(
+        tokens.numel() == b,
+        "decode_step wants one token per sequence ({} tokens for batch {b})",
+        tokens.numel()
+    );
+    cache.check_spec(src.spec(), b)?;
+    let pos = cache.len;
+    anyhow::ensure!(
+        pos < cache.cap,
+        "kv cache overflow: capacity {} exhausted at position {pos}",
+        cache.cap
+    );
+    validate_ids(tokens, g.vocab)?;
+    let (dh, kdim, cap) = (g.head_dim, cache.kdim, cache.cap);
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    // reshape to the [b, 1] layout the shared embed helper wants; the
+    // OPT position row is `pos`
+    let toks = IntTensor::new(vec![b, 1], tokens.data.clone());
+    let (mut x, tok_emb) = embed_tokens(src, &toks, g.d, g.is_opt, pos)?;
+    let rope = rope_cached(pos + 1, dh);
+    let (cos, sin): (&[f32], &[f32]) = (&rope.0, &rope.1);
+
+    for l in 0..g.n_layers {
+        // ---- attention (one row per sequence, against the cache)
+        let x_ln = norm_input(src, l, "ln1", &x, g.d, g.is_opt)?;
+        let (mut q, mut k, v) = qkv_proj(src, l, &x_ln, g.is_opt)?;
+        if !g.is_opt {
+            for bi in 0..b {
+                for hi in 0..g.n_heads {
+                    rope_row(&mut q.row_mut(bi)[hi * dh..(hi + 1) * dh], dh, pos, cos, sin);
+                    rope_row(&mut k.row_mut(bi)[hi * dh..(hi + 1) * dh], dh, pos, cos, sin);
+                }
+            }
+        }
+        cache.write_pos(l, pos, &k, &v);
+
+        let lay = &cache.layers[l];
+        let splits = &lay.splits;
+        let dv = lay.dv;
+        let mut offs = Vec::with_capacity(g.n_heads + 1);
+        let mut acc = 0usize;
+        offs.push(0);
+        for &s in splits {
+            acc += s;
+            offs.push(acc);
+        }
+        let block = |bi: usize, hi: usize| -> Vec<f32> {
+            let dv_h = splits[hi];
+            if dv_h == 0 {
+                return Vec::new(); // fully sliced head: nothing reads it
+            }
+            let qrow = &q.row(bi)[hi * dh..(hi + 1) * dh];
+            let kbuf = &lay.k[bi * cap * kdim..(bi + 1) * cap * kdim];
+            let vbuf = &lay.v[bi * cap * dv..(bi + 1) * cap * dv];
+            let mut out = vec![0.0f32; dv_h];
+            attn_row(qrow, kbuf, kdim, hi * dh, vbuf, dv, offs[hi], pos, dh, dv_h, scale, &mut out);
+            out
+        };
+        let n_blocks = b * g.n_heads;
+        let mut ctx = Tensor::zeros(&[b, dv]);
+        let mut place = |i: usize, blk: Vec<f32>| {
+            let (bi, hi) = (i / g.n_heads, i % g.n_heads);
+            let dv_h = splits[hi];
+            if dv_h == 0 {
+                return;
+            }
+            ctx.row_mut(bi)[offs[hi]..offs[hi] + dv_h].copy_from_slice(&blk);
+        };
+        let pool = crate::util::pool::current();
+        let work = n_blocks * (pos + 1) * (dh + dv / g.n_heads.max(1));
+        if pool.workers() > 1 && n_blocks > 1 && work >= crate::util::pool::PAR_THRESHOLD {
+            let blocks = pool.map(n_blocks, |i| block(i / g.n_heads, i % g.n_heads));
+            for (i, blk) in blocks.into_iter().enumerate() {
+                place(i, blk);
+            }
+        } else {
+            for i in 0..n_blocks {
+                place(i, block(i / g.n_heads, i % g.n_heads));
+            }
+        }
+        attn_out_residual(src, l, &ctx, &mut x)?;
+        // ---- ffn (the shared sublayer, just b rows)
+        ffn_sublayer(src, l, &mut x, g.d, g.is_opt)?;
+        src.layer_done(l)?;
+    }
+    cache.len = pos + 1;
+
+    head_logits(src, x, g.d, g.is_opt, &tok_emb)
+}
+
+// ---------------------------------------------------------------- sampling
+
+/// Next-token selection strategy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sampler {
+    /// Argmax, lowest index wins ties — fully deterministic.
+    Greedy,
+    /// Sample from the `k` highest logits under a temperature-scaled
+    /// softmax, driven by the caller's seeded [`Rng`]. `k = 1`
+    /// degenerates to greedy (and consumes no randomness... almost: it
+    /// draws once, but over a single candidate).
+    TopK { k: usize, temperature: f32 },
+}
+
+/// Pick a token id from one row of logits. Deterministic given the
+/// sampler and the Rng state: ties order by index, candidate order is
+/// (logit desc, index asc).
+pub fn sample_row(logits: &[f32], sampler: Sampler, rng: &mut Rng) -> usize {
+    assert!(!logits.is_empty(), "sample_row: empty logits");
+    match sampler {
+        Sampler::Greedy => {
+            let mut best = 0usize;
+            for (i, &v) in logits.iter().enumerate().skip(1) {
+                if v > logits[best] {
+                    best = i;
+                }
+            }
+            best
+        }
+        Sampler::TopK { k, temperature } => {
+            let k = k.clamp(1, logits.len());
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            idx.sort_unstable_by(|&a, &b| {
+                logits[b]
+                    .partial_cmp(&logits[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            idx.truncate(k);
+            let temp = temperature.max(1e-6) as f64;
+            let m = logits[idx[0]] as f64;
+            let weights: Vec<f64> = idx
+                .iter()
+                .map(|&i| ((logits[i] as f64 - m) / temp).exp())
+                .collect();
+            idx[rng.categorical(&weights)]
+        }
+    }
+}
+
+// --------------------------------------------------------------- generation
+
+/// Batched generation settings.
+#[derive(Clone, Copy, Debug)]
+pub struct GenerateOpts {
+    /// Tokens to generate per sequence (>= 1).
+    pub max_new: usize,
+    pub sampler: Sampler,
+    /// Seed of the sampling [`Rng`] (unused by greedy).
+    pub seed: u64,
+}
+
+impl Default for GenerateOpts {
+    fn default() -> Self {
+        GenerateOpts { max_new: 16, sampler: Sampler::Greedy, seed: 0 }
+    }
+}
+
+/// One finished generation: the prompt plus sampled continuations, with
+/// the per-phase wall-times and the cache-residency receipt.
+pub struct Generation {
+    /// [b, prompt_len + generated] token ids (prompt included).
+    pub tokens: IntTensor,
+    pub prompt_len: usize,
+    pub generated: usize,
+    /// Wall-time of the prompt prefill.
+    pub prefill_s: f64,
+    /// Wall-time of all decode steps (sampling included).
+    pub decode_s: f64,
+    /// Cached decode steps executed (`generated - 1`; the final sampled
+    /// token needs no forward).
+    pub steps: usize,
+    /// Allocated K/V bytes of the cache that served this generation.
+    pub kv_bytes: usize,
+}
+
+impl Generation {
+    /// Mean wall-time per cached decode step, seconds.
+    pub fn per_token_s(&self) -> f64 {
+        self.decode_s / self.steps.max(1) as f64
+    }
+}
+
+/// The generation loop over any [`ParamSource`]: prefill the prompt,
+/// then sample + decode one token at a time. The cache is sized exactly
+/// (`prompt + max_new - 1` positions — the last sampled token is never
+/// fed back). Streaming sources are rewound between passes so their
+/// prefetch pipeline stays live for every step.
+pub fn generate_src<S: ParamSource>(
+    src: &mut S,
+    prompt: &IntTensor,
+    opts: &GenerateOpts,
+) -> Result<Generation> {
+    anyhow::ensure!(
+        prompt.shape.len() == 2 && prompt.shape[1] >= 1,
+        "generate wants [b, t] prompt tokens with t >= 1, got {:?}",
+        prompt.shape
+    );
+    anyhow::ensure!(opts.max_new >= 1, "generate wants max_new >= 1");
+    let (b, t0) = (prompt.shape[0], prompt.shape[1]);
+    let cap = t0 + opts.max_new - 1;
+    let mut cache = KvCache::for_spec(src.spec(), b, cap)?;
+    let mut rng = Rng::new(opts.seed);
+
+    let t_pre = std::time::Instant::now();
+    let mut logits = prefill_src(src, prompt, &mut cache)?;
+    let prefill_s = t_pre.elapsed().as_secs_f64();
+
+    let t_dec = std::time::Instant::now();
+    let mut new_tokens: Vec<i32> = Vec::with_capacity(opts.max_new * b);
+    let mut steps = 0usize;
+    for step in 0..opts.max_new {
+        let mut next = Vec::with_capacity(b);
+        for bi in 0..b {
+            next.push(sample_row(logits.row(bi), opts.sampler, &mut rng) as i32);
+        }
+        new_tokens.extend_from_slice(&next);
+        if step + 1 < opts.max_new {
+            src.rewind()?;
+            let nt = IntTensor::new(vec![b, 1], next);
+            logits = decode_step_src(src, &nt, &mut cache)?;
+            steps += 1;
+        }
+    }
+    let decode_s = t_dec.elapsed().as_secs_f64();
+
+    let total = t0 + opts.max_new;
+    let mut out = Vec::with_capacity(b * total);
+    for bi in 0..b {
+        out.extend_from_slice(&prompt.data[bi * t0..(bi + 1) * t0]);
+        for step in 0..opts.max_new {
+            out.push(new_tokens[step * b + bi]);
+        }
+    }
+    Ok(Generation {
+        tokens: IntTensor::new(vec![b, total], out),
+        prompt_len: t0,
+        generated: opts.max_new,
+        prefill_s,
+        decode_s,
+        steps,
+        kv_bytes: cache.kv_bytes(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_first_argmax() {
+        let mut rng = Rng::new(0);
+        assert_eq!(sample_row(&[0.1, 0.9, 0.9, 0.2], Sampler::Greedy, &mut rng), 1);
+        assert_eq!(sample_row(&[3.0], Sampler::Greedy, &mut rng), 0);
+    }
+
+    #[test]
+    fn top1_equals_greedy() {
+        let mut rng = Rng::new(7);
+        let logits = [0.3f32, -1.0, 2.5, 2.5, 0.0];
+        let g = sample_row(&logits, Sampler::Greedy, &mut rng);
+        for seed in 0..20u64 {
+            let mut r = Rng::new(seed);
+            let s = sample_row(
+                &logits,
+                Sampler::TopK { k: 1, temperature: 0.7 },
+                &mut r,
+            );
+            assert_eq!(s, g, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn topk_stays_inside_the_top_k() {
+        let logits = [5.0f32, 4.0, 3.0, -10.0, -20.0, -30.0];
+        let mut r = Rng::new(11);
+        for _ in 0..200 {
+            let s = sample_row(&logits, Sampler::TopK { k: 3, temperature: 1.0 }, &mut r);
+            assert!(s < 3, "sampled {s} outside top-3");
+        }
+        // same seed → same draws
+        let a: Vec<usize> = {
+            let mut r = Rng::new(5);
+            (0..32)
+                .map(|_| sample_row(&logits, Sampler::TopK { k: 3, temperature: 1.0 }, &mut r))
+                .collect()
+        };
+        let b: Vec<usize> = {
+            let mut r = Rng::new(5);
+            (0..32)
+                .map(|_| sample_row(&logits, Sampler::TopK { k: 3, temperature: 1.0 }, &mut r))
+                .collect()
+        };
+        assert_eq!(a, b);
+    }
+}

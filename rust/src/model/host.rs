@@ -45,12 +45,15 @@ pub(crate) fn rms_norm(x: &mut [f32], d: usize, g: &[f32]) {
     }
 }
 
-/// cos/sin tables [t, dh/2] matching python rope_tables.
-pub(crate) fn rope_tables(t: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
+/// Fill rows [t0, t1) of cos/sin tables laid out [t, dh/2]. Each row
+/// depends only on its own position, never on the table length, so
+/// tables extend append-only with the old prefix untouched — the
+/// invariant the process-wide cache and incremental decode rely on.
+fn fill_rope_rows(cos: &mut Vec<f32>, sin: &mut Vec<f32>, t0: usize, t1: usize, dh: usize) {
     let half = dh / 2;
-    let mut cos = vec![0.0f32; t * half];
-    let mut sin = vec![0.0f32; t * half];
-    for ti in 0..t {
+    cos.resize(t1 * half, 0.0);
+    sin.resize(t1 * half, 0.0);
+    for ti in t0..t1 {
         for k in 0..half {
             let inv_freq = 1.0f64 / 10000f64.powf(k as f64 / half as f64);
             let ang = ti as f64 * inv_freq;
@@ -58,22 +61,69 @@ pub(crate) fn rope_tables(t: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
             sin[ti * half + k] = ang.sin() as f32;
         }
     }
+}
+
+/// cos/sin tables [t, dh/2] matching python rope_tables — the uncached
+/// reference builder ([`rope_cached`] is what the forward paths use;
+/// tests pin the cache's prefix invariance against this).
+pub fn rope_tables(t: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut cos = Vec::new();
+    let mut sin = Vec::new();
+    fill_rope_rows(&mut cos, &mut sin, 0, t, dh);
     (cos, sin)
+}
+
+/// Process-wide RoPE table cache: one monotonically growing table per
+/// head dim, shared by every forward pass and every decode session.
+/// Returns tables with **at least** `t` rows — row-indexed consumers
+/// ([`apply_rope`], [`rope_row`]) never read past the rows they need,
+/// so a longer table is always valid. Replaces the per-`forward_nll`
+/// rebuild (the tables were recomputed on every call) and extends
+/// incrementally (with doubling slack) as decode positions grow.
+pub fn rope_cached(t: usize, dh: usize) -> std::sync::Arc<(Vec<f32>, Vec<f32>)> {
+    use std::collections::BTreeMap;
+    use std::sync::{Arc, Mutex};
+    static CACHE: once_cell::sync::OnceCell<
+        Mutex<BTreeMap<usize, Arc<(Vec<f32>, Vec<f32>)>>>,
+    > = once_cell::sync::OnceCell::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
+    let mut map = cache.lock().expect("rope cache poisoned");
+    let entry = map
+        .entry(dh)
+        .or_insert_with(|| Arc::new((Vec::new(), Vec::new())));
+    let half = (dh / 2).max(1);
+    let have = entry.0.len() / half;
+    if have < t {
+        // grow with slack so per-token decode extensions amortize; the
+        // values of existing rows are position-only, so the new table's
+        // prefix is bit-identical to the old one
+        let grow_to = t.next_power_of_two().max(64);
+        let (mut cos, mut sin) = (entry.0.clone(), entry.1.clone());
+        fill_rope_rows(&mut cos, &mut sin, have, grow_to, dh);
+        *entry = Arc::new((cos, sin));
+    }
+    entry.clone()
+}
+
+/// Rotate-half RoPE on one [dh] row at table row `pos` — the shared
+/// primitive of the batched [`apply_rope`] and the per-position cache
+/// writes in the decode path (identical arithmetic by construction).
+pub(crate) fn rope_row(row: &mut [f32], dh: usize, pos: usize, cos: &[f32], sin: &[f32]) {
+    let half = dh / 2;
+    for k in 0..half {
+        let c = cos[pos * half + k];
+        let s = sin[pos * half + k];
+        let x1 = row[k];
+        let x2 = row[half + k];
+        row[k] = x1 * c - x2 * s;
+        row[half + k] = x1 * s + x2 * c;
+    }
 }
 
 /// Rotate-half RoPE applied in place to [t, dh] rows of one head.
 pub(crate) fn apply_rope(x: &mut [f32], t: usize, dh: usize, cos: &[f32], sin: &[f32]) {
-    let half = dh / 2;
     for ti in 0..t {
-        let row = &mut x[ti * dh..(ti + 1) * dh];
-        for k in 0..half {
-            let c = cos[ti * half + k];
-            let s = sin[ti * half + k];
-            let x1 = row[k];
-            let x2 = row[half + k];
-            row[k] = x1 * c - x2 * s;
-            row[half + k] = x1 * s + x2 * c;
-        }
+        rope_row(&mut x[ti * dh..(ti + 1) * dh], dh, ti, cos, sin);
     }
 }
 
@@ -90,6 +140,160 @@ pub(crate) fn linear(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Tensor {
         }
     }
     y
+}
+
+// --- shared per-layer building blocks ---------------------------------
+// One implementation of the family-conditional layer math, called by the
+// teacher-forced forward (`forward_nll_src`) AND both decode forms
+// (`model::decode::{prefill,decode_step}`): the decode≡re-forward
+// bitwise contract holds because there is nothing to mirror — all three
+// paths execute these same functions.
+
+/// Clone-and-normalize a sublayer input: LayerNorm (gain + bias) for
+/// OPT, RMSNorm for llama. `ln` is the parameter stem ("ln1" / "ln2").
+pub(crate) fn norm_input<S: super::weights::ParamSource>(
+    src: &mut S,
+    l: usize,
+    ln: &str,
+    x: &Tensor,
+    d: usize,
+    is_opt: bool,
+) -> Result<Tensor> {
+    let mut x_ln = x.clone();
+    if is_opt {
+        layer_norm(
+            &mut x_ln.data,
+            d,
+            &src.get_l(l, &format!("{ln}_g"))?.data,
+            &src.get_l(l, &format!("{ln}_b"))?.data,
+        );
+    } else {
+        rms_norm(&mut x_ln.data, d, &src.get_l(l, &format!("{ln}_g"))?.data);
+    }
+    Ok(x_ln)
+}
+
+/// Q/K/V projections of one layer (biased for OPT).
+pub(crate) fn qkv_proj<S: super::weights::ParamSource>(
+    src: &mut S,
+    l: usize,
+    x_ln: &Tensor,
+    is_opt: bool,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    Ok(if is_opt {
+        (
+            linear(x_ln, &src.get_l(l, "wq")?, Some(&src.get_l(l, "bq")?)),
+            linear(x_ln, &src.get_l(l, "wk")?, Some(&src.get_l(l, "bk")?)),
+            linear(x_ln, &src.get_l(l, "wv")?, Some(&src.get_l(l, "bv")?)),
+        )
+    } else {
+        (
+            linear(x_ln, &src.get_l(l, "wq")?, None),
+            linear(x_ln, &src.get_l(l, "wk")?, None),
+            linear(x_ln, &src.get_l(l, "wv")?, None),
+        )
+    })
+}
+
+/// Attention output projection + residual add into `x`. Both families
+/// carry an out-proj bias (llama's is the zero-init FLAP-compensation
+/// slot, see configs.py).
+pub(crate) fn attn_out_residual<S: super::weights::ParamSource>(
+    src: &mut S,
+    l: usize,
+    ctx: &Tensor,
+    x: &mut Tensor,
+) -> Result<()> {
+    let attn_out = linear(ctx, &src.get_l(l, "wo")?, Some(&src.get_l(l, "bo")?));
+    for (xv, av) in x.data.iter_mut().zip(&attn_out.data) {
+        *xv += av;
+    }
+    Ok(())
+}
+
+/// The whole FFN sublayer: ln2-normalized input, ReLU fc1→fc2 (OPT) or
+/// SiLU gate·up→down (llama), residual add into `x`. Returns the normed
+/// input and hidden activations (the capture leaves).
+pub(crate) fn ffn_sublayer<S: super::weights::ParamSource>(
+    src: &mut S,
+    l: usize,
+    x: &mut Tensor,
+    d: usize,
+    is_opt: bool,
+) -> Result<(Tensor, Tensor)> {
+    let x_ln2 = norm_input(src, l, "ln2", x, d, is_opt)?;
+    let h = if is_opt {
+        let mut h = linear(&x_ln2, &src.get_l(l, "fc1")?, Some(&src.get_l(l, "bfc1")?));
+        for v in h.data.iter_mut() {
+            *v = v.max(0.0); // relu
+        }
+        h
+    } else {
+        let g = linear(&x_ln2, &src.get_l(l, "w_gate")?, None);
+        let u = linear(&x_ln2, &src.get_l(l, "w_up")?, None);
+        let mut h = u;
+        for (hv, gv) in h.data.iter_mut().zip(&g.data) {
+            let silu = gv / (1.0 + (-gv).exp());
+            *hv *= silu;
+        }
+        h
+    };
+    let ffn_out = if is_opt {
+        linear(&h, &src.get_l(l, "fc2")?, Some(&src.get_l(l, "bfc2")?))
+    } else {
+        linear(&h, &src.get_l(l, "w_down")?, Some(&src.get_l(l, "b_down")?))
+    };
+    for (xv, fv) in x.data.iter_mut().zip(&ffn_out.data) {
+        *xv += fv;
+    }
+    Ok((x_ln2, h))
+}
+
+/// Token embedding (+ learned positions for OPT, starting at absolute
+/// position `pos0` — 0 for a full forward, the cache length for a
+/// decode step). Returns (x [b·t, d], tok_emb) — the tied head reuses
+/// tok_emb for the logits.
+pub(crate) fn embed_tokens<S: super::weights::ParamSource>(
+    src: &mut S,
+    tokens: &IntTensor,
+    d: usize,
+    is_opt: bool,
+    pos0: usize,
+) -> Result<(Tensor, Tensor)> {
+    let (b, t) = (tokens.shape[0], tokens.shape[1]);
+    let tok_emb = src.get("tok_emb")?;
+    let mut x = Tensor::zeros(&[b * t, d]);
+    for (r, &tokid) in tokens.data.iter().enumerate() {
+        x.row_mut(r).copy_from_slice(tok_emb.row(tokid as usize));
+    }
+    if is_opt {
+        let pos = src.get("pos_emb")?;
+        for bi in 0..b {
+            for ti in 0..t {
+                let r = bi * t + ti;
+                for (v, p) in x.row_mut(r).iter_mut().zip(pos.row(pos0 + ti)) {
+                    *v += p;
+                }
+            }
+        }
+    }
+    Ok((x, tok_emb))
+}
+
+/// Final norm + tied-head logits (consumes `x`).
+pub(crate) fn head_logits<S: super::weights::ParamSource>(
+    src: &mut S,
+    mut x: Tensor,
+    d: usize,
+    is_opt: bool,
+    tok_emb: &Tensor,
+) -> Result<Tensor> {
+    if is_opt {
+        layer_norm(&mut x.data, d, &src.get("lnf_g")?.data, &src.get("lnf_b")?.data);
+    } else {
+        rms_norm(&mut x.data, d, &src.get("lnf_g")?.data);
+    }
+    Ok(matmul_bt(&x, tok_emb))
 }
 
 /// Per-layer calibration activations (host mirror of capture.py), used by
@@ -140,52 +344,17 @@ pub fn forward_nll_src<S: super::weights::ParamSource>(
     let (b, t) = (tokens.shape[0], tokens.shape[1]);
     let rows = b * t;
 
-    let tok_emb = src.get("tok_emb")?;
-    // x [rows, d]
-    let mut x = Tensor::zeros(&[rows, d]);
-    for (r, &tokid) in tokens.data.iter().enumerate() {
-        x.row_mut(r).copy_from_slice(tok_emb.row(tokid as usize));
-    }
-    if is_opt {
-        let pos = src.get("pos_emb")?;
-        for bi in 0..b {
-            for ti in 0..t {
-                let r = bi * t + ti;
-                for (v, p) in x.row_mut(r).iter_mut().zip(pos.row(ti)) {
-                    *v += p;
-                }
-            }
-        }
-    }
-    let (cos, sin) = rope_tables(t, head_dim);
+    let (mut x, tok_emb) = embed_tokens(src, tokens, d, is_opt, 0)?;
+    // cached once per process per head dim (rows beyond `t` are ignored
+    // by the row-indexed consumers, so a longer cached table is fine)
+    let rope = rope_cached(t, head_dim);
+    let (cos, sin): (&[f32], &[f32]) = (&rope.0, &rope.1);
 
     let mut captures = Vec::new();
     for l in 0..n_layers {
         // ---- attention
-        let mut x_ln = x.clone();
-        if is_opt {
-            layer_norm(
-                &mut x_ln.data,
-                d,
-                &src.get_l(l, "ln1_g")?.data,
-                &src.get_l(l, "ln1_b")?.data,
-            );
-        } else {
-            rms_norm(&mut x_ln.data, d, &src.get_l(l, "ln1_g")?.data);
-        }
-        let (q, k, v) = if is_opt {
-            (
-                linear(&x_ln, &src.get_l(l, "wq")?, Some(&src.get_l(l, "bq")?)),
-                linear(&x_ln, &src.get_l(l, "wk")?, Some(&src.get_l(l, "bk")?)),
-                linear(&x_ln, &src.get_l(l, "wv")?, Some(&src.get_l(l, "bv")?)),
-            )
-        } else {
-            (
-                linear(&x_ln, &src.get_l(l, "wq")?, None),
-                linear(&x_ln, &src.get_l(l, "wk")?, None),
-                linear(&x_ln, &src.get_l(l, "wv")?, None),
-            )
-        };
+        let x_ln = norm_input(src, l, "ln1", &x, d, is_opt)?;
+        let (q, k, v) = qkv_proj(src, l, &x_ln, is_opt)?;
         let ctx = attention(
             b,
             t,
@@ -195,68 +364,23 @@ pub fn forward_nll_src<S: super::weights::ParamSource>(
             &q,
             &k,
             &v,
-            &cos,
-            &sin,
+            cos,
+            sin,
             !is_opt,
         );
-        // both families carry an out-proj bias (llama's is the zero-init
-        // FLAP-compensation slot, see configs.py)
-        let attn_out = linear(&ctx, &src.get_l(l, "wo")?, Some(&src.get_l(l, "bo")?));
-        for (xv, av) in x.data.iter_mut().zip(&attn_out.data) {
-            *xv += av;
-        }
+        attn_out_residual(src, l, &ctx, &mut x)?;
 
         // ---- ffn
-        let mut x_ln2 = x.clone();
-        if is_opt {
-            layer_norm(
-                &mut x_ln2.data,
-                d,
-                &src.get_l(l, "ln2_g")?.data,
-                &src.get_l(l, "ln2_b")?.data,
-            );
-        } else {
-            rms_norm(&mut x_ln2.data, d, &src.get_l(l, "ln2_g")?.data);
-        }
-        let h = if is_opt {
-            let mut h = linear(&x_ln2, &src.get_l(l, "fc1")?, Some(&src.get_l(l, "bfc1")?));
-            for v in h.data.iter_mut() {
-                *v = v.max(0.0); // relu
-            }
-            h
-        } else {
-            let g = linear(&x_ln2, &src.get_l(l, "w_gate")?, None);
-            let u = linear(&x_ln2, &src.get_l(l, "w_up")?, None);
-            let mut h = u;
-            for (hv, gv) in h.data.iter_mut().zip(&g.data) {
-                let silu = gv / (1.0 + (-gv).exp());
-                *hv *= silu;
-            }
-            h
-        };
-        let ffn_out = if is_opt {
-            linear(&h, &src.get_l(l, "fc2")?, Some(&src.get_l(l, "bfc2")?))
-        } else {
-            linear(&h, &src.get_l(l, "w_down")?, Some(&src.get_l(l, "b_down")?))
-        };
-        for (xv, fv) in x.data.iter_mut().zip(&ffn_out.data) {
-            *xv += fv;
-        }
+        let (x_ln2, h) = ffn_sublayer(src, l, &mut x, d, is_opt)?;
         if collect {
             captures.push(HostCaptures { ln1: x_ln, ln2: x_ln2, attn_ctx: ctx, ffn_h: h });
         }
         src.layer_done(l)?;
     }
 
-    if is_opt {
-        layer_norm(&mut x.data, d, &src.get("lnf_g")?.data, &src.get("lnf_b")?.data);
-    } else {
-        rms_norm(&mut x.data, d, &src.get("lnf_g")?.data);
-    }
-
     // logits = x · tok_embᵀ; per-token NLL without materializing softmax.
     // Rows are independent: fan out over row chunks of the NLL buffer.
-    let logits = matmul_bt(&x, &tok_emb); // [rows, V]
+    let logits = head_logits(src, x, d, is_opt, &tok_emb)?; // [rows, V]
     let mut nll = Tensor::zeros(&[b, t]);
     let nll_rows = |r0: usize, chunk: &mut [f32]| {
         for (i, nv) in chunk.iter_mut().enumerate() {
@@ -274,6 +398,51 @@ pub fn forward_nll_src<S: super::weights::ParamSource>(
         nll_rows(0, &mut nll.data);
     }
     Ok((nll, captures))
+}
+
+/// One causal attention row: query `qrow` [dh] at absolute position
+/// `ti`, attending over key/value rows `0..=ti` read from strided
+/// buffers (`k[tj·k_stride + k_off ..][..dh]`, `v[tj·v_stride + v_off
+/// ..][..dv]`). Accumulates into `out` [dv] (caller-zeroed) with the
+/// exact serial order the original `attention()` loop used — scores in
+/// ascending tj, running max, exp/sum, then the weighted-V axpy in
+/// ascending tj — so the prefill path (contiguous gathered buffers,
+/// stride `dh`/`dv`, offset 0) and the decode path (KV-cache rows,
+/// stride `n_heads·dh` / layer `d_ov`, per-head offsets) produce
+/// bit-identical contexts.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attn_row(
+    qrow: &[f32],
+    k: &[f32],
+    k_stride: usize,
+    k_off: usize,
+    v: &[f32],
+    v_stride: usize,
+    v_off: usize,
+    ti: usize,
+    dh: usize,
+    dv: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    let mut scores = Vec::with_capacity(ti + 1);
+    for tj in 0..=ti {
+        let krow = &k[tj * k_stride + k_off..tj * k_stride + k_off + dh];
+        scores.push(crate::tensor::matmul::dot(qrow, krow) * scale);
+    }
+    let m = scores.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+    let mut z = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - m).exp();
+        z += *s;
+    }
+    for (tj, w) in scores.iter().enumerate() {
+        let vrow = &v[tj * v_stride + v_off..tj * v_stride + v_off + dv];
+        let wz = w / z;
+        for (o, vv) in out.iter_mut().zip(vrow) {
+            *o += wz * vv;
+        }
+    }
 }
 
 /// Causal multi-head attention with per-head V widths.
@@ -340,29 +509,23 @@ pub(crate) fn attention(
             apply_rope(&mut kh, t, dh, cos, sin);
         }
         let mut out = vec![0.0f32; t * dv];
-        // causal attention rows
+        // causal attention rows (shared with the KV-cached decode step)
         for ti in 0..t {
             let qrow = &qh[ti * dh..(ti + 1) * dh];
-            // scores over [0..=ti]
-            let mut scores = Vec::with_capacity(ti + 1);
-            for tj in 0..=ti {
-                let krow = &kh[tj * dh..(tj + 1) * dh];
-                scores.push(crate::tensor::matmul::dot(qrow, krow) * scale);
-            }
-            let m = scores.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
-            let mut z = 0.0f32;
-            for s in scores.iter_mut() {
-                *s = (*s - m).exp();
-                z += *s;
-            }
-            let orow = &mut out[ti * dv..(ti + 1) * dv];
-            for (tj, w) in scores.iter().enumerate() {
-                let vrow = &vh[tj * dv..(tj + 1) * dv];
-                let wz = w / z;
-                for (o, vv) in orow.iter_mut().zip(vrow) {
-                    *o += wz * vv;
-                }
-            }
+            attn_row(
+                qrow,
+                &kh,
+                dh,
+                0,
+                &vh,
+                dv,
+                0,
+                ti,
+                dh,
+                dv,
+                scale,
+                &mut out[ti * dv..(ti + 1) * dv],
+            );
         }
         out
     };
@@ -456,9 +619,9 @@ pub fn sliced_layer_fwd(
     let q = linear(&x_ln, wq, None);
     let k = linear(&x_ln, wk, None);
     let v = linear(&x_ln, wv, None);
-    let (cos, sin) = rope_tables(t, dh);
+    let rope = rope_cached(t, dh);
     let splits = vec![dk_s / n_heads; n_heads];
-    let ctx = attention(b, t, n_heads, dh, &splits, &q, &k, &v, &cos, &sin, true);
+    let ctx = attention(b, t, n_heads, dh, &splits, &q, &k, &v, &rope.0, &rope.1, true);
     let attn_out = linear(&ctx, wo, None);
     for (xv, av) in x.data.iter_mut().zip(&attn_out.data) {
         *xv += av;
@@ -477,4 +640,61 @@ pub fn sliced_layer_fwd(
         *xv += yv;
     }
     Ok(Tensor::new(vec![b, t, d], x.data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rope_cache_extends_with_bit_identical_prefix() {
+        let dh = 8;
+        let small = rope_cached(4, dh);
+        assert!(small.0.len() >= 4 * dh / 2);
+        let big = rope_cached(200, dh);
+        assert!(big.0.len() >= 200 * dh / 2);
+        let (cos_ref, sin_ref) = rope_tables(200, dh);
+        for (i, (c, r)) in big.0.iter().zip(&cos_ref).enumerate() {
+            assert_eq!(c.to_bits(), r.to_bits(), "cos[{i}] drifted on extension");
+        }
+        for (i, (s, r)) in big.1.iter().zip(&sin_ref).enumerate() {
+            assert_eq!(s.to_bits(), r.to_bits(), "sin[{i}] drifted on extension");
+        }
+        // the earlier (smaller) fetch shares the same values
+        for (i, (c, r)) in small.0.iter().take(4 * dh / 2).zip(&cos_ref).enumerate() {
+            assert_eq!(c.to_bits(), r.to_bits(), "cached prefix cos[{i}]");
+        }
+    }
+
+    #[test]
+    fn attn_row_matches_strided_reads() {
+        // the same K/V served contiguously and strided must attend
+        // identically (the cache layout contract)
+        let t = 5;
+        let (dh, dv) = (4, 3);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let q: Vec<f32> = rng.normal_vec(dh, 1.0);
+        let k: Vec<f32> = rng.normal_vec(t * dh, 1.0);
+        let v: Vec<f32> = rng.normal_vec(t * dv, 1.0);
+        // strided copies: rows padded into wider buffers at an offset
+        let (ks, ko, vs, vo) = (dh + 3, 2, dv + 5, 4);
+        let mut k_wide = vec![0.0f32; t * ks];
+        let mut v_wide = vec![0.0f32; t * vs];
+        for ti in 0..t {
+            k_wide[ti * ks + ko..ti * ks + ko + dh]
+                .copy_from_slice(&k[ti * dh..(ti + 1) * dh]);
+            v_wide[ti * vs + vo..ti * vs + vo + dv]
+                .copy_from_slice(&v[ti * dv..(ti + 1) * dv]);
+        }
+        for ti in 0..t {
+            let mut a = vec![0.0f32; dv];
+            let mut b = vec![0.0f32; dv];
+            let scale = 0.5;
+            attn_row(&q, &k, dh, 0, &v, dv, 0, ti, dh, dv, scale, &mut a);
+            attn_row(&q, &k_wide, ks, ko, &v_wide, vs, vo, ti, dh, dv, scale, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "ti={ti}");
+            }
+        }
+    }
 }

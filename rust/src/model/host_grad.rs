@@ -18,7 +18,7 @@
 //! per-row NLL buffer), so gradients and losses are bit-identical across
 //! backends.
 
-use super::host::{rope_tables, LN_EPS};
+use super::host::LN_EPS;
 use super::weights::Weights;
 use crate::runtime::manifest::ModelSpec;
 use crate::tensor::matmul::matmul;
@@ -290,7 +290,8 @@ pub fn loss_and_grad(
     let dh = spec.head_dim();
     let rows = b * t;
     let is_opt = spec.family == "opt";
-    let (cos, sin) = rope_tables(t, dh);
+    // process-cached tables (rows beyond `t` are simply unused)
+    let rope = super::host::rope_cached(t, dh);
     let scale = 1.0 / (dh as f32).sqrt();
 
     let tok_emb = w.get("tok_emb")?;
@@ -327,8 +328,8 @@ pub fn loss_and_grad(
         let mut k = linear_fwd(&x_ln1, &w.get_l(l, "wk")?, bk.as_ref());
         let v = linear_fwd(&x_ln1, &w.get_l(l, "wv")?, bv.as_ref());
         if !is_opt {
-            rope_rows(&mut q, b, t, n_heads, dh, &cos, &sin);
-            rope_rows(&mut k, b, t, n_heads, dh, &cos, &sin);
+            rope_rows(&mut q, b, t, n_heads, dh, &rope.0, &rope.1);
+            rope_rows(&mut k, b, t, n_heads, dh, &rope.0, &rope.1);
         }
         let splits = spec.head_splits_l(l);
         let dov: usize = splits.iter().sum();
@@ -721,8 +722,8 @@ pub fn loss_and_grad(
             }
         }
         if !is_opt {
-            rope_rows_bwd(&mut dq, b, t, n_heads, dh, &cos, &sin);
-            rope_rows_bwd(&mut dk, b, t, n_heads, dh, &cos, &sin);
+            rope_rows_bwd(&mut dq, b, t, n_heads, dh, &rope.0, &rope.1);
+            rope_rows_bwd(&mut dk, b, t, n_heads, dh, &rope.0, &rope.1);
         }
         let wq = w.get_l(l, "wq")?;
         let wk = w.get_l(l, "wk")?;

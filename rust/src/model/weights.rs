@@ -34,6 +34,14 @@ pub trait ParamSource {
     fn layer_done(&mut self, _l: usize) -> Result<()> {
         Ok(())
     }
+
+    /// Reset to layer 0 for another in-order pass — autoregressive
+    /// decode runs one pass per generated token over the same source.
+    /// Dense sources are stateless (no-op); streaming sources restart
+    /// their prefetch pipeline while keeping the embed shard resident.
+    fn rewind(&mut self) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// The trivial [`ParamSource`]: every parameter is already resident.

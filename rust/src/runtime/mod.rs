@@ -18,8 +18,10 @@
 //! * [`executable`] — one loaded artifact: literal execution + shape
 //!   checking + output validation + perf counters.
 //! * [`session`] — the typed model session: `fwd_loss`, `capture`,
-//!   `gradcol`, `train_step` over packed params / train state, plus the
-//!   layer-streaming `fwd_loss_streamed` / `capture_streamed` entries.
+//!   `gradcol`, `train_step` over packed params / train state, the
+//!   layer-streaming `fwd_loss_streamed` / `capture_streamed` entries,
+//!   and the KV-cached decode surface (`prefill` / `decode_step` /
+//!   `generate` / `generate_streamed` over `model::decode`).
 //! * [`store`] — the sharded compact model store: per-layer `.ftns`
 //!   shards + embed/head shard with checksummed index, lazy
 //!   [`ShardedWeights`] loads with residency accounting, and the

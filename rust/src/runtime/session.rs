@@ -21,13 +21,24 @@
 //! [`ShardedWeights`] store (embed/head shard + one layer shard + the
 //! backend's prefetch buffer resident at a time), producing bit-identical
 //! outputs to the monolithic entries.
+//!
+//! Autoregressive decode ([`Session::prefill`], [`Session::decode_step`],
+//! [`Session::generate`], [`Session::generate_streamed`]) bypasses the
+//! literal layer entirely — a per-step param upload would cost O(model)
+//! per token — and drives `model::decode` directly over a [`Weights`]
+//! (dense or compact) or a streaming store, inside the session's backend
+//! scope. Cached decode logits are bit-identical to a full-prefix
+//! re-forward on every backend (`rust/tests/test_decode.rs`).
 
 use super::backend::{default_backend, Backend};
 use super::executable::{Artifact, In};
 use super::literal::Literal;
 use super::manifest::{Manifest, ModelSpec};
 use super::store::{ShardedWeights, StreamingParams};
+use crate::model::decode::{self, GenerateOpts, Generation, KvCache};
 use crate::model::host;
+use crate::model::weights::DenseParams;
+use crate::model::Weights;
 use crate::tensor::ops::add_assign;
 use crate::tensor::{IntTensor, Tensor};
 use crate::util::pool::PoolScope;
@@ -402,6 +413,99 @@ impl<'m> Session<'m> {
             layers: acc.context("capture needs at least one batch")?,
             rows,
         })
+    }
+
+    // ------------------------------------------------------------- decode
+
+    fn check_decode_weights(&self, w: &Weights) -> Result<()> {
+        anyhow::ensure!(
+            w.spec.name == self.spec.name && w.spec.params == self.spec.params,
+            "weights are for model '{}', session runs '{}'",
+            w.spec.name,
+            self.spec.name
+        );
+        Ok(())
+    }
+
+    fn check_prompt(&self, prompt: &IntTensor) -> Result<()> {
+        anyhow::ensure!(
+            prompt.shape.len() == 2 && prompt.shape[0] >= 1 && prompt.shape[1] >= 1,
+            "{}: prompt shape {:?}, want [b, t] with b, t >= 1",
+            self.spec.name,
+            prompt.shape
+        );
+        super::host_exec::validate_tokens(prompt, self.spec.vocab, "prompt")?;
+        Ok(())
+    }
+
+    /// Allocate a decode cache for `batch` sequences of up to `capacity`
+    /// positions under this model's (per-layer, possibly sliced) dims.
+    pub fn decode_cache(&self, batch: usize, capacity: usize) -> Result<KvCache> {
+        KvCache::for_spec(&self.spec, batch, capacity)
+    }
+
+    /// Run the whole prompt once, populating `cache`, and return the
+    /// last-position logits [b, vocab]. Decode entries take the weights
+    /// directly (no [`PackedParams`]): uploading a literal per step
+    /// would copy the whole model per token.
+    pub fn prefill(
+        &self,
+        w: &Weights,
+        prompt: &IntTensor,
+        cache: &mut KvCache,
+    ) -> Result<Tensor> {
+        self.check_decode_weights(w)?;
+        self.check_prompt(prompt)?;
+        let _exec = self.backend.enter();
+        decode::prefill_src(&mut DenseParams(w), prompt, cache)
+    }
+
+    /// Process one token per sequence against the cache — O(prefix) per
+    /// token, bit-identical to a full-prefix re-forward. `tokens` holds
+    /// one id per cached sequence.
+    pub fn decode_step(
+        &self,
+        w: &Weights,
+        tokens: &IntTensor,
+        cache: &mut KvCache,
+    ) -> Result<Tensor> {
+        self.check_decode_weights(w)?;
+        super::host_exec::validate_tokens(tokens, self.spec.vocab, "tokens")?;
+        let _exec = self.backend.enter();
+        decode::decode_step_src(&mut DenseParams(w), tokens, cache)
+    }
+
+    /// Batched generation (greedy or seeded top-k) from a prompt:
+    /// prefill + one cached decode step per new token.
+    pub fn generate(
+        &self,
+        w: &Weights,
+        prompt: &IntTensor,
+        opts: &GenerateOpts,
+    ) -> Result<Generation> {
+        self.check_decode_weights(w)?;
+        self.check_prompt(prompt)?;
+        let _exec = self.backend.enter();
+        decode::generate_src(&mut DenseParams(w), prompt, opts)
+    }
+
+    /// [`Session::generate`] streaming the weights from a sharded store:
+    /// the embed/head shard stays resident across the whole generation,
+    /// layer shards stream in order with the backend's prefetch depth
+    /// (the source is rewound between token passes so prefetch stays
+    /// live during decode, not just prefill). Token output is
+    /// bit-identical to generating from the assembled weights.
+    pub fn generate_streamed(
+        &self,
+        store: &ShardedWeights,
+        prompt: &IntTensor,
+        opts: &GenerateOpts,
+    ) -> Result<Generation> {
+        self.check_store(store)?;
+        self.check_prompt(prompt)?;
+        let _exec = self.backend.enter();
+        let mut src = StreamingParams::new(store, self.backend.prefetch_depth())?;
+        decode::generate_src(&mut src, prompt, opts)
     }
 
     // ------------------------------------------------------------ training

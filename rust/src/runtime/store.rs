@@ -704,6 +704,20 @@ impl ParamSource for StreamingParams {
         }
         Ok(())
     }
+
+    /// Restart the in-order pass at layer 0 (the decode loop runs one
+    /// pass per generated token): drain any in-flight prefetches, drop
+    /// the current layer shard, and re-prime the prefetch run — the
+    /// embed shard stays resident across passes.
+    fn rewind(&mut self) -> Result<()> {
+        for (_, h) in self.pending.drain(..) {
+            let _ = h.join(); // result (and its buffer) dropped
+        }
+        self.cur = None;
+        self.next_spawn = 0;
+        self.top_up();
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -839,17 +853,23 @@ mod tests {
         let store = ShardedWeights::open(spec.clone(), dir.clone(), index).unwrap();
         for prefetch in [0usize, 1, 2] {
             let mut src = StreamingParams::new(&store, prefetch).unwrap();
-            assert_eq!(src.get("tok_emb").unwrap(), w.get("tok_emb").unwrap());
-            assert_eq!(src.get("lnf_g").unwrap(), w.get("lnf_g").unwrap());
-            for l in 0..spec.n_layers {
-                for short in ["wq", "wv", "wo", "fc1", "fc2"] {
-                    assert_eq!(
-                        src.get_l(l, short).unwrap(),
-                        w.get_l(l, short).unwrap(),
-                        "layer {l} {short} (prefetch {prefetch})"
-                    );
+            // two passes over the same source: the second (post-rewind)
+            // pass is how the decode loop reuses one StreamingParams per
+            // generated token, prefetch pipeline included
+            for pass in 0..2 {
+                assert_eq!(src.get("tok_emb").unwrap(), w.get("tok_emb").unwrap());
+                assert_eq!(src.get("lnf_g").unwrap(), w.get("lnf_g").unwrap());
+                for l in 0..spec.n_layers {
+                    for short in ["wq", "wv", "wo", "fc1", "fc2"] {
+                        assert_eq!(
+                            src.get_l(l, short).unwrap(),
+                            w.get_l(l, short).unwrap(),
+                            "pass {pass} layer {l} {short} (prefetch {prefetch})"
+                        );
+                    }
+                    src.layer_done(l).unwrap();
                 }
-                src.layer_done(l).unwrap();
+                src.rewind().unwrap();
             }
         }
         std::fs::remove_dir_all(&dir).ok();

@@ -39,19 +39,53 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 /// copy, amortized over the k-deep matmul) and reusing the blocked axpy
 /// kernel runs at matmul speed (~13 GF/s), a ~3.5× win on the linear
 /// layers of the host reference model.
+///
+/// Single-row products (`m == 1`, the decode-step hot path) skip both
+/// the transpose and the row-chunk tiling and go through
+/// [`matvec_bt_into`], which keeps `matmul_into`'s exact reduction
+/// order — so a one-token decode linear is bit-identical to the same
+/// row inside a full-prefix [b·t, k] product. Large single rows (the
+/// logits head) fan out over output-column chunks on the ambient pool;
+/// each output element is computed by exactly one worker with the
+/// serial order, so the result is pool-width-independent.
 pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = a.dims2();
     let (n, k2) = b.dims2();
     assert_eq!(k, k2, "matmul_bt inner dim: {:?} x {:?}", a.shape, b.shape);
     if m == 1 {
-        // single row: the dot microkernel wins (no transpose amortization)
         let mut c = vec![0.0f32; n];
-        for j in 0..n {
-            c[j] = dot(&a.data, &b.data[j * k..(j + 1) * k]);
+        let p = pool::current();
+        if p.workers() > 1 && n >= 2 && k * n >= pool::PAR_THRESHOLD {
+            p.run_rows1(&mut c, 1, |j0, chunk| {
+                matvec_bt_into(&a.data, &b.data, chunk, j0, k);
+            });
+        } else {
+            matvec_bt_into(&a.data, &b.data, &mut c, 0, k);
         }
         return Tensor::new(vec![1, n], c);
     }
     matmul(a, &b.t())
+}
+
+/// out[j] = Σ_kk a[kk]·b[(j0+j)·k + kk] — one A·Bᵀ output row segment,
+/// accumulated in ascending-k order with the same zero-skip
+/// `matmul_into` applies, so the bits match the blocked multi-row path
+/// exactly (the decode↔re-forward identity depends on this). A single
+/// serial accumulator is slower than the 8-lane `dot`, but the blocked
+/// path's reduction order is the determinism contract.
+pub fn matvec_bt_into(a: &[f32], b: &[f32], out: &mut [f32], j0: usize, k: usize) {
+    debug_assert!((j0 + out.len()) * k <= b.len());
+    for (jj, o) in out.iter_mut().enumerate() {
+        let row = &b[(j0 + jj) * k..(j0 + jj + 1) * k];
+        let mut s = 0.0f32;
+        for (av, bv) in a.iter().zip(row) {
+            if *av == 0.0 {
+                continue;
+            }
+            s += av * bv;
+        }
+        *o = s;
+    }
 }
 
 /// Blocked C += A·B on raw slices (row-major).
@@ -149,6 +183,52 @@ mod tests {
         let c1 = matmul_bt(&a, &b);
         let c2 = matmul(&a, &b.t());
         assert!(c1.max_abs_diff(&c2) < 1e-4);
+    }
+
+    #[test]
+    fn single_row_bt_bit_identical_to_blocked() {
+        use crate::util::pool;
+        let mut rng = Rng::new(5);
+        // a single row must produce the exact bits the blocked transpose
+        // path produces for the same row (decode ≡ re-forward contract),
+        // including in the presence of exact zeros (the skip path)
+        for &(k, n) in &[(64usize, 48usize), (130, 33), (8, 1)] {
+            let mut a = Tensor::randn(&[1, k], 1.0, &mut rng);
+            a.data[k / 2] = 0.0;
+            a.data[0] = 0.0;
+            let b = Tensor::randn(&[n, k], 1.0, &mut rng);
+            let fast = matmul_bt(&a, &b);
+            let blocked = {
+                let mut c = vec![0.0f32; n];
+                matmul_into(&a.data, &b.t().data, &mut c, 1, k, n);
+                Tensor::new(vec![1, n], c)
+            };
+            let same = fast
+                .data
+                .iter()
+                .zip(&blocked.data)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "({k},{n}): single-row path diverged from blocked");
+        }
+        // and the pooled fan-out never changes the bits
+        let a = Tensor::randn(&[1, 1100], 1.0, &mut rng);
+        let b = Tensor::randn(&[1024, 1100], 1.0, &mut rng);
+        let serial = {
+            let _g = pool::enter(pool::serial());
+            matmul_bt(&a, &b)
+        };
+        for workers in [2usize, 5] {
+            let par = {
+                let _g = pool::enter(std::sync::Arc::new(pool::Pool::new(workers)));
+                matmul_bt(&a, &b)
+            };
+            let same = serial
+                .data
+                .iter()
+                .zip(&par.data)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "matvec fan-out not bit-identical at {workers} workers");
+        }
     }
 
     #[test]

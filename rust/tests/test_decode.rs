@@ -1,0 +1,454 @@
+//! Decode-path contract: KV-cached `decode_step` logits are
+//! **bit-identical** to a full-prefix re-forward at every position, on
+//! both families, at every pool width, from every weight source (dense,
+//! compact, sharded streaming) — plus cache failure injection (overflow
+//! past capacity, mismatched layer dims, batch mismatch) and sampling
+//! determinism. The cross-source generation tests require `make
+//! artifacts`; the core bit-identity tests run on toy specs.
+
+use fasp::model::compact::{build_params, compact_from_mask, CompactModel};
+use fasp::model::decode::{
+    self, decode_step_src, full_logits, prefill_src, GenerateOpts, KvCache, Sampler,
+};
+use fasp::model::{DenseParams, PruneMask, Weights};
+use fasp::runtime::manifest::LayerDims;
+use fasp::runtime::{HostBackend, Manifest, ModelSpec, Session, ThreadedHostBackend};
+use fasp::tensor::{IntTensor, Tensor};
+use fasp::util::pool;
+use fasp::util::rng::Rng;
+use std::sync::Arc;
+
+fn bits_eq(a: &Tensor, b: &Tensor) -> bool {
+    a.shape == b.shape
+        && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Toy spec with ragged (compact-style) per-layer dims, including one
+/// fully sliced head, so the decode path is exercised exactly where the
+/// OV slicing bites.
+fn toy_spec(family: &str) -> ModelSpec {
+    let layer_dims = vec![
+        LayerDims { d_ff: 20, d_ov: 10, head_splits: vec![6, 4] },
+        LayerDims { d_ff: 12, d_ov: 5, head_splits: vec![5, 0] },
+        LayerDims { d_ff: 16, d_ov: 16, head_splits: vec![8, 8] },
+    ];
+    let params = build_params(family, 16, 3, 48, 24, &layer_dims);
+    ModelSpec {
+        name: format!("decode_toy_{family}"),
+        family: family.into(),
+        d_model: 16,
+        n_heads: 2,
+        n_layers: 3,
+        d_ff: 20,
+        vocab: 48,
+        seq: 24,
+        batch: 2,
+        params,
+        layer_dims,
+    }
+}
+
+fn random_prompt(b: usize, t: usize, vocab: usize, seed: u64) -> IntTensor {
+    let mut rng = Rng::new(seed);
+    IntTensor::new(
+        vec![b, t],
+        (0..b * t).map(|_| rng.below(vocab) as i32).collect(),
+    )
+}
+
+/// Teacher-force a prompt through the cached path, comparing logits
+/// against the cache-free full re-forward at every position.
+fn assert_decode_matches_reforward(spec: &ModelSpec, workers: usize) {
+    let w = Weights::init(spec, 21);
+    let b = 2;
+    let t_total = 10;
+    let t0 = 4;
+    let prompt = random_prompt(b, t_total, spec.vocab, 99);
+    let _g = pool::enter(Arc::new(pool::Pool::new(workers)));
+
+    let mut cache = KvCache::for_spec(spec, b, t_total).unwrap();
+    let prefix = IntTensor::new(vec![b, t0], {
+        let mut v = Vec::new();
+        for bi in 0..b {
+            v.extend_from_slice(&prompt.data[bi * t_total..bi * t_total + t0]);
+        }
+        v
+    });
+    let mut logits = prefill_src(&mut DenseParams(&w), &prefix, &mut cache).unwrap();
+    assert_eq!(cache.len(), t0);
+    for p in t0..t_total {
+        // cached logits after consuming positions 0..p-1 must equal the
+        // full re-forward over the same prefix, bit for bit
+        let full_prefix = IntTensor::new(vec![b, p], {
+            let mut v = Vec::new();
+            for bi in 0..b {
+                v.extend_from_slice(&prompt.data[bi * t_total..bi * t_total + p]);
+            }
+            v
+        });
+        let reforward = full_logits(&mut DenseParams(&w), &full_prefix).unwrap();
+        assert!(
+            bits_eq(&logits, &reforward),
+            "{} (w={workers}): cached logits diverged from re-forward at \
+             prefix {p}",
+            spec.name
+        );
+        let step = IntTensor::new(vec![b, 1], {
+            (0..b).map(|bi| prompt.data[bi * t_total + p]).collect()
+        });
+        logits = decode_step_src(&mut DenseParams(&w), &step, &mut cache).unwrap();
+        assert_eq!(cache.len(), p + 1);
+    }
+    let reforward = full_logits(&mut DenseParams(&w), &prompt).unwrap();
+    assert!(
+        bits_eq(&logits, &reforward),
+        "{} (w={workers}): final cached logits diverged",
+        spec.name
+    );
+}
+
+#[test]
+fn decode_bitwise_matches_full_reforward_both_families() {
+    for family in ["llama", "opt"] {
+        let spec = toy_spec(family);
+        for workers in [1usize, 4] {
+            assert_decode_matches_reforward(&spec, workers);
+        }
+    }
+}
+
+#[test]
+fn decode_bit_identical_across_pool_widths() {
+    let spec = toy_spec("llama");
+    let w = Weights::init(&spec, 5);
+    let prompt = random_prompt(2, 6, spec.vocab, 3);
+    let run = |workers: usize| -> (IntTensor, Tensor) {
+        let _g = pool::enter(Arc::new(pool::Pool::new(workers)));
+        let gen = decode::generate_src(
+            &mut DenseParams(&w),
+            &prompt,
+            &GenerateOpts { max_new: 6, sampler: Sampler::Greedy, seed: 0 },
+        )
+        .unwrap();
+        let mut cache = KvCache::for_spec(&spec, 2, 6).unwrap();
+        let logits = prefill_src(&mut DenseParams(&w), &prompt, &mut cache).unwrap();
+        (gen.tokens, logits)
+    };
+    let (t1, l1) = run(1);
+    for workers in [2usize, 4, 8] {
+        let (t2, l2) = run(workers);
+        assert_eq!(t1.data, t2.data, "tokens diverged at {workers} workers");
+        assert!(bits_eq(&l1, &l2), "prefill logits diverged at {workers} workers");
+    }
+}
+
+#[test]
+fn generation_appends_prompt_and_counts_phases() {
+    let spec = toy_spec("opt");
+    let w = Weights::init(&spec, 9);
+    let prompt = random_prompt(3, 5, spec.vocab, 17);
+    let gen = decode::generate_src(
+        &mut DenseParams(&w),
+        &prompt,
+        &GenerateOpts { max_new: 4, sampler: Sampler::Greedy, seed: 0 },
+    )
+    .unwrap();
+    assert_eq!(gen.tokens.shape, vec![3, 9]);
+    assert_eq!(gen.prompt_len, 5);
+    assert_eq!(gen.generated, 4);
+    assert_eq!(gen.steps, 3, "last sampled token needs no forward");
+    for bi in 0..3 {
+        assert_eq!(
+            &gen.tokens.data[bi * 9..bi * 9 + 5],
+            &prompt.data[bi * 5..(bi + 1) * 5],
+            "row {bi} prompt not preserved"
+        );
+        for &tok in &gen.tokens.data[bi * 9 + 5..(bi + 1) * 9] {
+            assert!(tok >= 0 && (tok as usize) < spec.vocab);
+        }
+    }
+    assert!(gen.kv_bytes > 0);
+}
+
+#[test]
+fn topk_generation_is_seed_deterministic() {
+    let spec = toy_spec("llama");
+    let w = Weights::init(&spec, 31);
+    let prompt = random_prompt(2, 4, spec.vocab, 8);
+    let opts = GenerateOpts {
+        max_new: 6,
+        sampler: Sampler::TopK { k: 5, temperature: 0.8 },
+        seed: 1234,
+    };
+    let a = decode::generate_src(&mut DenseParams(&w), &prompt, &opts).unwrap();
+    let b = decode::generate_src(&mut DenseParams(&w), &prompt, &opts).unwrap();
+    assert_eq!(a.tokens.data, b.tokens.data, "same seed must replay");
+    // greedy == top-1 on the same logits
+    let g = decode::generate_src(
+        &mut DenseParams(&w),
+        &prompt,
+        &GenerateOpts { max_new: 6, sampler: Sampler::Greedy, seed: 0 },
+    )
+    .unwrap();
+    let t1 = decode::generate_src(
+        &mut DenseParams(&w),
+        &prompt,
+        &GenerateOpts {
+            max_new: 6,
+            sampler: Sampler::TopK { k: 1, temperature: 0.5 },
+            seed: 777,
+        },
+    )
+    .unwrap();
+    assert_eq!(g.tokens.data, t1.tokens.data, "top-1 must equal greedy");
+}
+
+// ----------------------------------------------------------- failure modes
+
+#[test]
+fn cache_overflow_and_mismatch_are_loud() {
+    let spec = toy_spec("llama");
+    let w = Weights::init(&spec, 2);
+    let b = 2;
+
+    // prompt longer than capacity
+    let mut cache = KvCache::for_spec(&spec, b, 4).unwrap();
+    let long = random_prompt(b, 5, spec.vocab, 1);
+    let err = prefill_src(&mut DenseParams(&w), &long, &mut cache).unwrap_err();
+    assert!(format!("{err:#}").contains("overflow"), "{err:#}");
+
+    // stepping past capacity
+    let short = random_prompt(b, 4, spec.vocab, 2);
+    prefill_src(&mut DenseParams(&w), &short, &mut cache).unwrap();
+    let step = IntTensor::new(vec![b, 1], vec![1; b]);
+    let err = decode_step_src(&mut DenseParams(&w), &step, &mut cache).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("overflow"),
+        "capacity exhaustion must be loud: {err:#}"
+    );
+
+    // prefill into a non-empty cache
+    let err = prefill_src(&mut DenseParams(&w), &short, &mut cache).unwrap_err();
+    assert!(format!("{err:#}").contains("empty cache"), "{err:#}");
+    cache.clear();
+    assert_eq!(cache.len(), 0);
+    prefill_src(&mut DenseParams(&w), &short, &mut cache).unwrap();
+
+    // cache built for a different spec (other per-layer dims)
+    let other = {
+        let mut s = toy_spec("llama");
+        s.layer_dims[1] = LayerDims { d_ff: 12, d_ov: 4, head_splits: vec![2, 2] };
+        s.params =
+            build_params("llama", s.d_model, s.n_layers, s.vocab, s.seq, &s.layer_dims);
+        s
+    };
+    let mut wrong = KvCache::for_spec(&other, b, 8).unwrap();
+    let err = prefill_src(&mut DenseParams(&w), &short, &mut wrong).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("mismatch"),
+        "mismatched layer dims must be loud: {err:#}"
+    );
+
+    // batch mismatch
+    let mut cache3 = KvCache::for_spec(&spec, 3, 8).unwrap();
+    let err = prefill_src(&mut DenseParams(&w), &short, &mut cache3).unwrap_err();
+    assert!(format!("{err:#}").contains("batch"), "{err:#}");
+
+    // token id outside vocab
+    let mut cache = KvCache::for_spec(&spec, b, 8).unwrap();
+    let bad = IntTensor::new(vec![b, 2], vec![0, 1, 2, spec.vocab as i32]);
+    let err = prefill_src(&mut DenseParams(&w), &bad, &mut cache).unwrap_err();
+    assert!(format!("{err:#}").contains("vocab"), "{err:#}");
+}
+
+#[test]
+fn opt_cache_capacity_bounded_by_learned_positions() {
+    let spec = toy_spec("opt");
+    let err = KvCache::for_spec(&spec, 1, spec.seq + 1).unwrap_err();
+    assert!(format!("{err:#}").contains("position"), "{err:#}");
+    KvCache::for_spec(&spec, 1, spec.seq).unwrap();
+}
+
+#[test]
+fn kv_bytes_shrink_with_sliced_ov() {
+    // same capacity: the toy spec (d_ov 10/5/16 of 16) must hold a
+    // strictly smaller value cache than its dense-uniform counterpart
+    let sliced = toy_spec("llama");
+    let dense = {
+        let mut s = toy_spec("llama");
+        s.name = "decode_toy_dense".into();
+        s.layer_dims = (0..s.n_layers)
+            .map(|_| LayerDims { d_ff: 20, d_ov: 16, head_splits: vec![8, 8] })
+            .collect();
+        s.params =
+            build_params("llama", s.d_model, s.n_layers, s.vocab, s.seq, &s.layer_dims);
+        s
+    };
+    let cs = KvCache::for_spec(&sliced, 2, 12).unwrap();
+    let cd = KvCache::for_spec(&dense, 2, 12).unwrap();
+    assert!(
+        cs.kv_bytes() < cd.kv_bytes(),
+        "sliced kv {} !< dense kv {}",
+        cs.kv_bytes(),
+        cd.kv_bytes()
+    );
+    assert_eq!(cs.capacity(), 12);
+    assert_eq!(cs.batch(), 2);
+}
+
+// ------------------------------------------ cross-backend / cross-source
+
+fn manifest() -> Manifest {
+    Manifest::load(&fasp::artifacts_dir()).expect("run `make artifacts` first")
+}
+
+/// Greedy generations must be identical across `HostBackend` /
+/// `ThreadedHostBackend` and across the three weight sources: the dense
+/// zoo model, its (bit-identical) sparsity-0 compact export, and the
+/// sharded streaming store of that export.
+#[test]
+fn generate_identical_across_backends_and_sources() {
+    let mut m = manifest();
+    let model = "llama_tiny";
+    let spec = m.model(model).unwrap().clone();
+    let w = Weights::init(&spec, 7);
+
+    // sparsity-0 compact export: packed bytes are bit-identical to the
+    // dense weights (locked in by test_compact), sharded on disk
+    let mask = PruneMask::full(&spec);
+    let cm = compact_from_mask(&w, &mask, "decode_src_id").unwrap();
+    let dir = std::env::temp_dir().join("fasp_test_decode_sources");
+    let _ = std::fs::remove_dir_all(&dir);
+    let jp = fasp::model::compact::save_compact_sharded(&dir, &cm).unwrap();
+    m.register_compact(&jp).unwrap();
+    let store = m.compact_store("decode_src_id").unwrap();
+    let cw = m.compact_weights("decode_src_id").unwrap();
+    assert_eq!(w.packed.data, cw.packed.data, "s=0 export must be bit-identical");
+
+    let prompt = random_prompt(2, 6, spec.vocab, 42);
+    let opts = GenerateOpts { max_new: 8, sampler: Sampler::Greedy, seed: 0 };
+
+    let dense_single =
+        Session::with_backend(&m, model, Arc::new(HostBackend::new())).unwrap();
+    let dense_threaded =
+        Session::with_backend(&m, model, Arc::new(ThreadedHostBackend::new(4))).unwrap();
+    let compact_single =
+        Session::with_backend(&m, "decode_src_id", Arc::new(HostBackend::new())).unwrap();
+    let compact_threaded =
+        Session::with_backend(&m, "decode_src_id", Arc::new(ThreadedHostBackend::new(4)))
+            .unwrap();
+
+    let base = dense_single.generate(&w, &prompt, &opts).unwrap();
+    let runs = [
+        ("dense/threaded", dense_threaded.generate(&w, &prompt, &opts).unwrap()),
+        ("compact/host", compact_single.generate(&cw, &prompt, &opts).unwrap()),
+        ("compact/threaded", compact_threaded.generate(&cw, &prompt, &opts).unwrap()),
+        (
+            "sharded/host",
+            compact_single.generate_streamed(&store, &prompt, &opts).unwrap(),
+        ),
+        (
+            "sharded/threaded",
+            compact_threaded.generate_streamed(&store, &prompt, &opts).unwrap(),
+        ),
+    ];
+    for (label, gen) in &runs {
+        assert_eq!(
+            base.tokens.data, gen.tokens.data,
+            "{label}: greedy generation diverged from dense/host"
+        );
+    }
+    // identical dims → identical cache footprint across sources
+    for (label, gen) in &runs {
+        assert_eq!(base.kv_bytes, gen.kv_bytes, "{label}: kv bytes");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Session-level decode entries validate their inputs (wrong-model
+/// weights, wrong-vocab prompt) and agree with the host-level path.
+#[test]
+fn session_decode_contracts() {
+    let m = manifest();
+    let model = "llama_tiny";
+    let session = Session::with_backend(&m, model, Arc::new(HostBackend::new())).unwrap();
+    let spec = session.spec.clone();
+    let w = Weights::init(&spec, 3);
+    let prompt = random_prompt(1, 5, spec.vocab, 6);
+
+    // session path == host path, bit for bit
+    let mut cache = session.decode_cache(1, 8).unwrap();
+    let s_logits = session.prefill(&w, &prompt, &mut cache).unwrap();
+    let mut cache_h = KvCache::for_spec(&spec, 1, 8).unwrap();
+    let h_logits = prefill_src(&mut DenseParams(&w), &prompt, &mut cache_h).unwrap();
+    assert!(bits_eq(&s_logits, &h_logits));
+    let step = IntTensor::new(vec![1, 1], vec![1]);
+    let s2 = session.decode_step(&w, &step, &mut cache).unwrap();
+    let h2 = decode_step_src(&mut DenseParams(&w), &step, &mut cache_h).unwrap();
+    assert!(bits_eq(&s2, &h2));
+
+    // wrong-model weights rejected
+    let other_spec = m.model("opt_tiny").unwrap().clone();
+    let other_w = Weights::init(&other_spec, 3);
+    let mut cache2 = session.decode_cache(1, 8).unwrap();
+    assert!(session.prefill(&other_w, &prompt, &mut cache2).is_err());
+
+    // out-of-vocab prompt rejected before any compute
+    let bad = IntTensor::new(vec![1, 2], vec![0, spec.vocab as i32]);
+    let mut cache3 = session.decode_cache(1, 8).unwrap();
+    assert!(session.prefill(&w, &bad, &mut cache3).is_err());
+}
+
+/// A *sliced* (sparsity > 0) compact model decodes from a strictly
+/// smaller KV cache than its dense base at the same capacity, and its
+/// monolithic-vs-sharded generations still agree token for token.
+#[test]
+fn sliced_compact_decode_shrinks_kv_and_streams_identically() {
+    let mut m = manifest();
+    let model = "llama_tiny";
+    let spec = m.model(model).unwrap().clone();
+    let w = Weights::init(&spec, 19);
+    let dh = spec.head_dim();
+    let mut mask = PruneMask::full(&spec);
+    for l in 0..spec.n_layers {
+        for hi in 0..spec.n_heads {
+            for j in 0..dh / 2 {
+                mask.layers[l].ov[hi * dh + j * 2] = false;
+            }
+        }
+        for j in 0..spec.d_ff / 3 {
+            mask.layers[l].ffn[j * 3] = false;
+        }
+    }
+    let cm: CompactModel = compact_from_mask(&w, &mask, "decode_sliced").unwrap();
+    let dir = std::env::temp_dir().join("fasp_test_decode_sliced");
+    let _ = std::fs::remove_dir_all(&dir);
+    let jp = fasp::model::compact::save_compact_sharded(&dir, &cm).unwrap();
+    m.register_compact(&jp).unwrap();
+    let cw = m.compact_weights("decode_sliced").unwrap();
+    let store = m.compact_store("decode_sliced").unwrap();
+
+    let prompt = random_prompt(2, 6, spec.vocab, 23);
+    let opts = GenerateOpts { max_new: 5, sampler: Sampler::Greedy, seed: 0 };
+    let ds = Session::with_backend(&m, model, Arc::new(HostBackend::new())).unwrap();
+    let cs =
+        Session::with_backend(&m, "decode_sliced", Arc::new(HostBackend::new())).unwrap();
+    let dense_gen = ds.generate(&w, &prompt, &opts).unwrap();
+    let compact_gen = cs.generate(&cw, &prompt, &opts).unwrap();
+    let streamed_gen = cs.generate_streamed(&store, &prompt, &opts).unwrap();
+    assert!(
+        compact_gen.kv_bytes < dense_gen.kv_bytes,
+        "sliced compact kv {} !< dense kv {}",
+        compact_gen.kv_bytes,
+        dense_gen.kv_bytes
+    );
+    assert_eq!(
+        compact_gen.tokens.data, streamed_gen.tokens.data,
+        "sliced compact: resident vs streamed generations diverged"
+    );
+    // decoded tokens stay in-vocab even on the sliced model
+    for &t in &compact_gen.tokens.data {
+        assert!(t >= 0 && (t as usize) < spec.vocab);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -15,10 +15,15 @@
 #      fraction of prune wall-time) so perf regressions in the pruning
 #      or compact-repack paths show up as a diffable artifact.
 #   4. bench_hot_paths in check mode — writes BENCH_host_threads.json
-#      (single vs threaded host_exec fwd latency + bitwise identity) and
+#      (single vs threaded host_exec fwd latency + bitwise identity),
 #      BENCH_shard_stream.json (shard load time, streamed vs monolithic
-#      fwd latency, peak-resident-weights estimate) so backend-
-#      parallelism and shard-streaming regressions are diffable too.
+#      fwd latency, peak-resident-weights estimate) and BENCH_decode.json
+#      (KV-cached decode latency dense vs compact + the naive re-forward
+#      baseline + resident KV bytes) so backend-parallelism,
+#      shard-streaming and decode regressions are diffable too.
+#   5. a `fasp generate` smoke (deterministic --init weights) under both
+#      FASP_THREADS=1 and the default threaded backend — the CLI decode
+#      path must run end to end on both backends.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -31,6 +36,14 @@ FASP_THREADS=1 FASP_EXPORT=monolithic cargo test -q
 echo "== cargo test -q (default threaded backend; sharded export) =="
 FASP_EXPORT=sharded cargo test -q
 
+echo "== fasp generate smoke (FASP_THREADS=1, serial backend) =="
+FASP_THREADS=1 cargo run --release --quiet -- generate \
+  --model llama_tiny --init --prompt-len 8 --max-new 8 --fast
+
+echo "== fasp generate smoke (default threaded backend) =="
+cargo run --release --quiet -- generate \
+  --model llama_tiny --init --prompt-len 8 --max-new 8 --fast
+
 echo "== bench_prune_time (check mode) =="
 FASP_BENCH_CHECK=1 cargo bench --bench bench_prune_time
 
@@ -41,3 +54,4 @@ echo "== verify OK =="
 [ -f BENCH_prune_time.json ] && echo "perf record: BENCH_prune_time.json"
 [ -f BENCH_host_threads.json ] && echo "perf record: BENCH_host_threads.json"
 [ -f BENCH_shard_stream.json ] && echo "perf record: BENCH_shard_stream.json"
+[ -f BENCH_decode.json ] && echo "perf record: BENCH_decode.json"
