@@ -21,7 +21,8 @@ use fasp::model::Weights;
 use fasp::prune::metric::{wanda_scores_host, KernelMetric};
 use fasp::prune::restore::restore_columns;
 use fasp::runtime::{HostBackend, Manifest, Session, ThreadedHostBackend};
-use fasp::tensor::matmul::{matmul, matmul_bt};
+use fasp::tensor::matmul::{matmul, matmul_at, matmul_bt};
+use fasp::tensor::pack::PackedMat;
 use fasp::tensor::Tensor;
 use fasp::util::json::Json;
 use fasp::util::rng::Rng;
@@ -40,7 +41,7 @@ fn main() {
     for &(m, n) in &[(128usize, 512usize), (256, 1024)] {
         let w = Tensor::randn(&[m, n], 1.0, &mut rng);
         let x = Tensor::randn(&[512, n], 1.0, &mut rng);
-        let g = matmul(&x.t(), &x);
+        let g = matmul_at(&x, &x);
         let kept: Vec<bool> = (0..n).map(|j| j % 5 != 0).collect();
         b.bench(&format!("restore/closed_form {m}x{n}"), || {
             let _ = restore_columns(&w, &g, &kept, 1e-2).unwrap();
@@ -76,8 +77,23 @@ fn main() {
     });
     let x = Tensor::randn(&[512, 256], 1.0, &mut rng);
     let wt = Tensor::randn(&[1024, 256], 1.0, &mut rng);
-    b.bench("matmul_bt/512x256->1024 (linear)", || {
+    b.bench("matmul_bt/512x256->1024 (linear, per-call transpose)", || {
         let _ = matmul_bt(&x, &wt);
+    });
+    let packed = PackedMat::pack_bt(&wt);
+    b.bench("matmul_packed/512x256->1024 (linear, pre-packed)", || {
+        let _ = fasp::tensor::pack::matmul_packed(&x, &packed);
+    });
+    let xrow = Tensor::randn(&[1, 256], 1.0, &mut rng);
+    b.bench("matvec_bt/1x256->1024 (decode fallback)", || {
+        let _ = matmul_bt(&xrow, &wt);
+    });
+    b.bench("matvec_packed/1x256->1024 (decode hot path)", || {
+        let _ = fasp::tensor::pack::matmul_packed(&xrow, &packed);
+    });
+    let y512 = Tensor::randn(&[512, 1024], 1.0, &mut rng);
+    b.bench("matmul_at/512x256,512x1024 (transpose-free dW)", || {
+        let _ = matmul_at(&x, &y512);
     });
 
     // ---- host_exec: single-threaded vs thread-pooled backend ------------
@@ -292,6 +308,124 @@ fn main() {
                 ("identical", Json::Bool(cmp.identical)),
             ]);
             let path = fasp::repo_root().join("BENCH_decode.json");
+            std::fs::write(&path, record.pretty()).unwrap();
+            println!("record → {}", path.display());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // ---- packed operator plan: packed vs unpacked everything -------------
+    // The pre-packed weight plan (Session::pack) against the legacy
+    // per-call copy + transpose path: full forward, prefill, per-token
+    // decode, and the streamed forward (an s=0 sharded export whose
+    // shards pack on the prefetch thread). Bit-identity is asserted, and
+    // the pack/transpose counters prove the packed decode loop performs
+    // zero pack work after the session is built.
+    if let Ok(mut manifest) = Manifest::load(&fasp::artifacts_dir()) {
+        let model = "llama_small";
+        let spec = manifest.model(model).expect("llama_small in manifest").clone();
+        let w = Weights::init(&spec, 29);
+
+        // s=0 sharded export of the same weights for the streamed row
+        let mask = fasp::model::PruneMask::full(&spec);
+        let cm = fasp::model::compact::compact_from_mask(&w, &mask, "bench_pack").unwrap();
+        let dir = std::env::temp_dir().join("fasp_bench_pack");
+        let _ = std::fs::remove_dir_all(&dir);
+        let jp = fasp::model::compact::save_compact_sharded(&dir, &cm).unwrap();
+        manifest.register_compact(&jp).unwrap();
+        let store = manifest.compact_store("bench_pack").unwrap();
+
+        let (prompt_len, max_new) = (32usize, if check { 8 } else { 16 });
+        let reps = if check { 3 } else { 10 };
+        let cmp = fasp::eval::speed::compare_packed(
+            &manifest,
+            model,
+            &w,
+            Some(&store),
+            prompt_len,
+            max_new,
+            reps,
+        )
+        .unwrap();
+        assert!(
+            cmp.identical,
+            "packed outputs diverged from unpacked — the lane-kernel bit \
+             contract is broken"
+        );
+        assert_eq!(
+            cmp.decode_pack_ops, 0,
+            "the packed decode loop performed {} pack constructions — \
+             packing must happen exactly once, at Session::pack",
+            cmp.decode_pack_ops
+        );
+        assert_eq!(
+            cmp.decode_bt_transposes, 0,
+            "the packed decode loop took {} weight-transpose copies — no \
+             per-token transpose work is allowed after session build",
+            cmp.decode_bt_transposes
+        );
+        println!(
+            "\npack {model} (x{} workers): plan {:.3}ms / {:.2}MB / {} weights; \
+             fwd unpacked {:.3}ms vs packed {:.3}ms ({:.2}x); prefill \
+             {:.3} → {:.3}ms; per-token {:.3} → {:.3}ms ({:.2}x); streamed \
+             fwd {:.3}ms; decode packs {} / transposes {}; packed ≡ \
+             unpacked: {}",
+            cmp.threads,
+            cmp.pack_build_ms,
+            cmp.pack_bytes as f64 / 1e6,
+            cmp.packed_weights,
+            cmp.unpacked_fwd_ms,
+            cmp.packed_fwd_ms,
+            cmp.fwd_speedup,
+            cmp.unpacked_prefill_ms,
+            cmp.packed_prefill_ms,
+            cmp.unpacked_per_token_ms,
+            cmp.packed_per_token_ms,
+            cmp.per_token_speedup,
+            cmp.streamed_fwd_ms,
+            cmp.decode_pack_ops,
+            cmp.decode_bt_transposes,
+            cmp.identical
+        );
+        if check {
+            // the packed paths must strictly beat the per-call-transpose
+            // baseline — the whole point of the persistent plan
+            assert!(
+                cmp.packed_fwd_ms < cmp.unpacked_fwd_ms,
+                "packed forward {:.3}ms !< unpacked {:.3}ms",
+                cmp.packed_fwd_ms,
+                cmp.unpacked_fwd_ms
+            );
+            assert!(
+                cmp.packed_per_token_ms < cmp.unpacked_per_token_ms,
+                "packed per-token decode {:.3}ms !< unpacked {:.3}ms",
+                cmp.packed_per_token_ms,
+                cmp.unpacked_per_token_ms
+            );
+            let record = Json::obj(vec![
+                ("bench", Json::Str("pack".into())),
+                ("model", Json::Str(model.into())),
+                ("threads", Json::Num(cmp.threads as f64)),
+                ("pack_build_ms", Json::Num(cmp.pack_build_ms)),
+                ("pack_bytes", Json::Num(cmp.pack_bytes as f64)),
+                ("packed_weights", Json::Num(cmp.packed_weights as f64)),
+                ("unpacked_fwd_ms", Json::Num(cmp.unpacked_fwd_ms)),
+                ("packed_fwd_ms", Json::Num(cmp.packed_fwd_ms)),
+                ("fwd_speedup", Json::Num(cmp.fwd_speedup)),
+                ("unpacked_prefill_ms", Json::Num(cmp.unpacked_prefill_ms)),
+                ("packed_prefill_ms", Json::Num(cmp.packed_prefill_ms)),
+                ("unpacked_per_token_ms", Json::Num(cmp.unpacked_per_token_ms)),
+                ("packed_per_token_ms", Json::Num(cmp.packed_per_token_ms)),
+                ("per_token_speedup", Json::Num(cmp.per_token_speedup)),
+                ("streamed_fwd_ms", Json::Num(cmp.streamed_fwd_ms)),
+                ("decode_pack_ops", Json::Num(cmp.decode_pack_ops as f64)),
+                (
+                    "decode_bt_transposes",
+                    Json::Num(cmp.decode_bt_transposes as f64),
+                ),
+                ("identical", Json::Bool(cmp.identical)),
+            ]);
+            let path = fasp::repo_root().join("BENCH_pack.json");
             std::fs::write(&path, record.pretty()).unwrap();
             println!("record → {}", path.display());
         }

@@ -417,7 +417,9 @@ pub fn generate(args: &Args) -> Result<()> {
     let opts = crate::model::GenerateOpts { max_new, sampler, seed: ctx.seed };
 
     let gen = match &src {
-        Src::Resident(w) => session.generate(w, &prompt, &opts)?,
+        // pack once (the persistent operator plan); the decode loop then
+        // runs with zero per-token transpose/pack work
+        Src::Resident(w) => session.generate(&session.pack(&w.packed)?, &prompt, &opts)?,
         Src::Streamed(store) => session.generate_streamed(store, &prompt, &opts)?,
     };
 

@@ -22,13 +22,21 @@
 //!   baseline: the compact model must decode faster per token with a
 //!   strictly smaller resident KV cache (the receipt the OV slicing
 //!   must produce at inference; `BENCH_decode.json`).
+//! * [`compare_packed`] — the packed-operator-plan receipt
+//!   (`BENCH_pack.json`): forward, prefill and per-token decode over
+//!   `Session::pack`'s persistent pack cache vs the legacy per-call
+//!   copy + transpose path, bit-identical outputs, and the
+//!   pack/transpose counters proving the decode loop performs **zero**
+//!   pack work after the session is built.
 
 use crate::data::{Batch, Corpus, Dataset};
-use crate::model::decode::{full_logits, sample_row, GenerateOpts, Sampler};
+use crate::model::decode::{self, full_logits, sample_row, GenerateOpts, Sampler};
+use crate::model::host;
 use crate::model::weights::DenseParams;
 use crate::model::Weights;
 use crate::runtime::executable::{Artifact, In};
 use crate::runtime::{HostBackend, Manifest, Session, ThreadedHostBackend};
+use crate::tensor::{matmul, pack};
 use crate::tensor::{IntTensor, Tensor};
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -261,8 +269,10 @@ fn naive_generate(
     Ok((IntTensor::new(vec![b, t], seq), per_token))
 }
 
-/// Best-of-`reps` greedy generation; returns (tokens, prefill_ms,
-/// per_token_ms, kv_bytes).
+/// Best-of-`reps` greedy generation over the session's packed operator
+/// plan (packed once, outside the timed loop — exactly how a serving
+/// loop amortizes it); returns (tokens, prefill_ms, per_token_ms,
+/// kv_bytes).
 fn time_generate(
     session: &Session,
     w: &Weights,
@@ -271,12 +281,13 @@ fn time_generate(
     reps: usize,
 ) -> Result<(IntTensor, f64, f64, usize)> {
     let opts = GenerateOpts { max_new, sampler: Sampler::Greedy, seed: 0 };
+    let params = session.pack(&w.packed)?;
     let mut best_pre = f64::INFINITY;
     let mut best_tok = f64::INFINITY;
     let mut out = None;
     for _ in 0..reps.max(1) + 1 {
         // first iteration doubles as warmup; still recorded via min
-        let gen = session.generate(w, prompt, &opts)?;
+        let gen = session.generate(&params, prompt, &opts)?;
         best_pre = best_pre.min(gen.prefill_s * 1e3);
         best_tok = best_tok.min(gen.per_token_s() * 1e3);
         out = Some((gen.tokens, gen.kv_bytes));
@@ -390,6 +401,171 @@ pub fn compare_backends(
         single_ms,
         threaded_ms,
         speedup: single_ms / threaded_ms,
+        identical,
+    })
+}
+
+/// Packed-operator-plan vs legacy per-call-transpose measurement — the
+/// receipt the pack cache must produce (`BENCH_pack.json`).
+pub struct PackCompare {
+    /// Worker count of the backend measured (the process default).
+    pub threads: usize,
+    /// One-time cost of building the plan (`Session::pack`), ms.
+    pub pack_build_ms: f64,
+    /// Resident bytes of the pre-packed panels.
+    pub pack_bytes: usize,
+    /// Number of weights the plan holds packed.
+    pub packed_weights: usize,
+    /// Best-of-reps full forward, legacy path (per-call weight copy +
+    /// transpose inside `matmul_bt`).
+    pub unpacked_fwd_ms: f64,
+    /// Best-of-reps full forward over the plan (`Session::fwd_loss`).
+    pub packed_fwd_ms: f64,
+    pub fwd_speedup: f64,
+    pub unpacked_prefill_ms: f64,
+    pub packed_prefill_ms: f64,
+    /// Mean cached-decode wall-time per token, best generation of reps.
+    pub unpacked_per_token_ms: f64,
+    pub packed_per_token_ms: f64,
+    pub per_token_speedup: f64,
+    /// Best-of-reps streamed `fwd_loss` over a sharded store (packing
+    /// rides the prefetch thread); 0 when no store was supplied.
+    pub streamed_fwd_ms: f64,
+    /// Pack constructions observed during the packed generations — must
+    /// be 0: all packing happened at `Session::pack`.
+    pub decode_pack_ops: u64,
+    /// `matmul_bt` transpose copies observed during the packed
+    /// generations — must be 0: no hidden per-token transposes.
+    pub decode_bt_transposes: u64,
+    /// Packed ≡ unpacked, bitwise: token NLL of the forward AND the
+    /// greedy decode token streams.
+    pub identical: bool,
+}
+
+/// Measure the packed operator plan against the legacy unpacked path on
+/// one model: full forward (entry path vs per-call-transpose host
+/// forward), greedy decode (plan vs `DenseParams`), optionally the
+/// streamed forward over `store` (which must hold the same-shape model,
+/// e.g. an s=0 sharded export). Everything runs on the process-default
+/// backend; outputs must be bit-identical, the win is wall-time only.
+pub fn compare_packed(
+    manifest: &Manifest,
+    model: &str,
+    w: &Weights,
+    store: Option<&crate::runtime::ShardedWeights>,
+    prompt_len: usize,
+    max_new: usize,
+    reps: usize,
+) -> Result<PackCompare> {
+    anyhow::ensure!(max_new >= 2, "compare_packed wants max_new >= 2");
+    let session = Session::new(manifest, model)?;
+    let spec = session.spec.clone();
+    let threads = session.backend().threads();
+    let ds = Dataset::new(Corpus::new(spec.vocab, 0x9acc), spec.batch, spec.seq, 2);
+    let b = ds.train_batch(0);
+
+    // ---- the plan: built exactly once, timed ---------------------------
+    let t0 = std::time::Instant::now();
+    let params = session.pack(&w.packed)?;
+    let pack_build_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // ---- full forward: packed entry path vs legacy host forward --------
+    let o_packed = session.fwd_loss(&params, &b.tokens, &b.targets)?; // warmup
+    let mut packed_fwd_ms = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t = std::time::Instant::now();
+        session.fwd_loss(&params, &b.tokens, &b.targets)?;
+        packed_fwd_ms = packed_fwd_ms.min(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let (nll_unpacked, unpacked_fwd_ms) = {
+        let _exec = session.exec_scope();
+        let (nll, _) = host::forward_nll(w, &b.tokens, &b.targets, false)?; // warmup
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t = std::time::Instant::now();
+            host::forward_nll(w, &b.tokens, &b.targets, false)?;
+            best = best.min(t.elapsed().as_secs_f64() * 1e3);
+        }
+        (nll, best)
+    };
+    let mut identical = o_packed
+        .tok_nll
+        .data
+        .iter()
+        .zip(&nll_unpacked.data)
+        .all(|(x, y)| x.to_bits() == y.to_bits());
+
+    // ---- decode: plan vs DenseParams, counters around the packed loop --
+    let prompt =
+        Dataset::new(Corpus::new(spec.vocab, 0xdeca), spec.batch, prompt_len, 2)
+            .train_batch(0)
+            .tokens;
+    let opts = GenerateOpts { max_new, sampler: Sampler::Greedy, seed: 0 };
+    session.generate(&params, &prompt, &opts)?; // warmup
+    let packs0 = pack::pack_ops();
+    let bt0 = matmul::bt_transposes();
+    let mut packed_prefill_ms = f64::INFINITY;
+    let mut packed_per_token_ms = f64::INFINITY;
+    let mut packed_toks = None;
+    for _ in 0..reps.max(1) {
+        let gen = session.generate(&params, &prompt, &opts)?;
+        packed_prefill_ms = packed_prefill_ms.min(gen.prefill_s * 1e3);
+        packed_per_token_ms = packed_per_token_ms.min(gen.per_token_s() * 1e3);
+        packed_toks = Some(gen.tokens);
+    }
+    let decode_pack_ops = pack::pack_ops() - packs0;
+    let decode_bt_transposes = matmul::bt_transposes() - bt0;
+
+    let (unpacked_toks, unpacked_prefill_ms, unpacked_per_token_ms) = {
+        let _exec = session.exec_scope();
+        decode::generate_src(&mut DenseParams(w), &prompt, &opts)?; // warmup
+        let mut pre = f64::INFINITY;
+        let mut tok = f64::INFINITY;
+        let mut toks = None;
+        for _ in 0..reps.max(1) {
+            let gen = decode::generate_src(&mut DenseParams(w), &prompt, &opts)?;
+            pre = pre.min(gen.prefill_s * 1e3);
+            tok = tok.min(gen.per_token_s() * 1e3);
+            toks = Some(gen.tokens);
+        }
+        (toks.expect("reps >= 1"), pre, tok)
+    };
+    identical = identical
+        && packed_toks.expect("reps >= 1").data == unpacked_toks.data;
+
+    // ---- streamed forward over the sharded store (prefetch packing) ----
+    let streamed_fwd_ms = match store {
+        Some(st) => {
+            let sname = st.spec().name.clone();
+            let ssess = Session::new(manifest, &sname)?;
+            ssess.fwd_loss_streamed(st, &b.tokens, &b.targets)?; // warmup
+            let mut best = f64::INFINITY;
+            for _ in 0..reps.max(1) {
+                let t = std::time::Instant::now();
+                ssess.fwd_loss_streamed(st, &b.tokens, &b.targets)?;
+                best = best.min(t.elapsed().as_secs_f64() * 1e3);
+            }
+            best
+        }
+        None => 0.0,
+    };
+
+    Ok(PackCompare {
+        threads,
+        pack_build_ms,
+        pack_bytes: params.pack_bytes(),
+        packed_weights: params.pack_count(),
+        unpacked_fwd_ms,
+        packed_fwd_ms,
+        fwd_speedup: unpacked_fwd_ms / packed_fwd_ms,
+        unpacked_prefill_ms,
+        packed_prefill_ms,
+        unpacked_per_token_ms,
+        packed_per_token_ms,
+        per_token_speedup: unpacked_per_token_ms / packed_per_token_ms,
+        streamed_fwd_ms,
+        decode_pack_ops,
+        decode_bt_transposes,
         identical,
     })
 }

@@ -22,12 +22,18 @@
 //!
 //! Determinism contract (locked by `rust/tests/test_decode.rs`): the
 //! cached step shares every kernel with the full forward — `attn_row`
-//! for the attention row, `linear`/`matmul_bt` (whose single-row path
-//! keeps the blocked reduction order) for the matvecs, `rope_row` on
-//! the same cached tables — so `decode_step_src` logits are
-//! **bit-identical** to a full-prefix re-forward at every position, on
-//! every backend pool width, from every [`ParamSource`] (dense weights,
-//! compact weights, sharded [`crate::runtime::store::StreamingParams`]).
+//! for the attention row, the packed/unpacked linear forms (one
+//! canonical lane reduction order, see `tensor::{matmul,pack}`) for the
+//! matvecs, `rope_row` on the same cached tables — so `decode_step_src`
+//! logits are **bit-identical** to a full-prefix re-forward at every
+//! position, on every backend pool width, from every [`ParamSource`]
+//! (dense weights packed or unpacked, compact weights, sharded
+//! [`crate::runtime::store::StreamingParams`]).
+//!
+//! Latency contract (locked by the `bench_hot_paths` packing section):
+//! a source with a pack cache performs **zero** transpose/pack/
+//! table-copy allocations per decode step — the per-token hot loop is
+//! matvecs over persistent packed panels plus the cache attention rows.
 
 use super::host::{
     attention, attn_out_residual, attn_row, embed_tokens, ffn_sublayer, head_logits,
@@ -285,7 +291,7 @@ fn forward_last_logits<S: ParamSource>(
     let rows = b * t;
     validate_ids(tokens, g.vocab)?;
 
-    let (mut x, tok_emb) = embed_tokens(src, tokens, g.d, g.is_opt, 0)?;
+    let mut x = embed_tokens(src, tokens, g.d, g.is_opt, 0)?;
     let rope = rope_cached(t, g.head_dim);
     let (cos, sin): (&[f32], &[f32]) = (&rope.0, &rope.1);
 
@@ -341,7 +347,7 @@ fn forward_last_logits<S: ParamSource>(
     for bi in 0..b {
         last.row_mut(bi).copy_from_slice(x.row(bi * t + t - 1));
     }
-    head_logits(src, last, g.d, g.is_opt, &tok_emb)
+    head_logits(src, last, g.d, g.is_opt)
 }
 
 /// Run the whole prompt through the model once, populating `cache`
@@ -419,7 +425,7 @@ pub fn decode_step_src<S: ParamSource>(
     // reshape to the [b, 1] layout the shared embed helper wants; the
     // OPT position row is `pos`
     let toks = IntTensor::new(vec![b, 1], tokens.data.clone());
-    let (mut x, tok_emb) = embed_tokens(src, &toks, g.d, g.is_opt, pos)?;
+    let mut x = embed_tokens(src, &toks, g.d, g.is_opt, pos)?;
     let rope = rope_cached(pos + 1, dh);
     let (cos, sin): (&[f32], &[f32]) = (&rope.0, &rope.1);
 
@@ -488,7 +494,7 @@ pub fn decode_step_src<S: ParamSource>(
     }
     cache.len = pos + 1;
 
-    head_logits(src, x, g.d, g.is_opt, &tok_emb)
+    head_logits(src, x, g.d, g.is_opt)
 }
 
 // ---------------------------------------------------------------- sampling

@@ -16,8 +16,9 @@
 //! outputs are bit-identical for any pool width.
 
 use crate::runtime::manifest::ModelSpec;
-use crate::tensor::matmul::{matmul_bt, matmul};
+use crate::tensor::matmul::{matmul_at, matmul_bt};
 use crate::tensor::ops::logsumexp;
+use crate::tensor::pack::matmul_packed;
 use crate::tensor::{IntTensor, Tensor};
 use super::weights::Weights;
 use anyhow::Result;
@@ -127,19 +128,51 @@ pub(crate) fn apply_rope(x: &mut [f32], t: usize, dh: usize, cos: &[f32], sin: &
     }
 }
 
-/// Linear y = x·Wᵀ (+ b). x is [rows, in], w is [out, in].
+/// Row-broadcast bias add (shared by every linear form).
+pub(crate) fn add_bias(y: &mut Tensor, b: &Tensor) {
+    let (rows, out) = y.dims2();
+    debug_assert_eq!(b.numel(), out);
+    for r in 0..rows {
+        let row = &mut y.data[r * out..(r + 1) * out];
+        for (v, bv) in row.iter_mut().zip(&b.data) {
+            *v += bv;
+        }
+    }
+}
+
+/// Linear y = x·Wᵀ (+ b) over raw tensors. x is [rows, in], w is
+/// [out, in]. The unpacked form — sources with a pack cache go through
+/// [`linear_l`] instead (same bits, no per-call transpose).
 pub(crate) fn linear(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Tensor {
     let mut y = matmul_bt(x, w);
     if let Some(b) = b {
-        let (rows, out) = y.dims2();
-        for r in 0..rows {
-            let row = &mut y.data[r * out..(r + 1) * out];
-            for (v, bv) in row.iter_mut().zip(&b.data) {
-                *v += bv;
-            }
-        }
+        add_bias(&mut y, b);
     }
     y
+}
+
+/// One weight-stationary linear `y = x·Wᵀ (+ b)` over a [`ParamSource`]:
+/// consumes the source's pre-packed weight when it holds one (zero
+/// per-call transpose/pack/copy work — the tentpole of the packed
+/// operator plan) and falls back to the unpacked copy + [`matmul_bt`]
+/// otherwise. Both paths run the canonical lane-kernel reduction order,
+/// so the output bits are identical either way.
+pub(crate) fn linear_l<S: super::weights::ParamSource>(
+    src: &mut S,
+    l: usize,
+    wname: &str,
+    bname: Option<&str>,
+    x: &Tensor,
+) -> Result<Tensor> {
+    let mut y = match src.get_l_packed(l, wname)? {
+        Some(p) => matmul_packed(x, &p),
+        None => matmul_bt(x, &src.get_l(l, wname)?),
+    };
+    if let Some(bn) = bname {
+        let b = src.get_l(l, bn)?;
+        add_bias(&mut y, &b);
+    }
+    Ok(y)
 }
 
 // --- shared per-layer building blocks ---------------------------------
@@ -173,7 +206,8 @@ pub(crate) fn norm_input<S: super::weights::ParamSource>(
     Ok(x_ln)
 }
 
-/// Q/K/V projections of one layer (biased for OPT).
+/// Q/K/V projections of one layer (biased for OPT). Weight-stationary:
+/// packed panels when the source holds them, unpacked fallback else.
 pub(crate) fn qkv_proj<S: super::weights::ParamSource>(
     src: &mut S,
     l: usize,
@@ -182,15 +216,15 @@ pub(crate) fn qkv_proj<S: super::weights::ParamSource>(
 ) -> Result<(Tensor, Tensor, Tensor)> {
     Ok(if is_opt {
         (
-            linear(x_ln, &src.get_l(l, "wq")?, Some(&src.get_l(l, "bq")?)),
-            linear(x_ln, &src.get_l(l, "wk")?, Some(&src.get_l(l, "bk")?)),
-            linear(x_ln, &src.get_l(l, "wv")?, Some(&src.get_l(l, "bv")?)),
+            linear_l(src, l, "wq", Some("bq"), x_ln)?,
+            linear_l(src, l, "wk", Some("bk"), x_ln)?,
+            linear_l(src, l, "wv", Some("bv"), x_ln)?,
         )
     } else {
         (
-            linear(x_ln, &src.get_l(l, "wq")?, None),
-            linear(x_ln, &src.get_l(l, "wk")?, None),
-            linear(x_ln, &src.get_l(l, "wv")?, None),
+            linear_l(src, l, "wq", None, x_ln)?,
+            linear_l(src, l, "wk", None, x_ln)?,
+            linear_l(src, l, "wv", None, x_ln)?,
         )
     })
 }
@@ -204,7 +238,7 @@ pub(crate) fn attn_out_residual<S: super::weights::ParamSource>(
     ctx: &Tensor,
     x: &mut Tensor,
 ) -> Result<()> {
-    let attn_out = linear(ctx, &src.get_l(l, "wo")?, Some(&src.get_l(l, "bo")?));
+    let attn_out = linear_l(src, l, "wo", Some("bo"), ctx)?;
     for (xv, av) in x.data.iter_mut().zip(&attn_out.data) {
         *xv += av;
     }
@@ -223,14 +257,14 @@ pub(crate) fn ffn_sublayer<S: super::weights::ParamSource>(
 ) -> Result<(Tensor, Tensor)> {
     let x_ln2 = norm_input(src, l, "ln2", x, d, is_opt)?;
     let h = if is_opt {
-        let mut h = linear(&x_ln2, &src.get_l(l, "fc1")?, Some(&src.get_l(l, "bfc1")?));
+        let mut h = linear_l(src, l, "fc1", Some("bfc1"), &x_ln2)?;
         for v in h.data.iter_mut() {
             *v = v.max(0.0); // relu
         }
         h
     } else {
-        let g = linear(&x_ln2, &src.get_l(l, "w_gate")?, None);
-        let u = linear(&x_ln2, &src.get_l(l, "w_up")?, None);
+        let g = linear_l(src, l, "w_gate", None, &x_ln2)?;
+        let u = linear_l(src, l, "w_up", None, &x_ln2)?;
         let mut h = u;
         for (hv, gv) in h.data.iter_mut().zip(&g.data) {
             let silu = gv / (1.0 + (-gv).exp());
@@ -239,9 +273,9 @@ pub(crate) fn ffn_sublayer<S: super::weights::ParamSource>(
         h
     };
     let ffn_out = if is_opt {
-        linear(&h, &src.get_l(l, "fc2")?, Some(&src.get_l(l, "bfc2")?))
+        linear_l(src, l, "fc2", Some("bfc2"), &h)?
     } else {
-        linear(&h, &src.get_l(l, "w_down")?, Some(&src.get_l(l, "b_down")?))
+        linear_l(src, l, "w_down", Some("b_down"), &h)?
     };
     for (xv, fv) in x.data.iter_mut().zip(&ffn_out.data) {
         *xv += fv;
@@ -251,49 +285,59 @@ pub(crate) fn ffn_sublayer<S: super::weights::ParamSource>(
 
 /// Token embedding (+ learned positions for OPT, starting at absolute
 /// position `pos0` — 0 for a full forward, the cache length for a
-/// decode step). Returns (x [b·t, d], tok_emb) — the tied head reuses
-/// tok_emb for the logits.
+/// decode step). Returns x [b·t, d]. Rows gather straight from the
+/// source's backing store ([`super::weights::ParamSource::embed_rows`])
+/// — no per-call copy of the whole table, which on the decode path used
+/// to cost an O(vocab·d) allocation *per token*.
 pub(crate) fn embed_tokens<S: super::weights::ParamSource>(
     src: &mut S,
     tokens: &IntTensor,
     d: usize,
     is_opt: bool,
     pos0: usize,
-) -> Result<(Tensor, Tensor)> {
+) -> Result<Tensor> {
     let (b, t) = (tokens.shape[0], tokens.shape[1]);
-    let tok_emb = src.get("tok_emb")?;
-    let mut x = Tensor::zeros(&[b * t, d]);
-    for (r, &tokid) in tokens.data.iter().enumerate() {
-        x.row_mut(r).copy_from_slice(tok_emb.row(tokid as usize));
-    }
+    let mut x = src.embed_rows(&tokens.data)?;
+    anyhow::ensure!(
+        x.shape == vec![b * t, d],
+        "embedding width {:?} != model d_model {d}",
+        x.shape
+    );
     if is_opt {
-        let pos = src.get("pos_emb")?;
-        for bi in 0..b {
-            for ti in 0..t {
-                let r = bi * t + ti;
-                for (v, p) in x.row_mut(r).iter_mut().zip(pos.row(pos0 + ti)) {
-                    *v += p;
+        src.with_rows("pos_emb", pos0, t, &mut |pos| {
+            for bi in 0..b {
+                for ti in 0..t {
+                    let r = bi * t + ti;
+                    for (v, p) in
+                        x.row_mut(r).iter_mut().zip(&pos[ti * d..(ti + 1) * d])
+                    {
+                        *v += p;
+                    }
                 }
             }
-        }
+        })?;
     }
-    Ok((x, tok_emb))
+    Ok(x)
 }
 
-/// Final norm + tied-head logits (consumes `x`).
+/// Final norm + tied-head logits (consumes `x`). The logits product
+/// `x · tok_embᵀ` — the single largest per-forward transpose in the
+/// model — runs over the source's packed head panel when it holds one.
 pub(crate) fn head_logits<S: super::weights::ParamSource>(
     src: &mut S,
     mut x: Tensor,
     d: usize,
     is_opt: bool,
-    tok_emb: &Tensor,
 ) -> Result<Tensor> {
     if is_opt {
         layer_norm(&mut x.data, d, &src.get("lnf_g")?.data, &src.get("lnf_b")?.data);
     } else {
         rms_norm(&mut x.data, d, &src.get("lnf_g")?.data);
     }
-    Ok(matmul_bt(&x, tok_emb))
+    Ok(match src.get_packed("tok_emb")? {
+        Some(p) => matmul_packed(&x, &p),
+        None => matmul_bt(&x, &src.get("tok_emb")?),
+    })
 }
 
 /// Per-layer calibration activations (host mirror of capture.py), used by
@@ -344,7 +388,7 @@ pub fn forward_nll_src<S: super::weights::ParamSource>(
     let (b, t) = (tokens.shape[0], tokens.shape[1]);
     let rows = b * t;
 
-    let (mut x, tok_emb) = embed_tokens(src, tokens, d, is_opt, 0)?;
+    let mut x = embed_tokens(src, tokens, d, is_opt, 0)?;
     // cached once per process per head dim (rows beyond `t` are ignored
     // by the row-indexed consumers, so a longer cached table is fine)
     let rope = rope_cached(t, head_dim);
@@ -380,7 +424,7 @@ pub fn forward_nll_src<S: super::weights::ParamSource>(
 
     // logits = x · tok_embᵀ; per-token NLL without materializing softmax.
     // Rows are independent: fan out over row chunks of the NLL buffer.
-    let logits = head_logits(src, x, d, is_opt, &tok_emb)?; // [rows, V]
+    let logits = head_logits(src, x, d, is_opt)?; // [rows, V]
     let mut nll = Tensor::zeros(&[b, t]);
     let nll_rows = |r0: usize, chunk: &mut [f32]| {
         for (i, nv) in chunk.iter_mut().enumerate() {
@@ -559,9 +603,12 @@ pub(crate) fn attention(
     ctx
 }
 
-/// Host Gram accumulation X^T X (cross-check against the capture artifact).
+/// Host Gram accumulation XᵀX (cross-check against the capture
+/// artifact) — the transpose-free [`matmul_at`] kernel, bit-identical
+/// to the old `matmul(&x.t(), x)` without the [rows·c] transpose copy
+/// per capture leaf.
 pub fn host_gram(x: &Tensor) -> Tensor {
-    matmul(&x.t(), x)
+    matmul_at(x, x)
 }
 
 /// Column sums of a [rows, c] activation matrix — the capture mean leaves.

@@ -19,9 +19,10 @@
 //! backends.
 
 use super::host::LN_EPS;
-use super::weights::Weights;
+use super::weights::{PackCache, Weights};
 use crate::runtime::manifest::ModelSpec;
-use crate::tensor::matmul::matmul;
+use crate::tensor::matmul::{matmul, matmul_at, matmul_bt};
+use crate::tensor::pack::matmul_packed;
 use crate::tensor::{IntTensor, Tensor};
 use anyhow::Result;
 
@@ -193,12 +194,31 @@ fn rope_rows_bwd(x: &mut Tensor, b: usize, t: usize, n_heads: usize, dh: usize, 
 
 // ---------------------------------------------------------------- linear
 
-/// y = x·Wᵀ (+ b).
-fn linear_fwd(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Tensor {
-    super::host::linear(x, w, b)
+/// y = x·Wᵀ (+ b) through the pack cache when one is supplied (the
+/// gradcol entry runs over `Session::pack`'s plan), unpacked fallback
+/// otherwise — bit-identical either way by the lane-kernel contract.
+fn lin_fwd_p(
+    w: &Weights,
+    packs: Option<&PackCache>,
+    l: usize,
+    name: &str,
+    b: Option<&Tensor>,
+    x: &Tensor,
+) -> Result<Tensor> {
+    let mut y = match packs.and_then(|p| p.get_l(l, name)) {
+        Some(pm) => matmul_packed(x, &pm),
+        None => matmul_bt(x, &w.get_l(l, name)?),
+    };
+    if let Some(b) = b {
+        super::host::add_bias(&mut y, b);
+    }
+    Ok(y)
 }
 
-/// dW += dyᵀ·x, db += Σ_rows dy; returns dx = dy·W.
+/// dW += dyᵀ·x, db += Σ_rows dy; returns dx = dy·W. The weight gradient
+/// runs through the transpose-free [`matmul_at`] kernel — bit-identical
+/// to the old `matmul(&dy.t(), x)` without the per-train-step [R·out]
+/// transpose copy.
 fn linear_bwd(
     dy: &Tensor,
     x: &Tensor,
@@ -206,7 +226,7 @@ fn linear_bwd(
     dw: &mut Tensor,
     db: Option<&mut Vec<f32>>,
 ) -> Tensor {
-    let dwt = matmul(&dy.t(), x);
+    let dwt = matmul_at(dy, x);
     for (a, v) in dw.data.iter_mut().zip(&dwt.data) {
         *a += v;
     }
@@ -283,6 +303,20 @@ pub fn loss_and_grad(
     tokens: &IntTensor,
     targets: &IntTensor,
 ) -> Result<(f32, Tensor)> {
+    loss_and_grad_packed(w, None, tokens, targets)
+}
+
+/// [`loss_and_grad`] with an optional pack cache: the forward linears
+/// (and the logits head) consume pre-packed panels, the backward works
+/// off the resident raw weights — outputs are bit-identical with and
+/// without the cache. The train step passes `None` (its weights change
+/// every step); the gradcol entry passes `Session::pack`'s cache.
+pub fn loss_and_grad_packed(
+    w: &Weights,
+    packs: Option<&PackCache>,
+    tokens: &IntTensor,
+    targets: &IntTensor,
+) -> Result<(f32, Tensor)> {
     let spec = &w.spec;
     let (b, t) = (tokens.shape[0], tokens.shape[1]);
     let d = spec.d_model;
@@ -324,9 +358,9 @@ pub fn loss_and_grad(
         let bq = if is_opt { Some(w.get_l(l, "bq")?) } else { None };
         let bk = if is_opt { Some(w.get_l(l, "bk")?) } else { None };
         let bv = if is_opt { Some(w.get_l(l, "bv")?) } else { None };
-        let mut q = linear_fwd(&x_ln1, &w.get_l(l, "wq")?, bq.as_ref());
-        let mut k = linear_fwd(&x_ln1, &w.get_l(l, "wk")?, bk.as_ref());
-        let v = linear_fwd(&x_ln1, &w.get_l(l, "wv")?, bv.as_ref());
+        let mut q = lin_fwd_p(w, packs, l, "wq", bq.as_ref(), &x_ln1)?;
+        let mut k = lin_fwd_p(w, packs, l, "wk", bk.as_ref(), &x_ln1)?;
+        let v = lin_fwd_p(w, packs, l, "wv", bv.as_ref(), &x_ln1)?;
         if !is_opt {
             rope_rows(&mut q, b, t, n_heads, dh, &rope.0, &rope.1);
             rope_rows(&mut k, b, t, n_heads, dh, &rope.0, &rope.1);
@@ -407,7 +441,7 @@ pub fn loss_and_grad(
                 place(i, fwd_block(i / n_heads, i % n_heads));
             }
         }
-        let attn_out = linear_fwd(&ctx, &w.get_l(l, "wo")?, Some(&w.get_l(l, "bo")?));
+        let attn_out = lin_fwd_p(w, packs, l, "wo", Some(&w.get_l(l, "bo")?), &ctx)?;
         for (xv, av) in x.data.iter_mut().zip(&attn_out.data) {
             *xv += av;
         }
@@ -418,15 +452,15 @@ pub fn loss_and_grad(
             rms_norm_fwd(&x, &w.get_l(l, "ln2_g")?.data)
         };
         let (ffn_a, ffn_u, h) = if is_opt {
-            let a = linear_fwd(&x_ln2, &w.get_l(l, "fc1")?, Some(&w.get_l(l, "bfc1")?));
+            let a = lin_fwd_p(w, packs, l, "fc1", Some(&w.get_l(l, "bfc1")?), &x_ln2)?;
             let mut h = a.clone();
             for v in h.data.iter_mut() {
                 *v = v.max(0.0);
             }
             (a, None, h)
         } else {
-            let g = linear_fwd(&x_ln2, &w.get_l(l, "w_gate")?, None);
-            let u = linear_fwd(&x_ln2, &w.get_l(l, "w_up")?, None);
+            let g = lin_fwd_p(w, packs, l, "w_gate", None, &x_ln2)?;
+            let u = lin_fwd_p(w, packs, l, "w_up", None, &x_ln2)?;
             let mut h = u.clone();
             for (hv, gv) in h.data.iter_mut().zip(&g.data) {
                 let sg = 1.0 / (1.0 + (-gv).exp());
@@ -435,9 +469,9 @@ pub fn loss_and_grad(
             (g, Some(u), h)
         };
         let ffn_out = if is_opt {
-            linear_fwd(&h, &w.get_l(l, "fc2")?, Some(&w.get_l(l, "bfc2")?))
+            lin_fwd_p(w, packs, l, "fc2", Some(&w.get_l(l, "bfc2")?), &h)?
         } else {
-            linear_fwd(&h, &w.get_l(l, "w_down")?, Some(&w.get_l(l, "b_down")?))
+            lin_fwd_p(w, packs, l, "w_down", Some(&w.get_l(l, "b_down")?), &h)?
         };
         for (xv, fv) in x.data.iter_mut().zip(&ffn_out.data) {
             *xv += fv;
@@ -471,7 +505,10 @@ pub fn loss_and_grad(
     // Rows are independent; the per-row NLLs land in a buffer and the
     // f64 loss reduction stays serial in row order, so the loss is
     // bit-identical for any pool width.
-    let mut logits = crate::tensor::matmul::matmul_bt(&x_n, &tok_emb); // [R, V]
+    let mut logits = match packs.and_then(|p| p.get("tok_emb")) {
+        Some(pm) => matmul_packed(&x_n, &pm), // packed head panel, same bits
+        None => matmul_bt(&x_n, &tok_emb),
+    }; // [R, V]
     let vocab = spec.vocab;
     let mut row_nll = vec![0.0f32; rows];
     let softmax_rows = |r0: usize, lrows: &mut [f32], nrows: &mut [f32]| {
@@ -526,7 +563,7 @@ pub fn loss_and_grad(
     let dlogits = logits;
 
     let dx_n = matmul(&dlogits, &tok_emb); // [R, d]
-    grad.add(w, "tok_emb", &matmul(&dlogits.t(), &x_n))?;
+    grad.add(w, "tok_emb", &matmul_at(&dlogits, &x_n))?;
 
     let mut dx = if is_opt {
         let mut dg = vec![0.0f32; d];

@@ -15,4 +15,6 @@ pub mod zoo;
 pub use compact::CompactModel;
 pub use decode::{GenerateOpts, Generation, KvCache, Sampler};
 pub use mask::PruneMask;
-pub use weights::{DenseParams, ParamSource, Weights};
+pub use weights::{
+    DenseParams, PackCache, PackedDenseParams, PackedWeights, ParamSource, Weights,
+};

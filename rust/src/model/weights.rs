@@ -1,13 +1,19 @@
 //! Weight store: a single packed f32 vector in manifest parameter order
-//! (the runtime currency), with named 2-D/1-D views for the pruning math.
+//! (the runtime currency), with named 2-D/1-D views for the pruning math
+//! — plus the persistent pack cache ([`PackCache`] / [`PackedWeights`])
+//! that holds every linear weight pre-packed in the kernel layout, built
+//! exactly once per weight set and consumed by every forward, prefill
+//! and decode step.
 
 use crate::runtime::manifest::ModelSpec;
 use crate::tensor::io::TensorFile;
+use crate::tensor::pack::PackedMat;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Where a forward pass gets its parameters from. The host forward
 /// ([`super::host::forward_nll_src`]) pulls globals (`tok_emb`,
@@ -15,11 +21,15 @@ use std::path::Path;
 /// [`ParamSource::get_l`], calling [`ParamSource::layer_done`] once it
 /// has consumed a layer — layers are always visited in order 0..L.
 ///
-/// Two sources exist: [`DenseParams`] (a fully resident [`Weights`],
-/// the classic path) and `runtime::store::StreamingParams` (per-layer
-/// shards loaded lazily with background prefetch, peak-resident weights
-/// of O(one layer)). Both hand back the same bytes, so outputs are
-/// bit-identical by construction.
+/// Three sources exist: [`DenseParams`] (a fully resident [`Weights`],
+/// the classic unpacked path), [`PackedDenseParams`] (resident weights
+/// plus a [`PackCache`] of pre-packed linear weights — what
+/// `Session::pack` builds once per weight set) and
+/// `runtime::store::StreamingParams` (per-layer shards loaded lazily
+/// with background prefetch that also packs the next layer while the
+/// current one executes). All hand back the same bytes and the packed
+/// and unpacked kernels share one reduction order, so outputs are
+/// bit-identical across sources by construction.
 pub trait ParamSource {
     fn spec(&self) -> &ModelSpec;
 
@@ -28,6 +38,53 @@ pub trait ParamSource {
 
     /// A layer-scoped parameter, e.g. `get_l(2, "wq")`.
     fn get_l(&mut self, l: usize, short: &str) -> Result<Tensor>;
+
+    /// A pre-packed (transpose-free) view of the 2-D global weight
+    /// `name` for the `x·Wᵀ` hot path, if this source holds one.
+    /// `Ok(None)` sends the caller down the unpacked [`ParamSource::get`]
+    /// path — packed and unpacked products are bit-identical by the
+    /// kernel contract (`crate::tensor::pack`), so this is purely a
+    /// latency decision, never a numerics one.
+    fn get_packed(&mut self, _name: &str) -> Result<Option<Arc<PackedMat>>> {
+        Ok(None)
+    }
+
+    /// Layer-scoped [`ParamSource::get_packed`].
+    fn get_l_packed(&mut self, _l: usize, _short: &str) -> Result<Option<Arc<PackedMat>>> {
+        Ok(None)
+    }
+
+    /// Gather embedding rows `ids` (one per output row) into a fresh
+    /// [ids.len(), d] tensor. The default copies the whole table via
+    /// [`ParamSource::get`]; resident sources override to gather
+    /// straight from their backing store, so the per-forward (and
+    /// per-decode-token) table copy disappears.
+    fn embed_rows(&mut self, ids: &[i32]) -> Result<Tensor> {
+        let te = self.get("tok_emb")?;
+        gather_rows(&te.data, te.shape[0], te.shape[1], ids)
+    }
+
+    /// Visit rows [row0, row0+count) of the 2-D param `name` without
+    /// copying the rest of the table (the OPT positional-embedding add).
+    /// Default copies via [`ParamSource::get`]; resident sources
+    /// override to borrow the rows in place.
+    fn with_rows(
+        &mut self,
+        name: &str,
+        row0: usize,
+        count: usize,
+        f: &mut dyn FnMut(&[f32]),
+    ) -> Result<()> {
+        let t = self.get(name)?;
+        let (rows, c) = t.dims2();
+        anyhow::ensure!(
+            row0 + count <= rows,
+            "rows [{row0}, {}) outside '{name}' [{rows}, {c}]",
+            row0 + count
+        );
+        f(&t.data[row0 * c..(row0 + count) * c]);
+        Ok(())
+    }
 
     /// The forward is done reading layer `l` (streaming sources release
     /// the shard here; dense sources ignore it).
@@ -44,7 +101,23 @@ pub trait ParamSource {
     }
 }
 
-/// The trivial [`ParamSource`]: every parameter is already resident.
+/// Row gather shared by every `embed_rows` implementation: table is a
+/// row-major [rows, d] slice; ids are validated loudly (the callers
+/// validate against the vocab first, this guards the table itself).
+pub(crate) fn gather_rows(table: &[f32], rows: usize, d: usize, ids: &[i32]) -> Result<Tensor> {
+    debug_assert_eq!(table.len(), rows * d);
+    let mut x = Tensor::zeros(&[ids.len(), d]);
+    for (r, &id) in ids.iter().enumerate() {
+        let id = id as usize;
+        anyhow::ensure!(id < rows, "embedding row {id} outside table [{rows}, {d}]");
+        x.row_mut(r).copy_from_slice(&table[id * d..(id + 1) * d]);
+    }
+    Ok(x)
+}
+
+/// The trivial [`ParamSource`]: every parameter is already resident
+/// (unpacked — linears pay the per-call `matmul_bt` path; the baseline
+/// the packed benches compare against).
 pub struct DenseParams<'a>(pub &'a Weights);
 
 impl ParamSource for DenseParams<'_> {
@@ -56,6 +129,209 @@ impl ParamSource for DenseParams<'_> {
     }
     fn get_l(&mut self, l: usize, short: &str) -> Result<Tensor> {
         self.0.get_l(l, short)
+    }
+    fn embed_rows(&mut self, ids: &[i32]) -> Result<Tensor> {
+        let (table, shape) = self.0.view("tok_emb")?;
+        gather_rows(table, shape[0], shape[1], ids)
+    }
+    fn with_rows(
+        &mut self,
+        name: &str,
+        row0: usize,
+        count: usize,
+        f: &mut dyn FnMut(&[f32]),
+    ) -> Result<()> {
+        dense_with_rows(self.0, name, row0, count, f)
+    }
+}
+
+fn dense_with_rows(
+    w: &Weights,
+    name: &str,
+    row0: usize,
+    count: usize,
+    f: &mut dyn FnMut(&[f32]),
+) -> Result<()> {
+    let (data, shape) = w.view(name)?;
+    anyhow::ensure!(shape.len() == 2, "'{name}' is not 2-D: {shape:?}");
+    let (rows, c) = (shape[0], shape[1]);
+    anyhow::ensure!(
+        row0 + count <= rows,
+        "rows [{row0}, {}) outside '{name}' [{rows}, {c}]",
+        row0 + count
+    );
+    f(&data[row0 * c..(row0 + count) * c]);
+    Ok(())
+}
+
+// ------------------------------------------------------------ pack cache
+
+/// The per-layer weights that feed `linear` (and therefore pack) for a
+/// family — everything else (norm gains, biases, embeddings) stays raw.
+pub fn linear_shorts(family: &str) -> &'static [&'static str] {
+    if family == "opt" {
+        &["wq", "wk", "wv", "wo", "fc1", "fc2"]
+    } else {
+        &["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"]
+    }
+}
+
+/// Every linear weight of a model pre-packed in the kernel layout
+/// ([`PackedMat`], A·Bᵀ orientation) plus the tied logits head
+/// (`tok_emb`, the largest per-forward transpose of all). Built once
+/// per weight set on the ambient pool ([`PackCache::build`]) — pack
+/// bytes are pool-width-independent — and shared via `Arc` so decode
+/// loops clone handles, never panels.
+pub struct PackCache {
+    global: BTreeMap<String, Arc<PackedMat>>,
+    layers: Vec<BTreeMap<String, Arc<PackedMat>>>,
+}
+
+impl PackCache {
+    /// Pack every linear weight (per [`linear_shorts`]) and the tied
+    /// head of `w`, fanning the per-weight packs out on the ambient
+    /// worker pool. Each pack is a pure relayout, so the cache holds
+    /// identical bytes at any pool width.
+    pub fn build(w: &Weights) -> PackCache {
+        let shorts = linear_shorts(&w.spec.family);
+        // job list: (layer/global target, packed-vector offset, rows, cols)
+        struct Job {
+            layer: Option<(usize, String)>,
+            name: String,
+            off: usize,
+            rows: usize,
+            cols: usize,
+        }
+        let mut jobs: Vec<Job> = Vec::new();
+        for (name, shape) in &w.spec.params {
+            if shape.len() != 2 {
+                continue;
+            }
+            let layer = if name == "tok_emb" {
+                None
+            } else if let Some(rest) = name.strip_prefix("layers.") {
+                let mut it = rest.splitn(2, '.');
+                match (it.next().and_then(|s| s.parse::<usize>().ok()), it.next()) {
+                    (Some(l), Some(short)) if shorts.iter().any(|s| *s == short) => {
+                        Some((l, short.to_string()))
+                    }
+                    _ => continue,
+                }
+            } else {
+                continue;
+            };
+            let (off, _) = w.offset(name).expect("spec param has an offset");
+            jobs.push(Job { layer, name: name.clone(), off, rows: shape[0], cols: shape[1] });
+        }
+        let pool = crate::util::pool::current();
+        let packed: Vec<Arc<PackedMat>> = pool.map(jobs.len(), |i| {
+            let j = &jobs[i];
+            Arc::new(PackedMat::pack_bt_raw(
+                &w.packed.data[j.off..j.off + j.rows * j.cols],
+                j.rows,
+                j.cols,
+            ))
+        });
+        let mut cache = PackCache {
+            global: BTreeMap::new(),
+            layers: (0..w.spec.n_layers).map(|_| BTreeMap::new()).collect(),
+        };
+        for (job, pm) in jobs.into_iter().zip(packed) {
+            match job.layer {
+                Some((l, short)) => {
+                    cache.layers[l].insert(short, pm);
+                }
+                None => {
+                    cache.global.insert(job.name, pm);
+                }
+            }
+        }
+        cache
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<PackedMat>> {
+        self.global.get(name).cloned()
+    }
+
+    pub fn get_l(&self, l: usize, short: &str) -> Option<Arc<PackedMat>> {
+        self.layers.get(l).and_then(|m| m.get(short).cloned())
+    }
+
+    /// Number of packed weights held.
+    pub fn count(&self) -> usize {
+        self.global.len() + self.layers.iter().map(|m| m.len()).sum::<usize>()
+    }
+
+    /// Resident bytes of all packed panels (the pack-cache receipt).
+    pub fn bytes(&self) -> usize {
+        self.global.values().map(|p| p.bytes()).sum::<usize>()
+            + self
+                .layers
+                .iter()
+                .flat_map(|m| m.values())
+                .map(|p| p.bytes())
+                .sum::<usize>()
+    }
+}
+
+/// A weight set bundled with its pack cache — the operator plan
+/// `Session::pack` builds once and every entry, prefill and decode step
+/// consumes. The raw [`Weights`] stay resident for the paths that need
+/// original layouts (embedding gathers, backward, restoration).
+pub struct PackedWeights {
+    pub w: Weights,
+    pub packs: PackCache,
+}
+
+impl PackedWeights {
+    /// Build the pack cache for `w` on the ambient pool.
+    pub fn new(w: Weights) -> PackedWeights {
+        let packs = PackCache::build(&w);
+        PackedWeights { w, packs }
+    }
+
+    /// A [`ParamSource`] over this plan (cheap; borrows both parts).
+    pub fn source(&self) -> PackedDenseParams<'_> {
+        PackedDenseParams { w: &self.w, packs: &self.packs }
+    }
+}
+
+/// [`DenseParams`] plus a [`PackCache`]: resident weights whose linears
+/// resolve to pre-packed panels — zero per-call transpose/pack/copy work
+/// on every hot path, bit-identical outputs to the unpacked source.
+pub struct PackedDenseParams<'a> {
+    pub w: &'a Weights,
+    pub packs: &'a PackCache,
+}
+
+impl ParamSource for PackedDenseParams<'_> {
+    fn spec(&self) -> &ModelSpec {
+        &self.w.spec
+    }
+    fn get(&mut self, name: &str) -> Result<Tensor> {
+        self.w.get(name)
+    }
+    fn get_l(&mut self, l: usize, short: &str) -> Result<Tensor> {
+        self.w.get_l(l, short)
+    }
+    fn get_packed(&mut self, name: &str) -> Result<Option<Arc<PackedMat>>> {
+        Ok(self.packs.get(name))
+    }
+    fn get_l_packed(&mut self, l: usize, short: &str) -> Result<Option<Arc<PackedMat>>> {
+        Ok(self.packs.get_l(l, short))
+    }
+    fn embed_rows(&mut self, ids: &[i32]) -> Result<Tensor> {
+        let (table, shape) = self.w.view("tok_emb")?;
+        gather_rows(table, shape[0], shape[1], ids)
+    }
+    fn with_rows(
+        &mut self,
+        name: &str,
+        row0: usize,
+        count: usize,
+        f: &mut dyn FnMut(&[f32]),
+    ) -> Result<()> {
+        dense_with_rows(self.w, name, row0, count, f)
     }
 }
 
@@ -139,6 +415,13 @@ impl Weights {
             .get(name)
             .cloned()
             .with_context(|| format!("param '{name}' not found"))
+    }
+
+    /// Borrow a parameter's backing slice + shape without copying.
+    pub fn view(&self, name: &str) -> Result<(&[f32], Vec<usize>)> {
+        let (off, shape) = self.offset(name)?;
+        let n: usize = shape.iter().product();
+        Ok((&self.packed.data[off..off + n], shape))
     }
 
     /// Copy a parameter out as a Tensor.

@@ -117,7 +117,11 @@ pub fn prune(
 
     for &l in &layer_order {
         if opts.sequential && l > 0 {
-            // propagate pruning effects into the calibration activations
+            // propagate pruning effects into the calibration activations.
+            // The repack per iteration is required (earlier layers' weights
+            // changed) and is dwarfed by the capture forward; the one known
+            // redundancy is the untouched tok_emb head panel, ~1/L of the
+            // plan per iteration.
             stats = session.capture(&session.pack(&w.packed)?, &calib_tokens)?;
             sw.split("capture");
         }

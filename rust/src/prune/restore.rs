@@ -137,8 +137,8 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn make_gram(x: &Tensor) -> Tensor {
-        // G = Xᵀ X for X [s, n]
-        matmul(&x.t(), x)
+        // G = Xᵀ X for X [s, n] — the transpose-free kernel
+        crate::tensor::matmul::matmul_at(x, x)
     }
 
     #[test]

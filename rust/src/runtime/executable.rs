@@ -15,6 +15,7 @@
 use super::host_exec::HostEntry;
 use super::literal::Literal;
 use super::manifest::{ArtifactKind, ArtifactSpec, DType, Manifest};
+use crate::model::PackedWeights;
 use crate::tensor::{IntTensor, Tensor};
 use anyhow::{bail, Context, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -30,6 +31,19 @@ pub enum In<'a> {
     /// An opaque literal already in artifact form (fed back, e.g. the
     /// packed train state). Shape-checked against the input spec.
     Lit(&'a Literal),
+    /// A count-only placeholder for an input whose bytes the entry never
+    /// reads because they arrive via the packed operator plan (the
+    /// params input of `call_packed`). Validated against the manifest
+    /// spec exactly like a literal of that many elements — entries that
+    /// *would* read it (the plan-less fallback) fail loudly on the empty
+    /// placeholder rather than computing on garbage.
+    Elems(usize),
+}
+
+/// The shared empty literal standing in for [`In::Elems`] positions.
+fn empty_literal() -> &'static Literal {
+    static EMPTY: once_cell::sync::OnceCell<Literal> = once_cell::sync::OnceCell::new();
+    EMPTY.get_or_init(|| Literal::from_f32(&[0], Vec::new()))
 }
 
 /// Running counters for the perf breakdown (EXPERIMENTS.md §Perf).
@@ -90,6 +104,19 @@ impl Artifact {
 
     /// Execute with typed host inputs; returns output leaves as literals.
     pub fn call(&self, inputs: &[In]) -> Result<Vec<Literal>> {
+        self.call_packed(inputs, None)
+    }
+
+    /// [`Artifact::call`] with the session's packed operator plan: model
+    /// entries run over the plan's resident weights and pre-packed
+    /// linear panels (zero per-call weight copies/transposes) instead of
+    /// rebuilding weights from the params literal each call. Outputs are
+    /// bit-identical with or without the plan.
+    pub fn call_packed(
+        &self,
+        inputs: &[In],
+        model: Option<&PackedWeights>,
+    ) -> Result<Vec<Literal>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
                 "{}: got {} inputs, artifact wants {}",
@@ -130,6 +157,14 @@ impl Artifact {
                         );
                     }
                 }
+                In::Elems(n) => {
+                    if n != spec.numel() {
+                        bail!(
+                            "{} input {} ('{}'): {} elems declared, want {:?}",
+                            self.spec.name, i, spec.name, n, spec.shape
+                        );
+                    }
+                }
             }
         }
         // positional argument list preserving order
@@ -138,7 +173,8 @@ impl Artifact {
         for inp in inputs.iter().copied() {
             match inp {
                 In::Lit(l) => all.push(l),
-                _ => {
+                In::Elems(_) => all.push(empty_literal()),
+                In::F(_) | In::I(_) => {
                     all.push(&owned[oi]);
                     oi += 1;
                 }
@@ -149,7 +185,7 @@ impl Artifact {
         let t1 = std::time::Instant::now();
         let leaves = self
             .entry
-            .execute(&all)
+            .execute(&all, model)
             .with_context(|| format!("execute {}", self.spec.name))?;
         let exec = t1.elapsed();
 
@@ -205,7 +241,16 @@ impl Artifact {
 
     /// Convenience: execute and convert every f32 leaf to a Tensor.
     pub fn call_tensors(&self, inputs: &[In]) -> Result<Vec<Tensor>> {
-        let leaves = self.call(inputs)?;
+        self.call_tensors_packed(inputs, None)
+    }
+
+    /// [`Artifact::call_tensors`] over a packed operator plan.
+    pub fn call_tensors_packed(
+        &self,
+        inputs: &[In],
+        model: Option<&PackedWeights>,
+    ) -> Result<Vec<Tensor>> {
+        let leaves = self.call_packed(inputs, model)?;
         leaves
             .iter()
             .enumerate()

@@ -16,7 +16,7 @@
 
 use super::literal::Literal;
 use super::manifest::{Manifest, ModelSpec};
-use crate::model::{host, host_grad, Weights};
+use crate::model::{host, host_grad, PackedWeights, Weights};
 use crate::tensor::{IntTensor, Tensor};
 use anyhow::{bail, Context, Result};
 
@@ -75,21 +75,42 @@ impl HostEntry {
     }
 
     /// Execute with shape-validated inputs (the caller, `Artifact::call`,
-    /// checks shapes against the manifest first).
-    pub fn execute(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+    /// checks shapes against the manifest first). `model` is the
+    /// session's packed operator plan ([`PackedWeights`], built once per
+    /// weight set by `Session::pack`): when present, the model entries
+    /// run over it — resident weights + pre-packed linear panels, zero
+    /// per-call weight copies or transposes — instead of rebuilding
+    /// `Weights` from the params literal on every call. Both routes are
+    /// bit-identical (the packed/unpacked kernel contract), so `None`
+    /// (direct artifact pokes, tests) stays fully supported.
+    pub fn execute(
+        &self,
+        inputs: &[&Literal],
+        model: Option<&PackedWeights>,
+    ) -> Result<Vec<Literal>> {
         match self {
             HostEntry::FwdLoss(spec) => {
-                let w = weights_from(spec, inputs[0])?;
                 let toks = tokens_checked(inputs[1], spec.vocab, "tokens")?;
                 let tgts = tokens_checked(inputs[2], spec.vocab, "targets")?;
-                let (nll, _) = host::forward_nll(&w, &toks, &tgts, false)?;
+                let nll = match checked_model(spec, model)? {
+                    Some(m) => host::forward_nll_src(&mut m.source(), &toks, &tgts, false)?.0,
+                    None => {
+                        let w = weights_from(spec, inputs[0])?;
+                        host::forward_nll(&w, &toks, &tgts, false)?.0
+                    }
+                };
                 Ok(fwd_outputs(&nll))
             }
             HostEntry::Capture(spec) => {
-                let w = weights_from(spec, inputs[0])?;
                 let toks = tokens_checked(inputs[1], spec.vocab, "tokens")?;
                 // capture needs no targets; reuse tokens as dummies
-                let (_, caps) = host::forward_nll(&w, &toks, &toks, true)?;
+                let caps = match checked_model(spec, model)? {
+                    Some(m) => host::forward_nll_src(&mut m.source(), &toks, &toks, true)?.1,
+                    None => {
+                        let w = weights_from(spec, inputs[0])?;
+                        host::forward_nll(&w, &toks, &toks, true)?.1
+                    }
+                };
                 let mut out = Vec::with_capacity(caps.len() * 8);
                 for cap in &caps {
                     out.push(Literal::from_tensor(&host::host_gram(&cap.ln1)));
@@ -104,11 +125,18 @@ impl HostEntry {
                 Ok(out)
             }
             HostEntry::GradCol(spec) => {
-                let w = weights_from(spec, inputs[0])?;
                 let toks = tokens_checked(inputs[1], spec.vocab, "tokens")?;
                 let tgts = tokens_checked(inputs[2], spec.vocab, "targets")?;
-                let (_, grad) = host_grad::loss_and_grad(&w, &toks, &tgts)?;
-                let scores = host_grad::taylor_scores(&w, &grad)?;
+                let w_fallback;
+                let (w, packs) = match checked_model(spec, model)? {
+                    Some(m) => (&m.w, Some(&m.packs)),
+                    None => {
+                        w_fallback = weights_from(spec, inputs[0])?;
+                        (&w_fallback, None)
+                    }
+                };
+                let (_, grad) = host_grad::loss_and_grad_packed(w, packs, &toks, &tgts)?;
+                let scores = host_grad::taylor_scores(w, &grad)?;
                 let mut out = Vec::with_capacity(scores.len() * 2);
                 for (ffn, ov) in scores {
                     let nf = ffn.len();
@@ -187,6 +215,33 @@ fn parse_dims(s: &str, name: &str) -> Result<(usize, usize)> {
 
 fn weights_from(spec: &ModelSpec, params: &Literal) -> Result<Weights> {
     Weights::from_packed(spec, params.as_f32()?.to_vec())
+}
+
+/// Validate a packed operator plan against the entry it is about to
+/// serve: same model, same parameter count as the entry's spec. The
+/// plan is built by `Session::pack` from a length-checked vector, so
+/// this guards against cross-session misuse, not drift.
+fn checked_model<'m>(
+    spec: &ModelSpec,
+    model: Option<&'m PackedWeights>,
+) -> Result<Option<&'m PackedWeights>> {
+    let m = match model {
+        Some(m) => m,
+        None => return Ok(None),
+    };
+    anyhow::ensure!(
+        m.w.spec.name == spec.name,
+        "packed weights are for model '{}', entry runs '{}'",
+        m.w.spec.name,
+        spec.name
+    );
+    anyhow::ensure!(
+        m.w.packed.numel() == spec.n_params_elems(),
+        "packed weights hold {} params, model wants {}",
+        m.w.packed.numel(),
+        spec.n_params_elems()
+    );
+    Ok(Some(m))
 }
 
 fn tokens_checked(lit: &Literal, vocab: usize, what: &str) -> Result<IntTensor> {

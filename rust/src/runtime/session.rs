@@ -6,9 +6,14 @@
 //! [`Session::capture`], [`Session::gradcol`], [`Session::train_step`].
 //! All [`Literal`] packing and unpacking lives here, once:
 //!
-//! * [`PackedParams`] — the params vector uploaded into artifact form
-//!   exactly once per weight set ([`Session::pack`]); multi-batch loops
-//!   reuse it without per-call copies or re-validation.
+//! * [`PackedParams`] — the params vector panel-packed into the
+//!   persistent operator plan exactly once per weight set
+//!   ([`Session::pack`]): resident weights plus a `PackCache` of every
+//!   linear weight and the tied logits head in the kernel layout (the
+//!   artifact contract's params input is validated count-only via
+//!   `In::Elems` — no redundant literal copy). Multi-batch loops, eval
+//!   windows and decode tokens reuse the plan without per-call copies,
+//!   transposes or re-validation.
 //! * [`TrainState`] — the opaque packed Adam state `[3P]`, mutated in
 //!   place by [`Session::train_step`] and only unpacked on request.
 //!
@@ -25,10 +30,13 @@
 //! Autoregressive decode ([`Session::prefill`], [`Session::decode_step`],
 //! [`Session::generate`], [`Session::generate_streamed`]) bypasses the
 //! literal layer entirely — a per-step param upload would cost O(model)
-//! per token — and drives `model::decode` directly over a [`Weights`]
-//! (dense or compact) or a streaming store, inside the session's backend
-//! scope. Cached decode logits are bit-identical to a full-prefix
-//! re-forward on every backend (`rust/tests/test_decode.rs`).
+//! per token — and drives `model::decode` over the [`PackedParams`]
+//! plan (dense or compact weights, packed once at [`Session::pack`]) or
+//! a streaming store (which packs each shard on its prefetch thread),
+//! inside the session's backend scope. Cached decode logits are
+//! bit-identical to a full-prefix re-forward on every backend
+//! (`rust/tests/test_decode.rs`), and the per-token loop performs zero
+//! pack/transpose work (`bench_hot_paths` packing section).
 
 use super::backend::{default_backend, Backend};
 use super::executable::{Artifact, In};
@@ -37,7 +45,7 @@ use super::manifest::{Manifest, ModelSpec};
 use super::store::{ShardedWeights, StreamingParams};
 use crate::model::decode::{self, GenerateOpts, Generation, KvCache};
 use crate::model::host;
-use crate::model::weights::DenseParams;
+use crate::model::weights::{PackCache, PackedWeights};
 use crate::model::Weights;
 use crate::tensor::ops::add_assign;
 use crate::tensor::{IntTensor, Tensor};
@@ -146,10 +154,33 @@ pub struct FwdOut {
     pub tok_nll: Tensor,
 }
 
-/// A params vector in artifact form, built once by [`Session::pack`] and
-/// reused across entry calls. Opaque: the literal never leaves runtime/.
+/// The packed operator plan of one weight set, built once by
+/// [`Session::pack`] and reused across entry calls and decode steps.
+/// Holds two views:
+///
+/// * the resident [`Weights`] (original layouts: embedding gathers,
+///   backward, restoration — also what the entry contract validates
+///   against, via a count-only `In::Elems` input instead of a
+///   redundant params-literal copy);
+/// * the [`PackCache`] — every linear weight and the tied logits head
+///   pre-packed in the kernel layout, so no entry or decode step pays a
+///   per-call weight copy, transpose or pack ever again.
+///
+/// Opaque: the plan never leaves runtime/.
 pub struct PackedParams {
-    lit: Literal,
+    model: Arc<PackedWeights>,
+}
+
+impl PackedParams {
+    /// Resident bytes of the pre-packed panels (the pack-cache receipt).
+    pub fn pack_bytes(&self) -> usize {
+        self.model.packs.bytes()
+    }
+
+    /// Number of pre-packed weights in the plan.
+    pub fn pack_count(&self) -> usize {
+        self.model.packs.count()
+    }
 }
 
 /// The opaque packed Adam train state `[3P]` (params, m, v). Round-trips
@@ -212,7 +243,14 @@ impl<'m> Session<'m> {
 
     // ------------------------------------------------------------ packing
 
-    /// Upload a packed params vector into artifact form (length-checked).
+    /// Upload a packed params vector into artifact form (length-checked)
+    /// and build its packed operator plan: the weights become resident
+    /// once and every linear weight (plus the tied logits head) is
+    /// panel-packed exactly once, on this session's backend pool — pack
+    /// bytes are pool-width-independent. Everything downstream
+    /// (`fwd_loss`/`capture`/`gradcol`, `prefill`/`decode_step`/
+    /// `generate`) consumes the plan with zero per-call transpose or
+    /// pack work.
     pub fn pack(&self, params: &Tensor) -> Result<PackedParams> {
         anyhow::ensure!(
             params.numel() == self.spec.n_params_elems(),
@@ -221,9 +259,12 @@ impl<'m> Session<'m> {
             self.spec.n_params_elems(),
             self.spec.name
         );
-        Ok(PackedParams {
-            lit: Literal::from_f32(&[params.numel()], params.data.clone()),
-        })
+        let w = Weights::from_packed(&self.spec, params.data.clone())?;
+        let packs = {
+            let _exec = self.backend.enter();
+            PackCache::build(&w)
+        };
+        Ok(PackedParams { model: Arc::new(PackedWeights { w, packs }) })
     }
 
     // ------------------------------------------------------------ entries
@@ -237,7 +278,10 @@ impl<'m> Session<'m> {
     ) -> Result<FwdOut> {
         let a = self.entry(Entry::FwdLoss)?;
         let _exec = self.backend.enter();
-        let leaves = a.call(&[In::Lit(&params.lit), In::I(tokens), In::I(targets)])?;
+        let leaves = a.call_packed(
+            &[In::Elems(params.model.w.packed.numel()), In::I(tokens), In::I(targets)],
+            Some(&params.model),
+        )?;
         let mean = leaves[0].as_f32()?[0];
         let seq = leaves[1].as_f32()?.to_vec();
         let tok = a.to_tensor(2, &leaves[2])?;
@@ -258,7 +302,10 @@ impl<'m> Session<'m> {
         let mut acc: Option<Vec<LayerStats>> = None;
         let mut rows = 0usize;
         for toks in batches {
-            let outs = a.call_tensors(&[In::Lit(&params.lit), In::I(toks)])?;
+            let outs = a.call_tensors_packed(
+                &[In::Elems(params.model.w.packed.numel()), In::I(toks)],
+                Some(&params.model),
+            )?;
             anyhow::ensure!(
                 outs.len() == leaves_per_layer * n_layers,
                 "capture output arity"
@@ -297,7 +344,10 @@ impl<'m> Session<'m> {
         let n_layers = self.spec.n_layers;
         let mut acc: Vec<GradScores> = Vec::new();
         for (toks, tgts) in batches {
-            let outs = a.call_tensors(&[In::Lit(&params.lit), In::I(toks), In::I(tgts)])?;
+            let outs = a.call_tensors_packed(
+                &[In::Elems(params.model.w.packed.numel()), In::I(toks), In::I(tgts)],
+                Some(&params.model),
+            )?;
             anyhow::ensure!(outs.len() == 2 * n_layers, "gradcol output arity");
             if acc.is_empty() {
                 for l in 0..n_layers {
@@ -417,11 +467,12 @@ impl<'m> Session<'m> {
 
     // ------------------------------------------------------------- decode
 
-    fn check_decode_weights(&self, w: &Weights) -> Result<()> {
+    fn check_decode_params(&self, p: &PackedParams) -> Result<()> {
         anyhow::ensure!(
-            w.spec.name == self.spec.name && w.spec.params == self.spec.params,
+            p.model.w.spec.name == self.spec.name
+                && p.model.w.spec.params == self.spec.params,
             "weights are for model '{}', session runs '{}'",
-            w.spec.name,
+            p.model.w.spec.name,
             self.spec.name
         );
         Ok(())
@@ -445,19 +496,21 @@ impl<'m> Session<'m> {
     }
 
     /// Run the whole prompt once, populating `cache`, and return the
-    /// last-position logits [b, vocab]. Decode entries take the weights
-    /// directly (no [`PackedParams`]): uploading a literal per step
-    /// would copy the whole model per token.
+    /// last-position logits [b, vocab]. Decode entries run over the
+    /// packed operator plan [`Session::pack`] built — the per-token hot
+    /// loop does zero weight copies, transposes or packs (uploading a
+    /// literal per step would copy the whole model per token; packing
+    /// per step would transpose it).
     pub fn prefill(
         &self,
-        w: &Weights,
+        params: &PackedParams,
         prompt: &IntTensor,
         cache: &mut KvCache,
     ) -> Result<Tensor> {
-        self.check_decode_weights(w)?;
+        self.check_decode_params(params)?;
         self.check_prompt(prompt)?;
         let _exec = self.backend.enter();
-        decode::prefill_src(&mut DenseParams(w), prompt, cache)
+        decode::prefill_src(&mut params.model.source(), prompt, cache)
     }
 
     /// Process one token per sequence against the cache — O(prefix) per
@@ -465,28 +518,29 @@ impl<'m> Session<'m> {
     /// one id per cached sequence.
     pub fn decode_step(
         &self,
-        w: &Weights,
+        params: &PackedParams,
         tokens: &IntTensor,
         cache: &mut KvCache,
     ) -> Result<Tensor> {
-        self.check_decode_weights(w)?;
+        self.check_decode_params(params)?;
         super::host_exec::validate_tokens(tokens, self.spec.vocab, "tokens")?;
         let _exec = self.backend.enter();
-        decode::decode_step_src(&mut DenseParams(w), tokens, cache)
+        decode::decode_step_src(&mut params.model.source(), tokens, cache)
     }
 
     /// Batched generation (greedy or seeded top-k) from a prompt:
-    /// prefill + one cached decode step per new token.
+    /// prefill + one cached decode step per new token, all over the
+    /// packed operator plan.
     pub fn generate(
         &self,
-        w: &Weights,
+        params: &PackedParams,
         prompt: &IntTensor,
         opts: &GenerateOpts,
     ) -> Result<Generation> {
-        self.check_decode_weights(w)?;
+        self.check_decode_params(params)?;
         self.check_prompt(prompt)?;
         let _exec = self.backend.enter();
-        decode::generate_src(&mut DenseParams(w), prompt, opts)
+        decode::generate_src(&mut params.model.source(), prompt, opts)
     }
 
     /// [`Session::generate`] streaming the weights from a sharded store:

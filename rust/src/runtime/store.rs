@@ -27,9 +27,10 @@
 //!   therefore the outputs are bit-identical to the monolithic path.
 
 use crate::model::compact::CompactModel;
-use crate::model::weights::{ParamSource, Weights};
+use crate::model::weights::{gather_rows, linear_shorts, ParamSource, Weights};
 use crate::runtime::manifest::ModelSpec;
 use crate::tensor::io::TensorFile;
+use crate::tensor::pack::PackedMat;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -353,10 +354,17 @@ pub fn write_shards(dir: &Path, cm: &CompactModel) -> Result<ShardIndex> {
 /// bytes to `resident` (and bumps `peak`); dropping the buffer subtracts
 /// them. `peak_resident_bytes` is the receipt that streaming eval never
 /// materialized more than one layer (plus prefetch) of weights.
+/// Pack mirrors (the per-layer packed panels + the persistent head
+/// pack a `StreamingParams` builds) are accounted separately in
+/// `pack_resident`/`pack_peak` — same lifecycle discipline, distinct
+/// counters, so the shard-payload bound stays comparable across
+/// versions while total memory remains honest.
 #[derive(Default)]
 struct StreamStats {
     resident: AtomicUsize,
     peak: AtomicUsize,
+    pack_resident: AtomicUsize,
+    pack_peak: AtomicUsize,
     loads: AtomicU64,
     load_ns: AtomicU64,
 }
@@ -371,13 +379,25 @@ impl StreamStats {
     fn on_drop(&self, bytes: usize) {
         self.resident.fetch_sub(bytes, Ordering::Relaxed);
     }
+    fn on_pack(&self, bytes: usize) {
+        let now = self.pack_resident.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.pack_peak.fetch_max(now, Ordering::Relaxed);
+    }
+    fn on_pack_drop(&self, bytes: usize) {
+        self.pack_resident.fetch_sub(bytes, Ordering::Relaxed);
+    }
 }
 
 /// A point-in-time view of a store's load/residency counters.
 #[derive(Debug, Clone, Copy)]
 pub struct StreamSnapshot {
+    /// Resident shard-payload bytes (raw weights).
     pub resident_bytes: usize,
     pub peak_resident_bytes: usize,
+    /// Resident packed-panel bytes (the streaming pack mirrors: current
+    /// + prefetched layer packs, plus the persistent head pack).
+    pub pack_resident_bytes: usize,
+    pub peak_pack_bytes: usize,
     pub loads: u64,
     pub load_s: f64,
 }
@@ -392,6 +412,66 @@ struct StoreInner {
     /// Param name → (packed offset, shape), spec order.
     offsets: BTreeMap<String, (usize, Vec<usize>)>,
     stats: StreamStats,
+}
+
+/// Short name → packed panel for one streamed scope (a layer, or the
+/// embed shard's tied head).
+type PackMap = BTreeMap<String, Arc<PackedMat>>;
+
+/// A pack set with residency accounting, mirroring [`ShardBuf`]'s
+/// discipline: bytes register in the store's pack counters at build and
+/// release on drop (with the shard at `layer_done`, or with the source
+/// for the persistent head pack).
+struct TrackedPacks {
+    packs: PackMap,
+    bytes: usize,
+    store: Arc<StoreInner>,
+}
+
+impl TrackedPacks {
+    fn new(packs: PackMap, store: Arc<StoreInner>) -> TrackedPacks {
+        let bytes: usize = packs.values().map(|p| p.bytes()).sum();
+        store.stats.on_pack(bytes);
+        TrackedPacks { packs, bytes, store }
+    }
+
+    fn get(&self, short: &str) -> Option<Arc<PackedMat>> {
+        self.packs.get(short).cloned()
+    }
+}
+
+impl Drop for TrackedPacks {
+    fn drop(&mut self) {
+        self.store.stats.on_pack_drop(self.bytes);
+    }
+}
+
+impl StoreInner {
+    /// Pack every linear weight of layer `l` straight out of its shard
+    /// payload — runs on the prefetch thread while the previous layer
+    /// executes, so streamed-forward packing rides the I/O overlap for
+    /// free (and on the synchronous path it simply replaces the per-call
+    /// transpose `matmul_bt` used to pay). Pure relayout: bytes are
+    /// thread- and pool-width-independent, and register in the store's
+    /// pack-residency counters.
+    fn pack_layer(inner: &Arc<StoreInner>, l: usize, shard: &[f32]) -> TrackedPacks {
+        let (start, _end) = inner.layout.layers[l];
+        let mut packs = PackMap::new();
+        for short in linear_shorts(&inner.spec.family) {
+            let name = Weights::pname(l, short);
+            if let Some((off, shape)) = inner.offsets.get(&name) {
+                if shape.len() == 2 {
+                    let (n, k) = (shape[0], shape[1]);
+                    let local = off - start;
+                    packs.insert(
+                        (*short).to_string(),
+                        Arc::new(PackedMat::pack_bt_raw(&shard[local..local + n * k], n, k)),
+                    );
+                }
+            }
+        }
+        TrackedPacks::new(packs, inner.clone())
+    }
 }
 
 /// Lazy handle on a sharded compact model. Cheap to clone (shared
@@ -481,6 +561,8 @@ impl ShardedWeights {
         StreamSnapshot {
             resident_bytes: s.resident.load(Ordering::Relaxed),
             peak_resident_bytes: s.peak.load(Ordering::Relaxed),
+            pack_resident_bytes: s.pack_resident.load(Ordering::Relaxed),
+            peak_pack_bytes: s.pack_peak.load(Ordering::Relaxed),
             loads: s.loads.load(Ordering::Relaxed),
             load_s: s.load_ns.load(Ordering::Relaxed) as f64 / 1e9,
         }
@@ -490,6 +572,8 @@ impl ShardedWeights {
     pub fn reset_stats(&self) {
         let s = &self.inner.stats;
         s.peak.store(s.resident.load(Ordering::Relaxed), Ordering::Relaxed);
+        s.pack_peak
+            .store(s.pack_resident.load(Ordering::Relaxed), Ordering::Relaxed);
         s.loads.store(0, Ordering::Relaxed);
         s.load_ns.store(0, Ordering::Relaxed);
     }
@@ -564,7 +648,9 @@ impl ShardedWeights {
 
 // ------------------------------------------------------- streaming source
 
-fn join_shard(h: JoinHandle<Result<ShardBuf>>) -> Result<ShardBuf> {
+fn join_shard(
+    h: JoinHandle<Result<(ShardBuf, TrackedPacks)>>,
+) -> Result<(ShardBuf, TrackedPacks)> {
     match h.join() {
         Ok(r) => r,
         Err(_) => bail!("shard prefetch thread panicked"),
@@ -572,18 +658,27 @@ fn join_shard(h: JoinHandle<Result<ShardBuf>>) -> Result<ShardBuf> {
 }
 
 /// A [`ParamSource`] streaming a [`ShardedWeights`]: the embed/head
-/// shard stays resident for the whole forward; layer shards are served
-/// strictly in order, each released via `layer_done` before the next is
+/// shard stays resident for the whole forward (with the tied logits
+/// head packed once at construction); layer shards are served strictly
+/// in order, each released via `layer_done` before the next is
 /// requested. With `prefetch > 0`, up to `prefetch` shards ahead of the
-/// current layer load on background I/O threads while it executes —
-/// peak residency is the embed shard plus at most `1 + prefetch` layer
-/// shards.
+/// current layer load **and pack** on background threads while it
+/// executes — packing shard l+1 rides the existing I/O overlap, so the
+/// compute thread never transposes or packs a weight. Peak shard
+/// residency is the embed shard plus at most `1 + prefetch` layer
+/// shards; each pack mirrors its 2-D weights (same order of bytes,
+/// dropped with the shard at `layer_done`) and is accounted separately
+/// in [`StreamSnapshot::pack_resident_bytes`] / `peak_pack_bytes`, so
+/// total streamed memory stays an honest receipt.
 pub struct StreamingParams {
     store: ShardedWeights,
     embed: ShardBuf,
-    cur: Option<(usize, ShardBuf)>,
+    /// The tied logits head, packed once per source (survives rewinds,
+    /// so a whole generation packs it exactly once).
+    embed_packs: TrackedPacks,
+    cur: Option<(usize, ShardBuf, TrackedPacks)>,
     /// In-flight prefetches, ascending layer order (front = next layer).
-    pending: VecDeque<(usize, JoinHandle<Result<ShardBuf>>)>,
+    pending: VecDeque<(usize, JoinHandle<Result<(ShardBuf, TrackedPacks)>>)>,
     /// The next layer index not yet handed to a prefetch thread.
     next_spawn: usize,
     prefetch: usize,
@@ -592,9 +687,32 @@ pub struct StreamingParams {
 impl StreamingParams {
     pub fn new(store: &ShardedWeights, prefetch: usize) -> Result<StreamingParams> {
         let embed = store.load_embed()?;
+        let embed_packs = {
+            let inner = &store.inner;
+            let mut packs = PackMap::new();
+            if let Some((off, shape)) = inner.offsets.get("tok_emb") {
+                if shape.len() == 2
+                    && *off >= inner.layout.prefix.0
+                    && off + shape[0] * shape[1] <= inner.layout.prefix.1
+                {
+                    let (v, d) = (shape[0], shape[1]);
+                    let local = off - inner.layout.prefix.0;
+                    packs.insert(
+                        "tok_emb".to_string(),
+                        Arc::new(PackedMat::pack_bt_raw(
+                            &embed.data[local..local + v * d],
+                            v,
+                            d,
+                        )),
+                    );
+                }
+            }
+            TrackedPacks::new(packs, inner.clone())
+        };
         let mut sp = StreamingParams {
             store: store.clone(),
             embed,
+            embed_packs,
             cur: None,
             pending: VecDeque::new(),
             next_spawn: 0,
@@ -604,7 +722,9 @@ impl StreamingParams {
         Ok(sp)
     }
 
-    /// Keep up to `prefetch` shards in flight ahead of the consumer.
+    /// Keep up to `prefetch` shards in flight ahead of the consumer —
+    /// each background thread loads *and packs* its layer (serial pool
+    /// installed: the compute pool keeps its workers).
     fn top_up(&mut self) {
         while self.prefetch > 0
             && self.pending.len() < self.prefetch
@@ -612,16 +732,24 @@ impl StreamingParams {
         {
             let l = self.next_spawn;
             let st = self.store.clone();
-            self.pending.push_back((l, std::thread::spawn(move || st.load_layer(l))));
+            self.pending.push_back((
+                l,
+                std::thread::spawn(move || -> Result<(ShardBuf, TrackedPacks)> {
+                    let _serial = crate::util::pool::enter(crate::util::pool::serial());
+                    let buf = st.load_layer(l)?;
+                    let packs = StoreInner::pack_layer(&st.inner, l, &buf.data);
+                    Ok((buf, packs))
+                }),
+            ));
             self.next_spawn += 1;
         }
     }
 
     fn ensure_layer(&mut self, l: usize) -> Result<()> {
-        if matches!(&self.cur, Some((cl, _)) if *cl == l) {
+        if matches!(&self.cur, Some((cl, _, _)) if *cl == l) {
             return Ok(());
         }
-        let buf = match self.pending.pop_front() {
+        let (buf, packs) = match self.pending.pop_front() {
             Some((nl, h)) if nl == l => join_shard(h)?,
             Some((nl, h)) => {
                 // drain every stale prefetch before failing
@@ -635,13 +763,15 @@ impl StreamingParams {
                 );
             }
             None => {
-                // no prefetch in flight (depth 0, or a re-read): load
-                // synchronously and restart any prefetch run after `l`
+                // no prefetch in flight (depth 0, or a re-read): load +
+                // pack synchronously and restart any prefetch after `l`
                 self.next_spawn = self.next_spawn.max(l + 1);
-                self.store.load_layer(l)?
+                let buf = self.store.load_layer(l)?;
+                let packs = StoreInner::pack_layer(&self.store.inner, l, &buf.data);
+                (buf, packs)
             }
         };
-        self.cur = Some((l, buf)); // replaces (drops) the previous layer
+        self.cur = Some((l, buf, packs)); // replaces (drops) the previous layer
         self.top_up();
         Ok(())
     }
@@ -698,9 +828,79 @@ impl ParamSource for StreamingParams {
         Ok(Tensor::new(shape, buf.data[off - start..off - start + n].to_vec()))
     }
 
+    fn get_packed(
+        &mut self,
+        name: &str,
+    ) -> Result<Option<Arc<PackedMat>>> {
+        Ok(self.embed_packs.get(name))
+    }
+
+    fn get_l_packed(
+        &mut self,
+        l: usize,
+        short: &str,
+    ) -> Result<Option<Arc<PackedMat>>> {
+        self.ensure_layer(l)?;
+        let packs = &self.cur.as_ref().expect("ensure_layer set cur").2;
+        Ok(packs.get(short))
+    }
+
+    fn embed_rows(&mut self, ids: &[i32]) -> Result<Tensor> {
+        let inner = &self.store.inner;
+        let (off, shape) = inner
+            .offsets
+            .get("tok_emb")
+            .cloned()
+            .context("param 'tok_emb' not found")?;
+        anyhow::ensure!(shape.len() == 2, "'tok_emb' is not 2-D: {shape:?}");
+        let n: usize = shape.iter().product();
+        let lay = &inner.layout;
+        anyhow::ensure!(
+            off >= lay.prefix.0 && off + n <= lay.prefix.1,
+            "'tok_emb' lies outside the embed shard"
+        );
+        let local = off - lay.prefix.0;
+        gather_rows(&self.embed.data[local..local + n], shape[0], shape[1], ids)
+    }
+
+    fn with_rows(
+        &mut self,
+        name: &str,
+        row0: usize,
+        count: usize,
+        f: &mut dyn FnMut(&[f32]),
+    ) -> Result<()> {
+        // serve prefix/tail (embed-shard) params in place; layer params
+        // are never row-visited by the forward
+        let inner = &self.store.inner;
+        let (off, shape) = inner
+            .offsets
+            .get(name)
+            .cloned()
+            .with_context(|| format!("param '{name}' not found"))?;
+        anyhow::ensure!(shape.len() == 2, "'{name}' is not 2-D: {shape:?}");
+        let (rows, c) = (shape[0], shape[1]);
+        anyhow::ensure!(
+            row0 + count <= rows,
+            "rows [{row0}, {}) outside '{name}' [{rows}, {c}]",
+            row0 + count
+        );
+        let n = rows * c;
+        let lay = &inner.layout;
+        let local = if off >= lay.prefix.0 && off + n <= lay.prefix.1 {
+            off - lay.prefix.0
+        } else if off >= lay.tail.0 && off + n <= lay.tail.1 {
+            (lay.prefix.1 - lay.prefix.0) + (off - lay.tail.0)
+        } else {
+            bail!("param '{name}' is a layer parameter — read it via get_l");
+        };
+        f(&self.embed.data[local + row0 * c..local + (row0 + count) * c]);
+        Ok(())
+    }
+
     fn layer_done(&mut self, l: usize) -> Result<()> {
-        if matches!(&self.cur, Some((cl, _)) if *cl == l) {
-            self.cur = None; // drop the shard → residency falls
+        if matches!(&self.cur, Some((cl, _, _)) if *cl == l) {
+            self.cur = None; // drop the shard + its packs → residency falls
         }
         Ok(())
     }
@@ -708,7 +908,8 @@ impl ParamSource for StreamingParams {
     /// Restart the in-order pass at layer 0 (the decode loop runs one
     /// pass per generated token): drain any in-flight prefetches, drop
     /// the current layer shard, and re-prime the prefetch run — the
-    /// embed shard stays resident across passes.
+    /// embed shard *and its packed logits head* stay resident across
+    /// passes, so a whole generation packs the head exactly once.
     fn rewind(&mut self) -> Result<()> {
         for (_, h) in self.pending.drain(..) {
             let _ = h.join(); // result (and its buffer) dropped

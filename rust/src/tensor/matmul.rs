@@ -1,18 +1,106 @@
 //! Blocked host matmul — the hot path of both the host runtime backend
 //! (every linear layer and the logits product) and the pruning math
-//! (restoration assembles `B = W·G` per pruned operator). Cache-blocked
-//! with a k-innermost microkernel; large products fan out over output-row
-//! chunks on the ambient worker pool (`util::pool::current`). Each output
-//! row is computed by exactly one worker with the serial loop order, so
-//! results are bit-identical for every pool width. The `bench_hot_paths`
-//! bench tracks both paths (EXPERIMENTS.md §Perf).
+//! (restoration assembles `B = W·G` per pruned operator).
+//!
+//! ## The canonical reduction order
+//!
+//! Every matmul-family product in this crate reduces each output element
+//! with **one** discipline, implemented once in [`lane_accum`] (the
+//! unified lane microkernel): contributions accumulate in ascending-k
+//! order into a single accumulator per output lane, skipping exact zeros
+//! of the left operand. The callers differ only in how they address the
+//! operands:
+//!
+//! * [`matmul_into`] — the blocked multi-row kernel (k-major right
+//!   operand, one `lane_accum` call per (row, k-block));
+//! * [`crate::tensor::pack::matmul_packed`] — the same kernel over a
+//!   pre-packed ([`crate::tensor::pack::PackedMat`]) weight, including
+//!   its single-row decode path;
+//! * [`matvec_bt_into`] — the strided-B instance (B stored [n, k] as a
+//!   linear weight), unrolled over output-column lanes so the serial
+//!   accumulator chain of one column no longer bounds throughput;
+//! * [`matmul_at`] — the Aᵀ-indexed instance (transpose-free Gram /
+//!   backward products).
+//!
+//! Because the per-element order is shared, all of these are
+//! **bit-identical** to each other on the same logical product — across
+//! backends, pool widths, and packed/unpacked weight sources. That
+//! identity is the decode↔re-forward and packed↔unpacked contract
+//! (`rust/tests/{test_decode,test_pack}.rs`).
+//!
+//! [`dot`] is the one deliberate exception: a fixed 8-lane k-striped
+//! reduction used for *single vector-vector* products (attention scores,
+//! metric math), where the canonical single-accumulator chain cannot be
+//! vectorized. Its outputs never cross paths with a matmul-family
+//! product, so no bit contract spans the two orders.
+//!
+//! Large products fan out on the ambient worker pool
+//! (`util::pool::current`): multi-row over output-row chunks, single-row
+//! over output-column chunks. Each output element is computed by exactly
+//! one worker with the serial order, so results are bit-identical for
+//! every pool width. The `bench_hot_paths` bench tracks these paths
+//! (EXPERIMENTS.md §Perf).
 
 use crate::util::pool;
 use super::Tensor;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 const BLOCK: usize = 64;
 
+/// Process-wide count of weight-transpose copies taken by [`matmul_bt`]'s
+/// multi-row fallback. The packed-operator benches assert this stays
+/// flat across a decode loop (no hidden per-token transposes).
+static BT_TRANSPOSES: AtomicU64 = AtomicU64::new(0);
+
+/// Current [`matmul_bt`] transpose-copy count (monotonic; diff two
+/// snapshots around a region to count its transposes).
+pub fn bt_transposes() -> u64 {
+    BT_TRANSPOSES.load(Ordering::Relaxed)
+}
+
+/// The unified lane microkernel — the canonical reduction order of every
+/// matmul-family product:
+///
+/// ```text
+/// out[j] += Σ_{kk = k0..k1, ascending} a[kk] · b[kk·ldb + col0 + j]
+/// ```
+///
+/// with `a[kk] == 0.0` skipped (the masked-model fast path: pruned
+/// activations contribute nothing and pay nothing). Each output lane `j`
+/// keeps a single accumulator, so the per-element order is ascending-k
+/// regardless of how callers tile `k0..k1` — k-blocks visited in
+/// ascending order compose to the same bits as one unblocked sweep.
+/// The lane loop is an axpy over contiguous memory and auto-vectorizes.
+#[inline]
+pub fn lane_accum(
+    a: &[f32],
+    k0: usize,
+    k1: usize,
+    b: &[f32],
+    ldb: usize,
+    col0: usize,
+    out: &mut [f32],
+) {
+    for kk in k0..k1 {
+        let av = a[kk];
+        if av == 0.0 {
+            continue;
+        }
+        let br = &b[kk * ldb + col0..kk * ldb + col0 + out.len()];
+        for (o, bv) in out.iter_mut().zip(br) {
+            *o += av * bv;
+        }
+    }
+}
+
 /// C = A·B for 2-D tensors [m,k]·[k,n].
+///
+/// Multi-row products fan out over output-row chunks; single-row
+/// products (restoration's per-operator `matmul(&diff, &g)` rows,
+/// gradcol probes, any [1,k]·[k,n]) fan out over output-*column* chunks
+/// through [`lane_accum`] — each column is one lane of the canonical
+/// kernel, so the pooled result is bit-identical to the serial blocked
+/// path at every width.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = a.dims2();
     let (k2, n) = b.dims2();
@@ -24,6 +112,10 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
         p.run_rows1(&mut c, n, |r0, chunk| {
             let rows = chunk.len() / n;
             matmul_into(&a.data[r0 * k..(r0 + rows) * k], &b.data, chunk, rows, k, n);
+        });
+    } else if p.workers() > 1 && m == 1 && n >= 2 && flops >= pool::PAR_THRESHOLD {
+        p.run_rows1(&mut c, 1, |j0, chunk| {
+            lane_accum(&a.data, 0, k, &b.data, n, j0, chunk);
         });
     } else {
         matmul_into(&a.data, &b.data, &mut c, m, k, n);
@@ -40,14 +132,15 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 /// kernel runs at matmul speed (~13 GF/s), a ~3.5× win on the linear
 /// layers of the host reference model.
 ///
-/// Single-row products (`m == 1`, the decode-step hot path) skip both
-/// the transpose and the row-chunk tiling and go through
-/// [`matvec_bt_into`], which keeps `matmul_into`'s exact reduction
+/// This is now the *fallback* path: weight-stationary callers hold a
+/// [`crate::tensor::pack::PackedMat`] (the transpose taken once, at
+/// build) and call `matmul_packed`, which skips the per-call copy while
+/// producing the same bits. Single-row products (`m == 1`, the decode
+/// fallback) skip both the transpose and the row-chunk tiling and go
+/// through [`matvec_bt_into`], which keeps the canonical reduction
 /// order — so a one-token decode linear is bit-identical to the same
-/// row inside a full-prefix [b·t, k] product. Large single rows (the
-/// logits head) fan out over output-column chunks on the ambient pool;
-/// each output element is computed by exactly one worker with the
-/// serial order, so the result is pool-width-independent.
+/// row inside a full-prefix [b·t, k] product. Large single rows fan out
+/// over output-column chunks on the ambient pool.
 pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = a.dims2();
     let (n, k2) = b.dims2();
@@ -64,22 +157,51 @@ pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
         }
         return Tensor::new(vec![1, n], c);
     }
+    BT_TRANSPOSES.fetch_add(1, Ordering::Relaxed);
     matmul(a, &b.t())
 }
 
-/// out[j] = Σ_kk a[kk]·b[(j0+j)·k + kk] — one A·Bᵀ output row segment,
-/// accumulated in ascending-k order with the same zero-skip
-/// `matmul_into` applies, so the bits match the blocked multi-row path
-/// exactly (the decode↔re-forward identity depends on this). A single
-/// serial accumulator is slower than the 8-lane `dot`, but the blocked
-/// path's reduction order is the determinism contract.
+/// out[j] = Σ_kk a[kk]·b[(j0+j)·k + kk] — one A·Bᵀ output row segment
+/// over the *unpacked* [n, k] weight layout. Each output keeps the
+/// canonical order (ascending k, single accumulator, zero-skip on `a`),
+/// so the bits match the blocked multi-row path and the packed kernel
+/// exactly (the decode↔re-forward identity depends on this). Four
+/// output columns advance in lockstep — four independent accumulators
+/// walking four contiguous B rows — so the serial dependency chain of
+/// one column no longer bounds throughput.
 pub fn matvec_bt_into(a: &[f32], b: &[f32], out: &mut [f32], j0: usize, k: usize) {
     debug_assert!((j0 + out.len()) * k <= b.len());
-    for (jj, o) in out.iter_mut().enumerate() {
+    const LANES: usize = 4;
+    let mut j = 0usize;
+    while j + LANES <= out.len() {
+        let base = (j0 + j) * k;
+        let r0 = &b[base..base + k];
+        let r1 = &b[base + k..base + 2 * k];
+        let r2 = &b[base + 2 * k..base + 3 * k];
+        let r3 = &b[base + 3 * k..base + 4 * k];
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for ((((&av, &b0), &b1), &b2), &b3) in
+            a.iter().zip(r0).zip(r1).zip(r2).zip(r3)
+        {
+            if av == 0.0 {
+                continue;
+            }
+            s0 += av * b0;
+            s1 += av * b1;
+            s2 += av * b2;
+            s3 += av * b3;
+        }
+        out[j] = s0;
+        out[j + 1] = s1;
+        out[j + 2] = s2;
+        out[j + 3] = s3;
+        j += LANES;
+    }
+    for (jj, o) in out.iter_mut().enumerate().skip(j) {
         let row = &b[(j0 + jj) * k..(j0 + jj + 1) * k];
         let mut s = 0.0f32;
-        for (av, bv) in a.iter().zip(row) {
-            if *av == 0.0 {
+        for (&av, &bv) in a.iter().zip(row) {
+            if av == 0.0 {
                 continue;
             }
             s += av * bv;
@@ -88,7 +210,8 @@ pub fn matvec_bt_into(a: &[f32], b: &[f32], out: &mut [f32], j0: usize, k: usize
     }
 }
 
-/// Blocked C += A·B on raw slices (row-major).
+/// Blocked C += A·B on raw slices (row-major): [`lane_accum`] per
+/// (row, k-block), k-blocks ascending — the canonical order, cache-tiled.
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
@@ -98,25 +221,83 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
         for k0 in (0..k).step_by(BLOCK) {
             let k1 = (k0 + BLOCK).min(k);
             for i in i0..i1 {
-                let ar = &a[i * k..(i + 1) * k];
-                let cr = &mut c[i * n..(i + 1) * n];
-                for kk in k0..k1 {
-                    let aik = ar[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let br = &b[kk * n..(kk + 1) * n];
-                    // axpy over the full row — auto-vectorizes
-                    for (cv, bv) in cr.iter_mut().zip(br) {
-                        *cv += aik * bv;
-                    }
+                lane_accum(
+                    &a[i * k..(i + 1) * k],
+                    k0,
+                    k1,
+                    b,
+                    n,
+                    0,
+                    &mut c[i * n..(i + 1) * n],
+                );
+            }
+        }
+    }
+}
+
+/// C = Aᵀ·B for A [r,m], B [r,n] — the transpose-free Gram/backward
+/// kernel (`dW = dyᵀ·x`, `G = xᵀ·x`). Bit-identical to
+/// `matmul(&a.t(), b)` by construction: each output element accumulates
+/// in ascending-r order with the same zero-skip on the (logically
+/// transposed) left operand — only the [r·m] transpose copy disappears.
+/// Fans out over output-row chunks like [`matmul`].
+pub fn matmul_at(a: &Tensor, b: &Tensor) -> Tensor {
+    let (r, m) = a.dims2();
+    let (r2, n) = b.dims2();
+    assert_eq!(r, r2, "matmul_at outer dim: {:?} x {:?}", a.shape, b.shape);
+    let mut c = vec![0.0f32; m * n];
+    let p = pool::current();
+    let flops = r.saturating_mul(m).saturating_mul(n);
+    if p.workers() > 1 && m >= 2 && flops >= pool::PAR_THRESHOLD {
+        p.run_rows1(&mut c, n, |i0, chunk| {
+            let rows = chunk.len() / n;
+            matmul_at_into(&a.data, &b.data, chunk, i0, rows, r, m, n);
+        });
+    } else {
+        matmul_at_into(&a.data, &b.data, &mut c, 0, m, r, m, n);
+    }
+    Tensor::new(vec![m, n], c)
+}
+
+/// C rows [i0, i0+rows) of Aᵀ·B on raw slices — the Aᵀ-indexed instance
+/// of the canonical order: the left operand is read with stride `m`
+/// (`a[rr·m + i]`), everything else is [`matmul_into`]'s loop shape.
+fn matmul_at_into(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    i0: usize,
+    rows: usize,
+    r: usize,
+    m: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), r * m);
+    debug_assert_eq!(b.len(), r * n);
+    debug_assert_eq!(c.len(), rows * n);
+    for r0 in (0..r).step_by(BLOCK) {
+        let r1 = (r0 + BLOCK).min(r);
+        for i in 0..rows {
+            let cr = &mut c[i * n..(i + 1) * n];
+            for rr in r0..r1 {
+                let av = a[rr * m + i0 + i];
+                if av == 0.0 {
+                    continue;
+                }
+                let br = &b[rr * n..(rr + 1) * n];
+                for (o, bv) in cr.iter_mut().zip(br) {
+                    *o += av * bv;
                 }
             }
         }
     }
 }
 
-/// Unrolled dot product.
+/// Unrolled dot product — the fixed 8-lane k-striped reduction for
+/// single vector-vector products (attention scores, metric math). See
+/// the module docs: this order never crosses a matmul-family bit
+/// contract; a one-output canonical chain cannot be vectorized, so the
+/// lanes stripe over k instead of over outputs.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -163,6 +344,11 @@ mod tests {
         c
     }
 
+    fn bits_eq(a: &Tensor, b: &Tensor) -> bool {
+        a.shape == b.shape
+            && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
     #[test]
     fn blocked_matches_naive() {
         let mut rng = Rng::new(0);
@@ -191,8 +377,9 @@ mod tests {
         let mut rng = Rng::new(5);
         // a single row must produce the exact bits the blocked transpose
         // path produces for the same row (decode ≡ re-forward contract),
-        // including in the presence of exact zeros (the skip path)
-        for &(k, n) in &[(64usize, 48usize), (130, 33), (8, 1)] {
+        // including in the presence of exact zeros (the skip path) and
+        // at output widths off the 4-lane unroll (n % 4 != 0)
+        for &(k, n) in &[(64usize, 48usize), (130, 33), (8, 1), (16, 6)] {
             let mut a = Tensor::randn(&[1, k], 1.0, &mut rng);
             a.data[k / 2] = 0.0;
             a.data[0] = 0.0;
@@ -203,12 +390,10 @@ mod tests {
                 matmul_into(&a.data, &b.t().data, &mut c, 1, k, n);
                 Tensor::new(vec![1, n], c)
             };
-            let same = fast
-                .data
-                .iter()
-                .zip(&blocked.data)
-                .all(|(x, y)| x.to_bits() == y.to_bits());
-            assert!(same, "({k},{n}): single-row path diverged from blocked");
+            assert!(
+                bits_eq(&fast, &blocked),
+                "({k},{n}): single-row path diverged from blocked"
+            );
         }
         // and the pooled fan-out never changes the bits
         let a = Tensor::randn(&[1, 1100], 1.0, &mut rng);
@@ -222,12 +407,10 @@ mod tests {
                 let _g = pool::enter(std::sync::Arc::new(pool::Pool::new(workers)));
                 matmul_bt(&a, &b)
             };
-            let same = serial
-                .data
-                .iter()
-                .zip(&par.data)
-                .all(|(x, y)| x.to_bits() == y.to_bits());
-            assert!(same, "matvec fan-out not bit-identical at {workers} workers");
+            assert!(
+                bits_eq(&serial, &par),
+                "matvec fan-out not bit-identical at {workers} workers"
+            );
         }
     }
 
@@ -248,12 +431,67 @@ mod tests {
                 let _g = pool::enter(std::sync::Arc::new(pool::Pool::new(workers)));
                 matmul(&a, &b)
             };
-            let same = serial
-                .data
-                .iter()
-                .zip(&par.data)
-                .all(|(x, y)| x.to_bits() == y.to_bits());
-            assert!(same, "matmul not bit-identical with {workers} workers");
+            assert!(bits_eq(&serial, &par), "matmul not bit-identical with {workers} workers");
+        }
+    }
+
+    #[test]
+    fn single_row_ab_fans_out_bit_identically() {
+        use crate::util::pool;
+        let mut rng = Rng::new(19);
+        // [1, k]·[k, n] above PAR_THRESHOLD: the column fan-out must
+        // match the serial blocked path bit for bit (zero-skip included)
+        let mut a = Tensor::randn(&[1, 1100], 1.0, &mut rng);
+        a.data[3] = 0.0;
+        a.data[700] = 0.0;
+        let b = Tensor::randn(&[1100, 1024], 1.0, &mut rng);
+        let serial = {
+            let _g = pool::enter(pool::serial());
+            matmul(&a, &b)
+        };
+        for workers in [2usize, 5, 8] {
+            let par = {
+                let _g = pool::enter(std::sync::Arc::new(pool::Pool::new(workers)));
+                matmul(&a, &b)
+            };
+            assert!(
+                bits_eq(&serial, &par),
+                "single-row matmul fan-out not bit-identical at {workers} workers"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_at_bit_identical_to_explicit_transpose() {
+        use crate::util::pool;
+        let mut rng = Rng::new(23);
+        for &(r, m, n) in &[(5usize, 3usize, 7usize), (64, 64, 64), (130, 65, 33), (80, 1, 9)] {
+            let mut a = Tensor::randn(&[r, m], 1.0, &mut rng);
+            a.data[0] = 0.0; // exercise the zero-skip parity
+            let b = Tensor::randn(&[r, n], 1.0, &mut rng);
+            let fast = matmul_at(&a, &b);
+            let reference = matmul(&a.t(), &b);
+            assert!(
+                bits_eq(&fast, &reference),
+                "({r},{m},{n}): matmul_at diverged from matmul(a.t(), b)"
+            );
+        }
+        // pooled fan-out: same bits at every width
+        let a = Tensor::randn(&[220, 130], 1.0, &mut rng);
+        let b = Tensor::randn(&[220, 120], 1.0, &mut rng);
+        let serial = {
+            let _g = pool::enter(pool::serial());
+            matmul_at(&a, &b)
+        };
+        for workers in [2usize, 4, 8] {
+            let par = {
+                let _g = pool::enter(std::sync::Arc::new(pool::Pool::new(workers)));
+                matmul_at(&a, &b)
+            };
+            assert!(
+                bits_eq(&serial, &par),
+                "matmul_at fan-out not bit-identical at {workers} workers"
+            );
         }
     }
 

@@ -7,6 +7,8 @@
 mod core;
 pub mod ops;
 pub mod matmul;
+pub mod pack;
 pub mod io;
 
 pub use core::{IntTensor, Tensor};
+pub use pack::PackedMat;

@@ -1,0 +1,313 @@
+//! Persistent packed-weight operators: a weight panel-packed **once**
+//! into the cache-blocked k-major layout [`super::matmul::matmul_into`]
+//! consumes, then reused by every forward, prefill, decode step and
+//! streamed eval — killing the per-call transpose copy `matmul_bt` pays
+//! and the per-call weight copy `ParamSource::get_l` pays.
+//!
+//! A [`PackedMat`] is a pure relayout: the product kernels
+//! ([`matmul_packed`], [`matvec_packed_into`]) run the same canonical
+//! lane reduction order (`lane_accum`: ascending-k, one accumulator per
+//! output lane, zero-skip on the activation) the unpacked paths run, so
+//! packed and unpacked products are **bit-identical** — packing is
+//! purely a latency decision, never a numerics one
+//! (`rust/tests/test_pack.rs`).
+//!
+//! Packing is pool-parallel (scatter over disjoint k-rows → bytes are
+//! pool-width-independent, locked in by `test_backend.rs`) and counted
+//! process-wide ([`pack_ops`]): the `bench_hot_paths` packing section
+//! asserts a decode loop performs **zero** pack work after its session
+//! is built.
+
+use crate::util::pool;
+use super::matmul::{lane_accum, matmul_into};
+use super::Tensor;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static PACK_OPS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of pack constructions (monotonic; diff two
+/// snapshots around a region to count its packs). The receipt that the
+/// per-token decode hot loop does no packing after session build.
+pub fn pack_ops() -> u64 {
+    PACK_OPS.load(Ordering::Relaxed)
+}
+
+/// Which operand layout a [`PackedMat`] was packed from (the pack is a
+/// pure relayout, so this is all [`PackedMat::unpack`] needs to invert).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Orient {
+    /// From a [n, k] linear weight (`y = x·Wᵀ`, the A·Bᵀ orientation).
+    Bt,
+    /// From a [k, n] right operand (the A·B orientation; already
+    /// k-major, so packing is a plain copy).
+    Ab,
+}
+
+/// A weight packed once into the k-major [k, n] panel layout the blocked
+/// kernel consumes: `data[kk·n + j]` multiplies activation element `kk`
+/// into output lane `j`.
+pub struct PackedMat {
+    data: Vec<f32>,
+    k: usize,
+    n: usize,
+    orient: Orient,
+}
+
+impl PackedMat {
+    /// Pack a [n, k] linear weight (A·Bᵀ orientation).
+    pub fn pack_bt(w: &Tensor) -> PackedMat {
+        let (n, k) = w.dims2();
+        Self::pack_bt_raw(&w.data, n, k)
+    }
+
+    /// [`PackedMat::pack_bt`] over a raw row-major [n, k] slice — lets
+    /// weight stores pack straight out of their packed parameter vector
+    /// or shard payload without an intermediate tensor copy. The scatter
+    /// fans out over disjoint k-rows of the packed buffer on the ambient
+    /// pool; every output element is written exactly once with no
+    /// arithmetic, so the bytes are identical at any pool width.
+    pub fn pack_bt_raw(w: &[f32], n: usize, k: usize) -> PackedMat {
+        assert_eq!(w.len(), n * k, "pack_bt_raw: {} elems for [{n}, {k}]", w.len());
+        PACK_OPS.fetch_add(1, Ordering::Relaxed);
+        let mut data = vec![0.0f32; k * n];
+        let fill = |kk0: usize, chunk: &mut [f32]| {
+            for (i, prow) in chunk.chunks_exact_mut(n).enumerate() {
+                let kk = kk0 + i;
+                for (j, v) in prow.iter_mut().enumerate() {
+                    *v = w[j * k + kk];
+                }
+            }
+        };
+        let p = pool::current();
+        if p.workers() > 1 && n >= 1 && k >= 2 && k * n >= pool::PAR_THRESHOLD {
+            p.run_rows1(&mut data, n, fill);
+        } else {
+            fill(0, &mut data);
+        }
+        PackedMat { data, k, n, orient: Orient::Bt }
+    }
+
+    /// Pack a [k, n] right operand (A·B orientation) — already k-major,
+    /// so this is a plain copy into the persistent layout.
+    pub fn pack_ab(b: &Tensor) -> PackedMat {
+        let (k, n) = b.dims2();
+        PACK_OPS.fetch_add(1, Ordering::Relaxed);
+        PackedMat { data: b.data.clone(), k, n, orient: Orient::Ab }
+    }
+
+    /// Output width n (lanes per activation row).
+    pub fn out_dim(&self) -> usize {
+        self.n
+    }
+
+    /// Reduction depth k (activation width).
+    pub fn k_dim(&self) -> usize {
+        self.k
+    }
+
+    pub fn orient(&self) -> Orient {
+        self.orient
+    }
+
+    /// Resident bytes of the packed panel.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// The k-major panel data (tests and kernels).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Invert the pack: returns the tensor in its original layout
+    /// ([n, k] for [`Orient::Bt`], [k, n] for [`Orient::Ab`]) — a pure
+    /// relayout, so the roundtrip is bit-exact (proptested).
+    pub fn unpack(&self) -> Tensor {
+        match self.orient {
+            Orient::Ab => Tensor::new(vec![self.k, self.n], self.data.clone()),
+            Orient::Bt => {
+                let mut out = vec![0.0f32; self.n * self.k];
+                for kk in 0..self.k {
+                    for j in 0..self.n {
+                        out[j * self.k + kk] = self.data[kk * self.n + j];
+                    }
+                }
+                Tensor::new(vec![self.n, self.k], out)
+            }
+        }
+    }
+}
+
+/// C = A·(packed) for A [m, k]: the packed replacement for both
+/// `matmul_bt(a, w)` (when packed from `w` via [`PackedMat::pack_bt`])
+/// and `matmul(a, b)` (via [`PackedMat::pack_ab`]), bit-identical to
+/// either, with zero per-call transpose or pack work.
+///
+/// Multi-row products fan out over output-row chunks; single-row
+/// products (the per-token decode hot path) fan out over output-column
+/// chunks through the lane kernel. Same gates as the unpacked paths;
+/// each output element is computed by one worker with the canonical
+/// order, so results are pool-width-independent.
+pub fn matmul_packed(a: &Tensor, p: &PackedMat) -> Tensor {
+    let (m, k) = a.dims2();
+    assert_eq!(
+        k, p.k,
+        "matmul_packed inner dim: {:?} x packed [{}, {}]",
+        a.shape, p.k, p.n
+    );
+    let n = p.n;
+    let mut c = vec![0.0f32; m * n];
+    let pl = pool::current();
+    let flops = m.saturating_mul(k).saturating_mul(n);
+    if m == 1 {
+        if pl.workers() > 1 && n >= 2 && flops >= pool::PAR_THRESHOLD {
+            pl.run_rows1(&mut c, 1, |j0, chunk| {
+                matvec_packed_into(&a.data, p, chunk, j0);
+            });
+        } else {
+            matvec_packed_into(&a.data, p, &mut c, 0);
+        }
+    } else if pl.workers() > 1 && flops >= pool::PAR_THRESHOLD {
+        pl.run_rows1(&mut c, n, |r0, chunk| {
+            let rows = chunk.len() / n;
+            matmul_into(&a.data[r0 * k..(r0 + rows) * k], &p.data, chunk, rows, k, n);
+        });
+    } else {
+        matmul_into(&a.data, &p.data, &mut c, m, k, n);
+    }
+    Tensor::new(vec![m, n], c)
+}
+
+/// Single-row packed product into a caller buffer: columns
+/// [j0, j0+out.len()) of `a · packed` — the kernel [`matmul_packed`]'s
+/// m == 1 (decode) path runs, exposed for callers with preallocated
+/// output segments (canonical lane order, zero allocations).
+pub fn matvec_packed_into(a: &[f32], p: &PackedMat, out: &mut [f32], j0: usize) {
+    debug_assert_eq!(a.len(), p.k);
+    debug_assert!(j0 + out.len() <= p.n);
+    lane_accum(a, 0, p.k, &p.data, p.n, j0, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul::{matmul, matmul_bt};
+    use crate::util::pool;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn bits_eq(a: &Tensor, b: &Tensor) -> bool {
+        a.shape == b.shape
+            && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn pack_roundtrips_both_orientations() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(&[7, 13], 1.0, &mut rng);
+        assert!(bits_eq(&PackedMat::pack_bt(&w).unpack(), &w));
+        let b = Tensor::randn(&[13, 7], 1.0, &mut rng);
+        assert!(bits_eq(&PackedMat::pack_ab(&b).unpack(), &b));
+    }
+
+    #[test]
+    fn packed_product_bit_identical_to_unpacked() {
+        let mut rng = Rng::new(9);
+        for &(m, k, n) in &[(1usize, 16usize, 9usize), (1, 130, 33), (6, 64, 48), (65, 130, 33)] {
+            let mut a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            a.data[0] = 0.0; // the zero-skip path must agree too
+            a.data[(m * k) / 2] = 0.0;
+            let w = Tensor::randn(&[n, k], 1.0, &mut rng);
+            let packed = matmul_packed(&a, &PackedMat::pack_bt(&w));
+            let unpacked = matmul_bt(&a, &w);
+            assert!(bits_eq(&packed, &unpacked), "bt ({m},{k},{n}) diverged");
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let packed = matmul_packed(&a, &PackedMat::pack_ab(&b));
+            let unpacked = matmul(&a, &b);
+            assert!(bits_eq(&packed, &unpacked), "ab ({m},{k},{n}) diverged");
+        }
+    }
+
+    #[test]
+    fn packed_product_pool_width_independent() {
+        let mut rng = Rng::new(11);
+        let w = Tensor::randn(&[1024, 1100], 1.0, &mut rng);
+        let pm = {
+            let _g = pool::enter(pool::serial());
+            PackedMat::pack_bt(&w)
+        };
+        for &m in &[1usize, 5] {
+            let a = Tensor::randn(&[m, 1100], 1.0, &mut rng);
+            let serial = {
+                let _g = pool::enter(pool::serial());
+                matmul_packed(&a, &pm)
+            };
+            for workers in [2usize, 4, 8] {
+                let par = {
+                    let _g = pool::enter(Arc::new(pool::Pool::new(workers)));
+                    matmul_packed(&a, &pm)
+                };
+                assert!(
+                    bits_eq(&serial, &par),
+                    "m={m}: packed product diverged at {workers} workers"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pack_bytes_pool_width_independent() {
+        let mut rng = Rng::new(13);
+        let w = Tensor::randn(&[1024, 1100], 1.0, &mut rng);
+        let serial = {
+            let _g = pool::enter(pool::serial());
+            PackedMat::pack_bt(&w)
+        };
+        for workers in [2usize, 8] {
+            let par = {
+                let _g = pool::enter(Arc::new(pool::Pool::new(workers)));
+                PackedMat::pack_bt(&w)
+            };
+            assert_eq!(serial.bytes(), par.bytes());
+            assert!(
+                serial
+                    .data()
+                    .iter()
+                    .zip(par.data())
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "pack bytes diverged at {workers} workers"
+            );
+        }
+    }
+
+    #[test]
+    fn matvec_packed_into_segments_compose() {
+        let mut rng = Rng::new(17);
+        let (k, n) = (40usize, 21usize);
+        let a = Tensor::randn(&[1, k], 1.0, &mut rng);
+        let w = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let pm = PackedMat::pack_bt(&w);
+        let whole = matmul_packed(&a, &pm);
+        let mut seg = vec![0.0f32; n];
+        matvec_packed_into(&a.data, &pm, &mut seg[..8], 0);
+        matvec_packed_into(&a.data, &pm, &mut seg[8..15], 8);
+        matvec_packed_into(&a.data, &pm, &mut seg[15..], 15);
+        assert!(
+            whole.data.iter().zip(&seg).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "segmented matvec diverged from the whole row"
+        );
+    }
+
+    #[test]
+    fn pack_ops_counts_constructions() {
+        let before = pack_ops();
+        let mut rng = Rng::new(23);
+        let w = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let pm = PackedMat::pack_bt(&w);
+        let _ = matmul_packed(&Tensor::randn(&[1, 6], 1.0, &mut rng), &pm);
+        let _ = matmul_packed(&Tensor::randn(&[3, 6], 1.0, &mut rng), &pm);
+        // products never pack; only constructions count (other tests may
+        // run concurrently, so the delta is a lower bound ≥ 1 here)
+        assert!(pack_ops() >= before + 1);
+    }
+}

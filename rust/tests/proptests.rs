@@ -7,7 +7,8 @@ use fasp::prune::metric::{lowest_k, wanda_scores_host};
 use fasp::prune::restore::{recon_objective, restore_columns};
 use fasp::prune::structure::{plan, rope_pairs, units};
 use fasp::runtime::manifest::ModelSpec;
-use fasp::tensor::matmul::{matmul, matmul_bt};
+use fasp::tensor::matmul::{matmul, matmul_at, matmul_bt};
+use fasp::tensor::pack::{matmul_packed, PackedMat};
 use fasp::tensor::ops::{
     col_abs_sum, gather_cols, gather_elems, gather_rows, scatter_cols, scatter_rows,
     zero_cols,
@@ -171,6 +172,71 @@ fn prop_matmul_bt_equiv() {
         let c2 = matmul(&a, &b.t());
         let d = c1.max_abs_diff(&c2);
         (d < 1e-3, format!("diff {d} (m={m},k={k},n={n})"))
+    });
+}
+
+/// Pack/unpack roundtrips bit-exactly in both orientations for random
+/// shapes — a pack is a pure relayout.
+#[test]
+fn prop_pack_roundtrip() {
+    forall(60, 611, |g| {
+        let r = g.usize_in(1..16);
+        let c = g.usize_in(1..16);
+        let w = rand_tensor(g, r, c);
+        let back = PackedMat::pack_bt(&w).unpack();
+        if back.shape != w.shape
+            || !back.data.iter().zip(&w.data).all(|(x, y)| x.to_bits() == y.to_bits())
+        {
+            return (false, format!("bt roundtrip drifted ({r}x{c})"));
+        }
+        let back = PackedMat::pack_ab(&w).unpack();
+        let ok = back.shape == w.shape
+            && back.data.iter().zip(&w.data).all(|(x, y)| x.to_bits() == y.to_bits());
+        (ok, format!("ab roundtrip drifted ({r}x{c})"))
+    });
+}
+
+/// matmul_packed over a packed weight is bit-identical to the unpacked
+/// product in both orientations, including planted exact zeros (the
+/// skip path) and m == 1 (the decode shape).
+#[test]
+fn prop_matmul_packed_equiv() {
+    forall(60, 612, |g| {
+        let m = g.usize_in(1..8);
+        let k = g.usize_in(1..12);
+        let n = g.usize_in(1..12);
+        let mut a = rand_tensor(g, m, k);
+        a.data[g.usize_in(0..m * k)] = 0.0;
+        let w = rand_tensor(g, n, k);
+        let c1 = matmul_packed(&a, &PackedMat::pack_bt(&w));
+        let c2 = matmul_bt(&a, &w);
+        if !c1.data.iter().zip(&c2.data).all(|(x, y)| x.to_bits() == y.to_bits()) {
+            return (false, format!("bt packed diverged (m={m},k={k},n={n})"));
+        }
+        let b = rand_tensor(g, k, n);
+        let c1 = matmul_packed(&a, &PackedMat::pack_ab(&b));
+        let c2 = matmul(&a, &b);
+        let ok = c1.data.iter().zip(&c2.data).all(|(x, y)| x.to_bits() == y.to_bits());
+        (ok, format!("ab packed diverged (m={m},k={k},n={n})"))
+    });
+}
+
+/// matmul_at(A, B) is bit-identical to matmul(Aᵀ, B) for random shapes
+/// with planted zeros (the transpose-free Gram/backward contract).
+#[test]
+fn prop_matmul_at_equiv() {
+    forall(60, 613, |g| {
+        let r = g.usize_in(1..14);
+        let m = g.usize_in(1..10);
+        let n = g.usize_in(1..10);
+        let mut a = rand_tensor(g, r, m);
+        a.data[g.usize_in(0..r * m)] = 0.0;
+        let b = rand_tensor(g, r, n);
+        let c1 = matmul_at(&a, &b);
+        let c2 = matmul(&a.t(), &b);
+        let ok = c1.shape == c2.shape
+            && c1.data.iter().zip(&c2.data).all(|(x, y)| x.to_bits() == y.to_bits());
+        (ok, format!("matmul_at diverged (r={r},m={m},n={n})"))
     });
 }
 

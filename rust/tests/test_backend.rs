@@ -207,6 +207,39 @@ fn sharded_export_bytes_identical_across_pool_widths() {
     }
 }
 
+/// Pack-cache bytes are pool-width-independent: building the packed
+/// operator plan on a wide pool produces bit-identical panels (and the
+/// same byte total) as the serial build — packing is a pure relayout.
+#[test]
+fn pack_cache_bytes_identical_across_pool_widths() {
+    use fasp::model::weights::linear_shorts;
+    use fasp::model::PackCache;
+    use fasp::util::pool;
+    let m = manifest();
+    let spec = m.model("llama_tiny").unwrap().clone();
+    let w = Weights::init(&spec, 23);
+    let serial = {
+        let _g = pool::enter(pool::serial());
+        PackCache::build(&w)
+    };
+    let pooled = {
+        let _g = pool::enter(Arc::new(pool::Pool::new(THREADS)));
+        PackCache::build(&w)
+    };
+    assert_eq!(serial.bytes(), pooled.bytes(), "pack bytes diverged across widths");
+    assert_eq!(serial.count(), pooled.count());
+    for l in 0..spec.n_layers {
+        for short in linear_shorts(&spec.family) {
+            let a = serial.get_l(l, short).unwrap();
+            let b = pooled.get_l(l, short).unwrap();
+            assert!(
+                bits_eq(a.data(), b.data()),
+                "layer {l} {short}: packed panel diverged across pool widths"
+            );
+        }
+    }
+}
+
 /// The speed harness agrees: outputs identical, timing fields sane.
 #[test]
 fn compare_backends_reports_identity() {

@@ -10,7 +10,7 @@ use fasp::model::compact::{build_params, compact_from_mask, CompactModel};
 use fasp::model::decode::{
     self, decode_step_src, full_logits, prefill_src, GenerateOpts, KvCache, Sampler,
 };
-use fasp::model::{DenseParams, PruneMask, Weights};
+use fasp::model::{DenseParams, PackedWeights, PruneMask, Weights};
 use fasp::runtime::manifest::LayerDims;
 use fasp::runtime::{HostBackend, Manifest, ModelSpec, Session, ThreadedHostBackend};
 use fasp::tensor::{IntTensor, Tensor};
@@ -139,6 +139,39 @@ fn decode_bit_identical_across_pool_widths() {
         let (t2, l2) = run(workers);
         assert_eq!(t1.data, t2.data, "tokens diverged at {workers} workers");
         assert!(bits_eq(&l1, &l2), "prefill logits diverged at {workers} workers");
+    }
+}
+
+/// The packed operator plan decodes bit-identically to the unpacked
+/// source at every position — prefill, steps and the re-forward all
+/// agree across pool widths (the packed≡unpacked decode contract on the
+/// ragged toy spec, where compact slicing actually bites).
+#[test]
+fn packed_decode_bit_identical_to_unpacked() {
+    for family in ["llama", "opt"] {
+        let spec = toy_spec(family);
+        let w = Weights::init(&spec, 37);
+        let prompt = random_prompt(2, 7, spec.vocab, 51);
+        for workers in [1usize, 4] {
+            let _g = pool::enter(Arc::new(pool::Pool::new(workers)));
+            let pw = PackedWeights::new(w.clone());
+
+            let mut cache_p = KvCache::for_spec(&spec, 2, 9).unwrap();
+            let mut cache_u = KvCache::for_spec(&spec, 2, 9).unwrap();
+            let lp = prefill_src(&mut pw.source(), &prompt, &mut cache_p).unwrap();
+            let lu = prefill_src(&mut DenseParams(&w), &prompt, &mut cache_u).unwrap();
+            assert!(bits_eq(&lp, &lu), "{family} (w={workers}): packed prefill diverged");
+
+            let step = IntTensor::new(vec![2, 1], vec![3, 5]);
+            let sp = decode_step_src(&mut pw.source(), &step, &mut cache_p).unwrap();
+            let su = decode_step_src(&mut DenseParams(&w), &step, &mut cache_u).unwrap();
+            assert!(bits_eq(&sp, &su), "{family} (w={workers}): packed step diverged");
+
+            // the cache-free full forward agrees too (packed full_logits)
+            let fp = full_logits(&mut pw.source(), &prompt).unwrap();
+            let fu = full_logits(&mut DenseParams(&w), &prompt).unwrap();
+            assert!(bits_eq(&fp, &fu), "{family} (w={workers}): packed full_logits diverged");
+        }
     }
 }
 
@@ -338,11 +371,31 @@ fn generate_identical_across_backends_and_sources() {
         Session::with_backend(&m, "decode_src_id", Arc::new(ThreadedHostBackend::new(4)))
             .unwrap();
 
-    let base = dense_single.generate(&w, &prompt, &opts).unwrap();
+    // decode runs over the session's packed operator plan (packed once
+    // per session here); generations must still be identical to every
+    // other source — the packed≡unpacked decode contract
+    let base = dense_single
+        .generate(&dense_single.pack(&w.packed).unwrap(), &prompt, &opts)
+        .unwrap();
     let runs = [
-        ("dense/threaded", dense_threaded.generate(&w, &prompt, &opts).unwrap()),
-        ("compact/host", compact_single.generate(&cw, &prompt, &opts).unwrap()),
-        ("compact/threaded", compact_threaded.generate(&cw, &prompt, &opts).unwrap()),
+        (
+            "dense/threaded",
+            dense_threaded
+                .generate(&dense_threaded.pack(&w.packed).unwrap(), &prompt, &opts)
+                .unwrap(),
+        ),
+        (
+            "compact/host",
+            compact_single
+                .generate(&compact_single.pack(&cw.packed).unwrap(), &prompt, &opts)
+                .unwrap(),
+        ),
+        (
+            "compact/threaded",
+            compact_threaded
+                .generate(&compact_threaded.pack(&cw.packed).unwrap(), &prompt, &opts)
+                .unwrap(),
+        ),
         (
             "sharded/host",
             compact_single.generate_streamed(&store, &prompt, &opts).unwrap(),
@@ -376,27 +429,32 @@ fn session_decode_contracts() {
     let w = Weights::init(&spec, 3);
     let prompt = random_prompt(1, 5, spec.vocab, 6);
 
-    // session path == host path, bit for bit
+    // session path (packed operator plan) == host path (unpacked
+    // DenseParams), bit for bit — the packed≡unpacked decode receipt
+    let pp = session.pack(&w.packed).unwrap();
     let mut cache = session.decode_cache(1, 8).unwrap();
-    let s_logits = session.prefill(&w, &prompt, &mut cache).unwrap();
+    let s_logits = session.prefill(&pp, &prompt, &mut cache).unwrap();
     let mut cache_h = KvCache::for_spec(&spec, 1, 8).unwrap();
     let h_logits = prefill_src(&mut DenseParams(&w), &prompt, &mut cache_h).unwrap();
     assert!(bits_eq(&s_logits, &h_logits));
     let step = IntTensor::new(vec![1, 1], vec![1]);
-    let s2 = session.decode_step(&w, &step, &mut cache).unwrap();
+    let s2 = session.decode_step(&pp, &step, &mut cache).unwrap();
     let h2 = decode_step_src(&mut DenseParams(&w), &step, &mut cache_h).unwrap();
     assert!(bits_eq(&s2, &h2));
 
-    // wrong-model weights rejected
+    // wrong-model params rejected (packed on the other model's session)
+    let other_session =
+        Session::with_backend(&m, "opt_tiny", Arc::new(HostBackend::new())).unwrap();
     let other_spec = m.model("opt_tiny").unwrap().clone();
     let other_w = Weights::init(&other_spec, 3);
+    let other_pp = other_session.pack(&other_w.packed).unwrap();
     let mut cache2 = session.decode_cache(1, 8).unwrap();
-    assert!(session.prefill(&other_w, &prompt, &mut cache2).is_err());
+    assert!(session.prefill(&other_pp, &prompt, &mut cache2).is_err());
 
     // out-of-vocab prompt rejected before any compute
     let bad = IntTensor::new(vec![1, 2], vec![0, spec.vocab as i32]);
     let mut cache3 = session.decode_cache(1, 8).unwrap();
-    assert!(session.prefill(&w, &bad, &mut cache3).is_err());
+    assert!(session.prefill(&pp, &bad, &mut cache3).is_err());
 }
 
 /// A *sliced* (sparsity > 0) compact model decodes from a strictly
@@ -433,8 +491,8 @@ fn sliced_compact_decode_shrinks_kv_and_streams_identically() {
     let ds = Session::with_backend(&m, model, Arc::new(HostBackend::new())).unwrap();
     let cs =
         Session::with_backend(&m, "decode_sliced", Arc::new(HostBackend::new())).unwrap();
-    let dense_gen = ds.generate(&w, &prompt, &opts).unwrap();
-    let compact_gen = cs.generate(&cw, &prompt, &opts).unwrap();
+    let dense_gen = ds.generate(&ds.pack(&w.packed).unwrap(), &prompt, &opts).unwrap();
+    let compact_gen = cs.generate(&cs.pack(&cw.packed).unwrap(), &prompt, &opts).unwrap();
     let streamed_gen = cs.generate_streamed(&store, &prompt, &opts).unwrap();
     assert!(
         compact_gen.kv_bytes < dense_gen.kv_bytes,

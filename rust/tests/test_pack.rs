@@ -1,0 +1,200 @@
+//! Packed operator plan contract: every entry and decode path over a
+//! `Session::pack` plan (pre-packed linear weights + tied head) is
+//! **bit-identical** to the unpacked per-call-transpose path, on both
+//! backends and at pool widths {1, 2, 8} — packing is a latency
+//! decision, never a numerics one. Plus: pack-cache coverage and
+//! pool-width-independent pack bytes. The session-level tests require
+//! `make artifacts`; the gradcol identity runs on toy specs.
+
+use fasp::data::{Corpus, Dataset};
+use fasp::model::compact::build_params;
+use fasp::model::weights::linear_shorts;
+use fasp::model::{host, host_grad, PackCache, Weights};
+use fasp::runtime::manifest::LayerDims;
+use fasp::runtime::{Backend, HostBackend, Manifest, ModelSpec, Session, ThreadedHostBackend};
+use fasp::tensor::IntTensor;
+use fasp::util::pool;
+use fasp::util::rng::Rng;
+use std::sync::Arc;
+
+fn manifest() -> Manifest {
+    Manifest::load(&fasp::artifacts_dir()).expect("run `make artifacts` first")
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Session entries run over the packed plan; the host reference runs
+/// unpacked on the serial pool. Bitwise equality across {1, 2, 8}
+/// workers is the packed≡unpacked contract for fwd, capture AND gradcol.
+#[test]
+fn packed_entries_bit_identical_to_unpacked_reference() {
+    let m = manifest();
+    for model in ["opt_tiny", "llama_tiny"] {
+        let spec = m.model(model).unwrap().clone();
+        let w = Weights::init(&spec, 71);
+        let ds = Dataset::new(Corpus::new(spec.vocab, 7), spec.batch, spec.seq, 2);
+        let b = ds.train_batch(0);
+
+        // unpacked references, serial ambient pool, no session involved
+        let (nll_ref, caps_ref) = {
+            let _g = pool::enter(pool::serial());
+            host::forward_nll(&w, &b.tokens, &b.targets, true).unwrap()
+        };
+        let grams_ref: Vec<_> = {
+            let _g = pool::enter(pool::serial());
+            caps_ref
+                .iter()
+                .map(|c| (host::host_gram(&c.ffn_h), host::host_gram(&c.attn_ctx)))
+                .collect()
+        };
+        let scores_ref = {
+            let _g = pool::enter(pool::serial());
+            let (_, grad) = host_grad::loss_and_grad(&w, &b.tokens, &b.targets).unwrap();
+            host_grad::taylor_scores(&w, &grad).unwrap()
+        };
+
+        for workers in [1usize, 2, 8] {
+            let backend: Arc<dyn Backend> = if workers == 1 {
+                Arc::new(HostBackend::new())
+            } else {
+                Arc::new(ThreadedHostBackend::new(workers))
+            };
+            let s = Session::with_backend(&m, model, backend).unwrap();
+            let pp = s.pack(&w.packed).unwrap();
+            assert!(pp.pack_count() > 0, "{model}: empty pack cache");
+            assert!(pp.pack_bytes() > 0, "{model}: zero pack bytes");
+
+            let o = s.fwd_loss(&pp, &b.tokens, &b.targets).unwrap();
+            assert!(
+                bits_eq(&o.tok_nll.data, &nll_ref.data),
+                "{model} (w={workers}): packed fwd diverged from unpacked"
+            );
+
+            let stats = s.capture(&pp, &[b.tokens.clone()]).unwrap();
+            for (l, (ls, (g_ffn, g_attn))) in
+                stats.layers.iter().zip(&grams_ref).enumerate()
+            {
+                assert!(
+                    bits_eq(&ls.g_ffn.data, &g_ffn.data),
+                    "{model} (w={workers}) layer {l}: packed capture g_ffn diverged"
+                );
+                assert!(
+                    bits_eq(&ls.g_attn.data, &g_attn.data),
+                    "{model} (w={workers}) layer {l}: packed capture g_attn diverged"
+                );
+            }
+
+            let g = s
+                .gradcol(&pp, &[(b.tokens.clone(), b.targets.clone())])
+                .unwrap();
+            for (l, (a, (ffn_r, ov_r))) in g.iter().zip(&scores_ref).enumerate() {
+                assert!(
+                    bits_eq(&a.ffn, ffn_r),
+                    "{model} (w={workers}) layer {l}: packed gradcol ffn diverged"
+                );
+                assert!(
+                    bits_eq(&a.ov, ov_r),
+                    "{model} (w={workers}) layer {l}: packed gradcol ov diverged"
+                );
+            }
+        }
+    }
+}
+
+/// The pack cache covers exactly the linear weights + the tied head,
+/// and its bytes are pool-width-independent (pure relayout).
+#[test]
+fn pack_cache_coverage_and_pool_width_independent_bytes() {
+    let m = manifest();
+    let spec = m.model("llama_tiny").unwrap().clone();
+    let w = Weights::init(&spec, 13);
+    let shorts = linear_shorts(&spec.family);
+
+    let serial = {
+        let _g = pool::enter(pool::serial());
+        PackCache::build(&w)
+    };
+    assert_eq!(
+        serial.count(),
+        spec.n_layers * shorts.len() + 1,
+        "pack cache must hold every linear weight plus the tied head"
+    );
+    let head = serial.get("tok_emb").expect("tied head packed");
+    assert_eq!(head.out_dim(), spec.vocab);
+    assert_eq!(head.k_dim(), spec.d_model);
+
+    for workers in [2usize, 8] {
+        let pooled = {
+            let _g = pool::enter(Arc::new(pool::Pool::new(workers)));
+            PackCache::build(&w)
+        };
+        assert_eq!(serial.bytes(), pooled.bytes(), "pack bytes at {workers} workers");
+        assert_eq!(serial.count(), pooled.count());
+        for l in 0..spec.n_layers {
+            for short in shorts {
+                let a = serial.get_l(l, short).unwrap();
+                let b = pooled.get_l(l, short).unwrap();
+                assert!(
+                    bits_eq(a.data(), b.data()),
+                    "layer {l} {short}: pack bytes diverged at {workers} workers"
+                );
+            }
+        }
+        assert!(bits_eq(
+            serial.get("tok_emb").unwrap().data(),
+            pooled.get("tok_emb").unwrap().data()
+        ));
+    }
+}
+
+/// Toy ragged spec (compact-style per-layer dims) for the manifest-free
+/// gradcol identity.
+fn toy_spec(family: &str) -> ModelSpec {
+    let layer_dims = vec![
+        LayerDims { d_ff: 20, d_ov: 10, head_splits: vec![6, 4] },
+        LayerDims { d_ff: 12, d_ov: 5, head_splits: vec![5, 0] },
+    ];
+    let params = build_params(family, 16, 2, 48, 24, &layer_dims);
+    ModelSpec {
+        name: format!("pack_toy_{family}"),
+        family: family.into(),
+        d_model: 16,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 20,
+        vocab: 48,
+        seq: 24,
+        batch: 2,
+        params,
+        layer_dims,
+    }
+}
+
+/// `loss_and_grad` with and without a pack cache produce bit-identical
+/// loss and gradients — the gradcol entry's packed forward is exact,
+/// even on ragged (compact-style) specs with a fully sliced head.
+#[test]
+fn packed_gradcol_forward_matches_unpacked() {
+    for family in ["opt", "llama"] {
+        let spec = toy_spec(family);
+        let w = Weights::init(&spec, 5);
+        let packs = PackCache::build(&w);
+        let mut rng = Rng::new(41);
+        let n = 2 * 6;
+        let toks = IntTensor::new(
+            vec![2, 6],
+            (0..n).map(|_| rng.below(spec.vocab) as i32).collect(),
+        );
+        let tgts = IntTensor::new(
+            vec![2, 6],
+            (0..n).map(|_| rng.below(spec.vocab) as i32).collect(),
+        );
+        let (l_u, g_u) = host_grad::loss_and_grad(&w, &toks, &tgts).unwrap();
+        let (l_p, g_p) =
+            host_grad::loss_and_grad_packed(&w, Some(&packs), &toks, &tgts).unwrap();
+        assert_eq!(l_u.to_bits(), l_p.to_bits(), "{family}: packed loss diverged");
+        assert!(bits_eq(&g_u.data, &g_p.data), "{family}: packed gradient diverged");
+    }
+}

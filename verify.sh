@@ -17,10 +17,15 @@
 #   4. bench_hot_paths in check mode — writes BENCH_host_threads.json
 #      (single vs threaded host_exec fwd latency + bitwise identity),
 #      BENCH_shard_stream.json (shard load time, streamed vs monolithic
-#      fwd latency, peak-resident-weights estimate) and BENCH_decode.json
+#      fwd latency, peak-resident-weights estimate), BENCH_decode.json
 #      (KV-cached decode latency dense vs compact + the naive re-forward
-#      baseline + resident KV bytes) so backend-parallelism,
-#      shard-streaming and decode regressions are diffable too.
+#      baseline + resident KV bytes) and BENCH_pack.json (packed
+#      operator plan vs the legacy per-call-transpose path: forward /
+#      prefill / per-token decode / streamed fwd, asserting packed
+#      strictly beats unpacked, bit-identical outputs, and ZERO
+#      pack/transpose operations inside the packed decode loop) so
+#      backend-parallelism, shard-streaming, decode and packing
+#      regressions are diffable too.
 #   5. a `fasp generate` smoke (deterministic --init weights) under both
 #      FASP_THREADS=1 and the default threaded backend — the CLI decode
 #      path must run end to end on both backends.
@@ -55,3 +60,4 @@ echo "== verify OK =="
 [ -f BENCH_host_threads.json ] && echo "perf record: BENCH_host_threads.json"
 [ -f BENCH_shard_stream.json ] && echo "perf record: BENCH_shard_stream.json"
 [ -f BENCH_decode.json ] && echo "perf record: BENCH_decode.json"
+[ -f BENCH_pack.json ] && echo "perf record: BENCH_pack.json"
