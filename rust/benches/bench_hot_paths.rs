@@ -10,8 +10,11 @@
 //! vs monolithic fwd latency, peak-resident-weights estimate) and
 //! `BENCH_decode.json` (KV-cached decode: prefill + per-token latency
 //! dense vs OV-sliced compact, the naive re-forward baseline, resident
-//! KV bytes) so CI can diff backend-parallelism, shard-streaming and
-//! decode-path regressions.
+//! KV bytes) and `BENCH_serve.json` (continuous-batching serve engine
+//! vs N sequential generates at 8/64/256 concurrent sessions:
+//! tokens/sec, p50/p99 per-token latency, arena page residency,
+//! bitwise identity) so CI can diff backend-parallelism,
+//! shard-streaming, decode-path and serve-scheduler regressions.
 
 use fasp::bench_support::Bencher;
 use fasp::data::{Corpus, Dataset};
@@ -430,5 +433,99 @@ fn main() {
             println!("record → {}", path.display());
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // ---- continuous-batching serve: batched vs N sequential generates ----
+    // The serve engine (admission queue + paged KV arena + prefix cache)
+    // driving 8/64/256 concurrent sessions over one shared packed plan,
+    // against the same requests run one-at-a-time through generate.
+    // Bit-identity is asserted per session, and batched throughput must
+    // strictly beat sequential at every point — a batched tick reads
+    // each packed weight panel once for all lanes.
+    if let Ok(manifest) = Manifest::load(&fasp::artifacts_dir()) {
+        let model = "llama_small";
+        let spec = manifest.model(model).expect("llama_small in manifest").clone();
+        let w = Weights::init(&spec, 31);
+        let (prompt_len, max_new) = (16usize, if check { 6 } else { 12 });
+        let (page, max_batch) = (16usize, 16usize);
+        let mut points = Vec::new();
+        for &sessions in &[8usize, 64, 256] {
+            let uniq = sessions / 2 + sessions % 2;
+            let pages_per = (prompt_len + max_new - 1 + page - 1) / page;
+            let n_pages =
+                (max_batch * pages_per + uniq * (prompt_len / page) + pages_per) * 5 / 4 + 1;
+            let cfg = fasp::serve::ServeConfig {
+                page,
+                n_pages,
+                max_batch,
+                prefix_cache: true,
+            };
+            let cmp = fasp::eval::speed::compare_serve(
+                &manifest, model, &w, sessions, prompt_len, max_new, &cfg,
+            )
+            .unwrap();
+            assert!(
+                cmp.identical,
+                "serve outputs diverged from sequential generate at {sessions} \
+                 sessions — the scheduler bit-identity contract is broken"
+            );
+            assert!(
+                cmp.batched_tokens_per_s > cmp.sequential_tokens_per_s,
+                "batched serve ({:.0} tok/s) not above {sessions} sequential \
+                 generates ({:.0} tok/s)",
+                cmp.batched_tokens_per_s,
+                cmp.sequential_tokens_per_s
+            );
+            println!(
+                "\nserve {model} x{sessions}: batched {:.0} tok/s vs sequential \
+                 {:.0} tok/s ({:.2}x); p50 {:.3}ms / p99 {:.3}ms per token; \
+                 {} ticks, max batch {}, {} prefix hits, peak {} / {} pages \
+                 ({:.2}MB arena); bit-identical: {}",
+                cmp.batched_tokens_per_s,
+                cmp.sequential_tokens_per_s,
+                cmp.throughput_speedup,
+                cmp.p50_token_ms,
+                cmp.p99_token_ms,
+                cmp.ticks,
+                cmp.max_batch_seen,
+                cmp.prefix_hits,
+                cmp.peak_pages,
+                n_pages,
+                cmp.kv_bytes as f64 / 1e6,
+                cmp.identical
+            );
+            points.push(Json::obj(vec![
+                ("sessions", Json::Num(sessions as f64)),
+                ("batched_tokens_per_s", Json::Num(cmp.batched_tokens_per_s)),
+                (
+                    "sequential_tokens_per_s",
+                    Json::Num(cmp.sequential_tokens_per_s),
+                ),
+                ("throughput_speedup", Json::Num(cmp.throughput_speedup)),
+                ("p50_token_ms", Json::Num(cmp.p50_token_ms)),
+                ("p99_token_ms", Json::Num(cmp.p99_token_ms)),
+                ("ticks", Json::Num(cmp.ticks as f64)),
+                ("max_batch_seen", Json::Num(cmp.max_batch_seen as f64)),
+                ("prefix_hits", Json::Num(cmp.prefix_hits as f64)),
+                ("peak_pages", Json::Num(cmp.peak_pages as f64)),
+                ("n_pages", Json::Num(n_pages as f64)),
+                ("kv_bytes", Json::Num(cmp.kv_bytes as f64)),
+                ("identical", Json::Bool(cmp.identical)),
+            ]));
+        }
+        if check {
+            let record = Json::obj(vec![
+                ("bench", Json::Str("serve".into())),
+                ("model", Json::Str(model.into())),
+                ("prompt_len", Json::Num(prompt_len as f64)),
+                ("max_new", Json::Num(max_new as f64)),
+                ("page", Json::Num(page as f64)),
+                ("max_batch", Json::Num(max_batch as f64)),
+                ("points", Json::Arr(points)),
+            ]);
+            let path = fasp::repo_root().join("BENCH_serve.json");
+            std::fs::write(&path, record.pretty()).unwrap();
+            println!("record → {}", path.display());
+        }
     }
 }

@@ -467,6 +467,149 @@ pub fn generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Self-driving load harness for the continuous-batching serve engine:
+/// builds N sessions from corpus prompts (the second half repeating the
+/// first half's prompts so the prefix cache has heads to share), drives
+/// them to completion over one shared packed plan, and reports the
+/// throughput / latency / residency receipts. `--check` replays every
+/// session through the sequential [`Session::generate`] path and
+/// asserts bit-identical tokens — the scheduler's core contract.
+pub fn serve(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let model = model_arg(args)?;
+    let sessions = args.get_usize("sessions", 8)?;
+    let prompt_len = args.get_usize("prompt-len", 16)?;
+    let max_new = args.get_usize("max-new", 8)?;
+    let top_k = args.get_usize("top-k", 0)?;
+    let temperature = args.get_f64("temperature", 1.0)? as f32;
+    let page = args.get_usize("page", 16)?;
+    let max_batch = args.get_usize("max-batch", 8)?;
+    let m = &ctx.manifest;
+    anyhow::ensure!(sessions >= 1, "serve wants --sessions >= 1");
+
+    let (session, w) = if m.compact.contains_key(&model) {
+        (Session::new(m, &model)?, m.compact_weights(&model)?)
+    } else if args.has("init") {
+        // deterministic fresh weights: the serve smoke needs no
+        // checkpoint or training run
+        let session = Session::new(m, &model)?;
+        let w = crate::model::Weights::init(&session.spec, ctx.seed);
+        (session, w)
+    } else {
+        let p = ctx.prepared(&model)?;
+        (p.session, p.weights)
+    };
+    let spec = session.spec.clone();
+    anyhow::ensure!(
+        spec.family != "opt" || prompt_len + max_new <= spec.seq + 1,
+        "OPT position embeddings cover {} positions; shrink --prompt-len/--max-new",
+        spec.seq
+    );
+
+    // self-generated load: ceil(sessions/2) distinct corpus prompts,
+    // repeated across the second half, one sampling seed per session
+    let corpus = Corpus::new(spec.vocab, ctx.seed ^ spec.vocab as u64);
+    let uniq = sessions / 2 + sessions % 2;
+    let toks = Dataset::new(corpus, uniq, prompt_len, 2).valid_batches(1)[0]
+        .tokens
+        .clone();
+    let sampler = if top_k == 0 {
+        crate::model::Sampler::Greedy
+    } else {
+        crate::model::Sampler::TopK { k: top_k, temperature }
+    };
+    let mut requests = Vec::with_capacity(sessions);
+    for i in 0..sessions {
+        let row = i % uniq;
+        requests.push(crate::serve::ServeRequest {
+            prompt: toks.data[row * prompt_len..(row + 1) * prompt_len].to_vec(),
+            max_new,
+            sampler,
+            seed: ctx.seed ^ i as u64,
+        });
+    }
+
+    // arena sizing: worst-case pages for a full batch + the prefix
+    // cache's pinned heads, with ~25% slack (override via --pages)
+    let pages_per = (prompt_len + max_new - 1 + page - 1) / page;
+    let auto = max_batch.min(sessions) * pages_per + uniq * (prompt_len / page) + pages_per;
+    let n_pages = args.get_usize("pages", auto * 5 / 4 + 1)?;
+    let cfg = crate::serve::ServeConfig {
+        page,
+        n_pages,
+        max_batch,
+        prefix_cache: !args.has("no-prefix-cache"),
+    };
+
+    // pack once — every session decodes over this one shared plan
+    let packed = session.pack(&w.packed)?;
+    let report = session.serve(&packed, &requests, &cfg)?;
+
+    if args.has("check") {
+        for (r, o) in requests.iter().zip(&report.outputs) {
+            let prompt =
+                crate::tensor::IntTensor::new(vec![1, r.prompt.len()], r.prompt.clone());
+            let opts = crate::model::GenerateOpts {
+                max_new: r.max_new,
+                sampler: r.sampler,
+                seed: r.seed,
+            };
+            let g = session.generate(&packed, &prompt, &opts)?;
+            anyhow::ensure!(
+                g.tokens.data == o.tokens,
+                "serve output for session {} diverged from sequential generate",
+                o.id
+            );
+        }
+        println!("check: {sessions} sessions bit-identical to sequential generate");
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Serve — {model} ({}), {sessions} sessions, {} sampling",
+            session.backend().name(),
+            if top_k == 0 { "greedy".to_string() } else { format!("top-{top_k}") }
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec!["scheduler ticks".into(), report.ticks.to_string()]);
+    t.row(vec![
+        "generated tokens".into(),
+        format!("{} ({} per session)", report.generated_tokens, max_new),
+    ]);
+    t.row(vec![
+        "throughput".into(),
+        format!("{:.0} tok/s", report.tokens_per_s),
+    ]);
+    t.row(vec![
+        "per-token latency".into(),
+        format!(
+            "p50 {:.3}ms / p99 {:.3}ms",
+            report.p50_token_s * 1e3,
+            report.p99_token_s * 1e3
+        ),
+    ]);
+    t.row(vec!["max batch seen".into(), report.max_batch_seen.to_string()]);
+    t.row(vec![
+        "prefix cache".into(),
+        format!(
+            "{} hits / {} misses / {} pinned heads / {} evictions",
+            report.prefix_hits, report.prefix_misses, report.prefix_insertions,
+            report.prefix_evictions
+        ),
+    ]);
+    t.row(vec![
+        "kv arena".into(),
+        format!(
+            "{n_pages} pages x {page} pos ({:.2}KB/page), peak {} resident",
+            report.page_bytes as f64 / 1e3,
+            report.peak_pages
+        ),
+    ]);
+    t.print();
+    Ok(())
+}
+
 pub fn zeroshot(args: &Args) -> Result<()> {
     let ctx = ctx_from(args)?;
     let model = model_arg(args)?;

@@ -30,6 +30,13 @@ COMMANDS:
                                corpus prompt (zoo or compact model):
                                prefill + per-token decode timings and the
                                resident KV-cache bytes
+  serve      --model M         continuous-batching serve engine, driven by
+                               a self-generated session load: admission
+                               queue + paged KV arena + prefix cache over
+                               one shared packed plan; reports tokens/sec,
+                               p50/p99 per-token latency, page residency
+                               and (with --check) verifies every session
+                               is bit-identical to sequential generate
   zeroshot   --model M [--method X --sparsity S] zero-shot suites
   tables     --id table1|...|fig4|all            regenerate paper tables
   latency                      sliced decoder-layer latency sweep
@@ -53,8 +60,18 @@ COMMON OPTIONS:
   --batch N              (generate) sequences decoded in lockstep (default 1)
   --top-k K              (generate) top-k sampling; 0 = greedy (default 0)
   --temperature F        (generate) top-k softmax temperature (default 1.0)
-  --init                 (generate) fresh deterministic weights — skip
-                         checkpoint/training (decode smoke tests)
+  --init                 (generate/serve) fresh deterministic weights —
+                         skip checkpoint/training (decode smoke tests)
+  --sessions N           (serve) concurrent decode sessions (default 8);
+                         the second half repeat the first half's prompts
+                         to exercise the prefix cache
+  --page N               (serve) positions per KV arena page (default 16)
+  --pages N              (serve) arena pool size in pages (default: sized
+                         to the load with ~25% slack)
+  --max-batch N          (serve) max sessions per batched tick (default 8)
+  --no-prefix-cache      (serve) disable prompt-head sharing
+  --check                (serve) also run every session through the
+                         sequential generate path and assert bit-identity
   --stream               (generate) decode a sharded compact model from
                          its shard store (layer-streaming weights)
   --sequential           re-capture activations after each pruned layer
@@ -85,6 +102,7 @@ pub fn run() -> Result<()> {
         Some("compact") => commands::compact(&args),
         Some("shard") => commands::shard(&args),
         Some("generate") => commands::generate(&args),
+        Some("serve") => commands::serve(&args),
         Some("zeroshot") => commands::zeroshot(&args),
         Some("tables") => commands::tables(&args),
         Some("latency") => commands::latency(&args),

@@ -28,6 +28,11 @@
 //!   copy + transpose path, bit-identical outputs, and the
 //!   pack/transpose counters proving the decode loop performs **zero**
 //!   pack work after the session is built.
+//! * [`compare_serve`] — the continuous-batching receipt
+//!   (`BENCH_serve.json`): the serve engine driving N concurrent
+//!   sessions over one shared plan vs N sequential `generate` calls —
+//!   strictly higher throughput with **bit-identical** per-session
+//!   tokens, plus p50/p99 per-token latency and arena page residency.
 
 use crate::data::{Batch, Corpus, Dataset};
 use crate::model::decode::{self, full_logits, sample_row, GenerateOpts, Sampler};
@@ -345,6 +350,112 @@ pub fn compare_decode(
         cache_speedup: dense_reforward_per_token_ms / dense_per_token_ms,
         dense_kv_bytes,
         compact_kv_bytes,
+        identical,
+    })
+}
+
+/// Continuous-batching serve vs N sequential generates — the receipt
+/// the serve engine must produce (`BENCH_serve.json`).
+pub struct ServeCompare {
+    pub sessions: usize,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    /// Sampled tokens per second through the batched engine.
+    pub batched_tokens_per_s: f64,
+    /// Same requests, one `generate` call per session, back to back.
+    pub sequential_tokens_per_s: f64,
+    /// batched / sequential throughput — must be > 1: a batched tick
+    /// reads each packed weight panel once for all lanes instead of
+    /// once per session per token.
+    pub throughput_speedup: f64,
+    pub p50_token_ms: f64,
+    pub p99_token_ms: f64,
+    /// Batched steps the engine ran.
+    pub ticks: usize,
+    pub max_batch_seen: usize,
+    pub prefix_hits: u64,
+    /// Arena residency high-water mark, pages.
+    pub peak_pages: usize,
+    /// Allocated bytes of the arena pool.
+    pub kv_bytes: usize,
+    /// Every session's serve tokens bitwise equal to its sequential
+    /// `generate` run (same prompt, sampler and seed).
+    pub identical: bool,
+}
+
+/// Drive `sessions` concurrent requests through the serve engine and
+/// through per-session sequential `generate` on the same packed plan;
+/// verify bit-identity and compare throughput. The second half of the
+/// sessions repeat the first half's prompts so the prefix cache gets
+/// exercised; every session samples from its own seed.
+pub fn compare_serve(
+    manifest: &Manifest,
+    model: &str,
+    w: &Weights,
+    sessions: usize,
+    prompt_len: usize,
+    max_new: usize,
+    cfg: &crate::serve::ServeConfig,
+) -> Result<ServeCompare> {
+    anyhow::ensure!(sessions >= 1, "compare_serve wants sessions >= 1");
+    let session = Session::new(manifest, model)?;
+    let spec = session.spec.clone();
+    let uniq = sessions / 2 + sessions % 2;
+    let toks = Dataset::new(Corpus::new(spec.vocab, 0x5e57e), uniq, prompt_len, 2)
+        .train_batch(0)
+        .tokens;
+    let requests: Vec<crate::serve::ServeRequest> = (0..sessions)
+        .map(|i| {
+            let row = i % uniq;
+            crate::serve::ServeRequest {
+                prompt: toks.data[row * prompt_len..(row + 1) * prompt_len].to_vec(),
+                max_new,
+                sampler: Sampler::Greedy,
+                seed: 0x5eed ^ i as u64,
+            }
+        })
+        .collect();
+    let params = session.pack(&w.packed)?;
+
+    // sequential baseline: one generate per session over the same plan
+    // (first call doubles as the warmup for both paths — every packed
+    // panel is touched)
+    let opts0 = GenerateOpts { max_new, sampler: Sampler::Greedy, seed: 0 };
+    let warm = IntTensor::new(vec![1, prompt_len], requests[0].prompt.clone());
+    session.generate(&params, &warm, &opts0)?;
+    let mut seq_tokens: Vec<Vec<i32>> = Vec::with_capacity(sessions);
+    let t0 = std::time::Instant::now();
+    for r in &requests {
+        let prompt = IntTensor::new(vec![1, prompt_len], r.prompt.clone());
+        let opts = GenerateOpts { max_new, sampler: r.sampler, seed: r.seed };
+        seq_tokens.push(session.generate(&params, &prompt, &opts)?.tokens.data);
+    }
+    let seq_wall = t0.elapsed().as_secs_f64();
+    let sequential_tokens_per_s =
+        (sessions * max_new) as f64 / seq_wall.max(1e-12);
+
+    let report = session.serve(&params, &requests, cfg)?;
+    let identical = report.outputs.len() == seq_tokens.len()
+        && report
+            .outputs
+            .iter()
+            .zip(&seq_tokens)
+            .all(|(o, s)| &o.tokens == s);
+
+    Ok(ServeCompare {
+        sessions,
+        prompt_len,
+        max_new,
+        batched_tokens_per_s: report.tokens_per_s,
+        sequential_tokens_per_s,
+        throughput_speedup: report.tokens_per_s / sequential_tokens_per_s,
+        p50_token_ms: report.p50_token_s * 1e3,
+        p99_token_ms: report.p99_token_s * 1e3,
+        ticks: report.ticks,
+        max_batch_seen: report.max_batch_seen,
+        prefix_hits: report.prefix_hits,
+        peak_pages: report.peak_pages,
+        kv_bytes: report.kv_bytes,
         identical,
     })
 }

@@ -19,6 +19,10 @@
 //!   per head) instead of the O(prefix²) full re-forward.
 //! * [`generate_src`] / [`Sampler`] — the batched generation loop with
 //!   greedy and seeded top-k sampling.
+//! * [`decode_step_paged`] — the serve engine's batched step: one token
+//!   per *lane* against a paged KV arena (`model::kv_arena`), lanes at
+//!   independent positions so prompt prefill and mid-generation decode
+//!   interleave in one batch (continuous batching, see `crate::serve`).
 //!
 //! Determinism contract (locked by `rust/tests/test_decode.rs`): the
 //! cached step shares every kernel with the full forward — `attn_row`
@@ -36,9 +40,10 @@
 //! matvecs over persistent packed panels plus the cache attention rows.
 
 use super::host::{
-    attention, attn_out_residual, attn_row, embed_tokens, ffn_sublayer, head_logits,
-    norm_input, qkv_proj, rope_cached, rope_row,
+    attention, attn_out_residual, attn_row, attn_row_by, embed_tokens, ffn_sublayer,
+    head_logits, norm_input, qkv_proj, rope_cached, rope_row,
 };
+use super::kv_arena::{KvArena, PagedKv};
 use super::weights::ParamSource;
 use crate::runtime::manifest::ModelSpec;
 use crate::tensor::{IntTensor, Tensor};
@@ -256,6 +261,7 @@ struct Geom {
     n_heads: usize,
     head_dim: usize,
     vocab: usize,
+    seq: usize,
     is_opt: bool,
     head_splits: Vec<Vec<usize>>,
 }
@@ -268,6 +274,7 @@ impl Geom {
             n_heads: spec.n_heads,
             head_dim: spec.head_dim(),
             vocab: spec.vocab,
+            seq: spec.seq,
             is_opt: spec.family == "opt",
             head_splits: (0..spec.n_layers).map(|l| spec.head_splits_l(l)).collect(),
         }
@@ -497,6 +504,161 @@ pub fn decode_step_src<S: ParamSource>(
     head_logits(src, x, g.d, g.is_opt)
 }
 
+// ------------------------------------------------------------ paged decode
+
+/// One lane of a batched paged decode step: a session's page table plus
+/// the token it feeds at its next position.
+pub struct PagedLane<'a> {
+    pub kv: &'a mut PagedKv,
+    pub token: i32,
+}
+
+/// Batched one-token-per-lane decode step against a paged KV arena —
+/// the serve engine's inner loop. Each lane advances its own sequence
+/// by exactly one position; lanes may sit at *different* positions, so
+/// prompt prefill (fed one token per tick) and mid-generation decode
+/// interleave freely inside one batch — that is what lets sessions
+/// join/leave the running batch at token granularity.
+///
+/// Bit-identity contract (locked by `rust/tests/test_serve.rs`): row
+/// `i` of the returned logits is bitwise what [`decode_step_src`]
+/// produces for lane `i` alone, at any batch composition and pool
+/// width. Two properties make that true by construction: every linear
+/// sub-kernel (`norm_input`/`qkv_proj`/`attn_out_residual`/
+/// `ffn_sublayer`/`head_logits`) computes each output row from its own
+/// input row with serial per-row arithmetic, and the cache attention
+/// row runs through the same [`attn_row_by`] reduction the contiguous
+/// [`KvCache`] path uses — only the row *addressing* differs (page
+/// table indirection vs ring-buffer stride).
+pub fn decode_step_paged<S: ParamSource>(
+    src: &mut S,
+    arena: &mut KvArena,
+    lanes: &mut [PagedLane<'_>],
+) -> Result<Tensor> {
+    let g = Geom::of(src.spec());
+    let n = lanes.len();
+    anyhow::ensure!(n >= 1, "decode_step_paged wants at least one lane");
+    arena.check_spec(src.spec())?;
+    let dh = g.head_dim;
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let mut positions = Vec::with_capacity(n);
+    for lane in lanes.iter() {
+        anyhow::ensure!(
+            lane.token >= 0 && (lane.token as usize) < g.vocab,
+            "token id {} outside vocab {}",
+            lane.token,
+            g.vocab
+        );
+        let pos = lane.kv.len();
+        if g.is_opt {
+            anyhow::ensure!(
+                pos < g.seq,
+                "position {pos} exceeds the {} learned positions of OPT \
+                 model (pos_emb covers seq={})",
+                g.seq,
+                g.seq
+            );
+        }
+        positions.push(pos);
+    }
+    // reserve this tick's page for every lane before any forward work
+    for lane in lanes.iter_mut() {
+        arena.grow(lane.kv, lane.kv.len() + 1)?;
+    }
+    let max_pos = *positions.iter().max().unwrap();
+
+    // per-lane embeds: lanes carry their own absolute position (the OPT
+    // learned-position row differs per lane, so this cannot be one
+    // batched call) — bitwise the row a b=1 `decode_step_src` embeds
+    let mut x = Tensor::zeros(&[n, g.d]);
+    for (i, lane) in lanes.iter().enumerate() {
+        let toks = IntTensor::new(vec![1, 1], vec![lane.token]);
+        let e = embed_tokens(src, &toks, g.d, g.is_opt, positions[i])?;
+        x.row_mut(i).copy_from_slice(e.row(0));
+    }
+    let rope = rope_cached(max_pos + 1, dh);
+    let (cos, sin): (&[f32], &[f32]) = (&rope.0, &rope.1);
+
+    for l in 0..g.n_layers {
+        // ---- attention (one row per lane, against the paged arena)
+        let x_ln = norm_input(src, l, "ln1", &x, g.d, g.is_opt)?;
+        let (mut q, mut k, v) = qkv_proj(src, l, &x_ln, g.is_opt)?;
+        if !g.is_opt {
+            for (i, &pos) in positions.iter().enumerate() {
+                for hi in 0..g.n_heads {
+                    rope_row(&mut q.row_mut(i)[hi * dh..(hi + 1) * dh], dh, pos, cos, sin);
+                    rope_row(&mut k.row_mut(i)[hi * dh..(hi + 1) * dh], dh, pos, cos, sin);
+                }
+            }
+        }
+        for (i, lane) in lanes.iter().enumerate() {
+            arena.write_pos(lane.kv, l, positions[i], k.row(i), v.row(i));
+        }
+
+        let splits = &g.head_splits[l];
+        let dv: usize = splits.iter().sum();
+        let mut offs = Vec::with_capacity(g.n_heads + 1);
+        let mut acc = 0usize;
+        offs.push(0);
+        for &s in splits {
+            acc += s;
+            offs.push(acc);
+        }
+        let tables: Vec<&[usize]> = lanes.iter().map(|lane| lane.kv.pages()).collect();
+        let arena_ref = &*arena;
+        let block = |i: usize, hi: usize| -> Vec<f32> {
+            let dv_h = splits[hi];
+            if dv_h == 0 {
+                return Vec::new(); // fully sliced head: nothing reads it
+            }
+            let qrow = &q.row(i)[hi * dh..(hi + 1) * dh];
+            let pt = tables[i];
+            let mut out = vec![0.0f32; dv_h];
+            attn_row_by(
+                qrow,
+                |tj| &arena_ref.k_row(l, pt, tj)[hi * dh..(hi + 1) * dh],
+                |tj| &arena_ref.v_row(l, pt, tj)[offs[hi]..offs[hi] + dv_h],
+                positions[i],
+                scale,
+                &mut out,
+            );
+            out
+        };
+        let n_blocks = n * g.n_heads;
+        let mut ctx = Tensor::zeros(&[n, dv]);
+        let mut place = |i: usize, blk: Vec<f32>| {
+            let (bi, hi) = (i / g.n_heads, i % g.n_heads);
+            let dv_h = splits[hi];
+            if dv_h == 0 {
+                return;
+            }
+            ctx.row_mut(bi)[offs[hi]..offs[hi] + dv_h].copy_from_slice(&blk);
+        };
+        let pool = crate::util::pool::current();
+        let work = n_blocks * (max_pos + 1) * (dh + dv / g.n_heads.max(1));
+        if pool.workers() > 1 && n_blocks > 1 && work >= crate::util::pool::PAR_THRESHOLD {
+            let blocks = pool.map(n_blocks, |i| block(i / g.n_heads, i % g.n_heads));
+            for (i, blk) in blocks.into_iter().enumerate() {
+                place(i, blk);
+            }
+        } else {
+            for i in 0..n_blocks {
+                place(i, block(i / g.n_heads, i % g.n_heads));
+            }
+        }
+        attn_out_residual(src, l, &ctx, &mut x)?;
+        // ---- ffn (the shared sublayer, just n rows)
+        ffn_sublayer(src, l, &mut x, g.d, g.is_opt)?;
+        src.layer_done(l)?;
+    }
+    for lane in lanes.iter_mut() {
+        lane.kv.advance();
+    }
+
+    head_logits(src, x, g.d, g.is_opt)
+}
+
 // ---------------------------------------------------------------- sampling
 
 /// Next-token selection strategy.
@@ -514,28 +676,57 @@ pub enum Sampler {
 /// Pick a token id from one row of logits. Deterministic given the
 /// sampler and the Rng state: ties order by index, candidate order is
 /// (logit desc, index asc).
+///
+/// Non-finite logits (NaN/±inf) are never sampled: they sort strictly
+/// last (deterministically, by index) and are dropped from the top-k
+/// candidate set. The old comparator's `partial_cmp(..).unwrap_or(Equal)`
+/// let NaN land anywhere in the sort; a NaN inside the top-k then made
+/// `exp(NaN)` poison every softmax weight, so `Rng::categorical`'s
+/// running subtraction never fired and it silently returned the *last*
+/// (worst) candidate. If every logit is non-finite there is nothing
+/// valid to sample and we panic loudly instead of emitting garbage.
 pub fn sample_row(logits: &[f32], sampler: Sampler, rng: &mut Rng) -> usize {
     assert!(!logits.is_empty(), "sample_row: empty logits");
     match sampler {
         Sampler::Greedy => {
-            let mut best = 0usize;
-            for (i, &v) in logits.iter().enumerate().skip(1) {
-                if v > logits[best] {
-                    best = i;
+            let mut best: Option<usize> = None;
+            for (i, &v) in logits.iter().enumerate() {
+                if !v.is_finite() {
+                    continue;
+                }
+                match best {
+                    Some(b) if logits[b] >= v => {}
+                    _ => best = Some(i),
                 }
             }
-            best
+            best.expect("sample_row: no finite logit to sample (all NaN/inf)")
         }
         Sampler::TopK { k, temperature } => {
             let k = k.clamp(1, logits.len());
             let mut idx: Vec<usize> = (0..logits.len()).collect();
             idx.sort_unstable_by(|&a, &b| {
-                logits[b]
-                    .partial_cmp(&logits[a])
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then(a.cmp(&b))
+                use std::cmp::Ordering;
+                match (logits[a].is_finite(), logits[b].is_finite()) {
+                    // both finite: partial_cmp cannot fail
+                    (true, true) => logits[b]
+                        .partial_cmp(&logits[a])
+                        .unwrap()
+                        .then(a.cmp(&b)),
+                    (true, false) => Ordering::Less,
+                    (false, true) => Ordering::Greater,
+                    (false, false) => a.cmp(&b),
+                }
             });
             idx.truncate(k);
+            // k may exceed the finite candidate count; drop the
+            // non-finite tail so the softmax only ever sees real logits
+            while idx.len() > 1 && !logits[*idx.last().unwrap()].is_finite() {
+                idx.pop();
+            }
+            assert!(
+                logits[idx[0]].is_finite(),
+                "sample_row: no finite logit to sample (all NaN/inf)"
+            );
             let temp = temperature.max(1e-6) as f64;
             let m = logits[idx[0]] as f64;
             let weights: Vec<f64> = idx
@@ -609,6 +800,40 @@ pub fn generate_src<S: ParamSource>(
     let (b, t0) = (prompt.shape[0], prompt.shape[1]);
     let cap = t0 + opts.max_new - 1;
     let mut cache = KvCache::for_spec(src.spec(), b, cap)?;
+    generate_with_cache_src(src, prompt, opts, &mut cache)
+}
+
+/// [`generate_src`] over a caller-supplied (reusable) cache — the
+/// serving-style entry where the cache outlives one generation. The
+/// whole request is validated against [`KvCache::capacity`] **up
+/// front**: a prompt + `max_new` that cannot fit returns a proper
+/// `Err` before any forward work, instead of burning a full prefill
+/// and N decode steps only to die on `decode_step_src`'s
+/// "kv cache overflow" assert mid-generation (that `ensure!` stays as
+/// the last-resort invariant). The cache is cleared before prefill.
+pub fn generate_with_cache_src<S: ParamSource>(
+    src: &mut S,
+    prompt: &IntTensor,
+    opts: &GenerateOpts,
+    cache: &mut KvCache,
+) -> Result<Generation> {
+    anyhow::ensure!(
+        prompt.shape.len() == 2 && prompt.shape[1] >= 1,
+        "generate wants [b, t] prompt tokens with t >= 1, got {:?}",
+        prompt.shape
+    );
+    anyhow::ensure!(opts.max_new >= 1, "generate wants max_new >= 1");
+    let (b, t0) = (prompt.shape[0], prompt.shape[1]);
+    cache.check_spec(src.spec(), b)?;
+    let need = t0 + opts.max_new - 1;
+    anyhow::ensure!(
+        need <= cache.capacity(),
+        "kv cache overflow: prompt {t0} + max_new {} needs {need} cached \
+         positions but capacity is {} — rejected before prefill",
+        opts.max_new,
+        cache.capacity()
+    );
+    cache.clear();
     let mut rng = Rng::new(opts.seed);
 
     let t_pre = std::time::Instant::now();

@@ -469,9 +469,38 @@ pub(crate) fn attn_row(
     scale: f32,
     out: &mut [f32],
 ) {
+    debug_assert_eq!(qrow.len(), dh, "attn_row: qrow width != dh");
+    debug_assert_eq!(out.len(), dv, "attn_row: out width != dv");
+    attn_row_by(
+        qrow,
+        |tj| &k[tj * k_stride + k_off..tj * k_stride + k_off + dh],
+        |tj| &v[tj * v_stride + v_off..tj * v_stride + v_off + dv],
+        ti,
+        scale,
+        out,
+    )
+}
+
+/// The attention-row kernel behind [`attn_row`], generalized over row
+/// *addressing*: `k_at(tj)`/`v_at(tj)` hand back key/value rows [dh] /
+/// [dv] for positions `0..=ti` from wherever they live — a contiguous
+/// gathered buffer, a strided KV-cache slab, or a paged arena's block
+/// table (`model::kv_arena`). The arithmetic is the one serial order
+/// every caller shares (scores in ascending tj, running max, exp/sum,
+/// weighted-V axpy in ascending tj), so all addressing schemes produce
+/// bit-identical contexts by construction.
+pub(crate) fn attn_row_by<'a>(
+    qrow: &[f32],
+    k_at: impl Fn(usize) -> &'a [f32],
+    v_at: impl Fn(usize) -> &'a [f32],
+    ti: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
     let mut scores = Vec::with_capacity(ti + 1);
     for tj in 0..=ti {
-        let krow = &k[tj * k_stride + k_off..tj * k_stride + k_off + dh];
+        let krow = k_at(tj);
+        debug_assert_eq!(krow.len(), qrow.len(), "attn_row_by: krow width != dh");
         scores.push(crate::tensor::matmul::dot(qrow, krow) * scale);
     }
     let m = scores.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
@@ -481,7 +510,8 @@ pub(crate) fn attn_row(
         z += *s;
     }
     for (tj, w) in scores.iter().enumerate() {
-        let vrow = &v[tj * v_stride + v_off..tj * v_stride + v_off + dv];
+        let vrow = v_at(tj);
+        debug_assert_eq!(vrow.len(), out.len(), "attn_row_by: vrow width != dv");
         let wz = w / z;
         for (o, vv) in out.iter_mut().zip(vrow) {
             *o += wz * vv;

@@ -1,0 +1,436 @@
+//! Paged KV arena: the serve engine's shared decode cache.
+//!
+//! A per-session [`super::decode::KvCache`] preallocates `capacity`
+//! contiguous positions per sequence. That is the right shape for one
+//! generation at a time, but a serve engine running many short sessions
+//! over one model would fragment memory badly: each arrival allocates
+//! (and each retirement frees) multi-megabyte slabs sized to its own
+//! worst case. The arena replaces per-session ring buffers with one
+//! fixed pool of **pages** — blocks of `page` consecutive positions,
+//! with K/V storage for *every* layer — and gives each served session a
+//! small **page table** ([`PagedKv`]) mapping its logical positions to
+//! arena pages. Allocation/free is O(1) off a LIFO free list, sessions
+//! of any length pack into the same pool, and pages are refcounted so
+//! the prefix cache (`crate::serve::prefix`) can pin a finished
+//! prompt's full pages and later share them with new sessions that
+//! start with the same tokens — zero-copy prefill reuse.
+//!
+//! Layout: page `p`, layer `l`, slot `s` (position `pos` lives at page
+//! `table[pos / page]`, slot `pos % page`):
+//!   * keys   `layers[l].k[(p·page + s)·kdim ..][..kdim]` (post-RoPE,
+//!     full `n_heads·head_dim` width — FASP leaves Q/K dense),
+//!   * values `layers[l].v[(p·page + s)·dv_l ..][..dv_l]` (the layer's
+//!     sliced `d_ov_l` width, where OV pruning shrinks residency).
+//!
+//! Determinism: the arena stores exactly the rows [`super::decode`]'s
+//! contiguous cache stores (same kernels write them), and readers go
+//! through `host::attn_row_by` with page-table addressing — so paged
+//! decode is bit-identical to ring-buffer decode by construction
+//! (locked by `rust/tests/test_serve.rs`).
+
+use crate::runtime::manifest::ModelSpec;
+use anyhow::Result;
+
+/// One layer's pooled K/V storage.
+struct ArenaLayer {
+    /// [n_pages · page, kdim] post-RoPE keys.
+    k: Vec<f32>,
+    /// [n_pages · page, dv] values (sliced width).
+    v: Vec<f32>,
+    /// Kept V dims per head (prefix sums give each head's column block).
+    splits: Vec<usize>,
+    /// Σ splits — the layer's value width.
+    dv: usize,
+}
+
+/// A session's page table: logical position `pos` lives in arena page
+/// `pages[pos / page_size]`. `len` counts written positions, exactly
+/// like `KvCache::len`.
+#[derive(Clone, Debug, Default)]
+pub struct PagedKv {
+    pages: Vec<usize>,
+    len: usize,
+}
+
+impl PagedKv {
+    pub fn new() -> PagedKv {
+        PagedKv { pages: Vec::new(), len: 0 }
+    }
+
+    /// Cached positions so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The page table (arena page ids, one per block of positions).
+    pub fn pages(&self) -> &[usize] {
+        &self.pages
+    }
+
+    /// One position has been written for this sequence.
+    pub(crate) fn advance(&mut self) {
+        self.len += 1;
+    }
+}
+
+/// Fixed pool of KV pages shared by every served session of one model.
+/// Geometry is pinned to a spec at construction and re-checked by every
+/// batched step, exactly like `KvCache`.
+pub struct KvArena {
+    model: String,
+    family: String,
+    d_model: usize,
+    n_heads: usize,
+    head_dim: usize,
+    kdim: usize,
+    /// Positions per page.
+    page: usize,
+    /// Total pages in the pool.
+    n_pages: usize,
+    layers: Vec<ArenaLayer>,
+    /// Per-page refcount: 0 = free, 1 = one owner, >1 = shared (prefix
+    /// cache pin and/or sessions reusing a common prompt head).
+    refs: Vec<u32>,
+    /// LIFO free list — retiring a short session hands its hot pages
+    /// straight to the next arrival.
+    free: Vec<usize>,
+    peak_pages: usize,
+}
+
+impl KvArena {
+    /// Allocate a pool of `n_pages` pages of `page` positions each
+    /// under `spec`'s (per-layer, possibly sliced) dims.
+    pub fn for_spec(spec: &ModelSpec, n_pages: usize, page: usize) -> Result<KvArena> {
+        anyhow::ensure!(page >= 1, "kv arena wants page size >= 1");
+        anyhow::ensure!(n_pages >= 1, "kv arena wants n_pages >= 1");
+        let head_dim = spec.head_dim();
+        let kdim = spec.n_heads * head_dim;
+        let slots = n_pages * page;
+        let layers = (0..spec.n_layers)
+            .map(|l| {
+                let splits = spec.head_splits_l(l);
+                let dv: usize = splits.iter().sum();
+                ArenaLayer {
+                    k: vec![0.0; slots * kdim],
+                    v: vec![0.0; slots * dv],
+                    splits,
+                    dv,
+                }
+            })
+            .collect();
+        Ok(KvArena {
+            model: spec.name.clone(),
+            family: spec.family.clone(),
+            d_model: spec.d_model,
+            n_heads: spec.n_heads,
+            head_dim,
+            kdim,
+            page,
+            n_pages,
+            layers,
+            refs: vec![0; n_pages],
+            free: (0..n_pages).rev().collect(),
+            peak_pages: 0,
+        })
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Positions per page.
+    pub fn page_size(&self) -> usize {
+        self.page
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.n_pages - self.free.len()
+    }
+
+    /// High-water mark of simultaneously resident pages — the serve
+    /// residency receipt.
+    pub fn peak_pages(&self) -> usize {
+        self.peak_pages
+    }
+
+    /// Pages needed to hold `positions` cached positions.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        (positions + self.page - 1) / self.page
+    }
+
+    /// Allocated bytes of the whole pool (all pages, used or free).
+    pub fn kv_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| (l.k.len() + l.v.len()) * std::mem::size_of::<f32>())
+            .sum()
+    }
+
+    /// Bytes of one page across every layer.
+    pub fn page_bytes(&self) -> usize {
+        self.kv_bytes() / self.n_pages
+    }
+
+    /// The arena only ever serves the exact spec it was built for.
+    pub fn check_spec(&self, spec: &ModelSpec) -> Result<()> {
+        anyhow::ensure!(
+            self.model == spec.name,
+            "kv arena was built for model '{}' but the forward is running \
+             '{}' — arena/model mismatch",
+            self.model,
+            spec.name
+        );
+        anyhow::ensure!(
+            self.family == spec.family
+                && self.d_model == spec.d_model
+                && self.n_heads == spec.n_heads
+                && self.layers.len() == spec.n_layers,
+            "kv arena geometry (d={}, heads={}, layers={}) does not match \
+             model '{}' — mismatched layer dims",
+            self.d_model,
+            self.n_heads,
+            self.layers.len(),
+            spec.name
+        );
+        for (l, lay) in self.layers.iter().enumerate() {
+            let want = spec.head_splits_l(l);
+            anyhow::ensure!(
+                lay.splits == want,
+                "kv arena layer {l}: head splits {:?} != model '{}' splits \
+                 {:?} — mismatched layer dims",
+                lay.splits,
+                spec.name,
+                want
+            );
+        }
+        Ok(())
+    }
+
+    /// Extend `kv`'s page table until it covers `upto` positions. New
+    /// pages come off the free list with refcount 1. Errs when the pool
+    /// is exhausted — the serve engine's admission reservation exists
+    /// precisely so this can never fire mid-generation.
+    pub fn grow(&mut self, kv: &mut PagedKv, upto: usize) -> Result<()> {
+        while kv.pages.len() * self.page < upto {
+            let p = match self.free.pop() {
+                Some(p) => p,
+                None => {
+                    anyhow::bail!(
+                        "kv arena exhausted: {} pages of {} positions all \
+                         resident while growing a sequence to {upto}",
+                        self.n_pages,
+                        self.page
+                    )
+                }
+            };
+            debug_assert_eq!(self.refs[p], 0, "free page with live refs");
+            self.refs[p] = 1;
+            kv.pages.push(p);
+        }
+        self.peak_pages = self.peak_pages.max(self.used_pages());
+        Ok(())
+    }
+
+    /// Drop `kv`'s hold on all its pages (pages with no other owner
+    /// return to the free list) and reset it to an empty sequence.
+    pub fn release(&mut self, kv: &mut PagedKv) {
+        for p in std::mem::take(&mut kv.pages) {
+            self.dec_ref(p);
+        }
+        kv.len = 0;
+    }
+
+    /// Take an extra hold on `pages` (the prefix cache pinning a
+    /// finished prompt's full pages).
+    pub(crate) fn retain_pages(&mut self, pages: &[usize]) {
+        for &p in pages {
+            debug_assert!(self.refs[p] > 0, "retain of a free page");
+            self.refs[p] += 1;
+        }
+    }
+
+    /// Drop one hold on `pages` (prefix-cache eviction).
+    pub(crate) fn release_pages(&mut self, pages: &[usize]) {
+        for &p in pages {
+            self.dec_ref(p);
+        }
+    }
+
+    /// A new sequence whose first `positions` positions are served by
+    /// the shared `pages` (refcounts bumped): the prefix-cache hit
+    /// path. The shared prefix must consist of *full* pages only.
+    pub(crate) fn share(&mut self, pages: &[usize], positions: usize) -> PagedKv {
+        debug_assert_eq!(
+            positions,
+            pages.len() * self.page,
+            "shared prefix must cover exactly its full pages"
+        );
+        self.retain_pages(pages);
+        PagedKv { pages: pages.to_vec(), len: positions }
+    }
+
+    fn dec_ref(&mut self, p: usize) {
+        debug_assert!(self.refs[p] > 0, "double free of arena page {p}");
+        self.refs[p] -= 1;
+        if self.refs[p] == 0 {
+            self.free.push(p);
+        }
+    }
+
+    /// Store one position's K/V rows for layer `l`. Keys must already
+    /// be RoPE-rotated at `pos`. Only exclusively-owned pages may be
+    /// written: shared (prefix) pages are immutable by construction —
+    /// a session's fresh positions always land past its shared full
+    /// pages.
+    pub(crate) fn write_pos(&mut self, kv: &PagedKv, l: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
+        let p = kv.pages[pos / self.page];
+        debug_assert_eq!(self.refs[p], 1, "write into shared arena page {p}");
+        let slot = p * self.page + pos % self.page;
+        let kdim = self.kdim;
+        let lay = &mut self.layers[l];
+        debug_assert_eq!(krow.len(), kdim, "write_pos: krow width != kdim");
+        debug_assert_eq!(vrow.len(), lay.dv, "write_pos: vrow width != dv");
+        lay.k[slot * kdim..(slot + 1) * kdim].copy_from_slice(krow);
+        lay.v[slot * lay.dv..(slot + 1) * lay.dv].copy_from_slice(vrow);
+    }
+
+    /// Layer `l`'s key row [kdim] at logical position `tj` of the
+    /// sequence whose page table is `pages`.
+    pub(crate) fn k_row(&self, l: usize, pages: &[usize], tj: usize) -> &[f32] {
+        let slot = pages[tj / self.page] * self.page + tj % self.page;
+        let kdim = self.kdim;
+        &self.layers[l].k[slot * kdim..(slot + 1) * kdim]
+    }
+
+    /// Layer `l`'s value row [dv_l] at logical position `tj`.
+    pub(crate) fn v_row(&self, l: usize, pages: &[usize], tj: usize) -> &[f32] {
+        let slot = pages[tj / self.page] * self.page + tj % self.page;
+        let dv = self.layers[l].dv;
+        &self.layers[l].v[slot * dv..(slot + 1) * dv]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::compact::build_params;
+    use crate::runtime::manifest::LayerDims;
+
+    fn toy_spec() -> ModelSpec {
+        let layer_dims = vec![
+            LayerDims { d_ff: 20, d_ov: 10, head_splits: vec![6, 4] },
+            LayerDims { d_ff: 12, d_ov: 5, head_splits: vec![5, 0] },
+        ];
+        let params = build_params("llama", 16, 2, 48, 24, &layer_dims);
+        ModelSpec {
+            name: "arena_toy".into(),
+            family: "llama".into(),
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 20,
+            vocab: 48,
+            seq: 24,
+            batch: 2,
+            params,
+            layer_dims,
+        }
+    }
+
+    #[test]
+    fn grow_release_reuse_is_lifo_and_accounted() {
+        let spec = toy_spec();
+        let mut arena = KvArena::for_spec(&spec, 6, 4).unwrap();
+        assert_eq!(arena.free_pages(), 6);
+        assert_eq!(arena.pages_for(9), 3);
+
+        let mut a = PagedKv::new();
+        arena.grow(&mut a, 5).unwrap(); // 2 pages
+        assert_eq!(a.pages(), &[0, 1]);
+        assert_eq!(arena.used_pages(), 2);
+
+        let mut b = PagedKv::new();
+        arena.grow(&mut b, 4).unwrap(); // 1 page
+        assert_eq!(b.pages(), &[2]);
+        assert_eq!(arena.peak_pages(), 3);
+
+        arena.release(&mut a);
+        assert_eq!(arena.used_pages(), 1);
+        assert!(a.pages().is_empty() && a.is_empty());
+
+        // LIFO: the pages a freed come right back, hottest first
+        let mut c = PagedKv::new();
+        arena.grow(&mut c, 8).unwrap();
+        assert_eq!(c.pages(), &[1, 0]);
+        assert_eq!(arena.peak_pages(), 3);
+
+        arena.release(&mut b);
+        arena.release(&mut c);
+        assert_eq!(arena.free_pages(), 6);
+    }
+
+    #[test]
+    fn exhaustion_is_a_proper_error() {
+        let spec = toy_spec();
+        let mut arena = KvArena::for_spec(&spec, 2, 4).unwrap();
+        let mut a = PagedKv::new();
+        arena.grow(&mut a, 8).unwrap();
+        let mut b = PagedKv::new();
+        let err = arena.grow(&mut b, 1).unwrap_err();
+        assert!(err.to_string().contains("kv arena exhausted"), "{err}");
+        arena.release(&mut a);
+        assert_eq!(arena.free_pages(), 2);
+    }
+
+    #[test]
+    fn shared_pages_survive_owner_release() {
+        let spec = toy_spec();
+        let mut arena = KvArena::for_spec(&spec, 4, 4).unwrap();
+        let mut a = PagedKv::new();
+        arena.grow(&mut a, 8).unwrap(); // pages [0, 1], both full at len 8
+        let head: Vec<usize> = a.pages().to_vec();
+        arena.retain_pages(&head); // prefix-cache pin
+        arena.release(&mut a);
+        assert_eq!(arena.used_pages(), 2, "pinned pages stay resident");
+
+        let kv = arena.share(&head, 8);
+        assert_eq!(kv.len(), 8);
+        assert_eq!(kv.pages(), &head[..]);
+        let mut kv = kv;
+        arena.release(&mut kv);
+        arena.release_pages(&head); // eviction
+        assert_eq!(arena.free_pages(), 4);
+    }
+
+    #[test]
+    fn write_then_read_roundtrips_rows() {
+        let spec = toy_spec();
+        let mut arena = KvArena::for_spec(&spec, 3, 2).unwrap();
+        let mut kv = PagedKv::new();
+        arena.grow(&mut kv, 3).unwrap();
+        let kdim = spec.n_heads * spec.head_dim();
+        for pos in 0..3 {
+            let krow: Vec<f32> = (0..kdim).map(|j| (pos * 100 + j) as f32).collect();
+            let vrow: Vec<f32> = (0..10).map(|j| (pos * 1000 + j) as f32).collect();
+            arena.write_pos(&kv, 0, pos, &krow, &vrow);
+            kv.advance();
+        }
+        for pos in 0..3 {
+            assert_eq!(arena.k_row(0, kv.pages(), pos)[0], (pos * 100) as f32);
+            assert_eq!(arena.v_row(0, kv.pages(), pos)[9], (pos * 1000 + 9) as f32);
+        }
+        arena.release(&mut kv);
+    }
+}

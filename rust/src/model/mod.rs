@@ -1,19 +1,22 @@
 //! Model zoo: weight storage (packed, manifest-ordered), deterministic
 //! initialization, checkpoints, the host forward/backward (the runtime's
 //! execution engine and the numerics baseline), the KV-cached
-//! autoregressive decode engine, the pruning mask bookkeeping, and the
+//! autoregressive decode engine (per-session ring caches and the serve
+//! engine's paged KV arena), the pruning mask bookkeeping, and the
 //! compact (physically sliced) export path.
 
 pub mod weights;
 pub mod host;
 pub mod host_grad;
 pub mod decode;
+pub mod kv_arena;
 pub mod mask;
 pub mod compact;
 pub mod zoo;
 
 pub use compact::CompactModel;
 pub use decode::{GenerateOpts, Generation, KvCache, Sampler};
+pub use kv_arena::{KvArena, PagedKv};
 pub use mask::PruneMask;
 pub use weights::{
     DenseParams, PackCache, PackedDenseParams, PackedWeights, ParamSource, Weights,

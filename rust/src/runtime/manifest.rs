@@ -374,9 +374,13 @@ impl Manifest {
             gradcol_leaves: leaves("gradcol_leaves"),
         };
 
-        // Register compact exports (physically sliced models).
+        // Register compact exports (physically sliced models). Stale
+        // `*.tmp` debris (a crashed sharded publish, see
+        // `store::write_shards`) is cleared before the scan so it can
+        // never shadow or trip the registration pass.
         let cdir = dir.join("compact");
         if cdir.is_dir() {
+            crate::runtime::store::clean_stale_tmp(&cdir);
             let mut paths: Vec<PathBuf> = std::fs::read_dir(&cdir)
                 .with_context(|| format!("scan {}", cdir.display()))?
                 .filter_map(|e| e.ok())

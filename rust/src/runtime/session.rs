@@ -543,6 +543,40 @@ impl<'m> Session<'m> {
         decode::generate_src(&mut params.model.source(), prompt, opts)
     }
 
+    /// [`Session::generate`] over a caller-supplied (reusable) cache.
+    /// The request is validated against the cache capacity **up front**:
+    /// a prompt + `max_new` that cannot fit errs before any prefill
+    /// work instead of dying on the mid-generation overflow assert.
+    pub fn generate_with_cache(
+        &self,
+        params: &PackedParams,
+        prompt: &IntTensor,
+        opts: &GenerateOpts,
+        cache: &mut KvCache,
+    ) -> Result<Generation> {
+        self.check_decode_params(params)?;
+        self.check_prompt(prompt)?;
+        let _exec = self.backend.enter();
+        decode::generate_with_cache_src(&mut params.model.source(), prompt, opts, cache)
+    }
+
+    /// Drive the continuous-batching serve engine (`crate::serve`) to
+    /// completion on this session's backend: every request decodes over
+    /// the ONE shared packed plan `params` holds, through a paged KV
+    /// arena with prefix-cache prompt sharing. Per-session outputs are
+    /// bit-identical to [`Session::generate`] with the same prompt,
+    /// sampler and seed at batch size 1.
+    pub fn serve(
+        &self,
+        params: &PackedParams,
+        requests: &[crate::serve::ServeRequest],
+        cfg: &crate::serve::ServeConfig,
+    ) -> Result<crate::serve::ServeReport> {
+        self.check_decode_params(params)?;
+        let _exec = self.backend.enter();
+        crate::serve::serve(&params.model, requests, cfg)
+    }
+
     /// [`Session::generate`] streaming the weights from a sharded store:
     /// the embed/head shard stays resident across the whole generation,
     /// layer shards stream in order with the backend's prefetch depth

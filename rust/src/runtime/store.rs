@@ -293,14 +293,40 @@ impl ShardLayout {
     }
 }
 
+/// Remove stale `*.tmp` leftovers under `dir` — debris from an earlier
+/// publish that wrote its temp file but died before (or during) the
+/// rename. Temp files are never valid store content, so scans and
+/// writers alike may clear them; unreadable dirs are ignored (the
+/// caller's own I/O will surface real errors).
+pub fn clean_stale_tmp(dir: &Path) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let is_tmp = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .map(|n| n.ends_with(".tmp"))
+            .unwrap_or(false);
+        if is_tmp && path.is_file() {
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
 /// Write one shard file per entry of the canonical index for `cm` under
 /// `dir` (created on demand). Serialization + checksumming fan out on
 /// the ambient worker pool — per-shard work is pure, so the bytes are
-/// identical for any pool width. Files publish via temp-file + rename.
+/// identical for any pool width. Files publish via temp-file + rename;
+/// a failed rename removes its temp file instead of leaking
+/// `<shard>.tmp` next to live store content, and stale `*.tmp` debris
+/// from older crashed publishes is cleared up front.
 /// Returns the index to embed in the compact spec.
 pub fn write_shards(dir: &Path, cm: &CompactModel) -> Result<ShardIndex> {
     std::fs::create_dir_all(dir)
         .with_context(|| format!("create {}", dir.display()))?;
+    clean_stale_tmp(dir);
     let layout = ShardLayout::of(&cm.spec)?;
     let packed = &cm.weights.packed.data;
     anyhow::ensure!(
@@ -341,8 +367,12 @@ pub fn write_shards(dir: &Path, cm: &CompactModel) -> Result<ShardIndex> {
         let tmp = dir.join(format!("{file}.tmp"));
         std::fs::write(&tmp, &bytes)
             .with_context(|| format!("write {}", tmp.display()))?;
-        std::fs::rename(&tmp, dir.join(&file))
-            .with_context(|| format!("publish {file}"))?;
+        if let Err(e) = std::fs::rename(&tmp, dir.join(&file)) {
+            // the write succeeded but the publish didn't: take the temp
+            // file with us instead of leaking it into the store dir
+            let _ = std::fs::remove_file(&tmp);
+            return Err(anyhow::Error::new(e).context(format!("publish {file}")));
+        }
         shards.push(ShardMeta { kind, file, elems, checksum: fnv1a64(&bytes) });
     }
     Ok(ShardIndex { shards })

@@ -1,0 +1,356 @@
+//! The continuous-batching scheduler: admission queue → batched ticks
+//! → retirement, all over ONE shared packed plan.
+//!
+//! Every scheduler **tick** runs one [`decode_step_paged`] over all
+//! active sessions: each contributes exactly one token — the next
+//! prompt token while it is still prefilling, its last sampled token
+//! afterwards. Prefill is just decode fed one token per tick (the
+//! repo's decode≡re-forward bit-identity contract makes the two
+//! paths interchangeable), which is what makes the batching truly
+//! *continuous*: a fresh session starts prefilling in the same batch
+//! where older sessions are mid-generation, and a finished session
+//! leaves the batch on the tick it completes — no tail-of-batch
+//! stragglers, no prefill stalls.
+//!
+//! Determinism receipt (locked by `rust/tests/test_serve.rs`): each
+//! session's output is **bit-identical** to a per-session sequential
+//! `generate` with the same prompt/sampler/seed, at every batch
+//! composition, admission order, page size and pool width. Forward
+//! rows are lane-independent (see [`decode_step_paged`]), and each
+//! session samples from its own [`Rng::new(seed)`] stream, so batch
+//! neighbors can never perturb a session's randomness.
+//!
+//! Memory safety-by-accounting: admission reserves the *worst-case*
+//! page count of every active session (`prompt + max_new - 1`
+//! positions), so the arena can never run out mid-generation — a
+//! request that could never fit is rejected up front, and one that
+//! merely has to wait stays queued (FIFO, head-of-line) until
+//! retirements or prefix-cache evictions free enough pages.
+
+use super::prefix::PrefixCache;
+use crate::model::decode::{decode_step_paged, sample_row, PagedLane, Sampler};
+use crate::model::kv_arena::{KvArena, PagedKv};
+use crate::model::weights::{PackedWeights, ParamSource};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::collections::VecDeque;
+
+/// One decode session submitted to the engine.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub prompt: Vec<i32>,
+    /// Tokens to generate (>= 1).
+    pub max_new: usize,
+    pub sampler: Sampler,
+    /// Seed of this session's own sampling [`Rng`] stream.
+    pub seed: u64,
+}
+
+/// Engine shape knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Positions per KV arena page.
+    pub page: usize,
+    /// Total pages in the arena pool.
+    pub n_pages: usize,
+    /// Max sessions decoding in one batched tick.
+    pub max_batch: usize,
+    /// Share common prompt heads across sessions.
+    pub prefix_cache: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { page: 16, n_pages: 256, max_batch: 8, prefix_cache: true }
+    }
+}
+
+/// One finished session.
+#[derive(Clone, Debug)]
+pub struct ServeOutput {
+    /// Index of the originating request.
+    pub id: usize,
+    /// Prompt + sampled continuation — the exact layout one row of
+    /// `generate`'s output uses.
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    pub generated: usize,
+    /// Prompt positions adopted from the prefix cache (0 on a miss).
+    pub prefix_hit_positions: usize,
+}
+
+/// What a full drive of the engine produced, with the throughput /
+/// latency / residency receipts `BENCH_serve.json` records.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Outputs ordered by request id.
+    pub outputs: Vec<ServeOutput>,
+    /// Batched steps executed.
+    pub ticks: usize,
+    pub wall_s: f64,
+    /// Sampled (non-prompt) tokens across all sessions.
+    pub generated_tokens: usize,
+    pub tokens_per_s: f64,
+    /// Per-token latency percentiles: each sampled token is attributed
+    /// the wall-time of the tick that produced it.
+    pub p50_token_s: f64,
+    pub p99_token_s: f64,
+    /// Largest batch any tick ran.
+    pub max_batch_seen: usize,
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    pub prefix_insertions: u64,
+    pub prefix_evictions: u64,
+    /// Arena residency high-water mark, pages.
+    pub peak_pages: usize,
+    /// Bytes of one arena page (all layers).
+    pub page_bytes: usize,
+    /// Allocated bytes of the whole arena pool.
+    pub kv_bytes: usize,
+}
+
+/// A session resident in the running batch.
+struct Active {
+    id: usize,
+    prompt: Vec<i32>,
+    max_new: usize,
+    sampler: Sampler,
+    rng: Rng,
+    kv: PagedKv,
+    /// Prompt tokens consumed so far (starts past a prefix-cache hit).
+    fed: usize,
+    /// Last sampled token, waiting to be fed next tick.
+    pending: Option<i32>,
+    out: Vec<i32>,
+    /// Worst-case page table length — the admission reservation.
+    pages_total: usize,
+    prefix_hit_positions: usize,
+    inserted: bool,
+}
+
+/// Drive every request to completion over `model`'s shared packed plan
+/// and return the outputs plus throughput/latency/residency receipts.
+/// Self-contained (builds its own arena + prefix cache); enter a
+/// backend scope first to pick the worker pool — `Session::serve`
+/// does exactly that.
+pub fn serve(
+    model: &PackedWeights,
+    requests: &[ServeRequest],
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    let spec = &model.w.spec;
+    anyhow::ensure!(cfg.max_batch >= 1, "serve wants max_batch >= 1");
+    let mut arena = KvArena::for_spec(spec, cfg.n_pages, cfg.page)?;
+    let mut prefix = PrefixCache::new(cfg.page);
+    let is_opt = spec.family == "opt";
+
+    // ---- submit-time validation: reject unservable requests before
+    // any forward work (the mid-flight arena/KV asserts stay as
+    // last-resort invariants)
+    for (id, r) in requests.iter().enumerate() {
+        anyhow::ensure!(!r.prompt.is_empty(), "serve request {id}: empty prompt");
+        anyhow::ensure!(r.max_new >= 1, "serve request {id}: max_new must be >= 1");
+        for &t in &r.prompt {
+            anyhow::ensure!(
+                t >= 0 && (t as usize) < spec.vocab,
+                "serve request {id}: token id {t} outside vocab {}",
+                spec.vocab
+            );
+        }
+        let need = r.prompt.len() + r.max_new - 1;
+        let pages_total = arena.pages_for(need);
+        anyhow::ensure!(
+            pages_total <= cfg.n_pages,
+            "serve request {id}: prompt {} + max_new {} needs {pages_total} \
+             pages but the arena only has {} — rejected before any forward work",
+            r.prompt.len(),
+            r.max_new,
+            cfg.n_pages
+        );
+        if is_opt {
+            anyhow::ensure!(
+                need <= spec.seq,
+                "serve request {id}: prompt {} + max_new {} exceeds the {} \
+                 learned positions of OPT model '{}'",
+                r.prompt.len(),
+                r.max_new,
+                spec.seq,
+                spec.name
+            );
+        }
+    }
+
+    let mut queue: VecDeque<usize> = (0..requests.len()).collect();
+    let mut active: Vec<Active> = Vec::new();
+    let mut outputs: Vec<Option<ServeOutput>> = (0..requests.len()).map(|_| None).collect();
+    let mut token_s: Vec<f64> = Vec::new();
+    let mut ticks = 0usize;
+    let mut max_batch_seen = 0usize;
+    let mut src = model.source();
+
+    let wall = std::time::Instant::now();
+    loop {
+        // ---- admission (FIFO, every tick — token-granularity joins)
+        while active.len() < cfg.max_batch && !queue.is_empty() {
+            let rid = queue[0];
+            let r = &requests[rid];
+            let t_prompt = r.prompt.len();
+            let pages_total = arena.pages_for(t_prompt + r.max_new - 1);
+            // Share full prompt-head pages, but never the final prompt
+            // position: its forward produces the first sampling logits,
+            // so every session runs at least one tick.
+            let hit = if cfg.prefix_cache {
+                prefix.lookup(&r.prompt, t_prompt - 1)
+            } else {
+                None
+            };
+            let have_pages = hit.as_ref().map(|(_, pages)| pages.len()).unwrap_or(0);
+            let reserved: usize = active
+                .iter()
+                .map(|s| s.pages_total - s.kv.pages().len())
+                .sum();
+            if arena.free_pages() < reserved + (pages_total - have_pages) {
+                // Starved: shed cold prefix pins, else wait for a
+                // retirement. Head-of-line blocking keeps admission
+                // deterministic.
+                if cfg.prefix_cache && prefix.evict_one(&mut arena) {
+                    continue;
+                }
+                break;
+            }
+            queue.pop_front();
+            let (fed, kv) = match hit {
+                Some((positions, pages)) => (positions, arena.share(&pages, positions)),
+                None => (0, PagedKv::new()),
+            };
+            active.push(Active {
+                id: rid,
+                prompt: r.prompt.clone(),
+                max_new: r.max_new,
+                sampler: r.sampler,
+                rng: Rng::new(r.seed),
+                kv,
+                fed,
+                pending: None,
+                out: Vec::new(),
+                pages_total,
+                prefix_hit_positions: fed,
+                inserted: false,
+            });
+        }
+        if active.is_empty() {
+            if queue.is_empty() {
+                break;
+            }
+            // unreachable: an empty batch frees every session page, and
+            // draining the prefix cache frees the rest, so a validated
+            // request always admits eventually
+            anyhow::bail!(
+                "serve admission wedged with {} queued requests and an empty batch",
+                queue.len()
+            );
+        }
+        max_batch_seen = max_batch_seen.max(active.len());
+
+        // ---- one batched step: every active session advances one token
+        ticks += 1;
+        let t_tick = std::time::Instant::now();
+        src.rewind()?;
+        {
+            let mut lanes: Vec<PagedLane<'_>> = active
+                .iter_mut()
+                .map(|s| {
+                    let token = if s.fed < s.prompt.len() {
+                        s.prompt[s.fed]
+                    } else {
+                        s.pending.expect("decode lane without a pending token")
+                    };
+                    PagedLane { kv: &mut s.kv, token }
+                })
+                .collect();
+            let logits = decode_step_paged(&mut src, &mut arena, &mut lanes)?;
+            drop(lanes);
+            let dt = t_tick.elapsed().as_secs_f64();
+
+            // ---- per-session bookkeeping + sampling
+            let mut sampled = 0usize;
+            let mut retired: Vec<usize> = Vec::new();
+            for (i, s) in active.iter_mut().enumerate() {
+                let t_prompt = s.prompt.len();
+                let pos = s.kv.len() - 1; // the position this tick processed
+                if s.fed < t_prompt {
+                    s.fed += 1;
+                    if s.fed == t_prompt && cfg.prefix_cache && !s.inserted {
+                        // prompt fully resident: pin its full pages for
+                        // future sessions with the same head
+                        s.inserted = true;
+                        prefix.insert(&mut arena, &s.prompt, s.kv.pages());
+                    }
+                } else {
+                    s.pending = None;
+                }
+                if pos + 1 >= t_prompt {
+                    let tok = sample_row(logits.row(i), s.sampler, &mut s.rng) as i32;
+                    s.out.push(tok);
+                    sampled += 1;
+                    if s.out.len() == s.max_new {
+                        retired.push(i); // final token is never fed back
+                    } else {
+                        s.pending = Some(tok);
+                    }
+                }
+            }
+            for _ in 0..sampled {
+                token_s.push(dt);
+            }
+            // ---- retirement: leave the batch on the completing tick
+            for &i in retired.iter().rev() {
+                let mut s = active.remove(i);
+                arena.release(&mut s.kv);
+                let mut tokens = s.prompt.clone();
+                tokens.extend_from_slice(&s.out);
+                outputs[s.id] = Some(ServeOutput {
+                    id: s.id,
+                    tokens,
+                    prompt_len: s.prompt.len(),
+                    generated: s.out.len(),
+                    prefix_hit_positions: s.prefix_hit_positions,
+                });
+            }
+        }
+    }
+    let wall_s = wall.elapsed().as_secs_f64();
+
+    // teardown: drop the prefix pins; every page must come home
+    prefix.clear(&mut arena);
+    debug_assert_eq!(arena.used_pages(), 0, "serve leaked arena pages");
+
+    token_s.sort_by(|a, b| a.partial_cmp(b).expect("finite tick times"));
+    let pct = |q: f64| -> f64 {
+        if token_s.is_empty() {
+            return 0.0;
+        }
+        token_s[((token_s.len() - 1) as f64 * q).round() as usize]
+    };
+    let generated_tokens = token_s.len();
+    Ok(ServeReport {
+        outputs: outputs
+            .into_iter()
+            .map(|o| o.expect("unfinished serve session"))
+            .collect(),
+        ticks,
+        wall_s,
+        generated_tokens,
+        tokens_per_s: generated_tokens as f64 / wall_s.max(1e-12),
+        p50_token_s: pct(0.50),
+        p99_token_s: pct(0.99),
+        max_batch_seen,
+        prefix_hits: prefix.hits,
+        prefix_misses: prefix.misses,
+        prefix_insertions: prefix.insertions,
+        prefix_evictions: prefix.evictions,
+        peak_pages: arena.peak_pages(),
+        page_bytes: arena.page_bytes(),
+        kv_bytes: arena.kv_bytes(),
+    })
+}

@@ -1,0 +1,19 @@
+//! The serve subsystem: continuous-batching decode over one shared
+//! packed plan — FASP's deployment payoff made concrete. Many
+//! independent decode sessions (own prompt, sampler, seed) are driven
+//! through an admission queue, a paged KV arena
+//! (`crate::model::kv_arena`) and a batched scheduler
+//! ([`engine::serve`]) that interleaves prompt prefill with
+//! mid-generation decode at token granularity, plus a token-hash
+//! prefix cache ([`prefix`]) sharing common prompt heads zero-copy.
+//!
+//! The hard receipt (locked by `rust/tests/test_serve.rs`, recorded by
+//! `BENCH_serve.json`): every session's output is **bit-identical** to
+//! a per-session sequential `generate`, while batched throughput beats
+//! N sequential calls — the batch reads each packed weight panel once
+//! per tick for all lanes instead of once per session per token.
+
+pub mod engine;
+pub mod prefix;
+
+pub use engine::{serve, ServeConfig, ServeOutput, ServeReport, ServeRequest};

@@ -1,0 +1,138 @@
+//! Prefix cache: token-hash-keyed sharing of common prompt heads.
+//!
+//! When a served session finishes feeding its prompt, the K/V rows of
+//! the prompt's *full* pages are immutable forever (causal attention
+//! only ever reads them). The cache pins those pages (one extra
+//! refcount in the [`KvArena`]) under an FNV-1a hash of the exact
+//! token prefix; a later session whose prompt starts with the same
+//! tokens adopts the pages zero-copy and skips that much prefill.
+//!
+//! Correctness:
+//! * only **full** pages are shared — a partially written page could
+//!   still be appended to by its owner;
+//! * a hit never covers the final prompt position — that position's
+//!   forward produces the first sampling logits, so it always
+//!   recomputes (the adopted rows are bitwise what a cold prefill
+//!   would write, locked by `rust/tests/test_serve.rs`);
+//! * entries store their exact tokens, so a hash collision degrades to
+//!   a miss instead of serving the wrong prefix;
+//! * eviction (when admission is starved for pages) is deterministic:
+//!   fewest hits first, ties by key. Evicting only drops the cache's
+//!   refcount — sessions still reading the pages keep them resident.
+
+use crate::model::kv_arena::KvArena;
+use std::collections::BTreeMap;
+
+/// FNV-1a over the little-endian bytes of the token ids.
+fn token_hash(tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        for b in (t as u32).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+struct Entry {
+    /// Exact prefix tokens (collision guard).
+    tokens: Vec<i32>,
+    /// The full pages holding positions `0..tokens.len()`.
+    pages: Vec<usize>,
+    hits: u64,
+}
+
+pub(crate) struct PrefixCache {
+    /// Positions per arena page.
+    page: usize,
+    entries: BTreeMap<u64, Entry>,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+impl PrefixCache {
+    pub fn new(page: usize) -> PrefixCache {
+        PrefixCache {
+            page,
+            entries: BTreeMap::new(),
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Longest cached full-page head of `prompt` covering at most
+    /// `max_positions` positions: `(positions, pages)`. Counts one hit
+    /// or one miss per call.
+    pub fn lookup(&mut self, prompt: &[i32], max_positions: usize) -> Option<(usize, Vec<usize>)> {
+        let max_pages = max_positions.min(prompt.len()) / self.page;
+        for j in (1..=max_pages).rev() {
+            let pfx = &prompt[..j * self.page];
+            if let Some(e) = self.entries.get_mut(&token_hash(pfx)) {
+                if e.tokens == pfx {
+                    e.hits += 1;
+                    self.hits += 1;
+                    return Some((pfx.len(), e.pages.clone()));
+                }
+            }
+        }
+        self.misses += 1;
+        None
+    }
+
+    /// Pin `prompt`'s full-page head, already resident as the leading
+    /// pages of `pages` (a session that just finished its prefill).
+    /// No-op when the head is shorter than one page, already cached, or
+    /// hash-collides with a different cached prefix.
+    pub fn insert(&mut self, arena: &mut KvArena, prompt: &[i32], pages: &[usize]) {
+        let j = prompt.len() / self.page;
+        if j == 0 {
+            return;
+        }
+        let pfx = &prompt[..j * self.page];
+        let h = token_hash(pfx);
+        if self.entries.contains_key(&h) {
+            return; // cached already (or a collision: keep the incumbent)
+        }
+        arena.retain_pages(&pages[..j]);
+        self.entries.insert(
+            h,
+            Entry { tokens: pfx.to_vec(), pages: pages[..j].to_vec(), hits: 0 },
+        );
+        self.insertions += 1;
+    }
+
+    /// Evict the coldest entry (fewest hits, ties by ascending key).
+    /// Returns false when the cache is empty.
+    pub fn evict_one(&mut self, arena: &mut KvArena) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .min_by_key(|&(k, e)| (e.hits, *k))
+            .map(|(&k, _)| k);
+        match victim {
+            Some(k) => {
+                let e = self.entries.remove(&k).expect("victim vanished");
+                arena.release_pages(&e.pages);
+                self.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop every pin (serve teardown — the arena must end fully free).
+    pub fn clear(&mut self, arena: &mut KvArena) {
+        for (_, e) in std::mem::take(&mut self.entries) {
+            arena.release_pages(&e.pages);
+        }
+    }
+}

@@ -91,8 +91,8 @@ impl Pool {
                     slots[i] = Some(f(i));
                 }
             }
-            for h in handles {
-                for (i, v) in h.join().expect("pool worker panicked") {
+            for got in join_all(handles) {
+                for (i, v) in got {
                     slots[i] = Some(v);
                 }
             }
@@ -124,6 +124,7 @@ impl Pool {
             let extra = rows % w;
             let mut rest = data;
             let mut row0 = 0usize;
+            let mut handles = Vec::with_capacity(w - 1);
             for wi in 0..w {
                 let take_rows = base + usize::from(wi < extra);
                 let (chunk, tail) = rest.split_at_mut(take_rows * row_len);
@@ -135,12 +136,13 @@ impl Pool {
                     let _serial = enter(serial());
                     f(r0, chunk);
                 } else {
-                    s.spawn(move || {
+                    handles.push(s.spawn(move || {
                         let _serial = enter(serial());
                         f(r0, chunk);
-                    });
+                    }));
                 }
             }
+            join_all(handles);
         });
     }
 
@@ -174,6 +176,7 @@ impl Pool {
             let mut rest_a = a;
             let mut rest_b = b;
             let mut row0 = 0usize;
+            let mut handles = Vec::with_capacity(w - 1);
             for wi in 0..w {
                 let take_rows = base + usize::from(wi < extra);
                 let (ca, ta) = rest_a.split_at_mut(take_rows * a_len);
@@ -186,14 +189,42 @@ impl Pool {
                     let _serial = enter(serial());
                     f(r0, ca, cb);
                 } else {
-                    s.spawn(move || {
+                    handles.push(s.spawn(move || {
                         let _serial = enter(serial());
                         f(r0, ca, cb);
-                    });
+                    }));
                 }
             }
+            join_all(handles);
         });
     }
+}
+
+/// Join every worker handle, collecting results in spawn order. If any
+/// worker panicked, the FIRST panic payload is re-raised on the calling
+/// thread via [`std::panic::resume_unwind`] — but only after all
+/// handles have been joined, so no worker is left running against
+/// borrowed data. Relying on `std::thread::scope`'s implicit join would
+/// discard the payload and re-panic with a generic "a scoped thread
+/// panicked", which makes assertion failures inside pool tasks
+/// undebuggable at `FASP_THREADS>1`.
+fn join_all<T>(handles: Vec<std::thread::ScopedJoinHandle<'_, T>>) -> Vec<T> {
+    let mut out = Vec::with_capacity(handles.len());
+    let mut payload: Option<Box<dyn std::any::Any + Send>> = None;
+    for h in handles {
+        match h.join() {
+            Ok(v) => out.push(v),
+            Err(p) => {
+                if payload.is_none() {
+                    payload = Some(p);
+                }
+            }
+        }
+    }
+    if let Some(p) = payload {
+        std::panic::resume_unwind(p);
+    }
+    out
 }
 
 // ------------------------------------------------------------- sizing

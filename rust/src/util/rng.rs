@@ -83,9 +83,24 @@ impl Rng {
         }
     }
 
-    /// Sample an index from unnormalized weights.
+    /// Sample an index from unnormalized weights. Weights must be
+    /// finite, non-negative and sum to a positive total — a NaN or
+    /// infinite weight poisons the running subtraction so `u <= 0.0`
+    /// never fires and the walk silently falls through to the *last*
+    /// index (the worst candidate under a sorted top-k). Callers are
+    /// expected to sanitize first (see `model::decode::sample_row`);
+    /// these debug asserts make a poisoned call loud in test builds.
     pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        debug_assert!(!weights.is_empty(), "categorical: empty weights");
+        debug_assert!(
+            weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "categorical: weights must be finite and non-negative, got {weights:?}"
+        );
         let total: f64 = weights.iter().sum();
+        debug_assert!(
+            total > 0.0,
+            "categorical: weights must have a positive total, got {total}"
+        );
         let mut u = self.f64() * total;
         for (i, w) in weights.iter().enumerate() {
             u -= w;

@@ -1,0 +1,492 @@
+//! Serve-engine contract: the continuous-batching scheduler's output is
+//! **bit-identical** to per-session sequential `generate` across batch
+//! compositions, join/leave orders, page sizes and pool widths; the
+//! paged KV arena reuses freed pages and accounts residency; a
+//! prefix-cache hit produces the same bits as a cold prefill. Plus the
+//! decode-path regression locks: non-finite logits can never be
+//! sampled, oversized generations fail before any forward work, pool
+//! worker panics carry their payload, and a failed shard publish leaves
+//! no `*.tmp` debris.
+
+use fasp::model::compact::{build_params, compact_from_mask};
+use fasp::model::decode::{self, GenerateOpts, KvCache, Sampler};
+use fasp::model::{PackedWeights, PruneMask, Weights};
+use fasp::runtime::manifest::LayerDims;
+use fasp::runtime::store::{shard_file, write_shards, ShardKind};
+use fasp::runtime::ModelSpec;
+use fasp::serve::{serve, ServeConfig, ServeRequest};
+use fasp::tensor::IntTensor;
+use fasp::util::pool;
+use fasp::util::rng::Rng;
+use std::sync::Arc;
+
+/// Toy spec with ragged (compact-style) per-layer dims, including one
+/// fully sliced head — the serve path must hold exactly where the OV
+/// slicing bites (same shape family as `test_decode`'s toy).
+fn toy_spec(family: &str) -> ModelSpec {
+    let layer_dims = vec![
+        LayerDims { d_ff: 20, d_ov: 10, head_splits: vec![6, 4] },
+        LayerDims { d_ff: 12, d_ov: 5, head_splits: vec![5, 0] },
+        LayerDims { d_ff: 16, d_ov: 16, head_splits: vec![8, 8] },
+    ];
+    let params = build_params(family, 16, 3, 48, 24, &layer_dims);
+    ModelSpec {
+        name: format!("serve_toy_{family}"),
+        family: family.into(),
+        d_model: 16,
+        n_heads: 2,
+        n_layers: 3,
+        d_ff: 20,
+        vocab: 48,
+        seq: 24,
+        batch: 2,
+        params,
+        layer_dims,
+    }
+}
+
+/// A mixed load: staggered prompt lengths and generation lengths, both
+/// samplers, one seed per session — and the last session repeating the
+/// first session's prompt so the prefix cache has something to share.
+fn toy_requests(spec: &ModelSpec, n: usize) -> Vec<ServeRequest> {
+    let mut rng = Rng::new(0x10ad);
+    let mut reqs = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = 3 + i % 4;
+        let prompt: Vec<i32> = (0..t).map(|_| rng.below(spec.vocab) as i32).collect();
+        let sampler = if i % 2 == 0 {
+            Sampler::Greedy
+        } else {
+            Sampler::TopK { k: 4, temperature: 0.9 }
+        };
+        reqs.push(ServeRequest { prompt, max_new: 2 + i % 3, sampler, seed: 1000 + i as u64 });
+    }
+    if n >= 2 {
+        reqs[n - 1].prompt = reqs[0].prompt.clone();
+        reqs[n - 1].max_new = reqs[0].max_new;
+    }
+    reqs
+}
+
+/// Per-session sequential reference: one b=1 `generate_src` over the
+/// same packed weights with the same prompt/sampler/seed.
+fn sequential_reference(pw: &PackedWeights, reqs: &[ServeRequest]) -> Vec<Vec<i32>> {
+    reqs.iter()
+        .map(|r| {
+            let prompt = IntTensor::new(vec![1, r.prompt.len()], r.prompt.clone());
+            let opts = GenerateOpts { max_new: r.max_new, sampler: r.sampler, seed: r.seed };
+            decode::generate_src(&mut pw.source(), &prompt, &opts)
+                .unwrap()
+                .tokens
+                .data
+        })
+        .collect()
+}
+
+fn pages_for(positions: usize, page: usize) -> usize {
+    (positions + page - 1) / page
+}
+
+// --------------------------------------------------- scheduler bit-identity
+
+/// The hard receipt: serve ≡ sequential, bit for bit, on both families,
+/// across page sizes, batch caps (1 = fully serialized admission,
+/// mid = rolling join/leave, all = one big batch) and pool widths.
+#[test]
+fn serve_bit_identical_to_sequential_across_compositions() {
+    for family in ["llama", "opt"] {
+        let spec = toy_spec(family);
+        let w = Weights::init(&spec, 77);
+        let pw = PackedWeights::new(w);
+        let reqs = toy_requests(&spec, 6);
+        let expect = {
+            let _g = pool::enter(pool::serial());
+            sequential_reference(&pw, &reqs)
+        };
+        for (page, max_batch, workers) in [
+            (1usize, 1usize, 1usize),
+            (1, 3, 1),
+            (3, 1, 1),
+            (3, 2, 1),
+            (3, 6, 1),
+            (8, 3, 1),
+            (3, 3, 4),
+            (8, 6, 4),
+        ] {
+            let _g = pool::enter(Arc::new(pool::Pool::new(workers)));
+            let n_pages = 64;
+            let cfg = ServeConfig { page, n_pages, max_batch, prefix_cache: true };
+            let report = serve(&pw, &reqs, &cfg).unwrap();
+            assert_eq!(report.outputs.len(), reqs.len());
+            for (o, want) in report.outputs.iter().zip(&expect) {
+                assert_eq!(
+                    &o.tokens, want,
+                    "{family} page={page} max_batch={max_batch} w={workers}: \
+                     session {} diverged from sequential generate",
+                    o.id
+                );
+            }
+            assert_eq!(report.generated_tokens, reqs.iter().map(|r| r.max_new).sum::<usize>());
+            assert!(report.max_batch_seen <= max_batch);
+            // disabling the prefix cache must not change a single bit
+            let cfg_cold = ServeConfig { prefix_cache: false, ..cfg };
+            let cold = serve(&pw, &reqs, &cfg_cold).unwrap();
+            for (o, want) in cold.outputs.iter().zip(&expect) {
+                assert_eq!(
+                    &o.tokens, want,
+                    "{family} page={page} max_batch={max_batch} w={workers}: \
+                     cold-cache session {} diverged",
+                    o.id
+                );
+            }
+            assert_eq!(cold.prefix_hits, 0);
+        }
+    }
+}
+
+/// The sampled stream must be a function of the session alone: the same
+/// request produces the same tokens whether it runs solo or packed into
+/// a batch of strangers (per-session rng streams, lane-independent rows).
+#[test]
+fn session_output_independent_of_batch_neighbors() {
+    let spec = toy_spec("llama");
+    let w = Weights::init(&spec, 11);
+    let pw = PackedWeights::new(w);
+    let reqs = toy_requests(&spec, 5);
+    let solo: Vec<Vec<i32>> = reqs
+        .iter()
+        .map(|r| {
+            let cfg = ServeConfig { page: 4, n_pages: 32, max_batch: 1, prefix_cache: false };
+            serve(&pw, std::slice::from_ref(r), &cfg).unwrap().outputs[0].tokens.clone()
+        })
+        .collect();
+    let cfg = ServeConfig { page: 4, n_pages: 32, max_batch: 5, prefix_cache: false };
+    let batched = serve(&pw, &reqs, &cfg).unwrap();
+    for (o, want) in batched.outputs.iter().zip(&solo) {
+        assert_eq!(&o.tokens, want, "session {}: neighbors perturbed its output", o.id);
+    }
+}
+
+// ----------------------------------------------------- prefix cache sharing
+
+/// A prefix-cache hit must adopt full prompt-head pages (counted in the
+/// report and the per-session output) and still produce the exact bits
+/// of a cold prefill.
+#[test]
+fn prefix_hit_bit_identical_to_cold_prefill() {
+    let spec = toy_spec("llama");
+    let w = Weights::init(&spec, 23);
+    let pw = PackedWeights::new(w);
+    let mut rng = Rng::new(5);
+    let prompt: Vec<i32> = (0..6).map(|_| rng.below(spec.vocab) as i32).collect();
+    // identical prompts, serialized admission: the second session starts
+    // only after the first finished inserting its prompt head
+    let reqs: Vec<ServeRequest> = (0..3)
+        .map(|i| ServeRequest {
+            prompt: prompt.clone(),
+            max_new: 3,
+            sampler: Sampler::TopK { k: 3, temperature: 1.1 },
+            seed: 40 + i as u64,
+        })
+        .collect();
+    let expect = sequential_reference(&pw, &reqs);
+    let page = 2;
+    let cfg = ServeConfig { page, n_pages: 32, max_batch: 1, prefix_cache: true };
+    let report = serve(&pw, &reqs, &cfg).unwrap();
+    for (o, want) in report.outputs.iter().zip(&expect) {
+        assert_eq!(&o.tokens, want, "session {}: prefix hit changed the bits", o.id);
+    }
+    // lookup is capped at t_prompt - 1 = 5 positions → 2 full pages
+    assert_eq!(report.outputs[0].prefix_hit_positions, 0, "first session must be cold");
+    for o in &report.outputs[1..] {
+        assert_eq!(
+            o.prefix_hit_positions,
+            (prompt.len() - 1) / page * page,
+            "session {} adopted the wrong share",
+            o.id
+        );
+    }
+    assert!(report.prefix_hits >= 2, "hits: {}", report.prefix_hits);
+    assert!(report.prefix_insertions >= 1);
+}
+
+// ------------------------------------------------- arena residency + reuse
+
+/// Retired sessions return their pages to the pool: a load far larger
+/// than the batch cap must peak at the concurrent working set, not the
+/// whole load, and every page must come home at teardown (the engine
+/// debug-asserts that).
+#[test]
+fn arena_pages_are_reused_across_waves() {
+    let spec = toy_spec("llama");
+    let w = Weights::init(&spec, 31);
+    let pw = PackedWeights::new(w);
+    let reqs = toy_requests(&spec, 9);
+    let page = 2;
+    let max_batch = 2;
+    let cfg = ServeConfig { page, n_pages: 48, max_batch, prefix_cache: false };
+    let report = serve(&pw, &reqs, &cfg).unwrap();
+    let total: usize = reqs
+        .iter()
+        .map(|r| pages_for(r.prompt.len() + r.max_new - 1, page))
+        .sum();
+    let worst_concurrent = max_batch
+        * reqs
+            .iter()
+            .map(|r| pages_for(r.prompt.len() + r.max_new - 1, page))
+            .max()
+            .unwrap();
+    assert!(
+        report.peak_pages <= worst_concurrent,
+        "peak {} pages exceeds the {}-session working set bound {}",
+        report.peak_pages,
+        max_batch,
+        worst_concurrent
+    );
+    assert!(
+        report.peak_pages < total,
+        "peak {} pages vs {} total — retired pages were never reused",
+        report.peak_pages,
+        total
+    );
+    assert_eq!(report.kv_bytes, report.page_bytes * cfg.n_pages);
+}
+
+/// Unservable requests are rejected up front with a proper error — no
+/// forward work, no mid-generation arena panic.
+#[test]
+fn serve_rejects_unservable_requests_up_front() {
+    let spec = toy_spec("llama");
+    let w = Weights::init(&spec, 3);
+    let pw = PackedWeights::new(w);
+    let ok = ServeRequest {
+        prompt: vec![1, 2, 3],
+        max_new: 2,
+        sampler: Sampler::Greedy,
+        seed: 0,
+    };
+
+    // needs more pages than the whole arena
+    let big = ServeRequest { prompt: vec![1; 10], max_new: 10, sampler: Sampler::Greedy, seed: 0 };
+    let cfg = ServeConfig { page: 2, n_pages: 4, max_batch: 2, prefix_cache: true };
+    let err = serve(&pw, &[ok.clone(), big], &cfg).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("rejected before any forward work"),
+        "{err:#}"
+    );
+
+    // empty prompt / zero generation / out-of-vocab token
+    let cfg = ServeConfig { page: 4, n_pages: 32, max_batch: 2, prefix_cache: true };
+    let empty = ServeRequest { prompt: vec![], ..ok.clone() };
+    assert!(format!("{:#}", serve(&pw, &[empty], &cfg).unwrap_err()).contains("empty prompt"));
+    let zero = ServeRequest { max_new: 0, ..ok.clone() };
+    assert!(format!("{:#}", serve(&pw, &[zero], &cfg).unwrap_err()).contains("max_new"));
+    let bad = ServeRequest { prompt: vec![0, spec.vocab as i32], ..ok.clone() };
+    assert!(format!("{:#}", serve(&pw, &[bad], &cfg).unwrap_err()).contains("vocab"));
+
+    // OPT: generation must fit the learned positions
+    let ospec = toy_spec("opt");
+    let opw = PackedWeights::new(Weights::init(&ospec, 3));
+    let long = ServeRequest {
+        prompt: vec![1; ospec.seq],
+        max_new: 2,
+        sampler: Sampler::Greedy,
+        seed: 0,
+    };
+    let cfg = ServeConfig { page: 8, n_pages: 64, max_batch: 1, prefix_cache: false };
+    let err = serve(&opw, &[long], &cfg).unwrap_err();
+    assert!(format!("{err:#}").contains("learned positions"), "{err:#}");
+
+    // ...and a request that merely has to WAIT for pages is fine: the
+    // arena fits one session at a time, the queue drains in waves
+    let tight = ServeConfig { page: 2, n_pages: 2, max_batch: 4, prefix_cache: false };
+    let reqs = vec![ok.clone(), ok.clone(), ok];
+    let expect = sequential_reference(&pw, &reqs);
+    let report = serve(&pw, &reqs, &tight).unwrap();
+    for (o, want) in report.outputs.iter().zip(&expect) {
+        assert_eq!(&o.tokens, want, "starved admission changed session {}", o.id);
+    }
+    assert_eq!(report.max_batch_seen, 1, "2 pages can only host one session");
+}
+
+// -------------------------------------------- regression: KV overflow Err
+
+/// An oversized generation against a caller-provided cache must return
+/// a proper `Err` before any prefill work — the cache stays untouched.
+#[test]
+fn oversized_generation_errs_before_prefill() {
+    let spec = toy_spec("llama");
+    let w = Weights::init(&spec, 13);
+    let pw = PackedWeights::new(w);
+    let prompt = IntTensor::new(vec![1, 3], vec![1, 2, 3]);
+    let mut cache = KvCache::for_spec(&spec, 1, 4).unwrap();
+
+    // needs 3 + 4 - 1 = 6 cached positions, capacity is 4
+    let opts = GenerateOpts { max_new: 4, sampler: Sampler::Greedy, seed: 0 };
+    let err = decode::generate_with_cache_src(&mut pw.source(), &prompt, &opts, &mut cache)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rejected before prefill"), "{msg}");
+    assert!(msg.contains("overflow"), "{msg}");
+    assert_eq!(cache.len(), 0, "the failed call must not have touched the cache");
+
+    // exactly at capacity (3 + 2 - 1 = 4) it runs — and matches the
+    // exact-cache generate_src path bit for bit
+    let opts = GenerateOpts { max_new: 2, sampler: Sampler::Greedy, seed: 0 };
+    let g = decode::generate_with_cache_src(&mut pw.source(), &prompt, &opts, &mut cache)
+        .unwrap();
+    let g2 = decode::generate_src(&mut pw.source(), &prompt, &opts).unwrap();
+    assert_eq!(g.tokens.data, g2.tokens.data);
+    assert_eq!(g.generated, 2);
+}
+
+// ------------------------------------------- regression: NaN-proof sampling
+
+#[test]
+fn sampling_skips_non_finite_logits() {
+    let mut rng = Rng::new(9);
+    let nan = f32::NAN;
+    let inf = f32::INFINITY;
+
+    // greedy: NaN/±inf can never win, even in first position
+    let logits = [nan, 1.0, inf, 0.5, f32::NEG_INFINITY];
+    assert_eq!(decode::sample_row(&logits, Sampler::Greedy, &mut rng), 1);
+    assert_eq!(decode::sample_row(&[nan, 2.0, 1.0], Sampler::Greedy, &mut rng), 1);
+
+    // top-k: non-finite entries sort strictly last — with k spanning
+    // them, only the finite candidates are ever sampled
+    for k in [2usize, 3, 5] {
+        for _ in 0..64 {
+            let pick = decode::sample_row(
+                &logits,
+                Sampler::TopK { k, temperature: 0.7 },
+                &mut rng,
+            );
+            assert!(
+                pick == 1 || pick == 3,
+                "top-{k} sampled non-finite index {pick}"
+            );
+        }
+    }
+
+    // deterministic: with one finite logit, top-k is forced onto it
+    let one = [nan, nan, 4.0, inf];
+    for _ in 0..8 {
+        assert_eq!(
+            decode::sample_row(&one, Sampler::TopK { k: 4, temperature: 1.0 }, &mut rng),
+            2
+        );
+    }
+}
+
+#[test]
+#[should_panic(expected = "no finite logit")]
+fn all_nan_greedy_panics_loudly() {
+    let mut rng = Rng::new(1);
+    decode::sample_row(&[f32::NAN, f32::NAN], Sampler::Greedy, &mut rng);
+}
+
+#[test]
+#[should_panic(expected = "no finite logit")]
+fn all_nan_topk_panics_loudly() {
+    let mut rng = Rng::new(1);
+    decode::sample_row(
+        &[f32::NAN, f32::INFINITY, f32::NEG_INFINITY],
+        Sampler::TopK { k: 2, temperature: 1.0 },
+        &mut rng,
+    );
+}
+
+// ------------------------------------------ regression: pool panic payload
+
+/// A panic inside a spawned pool task must surface its original payload
+/// on the calling thread, not `std::thread::scope`'s generic "a scoped
+/// thread panicked".
+#[test]
+fn pool_worker_panics_carry_their_payload() {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {})); // keep test output clean
+    let pool = pool::Pool::new(4);
+
+    // map: some task (caller- or worker-side, scheduling decides) panics
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.map(16, |i| {
+            if i == 7 {
+                panic!("map payload 42");
+            }
+            i
+        })
+    }))
+    .unwrap_err();
+    let msg = err.downcast_ref::<&str>().copied().unwrap_or("<non-str payload>");
+    assert!(msg.contains("map payload 42"), "lost map panic payload: {msg:?}");
+
+    // run_rows1: row 0 lands on a SPAWNED worker (the calling thread
+    // takes the last chunk), so this exercises the join/re-raise path
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut data = vec![0.0f32; 16 * 4];
+        pool.run_rows1(&mut data, 4, |r0, _chunk| {
+            if r0 == 0 {
+                panic!("rows payload 7");
+            }
+        });
+    }))
+    .unwrap_err();
+    let msg = err.downcast_ref::<&str>().copied().unwrap_or("<non-str payload>");
+    assert!(msg.contains("rows payload 7"), "lost rows panic payload: {msg:?}");
+    std::panic::set_hook(prev);
+}
+
+// --------------------------------------- regression: shard publish hygiene
+
+/// A failed rename during shard publish must take its temp file with it
+/// — no `*.tmp` debris next to live store content.
+#[test]
+fn failed_shard_publish_leaves_no_tmp_debris() {
+    let spec = toy_spec("llama");
+    let w = Weights::init(&spec, 3);
+    let mask = PruneMask::full(&spec);
+    let cm = compact_from_mask(&w, &mask, "serve_tmp_fail").unwrap();
+    let dir = std::env::temp_dir().join("fasp_test_serve_tmpfail");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // block the embed shard's publish: a non-empty directory at the
+    // destination name makes the rename fail after the temp write
+    let blocker = dir.join(shard_file(&cm.spec.name, ShardKind::Embed));
+    std::fs::create_dir_all(blocker.join("occupied")).unwrap();
+
+    let err = write_shards(&dir, &cm).unwrap_err();
+    assert!(format!("{err:#}").contains("publish"), "{err:#}");
+    let tmp_left: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .filter(|e| e.path().to_string_lossy().ends_with(".tmp"))
+        .map(|e| e.path())
+        .collect();
+    assert!(tmp_left.is_empty(), "rename failure leaked temp files: {tmp_left:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Stale `*.tmp` debris from an older crashed publish is cleared by the
+/// next successful write, and never shadows live shards.
+#[test]
+fn stale_tmp_debris_cleared_on_next_publish() {
+    let spec = toy_spec("llama");
+    let w = Weights::init(&spec, 4);
+    let mask = PruneMask::full(&spec);
+    let cm = compact_from_mask(&w, &mask, "serve_tmp_stale").unwrap();
+    let dir = std::env::temp_dir().join("fasp_test_serve_tmpstale");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let debris = dir.join("serve_tmp_stale.layer000.ftns.tmp");
+    std::fs::write(&debris, b"half-written junk").unwrap();
+
+    let index = write_shards(&dir, &cm).unwrap();
+    assert!(!debris.exists(), "stale temp file survived a successful publish");
+    assert_eq!(index.shards.len(), 1 + spec.n_layers);
+    for s in &index.shards {
+        assert!(dir.join(&s.file).is_file(), "missing shard {}", s.file);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -19,16 +19,23 @@
 #      BENCH_shard_stream.json (shard load time, streamed vs monolithic
 #      fwd latency, peak-resident-weights estimate), BENCH_decode.json
 #      (KV-cached decode latency dense vs compact + the naive re-forward
-#      baseline + resident KV bytes) and BENCH_pack.json (packed
+#      baseline + resident KV bytes), BENCH_pack.json (packed
 #      operator plan vs the legacy per-call-transpose path: forward /
 #      prefill / per-token decode / streamed fwd, asserting packed
 #      strictly beats unpacked, bit-identical outputs, and ZERO
-#      pack/transpose operations inside the packed decode loop) so
-#      backend-parallelism, shard-streaming, decode and packing
-#      regressions are diffable too.
+#      pack/transpose operations inside the packed decode loop) and
+#      BENCH_serve.json (continuous-batching serve engine vs N
+#      sequential generates at 8/64/256 concurrent sessions: tokens/sec,
+#      p50/p99 per-token latency, arena page residency — asserting
+#      batched strictly beats sequential with bit-identical per-session
+#      outputs) so backend-parallelism, shard-streaming, decode, packing
+#      and serve-scheduler regressions are diffable too.
 #   5. a `fasp generate` smoke (deterministic --init weights) under both
 #      FASP_THREADS=1 and the default threaded backend — the CLI decode
 #      path must run end to end on both backends.
+#   6. a `fasp serve --check` smoke under both backends: the serve
+#      engine drives a self-generated session load end to end and
+#      re-verifies every session bit-identical to sequential generate.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -49,6 +56,14 @@ echo "== fasp generate smoke (default threaded backend) =="
 cargo run --release --quiet -- generate \
   --model llama_tiny --init --prompt-len 8 --max-new 8 --fast
 
+echo "== fasp serve smoke (FASP_THREADS=1, serial backend) =="
+FASP_THREADS=1 cargo run --release --quiet -- serve \
+  --model llama_tiny --init --sessions 6 --prompt-len 8 --max-new 6 --check --fast
+
+echo "== fasp serve smoke (default threaded backend) =="
+cargo run --release --quiet -- serve \
+  --model llama_tiny --init --sessions 6 --prompt-len 8 --max-new 6 --check --fast
+
 echo "== bench_prune_time (check mode) =="
 FASP_BENCH_CHECK=1 cargo bench --bench bench_prune_time
 
@@ -61,3 +76,4 @@ echo "== verify OK =="
 [ -f BENCH_shard_stream.json ] && echo "perf record: BENCH_shard_stream.json"
 [ -f BENCH_decode.json ] && echo "perf record: BENCH_decode.json"
 [ -f BENCH_pack.json ] && echo "perf record: BENCH_pack.json"
+[ -f BENCH_serve.json ] && echo "perf record: BENCH_serve.json"
