@@ -40,6 +40,33 @@ fn main() {
     }
     let mut rng = Rng::new(1);
 
+    // ---- static-analysis gate: the crate must lint clean --------------
+    // Runs first (cheap, pure CPU) so a determinism/robustness
+    // regression fails the bench before any timing work; check mode
+    // also writes LINT_REPORT.json so the gate is diffable like the
+    // other receipts.
+    {
+        let run = fasp::analysis::lint_repo(&fasp::repo_root())
+            .expect("fasp lint failed to run over the crate");
+        if check {
+            std::fs::write(
+                fasp::repo_root().join("LINT_REPORT.json"),
+                run.report_json().pretty(),
+            )
+            .expect("write LINT_REPORT.json");
+        }
+        assert!(
+            run.is_clean(),
+            "static analysis regressed:\n{}",
+            run.render_table()
+        );
+        println!(
+            "lint: clean ({} files, {} allowed suppressions)",
+            run.files_scanned,
+            run.allowed.len()
+        );
+    }
+
     // ---- restoration: closed form vs ADMM at the real shapes ----------
     for &(m, n) in &[(128usize, 512usize), (256, 1024)] {
         let w = Tensor::randn(&[m, n], 1.0, &mut rng);

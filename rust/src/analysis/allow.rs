@@ -1,0 +1,221 @@
+//! The `rust/lint_allow.toml` allowlist: every suppression is an
+//! explicit, justified entry. The parser is a tiny line-based TOML
+//! subset (the vendored-only build has no toml crate) accepting
+//! exactly the shape the allowlist uses:
+//!
+//! ```toml
+//! # full-line comments only
+//! [[allow]]
+//! rule = "D2"                      # required, must be a known rule id
+//! file = "src/model/host.rs"       # required, path relative to rust/
+//! pattern = ".sum::<f32>()"        # optional substring of the flagged line
+//! max = 4                          # optional cap (pattern entries only)
+//! why = "a written justification"  # required, >= 20 chars
+//! ```
+//!
+//! Matching semantics (see [`crate::analysis::report`]):
+//! - a pattern entry absorbs up to `max` (default 1) violations whose
+//!   source line contains the substring;
+//! - a file entry (no pattern) absorbs every violation of that rule in
+//!   that file — for whole-module exemptions like `util/timer.rs`;
+//! - an entry that absorbs *zero* violations is **stale** and fails
+//!   the lint, so the allowlist can never rot ahead of the code.
+
+use crate::analysis::rules::CATALOG;
+use crate::Result;
+
+/// One parsed `[[allow]]` entry.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub file: String,
+    pub pattern: Option<String>,
+    /// Max violations this entry may absorb; `None` = unlimited
+    /// (file-scope entries). Pattern entries default to 1.
+    pub max: Option<usize>,
+    pub why: String,
+    /// 1-based line of the `[[allow]]` header (for diagnostics).
+    pub line: usize,
+}
+
+impl AllowEntry {
+    /// Does this entry cover the given violation?
+    pub fn covers(&self, rule: &str, rel: &str, snippet: &str) -> bool {
+        self.rule == rule
+            && self.file == rel
+            && match &self.pattern {
+                Some(p) => snippet.contains(p.as_str()),
+                None => true,
+            }
+    }
+
+    /// Absorption cap (usize::MAX for file-scope entries).
+    pub fn cap(&self) -> usize {
+        match (&self.pattern, self.max) {
+            (_, Some(m)) => m,
+            (Some(_), None) => 1,
+            (None, None) => usize::MAX,
+        }
+    }
+}
+
+/// Parse the allowlist text. Errors carry the offending line number.
+pub fn parse(text: &str) -> Result<Vec<AllowEntry>> {
+    let mut entries: Vec<AllowEntry> = Vec::new();
+    let mut cur: Option<AllowEntry> = None;
+
+    for (i, raw) in text.lines().enumerate() {
+        let lno = i + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[allow]]" {
+            if let Some(e) = cur.take() {
+                finish(&mut entries, e)?;
+            }
+            cur = Some(AllowEntry {
+                rule: String::new(),
+                file: String::new(),
+                pattern: None,
+                max: None,
+                why: String::new(),
+                line: lno,
+            });
+            continue;
+        }
+        let (key, val) = match line.split_once('=') {
+            Some((k, v)) => (k.trim(), v.trim()),
+            None => anyhow::bail!("lint_allow.toml:{lno}: expected `key = value`, got `{line}`"),
+        };
+        let e = match cur.as_mut() {
+            Some(e) => e,
+            None => anyhow::bail!("lint_allow.toml:{lno}: `{key}` before any [[allow]] header"),
+        };
+        match key {
+            "rule" => e.rule = unquote(val, lno)?,
+            "file" => e.file = unquote(val, lno)?,
+            "pattern" => e.pattern = Some(unquote(val, lno)?),
+            "why" => e.why = unquote(val, lno)?,
+            "max" => {
+                e.max = Some(val.parse().map_err(|_| {
+                    anyhow::anyhow!("lint_allow.toml:{lno}: max must be an integer, got `{val}`")
+                })?)
+            }
+            other => anyhow::bail!("lint_allow.toml:{lno}: unknown key `{other}`"),
+        }
+    }
+    if let Some(e) = cur.take() {
+        finish(&mut entries, e)?;
+    }
+    Ok(entries)
+}
+
+fn finish(entries: &mut Vec<AllowEntry>, e: AllowEntry) -> Result<()> {
+    let lno = e.line;
+    if !CATALOG.iter().any(|(id, _)| *id == e.rule) {
+        anyhow::bail!(
+            "lint_allow.toml:{lno}: unknown rule `{}` (known: {})",
+            e.rule,
+            CATALOG
+                .iter()
+                .map(|(id, _)| *id)
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
+    if e.file.is_empty() {
+        anyhow::bail!("lint_allow.toml:{lno}: entry is missing `file`");
+    }
+    if e.why.trim().len() < 20 {
+        anyhow::bail!(
+            "lint_allow.toml:{lno}: `why` must be a real justification (>= 20 chars), got `{}`",
+            e.why
+        );
+    }
+    if e.max.is_some() && e.pattern.is_none() {
+        anyhow::bail!("lint_allow.toml:{lno}: `max` requires a `pattern`");
+    }
+    entries.push(e);
+    Ok(())
+}
+
+/// Strip a double-quoted TOML string (supports `\"` and `\\` escapes).
+fn unquote(v: &str, lno: usize) -> Result<String> {
+    let inner = v
+        .strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .ok_or_else(|| anyhow::anyhow!("lint_allow.toml:{lno}: expected a quoted string, got `{v}`"))?;
+    let mut out = String::with_capacity(inner.len());
+    let mut chars = inner.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_pattern_and_file_entries() {
+        let text = r#"
+# comment
+[[allow]]
+rule = "D2"
+file = "src/model/host.rs"
+pattern = ".sum::<f32>()"
+max = 4
+why = "sequential scalar reductions over a fixed iterator order"
+
+[[allow]]
+rule = "D3"
+file = "src/util/timer.rs"
+why = "the timer module exists to measure wall time; it never feeds tokens"
+"#;
+        let es = parse(text).unwrap();
+        assert_eq!(es.len(), 2);
+        assert_eq!(es[0].rule, "D2");
+        assert_eq!(es[0].cap(), 4);
+        assert!(es[0].covers("D2", "src/model/host.rs", "let s = x.iter().sum::<f32>();"));
+        assert!(!es[0].covers("D2", "src/model/host.rs", "x.iter().sum::<f64>()"));
+        assert!(!es[0].covers("D2", "src/other.rs", ".sum::<f32>()"));
+        assert_eq!(es[1].cap(), usize::MAX);
+        assert!(es[1].covers("D3", "src/util/timer.rs", "anything at all"));
+    }
+
+    #[test]
+    fn rejects_unknown_rule_missing_why_and_bare_max() {
+        let bad_rule = "[[allow]]\nrule = \"Z9\"\nfile = \"src/x.rs\"\nwhy = \"a long enough justification here\"\n";
+        assert!(parse(bad_rule).is_err());
+
+        let short_why = "[[allow]]\nrule = \"D1\"\nfile = \"src/x.rs\"\nwhy = \"because\"\n";
+        assert!(parse(short_why).is_err());
+
+        let bare_max = "[[allow]]\nrule = \"D1\"\nfile = \"src/x.rs\"\nmax = 2\nwhy = \"a long enough justification here\"\n";
+        assert!(parse(bare_max).is_err());
+
+        let no_header = "rule = \"D1\"\n";
+        assert!(parse(no_header).is_err());
+    }
+
+    #[test]
+    fn pattern_default_cap_is_one() {
+        let text = "[[allow]]\nrule = \"R1\"\nfile = \"src/serve/engine.rs\"\npattern = \".expect(\"\nwhy = \"documented loud-panic contract with tests\"\n";
+        let es = parse(text).unwrap();
+        assert_eq!(es[0].cap(), 1);
+    }
+}

@@ -1,0 +1,426 @@
+//! A lightweight, dependency-free Rust lexer for the static-analysis
+//! pass (`fasp lint`). It is *not* a full Rust grammar — it produces
+//! exactly what the lint rules need and nothing more:
+//!
+//! - identifiers, numeric literals (with a float/integer flag) and
+//!   single-character punctuation, each tagged with a 1-based line;
+//! - comments, recorded separately per line (so the U1 rule can look
+//!   for `// SAFETY:` text adjacent to an `unsafe` token);
+//! - string / raw-string / byte-string / char literals are consumed
+//!   and *dropped*, so rule matchers never fire on text inside quotes
+//!   (this is what lets the linter's own fixtures live in string
+//!   literals without tripping the rules on themselves).
+//!
+//! Keywords are ordinary identifiers here (`unsafe`, `as`, `mod`, ...);
+//! `::` arrives as two `:` puncts. Lifetimes (`'a`) are distinguished
+//! from char literals (`'x'`) by lookahead and dropped entirely.
+
+/// One meaningful token of a source file.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword.
+    Ident(String),
+    /// Numeric literal; `float` is true for `1.0`, `1e9`, `2.5f32`, ...
+    Num { text: String, float: bool },
+    /// Single punctuation character (`::` is two `:` tokens).
+    Punct(char),
+}
+
+/// A token plus its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+/// One line's worth of comment text (block comments spanning N lines
+/// produce N entries, so "comment directly above line L" is a simple
+/// line-number check).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// The lexed view of one source file.
+#[derive(Debug, Default)]
+pub struct LexedFile {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+impl LexedFile {
+    /// Ident text at token index `i`, or `""`.
+    pub fn ident(&self, i: usize) -> &str {
+        match self.tokens.get(i).map(|t| &t.tok) {
+            Some(Tok::Ident(s)) => s,
+            _ => "",
+        }
+    }
+
+    /// True if token `i` is the punct `c`.
+    pub fn punct(&self, i: usize, c: char) -> bool {
+        matches!(self.tokens.get(i).map(|t| &t.tok), Some(Tok::Punct(p)) if *p == c)
+    }
+}
+
+/// Lex `src` into tokens + comments. Never fails: unterminated
+/// constructs simply consume to end of input (good enough for a
+/// linter that only runs over code the compiler already accepted).
+pub fn lex(src: &str) -> LexedFile {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = LexedFile::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    macro_rules! bump_line {
+        ($c:expr) => {
+            if $c == '\n' {
+                line += 1;
+            }
+        };
+    }
+
+    while i < n {
+        let c = b[i];
+        // -- whitespace ------------------------------------------------
+        if c.is_whitespace() {
+            bump_line!(c);
+            i += 1;
+            continue;
+        }
+        // -- line comment ---------------------------------------------
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            out.comments.push(Comment {
+                line,
+                text: b[start..i].iter().collect(),
+            });
+            continue; // newline handled by whitespace branch
+        }
+        // -- block comment (nesting, per Rust) ------------------------
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start_line = line;
+            let mut depth = 1usize;
+            let start = i;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    bump_line!(b[i]);
+                    i += 1;
+                }
+            }
+            let text: String = b[start..i.min(n)].iter().collect();
+            for (k, part) in text.split('\n').enumerate() {
+                out.comments.push(Comment {
+                    line: start_line + k,
+                    text: part.to_string(),
+                });
+            }
+            continue;
+        }
+        // -- raw strings: r"...", r#"..."#, br#"..."# ------------------
+        if (c == 'r' || c == 'b') && is_raw_string_start(&b, i) {
+            let mut j = i;
+            if b[j] == 'b' {
+                j += 1;
+            }
+            j += 1; // past 'r'
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            j += 1; // past opening quote
+            // scan for closing quote followed by `hashes` #'s
+            while j < n {
+                bump_line!(b[j]);
+                if b[j] == '"' {
+                    let mut k = j + 1;
+                    let mut seen = 0usize;
+                    while k < n && b[k] == '#' && seen < hashes {
+                        seen += 1;
+                        k += 1;
+                    }
+                    if seen == hashes {
+                        j = k;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            i = j;
+            continue;
+        }
+        // -- plain / byte strings -------------------------------------
+        if c == '"' || (c == 'b' && i + 1 < n && b[i + 1] == '"') {
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            while j < n {
+                if b[j] == '\\' {
+                    // `\<newline>` is a line-continuation escape: the
+                    // skipped newline still advances the line counter
+                    if j + 1 < n && b[j + 1] == '\n' {
+                        line += 1;
+                    }
+                    j += 2;
+                    continue;
+                }
+                bump_line!(b[j]);
+                if b[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            i = j;
+            continue;
+        }
+        // -- char literal vs lifetime ---------------------------------
+        if c == '\'' || (c == 'b' && i + 1 < n && b[i + 1] == '\'') {
+            let q = if c == 'b' { i + 1 } else { i };
+            // lifetime: 'ident NOT followed by a closing quote
+            if b[q] == '\''
+                && q + 1 < n
+                && (b[q + 1].is_alphabetic() || b[q + 1] == '_')
+                && !(q + 2 < n && b[q + 2] == '\'')
+            {
+                let mut j = q + 1;
+                while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+            // char literal: consume to closing quote, honoring escapes
+            let mut j = q + 1;
+            while j < n {
+                if b[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == '\'' {
+                    j += 1;
+                    break;
+                }
+                bump_line!(b[j]);
+                j += 1;
+            }
+            i = j;
+            continue;
+        }
+        // -- identifier / keyword -------------------------------------
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            out.tokens.push(Token {
+                tok: Tok::Ident(b[start..i].iter().collect()),
+                line,
+            });
+            continue;
+        }
+        // -- numeric literal ------------------------------------------
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut float = false;
+            if c == '0' && i + 1 < n && matches!(b[i + 1], 'x' | 'o' | 'b') {
+                i += 2;
+                while i < n && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+            } else {
+                while i < n && (b[i].is_ascii_digit() || b[i] == '_') {
+                    i += 1;
+                }
+                // fraction: '.' only if followed by a digit (so `0..n`
+                // and `1.max(2)` stay integers)
+                if i + 1 < n && b[i] == '.' && b[i + 1].is_ascii_digit() {
+                    float = true;
+                    i += 1;
+                    while i < n && (b[i].is_ascii_digit() || b[i] == '_') {
+                        i += 1;
+                    }
+                } else if i + 1 < n && b[i] == '.' && !(b[i + 1].is_alphabetic() || b[i + 1] == '.' || b[i + 1] == '_')
+                {
+                    // trailing-dot float like `1.` (rare; not followed
+                    // by ident/range)
+                    float = true;
+                    i += 1;
+                }
+                // exponent
+                if i < n
+                    && (b[i] == 'e' || b[i] == 'E')
+                    && (i + 1 < n && (b[i + 1].is_ascii_digit() || b[i + 1] == '+' || b[i + 1] == '-'))
+                {
+                    float = true;
+                    i += 1;
+                    if b[i] == '+' || b[i] == '-' {
+                        i += 1;
+                    }
+                    while i < n && (b[i].is_ascii_digit() || b[i] == '_') {
+                        i += 1;
+                    }
+                }
+                // suffix (f32/f64 force float; u32 etc. keep integer)
+                if i < n && b[i].is_alphabetic() {
+                    let s = i;
+                    while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                        i += 1;
+                    }
+                    let suffix: String = b[s..i].iter().collect();
+                    if suffix.starts_with('f') {
+                        float = true;
+                    }
+                }
+            }
+            out.tokens.push(Token {
+                tok: Tok::Num {
+                    text: b[start..i].iter().collect(),
+                    float,
+                },
+                line,
+            });
+            continue;
+        }
+        // -- punctuation ----------------------------------------------
+        out.tokens.push(Token {
+            tok: Tok::Punct(c),
+            line,
+        });
+        i += 1;
+    }
+    out
+}
+
+/// True when position `i` starts a raw (byte) string: `r"`, `r#`,
+/// `br"`, `br#` — and is not just an identifier beginning with r/b.
+fn is_raw_string_start(b: &[char], i: usize) -> bool {
+    let mut j = i;
+    if b[j] == 'b' {
+        j += 1;
+        if j >= b.len() || b[j] != 'r' {
+            return false;
+        }
+    }
+    if b[j] != 'r' {
+        return false;
+    }
+    j += 1;
+    while j < b.len() && b[j] == '#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == '"'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Ident(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_chars_are_dropped() {
+        let src = "let s = \"HashMap inside a string\"; let c = 'x'; let l: &'static str = r#\"Instant::now\"#;";
+        let ids = idents(src);
+        assert!(ids.contains(&"let".to_string()));
+        assert!(!ids.contains(&"HashMap".to_string()));
+        assert!(!ids.contains(&"Instant".to_string()));
+        // lifetime consumed without swallowing following tokens
+        assert!(ids.contains(&"str".to_string()));
+    }
+
+    #[test]
+    fn comments_recorded_with_lines() {
+        let src = "// SAFETY: fine\nlet x = 1;\n/* multi\nline */\nlet y = 2;";
+        let f = lex(src);
+        assert_eq!(f.comments.len(), 3); // line comment + 2 block lines
+        assert_eq!(f.comments[0].line, 1);
+        assert!(f.comments[0].text.contains("SAFETY"));
+        assert_eq!(f.comments[1].line, 3);
+        assert_eq!(f.comments[2].line, 4);
+        // tokens keep correct lines across the block comment
+        let y = f
+            .tokens
+            .iter()
+            .find(|t| matches!(&t.tok, Tok::Ident(s) if s == "y"))
+            .unwrap();
+        assert_eq!(y.line, 5);
+    }
+
+    #[test]
+    fn string_line_continuation_keeps_line_numbers() {
+        // `\<newline>` inside a string is an escape, but the physical
+        // line still advances — later tokens must not drift
+        let src = "let s = \"one \\\n two\";\nlet after = 1;";
+        let f = lex(src);
+        let after = f
+            .tokens
+            .iter()
+            .find(|t| matches!(&t.tok, Tok::Ident(s) if s == "after"))
+            .unwrap();
+        assert_eq!(after.line, 3);
+    }
+
+    #[test]
+    fn float_detection() {
+        let cases = [
+            ("1.0", true),
+            ("1e9", true),
+            ("2.5f32", true),
+            ("3f64", true),
+            ("42", false),
+            ("0xff", false),
+            ("1_000", false),
+            ("7usize", false),
+        ];
+        for (src, want) in cases {
+            let f = lex(src);
+            match &f.tokens[0].tok {
+                Tok::Num { float, .. } => assert_eq!(*float, want, "{src}"),
+                t => panic!("{src}: {t:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn range_is_not_a_float() {
+        let f = lex("for i in 0..10 {}");
+        let nums: Vec<bool> = f
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Num { float, .. } => Some(*float),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nums, vec![false, false]);
+    }
+
+    #[test]
+    fn double_colon_is_two_puncts() {
+        let f = lex("Instant::now()");
+        assert_eq!(f.ident(0), "Instant");
+        assert!(f.punct(1, ':') && f.punct(2, ':'));
+        assert_eq!(f.ident(3), "now");
+    }
+}

@@ -1,0 +1,66 @@
+//! `fasp lint` — a dependency-free determinism & robustness
+//! static-analysis pass over the crate's own sources.
+//!
+//! Every receipt this reproduction ships (packed≡unpacked kernels,
+//! batched-serve ≡ sequential-generate, bit-identical outputs at any
+//! thread width / backend / storage mode) rests on invariants that a
+//! single stray `HashMap` iteration, unordered float `sum()`, or
+//! panic-in-serve-path can silently break. The dynamic suites catch
+//! those only when a test hits the right interleaving; this pass
+//! checks the contract *statically on every build*:
+//!
+//! | rule | contract |
+//! |------|----------|
+//! | D1   | no `HashMap`/`HashSet` in library code (iteration order) |
+//! | D2   | no unordered float reductions outside `lane_accum`'s home |
+//! | D3   | no wall-clock / pointer-derived values in library code |
+//! | U1   | every `unsafe` carries an adjacent `// SAFETY:` comment |
+//! | R1   | no `unwrap`/`expect`/`panic!` in request paths |
+//! | P1   | no hand-rolled threads/channels outside `util/pool.rs` |
+//!
+//! Suppressions live in `rust/lint_allow.toml`; every entry carries a
+//! written justification and an entry that matches nothing fails the
+//! lint (see [`allow`]). The pass runs as a tier-1 gate in
+//! `verify.sh` (before the test matrix) and inside
+//! `bench_hot_paths --check`, emitting `LINT_REPORT.json` next to the
+//! other receipts.
+
+pub mod allow;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod source;
+
+pub use report::LintRun;
+pub use rules::Violation;
+
+use crate::Result;
+use std::path::Path;
+
+/// Lint the crate rooted at `root` (the repo root — the directory
+/// holding `Cargo.toml` and `rust/`). Scans `rust/src/**/*.rs`
+/// against `rust/lint_allow.toml` (an absent allowlist means zero
+/// suppressions).
+pub fn lint_repo(root: &Path) -> Result<LintRun> {
+    let rust_dir = root.join("rust");
+    let src_dir = rust_dir.join("src");
+    anyhow::ensure!(
+        src_dir.is_dir(),
+        "fasp lint: {} is not a directory (run from the repo, or set FASP_ROOT)",
+        src_dir.display()
+    );
+    let files = source::scan_crate(&src_dir)?;
+    let allow_path = rust_dir.join("lint_allow.toml");
+    let entries = if allow_path.is_file() {
+        let text = std::fs::read_to_string(&allow_path)
+            .map_err(|e| anyhow::anyhow!("fasp lint: read {}: {e}", allow_path.display()))?;
+        allow::parse(&text)?
+    } else {
+        Vec::new()
+    };
+    let mut findings = Vec::new();
+    for f in &files {
+        findings.extend(rules::check_file(f));
+    }
+    Ok(report::evaluate(files.len(), findings, entries))
+}

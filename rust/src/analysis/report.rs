@@ -1,0 +1,238 @@
+//! Allowlist application + report rendering for `fasp lint`: the
+//! human table and the machine-readable `LINT_REPORT.json` receipt.
+
+use crate::analysis::allow::AllowEntry;
+use crate::analysis::rules::{Violation, CATALOG};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// The outcome of one lint pass over the crate.
+pub struct LintRun {
+    pub files_scanned: usize,
+    /// Raw findings not absorbed by the allowlist — each one fails
+    /// the lint.
+    pub violations: Vec<Violation>,
+    /// Findings absorbed by an allowlist entry (index into `entries`).
+    pub allowed: Vec<(Violation, usize)>,
+    /// The parsed allowlist.
+    pub entries: Vec<AllowEntry>,
+    /// Indices of entries that absorbed zero findings — stale entries
+    /// also fail the lint (the allowlist can never rot ahead of code).
+    pub stale: Vec<usize>,
+}
+
+/// Apply the allowlist to raw findings. Entries are tried in file
+/// order; each absorbs up to its cap. Deterministic: findings arrive
+/// sorted (files scanned in sorted order, tokens in source order).
+pub fn evaluate(
+    files_scanned: usize,
+    findings: Vec<Violation>,
+    entries: Vec<AllowEntry>,
+) -> LintRun {
+    let mut used = vec![0usize; entries.len()];
+    let mut violations = Vec::new();
+    let mut allowed = Vec::new();
+    for v in findings {
+        let hit = entries.iter().enumerate().find(|(i, e)| {
+            used[*i] < e.cap() && e.covers(v.rule, &v.rel, &v.snippet)
+        });
+        match hit {
+            Some((i, _)) => {
+                used[i] += 1;
+                allowed.push((v, i));
+            }
+            None => violations.push(v),
+        }
+    }
+    let stale = (0..entries.len()).filter(|&i| used[i] == 0).collect();
+    LintRun {
+        files_scanned,
+        violations,
+        allowed,
+        entries,
+        stale,
+    }
+}
+
+impl LintRun {
+    /// Clean = zero violations and zero stale allowlist entries.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty() && self.stale.is_empty()
+    }
+
+    fn count(&self, rule: &str) -> (usize, usize) {
+        (
+            self.violations.iter().filter(|v| v.rule == rule).count(),
+            self.allowed.iter().filter(|(v, _)| v.rule == rule).count(),
+        )
+    }
+
+    /// Render the human-readable report table.
+    pub fn render_table(&self) -> String {
+        let mut s = String::new();
+        s.push_str("fasp lint — determinism & robustness static analysis\n");
+        s.push_str(&format!(
+            "  {} files scanned, {} allowlist entr{}\n\n",
+            self.files_scanned,
+            self.entries.len(),
+            if self.entries.len() == 1 { "y" } else { "ies" }
+        ));
+        s.push_str("  rule  viol  allowed  description\n");
+        for (id, desc) in CATALOG {
+            let (v, a) = self.count(id);
+            s.push_str(&format!("  {id:<4}  {v:>4}  {a:>7}  {desc}\n"));
+        }
+        if !self.violations.is_empty() {
+            s.push_str("\nviolations:\n");
+            for v in &self.violations {
+                s.push_str(&format!(
+                    "  {}:{} [{}] {}\n",
+                    v.rel, v.line, v.rule, v.snippet
+                ));
+            }
+        }
+        if !self.stale.is_empty() {
+            s.push_str("\nstale allowlist entries (matched nothing — remove them):\n");
+            for &i in &self.stale {
+                let e = &self.entries[i];
+                s.push_str(&format!(
+                    "  lint_allow.toml:{} [{}] {} {}\n",
+                    e.line,
+                    e.rule,
+                    e.file,
+                    e.pattern.as_deref().unwrap_or("(whole file)")
+                ));
+            }
+        }
+        let status = if self.is_clean() {
+            format!(
+                "\nOK: 0 violations, {} allowed suppression{}\n",
+                self.allowed.len(),
+                if self.allowed.len() == 1 { "" } else { "s" }
+            )
+        } else {
+            format!(
+                "\nFAIL: {} violation{}, {} stale allowlist entr{}\n",
+                self.violations.len(),
+                if self.violations.len() == 1 { "" } else { "s" },
+                self.stale.len(),
+                if self.stale.len() == 1 { "y" } else { "ies" }
+            )
+        };
+        s.push_str(&status);
+        s
+    }
+
+    /// The `LINT_REPORT.json` payload: per-rule counts and per-file
+    /// breakdowns, plus totals and stale-entry diagnostics.
+    pub fn report_json(&self) -> Json {
+        let mut rules = Vec::new();
+        for (id, desc) in CATALOG {
+            let (v, a) = self.count(id);
+            let mut files: BTreeMap<String, i64> = BTreeMap::new();
+            for viol in self.violations.iter().filter(|x| x.rule == *id) {
+                *files.entry(viol.rel.clone()).or_insert(0) += 1;
+            }
+            let files_json = Json::Obj(
+                files
+                    .into_iter()
+                    .map(|(k, n)| (k, Json::Num(n as f64)))
+                    .collect(),
+            );
+            rules.push(Json::obj(vec![
+                ("id", Json::Str(id.to_string())),
+                ("description", Json::Str(desc.to_string())),
+                ("violations", Json::Num(v as f64)),
+                ("allowed", Json::Num(a as f64)),
+                ("files", files_json),
+            ]));
+        }
+        let stale = self
+            .stale
+            .iter()
+            .map(|&i| {
+                let e = &self.entries[i];
+                Json::obj(vec![
+                    ("rule", Json::Str(e.rule.clone())),
+                    ("file", Json::Str(e.file.clone())),
+                    (
+                        "pattern",
+                        match &e.pattern {
+                            Some(p) => Json::Str(p.clone()),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("line", Json::Num(e.line as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("rules", Json::Arr(rules)),
+            (
+                "total_violations",
+                Json::Num(self.violations.len() as f64),
+            ),
+            ("total_allowed", Json::Num(self.allowed.len() as f64)),
+            ("allow_entries", Json::Num(self.entries.len() as f64)),
+            ("stale_allow_entries", Json::Arr(stale)),
+            ("clean", Json::Bool(self.is_clean())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{allow, rules, source::SourceFile};
+
+    fn findings(rel: &str, src: &str) -> Vec<Violation> {
+        rules::check_file(&SourceFile::synthetic(rel, src))
+    }
+
+    #[test]
+    fn allowlist_absorbs_up_to_cap_and_flags_stale() {
+        let src = "fn a(v: &[f32]) -> f32 { v.iter().sum::<f32>() }\nfn b(v: &[f32]) -> f32 { v.iter().sum::<f32>() }\n";
+        let toml = "[[allow]]\nrule = \"D2\"\nfile = \"src/x.rs\"\npattern = \".sum::<f32>()\"\nmax = 1\nwhy = \"only the first one is a known-safe scalar site\"\n";
+        let entries = allow::parse(toml).unwrap();
+        let run = evaluate(1, findings("src/x.rs", src), entries);
+        assert_eq!(run.allowed.len(), 1);
+        assert_eq!(run.violations.len(), 1); // cap exceeded → second stays
+        assert!(run.stale.is_empty());
+        assert!(!run.is_clean());
+
+        // stale entry: nothing to absorb
+        let toml2 = "[[allow]]\nrule = \"D1\"\nfile = \"src/x.rs\"\nwhy = \"there is no HashMap here any more at all\"\n";
+        let run2 = evaluate(1, Vec::new(), allow::parse(toml2).unwrap());
+        assert_eq!(run2.stale, vec![0]);
+        assert!(!run2.is_clean());
+    }
+
+    #[test]
+    fn file_scope_entry_absorbs_everything_in_that_file() {
+        let src = "fn f() { let a = std::time::Instant::now(); let _ = a; }\nfn g() { let b = std::time::Instant::now(); let _ = b; }\n";
+        let toml = "[[allow]]\nrule = \"D3\"\nfile = \"src/util/timer.rs\"\nwhy = \"the timer module measures wall time by design\"\n";
+        let run = evaluate(
+            1,
+            findings("src/util/timer.rs", src),
+            allow::parse(toml).unwrap(),
+        );
+        assert!(run.is_clean());
+        assert_eq!(run.allowed.len(), 2);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let src = "use std::collections::HashMap;\n";
+        let run = evaluate(3, findings("src/x.rs", src), Vec::new());
+        let j = run.report_json();
+        let txt = j.pretty();
+        assert!(txt.contains("\"total_violations\""));
+        assert!(txt.contains("\"files_scanned\""));
+        assert!(txt.contains("src/x.rs"));
+        assert!(!run.is_clean());
+        let table = run.render_table();
+        assert!(table.contains("FAIL"));
+        assert!(table.contains("src/x.rs:1 [D1]"));
+    }
+}

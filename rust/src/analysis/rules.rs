@@ -1,0 +1,391 @@
+//! The `fasp lint` rule catalog. Every rule has a stable ID, a
+//! one-line description (shown in the report table), and a token-level
+//! matcher over [`SourceFile`]s.
+//!
+//! Scope policy: rules scan `rust/src/**` only. Tests assert panics
+//! and use ad-hoc containers by design, and benches are timers by
+//! definition — the determinism contract is on shipped library code.
+//! Within a scanned file, `#[cfg(test)]` regions are skipped by every
+//! rule except U1 (`unsafe` needs a SAFETY comment even in tests).
+
+use crate::analysis::lexer::Tok;
+use crate::analysis::source::SourceFile;
+
+/// (id, description) — the order here is the report order.
+pub const CATALOG: &[(&str, &str)] = &[
+    (
+        "D1",
+        "HashMap/HashSet in library code: iteration order is nondeterministic; use BTreeMap/BTreeSet",
+    ),
+    (
+        "D2",
+        "unordered float reduction (.sum::<f32/f64>(), fold over floats) outside tensor/matmul.rs lane_accum",
+    ),
+    (
+        "D3",
+        "wall-clock / address-derived value (Instant::now, SystemTime, ptr-as-int) in library code",
+    ),
+    (
+        "U1",
+        "unsafe block without a // SAFETY: comment on the preceding line(s)",
+    ),
+    (
+        "R1",
+        "unwrap/expect/panic in a request path (serve/, model/kv_arena.rs, model/decode.rs, runtime/store.rs)",
+    ),
+    (
+        "P1",
+        "hand-rolled threads/channels outside util/pool.rs: fan-out must use Pool::{map,run_rows1,run_rows2}",
+    ),
+];
+
+/// One diagnostic: rule, file, 1-based line, the offending source line.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub rel: String,
+    pub line: usize,
+    pub snippet: String,
+}
+
+impl Violation {
+    fn new(rule: &'static str, f: &SourceFile, line: usize) -> Violation {
+        Violation {
+            rule,
+            rel: f.rel.clone(),
+            line,
+            snippet: f.line(line).to_string(),
+        }
+    }
+}
+
+/// Files where R1 (no panics in request paths) applies.
+fn r1_scope(rel: &str) -> bool {
+    rel.starts_with("src/serve/")
+        || rel == "src/model/kv_arena.rs"
+        || rel == "src/model/decode.rs"
+        || rel == "src/runtime/store.rs"
+}
+
+/// The canonical reduction home: D2 never fires here.
+const D2_HOME: &str = "src/tensor/matmul.rs";
+/// The pool implementation itself: P1 never fires here.
+const P1_HOME: &str = "src/util/pool.rs";
+
+/// Run every rule over one file.
+pub fn check_file(f: &SourceFile) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let toks = &f.lexed.tokens;
+
+    // Dedup guard: at most one violation per (rule, line) so a line
+    // like `a.sum::<f32>() + b.sum::<f32>()` reads as one finding.
+    let mut push = {
+        let mut seen: Vec<(&'static str, usize)> = Vec::new();
+        move |out: &mut Vec<Violation>, rule: &'static str, line: usize, f: &SourceFile| {
+            if !seen.contains(&(rule, line)) {
+                seen.push((rule, line));
+                out.push(Violation::new(rule, f, line));
+            }
+        }
+    };
+
+    for i in 0..toks.len() {
+        let line = toks[i].line;
+        let in_test = f.in_test(line);
+
+        // ---- U1: unsafe needs an adjacent SAFETY comment (everywhere).
+        // Accepted: a comment on the `unsafe` line itself, or anywhere
+        // in the contiguous comment block ending on the line above
+        // (multi-line SAFETY explanations put the keyword first).
+        if f.lexed.ident(i) == "unsafe" {
+            let at = |l: usize, needle: &str| {
+                f.lexed
+                    .comments
+                    .iter()
+                    .any(|c| c.line == l && c.text.contains(needle))
+            };
+            let has_comment = |l: usize| f.lexed.comments.iter().any(|c| c.line == l);
+            let mut ok = at(line, "SAFETY");
+            let mut l = line;
+            while !ok && l > 1 && has_comment(l - 1) {
+                l -= 1;
+                ok = at(l, "SAFETY");
+            }
+            if !ok {
+                push(&mut out, "U1", line, f);
+            }
+        }
+
+        if in_test {
+            continue;
+        }
+
+        // ---- D1: HashMap / HashSet --------------------------------
+        match f.lexed.ident(i) {
+            "HashMap" | "HashSet" => push(&mut out, "D1", line, f),
+            _ => {}
+        }
+
+        // ---- D2: unordered float reductions -----------------------
+        if f.rel != D2_HOME {
+            // `.sum::<f32>()` / `.sum::<f64>()`
+            if f.lexed.punct(i, '.')
+                && f.lexed.ident(i + 1) == "sum"
+                && f.lexed.punct(i + 2, ':')
+                && f.lexed.punct(i + 3, ':')
+                && f.lexed.punct(i + 4, '<')
+                && matches!(f.lexed.ident(i + 5), "f32" | "f64")
+            {
+                push(&mut out, "D2", line, f);
+            }
+            // `.fold(<first arg mentioning floats>, ...)`
+            if f.lexed.punct(i, '.') && f.lexed.ident(i + 1) == "fold" && f.lexed.punct(i + 2, '(')
+            {
+                if fold_init_is_float(f, i + 2) {
+                    push(&mut out, "D2", line, f);
+                }
+            }
+        }
+
+        // ---- D3: wall clock / address-derived ---------------------
+        if f.lexed.ident(i) == "Instant"
+            && f.lexed.punct(i + 1, ':')
+            && f.lexed.punct(i + 2, ':')
+            && f.lexed.ident(i + 3) == "now"
+        {
+            push(&mut out, "D3", line, f);
+        }
+        if f.lexed.ident(i) == "SystemTime" {
+            push(&mut out, "D3", line, f);
+        }
+        // `x.as_ptr() as usize/u64/...` — a pointer laundered into a value
+        if f.lexed.ident(i) == "as_ptr"
+            && f.lexed.punct(i + 1, '(')
+            && f.lexed.punct(i + 2, ')')
+            && f.lexed.ident(i + 3) == "as"
+            && matches!(f.lexed.ident(i + 4), "usize" | "u64" | "u32" | "i64" | "isize")
+        {
+            push(&mut out, "D3", line, f);
+        }
+
+        // ---- R1: panics in request paths --------------------------
+        if r1_scope(&f.rel) {
+            if f.lexed.punct(i, '.')
+                && matches!(f.lexed.ident(i + 1), "unwrap" | "expect")
+                && f.lexed.punct(i + 2, '(')
+            {
+                push(&mut out, "R1", line, f);
+            }
+            if matches!(
+                f.lexed.ident(i),
+                "panic" | "unreachable" | "todo" | "unimplemented"
+            ) && f.lexed.punct(i + 1, '!')
+            {
+                push(&mut out, "R1", line, f);
+            }
+        }
+
+        // ---- P1: hand-rolled threading ----------------------------
+        if f.rel != P1_HOME {
+            if f.lexed.ident(i) == "thread"
+                && f.lexed.punct(i + 1, ':')
+                && f.lexed.punct(i + 2, ':')
+                && matches!(f.lexed.ident(i + 3), "spawn" | "scope")
+            {
+                push(&mut out, "P1", line, f);
+            }
+            if f.lexed.ident(i) == "mpsc" {
+                push(&mut out, "P1", line, f);
+            }
+        }
+    }
+    out
+}
+
+/// For a `.fold(` at token index `open` (the `(`): does the *first
+/// argument* (tokens up to the matching top-level `,` or `)`) mention
+/// a float — a float literal, or an `f32`/`f64` path? Catches
+/// `fold(0.0, ...)`, `fold(f32::NEG_INFINITY, ...)` and
+/// `fold((f64::INFINITY, f64::NEG_INFINITY), ...)` while ignoring
+/// integer/`Vec` folds.
+fn fold_init_is_float(f: &SourceFile, open: usize) -> bool {
+    let toks = &f.lexed.tokens;
+    let mut depth = 0usize;
+    let mut k = open;
+    while k < toks.len() {
+        match &toks[k].tok {
+            Tok::Punct('(') | Tok::Punct('[') | Tok::Punct('{') => depth += 1,
+            Tok::Punct(')') | Tok::Punct(']') | Tok::Punct('}') => {
+                if depth <= 1 {
+                    return false; // end of args before any float
+                }
+                depth -= 1;
+            }
+            Tok::Punct(',') if depth == 1 => return false, // first arg done
+            Tok::Num { float: true, .. } => return true,
+            Tok::Ident(s) if s == "f32" || s == "f64" => return true,
+            _ => {}
+        }
+        k += 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(rel: &str, src: &str) -> Vec<Violation> {
+        check_file(&SourceFile::synthetic(rel, src))
+    }
+
+    fn rules(v: &[Violation]) -> Vec<&'static str> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    // ---- D1 -------------------------------------------------------
+    #[test]
+    fn d1_fires_on_hashmap_and_not_on_btreemap() {
+        let bad = "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, u32> = HashMap::new(); }\n";
+        let got = lint("src/x.rs", bad);
+        assert!(got.iter().all(|v| v.rule == "D1"));
+        assert_eq!(got.len(), 2); // the use line + the fn line (deduped per line)
+        assert_eq!(got[0].line, 1);
+
+        let clean = "use std::collections::BTreeMap;\nfn f() { let m: BTreeMap<u32, u32> = BTreeMap::new(); }\n";
+        assert!(lint("src/x.rs", clean).is_empty());
+    }
+
+    #[test]
+    fn d1_skips_test_regions_and_strings() {
+        let src = "fn f() { let s = \"HashMap\"; }\n#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    fn t() { let _m: HashMap<u8, u8> = HashMap::new(); }\n}\n";
+        assert!(lint("src/x.rs", src).is_empty());
+    }
+
+    // ---- D2 -------------------------------------------------------
+    #[test]
+    fn d2_fires_on_float_sum_and_float_fold() {
+        let bad = "fn f(v: &[f32]) -> f32 { v.iter().sum::<f32>() }\n";
+        assert_eq!(rules(&lint("src/x.rs", bad)), vec!["D2"]);
+
+        let bad64 = "fn f(v: &[f64]) -> f64 { v.iter().copied().sum::<f64>() }\n";
+        assert_eq!(rules(&lint("src/x.rs", bad64)), vec!["D2"]);
+
+        let fold = "fn f(v: &[f32]) -> f32 { v.iter().fold(0.0f32, |a, &b| a + b) }\n";
+        assert_eq!(rules(&lint("src/x.rs", fold)), vec!["D2"]);
+
+        let fold_inf = "fn f(v: &[f32]) -> f32 { v.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) }\n";
+        assert_eq!(rules(&lint("src/x.rs", fold_inf)), vec!["D2"]);
+    }
+
+    #[test]
+    fn d2_silent_on_int_reductions_and_in_matmul_home() {
+        let ints = "fn f(v: &[usize]) -> usize { v.iter().sum::<usize>() + v.iter().fold(0, |a, &b| a + b) }\n";
+        assert!(lint("src/x.rs", ints).is_empty());
+
+        let vec_fold = "fn f(v: &[u32]) -> Vec<u32> { v.iter().fold(Vec::new(), |mut a, &b| { a.push(b); a }) }\n";
+        assert!(lint("src/x.rs", vec_fold).is_empty());
+
+        let home = "fn lane_accum(v: &[f32]) -> f32 { v.iter().sum::<f32>() }\n";
+        assert!(lint("src/tensor/matmul.rs", home).is_empty());
+    }
+
+    // ---- D3 -------------------------------------------------------
+    #[test]
+    fn d3_fires_on_wall_clock_and_ptr_as_int() {
+        let t = "fn f() { let t0 = std::time::Instant::now(); let _ = t0; }\n";
+        assert_eq!(rules(&lint("src/x.rs", t)), vec!["D3"]);
+
+        let st = "fn f() -> std::time::SystemTime { std::time::SystemTime::now() }\n";
+        assert_eq!(rules(&lint("src/x.rs", st)), vec!["D3"]);
+
+        let ptr = "fn f(v: &[u8]) -> usize { v.as_ptr() as usize }\n";
+        assert_eq!(rules(&lint("src/x.rs", ptr)), vec!["D3"]);
+    }
+
+    #[test]
+    fn d3_silent_on_duration_math_and_tests() {
+        let clean = "fn f(d: std::time::Duration) -> f64 { d.as_secs_f64() }\n";
+        assert!(lint("src/x.rs", clean).is_empty());
+        let test = "#[cfg(test)]\nmod tests {\n    fn t() { let _ = std::time::Instant::now(); }\n}\n";
+        assert!(lint("src/x.rs", test).is_empty());
+    }
+
+    // ---- U1 -------------------------------------------------------
+    #[test]
+    fn u1_fires_without_safety_comment() {
+        let bad = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        assert_eq!(rules(&lint("src/x.rs", bad)), vec!["U1"]);
+    }
+
+    #[test]
+    fn u1_accepts_line_and_block_safety_comments() {
+        let line = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is valid\n    unsafe { *p }\n}\n";
+        assert!(lint("src/x.rs", line).is_empty());
+        let wrapped = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p points into a live\n    // allocation of at least one byte\n    unsafe { *p }\n}\n";
+        assert!(lint("src/x.rs", wrapped).is_empty());
+        let block = "fn f(p: *const u8) -> u8 {\n    /* SAFETY: caller guarantees p is valid */\n    unsafe { *p }\n}\n";
+        assert!(lint("src/x.rs", block).is_empty());
+    }
+
+    #[test]
+    fn u1_accepts_long_contiguous_block_and_rejects_detached_comment() {
+        let long = "fn f(p: *const u8) -> u8 {\n    // SAFETY: a long explanation whose\n    // keyword sits on the first of\n    // five contiguous comment lines\n    // well above the three-line\n    // window a naive rule would use\n    unsafe { *p }\n}\n";
+        assert!(lint("src/x.rs", long).is_empty());
+        // a blank line detaches the comment block — no longer adjacent
+        let detached = "fn f(p: *const u8) -> u8 {\n    // SAFETY: stale note\n\n    unsafe { *p }\n}\n";
+        assert_eq!(rules(&lint("src/x.rs", detached)), vec!["U1"]);
+    }
+
+    #[test]
+    fn u1_applies_inside_test_code_too() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t(p: *const u8) -> u8 {\n        unsafe { *p }\n    }\n}\n";
+        assert_eq!(rules(&lint("src/x.rs", src)), vec!["U1"]);
+    }
+
+    // ---- R1 -------------------------------------------------------
+    #[test]
+    fn r1_fires_only_in_request_paths() {
+        let bad = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert_eq!(rules(&lint("src/serve/engine.rs", bad)), vec!["R1"]);
+        assert_eq!(rules(&lint("src/runtime/store.rs", bad)), vec!["R1"]);
+        assert_eq!(rules(&lint("src/model/decode.rs", bad)), vec!["R1"]);
+        assert!(lint("src/prune/metric.rs", bad).is_empty()); // out of scope
+
+        let exp = "fn f(x: Option<u32>) -> u32 { x.expect(\"msg\") }\n";
+        assert_eq!(rules(&lint("src/model/kv_arena.rs", exp)), vec!["R1"]);
+
+        let pan = "fn f() { panic!(\"boom\"); }\n";
+        assert_eq!(rules(&lint("src/serve/prefix.rs", pan)), vec!["R1"]);
+
+        let unr = "fn f() { unreachable!(); }\n";
+        assert_eq!(rules(&lint("src/serve/engine.rs", unr)), vec!["R1"]);
+    }
+
+    #[test]
+    fn r1_silent_on_unwrap_or_and_test_code() {
+        let clean = "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0).max(x.unwrap_or_default()) }\n";
+        assert!(lint("src/serve/engine.rs", clean).is_empty());
+        let test = "#[cfg(test)]\nmod tests {\n    fn t(x: Option<u32>) -> u32 { x.unwrap() }\n}\n";
+        assert!(lint("src/serve/engine.rs", test).is_empty());
+    }
+
+    // ---- P1 -------------------------------------------------------
+    #[test]
+    fn p1_fires_on_spawn_scope_and_mpsc() {
+        let sp = "fn f() { std::thread::spawn(|| {}); }\n";
+        assert_eq!(rules(&lint("src/x.rs", sp)), vec!["P1"]);
+        let sc = "fn f() { std::thread::scope(|_| {}); }\n";
+        assert_eq!(rules(&lint("src/x.rs", sc)), vec!["P1"]);
+        let ch = "use std::sync::mpsc;\nfn f() { let (_tx, _rx) = mpsc::channel::<u32>(); }\n";
+        assert_eq!(rules(&lint("src/x.rs", ch)), vec!["P1", "P1"]);
+    }
+
+    #[test]
+    fn p1_silent_in_pool_home_and_on_sleep() {
+        let home = "fn f() { std::thread::spawn(|| {}); }\n";
+        assert!(lint("src/util/pool.rs", home).is_empty());
+        let sleep = "fn f() { std::thread::sleep(std::time::Duration::from_micros(1)); }\n";
+        assert!(lint("src/x.rs", sleep).is_empty());
+    }
+}

@@ -1,0 +1,247 @@
+//! Crate-walking and per-file source model for `fasp lint`.
+//!
+//! A [`SourceFile`] bundles the raw lines (for span-accurate snippets
+//! and allowlist pattern matching), the lexed token stream, and a
+//! per-line "inside `#[cfg(test)]`" mask. The determinism/robustness
+//! rules (D1/D2/D3/R1/P1) skip test regions — tests deliberately
+//! assert panics and use whatever containers are convenient — while
+//! U1 (`// SAFETY:` on `unsafe`) applies everywhere.
+
+use crate::analysis::lexer::{self, LexedFile, Tok};
+use crate::Result;
+use std::path::Path;
+
+/// One analyzed source file.
+pub struct SourceFile {
+    /// Path relative to `rust/`, forward slashes: `"src/model/host.rs"`.
+    pub rel: String,
+    /// Raw source lines (index 0 = line 1).
+    pub lines: Vec<String>,
+    /// Token stream + comments.
+    pub lexed: LexedFile,
+    /// `test_lines[l]` (1-based; index 0 unused) — line is inside a
+    /// `#[cfg(test)]` item.
+    pub test_lines: Vec<bool>,
+}
+
+impl SourceFile {
+    /// Build from in-memory source — the constructor the fixture
+    /// self-tests use (`rel` controls path-scoped rules like R1).
+    pub fn synthetic(rel: &str, src: &str) -> SourceFile {
+        let lines: Vec<String> = src.lines().map(|l| l.to_string()).collect();
+        let lexed = lexer::lex(src);
+        let test_lines = mark_test_regions(&lexed, lines.len());
+        SourceFile {
+            rel: rel.to_string(),
+            lines,
+            lexed,
+            test_lines,
+        }
+    }
+
+    /// Trimmed text of 1-based line `l` (empty if out of range).
+    pub fn line(&self, l: usize) -> &str {
+        self.lines
+            .get(l.wrapping_sub(1))
+            .map(|s| s.trim())
+            .unwrap_or("")
+    }
+
+    /// Is 1-based line `l` inside a `#[cfg(test)]` region?
+    pub fn in_test(&self, l: usize) -> bool {
+        *self.test_lines.get(l).unwrap_or(&false)
+    }
+}
+
+/// Recursively collect every `.rs` file under `src_dir` (sorted by
+/// path, so diagnostics and reports are stable run to run).
+pub fn scan_crate(src_dir: &Path) -> Result<Vec<SourceFile>> {
+    let mut paths = Vec::new();
+    collect_rs(src_dir, &mut paths)?;
+    paths.sort();
+    let mut out = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let src = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("lint: read {}: {e}", p.display()))?;
+        let rel = match p.strip_prefix(src_dir.parent().unwrap_or(src_dir)) {
+            Ok(r) => r.to_string_lossy().replace('\\', "/"),
+            Err(_) => p.to_string_lossy().replace('\\', "/"),
+        };
+        out.push(SourceFile::synthetic(&rel, &src));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
+    let rd = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("lint: read_dir {}: {e}", dir.display()))?;
+    for entry in rd {
+        let entry = entry.map_err(|e| anyhow::anyhow!("lint: read_dir entry: {e}"))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Walk the token stream looking for `#[cfg(test)]` attributes and
+/// mark the lines of the item they gate (through its matching closing
+/// brace, or the terminating `;` for brace-less items).
+fn mark_test_regions(lexed: &LexedFile, n_lines: usize) -> Vec<bool> {
+    let toks = &lexed.tokens;
+    let mut mask = vec![false; n_lines + 2];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_cfg_test_attr(lexed, i) {
+            let start_line = toks[i].line;
+            // skip this attribute and any stacked ones after it
+            let mut j = skip_attr(lexed, i);
+            while lexed.punct(j, '#') {
+                j = skip_attr(lexed, j);
+            }
+            // find the item body: first `{` before a top-level `;`
+            let mut end_line = start_line;
+            let mut k = j;
+            let mut found = false;
+            while k < toks.len() {
+                match &toks[k].tok {
+                    Tok::Punct('{') => {
+                        let close = match_brace(lexed, k);
+                        end_line = toks.get(close).map(|t| t.line).unwrap_or(n_lines);
+                        i = close + 1;
+                        found = true;
+                        break;
+                    }
+                    Tok::Punct(';') => {
+                        end_line = toks[k].line;
+                        i = k + 1;
+                        found = true;
+                        break;
+                    }
+                    _ => k += 1,
+                }
+            }
+            if !found {
+                i = toks.len();
+                end_line = n_lines;
+            }
+            for l in start_line..=end_line.min(n_lines) {
+                mask[l] = true;
+            }
+            continue;
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// Token `i` starts `#[cfg(test)]` (or `#[cfg(all(test, ...))]` —
+/// any attribute whose text contains the `cfg` + `test` idents).
+fn is_cfg_test_attr(lexed: &LexedFile, i: usize) -> bool {
+    if !lexed.punct(i, '#') || !lexed.punct(i + 1, '[') {
+        return false;
+    }
+    if lexed.ident(i + 2) != "cfg" {
+        return false;
+    }
+    let end = skip_attr(lexed, i);
+    (i + 3..end).any(|k| lexed.ident(k) == "test")
+}
+
+/// Given token index `i` at the `#` of an attribute, return the index
+/// just past its closing `]`.
+fn skip_attr(lexed: &LexedFile, i: usize) -> usize {
+    let toks = &lexed.tokens;
+    let mut k = i + 1; // at '['
+    if !lexed.punct(k, '[') {
+        return i + 1;
+    }
+    let mut depth = 0usize;
+    while k < toks.len() {
+        match &toks[k].tok {
+            Tok::Punct('[') => depth += 1,
+            Tok::Punct(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    return k + 1;
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    toks.len()
+}
+
+/// Given token index `open` at a `{`, return the index of its
+/// matching `}` (or the last token when unbalanced).
+fn match_brace(lexed: &LexedFile, open: usize) -> usize {
+    let toks = &lexed.tokens;
+    let mut depth = 0usize;
+    let mut k = open;
+    while k < toks.len() {
+        match &toks[k].tok {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => {
+                depth -= 1;
+                if depth == 0 {
+                    return k;
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_mod_region_is_masked() {
+        let src = "\
+pub fn live() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t() {
+        let m = std::collections::HashMap::<u32, u32>::new();
+        assert!(m.is_empty());
+    }
+}
+
+pub fn also_live() {}
+";
+        let f = SourceFile::synthetic("src/x.rs", src);
+        assert!(!f.in_test(1));
+        assert!(f.in_test(3)); // the attribute line itself
+        assert!(f.in_test(9)); // HashMap inside the test mod
+        assert!(f.in_test(12)); // closing brace
+        assert!(!f.in_test(14)); // code after the mod
+    }
+
+    #[test]
+    fn braceless_cfg_test_item() {
+        let src = "#[cfg(test)]\nuse std::collections::HashMap;\npub fn live() {}\n";
+        let f = SourceFile::synthetic("src/x.rs", src);
+        assert!(f.in_test(1));
+        assert!(f.in_test(2));
+        assert!(!f.in_test(3));
+    }
+
+    #[test]
+    fn stacked_attributes() {
+        let src = "#[cfg(test)]\n#[allow(dead_code)]\nfn helper() {\n    let x = 1;\n}\nfn live() {}\n";
+        let f = SourceFile::synthetic("src/x.rs", src);
+        assert!(f.in_test(4));
+        assert!(!f.in_test(6));
+    }
+}

@@ -669,6 +669,32 @@ pub fn latency(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fasp lint` — run the determinism & robustness static-analysis
+/// pass over `rust/src`, print the rule table, write
+/// `LINT_REPORT.json`, and fail on any non-allowlisted violation or
+/// stale allowlist entry (see [`crate::analysis`]).
+pub fn lint(args: &Args) -> Result<()> {
+    let root = crate::repo_root();
+    let run = crate::analysis::lint_repo(&root)?;
+    print!("{}", run.render_table());
+    let json_path = match args.get("json") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => root.join("LINT_REPORT.json"),
+    };
+    std::fs::write(&json_path, run.report_json().pretty())
+        .map_err(|e| anyhow::anyhow!("fasp lint: write {}: {e}", json_path.display()))?;
+    println!("report -> {}", json_path.display());
+    if !run.is_clean() {
+        anyhow::bail!(
+            "fasp lint failed: {} violation(s), {} stale allowlist entr(y/ies) — \
+             fix the code or add a justified entry to rust/lint_allow.toml",
+            run.violations.len(),
+            run.stale.len()
+        );
+    }
+    Ok(())
+}
+
 pub fn eval_ppl_of(
     manifest: &Manifest,
     model: &str,

@@ -40,6 +40,11 @@ COMMANDS:
   zeroshot   --model M [--method X --sparsity S] zero-shot suites
   tables     --id table1|...|fig4|all            regenerate paper tables
   latency                      sliced decoder-layer latency sweep
+  lint                         determinism & robustness static analysis
+                               over rust/src (rules D1-D3, U1, R1, P1;
+                               suppressions in rust/lint_allow.toml);
+                               writes LINT_REPORT.json, exits non-zero
+                               on any non-allowlisted violation
   help                         this message
 
 COMMON OPTIONS:
@@ -75,6 +80,7 @@ COMMON OPTIONS:
   --stream               (generate) decode a sharded compact model from
                          its shard store (layer-streaming weights)
   --sequential           re-capture activations after each pruned layer
+  --json PATH            (lint) write LINT_REPORT.json somewhere else
   --report               persist a JSON run record under results/reports/
   --out PATH             save the pruned weights as a checkpoint
   --seed N               experiment seed (default 42)
@@ -106,6 +112,7 @@ pub fn run() -> Result<()> {
         Some("zeroshot") => commands::zeroshot(&args),
         Some("tables") => commands::tables(&args),
         Some("latency") => commands::latency(&args),
+        Some("lint") => commands::lint(&args),
         Some("help") | None => {
             println!("{USAGE}");
             Ok(())

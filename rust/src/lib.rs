@@ -27,6 +27,7 @@ pub mod serve;
 pub mod eval;
 pub mod bench_support;
 pub mod experiments;
+pub mod analysis;
 pub mod cli;
 
 /// Crate-wide result alias (anyhow-backed).

@@ -566,7 +566,11 @@ pub fn decode_step_paged<S: ParamSource>(
     for lane in lanes.iter_mut() {
         arena.grow(lane.kv, lane.kv.len() + 1)?;
     }
-    let max_pos = *positions.iter().max().unwrap();
+    let max_pos = positions
+        .iter()
+        .copied()
+        .max()
+        .ok_or_else(|| anyhow::anyhow!("decode_step_paged: no lanes"))?;
 
     // per-lane embeds: lanes carry their own absolute position (the OPT
     // learned-position row differs per lane, so this cannot be one
@@ -707,11 +711,9 @@ pub fn sample_row(logits: &[f32], sampler: Sampler, rng: &mut Rng) -> usize {
             idx.sort_unstable_by(|&a, &b| {
                 use std::cmp::Ordering;
                 match (logits[a].is_finite(), logits[b].is_finite()) {
-                    // both finite: partial_cmp cannot fail
-                    (true, true) => logits[b]
-                        .partial_cmp(&logits[a])
-                        .unwrap()
-                        .then(a.cmp(&b)),
+                    // both finite: total_cmp agrees with partial_cmp
+                    // (and, unlike it, has no panic path for R1)
+                    (true, true) => logits[b].total_cmp(&logits[a]).then(a.cmp(&b)),
                     (true, false) => Ordering::Less,
                     (false, true) => Ordering::Greater,
                     (false, false) => a.cmp(&b),
@@ -720,7 +722,7 @@ pub fn sample_row(logits: &[f32], sampler: Sampler, rng: &mut Rng) -> usize {
             idx.truncate(k);
             // k may exceed the finite candidate count; drop the
             // non-finite tail so the softmax only ever sees real logits
-            while idx.len() > 1 && !logits[*idx.last().unwrap()].is_finite() {
+            while idx.len() > 1 && !logits[idx[idx.len() - 1]].is_finite() {
                 idx.pop();
             }
             assert!(

@@ -11,7 +11,7 @@ use crate::runtime::Manifest;
 use crate::tensor::ops::{col_abs_sum, col_sq_sum};
 use crate::tensor::Tensor;
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 /// Host Wanda-column scores: `score[j] = ||W_:,j||_1 * xnorm[j]`.
@@ -49,12 +49,16 @@ pub fn flap_scores(w: &Tensor, g_diag: &[f32], mean_sum: &[f32], rows: usize) ->
 /// once per shape and cached process-wide.
 pub struct KernelMetric<'m> {
     manifest: &'m Manifest,
-    cache: Mutex<HashMap<String, Option<&'static Artifact>>>,
+    // BTreeMap, not HashMap: the cache is keyed by artifact name and
+    // only ever probed per key (iteration order can't leak into
+    // results today), but the D1 lint holds the whole crate to ordered
+    // containers so no future `.iter()` can introduce order dependence.
+    cache: Mutex<BTreeMap<String, Option<&'static Artifact>>>,
 }
 
 impl<'m> KernelMetric<'m> {
     pub fn new(manifest: &'m Manifest) -> Self {
-        KernelMetric { manifest, cache: Mutex::new(HashMap::new()) }
+        KernelMetric { manifest, cache: Mutex::new(BTreeMap::new()) }
     }
 
     pub fn wanda_scores(&self, w: &Tensor, xnorm: &[f32]) -> Result<Vec<f32>> {

@@ -854,7 +854,11 @@ impl ParamSource for StreamingParams {
             off >= start && off + n <= end,
             "param '{name}' lies outside layer {l}'s shard range"
         );
-        let buf = &self.cur.as_ref().expect("ensure_layer set cur").1;
+        let buf = &self
+            .cur
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("layer {l} not resident after ensure_layer"))?
+            .1;
         Ok(Tensor::new(shape, buf.data[off - start..off - start + n].to_vec()))
     }
 
@@ -871,7 +875,11 @@ impl ParamSource for StreamingParams {
         short: &str,
     ) -> Result<Option<Arc<PackedMat>>> {
         self.ensure_layer(l)?;
-        let packs = &self.cur.as_ref().expect("ensure_layer set cur").2;
+        let packs = &self
+            .cur
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("layer {l} not resident after ensure_layer"))?
+            .2;
         Ok(packs.get(short))
     }
 

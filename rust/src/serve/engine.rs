@@ -257,17 +257,11 @@ pub fn serve(
         let t_tick = std::time::Instant::now();
         src.rewind()?;
         {
-            let mut lanes: Vec<PagedLane<'_>> = active
-                .iter_mut()
-                .map(|s| {
-                    let token = if s.fed < s.prompt.len() {
-                        s.prompt[s.fed]
-                    } else {
-                        s.pending.expect("decode lane without a pending token")
-                    };
-                    PagedLane { kv: &mut s.kv, token }
-                })
-                .collect();
+            let mut lanes: Vec<PagedLane<'_>> = Vec::with_capacity(active.len());
+            for s in active.iter_mut() {
+                let token = next_token(s.fed, &s.prompt, s.pending, s.id)?;
+                lanes.push(PagedLane { kv: &mut s.kv, token });
+            }
             let logits = decode_step_paged(&mut src, &mut arena, &mut lanes)?;
             drop(lanes);
             let dt = t_tick.elapsed().as_secs_f64();
@@ -325,7 +319,9 @@ pub fn serve(
     prefix.clear(&mut arena);
     debug_assert_eq!(arena.used_pages(), 0, "serve leaked arena pages");
 
-    token_s.sort_by(|a, b| a.partial_cmp(b).expect("finite tick times"));
+    // total_cmp: no panic path even if a tick duration came out NaN
+    // (it can't — but R1 bans the expect, and total order is free).
+    token_s.sort_by(|a, b| a.total_cmp(b));
     let pct = |q: f64| -> f64 {
         if token_s.is_empty() {
             return 0.0;
@@ -334,10 +330,7 @@ pub fn serve(
     };
     let generated_tokens = token_s.len();
     Ok(ServeReport {
-        outputs: outputs
-            .into_iter()
-            .map(|o| o.expect("unfinished serve session"))
-            .collect(),
+        outputs: collect_outputs(outputs)?,
         ticks,
         wall_s,
         generated_tokens,
@@ -353,4 +346,82 @@ pub fn serve(
         page_bytes: arena.page_bytes(),
         kv_bytes: arena.kv_bytes(),
     })
+}
+
+/// The token a session contributes to this tick: the next unfed
+/// prompt token while prefilling, its pending sampled token after.
+/// An active session with neither is a scheduler invariant violation
+/// — surfaced as an `Err` (one bad session must never panic the
+/// engine; R1).
+fn next_token(fed: usize, prompt: &[i32], pending: Option<i32>, id: usize) -> Result<i32> {
+    if fed < prompt.len() {
+        return Ok(prompt[fed]);
+    }
+    pending.ok_or_else(|| {
+        anyhow::anyhow!(
+            "serve tick: active session {id} has neither unfed prompt \
+             tokens (fed {fed} of {}) nor a pending sampled token",
+            prompt.len()
+        )
+    })
+}
+
+/// Final assembly of the per-request output slots. Every slot must be
+/// filled by retirement before the loop exits; a hole means the
+/// scheduler dropped a session — reported as an `Err` with the
+/// offending request ids instead of a panic (R1).
+fn collect_outputs(outputs: Vec<Option<ServeOutput>>) -> Result<Vec<ServeOutput>> {
+    let missing: Vec<usize> = outputs
+        .iter()
+        .enumerate()
+        .filter(|(_, o)| o.is_none())
+        .map(|(i, _)| i)
+        .collect();
+    anyhow::ensure!(
+        missing.is_empty(),
+        "serve finished with incomplete session(s) {missing:?} — scheduler bug"
+    );
+    Ok(outputs.into_iter().flatten().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Regression tests for the R1 conversions: the request-path
+    // invariant violations that used to be `expect(...)` panics must
+    // now surface as proper `Err`s.
+
+    #[test]
+    fn next_token_prefers_prompt_then_pending() {
+        assert_eq!(next_token(0, &[7, 8], None, 0).unwrap(), 7);
+        assert_eq!(next_token(1, &[7, 8], Some(99), 0).unwrap(), 8);
+        assert_eq!(next_token(2, &[7, 8], Some(99), 0).unwrap(), 99);
+    }
+
+    #[test]
+    fn next_token_without_prompt_or_pending_is_err_not_panic() {
+        let err = next_token(2, &[7, 8], None, 5).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("session 5"), "{msg}");
+        assert!(msg.contains("pending"), "{msg}");
+    }
+
+    #[test]
+    fn collect_outputs_reports_missing_slots_as_err_not_panic() {
+        let full = ServeOutput {
+            id: 0,
+            tokens: vec![1, 2],
+            prompt_len: 1,
+            generated: 1,
+            prefix_hit_positions: 0,
+        };
+        let ok = collect_outputs(vec![Some(full.clone())]).unwrap();
+        assert_eq!(ok.len(), 1);
+
+        let err = collect_outputs(vec![Some(full), None]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("[1]"), "{msg}");
+        assert!(msg.contains("incomplete"), "{msg}");
+    }
 }

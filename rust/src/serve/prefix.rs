@@ -118,9 +118,12 @@ impl PrefixCache {
             .iter()
             .min_by_key(|&(k, e)| (e.hits, *k))
             .map(|(&k, _)| k);
-        match victim {
-            Some(k) => {
-                let e = self.entries.remove(&k).expect("victim vanished");
+        // R1: no panic paths in serve code — a victim key that has
+        // somehow vanished (impossible: it was just read from this
+        // map under &mut self) degrades to "nothing evicted" instead
+        // of killing the engine.
+        match victim.and_then(|k| self.entries.remove(&k)) {
+            Some(e) => {
                 arena.release_pages(&e.pages);
                 self.evictions += 1;
                 true

@@ -65,6 +65,12 @@ impl TensorFile {
         w.write_all(&count.to_le_bytes())?;
         for (name, t) in &self.tensors {
             write_header(&mut w, name, 0, &t.shape)?;
+            // SAFETY: `t.data` is a live `Vec<f32>` borrowed for this
+            // statement, so the pointer is non-null, aligned (u8 needs
+            // align 1) and covers exactly `len * 4` initialized bytes
+            // of one allocation; f32 has no padding or invalid bit
+            // patterns, and the slice is dropped before `w` can
+            // observe the Vec again (no aliasing writes).
             let bytes: &[u8] = unsafe {
                 std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
             };
@@ -72,6 +78,9 @@ impl TensorFile {
         }
         for (name, t) in &self.ints {
             write_header(&mut w, name, 1, &t.shape)?;
+            // SAFETY: same argument as above for `Vec<i32>` — 4-byte
+            // elements viewed as `len * 4` initialized bytes at align
+            // 1, lifetime confined to this statement.
             let bytes: &[u8] = unsafe {
                 std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
             };

@@ -22,7 +22,7 @@
 
 use once_cell::sync::OnceCell;
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// Below this many scalar operations a parallel fan-out is not worth the
@@ -36,6 +36,47 @@ const DEFAULT_MAX_THREADS: usize = 8;
 /// holds no threads between calls.
 pub struct Pool {
     workers: usize,
+}
+
+// ---------------------------------------------------------------- jitter
+//
+// `FASP_POOL_JITTER=<max_us>` is a *debug* knob: every spawned worker
+// sleeps a pseudorandom 0..=max_us microseconds before touching its
+// work, shuffling the interleaving of every fan-out. The determinism
+// contract says results are a function of the partition arithmetic
+// alone, so outputs must stay bit-identical under any jitter —
+// `test_backend.rs` asserts exactly that. The delays derive from a
+// process-local counter hashed with the worker index (splitmix64),
+// not from wall clock or thread ids, so the knob itself introduces no
+// D3-style nondeterministic *values* — only scheduling noise.
+
+/// Fan-out counter feeding the jitter hash (which delays arise is
+/// scheduling-dependent; which results arise must not be).
+static JITTER_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Read `FASP_POOL_JITTER` (max delay in microseconds; 0/absent =
+/// disabled). Re-read on every fan-out so tests can toggle it live.
+fn jitter_max_us() -> u64 {
+    std::env::var("FASP_POOL_JITTER")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+/// Sleep the pseudorandom per-worker start delay (no-op when disabled).
+fn jitter_start(max_us: u64, worker: usize) {
+    if max_us == 0 {
+        return;
+    }
+    let seq = JITTER_SEQ.fetch_add(1, Ordering::Relaxed);
+    // splitmix64 over (seq, worker): cheap, stateless, well-mixed
+    let mut z = seq
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add((worker as u64).wrapping_mul(0xd1b5_4a32_d192_ed03));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    std::thread::sleep(std::time::Duration::from_micros(z % (max_us + 1)));
 }
 
 impl Pool {
@@ -63,12 +104,14 @@ impl Pool {
         let next = AtomicUsize::new(0);
         let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
         slots.resize_with(n, || None);
+        let jit = jitter_max_us();
         let f = &f;
         let next = &next;
         std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(w - 1);
-            for _ in 0..w - 1 {
+            for wi in 0..w - 1 {
                 handles.push(s.spawn(move || {
+                    jitter_start(jit, wi);
                     let _serial = enter(serial());
                     let mut got: Vec<(usize, T)> = Vec::new();
                     loop {
@@ -118,6 +161,7 @@ impl Pool {
             f(0, data);
             return;
         }
+        let jit = jitter_max_us();
         let f = &f;
         std::thread::scope(|s| {
             let base = rows / w;
@@ -137,6 +181,7 @@ impl Pool {
                     f(r0, chunk);
                 } else {
                     handles.push(s.spawn(move || {
+                        jitter_start(jit, wi);
                         let _serial = enter(serial());
                         f(r0, chunk);
                     }));
@@ -169,6 +214,7 @@ impl Pool {
             f(0, a, b);
             return;
         }
+        let jit = jitter_max_us();
         let f = &f;
         std::thread::scope(|s| {
             let base = rows / w;
@@ -190,6 +236,7 @@ impl Pool {
                     f(r0, ca, cb);
                 } else {
                     handles.push(s.spawn(move || {
+                        jitter_start(jit, wi);
                         let _serial = enter(serial());
                         f(r0, ca, cb);
                     }));

@@ -251,3 +251,70 @@ fn compare_backends_reports_identity() {
     assert_eq!(cmp.threads, THREADS);
     assert!(cmp.single_ms > 0.0 && cmp.threaded_ms > 0.0);
 }
+
+/// Schedule perturbation: `FASP_POOL_JITTER` delays every spawned pool
+/// worker by a pseudorandom start offset, shuffling fan-out
+/// interleavings — the dynamic complement to the `fasp lint` static
+/// pass. Outputs must stay bit-identical, because determinism comes
+/// from the fixed partition/reduction arithmetic, never from timing.
+/// (Setting the env var is safe alongside concurrently running tests:
+/// the knob can only slow workers down, not change any result — which
+/// is exactly what this test proves.)
+#[test]
+fn outputs_bit_identical_under_pool_jitter() {
+    use fasp::model::decode::{GenerateOpts, Sampler};
+    use fasp::tensor::IntTensor;
+
+    let m = manifest();
+    let (_, threaded) = sessions(&m, "llama_tiny");
+    let spec = threaded.spec.clone();
+    let w = Weights::init(&spec, 29);
+    let ds = Dataset::new(Corpus::new(spec.vocab, 31), spec.batch, spec.seq, 2);
+    let b = ds.train_batch(0);
+    let pack = threaded.pack(&w.packed).unwrap();
+    let prompt = IntTensor::new(
+        vec![2, 5],
+        (0..10).map(|i| (i * 7 + 3) % spec.vocab as i32).collect(),
+    );
+    let gen_opts = GenerateOpts { max_new: 6, sampler: Sampler::Greedy, seed: 0 };
+
+    let run = |label: &str| {
+        let fwd = threaded.fwd_loss(&pack, &b.tokens, &b.targets).unwrap();
+        let cap = threaded.capture(&pack, &[b.tokens.clone()]).unwrap();
+        let grads = threaded
+            .gradcol(&pack, &[(b.tokens.clone(), b.targets.clone())])
+            .unwrap();
+        let gen = threaded.generate(&pack, &prompt, &gen_opts).unwrap();
+        assert_eq!(gen.generated, 6, "{label}: generation truncated");
+        (fwd, cap, grads, gen)
+    };
+
+    let (fwd0, cap0, grads0, gen0) = run("baseline");
+    std::env::set_var("FASP_POOL_JITTER", "400");
+    let jittered: Vec<_> = (0..3).map(|i| run(&format!("jitter run {i}"))).collect();
+    std::env::remove_var("FASP_POOL_JITTER");
+
+    for (i, (fwd, cap, grads, gen)) in jittered.iter().enumerate() {
+        assert_eq!(
+            fwd0.mean_nll.to_bits(),
+            fwd.mean_nll.to_bits(),
+            "jitter run {i}: fwd mean nll diverged"
+        );
+        assert!(
+            bits_eq(&fwd0.tok_nll.data, &fwd.tok_nll.data),
+            "jitter run {i}: token nll diverged"
+        );
+        for (l, (a, c)) in cap0.layers.iter().zip(&cap.layers).enumerate() {
+            assert!(bits_eq(&a.g_attn.data, &c.g_attn.data), "run {i} layer {l} g_attn");
+            assert!(bits_eq(&a.g_ffn.data, &c.g_ffn.data), "run {i} layer {l} g_ffn");
+        }
+        for (l, (a, c)) in grads0.iter().zip(grads).enumerate() {
+            assert!(bits_eq(&a.ffn, &c.ffn), "run {i} layer {l}: ffn scores diverged");
+            assert!(bits_eq(&a.ov, &c.ov), "run {i} layer {l}: ov scores diverged");
+        }
+        assert_eq!(
+            gen0.tokens.data, gen.tokens.data,
+            "jitter run {i}: generated tokens diverged"
+        );
+    }
+}

@@ -1,0 +1,99 @@
+//! The static-analysis gate, as a test: `fasp lint` must run clean
+//! over the real crate with the checked-in allowlist. This is the
+//! same check `verify.sh` runs via the CLI — having it in the test
+//! matrix means a plain `cargo test` also refuses lint regressions.
+//!
+//! Rule-level behavior (each rule fires on seeded violations, stays
+//! silent on clean code) is covered by the fixture self-tests inside
+//! `rust/src/analysis/`; this file exercises the end-to-end pass:
+//! crate walk → lex → rules → allowlist → report.
+
+use fasp::analysis;
+
+#[test]
+fn crate_lints_clean_with_checked_in_allowlist() {
+    let run = analysis::lint_repo(&fasp::repo_root()).unwrap();
+    assert!(
+        run.files_scanned > 40,
+        "suspiciously few files scanned ({}) — wrong root?",
+        run.files_scanned
+    );
+    assert!(
+        run.violations.is_empty(),
+        "lint violations crept in:\n{}",
+        run.render_table()
+    );
+    assert!(
+        run.stale.is_empty(),
+        "stale allowlist entries (remove them from rust/lint_allow.toml):\n{}",
+        run.render_table()
+    );
+    assert!(run.is_clean());
+    // the allowlist is in active use — suppressions exist and are all
+    // consumed (every entry justified AND load-bearing)
+    assert!(!run.entries.is_empty(), "expected a non-empty allowlist");
+    assert!(!run.allowed.is_empty(), "expected absorbed suppressions");
+}
+
+#[test]
+fn report_json_is_parseable_and_consistent() {
+    use fasp::util::json::Json;
+    let run = analysis::lint_repo(&fasp::repo_root()).unwrap();
+    let txt = run.report_json().pretty();
+    let parsed = Json::parse(&txt).expect("LINT_REPORT.json round-trips");
+    match &parsed {
+        Json::Obj(o) => {
+            assert_eq!(o.get("clean"), Some(&Json::Bool(true)));
+            assert_eq!(o.get("total_violations"), Some(&Json::Num(0.0)));
+            match o.get("rules") {
+                Some(Json::Arr(rules)) => assert_eq!(rules.len(), 6, "D1-D3, U1, R1, P1"),
+                other => panic!("rules not an array: {other:?}"),
+            }
+        }
+        other => panic!("report not an object: {other:?}"),
+    }
+}
+
+/// A seeded violation in a synthetic tree is caught end-to-end, and a
+/// stale allowlist entry fails the run even with zero violations.
+#[test]
+fn seeded_violation_and_stale_entry_fail_the_gate() {
+    let dir = std::env::temp_dir().join("fasp_lint_seeded");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(dir.join("rust/src")).unwrap();
+    std::fs::write(
+        dir.join("rust/src/lib.rs"),
+        "use std::collections::HashMap;\npub fn f() -> HashMap<u32, u32> { HashMap::new() }\n",
+    )
+    .unwrap();
+
+    // no allowlist: the seeded D1 violation must surface
+    let run = analysis::lint_repo(&dir).unwrap();
+    assert!(!run.is_clean());
+    assert_eq!(run.violations.len(), 2); // use line + fn line
+    assert!(run.violations.iter().all(|v| v.rule == "D1"));
+    assert_eq!(run.violations[0].rel, "src/lib.rs");
+
+    // a covering allowlist entry absorbs it...
+    std::fs::write(
+        dir.join("rust/lint_allow.toml"),
+        "[[allow]]\nrule = \"D1\"\nfile = \"src/lib.rs\"\nwhy = \"seeded fixture for the end-to-end lint test\"\n",
+    )
+    .unwrap();
+    let run2 = analysis::lint_repo(&dir).unwrap();
+    assert!(run2.is_clean(), "{}", run2.render_table());
+    assert_eq!(run2.allowed.len(), 2);
+
+    // ...but an entry matching nothing is stale and fails the gate
+    std::fs::write(
+        dir.join("rust/src/lib.rs"),
+        "pub fn f() -> u32 { 7 }\n",
+    )
+    .unwrap();
+    let run3 = analysis::lint_repo(&dir).unwrap();
+    assert!(run3.violations.is_empty());
+    assert_eq!(run3.stale.len(), 1);
+    assert!(!run3.is_clean());
+
+    std::fs::remove_dir_all(&dir).ok();
+}

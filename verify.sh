@@ -1,7 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 verification + perf check for CI and pre-merge runs:
 #   1. release build
-#   2. full test suite (quiet), twice, crossing both matrix axes:
+#   2. `fasp lint` — the determinism & robustness static-analysis pass
+#      (rust/src/analysis/): HashMap/HashSet, unordered float
+#      reductions, wall-clock/ptr-derived values, unsafe-without-SAFETY,
+#      panics in request paths and hand-rolled threading are all gated
+#      against the justified allowlist in rust/lint_allow.toml. Any
+#      non-allowlisted finding (or stale allowlist entry) fails verify
+#      before the test matrix even starts. Writes LINT_REPORT.json.
+#   3. full test suite (quiet), twice, crossing both matrix axes:
 #      - FASP_THREADS=1 + FASP_EXPORT=monolithic pins the serial
 #        HostBackend and the classic one-file compact export;
 #      - the default (threaded) run sets FASP_EXPORT=sharded so the
@@ -10,11 +17,12 @@
 #      Outputs are bit-identical by contract across both axes
 #      (test_backend.rs for threads, test_store.rs for storage), so both
 #      runs must pass identically.
-#   3. bench_prune_time in check mode — a shrunk matrix that writes
+#   4. bench_prune_time in check mode — a shrunk matrix that writes
 #      BENCH_prune_time.json (method mean times + the repack stage's
 #      fraction of prune wall-time) so perf regressions in the pruning
 #      or compact-repack paths show up as a diffable artifact.
-#   4. bench_hot_paths in check mode — writes BENCH_host_threads.json
+#   5. bench_hot_paths in check mode — re-runs the lint gate, then
+#      writes BENCH_host_threads.json
 #      (single vs threaded host_exec fwd latency + bitwise identity),
 #      BENCH_shard_stream.json (shard load time, streamed vs monolithic
 #      fwd latency, peak-resident-weights estimate), BENCH_decode.json
@@ -30,10 +38,10 @@
 #      batched strictly beats sequential with bit-identical per-session
 #      outputs) so backend-parallelism, shard-streaming, decode, packing
 #      and serve-scheduler regressions are diffable too.
-#   5. a `fasp generate` smoke (deterministic --init weights) under both
+#   6. a `fasp generate` smoke (deterministic --init weights) under both
 #      FASP_THREADS=1 and the default threaded backend — the CLI decode
 #      path must run end to end on both backends.
-#   6. a `fasp serve --check` smoke under both backends: the serve
+#   7. a `fasp serve --check` smoke under both backends: the serve
 #      engine drives a self-generated session load end to end and
 #      re-verifies every session bit-identical to sequential generate.
 set -euo pipefail
@@ -41,6 +49,9 @@ cd "$(dirname "$0")"
 
 echo "== cargo build --release =="
 cargo build --release
+
+echo "== fasp lint (static analysis gate) =="
+cargo run --release --quiet -- lint
 
 echo "== cargo test -q (FASP_THREADS=1, serial backend; monolithic export) =="
 FASP_THREADS=1 FASP_EXPORT=monolithic cargo test -q
@@ -71,6 +82,7 @@ echo "== bench_hot_paths (check mode) =="
 FASP_BENCH_CHECK=1 cargo bench --bench bench_hot_paths
 
 echo "== verify OK =="
+[ -f LINT_REPORT.json ] && echo "lint record: LINT_REPORT.json"
 [ -f BENCH_prune_time.json ] && echo "perf record: BENCH_prune_time.json"
 [ -f BENCH_host_threads.json ] && echo "perf record: BENCH_host_threads.json"
 [ -f BENCH_shard_stream.json ] && echo "perf record: BENCH_shard_stream.json"
