@@ -10,11 +10,14 @@
 //! vs monolithic fwd latency, peak-resident-weights estimate) and
 //! `BENCH_decode.json` (KV-cached decode: prefill + per-token latency
 //! dense vs OV-sliced compact, the naive re-forward baseline, resident
-//! KV bytes) and `BENCH_serve.json` (continuous-batching serve engine
+//! KV bytes), `BENCH_serve.json` (continuous-batching serve engine
 //! vs N sequential generates at 8/64/256 concurrent sessions:
 //! tokens/sec, p50/p99 per-token latency, arena page residency,
-//! bitwise identity) so CI can diff backend-parallelism,
-//! shard-streaming, decode-path and serve-scheduler regressions.
+//! bitwise identity) and `BENCH_spec.json` (speculative decoding with
+//! FASP compact drafts at s∈{30,50,70}: tokens/sec vs target-only,
+//! acceptance rate per draft sparsity, draft+target KV bytes, greedy
+//! bit-identity) so CI can diff backend-parallelism, shard-streaming,
+//! decode-path, serve-scheduler and speculative-decode regressions.
 
 use fasp::bench_support::Bencher;
 use fasp::data::{Corpus, Dataset};
@@ -486,6 +489,7 @@ fn main() {
                 n_pages,
                 max_batch,
                 prefix_cache: true,
+                prefill_chunk: 4,
             };
             let cmp = fasp::eval::speed::compare_serve(
                 &manifest, model, &w, sessions, prompt_len, max_new, &cfg,
@@ -554,5 +558,151 @@ fn main() {
             std::fs::write(&path, record.pretty()).unwrap();
             println!("record → {}", path.display());
         }
+    }
+
+    // ---- speculative decoding: FASP compact drafts vs target-only --------
+    // The paper's compression artifact as a *lossless speedup* of its
+    // dense parent: compact exports at s∈{30,50,70} draft tokens, the
+    // target verifies every proposal (plus one bonus) in ONE chunked
+    // forward. The target's weights attenuate the to-be-pruned tail
+    // units (x1e-3, the s=70 union) so the sliced drafts stay faithful
+    // — acceptance then tracks draft sparsity the way a FASP-pruned
+    // draft of a *trained* model would, instead of the ~1/vocab argmax
+    // agreement two unrelated random inits give. Greedy bit-identity is
+    // asserted per point regardless of acceptance (losslessness is
+    // structural, not statistical).
+    if let Ok(mut manifest) = Manifest::load(&fasp::artifacts_dir()) {
+        let model = "llama_small";
+        let spec = manifest.model(model).expect("llama_small in manifest").clone();
+        let mut w = Weights::init(&spec, 37);
+        let dh = spec.head_dim();
+        let ov = spec.n_heads * dh;
+        let (f70, v70) = ((spec.d_ff * 7) / 10, (dh * 7) / 10);
+        for l in 0..spec.n_layers {
+            let mut wd = w.get_l(l, "w_down").unwrap(); // [d, d_ff]
+            for r in 0..spec.d_model {
+                for j in 0..f70 {
+                    wd.data[r * spec.d_ff + spec.d_ff - 1 - j] *= 1e-3;
+                }
+            }
+            w.set_l(l, "w_down", &wd).unwrap();
+            let mut wo = w.get_l(l, "wo").unwrap(); // [d, ov]
+            for r in 0..spec.d_model {
+                for hi in 0..spec.n_heads {
+                    for j in 0..v70 {
+                        wo.data[r * ov + hi * dh + dh - 1 - j] *= 1e-3;
+                    }
+                }
+            }
+            w.set_l(l, "wo", &wo).unwrap();
+        }
+
+        // nested tail-slice masks: the s=30 pruned set ⊂ s=50 ⊂ s=70,
+        // all inside the attenuated union
+        let dir = std::env::temp_dir().join("fasp_bench_spec");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut drafts: Vec<(f64, String, Weights)> = Vec::new();
+        for &pct in &[30usize, 50, 70] {
+            let (fc, vc) = ((spec.d_ff * pct) / 100, (dh * pct) / 100);
+            let mut mask = fasp::model::PruneMask::full(&spec);
+            for l in 0..spec.n_layers {
+                for j in 0..fc {
+                    mask.layers[l].ffn[spec.d_ff - 1 - j] = false;
+                }
+                for hi in 0..spec.n_heads {
+                    for j in 0..vc {
+                        mask.layers[l].ov[hi * dh + dh - 1 - j] = false;
+                    }
+                }
+            }
+            let name = format!("bench_spec_s{pct}");
+            let cm = fasp::model::compact::compact_from_mask(&w, &mask, &name).unwrap();
+            let jp = fasp::model::compact::save_compact(&dir.join(&name), &cm).unwrap();
+            manifest.register_compact(&jp).unwrap();
+            let cw = manifest.compact_weights(&name).unwrap();
+            drafts.push((pct as f64 / 100.0, name, cw));
+        }
+        let refs: Vec<(f64, &str, &Weights)> =
+            drafts.iter().map(|(s, n, cw)| (*s, n.as_str(), cw)).collect();
+
+        let (prompt_len, max_new) = (8usize, if check { 40 } else { 64 });
+        let draft_k = 8usize;
+        let reps = if check { 3 } else { 10 };
+        let cmp = fasp::eval::speed::compare_speculative(
+            &manifest, model, &w, &refs, prompt_len, max_new, draft_k, reps,
+        )
+        .unwrap();
+        println!(
+            "\nspec {model}: target-only {:.0} tok/s (kv {:.2}KB), draft-k {draft_k}",
+            cmp.target_tokens_per_s,
+            cmp.target_kv_bytes as f64 / 1e3
+        );
+        let mut points = Vec::new();
+        for p in &cmp.points {
+            assert!(
+                p.greedy_identical,
+                "speculative greedy tokens diverged from target-only generate \
+                 at s={:.0}% — the losslessness contract is broken",
+                p.sparsity * 100.0
+            );
+            println!(
+                "  s={:.0}%: {:.0} tok/s ({:.2}x), acceptance {:.2} \
+                 ({}/{} proposals), {} chunks + {} draft steps, draft kv \
+                 {:.2}KB; bit-identical: {}",
+                p.sparsity * 100.0,
+                p.spec_tokens_per_s,
+                p.speedup,
+                p.acceptance,
+                p.accepted,
+                p.proposed,
+                p.chunks,
+                p.draft_steps,
+                p.draft_kv_bytes as f64 / 1e3,
+                p.greedy_identical
+            );
+            points.push(Json::obj(vec![
+                ("sparsity", Json::Num(p.sparsity)),
+                ("draft_model", Json::Str(p.draft_model.clone())),
+                ("acceptance", Json::Num(p.acceptance)),
+                ("proposed", Json::Num(p.proposed as f64)),
+                ("accepted", Json::Num(p.accepted as f64)),
+                ("chunks", Json::Num(p.chunks as f64)),
+                ("draft_steps", Json::Num(p.draft_steps as f64)),
+                ("spec_tokens_per_s", Json::Num(p.spec_tokens_per_s)),
+                ("speedup", Json::Num(p.speedup)),
+                ("draft_kv_bytes", Json::Num(p.draft_kv_bytes as f64)),
+                ("greedy_identical", Json::Bool(p.greedy_identical)),
+            ]));
+        }
+        if check {
+            // the headline receipt: at s=50 the speculative path must
+            // strictly beat target-only decode in tokens/sec
+            let s50 = cmp
+                .points
+                .iter()
+                .find(|p| (p.sparsity - 0.5).abs() < 1e-9)
+                .expect("s=50 point in the sweep");
+            assert!(
+                s50.spec_tokens_per_s > cmp.target_tokens_per_s,
+                "speculative decode at s=50 ({:.0} tok/s) not above \
+                 target-only ({:.0} tok/s)",
+                s50.spec_tokens_per_s,
+                cmp.target_tokens_per_s
+            );
+            let record = Json::obj(vec![
+                ("bench", Json::Str("spec".into())),
+                ("model", Json::Str(model.into())),
+                ("prompt_len", Json::Num(cmp.prompt_len as f64)),
+                ("max_new", Json::Num(cmp.max_new as f64)),
+                ("draft_k", Json::Num(cmp.draft_k as f64)),
+                ("target_tokens_per_s", Json::Num(cmp.target_tokens_per_s)),
+                ("target_kv_bytes", Json::Num(cmp.target_kv_bytes as f64)),
+                ("points", Json::Arr(points)),
+            ]);
+            let path = fasp::repo_root().join("BENCH_spec.json");
+            std::fs::write(&path, record.pretty()).unwrap();
+            println!("record → {}", path.display());
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -31,7 +31,7 @@ pub const CATALOG: &[(&str, &str)] = &[
     ),
     (
         "R1",
-        "unwrap/expect/panic in a request path (serve/, model/kv_arena.rs, model/decode.rs, runtime/store.rs)",
+        "unwrap/expect/panic in a request path (serve/, model/kv_arena.rs, model/decode.rs, model/spec_decode.rs, runtime/store.rs)",
     ),
     (
         "P1",
@@ -64,6 +64,7 @@ fn r1_scope(rel: &str) -> bool {
     rel.starts_with("src/serve/")
         || rel == "src/model/kv_arena.rs"
         || rel == "src/model/decode.rs"
+        || rel == "src/model/spec_decode.rs"
         || rel == "src/runtime/store.rs"
 }
 

@@ -464,6 +464,112 @@ pub fn generate(args: &Args) -> Result<()> {
         spec.n_layers,
         if spec.is_uniform() { "" } else { ", OV-sliced" }
     );
+
+    // ---- speculative decoding against a FASP-pruned draft --------------
+    // `--draft NAME` runs the same generation again speculatively: the
+    // draft proposes --draft-k tokens per round, the target verifies
+    // them in one chunked forward. If NAME is not a registered compact
+    // model, a compact draft is synthesized on the fly from the target
+    // weights at --draft-sparsity (the no-checkpoint smoke path, like
+    // --init itself). `--check` asserts greedy bit-identity with the
+    // target-only generation above.
+    if let Some(draft_name) = args.get("draft") {
+        let draft_k = args.get_usize("draft-k", 4)?;
+        anyhow::ensure!(
+            batch == 1,
+            "--draft decodes a single sequence; drop --batch {batch}"
+        );
+        anyhow::ensure!(
+            !args.has("stream"),
+            "--draft needs resident target weights; drop --stream"
+        );
+        let Src::Resident(w) = &src else {
+            anyhow::bail!("--draft needs resident target weights")
+        };
+
+        // a second manifest load: the draft may need registering, and
+        // `session` immutably borrows the primary manifest
+        let mut m2 = manifest()?;
+        let mut tmp_dir = None;
+        if !m2.compact.contains_key(draft_name) {
+            let s = args.get_f64("draft-sparsity", 0.5)?;
+            anyhow::ensure!(
+                (0.0..1.0).contains(&s),
+                "--draft-sparsity wants a fraction in [0, 1), got {s}"
+            );
+            let dh = spec.head_dim();
+            let f_cut = (spec.d_ff as f64 * s) as usize;
+            let v_cut = (dh as f64 * s) as usize;
+            let mut mask = crate::model::PruneMask::full(&spec);
+            for l in 0..spec.n_layers {
+                // collision-free tail slices: exactly f_cut FFN units and
+                // v_cut value dims per head pruned in every layer
+                for j in 0..f_cut {
+                    mask.layers[l].ffn[spec.d_ff - 1 - j] = false;
+                }
+                for hi in 0..spec.n_heads {
+                    for j in 0..v_cut {
+                        mask.layers[l].ov[hi * dh + dh - 1 - j] = false;
+                    }
+                }
+            }
+            let cm = crate::model::compact::compact_from_mask(w, &mask, draft_name)?;
+            let dir = std::env::temp_dir().join(format!("fasp_draft_{draft_name}"));
+            let _ = std::fs::remove_dir_all(&dir);
+            let jp = crate::model::compact::save_compact(&dir, &cm)?;
+            m2.register_compact(&jp)?;
+            tmp_dir = Some(dir);
+            println!(
+                "\ndraft '{draft_name}': synthesized compact export at \
+                 {:.0}% sparsity ({} FFN + {}/head OV units sliced per layer)",
+                s * 100.0,
+                f_cut,
+                v_cut
+            );
+        }
+        let draft_sess = Session::new(&m2, draft_name)?;
+        let draft_w = m2.compact_weights(draft_name)?;
+
+        let sopts = crate::model::SpecOpts { max_new, draft_k, sampler, seed: ctx.seed };
+        let tparams = session.pack(&w.packed)?;
+        let dparams = draft_sess.pack(&draft_w.packed)?;
+        let g = session.generate_speculative(&tparams, &dparams, &prompt, &sopts)?;
+
+        let srow = g.tokens.data[g.prompt_len..].to_vec();
+        println!("speculative [{}]", fmt_ids(&srow));
+        println!(
+            "speculative: draft-k {draft_k}, acceptance {:.2} ({} of {} \
+             proposals), {} target chunks + {} draft steps for {} tokens; \
+             kv target {:.2}KB + draft {:.2}KB",
+            g.acceptance_rate(),
+            g.accepted,
+            g.proposed,
+            g.chunks,
+            g.draft_steps,
+            g.generated,
+            g.target_kv_bytes as f64 / 1e3,
+            g.draft_kv_bytes as f64 / 1e3
+        );
+        if args.has("check") {
+            anyhow::ensure!(
+                top_k == 0,
+                "--check asserts greedy bit-identity; drop --top-k"
+            );
+            anyhow::ensure!(
+                g.tokens.data == gen.tokens.data,
+                "speculative greedy tokens diverged from target-only generate \
+                 — the losslessness contract is broken"
+            );
+            println!(
+                "check: speculative ≡ target-only generate, bit-identical \
+                 ({} tokens)",
+                g.tokens.data.len()
+            );
+        }
+        if let Some(dir) = tmp_dir {
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
     Ok(())
 }
 
@@ -539,6 +645,7 @@ pub fn serve(args: &Args) -> Result<()> {
         n_pages,
         max_batch,
         prefix_cache: !args.has("no-prefix-cache"),
+        prefill_chunk: args.get_usize("prefill-chunk", 4)?,
     };
 
     // pack once — every session decodes over this one shared plan

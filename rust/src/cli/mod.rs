@@ -65,6 +65,15 @@ COMMON OPTIONS:
   --batch N              (generate) sequences decoded in lockstep (default 1)
   --top-k K              (generate) top-k sampling; 0 = greedy (default 0)
   --temperature F        (generate) top-k softmax temperature (default 1.0)
+  --draft NAME           (generate) also decode speculatively: NAME (a
+                         registered compact model, or a fresh on-the-fly
+                         compact export of the target at --draft-sparsity)
+                         proposes tokens, the target verifies them in one
+                         chunked forward; greedy output is bit-identical
+                         to target-only generate
+  --draft-k K            (generate) draft proposals per round (default 4)
+  --draft-sparsity F     (generate) sparsity of a synthesized draft in
+                         [0,1) (default 0.5; only when NAME is unregistered)
   --init                 (generate/serve) fresh deterministic weights —
                          skip checkpoint/training (decode smoke tests)
   --sessions N           (serve) concurrent decode sessions (default 8);
@@ -75,8 +84,14 @@ COMMON OPTIONS:
                          to the load with ~25% slack)
   --max-batch N          (serve) max sessions per batched tick (default 8)
   --no-prefix-cache      (serve) disable prompt-head sharing
-  --check                (serve) also run every session through the
-                         sequential generate path and assert bit-identity
+  --prefill-chunk N      (serve) prompt tokens a prefilling session may
+                         consume per tick via one chunked forward
+                         (default 4; 1 = token-per-tick; outputs are
+                         bit-identical at any value)
+  --check                (serve) replay and assert bit-identity: serve
+                         sessions against sequential generate, and
+                         (generate --draft) speculative greedy tokens
+                         against target-only generate
   --stream               (generate) decode a sharded compact model from
                          its shard store (layer-streaming weights)
   --sequential           re-capture activations after each pruned layer

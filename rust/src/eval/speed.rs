@@ -33,9 +33,17 @@
 //!   sessions over one shared plan vs N sequential `generate` calls —
 //!   strictly higher throughput with **bit-identical** per-session
 //!   tokens, plus p50/p99 per-token latency and arena page residency.
+//! * [`compare_speculative`] — the speculative-decoding receipt
+//!   (`BENCH_spec.json`): target-only greedy `generate` vs
+//!   draft-propose/target-verify with compact exports at several
+//!   sparsities as drafts — tokens/sec, acceptance rate per draft
+//!   sparsity, draft+target resident KV bytes, and per-point greedy
+//!   bit-identity. Timing wraps whole calls out here because
+//!   `model/spec_decode.rs` is wall-clock-free by contract (D3).
 
 use crate::data::{Batch, Corpus, Dataset};
 use crate::model::decode::{self, full_logits, sample_row, GenerateOpts, Sampler};
+use crate::model::spec_decode::SpecOpts;
 use crate::model::host;
 use crate::model::weights::DenseParams;
 use crate::model::Weights;
@@ -287,11 +295,14 @@ fn time_generate(
 ) -> Result<(IntTensor, f64, f64, usize)> {
     let opts = GenerateOpts { max_new, sampler: Sampler::Greedy, seed: 0 };
     let params = session.pack(&w.packed)?;
+    // untimed warmup OUTSIDE the recorded loop: the first generation
+    // after a pack pays one-time effects (page faults on the fresh
+    // panels, RoPE table build) that a per-token number must exclude
+    session.generate(&params, prompt, &opts)?;
     let mut best_pre = f64::INFINITY;
     let mut best_tok = f64::INFINITY;
     let mut out = None;
-    for _ in 0..reps.max(1) + 1 {
-        // first iteration doubles as warmup; still recorded via min
+    for _ in 0..reps.max(1) {
         let gen = session.generate(&params, prompt, &opts)?;
         best_pre = best_pre.min(gen.prefill_s * 1e3);
         best_tok = best_tok.min(gen.per_token_s() * 1e3);
@@ -457,6 +468,129 @@ pub fn compare_serve(
         peak_pages: report.peak_pages,
         kv_bytes: report.kv_bytes,
         identical,
+    })
+}
+
+/// One draft sparsity point of the speculative receipt.
+pub struct SpecPoint {
+    /// Draft sparsity fraction (0.3 = 30% of FFN/OV units pruned).
+    pub sparsity: f64,
+    /// Registered model name of the compact draft.
+    pub draft_model: String,
+    /// accepted / proposed across the whole generation.
+    pub acceptance: f64,
+    pub proposed: usize,
+    pub accepted: usize,
+    /// Chunked target verification forwards.
+    pub chunks: usize,
+    /// Single-token draft decode steps.
+    pub draft_steps: usize,
+    /// Generated tokens per second, best-of-reps whole-call wall time.
+    pub spec_tokens_per_s: f64,
+    /// spec / target-only tokens per second.
+    pub speedup: f64,
+    /// Allocated K/V bytes of the draft's cache (strictly smaller than
+    /// the target's whenever OV dims were sliced).
+    pub draft_kv_bytes: usize,
+    /// Speculative greedy tokens bitwise equal to target-only
+    /// `generate` — the losslessness receipt, per point.
+    pub greedy_identical: bool,
+}
+
+/// Target-only vs speculative greedy decode — the receipt the
+/// speculative engine must produce (`BENCH_spec.json`).
+pub struct SpecCompare {
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub draft_k: usize,
+    /// Generated tokens per second of target-only `generate`,
+    /// best-of-reps whole-call wall time.
+    pub target_tokens_per_s: f64,
+    /// Allocated K/V bytes of the target's cache.
+    pub target_kv_bytes: usize,
+    pub points: Vec<SpecPoint>,
+}
+
+/// Measure target-only greedy `generate` against speculative decoding
+/// with each supplied compact draft `(sparsity, model_name, weights)`.
+/// Both paths run over packed plans; the whole call (prefill + decode)
+/// is timed externally, best of `reps` after one untimed warmup, and
+/// greedy bit-identity is checked per draft point. Drafts must be
+/// registered in `manifest` (e.g. via `Manifest::register_compact`).
+pub fn compare_speculative(
+    manifest: &Manifest,
+    target_model: &str,
+    target_w: &Weights,
+    drafts: &[(f64, &str, &Weights)],
+    prompt_len: usize,
+    max_new: usize,
+    draft_k: usize,
+    reps: usize,
+) -> Result<SpecCompare> {
+    anyhow::ensure!(max_new >= 2, "compare_speculative wants max_new >= 2");
+    let session = Session::new(manifest, target_model)?;
+    let spec = session.spec.clone();
+    // speculative decode is single-sequence: one [1, prompt_len] prompt
+    let prompt = Dataset::new(Corpus::new(spec.vocab, 0x5bec), 1, prompt_len, 2)
+        .train_batch(0)
+        .tokens;
+    let params = session.pack(&target_w.packed)?;
+
+    // ---- target-only baseline -----------------------------------------
+    let gopts = GenerateOpts { max_new, sampler: Sampler::Greedy, seed: 0 };
+    session.generate(&params, &prompt, &gopts)?; // warmup
+    let mut target_s = f64::INFINITY;
+    let mut target_toks = None;
+    let mut target_kv_bytes = 0usize;
+    for _ in 0..reps.max(1) {
+        let t0 = std::time::Instant::now();
+        let gen = session.generate(&params, &prompt, &gopts)?;
+        target_s = target_s.min(t0.elapsed().as_secs_f64());
+        target_kv_bytes = gen.kv_bytes;
+        target_toks = Some(gen.tokens);
+    }
+    let target_toks = target_toks.expect("reps >= 1");
+    let target_tokens_per_s = max_new as f64 / target_s.max(1e-12);
+
+    // ---- one point per draft ------------------------------------------
+    let sopts = SpecOpts { max_new, draft_k, sampler: Sampler::Greedy, seed: 0 };
+    let mut points = Vec::with_capacity(drafts.len());
+    for &(sparsity, draft_model, draft_w) in drafts {
+        let draft_sess = Session::new(manifest, draft_model)?;
+        let draft_params = draft_sess.pack(&draft_w.packed)?;
+        session.generate_speculative(&params, &draft_params, &prompt, &sopts)?; // warmup
+        let mut spec_s = f64::INFINITY;
+        let mut last = None;
+        for _ in 0..reps.max(1) {
+            let t0 = std::time::Instant::now();
+            let g = session.generate_speculative(&params, &draft_params, &prompt, &sopts)?;
+            spec_s = spec_s.min(t0.elapsed().as_secs_f64());
+            last = Some(g);
+        }
+        let g = last.expect("reps >= 1");
+        let spec_tokens_per_s = max_new as f64 / spec_s.max(1e-12);
+        points.push(SpecPoint {
+            sparsity,
+            draft_model: draft_model.to_string(),
+            acceptance: g.acceptance_rate(),
+            proposed: g.proposed,
+            accepted: g.accepted,
+            chunks: g.chunks,
+            draft_steps: g.draft_steps,
+            spec_tokens_per_s,
+            speedup: spec_tokens_per_s / target_tokens_per_s,
+            draft_kv_bytes: g.draft_kv_bytes,
+            greedy_identical: g.tokens.data == target_toks.data,
+        });
+    }
+
+    Ok(SpecCompare {
+        prompt_len,
+        max_new,
+        draft_k,
+        target_tokens_per_s,
+        target_kv_bytes,
+        points,
     })
 }
 

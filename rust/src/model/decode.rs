@@ -17,6 +17,12 @@
 //! * [`decode_step_src`] — one token per sequence against the cache:
 //!   O(prefix) work per token (single-row linears + one attention row
 //!   per head) instead of the O(prefix²) full re-forward.
+//! * [`decode_chunk_src`] — t tokens per sequence in one forward,
+//!   causal within the chunk, logits for **every** chunk position: the
+//!   speculative-decode verification kernel (`model::spec_decode`),
+//!   paired with [`KvCache::truncate`] rollback for rejected
+//!   proposals. [`decode_chunk_paged`] is its logits-free paged
+//!   sibling — the serve engine's chunked prompt prefill.
 //! * [`generate_src`] / [`Sampler`] — the batched generation loop with
 //!   greedy and seeded top-k sampling.
 //! * [`decode_step_paged`] — the serve engine's batched step: one token
@@ -151,6 +157,26 @@ impl KvCache {
         self.len = 0;
     }
 
+    /// Roll the cache back to `pos` cached positions — the speculative
+    /// decode rejection path: positions written for proposals past the
+    /// accepted prefix are forgotten. Rows beyond `len` are never read
+    /// (every attention row is bounded by its position), so no zeroing
+    /// is needed; a later write at the same position simply overwrites.
+    /// Truncate can only roll *back*: a `pos` beyond the cached length
+    /// (or the capacity) is a proper `Err`, never a silent extension of
+    /// the cache over stale rows.
+    pub fn truncate(&mut self, pos: usize) -> Result<()> {
+        anyhow::ensure!(
+            pos <= self.len,
+            "kv truncate to {pos} exceeds cached length {} (capacity {}) — \
+             truncate can only roll back, never extend",
+            self.len,
+            self.cap
+        );
+        self.len = pos;
+        Ok(())
+    }
+
     /// Allocated resident bytes of the K/V buffers — the decode-memory
     /// receipt: V buffers are sized by each layer's sliced `d_ov`, so an
     /// OV-pruned compact model's cache is strictly smaller than its
@@ -228,15 +254,23 @@ impl KvCache {
     /// for layer `l`, position `ti` of row `bi` landing at slot
     /// `bi·cap + ti`. Keys must already be RoPE-rotated per position.
     fn write_prefill(&mut self, l: usize, t: usize, k_rows: &Tensor, v_rows: &Tensor) {
+        self.write_chunk(l, 0, t, k_rows, v_rows)
+    }
+
+    /// Store a chunk's K/V rows ([batch·t, kdim] / [batch·t, dv]) for
+    /// layer `l`: chunk position `ti` of sequence `bi` (input row
+    /// `bi·t + ti`) lands at slot `bi·cap + pos0 + ti` — the same copy
+    /// `write_pos` performs per position, batched over the chunk.
+    fn write_chunk(&mut self, l: usize, pos0: usize, t: usize, k_rows: &Tensor, v_rows: &Tensor) {
         let (kdim, cap, batch) = (self.kdim, self.cap, self.batch);
         let lay = &mut self.layers[l];
         let dv = lay.dv;
         for bi in 0..batch {
             for ti in 0..t {
                 let r = bi * t + ti;
-                let ko = (bi * cap + ti) * kdim;
+                let ko = (bi * cap + pos0 + ti) * kdim;
                 lay.k[ko..ko + kdim].copy_from_slice(k_rows.row(r));
-                let vo = (bi * cap + ti) * dv;
+                let vo = (bi * cap + pos0 + ti) * dv;
                 lay.v[vo..vo + dv].copy_from_slice(v_rows.row(r));
             }
         }
@@ -504,6 +538,141 @@ pub fn decode_step_src<S: ParamSource>(
     head_logits(src, x, g.d, g.is_opt)
 }
 
+/// Process `t` consecutive tokens per sequence — positions
+/// `cache.len() .. cache.len() + t` — against the cache in **one**
+/// forward, causal *within* the chunk (chunk position `ti` attends to
+/// the whole cached prefix plus chunk positions `..= ti`), and return
+/// the logits of every chunk position: [b·t, vocab], row `bi·t + ti`
+/// holding the next-token logits after feeding token `(bi, ti)`.
+///
+/// This is the speculative-decode verification kernel: the target
+/// model scores a draft's k proposals (plus the committed token before
+/// them) in one chunked pass instead of k+1 sequential steps — the
+/// cache attention stays O(prefix) per row, but every linear streams
+/// its packed weight panel once for all t rows instead of once per
+/// token, which is where the verification win comes from on a
+/// weight-bandwidth-bound host.
+///
+/// Bit-identity contract (locked by `rust/tests/test_spec_decode.rs`):
+/// a chunk of 1 executes the exact calls [`decode_step_src`] executes
+/// (same embed row, same RoPE rows, same `attn_row` reduction over the
+/// same cache strides), and a chunk of t leaves the cache and produces
+/// per-position logits bitwise equal to t single steps — so chunked
+/// verification can never diverge from sequential decode.
+pub fn decode_chunk_src<S: ParamSource>(
+    src: &mut S,
+    tokens: &IntTensor,
+    cache: &mut KvCache,
+) -> Result<Tensor> {
+    let g = Geom::of(src.spec());
+    let b = cache.batch;
+    anyhow::ensure!(
+        tokens.shape.len() == 2 && tokens.shape[0] == b && tokens.shape[1] >= 1,
+        "decode_chunk wants [b={b}, t >= 1] tokens, got shape {:?}",
+        tokens.shape
+    );
+    let t = tokens.shape[1];
+    cache.check_spec(src.spec(), b)?;
+    let pos0 = cache.len;
+    anyhow::ensure!(
+        pos0 + t <= cache.cap,
+        "kv cache overflow: chunk of {t} at position {pos0} exceeds capacity {}",
+        cache.cap
+    );
+    validate_ids(tokens, g.vocab)?;
+    let (dh, kdim, cap) = (g.head_dim, cache.kdim, cache.cap);
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let mut x = embed_tokens(src, tokens, g.d, g.is_opt, pos0)?;
+    let rope = rope_cached(pos0 + t, dh);
+    let (cos, sin): (&[f32], &[f32]) = (&rope.0, &rope.1);
+
+    for l in 0..g.n_layers {
+        // ---- attention (t rows per sequence, against cache + chunk)
+        let x_ln = norm_input(src, l, "ln1", &x, g.d, g.is_opt)?;
+        let (mut q, mut k, v) = qkv_proj(src, l, &x_ln, g.is_opt)?;
+        if !g.is_opt {
+            for r in 0..b * t {
+                let pos = pos0 + r % t;
+                for hi in 0..g.n_heads {
+                    rope_row(&mut q.row_mut(r)[hi * dh..(hi + 1) * dh], dh, pos, cos, sin);
+                    rope_row(&mut k.row_mut(r)[hi * dh..(hi + 1) * dh], dh, pos, cos, sin);
+                }
+            }
+        }
+        // chunk K/V land in the cache first, so row ti's attention reads
+        // chunk positions <= ti straight from the cache buffers (its
+        // bound pos0 + ti keeps later chunk rows invisible — causal)
+        cache.write_chunk(l, pos0, t, &k, &v);
+
+        let lay = &cache.layers[l];
+        let splits = &lay.splits;
+        let dv = lay.dv;
+        let mut offs = Vec::with_capacity(g.n_heads + 1);
+        let mut acc = 0usize;
+        offs.push(0);
+        for &s in splits {
+            acc += s;
+            offs.push(acc);
+        }
+        let block = |r: usize, hi: usize| -> Vec<f32> {
+            let dv_h = splits[hi];
+            if dv_h == 0 {
+                return Vec::new(); // fully sliced head: nothing reads it
+            }
+            let (bi, ti) = (r / t, r % t);
+            let qrow = &q.row(r)[hi * dh..(hi + 1) * dh];
+            let kbuf = &lay.k[bi * cap * kdim..(bi + 1) * cap * kdim];
+            let vbuf = &lay.v[bi * cap * dv..(bi + 1) * cap * dv];
+            let mut out = vec![0.0f32; dv_h];
+            attn_row(
+                qrow,
+                kbuf,
+                kdim,
+                hi * dh,
+                vbuf,
+                dv,
+                offs[hi],
+                pos0 + ti,
+                dh,
+                dv_h,
+                scale,
+                &mut out,
+            );
+            out
+        };
+        let n_blocks = b * t * g.n_heads;
+        let mut ctx = Tensor::zeros(&[b * t, dv]);
+        let mut place = |i: usize, blk: Vec<f32>| {
+            let (r, hi) = (i / g.n_heads, i % g.n_heads);
+            let dv_h = splits[hi];
+            if dv_h == 0 {
+                return;
+            }
+            ctx.row_mut(r)[offs[hi]..offs[hi] + dv_h].copy_from_slice(&blk);
+        };
+        let pool = crate::util::pool::current();
+        let work = n_blocks * (pos0 + t) * (dh + dv / g.n_heads.max(1));
+        if pool.workers() > 1 && n_blocks > 1 && work >= crate::util::pool::PAR_THRESHOLD {
+            let blocks = pool.map(n_blocks, |i| block(i / g.n_heads, i % g.n_heads));
+            for (i, blk) in blocks.into_iter().enumerate() {
+                place(i, blk);
+            }
+        } else {
+            for i in 0..n_blocks {
+                place(i, block(i / g.n_heads, i % g.n_heads));
+            }
+        }
+        attn_out_residual(src, l, &ctx, &mut x)?;
+        // ---- ffn (the shared sublayer, b·t rows)
+        ffn_sublayer(src, l, &mut x, g.d, g.is_opt)?;
+        src.layer_done(l)?;
+    }
+    cache.len = pos0 + t;
+
+    head_logits(src, x, g.d, g.is_opt)
+}
+
 // ------------------------------------------------------------ paged decode
 
 /// One lane of a batched paged decode step: a session's page table plus
@@ -663,6 +832,131 @@ pub fn decode_step_paged<S: ParamSource>(
     head_logits(src, x, g.d, g.is_opt)
 }
 
+/// Feed `tokens` — `t` consecutive positions of ONE session — against
+/// the paged arena in a single causal chunk, populating the session's
+/// K/V pages without computing any logits: the serve engine's chunked
+/// prompt prefill ([`crate::serve`], `ServeConfig::prefill_chunk`).
+///
+/// The pages end bitwise as `t` single-token [`decode_step_paged`]
+/// feeds would leave them (same embed/RoPE/write kernels on the same
+/// rows), so every later sampled logit is unchanged — and the engine
+/// always discarded non-final prompt-position logits anyway, so
+/// skipping the [t, vocab] head product here is pure savings on top of
+/// the one-weight-stream-per-chunk linears.
+pub fn decode_chunk_paged<S: ParamSource>(
+    src: &mut S,
+    arena: &mut KvArena,
+    kv: &mut PagedKv,
+    tokens: &[i32],
+) -> Result<()> {
+    let g = Geom::of(src.spec());
+    let t = tokens.len();
+    anyhow::ensure!(t >= 1, "decode_chunk_paged wants at least one token");
+    arena.check_spec(src.spec())?;
+    for &id in tokens {
+        anyhow::ensure!(
+            id >= 0 && (id as usize) < g.vocab,
+            "token id {id} outside vocab {}",
+            g.vocab
+        );
+    }
+    let pos0 = kv.len();
+    if g.is_opt {
+        anyhow::ensure!(
+            pos0 + t <= g.seq,
+            "positions {pos0}..{} exceed the {} learned positions of OPT \
+             model (pos_emb covers seq={})",
+            pos0 + t,
+            g.seq,
+            g.seq
+        );
+    }
+    arena.grow(kv, pos0 + t)?;
+    let dh = g.head_dim;
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let toks = IntTensor::new(vec![1, t], tokens.to_vec());
+    let mut x = embed_tokens(src, &toks, g.d, g.is_opt, pos0)?;
+    let rope = rope_cached(pos0 + t, dh);
+    let (cos, sin): (&[f32], &[f32]) = (&rope.0, &rope.1);
+
+    for l in 0..g.n_layers {
+        // ---- attention (t rows of one session, against the arena)
+        let x_ln = norm_input(src, l, "ln1", &x, g.d, g.is_opt)?;
+        let (mut q, mut k, v) = qkv_proj(src, l, &x_ln, g.is_opt)?;
+        if !g.is_opt {
+            for ti in 0..t {
+                for hi in 0..g.n_heads {
+                    rope_row(&mut q.row_mut(ti)[hi * dh..(hi + 1) * dh], dh, pos0 + ti, cos, sin);
+                    rope_row(&mut k.row_mut(ti)[hi * dh..(hi + 1) * dh], dh, pos0 + ti, cos, sin);
+                }
+            }
+        }
+        for ti in 0..t {
+            arena.write_pos(kv, l, pos0 + ti, k.row(ti), v.row(ti));
+        }
+
+        let splits = &g.head_splits[l];
+        let dv: usize = splits.iter().sum();
+        let mut offs = Vec::with_capacity(g.n_heads + 1);
+        let mut acc = 0usize;
+        offs.push(0);
+        for &s in splits {
+            acc += s;
+            offs.push(acc);
+        }
+        let pt = kv.pages();
+        let arena_ref = &*arena;
+        let block = |ti: usize, hi: usize| -> Vec<f32> {
+            let dv_h = splits[hi];
+            if dv_h == 0 {
+                return Vec::new(); // fully sliced head: nothing reads it
+            }
+            let qrow = &q.row(ti)[hi * dh..(hi + 1) * dh];
+            let mut out = vec![0.0f32; dv_h];
+            attn_row_by(
+                qrow,
+                |tj| &arena_ref.k_row(l, pt, tj)[hi * dh..(hi + 1) * dh],
+                |tj| &arena_ref.v_row(l, pt, tj)[offs[hi]..offs[hi] + dv_h],
+                pos0 + ti,
+                scale,
+                &mut out,
+            );
+            out
+        };
+        let n_blocks = t * g.n_heads;
+        let mut ctx = Tensor::zeros(&[t, dv]);
+        let mut place = |i: usize, blk: Vec<f32>| {
+            let (ti, hi) = (i / g.n_heads, i % g.n_heads);
+            let dv_h = splits[hi];
+            if dv_h == 0 {
+                return;
+            }
+            ctx.row_mut(ti)[offs[hi]..offs[hi] + dv_h].copy_from_slice(&blk);
+        };
+        let pool = crate::util::pool::current();
+        let work = n_blocks * (pos0 + t) * (dh + dv / g.n_heads.max(1));
+        if pool.workers() > 1 && n_blocks > 1 && work >= crate::util::pool::PAR_THRESHOLD {
+            let blocks = pool.map(n_blocks, |i| block(i / g.n_heads, i % g.n_heads));
+            for (i, blk) in blocks.into_iter().enumerate() {
+                place(i, blk);
+            }
+        } else {
+            for i in 0..n_blocks {
+                place(i, block(i / g.n_heads, i % g.n_heads));
+            }
+        }
+        attn_out_residual(src, l, &ctx, &mut x)?;
+        // ---- ffn (the shared sublayer, t rows)
+        ffn_sublayer(src, l, &mut x, g.d, g.is_opt)?;
+        src.layer_done(l)?;
+    }
+    for _ in 0..t {
+        kv.advance();
+    }
+    Ok(())
+}
+
 // ---------------------------------------------------------------- sampling
 
 /// Next-token selection strategy.
@@ -783,6 +1077,27 @@ impl Generation {
     }
 }
 
+/// Shared up-front prompt validation of every generation entry: an
+/// empty prompt — whether `[b, 0]` (no tokens) or `[0, t]` (no
+/// sequences) — is a proper `Err` **before any forward work**, with the
+/// same "rejected before prefill" wording the oversized-generation
+/// guard uses, instead of surfacing later as a confusing cache-geometry
+/// error mid-setup.
+pub(crate) fn check_generate_prompt(prompt: &IntTensor) -> Result<()> {
+    anyhow::ensure!(
+        prompt.shape.len() == 2,
+        "generate wants [b, t] prompt tokens, got {:?}",
+        prompt.shape
+    );
+    anyhow::ensure!(
+        prompt.shape[0] >= 1 && prompt.shape[1] >= 1,
+        "generate wants a non-empty prompt ([b, t] with b, t >= 1), got \
+         {:?} — rejected before prefill",
+        prompt.shape
+    );
+    Ok(())
+}
+
 /// The generation loop over any [`ParamSource`]: prefill the prompt,
 /// then sample + decode one token at a time. The cache is sized exactly
 /// (`prompt + max_new - 1` positions — the last sampled token is never
@@ -793,11 +1108,7 @@ pub fn generate_src<S: ParamSource>(
     prompt: &IntTensor,
     opts: &GenerateOpts,
 ) -> Result<Generation> {
-    anyhow::ensure!(
-        prompt.shape.len() == 2 && prompt.shape[1] >= 1,
-        "generate wants [b, t] prompt tokens with t >= 1, got {:?}",
-        prompt.shape
-    );
+    check_generate_prompt(prompt)?;
     anyhow::ensure!(opts.max_new >= 1, "generate wants max_new >= 1");
     let (b, t0) = (prompt.shape[0], prompt.shape[1]);
     let cap = t0 + opts.max_new - 1;
@@ -819,11 +1130,7 @@ pub fn generate_with_cache_src<S: ParamSource>(
     opts: &GenerateOpts,
     cache: &mut KvCache,
 ) -> Result<Generation> {
-    anyhow::ensure!(
-        prompt.shape.len() == 2 && prompt.shape[1] >= 1,
-        "generate wants [b, t] prompt tokens with t >= 1, got {:?}",
-        prompt.shape
-    );
+    check_generate_prompt(prompt)?;
     anyhow::ensure!(opts.max_new >= 1, "generate wants max_new >= 1");
     let (b, t0) = (prompt.shape[0], prompt.shape[1]);
     cache.check_spec(src.spec(), b)?;

@@ -12,10 +12,12 @@ pub mod decode;
 pub mod kv_arena;
 pub mod mask;
 pub mod compact;
+pub mod spec_decode;
 pub mod zoo;
 
 pub use compact::CompactModel;
 pub use decode::{GenerateOpts, Generation, KvCache, Sampler};
+pub use spec_decode::{SpecGeneration, SpecOpts};
 pub use kv_arena::{KvArena, PagedKv};
 pub use mask::PruneMask;
 pub use weights::{

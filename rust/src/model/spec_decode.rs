@@ -1,0 +1,413 @@
+//! Speculative decoding with a FASP-pruned draft model — the paper's
+//! *compression* artifact turned into a *lossless speedup* of the
+//! uncompressed model.
+//!
+//! FASP pruning manufactures the draft for free: a compact export
+//! shares the vocab, tokenizer and provenance of its dense parent, runs
+//! strictly cheaper per token (sliced FFN/OV matvecs), and keeps a
+//! strictly smaller KV cache (sliced `d_ov`). The loop here is the
+//! standard draft-then-verify scheme:
+//!
+//! 1. the **draft** proposes up to `draft_k` tokens autoregressively
+//!    against its own [`KvCache`] ([`super::decode::decode_step_src`]);
+//! 2. the **target** scores the committed tail plus every proposal in
+//!    ONE chunked forward ([`super::decode::decode_chunk_src`]) — k+1
+//!    positions per weight-panel stream instead of one;
+//! 3. acceptance is **exact**:
+//!    * greedy — the longest proposal prefix matching the target's
+//!      argmaxes is accepted, then the target's own argmax is committed
+//!      (correction on reject, bonus on full accept). Every committed
+//!      token is a target argmax conditioned on target argmaxes, so the
+//!      output is **bit-identical to target-only `generate` by
+//!      construction** (the chunk≡steps bitwise contract closes the
+//!      loop — `rust/tests/test_spec_decode.rs` locks it);
+//!    * sampled (top-k) — standard rejection sampling: accept proposal
+//!      `x` with `min(1, p_target(x)/p_draft(x))`, on reject resample
+//!      from the normalized residual `max(0, p_target - p_draft)`, on
+//!      full accept draw the bonus token from `p_target`. The committed
+//!      sequence is distributed exactly as target-only sampling (the
+//!      Leviathan et al. identity) and is seed-reproducible over the
+//!      per-session [`Rng`] streams;
+//! 4. both caches [`KvCache::truncate`] back to the committed prefix —
+//!    rejected positions are forgotten, never re-read.
+//!
+//! This module is a request path: every failure mode (mismatched vocab,
+//! empty prompt, cache overflow, all-non-finite logits in the sampled
+//! path) is a proper `Err`, and it performs no wall-clock reads — the
+//! perf receipts live in `eval::speed::compare_speculative`
+//! (`BENCH_spec.json`), which times whole calls from outside.
+
+use super::decode::{
+    check_generate_prompt, decode_chunk_src, decode_step_src, prefill_src, sample_row, KvCache,
+    Sampler,
+};
+use super::weights::ParamSource;
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Speculative generation settings.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecOpts {
+    /// Tokens to generate (>= 1).
+    pub max_new: usize,
+    /// Max tokens the draft proposes per verification round (>= 1).
+    pub draft_k: usize,
+    /// The *target* selection rule — greedy reproduces target-only
+    /// `generate` bitwise; top-k samples the target distribution
+    /// exactly. The draft proposes under the same rule.
+    pub sampler: Sampler,
+    /// Seed of the sampling [`Rng`] streams (unused by greedy).
+    pub seed: u64,
+}
+
+impl Default for SpecOpts {
+    fn default() -> Self {
+        SpecOpts { max_new: 16, draft_k: 4, sampler: Sampler::Greedy, seed: 0 }
+    }
+}
+
+/// One finished speculative generation: the tokens plus the
+/// acceptance/work counters the perf receipt reports. No wall-times
+/// here by design (this module is wall-clock-free); timing wraps the
+/// whole call in `eval::speed`.
+pub struct SpecGeneration {
+    /// [1, prompt_len + generated] token ids (prompt included).
+    pub tokens: IntTensor,
+    pub prompt_len: usize,
+    pub generated: usize,
+    /// Draft tokens proposed across all rounds.
+    pub proposed: usize,
+    /// Proposals accepted by the target.
+    pub accepted: usize,
+    /// Chunked target verification forwards executed.
+    pub chunks: usize,
+    /// Single-token draft decode steps executed.
+    pub draft_steps: usize,
+    /// Allocated K/V bytes of the target's cache.
+    pub target_kv_bytes: usize,
+    /// Allocated K/V bytes of the draft's (OV-sliced, strictly smaller
+    /// at equal capacity) cache.
+    pub draft_kv_bytes: usize,
+}
+
+impl SpecGeneration {
+    /// Fraction of draft proposals the target accepted (1.0 when
+    /// nothing was proposed — `max_new` 1 never needs a draft).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            1.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+}
+
+/// The sampling distribution behind [`sample_row`]'s top-k draw, made
+/// explicit: candidate token ids in (logit desc, index asc) order with
+/// normalized probabilities. Mirrors `sample_row`'s candidate
+/// construction exactly — non-finite logits sort last and are dropped
+/// — so "the target distribution" below means precisely what
+/// target-only `generate` samples from. All-non-finite logits are a
+/// proper `Err` here (request path — R1), not a panic.
+fn topk_dist(logits: &[f32], k: usize, temperature: f32) -> Result<(Vec<usize>, Vec<f64>)> {
+    anyhow::ensure!(!logits.is_empty(), "topk_dist: empty logits");
+    let k = k.clamp(1, logits.len());
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        use std::cmp::Ordering;
+        match (logits[a].is_finite(), logits[b].is_finite()) {
+            (true, true) => logits[b].total_cmp(&logits[a]).then(a.cmp(&b)),
+            (true, false) => Ordering::Less,
+            (false, true) => Ordering::Greater,
+            (false, false) => a.cmp(&b),
+        }
+    });
+    idx.truncate(k);
+    while idx.len() > 1 && !logits[idx[idx.len() - 1]].is_finite() {
+        idx.pop();
+    }
+    anyhow::ensure!(
+        logits[idx[0]].is_finite(),
+        "topk_dist: no finite logit to sample (all NaN/inf)"
+    );
+    let temp = temperature.max(1e-6) as f64;
+    let m = logits[idx[0]] as f64;
+    let mut w: Vec<f64> = Vec::with_capacity(idx.len());
+    let mut total = 0.0f64;
+    for &i in &idx {
+        let e = ((logits[i] as f64 - m) / temp).exp();
+        total += e;
+        w.push(e);
+    }
+    // total >= 1 always (the max-logit candidate contributes exp(0))
+    for e in w.iter_mut() {
+        *e /= total;
+    }
+    Ok((idx, w))
+}
+
+/// Probability of `token` under an explicit candidate distribution
+/// (0 outside the candidate set). Candidate sets are at most k long,
+/// so a linear scan is the right tool (and keeps iteration order
+/// deterministic — D1 bans hashing anyway).
+fn prob_of(idx: &[usize], p: &[f64], token: usize) -> f64 {
+    for (i, &c) in idx.iter().enumerate() {
+        if c == token {
+            return p[i];
+        }
+    }
+    0.0
+}
+
+/// The speculative generation loop over any pair of [`ParamSource`]s
+/// (dense, compact, packed or streamed — draft and target are
+/// independent sources). Single sequence (b = 1): acceptance lengths
+/// differ per sequence, so batching would serialize on the slowest
+/// lane anyway.
+///
+/// Invariants the loop maintains between rounds (`committed` = prompt
+/// plus generated-so-far, length N):
+/// * the target cache holds exactly N-1 positions — everything
+///   committed except the newest token, which the next verification
+///   chunk feeds first (mirroring `generate`, which never feeds its
+///   final sampled token);
+/// * the draft cache holds a prefix of the committed tokens (it can
+///   trail by up to two after a fully-accepted round: the last
+///   proposal plus the bonus token), caught up by single steps before
+///   the next proposal;
+/// * rejected proposals' cache rows are rolled back with
+///   [`KvCache::truncate`] on both sides and never read again.
+pub fn generate_speculative_src<T: ParamSource, D: ParamSource>(
+    target: &mut T,
+    draft: &mut D,
+    prompt: &IntTensor,
+    opts: &SpecOpts,
+) -> Result<SpecGeneration> {
+    check_generate_prompt(prompt)?;
+    anyhow::ensure!(
+        prompt.shape[0] == 1,
+        "speculative decode runs one sequence at a time, got batch {}",
+        prompt.shape[0]
+    );
+    anyhow::ensure!(opts.max_new >= 1, "speculative decode wants max_new >= 1");
+    anyhow::ensure!(opts.draft_k >= 1, "speculative decode wants draft_k >= 1");
+    let t_vocab = target.spec().vocab;
+    anyhow::ensure!(
+        draft.spec().vocab == t_vocab && t_vocab >= 1,
+        "draft model '{}' (vocab {}) cannot draft for target '{}' (vocab {}) \
+         — speculative decode needs a draft sharing the target's token space",
+        draft.spec().name,
+        draft.spec().vocab,
+        target.spec().name,
+        t_vocab
+    );
+
+    let t0 = prompt.shape[1];
+    // same exact sizing as `generate`: the final sampled token is never
+    // fed back, and the draft never proposes past max_new - 1
+    let cap = t0 + opts.max_new - 1;
+    let mut tcache = KvCache::for_spec(target.spec(), 1, cap)?;
+    let mut dcache = KvCache::for_spec(draft.spec(), 1, cap)?;
+
+    let mut rng = Rng::new(opts.seed);
+    let mut draft_rng = rng.fork(0xd4a57);
+
+    let tlogits = prefill_src(target, prompt, &mut tcache)?;
+    let _ = prefill_src(draft, prompt, &mut dcache)?;
+
+    let mut committed: Vec<i32> = prompt.data.clone();
+    // the first token is sampled from the target's prefill logits —
+    // exactly `generate`'s first draw
+    committed.push(sample_row(tlogits.row(0), opts.sampler, &mut rng) as i32);
+
+    let mut proposed = 0usize;
+    let mut accepted = 0usize;
+    let mut chunks = 0usize;
+    let mut draft_steps = 0usize;
+
+    while committed.len() < t0 + opts.max_new {
+        let n = committed.len();
+        let remaining = t0 + opts.max_new - n;
+        let kp = opts.draft_k.min(remaining - 1);
+
+        // ---- draft proposes kp tokens against its own smaller cache
+        let mut proposals: Vec<i32> = Vec::with_capacity(kp);
+        let mut draft_dists: Vec<(Vec<usize>, Vec<f64>)> = Vec::new();
+        if kp > 0 {
+            // catch up on committed tokens the draft has not seen yet
+            let mut dlogits: Option<Tensor> = None;
+            for j in dcache.len()..n {
+                draft.rewind()?;
+                let tok = IntTensor::new(vec![1, 1], vec![committed[j]]);
+                dlogits = Some(decode_step_src(draft, &tok, &mut dcache)?);
+                draft_steps += 1;
+            }
+            let mut dl = dlogits.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "speculative decode: draft cache ({} positions) ran ahead \
+                     of the committed tokens ({n}) — loop invariant broken",
+                    dcache.len()
+                )
+            })?;
+            for i in 0..kp {
+                let d = match opts.sampler {
+                    Sampler::Greedy => {
+                        sample_row(dl.row(0), Sampler::Greedy, &mut draft_rng) as i32
+                    }
+                    Sampler::TopK { k, temperature } => {
+                        let (idx, p) = topk_dist(dl.row(0), k, temperature)?;
+                        let d = idx[draft_rng.categorical(&p)] as i32;
+                        draft_dists.push((idx, p));
+                        d
+                    }
+                };
+                proposals.push(d);
+                if i + 1 < kp {
+                    draft.rewind()?;
+                    let tok = IntTensor::new(vec![1, 1], vec![d]);
+                    dl = decode_step_src(draft, &tok, &mut dcache)?;
+                    draft_steps += 1;
+                }
+            }
+        }
+        proposed += kp;
+
+        // ---- target verifies tail + all proposals in ONE chunk: row i
+        // holds the target's next-token logits after chunk token i
+        target.rewind()?;
+        let mut chunk_toks: Vec<i32> = Vec::with_capacity(kp + 1);
+        chunk_toks.push(committed[n - 1]);
+        chunk_toks.extend_from_slice(&proposals);
+        let chunk = IntTensor::new(vec![1, kp + 1], chunk_toks);
+        let logits = decode_chunk_src(target, &chunk, &mut tcache)?;
+        chunks += 1;
+
+        // ---- exact acceptance + one committed token per round
+        let mut a = 0usize;
+        let mut rejected = false;
+        match opts.sampler {
+            Sampler::Greedy => {
+                // longest prefix of proposals matching the target's own
+                // argmaxes; first mismatch commits the target's choice
+                while a < kp {
+                    let want = sample_row(logits.row(a), Sampler::Greedy, &mut rng) as i32;
+                    committed.push(want);
+                    if want == proposals[a] {
+                        accepted += 1;
+                        a += 1;
+                    } else {
+                        rejected = true;
+                        break;
+                    }
+                }
+                if !rejected {
+                    // full accept: the bonus token is free — the chunk
+                    // already scored the position after the last proposal
+                    committed.push(sample_row(logits.row(kp), Sampler::Greedy, &mut rng) as i32);
+                }
+            }
+            Sampler::TopK { k, temperature } => {
+                while a < kp {
+                    let (tidx, tp) = topk_dist(logits.row(a), k, temperature)?;
+                    let (didx, dp) = (&draft_dists[a].0, &draft_dists[a].1);
+                    let x = proposals[a] as usize;
+                    let pt = prob_of(&tidx, &tp, x);
+                    let pd = prob_of(didx, dp, x);
+                    let accept_p = if pd > 0.0 {
+                        (pt / pd).min(1.0)
+                    } else if pt > 0.0 {
+                        1.0
+                    } else {
+                        0.0
+                    };
+                    if rng.f64() < accept_p {
+                        committed.push(proposals[a]);
+                        accepted += 1;
+                        a += 1;
+                    } else {
+                        // resample from the normalized residual
+                        // max(0, p_target - p_draft) over the target's
+                        // candidate set (sanitized: clamped at 0, with
+                        // a p_target fallback if the residual vanishes)
+                        let mut w: Vec<f64> = Vec::with_capacity(tidx.len());
+                        let mut total = 0.0f64;
+                        for (ci, &cand) in tidx.iter().enumerate() {
+                            let mut r = (tp[ci] - prob_of(didx, dp, cand)).max(0.0);
+                            if !r.is_finite() {
+                                r = 0.0;
+                            }
+                            total += r;
+                            w.push(r);
+                        }
+                        let pick = if total > 0.0 && total.is_finite() {
+                            tidx[rng.categorical(&w)]
+                        } else {
+                            tidx[rng.categorical(&tp)]
+                        };
+                        committed.push(pick as i32);
+                        rejected = true;
+                        break;
+                    }
+                }
+                if !rejected {
+                    let (tidx, tp) = topk_dist(logits.row(kp), k, temperature)?;
+                    committed.push(tidx[rng.categorical(&tp)] as i32);
+                }
+            }
+        }
+
+        // ---- roll both caches back to the committed prefix (the
+        // target may keep every chunk position on a full accept; the
+        // draft may legitimately trail and is clamped, never extended)
+        let n_new = committed.len();
+        tcache.truncate(n_new - 1)?;
+        dcache.truncate((n_new - 1).min(dcache.len()))?;
+    }
+
+    let total = t0 + opts.max_new;
+    Ok(SpecGeneration {
+        tokens: IntTensor::new(vec![1, total], committed),
+        prompt_len: t0,
+        generated: opts.max_new,
+        proposed,
+        accepted,
+        chunks,
+        draft_steps,
+        target_kv_bytes: tcache.kv_bytes(),
+        draft_kv_bytes: dcache.kv_bytes(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_dist_matches_sample_row_candidates() {
+        let logits = [5.0f32, 4.0, 3.0, -10.0, f32::NAN, -30.0];
+        let (idx, p) = topk_dist(&logits, 3, 1.0).unwrap();
+        assert_eq!(idx, vec![0, 1, 2]);
+        let total: f64 = p.iter().fold(0.0, |acc, &x| acc + x);
+        assert!((total - 1.0).abs() < 1e-12, "probs normalize, got {total}");
+        assert!(p[0] > p[1] && p[1] > p[2]);
+    }
+
+    #[test]
+    fn topk_dist_drops_nonfinite_tail_and_errs_on_all_nonfinite() {
+        let logits = [1.0f32, f32::NAN, f32::INFINITY];
+        let (idx, _) = topk_dist(&logits, 3, 1.0).unwrap();
+        assert_eq!(idx, vec![0], "non-finite candidates dropped");
+        let bad = [f32::NAN, f32::NEG_INFINITY];
+        assert!(topk_dist(&bad, 2, 1.0).is_err());
+    }
+
+    #[test]
+    fn prob_of_is_zero_outside_candidates() {
+        let idx = vec![4usize, 9];
+        let p = vec![0.75, 0.25];
+        assert_eq!(prob_of(&idx, &p, 4), 0.75);
+        assert_eq!(prob_of(&idx, &p, 9), 0.25);
+        assert_eq!(prob_of(&idx, &p, 1), 0.0);
+    }
+}

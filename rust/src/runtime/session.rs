@@ -45,6 +45,7 @@ use super::manifest::{Manifest, ModelSpec};
 use super::store::{ShardedWeights, StreamingParams};
 use crate::model::decode::{self, GenerateOpts, Generation, KvCache};
 use crate::model::host;
+use crate::model::spec_decode::{self, SpecGeneration, SpecOpts};
 use crate::model::weights::{PackCache, PackedWeights};
 use crate::model::Weights;
 use crate::tensor::ops::add_assign;
@@ -558,6 +559,33 @@ impl<'m> Session<'m> {
         self.check_prompt(prompt)?;
         let _exec = self.backend.enter();
         decode::generate_with_cache_src(&mut params.model.source(), prompt, opts, cache)
+    }
+
+    /// Speculative generation: `draft` — any packed model sharing the
+    /// target's vocab, typically a FASP compact export of this very
+    /// model — proposes up to `draft_k` tokens per round against its
+    /// own (OV-sliced, strictly smaller) cache, and the target verifies
+    /// all of them plus one in a single chunked forward. Greedy output
+    /// is **bit-identical** to [`Session::generate`]; sampled output is
+    /// distributionally exact (rejection sampling) and seed-reproducible.
+    /// The draft is *not* required to be a registered sibling of this
+    /// session's model — only the token space must match (checked).
+    pub fn generate_speculative(
+        &self,
+        params: &PackedParams,
+        draft: &PackedParams,
+        prompt: &IntTensor,
+        opts: &SpecOpts,
+    ) -> Result<SpecGeneration> {
+        self.check_decode_params(params)?;
+        self.check_prompt(prompt)?;
+        let _exec = self.backend.enter();
+        spec_decode::generate_speculative_src(
+            &mut params.model.source(),
+            &mut draft.model.source(),
+            prompt,
+            opts,
+        )
     }
 
     /// Drive the continuous-batching serve engine (`crate::serve`) to

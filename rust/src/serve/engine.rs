@@ -12,6 +12,17 @@
 //! leaves the batch on the tick it completes — no tail-of-batch
 //! stragglers, no prefill stalls.
 //!
+//! **Chunked prefill** ([`ServeConfig::prefill_chunk`]): a session
+//! still deep in its prompt additionally feeds up to `prefill_chunk-1`
+//! prompt tokens per tick through one logits-free chunked forward
+//! ([`decode_chunk_paged`]) before its lane token — each weight panel
+//! streams once for the whole chunk instead of once per token, so long
+//! prompts prefill up to `prefill_chunk`× faster. The chunk writes
+//! bitwise the same K/V as single steps (the chunk≡steps contract in
+//! `model/decode.rs`), and prompt-position logits were always
+//! discarded, so scheduler output is unchanged bit-for-bit —
+//! `prefill_chunk = 1` *is* the old engine.
+//!
 //! Determinism receipt (locked by `rust/tests/test_serve.rs`): each
 //! session's output is **bit-identical** to a per-session sequential
 //! `generate` with the same prompt/sampler/seed, at every batch
@@ -28,7 +39,7 @@
 //! retirements or prefix-cache evictions free enough pages.
 
 use super::prefix::PrefixCache;
-use crate::model::decode::{decode_step_paged, sample_row, PagedLane, Sampler};
+use crate::model::decode::{decode_chunk_paged, decode_step_paged, sample_row, PagedLane, Sampler};
 use crate::model::kv_arena::{KvArena, PagedKv};
 use crate::model::weights::{PackedWeights, ParamSource};
 use crate::util::rng::Rng;
@@ -57,11 +68,22 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Share common prompt heads across sessions.
     pub prefix_cache: bool,
+    /// Max prompt tokens a prefilling session consumes per tick (>= 1):
+    /// `prefill_chunk - 1` via one chunked forward plus its lane token.
+    /// 1 disables chunking and reproduces the token-per-tick engine
+    /// exactly; any value yields bit-identical outputs.
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { page: 16, n_pages: 256, max_batch: 8, prefix_cache: true }
+        ServeConfig {
+            page: 16,
+            n_pages: 256,
+            max_batch: 8,
+            prefix_cache: true,
+            prefill_chunk: 4,
+        }
     }
 }
 
@@ -140,6 +162,7 @@ pub fn serve(
 ) -> Result<ServeReport> {
     let spec = &model.w.spec;
     anyhow::ensure!(cfg.max_batch >= 1, "serve wants max_batch >= 1");
+    anyhow::ensure!(cfg.prefill_chunk >= 1, "serve wants prefill_chunk >= 1");
     let mut arena = KvArena::for_spec(spec, cfg.n_pages, cfg.page)?;
     let mut prefix = PrefixCache::new(cfg.page);
     let is_opt = spec.family == "opt";
@@ -251,6 +274,28 @@ pub fn serve(
             );
         }
         max_batch_seen = max_batch_seen.max(active.len());
+
+        // ---- chunked prefill: sessions still >= 2 tokens from the end
+        // of their prompt bulk-feed prompt tokens (never the final one —
+        // its forward produces the first sampling logits and stays on
+        // the lane path) before contributing their lane token below.
+        // Admission already reserved every page this can grow into.
+        if cfg.prefill_chunk > 1 {
+            for s in active.iter_mut() {
+                let t_prompt = s.prompt.len();
+                if s.fed + 1 < t_prompt {
+                    let c = (cfg.prefill_chunk - 1).min(t_prompt - 1 - s.fed);
+                    src.rewind()?;
+                    decode_chunk_paged(
+                        &mut src,
+                        &mut arena,
+                        &mut s.kv,
+                        &s.prompt[s.fed..s.fed + c],
+                    )?;
+                    s.fed += c;
+                }
+            }
+        }
 
         // ---- one batched step: every active session advances one token
         ticks += 1;

@@ -103,19 +103,19 @@ fn serve_bit_identical_to_sequential_across_compositions() {
             let _g = pool::enter(pool::serial());
             sequential_reference(&pw, &reqs)
         };
-        for (page, max_batch, workers) in [
-            (1usize, 1usize, 1usize),
-            (1, 3, 1),
-            (3, 1, 1),
-            (3, 2, 1),
-            (3, 6, 1),
-            (8, 3, 1),
-            (3, 3, 4),
-            (8, 6, 4),
+        for (page, max_batch, workers, prefill_chunk) in [
+            (1usize, 1usize, 1usize, 1usize),
+            (1, 3, 1, 2),
+            (3, 1, 1, 4),
+            (3, 2, 1, 3),
+            (3, 6, 1, 2),
+            (8, 3, 1, 4),
+            (3, 3, 4, 1),
+            (8, 6, 4, 4),
         ] {
             let _g = pool::enter(Arc::new(pool::Pool::new(workers)));
             let n_pages = 64;
-            let cfg = ServeConfig { page, n_pages, max_batch, prefix_cache: true };
+            let cfg = ServeConfig { page, n_pages, max_batch, prefix_cache: true, prefill_chunk };
             let report = serve(&pw, &reqs, &cfg).unwrap();
             assert_eq!(report.outputs.len(), reqs.len());
             for (o, want) in report.outputs.iter().zip(&expect) {
@@ -156,11 +156,18 @@ fn session_output_independent_of_batch_neighbors() {
     let solo: Vec<Vec<i32>> = reqs
         .iter()
         .map(|r| {
-            let cfg = ServeConfig { page: 4, n_pages: 32, max_batch: 1, prefix_cache: false };
+            let cfg = ServeConfig {
+                page: 4,
+                n_pages: 32,
+                max_batch: 1,
+                prefix_cache: false,
+                prefill_chunk: 2,
+            };
             serve(&pw, std::slice::from_ref(r), &cfg).unwrap().outputs[0].tokens.clone()
         })
         .collect();
-    let cfg = ServeConfig { page: 4, n_pages: 32, max_batch: 5, prefix_cache: false };
+    let cfg =
+        ServeConfig { page: 4, n_pages: 32, max_batch: 5, prefix_cache: false, prefill_chunk: 3 };
     let batched = serve(&pw, &reqs, &cfg).unwrap();
     for (o, want) in batched.outputs.iter().zip(&solo) {
         assert_eq!(&o.tokens, want, "session {}: neighbors perturbed its output", o.id);
@@ -191,7 +198,7 @@ fn prefix_hit_bit_identical_to_cold_prefill() {
         .collect();
     let expect = sequential_reference(&pw, &reqs);
     let page = 2;
-    let cfg = ServeConfig { page, n_pages: 32, max_batch: 1, prefix_cache: true };
+    let cfg = ServeConfig { page, n_pages: 32, max_batch: 1, prefix_cache: true, prefill_chunk: 2 };
     let report = serve(&pw, &reqs, &cfg).unwrap();
     for (o, want) in report.outputs.iter().zip(&expect) {
         assert_eq!(&o.tokens, want, "session {}: prefix hit changed the bits", o.id);
@@ -224,7 +231,7 @@ fn arena_pages_are_reused_across_waves() {
     let reqs = toy_requests(&spec, 9);
     let page = 2;
     let max_batch = 2;
-    let cfg = ServeConfig { page, n_pages: 48, max_batch, prefix_cache: false };
+    let cfg = ServeConfig { page, n_pages: 48, max_batch, prefix_cache: false, prefill_chunk: 4 };
     let report = serve(&pw, &reqs, &cfg).unwrap();
     let total: usize = reqs
         .iter()
@@ -268,15 +275,21 @@ fn serve_rejects_unservable_requests_up_front() {
 
     // needs more pages than the whole arena
     let big = ServeRequest { prompt: vec![1; 10], max_new: 10, sampler: Sampler::Greedy, seed: 0 };
-    let cfg = ServeConfig { page: 2, n_pages: 4, max_batch: 2, prefix_cache: true };
+    let cfg = ServeConfig { page: 2, n_pages: 4, max_batch: 2, prefix_cache: true, prefill_chunk: 2 };
     let err = serve(&pw, &[ok.clone(), big], &cfg).unwrap_err();
     assert!(
         format!("{err:#}").contains("rejected before any forward work"),
         "{err:#}"
     );
 
+    // a zero prefill chunk is a config error, not an infinite stall
+    let bad_cfg = ServeConfig { prefill_chunk: 0, ..cfg };
+    let err = serve(&pw, std::slice::from_ref(&ok), &bad_cfg).unwrap_err();
+    assert!(format!("{err:#}").contains("prefill_chunk"), "{err:#}");
+
     // empty prompt / zero generation / out-of-vocab token
-    let cfg = ServeConfig { page: 4, n_pages: 32, max_batch: 2, prefix_cache: true };
+    let cfg =
+        ServeConfig { page: 4, n_pages: 32, max_batch: 2, prefix_cache: true, prefill_chunk: 1 };
     let empty = ServeRequest { prompt: vec![], ..ok.clone() };
     assert!(format!("{:#}", serve(&pw, &[empty], &cfg).unwrap_err()).contains("empty prompt"));
     let zero = ServeRequest { max_new: 0, ..ok.clone() };
@@ -293,13 +306,15 @@ fn serve_rejects_unservable_requests_up_front() {
         sampler: Sampler::Greedy,
         seed: 0,
     };
-    let cfg = ServeConfig { page: 8, n_pages: 64, max_batch: 1, prefix_cache: false };
+    let cfg =
+        ServeConfig { page: 8, n_pages: 64, max_batch: 1, prefix_cache: false, prefill_chunk: 4 };
     let err = serve(&opw, &[long], &cfg).unwrap_err();
     assert!(format!("{err:#}").contains("learned positions"), "{err:#}");
 
     // ...and a request that merely has to WAIT for pages is fine: the
     // arena fits one session at a time, the queue drains in waves
-    let tight = ServeConfig { page: 2, n_pages: 2, max_batch: 4, prefix_cache: false };
+    let tight =
+        ServeConfig { page: 2, n_pages: 2, max_batch: 4, prefix_cache: false, prefill_chunk: 3 };
     let reqs = vec![ok.clone(), ok.clone(), ok];
     let expect = sequential_reference(&pw, &reqs);
     let report = serve(&pw, &reqs, &tight).unwrap();
@@ -338,6 +353,31 @@ fn oversized_generation_errs_before_prefill() {
     let g2 = decode::generate_src(&mut pw.source(), &prompt, &opts).unwrap();
     assert_eq!(g.tokens.data, g2.tokens.data);
     assert_eq!(g.generated, 2);
+}
+
+/// An empty prompt — zero tokens per sequence, or zero sequences — must
+/// be a proper `Err` before any prefill work, on both entry points.
+/// (Previously `[1, 0]` reached prefill and panicked inside embedding.)
+#[test]
+fn empty_prompt_rejected_before_prefill() {
+    let spec = toy_spec("llama");
+    let w = Weights::init(&spec, 13);
+    let pw = PackedWeights::new(w);
+    let opts = GenerateOpts { max_new: 2, sampler: Sampler::Greedy, seed: 0 };
+    for shape in [vec![1usize, 0usize], vec![0, 3], vec![0, 0]] {
+        let prompt = IntTensor::new(shape.clone(), vec![]);
+        let err = decode::generate_src(&mut pw.source(), &prompt, &opts).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rejected before prefill"), "shape {shape:?}: {msg}");
+
+        let mut cache = KvCache::for_spec(&spec, 1, 8).unwrap();
+        let err =
+            decode::generate_with_cache_src(&mut pw.source(), &prompt, &opts, &mut cache)
+                .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rejected before prefill"), "shape {shape:?}: {msg}");
+        assert_eq!(cache.len(), 0, "the rejected call must not touch the cache");
+    }
 }
 
 // ------------------------------------------- regression: NaN-proof sampling

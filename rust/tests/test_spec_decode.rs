@@ -1,0 +1,430 @@
+//! Speculative-decoding contract: greedy speculative generation is
+//! **bit-identical** to target-only `generate` — for every draft
+//! (faithful s=0 clone, genuinely sliced compacts, even a draft built
+//! from unrelated weights), every `draft_k`, both families, at every
+//! pool width — because each committed token is a target argmax and the
+//! chunked verification forward is bitwise the chunk≡steps contract.
+//! Plus: the sampled path is seed-deterministic, an s=0 draft is always
+//! accepted, mismatched drafts and malformed requests are proper
+//! `Err`s, `decode_chunk_src` ≡ sequential `decode_step_src` bitwise,
+//! and `KvCache::truncate` rolls back to a state bit-identical to
+//! never having decoded past it.
+
+use fasp::model::compact::{build_params, compact_from_mask};
+use fasp::model::decode::{
+    self, decode_chunk_src, decode_step_src, prefill_src, GenerateOpts, KvCache, Sampler,
+};
+use fasp::model::spec_decode::{generate_speculative_src, SpecOpts};
+use fasp::model::{DenseParams, PruneMask, Weights};
+use fasp::runtime::manifest::LayerDims;
+use fasp::runtime::ModelSpec;
+use fasp::tensor::{IntTensor, Tensor};
+use fasp::util::pool;
+use fasp::util::rng::Rng;
+use std::sync::Arc;
+
+fn bits_eq(a: &Tensor, b: &Tensor) -> bool {
+    a.shape == b.shape
+        && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn row_bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Ragged (compact-style) toy spec with one fully sliced head — the
+/// chunked verification forward must hold exactly where the OV slicing
+/// bites (same shape family as `test_decode`'s toy).
+fn toy_spec(family: &str) -> ModelSpec {
+    let layer_dims = vec![
+        LayerDims { d_ff: 20, d_ov: 10, head_splits: vec![6, 4] },
+        LayerDims { d_ff: 12, d_ov: 5, head_splits: vec![5, 0] },
+        LayerDims { d_ff: 16, d_ov: 16, head_splits: vec![8, 8] },
+    ];
+    let params = build_params(family, 16, 3, 48, 24, &layer_dims);
+    ModelSpec {
+        name: format!("spec_toy_{family}"),
+        family: family.into(),
+        d_model: 16,
+        n_heads: 2,
+        n_layers: 3,
+        d_ff: 20,
+        vocab: 48,
+        seq: 24,
+        batch: 2,
+        params,
+        layer_dims,
+    }
+}
+
+/// Dense-uniform toy spec — the shape `compact_from_mask` prunes from.
+fn uniform_spec(family: &str, name: &str, vocab: usize) -> ModelSpec {
+    let layer_dims: Vec<LayerDims> = (0..3)
+        .map(|_| LayerDims { d_ff: 20, d_ov: 16, head_splits: vec![8, 8] })
+        .collect();
+    let params = build_params(family, 16, 3, vocab, 24, &layer_dims);
+    ModelSpec {
+        name: name.into(),
+        family: family.into(),
+        d_model: 16,
+        n_heads: 2,
+        n_layers: 3,
+        d_ff: 20,
+        vocab,
+        seq: 24,
+        batch: 2,
+        params,
+        layer_dims,
+    }
+}
+
+/// Compact draft pruning the TAIL `pct`% of FFN units and per-head OV
+/// dims — the same collision-free slices the bench uses.
+fn tail_draft(base: &Weights, pct: usize, name: &str) -> Weights {
+    let spec = &base.spec;
+    let dh = spec.head_dim();
+    let mut mask = PruneMask::full(spec);
+    let fc = spec.d_ff * pct / 100;
+    let vc = dh * pct / 100;
+    for l in 0..spec.n_layers {
+        for j in 0..fc {
+            mask.layers[l].ffn[spec.d_ff - 1 - j] = false;
+        }
+        for hi in 0..spec.n_heads {
+            for j in 0..vc {
+                mask.layers[l].ov[hi * dh + dh - 1 - j] = false;
+            }
+        }
+    }
+    compact_from_mask(base, &mask, name).unwrap().weights
+}
+
+fn random_prompt(b: usize, t: usize, vocab: usize, seed: u64) -> IntTensor {
+    let mut rng = Rng::new(seed);
+    IntTensor::new(vec![b, t], (0..b * t).map(|_| rng.below(vocab) as i32).collect())
+}
+
+// -------------------------------------------------- greedy losslessness
+
+/// The hard receipt: greedy speculative ≡ target-only `generate`, token
+/// for token at every position, across draft sparsities (a faithful
+/// tail-sliced family and a draft from UNRELATED weights — acceptance
+/// near zero, identity must still hold), k ∈ {1, 2, 4, 8}, both
+/// families, pool widths 1 and 4.
+#[test]
+fn greedy_speculative_bit_identical_to_generate() {
+    for family in ["llama", "opt"] {
+        let tspec = toy_spec(family);
+        let tw = Weights::init(&tspec, 21);
+        // drafts share only the token space with the ragged target
+        let base = Weights::init(&uniform_spec(family, "spec_draft_base", tspec.vocab), 77);
+        let stranger = Weights::init(&uniform_spec(family, "spec_draft_odd", tspec.vocab), 5);
+        let drafts = [
+            ("s30", tail_draft(&base, 30, "spec_d30")),
+            ("s50", tail_draft(&base, 50, "spec_d50")),
+            ("unrelated", stranger),
+        ];
+        let prompt = random_prompt(1, 5, tspec.vocab, 42);
+        let opts = GenerateOpts { max_new: 12, sampler: Sampler::Greedy, seed: 0 };
+        for workers in [1usize, 4] {
+            let _g = pool::enter(Arc::new(pool::Pool::new(workers)));
+            let want = decode::generate_src(&mut DenseParams(&tw), &prompt, &opts).unwrap();
+            for (label, dw) in &drafts {
+                for k in [1usize, 2, 4, 8] {
+                    let sopts = SpecOpts {
+                        max_new: 12,
+                        draft_k: k,
+                        sampler: Sampler::Greedy,
+                        seed: 0,
+                    };
+                    let g = generate_speculative_src(
+                        &mut DenseParams(&tw),
+                        &mut DenseParams(dw),
+                        &prompt,
+                        &sopts,
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        g.tokens.data, want.tokens.data,
+                        "{family} draft={label} k={k} w={workers}: speculative \
+                         greedy diverged from target-only generate"
+                    );
+                    assert_eq!(g.tokens.shape, vec![1, 17]);
+                    assert_eq!(g.prompt_len, 5);
+                    assert_eq!(g.generated, 12);
+                    assert!(g.accepted <= g.proposed, "accounting: {label} k={k}");
+                    assert!(g.chunks >= 1);
+                }
+            }
+        }
+    }
+}
+
+/// A sparsity-0 draft is the target bit for bit — every proposal passes
+/// the argmax check, acceptance is exactly 1.0, and the OV-sliced
+/// drafts hold strictly smaller caches at the same capacity.
+#[test]
+fn zero_sparsity_draft_accepts_everything() {
+    let spec = uniform_spec("llama", "spec_s0_base", 48);
+    let w = Weights::init(&spec, 13);
+    let clone = tail_draft(&w, 0, "spec_s0");
+    assert_eq!(w.packed.data, clone.packed.data, "s=0 export must be bit-identical");
+    let prompt = random_prompt(1, 5, spec.vocab, 3);
+    let opts = SpecOpts { max_new: 12, draft_k: 4, sampler: Sampler::Greedy, seed: 0 };
+    let g = generate_speculative_src(
+        &mut DenseParams(&w),
+        &mut DenseParams(&clone),
+        &prompt,
+        &opts,
+    )
+    .unwrap();
+    assert!(g.proposed > 0);
+    assert_eq!(g.accepted, g.proposed, "a faithful draft can never be rejected");
+    assert_eq!(g.acceptance_rate(), 1.0);
+    let want = decode::generate_src(
+        &mut DenseParams(&w),
+        &prompt,
+        &GenerateOpts { max_new: 12, sampler: Sampler::Greedy, seed: 0 },
+    )
+    .unwrap();
+    assert_eq!(g.tokens.data, want.tokens.data);
+    assert_eq!(
+        g.target_kv_bytes, g.draft_kv_bytes,
+        "s=0 keeps the full OV dims — equal caches"
+    );
+
+    // a 50%-OV-sliced draft of the same base caches strictly less
+    let half = tail_draft(&w, 50, "spec_s50_kv");
+    let g2 = generate_speculative_src(
+        &mut DenseParams(&w),
+        &mut DenseParams(&half),
+        &prompt,
+        &opts,
+    )
+    .unwrap();
+    assert!(
+        g2.draft_kv_bytes < g2.target_kv_bytes,
+        "sliced draft kv {} !< target kv {}",
+        g2.draft_kv_bytes,
+        g2.target_kv_bytes
+    );
+    assert_eq!(g2.tokens.data, want.tokens.data, "sliced draft still lossless");
+}
+
+// ------------------------------------------------------- sampled path
+
+/// The sampled (top-k) path replays bit-for-bit under the same seed,
+/// and every committed token stays in-vocab.
+#[test]
+fn sampled_speculative_is_seed_deterministic() {
+    let spec = uniform_spec("llama", "spec_topk_base", 48);
+    let w = Weights::init(&spec, 31);
+    let draft = tail_draft(&w, 50, "spec_topk_d50");
+    let prompt = random_prompt(1, 4, spec.vocab, 8);
+    let opts = SpecOpts {
+        max_new: 10,
+        draft_k: 3,
+        sampler: Sampler::TopK { k: 5, temperature: 0.8 },
+        seed: 1234,
+    };
+    let a = generate_speculative_src(
+        &mut DenseParams(&w),
+        &mut DenseParams(&draft),
+        &prompt,
+        &opts,
+    )
+    .unwrap();
+    let b = generate_speculative_src(
+        &mut DenseParams(&w),
+        &mut DenseParams(&draft),
+        &prompt,
+        &opts,
+    )
+    .unwrap();
+    assert_eq!(a.tokens.data, b.tokens.data, "same seed must replay");
+    assert_eq!(a.accepted, b.accepted);
+    assert_eq!(a.chunks, b.chunks);
+    for &t in &a.tokens.data {
+        assert!(t >= 0 && (t as usize) < spec.vocab, "out-of-vocab token {t}");
+    }
+}
+
+// ------------------------------------------------------ failure modes
+
+/// Drafts that cannot speak for the target, and malformed requests, are
+/// proper `Err`s before any forward work.
+#[test]
+fn mismatched_or_malformed_requests_are_rejected() {
+    let tspec = toy_spec("llama");
+    let tw = Weights::init(&tspec, 2);
+    let prompt = random_prompt(1, 4, tspec.vocab, 1);
+    let opts = SpecOpts::default();
+
+    // draft with a different vocab can never share the token space
+    let other = Weights::init(&uniform_spec("llama", "spec_v32", 32), 3);
+    let err = generate_speculative_src(
+        &mut DenseParams(&tw),
+        &mut DenseParams(&other),
+        &prompt,
+        &opts,
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("token space"), "{err:#}");
+
+    let good = Weights::init(&uniform_spec("llama", "spec_v48", 48), 3);
+
+    // batched prompts would serialize on the slowest lane — rejected
+    let wide = random_prompt(2, 4, tspec.vocab, 1);
+    let err = generate_speculative_src(
+        &mut DenseParams(&tw),
+        &mut DenseParams(&good),
+        &wide,
+        &opts,
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("one sequence"), "{err:#}");
+
+    // empty prompt rejected before prefill (shared generate validation)
+    let empty = IntTensor::new(vec![1, 0], vec![]);
+    let err = generate_speculative_src(
+        &mut DenseParams(&tw),
+        &mut DenseParams(&good),
+        &empty,
+        &opts,
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("rejected before prefill"), "{err:#}");
+
+    // degenerate knobs
+    for (max_new, draft_k) in [(0usize, 4usize), (8, 0)] {
+        let bad = SpecOpts { max_new, draft_k, ..SpecOpts::default() };
+        assert!(
+            generate_speculative_src(
+                &mut DenseParams(&tw),
+                &mut DenseParams(&good),
+                &prompt,
+                &bad,
+            )
+            .is_err(),
+            "max_new={max_new} draft_k={draft_k} must be rejected"
+        );
+    }
+}
+
+// --------------------------------------------- chunk ≡ steps (bitwise)
+
+/// `decode_chunk_src` is bitwise the sequential `decode_step_src` path:
+/// a chunk of one reproduces a single step exactly, and every row of a
+/// multi-token chunk equals the corresponding step's logits — on both
+/// families, on the ragged toy where the OV slicing bites.
+#[test]
+fn chunk_logits_bitwise_match_sequential_steps() {
+    for family in ["llama", "opt"] {
+        let spec = toy_spec(family);
+        let w = Weights::init(&spec, 9);
+        let prompt = random_prompt(1, 4, spec.vocab, 17);
+        let seq: Vec<i32> = random_prompt(1, 6, spec.vocab, 29).data;
+
+        let mut c_step = KvCache::for_spec(&spec, 1, 10).unwrap();
+        let mut c_chunk = KvCache::for_spec(&spec, 1, 10).unwrap();
+        prefill_src(&mut DenseParams(&w), &prompt, &mut c_step).unwrap();
+        prefill_src(&mut DenseParams(&w), &prompt, &mut c_chunk).unwrap();
+
+        // chunk of 1 ≡ decode_step, repeated
+        for &tok in &seq[..2] {
+            let t = IntTensor::new(vec![1, 1], vec![tok]);
+            let ls = decode_step_src(&mut DenseParams(&w), &t, &mut c_step).unwrap();
+            let lc = decode_chunk_src(&mut DenseParams(&w), &t, &mut c_chunk).unwrap();
+            assert!(
+                row_bits_eq(ls.row(0), lc.row(0)),
+                "{family}: chunk-of-1 diverged from decode_step"
+            );
+            assert_eq!(c_step.len(), c_chunk.len());
+        }
+
+        // one 4-token chunk ≡ four steps, row by row
+        let tail = &seq[2..6];
+        let mut step_logits: Vec<Tensor> = Vec::new();
+        for &tok in tail {
+            let t = IntTensor::new(vec![1, 1], vec![tok]);
+            step_logits.push(decode_step_src(&mut DenseParams(&w), &t, &mut c_step).unwrap());
+        }
+        let chunk = IntTensor::new(vec![1, 4], tail.to_vec());
+        let lc = decode_chunk_src(&mut DenseParams(&w), &chunk, &mut c_chunk).unwrap();
+        assert_eq!(c_chunk.len(), c_step.len());
+        for (r, ls) in step_logits.iter().enumerate() {
+            assert!(
+                row_bits_eq(ls.row(0), lc.row(r)),
+                "{family}: chunk row {r} diverged from its sequential step"
+            );
+        }
+
+        // chunk overflow past capacity is loud and leaves no residue
+        let over = IntTensor::new(vec![1, 1], vec![seq[0]]);
+        let len_before = c_chunk.len();
+        let err = decode_chunk_src(&mut DenseParams(&w), &over, &mut c_chunk).unwrap_err();
+        assert!(format!("{err:#}").contains("overflow"), "{err:#}");
+        assert_eq!(c_chunk.len(), len_before);
+    }
+}
+
+// ------------------------------------------------- truncate (property)
+
+/// Rolling a cache back with `truncate(p)` and re-decoding is
+/// bit-identical to never having decoded past `p` — at several rollback
+/// points, both families, pool widths 1 and 4; rolling *forward* is a
+/// proper `Err` that leaves the cache untouched.
+#[test]
+fn truncate_then_redecode_is_bit_identical() {
+    for family in ["llama", "opt"] {
+        let spec = toy_spec(family);
+        let w = Weights::init(&spec, 23);
+        let t0 = 4;
+        let t_total = 12;
+        let prompt = random_prompt(1, t0, spec.vocab, 7);
+        let seq: Vec<i32> = random_prompt(1, t_total - t0, spec.vocab, 11).data;
+        for workers in [1usize, 4] {
+            let _g = pool::enter(Arc::new(pool::Pool::new(workers)));
+            let mut cache = KvCache::for_spec(&spec, 1, t_total).unwrap();
+            prefill_src(&mut DenseParams(&w), &prompt, &mut cache).unwrap();
+            // logits[i] = step logits after feeding seq[i] (cache len t0+i+1)
+            let mut logits: Vec<Tensor> = Vec::new();
+            for &tok in &seq {
+                let t = IntTensor::new(vec![1, 1], vec![tok]);
+                logits.push(decode_step_src(&mut DenseParams(&w), &t, &mut cache).unwrap());
+            }
+            assert_eq!(cache.len(), t_total);
+
+            for p in [t0, t0 + 3, t_total - 1] {
+                cache.truncate(p).unwrap();
+                assert_eq!(cache.len(), p);
+                for (i, &tok) in seq.iter().enumerate().skip(p - t0) {
+                    let t = IntTensor::new(vec![1, 1], vec![tok]);
+                    let l =
+                        decode_step_src(&mut DenseParams(&w), &t, &mut cache).unwrap();
+                    assert!(
+                        bits_eq(&l, &logits[i]),
+                        "{family} (w={workers}): re-decode after truncate({p}) \
+                         diverged at step {i}"
+                    );
+                }
+                assert_eq!(cache.len(), t_total);
+            }
+
+            // truncate can only roll back, never extend
+            let err = cache.truncate(t_total + 1).unwrap_err();
+            assert!(format!("{err:#}").contains("roll back"), "{err:#}");
+            assert_eq!(cache.len(), t_total, "failed truncate must not move the cache");
+
+            // truncate(0) resets far enough for a fresh prefill
+            cache.truncate(0).unwrap();
+            let l0 = prefill_src(&mut DenseParams(&w), &prompt, &mut cache).unwrap();
+            let mut fresh = KvCache::for_spec(&spec, 1, t_total).unwrap();
+            let lf = prefill_src(&mut DenseParams(&w), &prompt, &mut fresh).unwrap();
+            assert!(
+                bits_eq(&l0, &lf),
+                "{family} (w={workers}): prefill after truncate(0) diverged"
+            );
+        }
+    }
+}

@@ -36,12 +36,22 @@
 #      sequential generates at 8/64/256 concurrent sessions: tokens/sec,
 #      p50/p99 per-token latency, arena page residency — asserting
 #      batched strictly beats sequential with bit-identical per-session
-#      outputs) so backend-parallelism, shard-streaming, decode, packing
-#      and serve-scheduler regressions are diffable too.
+#      outputs)
+#      and BENCH_spec.json (speculative decoding with FASP-pruned
+#      drafts at 30/50/70% sparsity: tokens/sec vs target-only decode,
+#      acceptance rate vs draft sparsity, draft KV bytes — asserting
+#      greedy bit-identity at every point and a strict tokens/sec win at
+#      s=50) so backend-parallelism, shard-streaming, decode, packing,
+#      serve-scheduler and speculative-decode regressions are diffable
+#      too.
 #   6. a `fasp generate` smoke (deterministic --init weights) under both
 #      FASP_THREADS=1 and the default threaded backend — the CLI decode
 #      path must run end to end on both backends.
-#   7. a `fasp serve --check` smoke under both backends: the serve
+#   7. a `fasp generate --draft --check` smoke under both backends: a
+#      draft compact model is synthesized on the fly, decodes
+#      speculatively, and the greedy output is asserted bit-identical
+#      to target-only generate.
+#   8. a `fasp serve --check` smoke under both backends: the serve
 #      engine drives a self-generated session load end to end and
 #      re-verifies every session bit-identical to sequential generate.
 set -euo pipefail
@@ -67,6 +77,16 @@ echo "== fasp generate smoke (default threaded backend) =="
 cargo run --release --quiet -- generate \
   --model llama_tiny --init --prompt-len 8 --max-new 8 --fast
 
+echo "== fasp generate --draft smoke (FASP_THREADS=1, serial backend) =="
+FASP_THREADS=1 cargo run --release --quiet -- generate \
+  --model llama_tiny --init --prompt-len 8 --max-new 8 \
+  --draft llama_tiny_spec_draft --draft-sparsity 0.5 --draft-k 4 --check --fast
+
+echo "== fasp generate --draft smoke (default threaded backend) =="
+cargo run --release --quiet -- generate \
+  --model llama_tiny --init --prompt-len 8 --max-new 8 \
+  --draft llama_tiny_spec_draft --draft-sparsity 0.5 --draft-k 4 --check --fast
+
 echo "== fasp serve smoke (FASP_THREADS=1, serial backend) =="
 FASP_THREADS=1 cargo run --release --quiet -- serve \
   --model llama_tiny --init --sessions 6 --prompt-len 8 --max-new 6 --check --fast
@@ -89,3 +109,4 @@ echo "== verify OK =="
 [ -f BENCH_decode.json ] && echo "perf record: BENCH_decode.json"
 [ -f BENCH_pack.json ] && echo "perf record: BENCH_pack.json"
 [ -f BENCH_serve.json ] && echo "perf record: BENCH_serve.json"
+[ -f BENCH_spec.json ] && echo "perf record: BENCH_spec.json"
