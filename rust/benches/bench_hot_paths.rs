@@ -490,6 +490,7 @@ fn main() {
                 max_batch,
                 prefix_cache: true,
                 prefill_chunk: 4,
+                ..Default::default()
             };
             let cmp = fasp::eval::speed::compare_serve(
                 &manifest, model, &w, sessions, prompt_len, max_new, &cfg,

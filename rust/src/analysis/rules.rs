@@ -31,7 +31,7 @@ pub const CATALOG: &[(&str, &str)] = &[
     ),
     (
         "R1",
-        "unwrap/expect/panic in a request path (serve/, model/kv_arena.rs, model/decode.rs, model/spec_decode.rs, runtime/store.rs)",
+        "unwrap/expect/panic in a request path (serve/, fault/, model/kv_arena.rs, model/decode.rs, model/spec_decode.rs, runtime/store.rs)",
     ),
     (
         "P1",
@@ -62,6 +62,7 @@ impl Violation {
 /// Files where R1 (no panics in request paths) applies.
 fn r1_scope(rel: &str) -> bool {
     rel.starts_with("src/serve/")
+        || rel.starts_with("src/fault/")
         || rel == "src/model/kv_arena.rs"
         || rel == "src/model/decode.rs"
         || rel == "src/model/spec_decode.rs"
@@ -349,6 +350,7 @@ mod tests {
     fn r1_fires_only_in_request_paths() {
         let bad = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
         assert_eq!(rules(&lint("src/serve/engine.rs", bad)), vec!["R1"]);
+        assert_eq!(rules(&lint("src/fault/mod.rs", bad)), vec!["R1"]);
         assert_eq!(rules(&lint("src/runtime/store.rs", bad)), vec!["R1"]);
         assert_eq!(rules(&lint("src/model/decode.rs", bad)), vec!["R1"]);
         assert!(lint("src/prune/metric.rs", bad).is_empty()); // out of scope

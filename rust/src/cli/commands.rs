@@ -632,6 +632,7 @@ pub fn serve(args: &Args) -> Result<()> {
             max_new,
             sampler,
             seed: ctx.seed ^ i as u64,
+            ..Default::default()
         });
     }
 
@@ -646,6 +647,7 @@ pub fn serve(args: &Args) -> Result<()> {
         max_batch,
         prefix_cache: !args.has("no-prefix-cache"),
         prefill_chunk: args.get_usize("prefill-chunk", 4)?,
+        ..Default::default()
     };
 
     // pack once — every session decodes over this one shared plan
@@ -662,6 +664,12 @@ pub fn serve(args: &Args) -> Result<()> {
                 seed: r.seed,
             };
             let g = session.generate(&packed, &prompt, &opts)?;
+            anyhow::ensure!(
+                o.error.is_none(),
+                "serve session {} failed with no faults armed: {:?}",
+                o.id,
+                o.error
+            );
             anyhow::ensure!(
                 g.tokens.data == o.tokens,
                 "serve output for session {} diverged from sequential generate",
@@ -714,6 +722,218 @@ pub fn serve(args: &Args) -> Result<()> {
         ),
     ]);
     t.print();
+    Ok(())
+}
+
+/// `fasp chaos` — the graceful-degradation receipt. Drives the serve
+/// engine through a fault-free baseline plus two identically-seeded
+/// fault-plan runs (chaos + replay), probes the sharded weight store
+/// under injected corruption, prints the absorbed/fatal/shed/retry
+/// counters and writes `BENCH_chaos.json`. With `--check` it fails
+/// unless every surviving session is bit-identical to the fault-free
+/// run, the replay reproduces the identical fault trace and outputs,
+/// zero arena pages leak, a one-shot shard corruption is absorbed by
+/// the bounded re-read and a persistent truncation surfaces as `Err`.
+///
+/// The plan comes from `--plan`, else the `FASP_FAULTS` env var, else
+/// it is synthesized from `--seed` against the clean run's event
+/// census (pool fan-outs are width-dependent, so synthesis — not a
+/// fixed plan — is what keeps the smoke meaningful at FASP_THREADS=1).
+pub fn chaos(args: &Args) -> Result<()> {
+    use crate::util::json::Json;
+    let ctx = ctx_from(args)?;
+    let model = model_arg(args)?;
+    let sessions = args.get_usize("sessions", 6)?;
+    let prompt_len = args.get_usize("prompt-len", 8)?;
+    let max_new = args.get_usize("max-new", 6)?;
+    let page = args.get_usize("page", 4)?;
+    let max_batch = args.get_usize("max-batch", 4)?;
+    let n_pool = args.get_usize("faults", 2)?;
+    let m = &ctx.manifest;
+    anyhow::ensure!(sessions >= 2, "chaos wants --sessions >= 2 (survivors + victims)");
+
+    let (session, w) = if m.compact.contains_key(&model) {
+        (Session::new(m, &model)?, m.compact_weights(&model)?)
+    } else if args.has("init") {
+        let session = Session::new(m, &model)?;
+        let w = crate::model::Weights::init(&session.spec, ctx.seed);
+        (session, w)
+    } else {
+        let p = ctx.prepared(&model)?;
+        (p.session, p.weights)
+    };
+    let spec = session.spec.clone();
+    anyhow::ensure!(
+        spec.family != "opt" || prompt_len + max_new <= spec.seq + 1,
+        "OPT position embeddings cover {} positions; shrink --prompt-len/--max-new",
+        spec.seq
+    );
+
+    // explicit plan > FASP_FAULTS env > seeded synthesis in compare_chaos
+    let plan_override = match args.get("plan") {
+        Some(s) => Some(crate::fault::FaultPlan::parse(s)?),
+        None => crate::fault::FaultPlan::from_env()?,
+    };
+
+    // arena sizing as in `serve`; a bounded admission queue that sheds
+    // exactly one session is part of the receipt (deterministic in the
+    // clean and chaos runs alike, so survivors still compare equal)
+    let uniq = sessions / 2 + sessions % 2;
+    let pages_per = (prompt_len + max_new - 1 + page - 1) / page;
+    let auto = max_batch.min(sessions) * pages_per + uniq * (prompt_len / page) + pages_per;
+    let cfg = crate::serve::ServeConfig {
+        page,
+        n_pages: args.get_usize("pages", auto * 5 / 4 + 1)?,
+        max_batch,
+        prefix_cache: !args.has("no-prefix-cache"),
+        prefill_chunk: args.get_usize("prefill-chunk", 4)?,
+        queue_cap: args.get_usize("queue-cap", sessions - 1)?,
+        tick_retries: args.get_usize("tick-retries", 2)?,
+    };
+
+    let cmp = crate::eval::speed::compare_chaos(
+        m,
+        &model,
+        &w,
+        sessions,
+        prompt_len,
+        max_new,
+        &cfg,
+        plan_override.as_ref(),
+        n_pool,
+        ctx.seed,
+    )?;
+
+    // shard-store half of the receipt, in a throwaway staging dir
+    let stage = std::env::temp_dir().join(format!("fasp_chaos_{}", ctx.seed));
+    let probe = crate::eval::speed::chaos_shard_probe(&w, &stage);
+    std::fs::remove_dir_all(&stage).ok();
+    let probe = probe?;
+
+    let injected = cmp.injected_pool + cmp.injected_arena + 1; // +1: shard corrupt probe
+    let mut t = Table::new(
+        &format!(
+            "Chaos — {model} ({}), {sessions} sessions under plan \"{}\"",
+            session.backend().name(),
+            cmp.plan
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec![
+        "event census (clean)".into(),
+        format!(
+            "{} pool fan-outs / {} arena grows / {} shard reads",
+            cmp.pool_events, cmp.arena_events, probe.shard_events
+        ),
+    ]);
+    t.row(vec![
+        "faults injected".into(),
+        format!("{injected} ({} pool, {} arena, 1 shard)", cmp.injected_pool, cmp.injected_arena),
+    ]);
+    t.row(vec![
+        "sessions".into(),
+        format!(
+            "{} survived / {} failed ({} shed, {} deadline)",
+            cmp.survivors, cmp.failed_sessions, cmp.shed_sessions, cmp.deadline_failures
+        ),
+    ]);
+    t.row(vec![
+        "tick retries".into(),
+        format!("{} (shard re-reads: {})", cmp.tick_retries, probe.retries_absorbed),
+    ]);
+    t.row(vec![
+        "throughput".into(),
+        format!(
+            "{:.0} tok/s under faults vs {:.0} clean ({:.2}x)",
+            cmp.chaos_tokens_per_s, cmp.clean_tokens_per_s, cmp.throughput_ratio
+        ),
+    ]);
+    t.row(vec![
+        "survivors bit-identical".into(),
+        cmp.survivors_identical.to_string(),
+    ]);
+    t.row(vec!["replay bit-identical".into(), cmp.replay_identical.to_string()]);
+    t.row(vec!["leaked arena pages".into(), cmp.leaked_pages.to_string()]);
+    t.row(vec![
+        "shard probe".into(),
+        format!(
+            "one-shot corrupt absorbed: {} / persistent truncate is Err: {}",
+            probe.absorbed_ok, probe.fatal_is_err
+        ),
+    ]);
+    if !cmp.trace.is_empty() {
+        t.row(vec!["fault trace".into(), cmp.trace.join(", ")]);
+    }
+    t.print();
+
+    let record = Json::obj(vec![
+        ("bench", Json::Str("chaos".into())),
+        ("model", Json::Str(model.clone())),
+        ("seed", Json::Num(ctx.seed as f64)),
+        ("plan", Json::Str(cmp.plan.clone())),
+        ("sessions", Json::Num(sessions as f64)),
+        ("pool_events", Json::Num(cmp.pool_events as f64)),
+        ("arena_events", Json::Num(cmp.arena_events as f64)),
+        ("shard_events", Json::Num(probe.shard_events as f64)),
+        ("injected_pool", Json::Num(cmp.injected_pool as f64)),
+        ("injected_arena", Json::Num(cmp.injected_arena as f64)),
+        ("survivors", Json::Num(cmp.survivors as f64)),
+        ("failed_sessions", Json::Num(cmp.failed_sessions as f64)),
+        ("shed_sessions", Json::Num(cmp.shed_sessions as f64)),
+        ("deadline_failures", Json::Num(cmp.deadline_failures as f64)),
+        ("tick_retries", Json::Num(cmp.tick_retries as f64)),
+        ("shard_retries", Json::Num(probe.retries_absorbed as f64)),
+        ("clean_tokens_per_s", Json::Num(cmp.clean_tokens_per_s)),
+        ("chaos_tokens_per_s", Json::Num(cmp.chaos_tokens_per_s)),
+        ("throughput_ratio", Json::Num(cmp.throughput_ratio)),
+        ("survivors_identical", Json::Bool(cmp.survivors_identical)),
+        ("replay_identical", Json::Bool(cmp.replay_identical)),
+        ("leaked_pages", Json::Num(cmp.leaked_pages as f64)),
+        ("shard_absorbed_ok", Json::Bool(probe.absorbed_ok)),
+        ("shard_fatal_is_err", Json::Bool(probe.fatal_is_err)),
+        (
+            "trace",
+            Json::Arr(cmp.trace.iter().map(|s| Json::Str(s.clone())).collect()),
+        ),
+    ]);
+    let path = match args.get("json") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => crate::repo_root().join("BENCH_chaos.json"),
+    };
+    std::fs::write(&path, record.pretty())
+        .map_err(|e| anyhow::anyhow!("fasp chaos: write {}: {e}", path.display()))?;
+    println!("record -> {}", path.display());
+
+    if args.has("check") {
+        anyhow::ensure!(
+            cmp.survivors_identical,
+            "chaos check failed: a surviving session diverged from its fault-free run"
+        );
+        anyhow::ensure!(
+            cmp.replay_identical,
+            "chaos check failed: replaying the identical plan did not reproduce the \
+             identical fault trace and outputs"
+        );
+        anyhow::ensure!(
+            cmp.leaked_pages == 0,
+            "chaos check failed: {} arena page(s) leaked after drain",
+            cmp.leaked_pages
+        );
+        anyhow::ensure!(
+            probe.absorbed_ok,
+            "chaos check failed: one-shot shard corruption was not absorbed by the \
+             bounded re-read"
+        );
+        anyhow::ensure!(
+            probe.fatal_is_err,
+            "chaos check failed: persistent shard truncation did not surface as Err"
+        );
+        println!(
+            "check: {} survivor(s) bit-identical, replay bit-identical, 0 leaked \
+             pages, shard faults degrade gracefully",
+            cmp.survivors
+        );
+    }
     Ok(())
 }
 

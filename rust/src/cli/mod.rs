@@ -37,6 +37,17 @@ COMMANDS:
                                p50/p99 per-token latency, page residency
                                and (with --check) verifies every session
                                is bit-identical to sequential generate
+  chaos      --model M         deterministic fault-injection drill over the
+                               serve engine: a fault-free baseline, then the
+                               same load twice under one seeded fault plan
+                               (worker panics, KV-arena exhaustion) plus a
+                               shard-store probe (checksum corruption,
+                               truncation); reports faults absorbed vs fatal,
+                               shed/retry counters and throughput under
+                               faults, writes BENCH_chaos.json, and (with
+                               --check) asserts survivors bit-identical to
+                               the fault-free run, bit-identical replay and
+                               zero leaked arena pages
   zeroshot   --model M [--method X --sparsity S] zero-shot suites
   tables     --id table1|...|fig4|all            regenerate paper tables
   latency                      sliced decoder-layer latency sweep
@@ -91,11 +102,24 @@ COMMON OPTIONS:
   --check                (serve) replay and assert bit-identity: serve
                          sessions against sequential generate, and
                          (generate --draft) speculative greedy tokens
-                         against target-only generate
+                         against target-only generate; (chaos) assert the
+                         full graceful-degradation contract
+  --plan SPEC            (chaos) explicit fault plan, e.g.
+                         'pool@2=panic,arena@1=exhaust*always'
+                         (site@nth=kind[:arg][*count]; overrides both the
+                         FASP_FAULTS env var and seeded synthesis)
+  --faults N             (chaos) pool-panic faults to synthesize when no
+                         explicit plan is given (default 2)
+  --queue-cap N          (chaos) admission-queue bound; arrivals beyond it
+                         are deterministically shed from the back
+                         (default sessions-1: sheds exactly one)
+  --tick-retries N       (chaos) bounded retries for a faulted scheduler
+                         tick before the affected sessions are retired
+                         (default 2)
   --stream               (generate) decode a sharded compact model from
                          its shard store (layer-streaming weights)
   --sequential           re-capture activations after each pruned layer
-  --json PATH            (lint) write LINT_REPORT.json somewhere else
+  --json PATH            (lint/chaos) write the JSON report somewhere else
   --report               persist a JSON run record under results/reports/
   --out PATH             save the pruned weights as a checkpoint
   --seed N               experiment seed (default 42)
@@ -108,6 +132,11 @@ ENVIRONMENT:
                          (one packed .ftns, default) or 'sharded' (one
                          .ftns per layer, stream-loadable); exported
                          weights are bit-identical either way
+  FASP_FAULTS=PLAN       arm a fault plan for any command (grammar as
+                         --plan); faults fire on exact event counters
+                         (the Nth shard read / pool fan-out / arena
+                         grow), never on wall clock, so every injected
+                         failure replays bit-identically
 
 Artifacts must exist (`make artifacts`). Checkpoints are cached under
 checkpoints/ and reused across runs.
@@ -124,6 +153,7 @@ pub fn run() -> Result<()> {
         Some("shard") => commands::shard(&args),
         Some("generate") => commands::generate(&args),
         Some("serve") => commands::serve(&args),
+        Some("chaos") => commands::chaos(&args),
         Some("zeroshot") => commands::zeroshot(&args),
         Some("tables") => commands::tables(&args),
         Some("latency") => commands::latency(&args),

@@ -33,6 +33,13 @@
 //!   sessions over one shared plan vs N sequential `generate` calls —
 //!   strictly higher throughput with **bit-identical** per-session
 //!   tokens, plus p50/p99 per-token latency and arena page residency.
+//! * [`compare_chaos`] / [`chaos_shard_probe`] — the
+//!   graceful-degradation receipt (`BENCH_chaos.json`): the same serve
+//!   load fault-free vs under a seeded `fault::FaultPlan` — survivors
+//!   bit-identical, faulted sessions per-session errors, zero leaked
+//!   pages, bit-identical replay — plus the shard-path probe (one-shot
+//!   corruption absorbed by bounded re-reads, persistent truncation a
+//!   proper `Err`).
 //! * [`compare_speculative`] — the speculative-decoding receipt
 //!   (`BENCH_spec.json`): target-only greedy `generate` vs
 //!   draft-propose/target-verify with compact exports at several
@@ -423,6 +430,7 @@ pub fn compare_serve(
                 max_new,
                 sampler: Sampler::Greedy,
                 seed: 0x5eed ^ i as u64,
+                ..Default::default()
             }
         })
         .collect();
@@ -451,7 +459,7 @@ pub fn compare_serve(
             .outputs
             .iter()
             .zip(&seq_tokens)
-            .all(|(o, s)| &o.tokens == s);
+            .all(|(o, s)| o.error.is_none() && &o.tokens == s);
 
     Ok(ServeCompare {
         sessions,
@@ -469,6 +477,220 @@ pub fn compare_serve(
         kv_bytes: report.kv_bytes,
         identical,
     })
+}
+
+/// The graceful-degradation receipt (`BENCH_chaos.json`): a serve load
+/// under a seeded fault plan vs the same load fault-free.
+pub struct ChaosCompare {
+    pub sessions: usize,
+    /// Canonical rendering of the plan the chaos runs used.
+    pub plan: String,
+    /// Pool fan-out / allocating arena-grow events of the clean run —
+    /// the event space faults were placed in.
+    pub pool_events: u64,
+    pub arena_events: u64,
+    pub injected_pool: u64,
+    pub injected_arena: u64,
+    pub clean_tokens_per_s: f64,
+    pub chaos_tokens_per_s: f64,
+    /// chaos / clean throughput (absorbed faults cost retries, so < 1
+    /// is expected; the receipt is that it is finite and nonzero, i.e.
+    /// the engine kept serving).
+    pub throughput_ratio: f64,
+    pub tick_retries: usize,
+    pub failed_sessions: usize,
+    pub shed_sessions: usize,
+    pub deadline_failures: usize,
+    /// Sessions that finished without error under faults.
+    pub survivors: usize,
+    /// Every survivor's tokens bitwise equal to its fault-free run.
+    pub survivors_identical: bool,
+    pub leaked_pages: usize,
+    /// Re-running the identical plan reproduced the identical fault
+    /// trace, counters and outputs.
+    pub replay_identical: bool,
+    /// `site@event=kind` fire log of the chaos run.
+    pub trace: Vec<String>,
+}
+
+/// Drive `sessions` requests through the serve engine three times over
+/// one packed plan: fault-free under a *counting* scope (the baseline
+/// and the event census), then twice under the same seeded fault plan
+/// (chaos + replay). Verifies the tentpole contract: survivors
+/// bit-identical to fault-free, faulted sessions per-session errors,
+/// clean drain, and bit-identical replay of the whole fault run.
+#[allow(clippy::too_many_arguments)]
+pub fn compare_chaos(
+    manifest: &Manifest,
+    model: &str,
+    w: &Weights,
+    sessions: usize,
+    prompt_len: usize,
+    max_new: usize,
+    cfg: &crate::serve::ServeConfig,
+    plan_override: Option<&crate::fault::FaultPlan>,
+    n_pool: usize,
+    seed: u64,
+) -> Result<ChaosCompare> {
+    use crate::fault::{self, FaultPlan, Site};
+    anyhow::ensure!(sessions >= 1, "compare_chaos wants sessions >= 1");
+    let session = Session::new(manifest, model)?;
+    let spec = session.spec.clone();
+    let uniq = sessions / 2 + sessions % 2;
+    let toks = Dataset::new(Corpus::new(spec.vocab, 0x5e57e), uniq, prompt_len, 2)
+        .train_batch(0)
+        .tokens;
+    let requests: Vec<crate::serve::ServeRequest> = (0..sessions)
+        .map(|i| {
+            let row = i % uniq;
+            crate::serve::ServeRequest {
+                prompt: toks.data[row * prompt_len..(row + 1) * prompt_len].to_vec(),
+                max_new,
+                sampler: Sampler::Greedy,
+                seed: 0x5eed ^ i as u64,
+                ..Default::default()
+            }
+        })
+        .collect();
+    let params = session.pack(&w.packed)?;
+
+    // warmup: touch every packed panel before anything is timed
+    let opts0 = GenerateOpts { max_new, sampler: Sampler::Greedy, seed: 0 };
+    let warm = IntTensor::new(vec![1, prompt_len], requests[0].prompt.clone());
+    session.generate(&params, &warm, &opts0)?;
+
+    // 1. fault-free baseline under a counting scope: same config (so a
+    // bounded queue sheds identically), zero faults, event census
+    let (clean, pool_events, arena_events) = {
+        let scope = fault::install(&FaultPlan::default());
+        let rep = session.serve(&params, &requests, cfg)?;
+        let r = scope.report();
+        (rep, r.events_at(Site::Pool), r.events_at(Site::Arena))
+    };
+    anyhow::ensure!(
+        clean.failed_sessions == clean.shed_sessions,
+        "chaos baseline: {} session(s) failed with no faults armed",
+        clean.failed_sessions - clean.shed_sessions
+    );
+
+    // 2. the plan: explicit override, else synthesized from the census
+    let plan = match plan_override {
+        Some(p) => p.clone(),
+        None => fault::synth_serve_plan(seed, pool_events, arena_events, n_pool),
+    };
+
+    // 3 + 4. chaos run and its replay, identical plan
+    let mut run = || {
+        let scope = fault::install(&plan);
+        let rep = session.serve(&params, &requests, cfg)?;
+        let fr = scope.report();
+        Ok::<_, anyhow::Error>((rep, fr))
+    };
+    let (chaos, fr1) = run()?;
+    let (replay, fr2) = run()?;
+
+    let replay_identical = fr1 == fr2
+        && chaos.outputs.len() == replay.outputs.len()
+        && chaos
+            .outputs
+            .iter()
+            .zip(&replay.outputs)
+            .all(|(a, b)| a.id == b.id && a.tokens == b.tokens && a.error == b.error)
+        && chaos.failed_sessions == replay.failed_sessions
+        && chaos.shed_sessions == replay.shed_sessions
+        && chaos.deadline_failures == replay.deadline_failures
+        && chaos.tick_retries == replay.tick_retries
+        && chaos.leaked_pages == replay.leaked_pages;
+
+    // survivors must be bitwise the fault-free run (outputs are ordered
+    // by request id in both reports)
+    let survivors = chaos.outputs.iter().filter(|o| o.error.is_none()).count();
+    let survivors_identical = chaos.outputs.len() == clean.outputs.len()
+        && chaos.outputs.iter().zip(&clean.outputs).all(|(c, cl)| {
+            c.error.is_some() || (cl.error.is_none() && c.tokens == cl.tokens)
+        });
+
+    Ok(ChaosCompare {
+        sessions,
+        plan: plan.render(),
+        pool_events,
+        arena_events,
+        injected_pool: fr1.injected_at(Site::Pool),
+        injected_arena: fr1.injected_at(Site::Arena),
+        clean_tokens_per_s: clean.tokens_per_s,
+        chaos_tokens_per_s: chaos.tokens_per_s,
+        throughput_ratio: chaos.tokens_per_s / clean.tokens_per_s.max(1e-12),
+        tick_retries: chaos.tick_retries,
+        failed_sessions: chaos.failed_sessions,
+        shed_sessions: chaos.shed_sessions,
+        deadline_failures: chaos.deadline_failures,
+        survivors,
+        survivors_identical,
+        leaked_pages: chaos.leaked_pages,
+        replay_identical,
+        trace: fr1.trace,
+    })
+}
+
+/// The shard half of the chaos receipt: write a sharded export of `w`
+/// under `dir`, then prove (a) a one-shot checksum corruption is
+/// *absorbed* by the bounded re-read (the pass still succeeds, the
+/// retry counter shows it happened) and (b) a persistent truncation
+/// surfaces as a per-call `Err` — never an abort.
+pub struct ShardProbe {
+    /// Shard-read events of one clean full pass (embed + all layers).
+    pub shard_events: u64,
+    /// Retries the absorbed pass took (>= 1: the fault was seen).
+    pub retries_absorbed: u64,
+    /// The one-shot-corrupt pass succeeded end to end.
+    pub absorbed_ok: bool,
+    /// The persistent-truncate load came back as `Err`.
+    pub fatal_is_err: bool,
+}
+
+pub fn chaos_shard_probe(w: &Weights, dir: &std::path::Path) -> Result<ShardProbe> {
+    use crate::fault::{self, FaultPlan, Site};
+    use crate::model::compact::compact_from_mask;
+    use crate::model::mask::PruneMask;
+    use crate::runtime::store::{write_shards, ShardedWeights};
+
+    // a sparsity-0 compact of `w`: same numerics, shard-store layout
+    let mask = PruneMask::full(&w.spec);
+    let cm = compact_from_mask(w, &mask, &format!("{}_chaos_probe", w.spec.name))?;
+    std::fs::create_dir_all(dir)?;
+    let index = write_shards(dir, &cm)?;
+    let sw = ShardedWeights::open(cm.spec.clone(), dir.to_path_buf(), index)?;
+    let n_layers = sw.spec().n_layers;
+    let full_pass = |sw: &ShardedWeights| -> Result<()> {
+        let _embed = sw.load_embed()?;
+        for l in 0..n_layers {
+            let _shard = sw.load_layer(l)?;
+        }
+        Ok(())
+    };
+
+    let shard_events = {
+        let scope = fault::install(&FaultPlan::default());
+        full_pass(&sw)?;
+        scope.report().events_at(Site::Shard)
+    };
+
+    // (a) one-shot corruption on the second read: absorbed by a re-read
+    sw.reset_stats();
+    let absorbed_ok = {
+        let _scope = fault::install(&FaultPlan::parse("shard@2=corrupt")?);
+        full_pass(&sw).is_ok()
+    };
+    let retries_absorbed = sw.stats().shard_retries;
+
+    // (b) persistent truncation: every re-read sees bad bytes — the
+    // bounded retry gives up with a proper Err
+    let fatal_is_err = {
+        let _scope = fault::install(&FaultPlan::parse("shard@1=truncate*always")?);
+        sw.load_embed().is_err()
+    };
+
+    Ok(ShardProbe { shard_events, retries_absorbed, absorbed_ok, fatal_is_err })
 }
 
 /// One draft sparsity point of the speculative receipt.

@@ -1,0 +1,576 @@
+//! # Deterministic fault injection — `fasp chaos`'s substrate
+//!
+//! A seeded, replayable harness for proving the serving stack degrades
+//! instead of dying. A [`FaultPlan`] arms faults at *event counters* —
+//! the Nth shard read ([`shard_read`]), the Mth top-level pool fan-out
+//! ([`pool_fanout_bomb`]), the Kth allocating KV-arena grow
+//! ([`arena_grow`]) — never at wall-clock instants, so a given plan
+//! fires at exactly the same operations on every run (D3-clean by
+//! construction) and `fasp chaos` can assert that replaying the same
+//! plan reproduces the same fault trace, counters and outputs bitwise.
+//!
+//! ## Wiring
+//!
+//! The plan installs into a thread-local scope ([`install`]); the three
+//! hook functions are called from `runtime/store.rs`, `util/pool.rs`
+//! and `model/kv_arena.rs` and are no-ops without a scope (production
+//! never pays more than one thread-local read). Threads the runtime
+//! itself spawns on a faulted path (the store's shard prefetch thread)
+//! inherit the scope explicitly via [`handle`]/[`adopt`] — ambient
+//! threads never see someone else's plan, so parallel `cargo test`
+//! cannot cross-pollute.
+//!
+//! ## Event determinism contract
+//!
+//! * **shard** — one event per shard-file read *attempt* (a checksum
+//!   retry is a new event). Deterministic for sequential readers and
+//!   prefetch depth ≤ 1, the only shapes the runtime uses.
+//! * **pool** — one event per top-level `Pool::map`/`run_rows*` entry
+//!   on a thread holding the scope; nested fan-out work never counts.
+//!   Call sites gate their pool entry on `workers() > 1` and a flop
+//!   threshold, so the event count is a function of pool width and
+//!   model scale — plans are synthesized per width from a clean
+//!   counting run ([`synth_serve_plan`]).
+//! * **arena** — one event per `KvArena::grow` call that actually
+//!   allocates pages. Width-independent.
+
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Environment variable holding a fault plan (`fasp chaos` also takes
+/// `--plan`): comma-separated `site@nth=kind[:arg][*count]` entries.
+pub const ENV_FAULTS: &str = "FASP_FAULTS";
+
+/// Where a fault injects.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Site {
+    /// A shard-file read in `runtime/store.rs`.
+    Shard,
+    /// A top-level worker-pool fan-out in `util/pool.rs`.
+    Pool,
+    /// An allocating page grow in `model/kv_arena.rs`.
+    Arena,
+}
+
+impl Site {
+    pub const ALL: [Site; 3] = [Site::Shard, Site::Pool, Site::Arena];
+
+    fn idx(self) -> usize {
+        match self {
+            Site::Shard => 0,
+            Site::Pool => 1,
+            Site::Arena => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::Shard => "shard",
+            Site::Pool => "pool",
+            Site::Arena => "arena",
+        }
+    }
+}
+
+/// What happens at an armed event.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FaultKind {
+    /// Flip one payload byte of the read (trips the shard checksum).
+    ShardCorrupt,
+    /// Drop the tail half of the read's bytes (trips the checksum).
+    ShardTruncate,
+    /// Stall the read for the given milliseconds. Scheduling noise
+    /// only: no byte changes, so outputs cannot change either.
+    ShardSlow(u64),
+    /// One worker of the fan-out raises an injected panic (the pool
+    /// itself raises it; the serve engine must catch and absorb it).
+    PoolPanic,
+    /// The grow reports pool exhaustion (`Err`) without allocating.
+    ArenaExhaust,
+}
+
+impl FaultKind {
+    fn label(self) -> String {
+        match self {
+            FaultKind::ShardCorrupt => "corrupt".to_string(),
+            FaultKind::ShardTruncate => "truncate".to_string(),
+            FaultKind::ShardSlow(ms) => format!("slow:{ms}"),
+            FaultKind::PoolPanic => "panic".to_string(),
+            FaultKind::ArenaExhaust => "exhaust".to_string(),
+        }
+    }
+
+    fn site(self) -> Site {
+        match self {
+            FaultKind::ShardCorrupt | FaultKind::ShardTruncate | FaultKind::ShardSlow(_) => {
+                Site::Shard
+            }
+            FaultKind::PoolPanic => Site::Pool,
+            FaultKind::ArenaExhaust => Site::Arena,
+        }
+    }
+}
+
+/// One armed fault: fire at events `nth .. nth + count` of `site`
+/// (1-based window; `count == u64::MAX` means "from `nth` on, forever",
+/// rendered `*always` — the persistent-failure shape).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub site: Site,
+    pub nth: u64,
+    pub count: u64,
+    pub kind: FaultKind,
+}
+
+/// A full injection plan — an ordered set of [`FaultSpec`]s.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse comma-separated `site@nth=kind[:arg][*count]` entries, e.g.
+    /// `shard@2=corrupt, pool@7=panic, shard@4=slow:10,
+    /// arena@5=exhaust*always`.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let mut specs = Vec::new();
+        for raw in text.split(',') {
+            let entry = raw.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (head, kind_part) = entry
+                .split_once('=')
+                .with_context(|| format!("fault entry '{entry}': missing '=<kind>'"))?;
+            let (site_s, nth_s) = head
+                .split_once('@')
+                .with_context(|| format!("fault entry '{entry}': missing '<site>@<nth>'"))?;
+            let site = match site_s.trim() {
+                "shard" => Site::Shard,
+                "pool" => Site::Pool,
+                "arena" => Site::Arena,
+                other => bail!("fault entry '{entry}': unknown site '{other}'"),
+            };
+            let nth: u64 = nth_s
+                .trim()
+                .parse()
+                .with_context(|| format!("fault entry '{entry}': bad event number"))?;
+            anyhow::ensure!(nth >= 1, "fault entry '{entry}': events are 1-based");
+            let (kind_s, count) = match kind_part.split_once('*') {
+                Some((k, c)) if c.trim() == "always" => (k, u64::MAX),
+                Some((k, c)) => (
+                    k,
+                    c.trim()
+                        .parse::<u64>()
+                        .with_context(|| format!("fault entry '{entry}': bad count"))?,
+                ),
+                None => (kind_part, 1),
+            };
+            anyhow::ensure!(count >= 1, "fault entry '{entry}': count must be >= 1");
+            let kind = match kind_s.trim().split_once(':') {
+                None => match kind_s.trim() {
+                    "corrupt" => FaultKind::ShardCorrupt,
+                    "truncate" => FaultKind::ShardTruncate,
+                    "panic" => FaultKind::PoolPanic,
+                    "exhaust" => FaultKind::ArenaExhaust,
+                    other => bail!("fault entry '{entry}': unknown kind '{other}'"),
+                },
+                Some(("slow", ms)) => FaultKind::ShardSlow(
+                    ms.trim()
+                        .parse()
+                        .with_context(|| format!("fault entry '{entry}': bad slow milliseconds"))?,
+                ),
+                Some((other, _)) => bail!("fault entry '{entry}': unknown kind '{other}'"),
+            };
+            anyhow::ensure!(
+                kind.site() == site,
+                "fault entry '{entry}': kind '{}' belongs to site '{}', not '{}'",
+                kind.label(),
+                kind.site().name(),
+                site.name()
+            );
+            specs.push(FaultSpec { site, nth, count, kind });
+        }
+        Ok(FaultPlan { specs })
+    }
+
+    /// The plan from `FASP_FAULTS`, if set (absent/blank → `None`).
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var(ENV_FAULTS) {
+            Ok(s) if !s.trim().is_empty() => Ok(Some(FaultPlan::parse(&s)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// Canonical textual form — `parse(render(p)) == p`.
+    pub fn render(&self) -> String {
+        let parts: Vec<String> = self
+            .specs
+            .iter()
+            .map(|s| {
+                let tail = match s.count {
+                    1 => String::new(),
+                    u64::MAX => "*always".to_string(),
+                    c => format!("*{c}"),
+                };
+                format!("{}@{}={}{}", s.site.name(), s.nth, s.kind.label(), tail)
+            })
+            .collect();
+        parts.join(",")
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+}
+
+/// Synthesize a structured serve-drive plan from a clean run's event
+/// counts: one single-shot arena exhaustion (exactly one session fails
+/// deterministically) plus up to `n_pool` single-shot pool worker
+/// panics (each absorbed by the engine's tick retry). Placement is
+/// pseudorandom but a pure function of `seed` and the counts — the
+/// replay-identity receipt `fasp chaos` asserts.
+pub fn synth_serve_plan(seed: u64, pool_events: u64, arena_events: u64, n_pool: usize) -> FaultPlan {
+    let mut rng = Rng::new(seed ^ 0xfa57_c405);
+    let mut specs = Vec::new();
+    if arena_events > 0 {
+        let nth = 1 + rng.below(arena_events as usize) as u64;
+        specs.push(FaultSpec { site: Site::Arena, nth, count: 1, kind: FaultKind::ArenaExhaust });
+    }
+    for _ in 0..n_pool {
+        if pool_events == 0 {
+            break;
+        }
+        let nth = 1 + rng.below(pool_events as usize) as u64;
+        specs.push(FaultSpec { site: Site::Pool, nth, count: 1, kind: FaultKind::PoolPanic });
+    }
+    FaultPlan { specs }
+}
+
+// ----------------------------------------------------------- live state
+
+struct SiteState {
+    events: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl SiteState {
+    fn new() -> SiteState {
+        SiteState { events: AtomicU64::new(0), injected: AtomicU64::new(0) }
+    }
+}
+
+struct PlanState {
+    specs: Vec<FaultSpec>,
+    sites: [SiteState; 3],
+    /// `site@event=kind` lines in fire order — the replayable trace.
+    trace: Mutex<Vec<String>>,
+}
+
+impl PlanState {
+    fn new(plan: &FaultPlan) -> PlanState {
+        PlanState {
+            specs: plan.specs.clone(),
+            sites: [SiteState::new(), SiteState::new(), SiteState::new()],
+            trace: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Count one `site` event; return the armed kind if a spec's window
+    /// covers it.
+    fn fire(&self, site: Site) -> Option<FaultKind> {
+        let e = self.sites[site.idx()].events.fetch_add(1, Ordering::Relaxed) + 1;
+        for s in &self.specs {
+            if s.site == site && e >= s.nth && e - s.nth < s.count {
+                self.sites[site.idx()].injected.fetch_add(1, Ordering::Relaxed);
+                self.trace
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .push(format!("{}@{}={}", site.name(), e, s.kind.label()));
+                return Some(s.kind);
+            }
+        }
+        None
+    }
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<Arc<PlanState>>> = RefCell::new(None);
+}
+
+/// Counters + trace of one scope — the receipts `fasp chaos` compares
+/// across replays.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultReport {
+    /// Events observed per site, [`Site::ALL`] order.
+    pub events: [u64; 3],
+    /// Faults injected per site, [`Site::ALL`] order.
+    pub injected: [u64; 3],
+    /// `site@event=kind` lines in fire order.
+    pub trace: Vec<String>,
+}
+
+impl FaultReport {
+    pub fn events_at(&self, site: Site) -> u64 {
+        self.events[site.idx()]
+    }
+
+    pub fn injected_at(&self, site: Site) -> u64 {
+        self.injected[site.idx()]
+    }
+
+    pub fn total_injected(&self) -> u64 {
+        self.injected.iter().sum()
+    }
+}
+
+/// RAII scope: the plan is live on the installing thread (and on any
+/// thread that [`adopt`]s its [`handle`]) until drop. Scopes nest; drop
+/// restores the previous scope.
+pub struct FaultScope {
+    state: Arc<PlanState>,
+    prev: Option<Arc<PlanState>>,
+}
+
+/// Make `plan` the active fault plan on this thread. An empty plan is
+/// the *counting* scope: no faults fire, but events still tally — the
+/// input [`synth_serve_plan`] needs.
+pub fn install(plan: &FaultPlan) -> FaultScope {
+    let state = Arc::new(PlanState::new(plan));
+    let prev = ACTIVE.with(|a| a.borrow_mut().replace(state.clone()));
+    FaultScope { state, prev }
+}
+
+impl FaultScope {
+    pub fn report(&self) -> FaultReport {
+        let s = &self.state;
+        FaultReport {
+            events: [0, 1, 2].map(|i| s.sites[i].events.load(Ordering::Relaxed)),
+            injected: [0, 1, 2].map(|i| s.sites[i].injected.load(Ordering::Relaxed)),
+            trace: s.trace.lock().unwrap_or_else(|p| p.into_inner()).clone(),
+        }
+    }
+}
+
+impl Drop for FaultScope {
+    fn drop(&mut self) {
+        ACTIVE.with(|a| *a.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Opaque carrier of this thread's active scope, for threads the
+/// runtime itself spawns on a faulted path (shard prefetch). Cheap to
+/// clone; empty when no scope is active.
+#[derive(Clone, Default)]
+pub struct FaultHandle(Option<Arc<PlanState>>);
+
+/// Capture the calling thread's scope (empty handle when none).
+pub fn handle() -> FaultHandle {
+    FaultHandle(ACTIVE.with(|a| a.borrow().clone()))
+}
+
+/// Guard making a captured [`handle`] active on this thread until drop.
+/// An empty handle is a no-op guard.
+pub struct AdoptGuard {
+    prev: Option<Arc<PlanState>>,
+    installed: bool,
+}
+
+pub fn adopt(h: FaultHandle) -> AdoptGuard {
+    match h.0 {
+        Some(state) => {
+            let prev = ACTIVE.with(|a| a.borrow_mut().replace(state));
+            AdoptGuard { prev, installed: true }
+        }
+        None => AdoptGuard { prev: None, installed: false },
+    }
+}
+
+impl Drop for AdoptGuard {
+    fn drop(&mut self) {
+        if self.installed {
+            let prev = self.prev.take();
+            ACTIVE.with(|a| *a.borrow_mut() = prev);
+        }
+    }
+}
+
+fn fire_active(site: Site) -> Option<FaultKind> {
+    ACTIVE
+        .with(|a| a.borrow().as_ref().map(|st| st.fire(site)))
+        .flatten()
+}
+
+// ----------------------------------------------------------- hook points
+
+/// `runtime/store.rs` hook: one event per shard-read attempt; an armed
+/// fault mutates the just-read bytes in place (corrupt/truncate trip
+/// the caller's checksum verification; slow stalls without touching a
+/// byte).
+pub fn shard_read(bytes: &mut Vec<u8>) {
+    match fire_active(Site::Shard) {
+        Some(FaultKind::ShardCorrupt) => {
+            if !bytes.is_empty() {
+                let mid = bytes.len() / 2;
+                bytes[mid] ^= 0xff;
+            }
+        }
+        Some(FaultKind::ShardTruncate) => {
+            let keep = bytes.len() / 2;
+            bytes.truncate(keep);
+        }
+        Some(FaultKind::ShardSlow(ms)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+        _ => {}
+    }
+}
+
+/// `util/pool.rs` hook: one event per top-level fan-out entry on the
+/// issuing thread. `true` = this fan-out must raise an injected worker
+/// panic (the pool itself raises it, so the injection lives outside the
+/// R1-scoped request paths).
+pub fn pool_fanout_bomb() -> bool {
+    matches!(fire_active(Site::Pool), Some(FaultKind::PoolPanic))
+}
+
+/// `model/kv_arena.rs` hook: one event per allocating grow; an armed
+/// exhaustion surfaces as the `Err` a genuinely empty free list would
+/// produce, before any page moves.
+pub fn arena_grow() -> Result<()> {
+    if matches!(fire_active(Site::Arena), Some(FaultKind::ArenaExhaust)) {
+        bail!("kv arena exhausted (injected fault)");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_render_round_trip() {
+        let text = "shard@2=corrupt, pool@7=panic*3, shard@4=slow:10, \
+                    arena@5=exhaust*always,shard@1=truncate";
+        let plan = FaultPlan::parse(text).unwrap();
+        assert_eq!(plan.specs.len(), 5);
+        assert_eq!(plan.specs[1].count, 3);
+        assert_eq!(plan.specs[2].kind, FaultKind::ShardSlow(10));
+        assert_eq!(plan.specs[3].count, u64::MAX);
+        let rendered = plan.render();
+        assert_eq!(FaultPlan::parse(&rendered).unwrap(), plan);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_entries() {
+        for bad in [
+            "shard@0=corrupt",      // events are 1-based
+            "shard@2",              // missing kind
+            "disk@1=corrupt",       // unknown site
+            "shard@1=explode",      // unknown kind
+            "pool@1=corrupt",       // kind/site mismatch
+            "shard@1=corrupt*0",    // zero count
+            "shard@x=corrupt",      // bad event number
+            "shard@1=slow:abc",     // bad slow arg
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn fire_window_covers_nth_through_count() {
+        let plan = FaultPlan::parse("arena@3=exhaust*2").unwrap();
+        let scope = install(&plan);
+        let fired: Vec<bool> = (0..6).map(|_| arena_grow().is_err()).collect();
+        assert_eq!(fired, [false, false, true, true, false, false]);
+        let r = scope.report();
+        assert_eq!(r.events_at(Site::Arena), 6);
+        assert_eq!(r.injected_at(Site::Arena), 2);
+        assert_eq!(r.trace, vec!["arena@3=exhaust", "arena@4=exhaust"]);
+    }
+
+    #[test]
+    fn persistent_fault_never_stops() {
+        let plan = FaultPlan::parse("pool@2=panic*always").unwrap();
+        let scope = install(&plan);
+        let fired: Vec<bool> = (0..5).map(|_| pool_fanout_bomb()).collect();
+        assert_eq!(fired, [false, true, true, true, true]);
+        assert_eq!(scope.report().total_injected(), 4);
+    }
+
+    #[test]
+    fn hooks_are_inert_without_a_scope() {
+        assert!(!pool_fanout_bomb());
+        assert!(arena_grow().is_ok());
+        let mut bytes = vec![1u8, 2, 3, 4];
+        shard_read(&mut bytes);
+        assert_eq!(bytes, [1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn scope_is_thread_local_unless_adopted() {
+        let plan = FaultPlan::parse("arena@1=exhaust*always").unwrap();
+        let scope = install(&plan);
+        assert!(arena_grow().is_err());
+
+        // a plain thread sees no scope...
+        let bare = std::thread::spawn(|| arena_grow().is_ok()).join().unwrap();
+        assert!(bare, "foreign thread saw someone else's fault plan");
+
+        // ...but an adopting thread shares the counters
+        let h = handle();
+        let adopted = std::thread::spawn(move || {
+            let _g = adopt(h);
+            arena_grow().is_err()
+        })
+        .join()
+        .unwrap();
+        assert!(adopted, "adopted thread missed the plan");
+        assert_eq!(scope.report().events_at(Site::Arena), 3);
+        assert_eq!(scope.report().injected_at(Site::Arena), 2);
+    }
+
+    #[test]
+    fn scopes_nest_and_restore() {
+        let outer = install(&FaultPlan::parse("arena@1=exhaust").unwrap());
+        assert!(arena_grow().is_err());
+        {
+            let inner = install(&FaultPlan::default());
+            assert!(arena_grow().is_ok(), "inner counting scope must not fire");
+            assert_eq!(inner.report().events_at(Site::Arena), 1);
+        }
+        // outer scope restored; its one-shot already spent
+        assert!(arena_grow().is_ok());
+        assert_eq!(outer.report().events_at(Site::Arena), 2);
+    }
+
+    #[test]
+    fn shard_faults_mutate_bytes_deterministically() {
+        let scope = install(&FaultPlan::parse("shard@1=corrupt,shard@2=truncate").unwrap());
+        let mut a = vec![0u8; 8];
+        shard_read(&mut a);
+        assert_eq!(a[4], 0xff, "corrupt flips the middle byte");
+        let mut b = vec![0u8; 8];
+        shard_read(&mut b);
+        assert_eq!(b.len(), 4, "truncate halves the payload");
+        assert_eq!(scope.report().injected, [2, 0, 0]);
+    }
+
+    #[test]
+    fn synth_plan_is_seed_deterministic() {
+        let a = synth_serve_plan(42, 100, 20, 2);
+        let b = synth_serve_plan(42, 100, 20, 2);
+        assert_eq!(a, b);
+        assert_eq!(a.specs.len(), 3);
+        assert!(a.specs.iter().all(|s| s.count == 1));
+        let c = synth_serve_plan(43, 100, 20, 2);
+        assert_ne!(a, c, "different seeds should move the fault points");
+        // no pool events → no pool faults, arena fault still placed
+        let d = synth_serve_plan(42, 0, 20, 2);
+        assert_eq!(d.specs.len(), 1);
+        assert_eq!(d.specs[0].site, Site::Arena);
+    }
+}

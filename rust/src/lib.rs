@@ -23,6 +23,7 @@ pub mod model;
 pub mod data;
 pub mod train;
 pub mod prune;
+pub mod fault;
 pub mod serve;
 pub mod eval;
 pub mod bench_support;

@@ -75,6 +75,14 @@ impl PagedKv {
     pub(crate) fn advance(&mut self) {
         self.len += 1;
     }
+
+    /// Roll the write cursor back to `len0` (a snapshot taken before a
+    /// batched step). Pages stay owned — a retried step rewrites the
+    /// same slots with the same deterministic kernels, so rollback is
+    /// all the undo a mid-step fault needs.
+    pub(crate) fn rollback(&mut self, len0: usize) {
+        self.len = self.len.min(len0);
+    }
 }
 
 /// Fixed pool of KV pages shared by every served session of one model.
@@ -223,6 +231,11 @@ impl KvArena {
     /// is exhausted — the serve engine's admission reservation exists
     /// precisely so this can never fire mid-generation.
     pub fn grow(&mut self, kv: &mut PagedKv, upto: usize) -> Result<()> {
+        if kv.pages.len() * self.page < upto {
+            // one fault event per *allocating* grow; an armed exhaustion
+            // errs here, before any page moves
+            crate::fault::arena_grow()?;
+        }
         while kv.pages.len() * self.page < upto {
             let p = match self.free.pop() {
                 Some(p) => p,
@@ -392,6 +405,42 @@ mod tests {
         assert!(err.to_string().contains("kv arena exhausted"), "{err}");
         arena.release(&mut a);
         assert_eq!(arena.free_pages(), 2);
+    }
+
+    #[test]
+    fn injected_exhaustion_errs_and_leaves_accounting_clean() {
+        use crate::fault::{install, FaultPlan, Site};
+        let spec = toy_spec();
+        let mut arena = KvArena::for_spec(&spec, 6, 4).unwrap();
+        let scope = install(&FaultPlan::parse("arena@2=exhaust").unwrap());
+        let mut a = PagedKv::new();
+        arena.grow(&mut a, 4).unwrap(); // event 1: clean
+        let mut b = PagedKv::new();
+        let err = arena.grow(&mut b, 4).unwrap_err(); // event 2: armed
+        assert!(err.to_string().contains("injected fault"), "{err}");
+        assert!(b.pages().is_empty(), "failed grow must not hand out pages");
+        // a non-allocating grow (already covered) is not an event
+        arena.grow(&mut a, 3).unwrap();
+        assert_eq!(scope.report().events_at(Site::Arena), 2);
+        assert_eq!(scope.report().injected_at(Site::Arena), 1);
+        arena.release(&mut a);
+        assert_eq!(arena.free_pages(), 6);
+    }
+
+    #[test]
+    fn rollback_rewinds_len_but_keeps_pages() {
+        let spec = toy_spec();
+        let mut arena = KvArena::for_spec(&spec, 3, 2).unwrap();
+        let mut kv = PagedKv::new();
+        arena.grow(&mut kv, 3).unwrap();
+        kv.advance();
+        kv.advance();
+        kv.rollback(1);
+        assert_eq!(kv.len(), 1);
+        assert_eq!(kv.pages().len(), 2, "rollback never releases pages");
+        kv.rollback(5); // rollback never advances
+        assert_eq!(kv.len(), 1);
+        arena.release(&mut kv);
     }
 
     #[test]

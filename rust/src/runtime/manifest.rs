@@ -380,7 +380,15 @@ impl Manifest {
         // never shadow or trip the registration pass.
         let cdir = dir.join("compact");
         if cdir.is_dir() {
-            crate::runtime::store::clean_stale_tmp(&cdir);
+            let sweep = crate::runtime::store::clean_stale_tmp(&cdir);
+            if sweep.skipped > 0 {
+                crate::warn!(
+                    "compact scan: {} stale .tmp entries under {} could not \
+                     be removed",
+                    sweep.skipped,
+                    cdir.display()
+                );
+            }
             let mut paths: Vec<PathBuf> = std::fs::read_dir(&cdir)
                 .with_context(|| format!("scan {}", cdir.display()))?
                 .filter_map(|e| e.ok())

@@ -293,14 +293,27 @@ impl ShardLayout {
     }
 }
 
+/// Outcome of a [`clean_stale_tmp`] sweep: debris removed vs debris
+/// that *could not* be removed and is still sitting in the store dir
+/// (locked, permission-denied, or a directory squatting on a `.tmp`
+/// name).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TmpSweep {
+    pub removed: usize,
+    pub skipped: usize,
+}
+
 /// Remove stale `*.tmp` leftovers under `dir` — debris from an earlier
 /// publish that wrote its temp file but died before (or during) the
 /// rename. Temp files are never valid store content, so scans and
-/// writers alike may clear them; unreadable dirs are ignored (the
-/// caller's own I/O will surface real errors).
-pub fn clean_stale_tmp(dir: &Path) {
+/// writers alike may clear them. Removal failures are counted, not
+/// swallowed: a non-zero [`TmpSweep::skipped`] tells operators debris
+/// survived the sweep. An unreadable dir reports an empty sweep — the
+/// caller's own I/O will surface real errors.
+pub fn clean_stale_tmp(dir: &Path) -> TmpSweep {
+    let mut sweep = TmpSweep::default();
     let Ok(entries) = std::fs::read_dir(dir) else {
-        return;
+        return sweep;
     };
     for entry in entries.flatten() {
         let path = entry.path();
@@ -309,10 +322,15 @@ pub fn clean_stale_tmp(dir: &Path) {
             .and_then(|n| n.to_str())
             .map(|n| n.ends_with(".tmp"))
             .unwrap_or(false);
-        if is_tmp && path.is_file() {
-            let _ = std::fs::remove_file(&path);
+        if !is_tmp {
+            continue;
+        }
+        match std::fs::remove_file(&path) {
+            Ok(()) => sweep.removed += 1,
+            Err(_) => sweep.skipped += 1,
         }
     }
+    sweep
 }
 
 /// Write one shard file per entry of the canonical index for `cm` under
@@ -326,7 +344,15 @@ pub fn clean_stale_tmp(dir: &Path) {
 pub fn write_shards(dir: &Path, cm: &CompactModel) -> Result<ShardIndex> {
     std::fs::create_dir_all(dir)
         .with_context(|| format!("create {}", dir.display()))?;
-    clean_stale_tmp(dir);
+    let sweep = clean_stale_tmp(dir);
+    if sweep.skipped > 0 {
+        crate::warn!(
+            "sharded export: {} stale .tmp entries under {} could not be \
+             removed",
+            sweep.skipped,
+            dir.display()
+        );
+    }
     let layout = ShardLayout::of(&cm.spec)?;
     let packed = &cm.weights.packed.data;
     anyhow::ensure!(
@@ -397,6 +423,8 @@ struct StreamStats {
     pack_peak: AtomicUsize,
     loads: AtomicU64,
     load_ns: AtomicU64,
+    /// Checksum-mismatch re-reads that recovered (or tried to).
+    retries: AtomicU64,
 }
 
 impl StreamStats {
@@ -430,6 +458,10 @@ pub struct StreamSnapshot {
     pub peak_pack_bytes: usize,
     pub loads: u64,
     pub load_s: f64,
+    /// Shard re-reads taken after a checksum mismatch (bounded by
+    /// `SHARD_RETRIES` per load; non-zero means transient corruption was
+    /// seen and retried, whether or not the load ultimately succeeded).
+    pub shard_retries: u64,
 }
 
 // ------------------------------------------------------------- the store
@@ -503,6 +535,14 @@ impl StoreInner {
         TrackedPacks::new(packs, inner.clone())
     }
 }
+
+/// Bounded re-reads after a shard checksum mismatch. A mismatch can be
+/// transient (a torn readback racing a republish, an injected fault);
+/// re-reading gives the load that many fresh chances before the
+/// mismatch becomes the caller's `Err`. Missing files, parse failures
+/// and element-count mismatches are structural, not transient, and
+/// never retry.
+const SHARD_RETRIES: usize = 2;
 
 /// Lazy handle on a sharded compact model. Cheap to clone (shared
 /// inner); loads verify the per-shard checksum and element count, so a
@@ -595,6 +635,7 @@ impl ShardedWeights {
             peak_pack_bytes: s.pack_peak.load(Ordering::Relaxed),
             loads: s.loads.load(Ordering::Relaxed),
             load_s: s.load_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            shard_retries: s.retries.load(Ordering::Relaxed),
         }
     }
 
@@ -606,39 +647,56 @@ impl ShardedWeights {
             .store(s.pack_resident.load(Ordering::Relaxed), Ordering::Relaxed);
         s.loads.store(0, Ordering::Relaxed);
         s.load_ns.store(0, Ordering::Relaxed);
+        s.retries.store(0, Ordering::Relaxed);
     }
 
     fn read_shard(&self, si: usize) -> Result<ShardBuf> {
         let meta = &self.inner.index.shards[si];
         let path = self.inner.dir.join(&meta.file);
         let t0 = std::time::Instant::now();
-        let bytes = std::fs::read(&path).with_context(|| {
-            format!("read shard file {} — missing or unreadable", path.display())
-        })?;
-        let sum = fnv1a64(&bytes);
-        anyhow::ensure!(
-            sum == meta.checksum,
-            "shard {}: checksum mismatch (file {sum:016x}, index {:016x}) — \
-             truncated or corrupt shard file",
-            path.display(),
-            meta.checksum
-        );
-        let mut tf = TensorFile::from_bytes(&bytes)
-            .with_context(|| format!("parse shard {}", path.display()))?;
-        let t = tf
-            .tensors
-            .remove("packed")
-            .with_context(|| format!("shard {}: missing 'packed' tensor", path.display()))?;
-        anyhow::ensure!(
-            t.numel() == meta.elems,
-            "shard {}: {} elems, index says {}",
-            path.display(),
-            t.numel(),
-            meta.elems
-        );
-        let ns = t0.elapsed().as_nanos() as u64;
-        self.inner.stats.on_load(t.data.len() * 4, ns);
-        Ok(ShardBuf { data: t.data, store: self.inner.clone() })
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..=SHARD_RETRIES {
+            if attempt > 0 {
+                self.inner.stats.retries.fetch_add(1, Ordering::Relaxed);
+            }
+            // a missing/unreadable file is not transient — no retry
+            let mut bytes = std::fs::read(&path).with_context(|| {
+                format!("read shard file {} — missing or unreadable", path.display())
+            })?;
+            crate::fault::shard_read(&mut bytes);
+            let sum = fnv1a64(&bytes);
+            if sum != meta.checksum {
+                // transient corruption (torn readback, injected fault):
+                // a fresh read may see good bytes — retry, bounded
+                last = Some(anyhow::anyhow!(
+                    "shard {}: checksum mismatch (file {sum:016x}, index \
+                     {:016x}) — truncated or corrupt shard file \
+                     (after {SHARD_RETRIES} re-reads)",
+                    path.display(),
+                    meta.checksum
+                ));
+                continue;
+            }
+            let mut tf = TensorFile::from_bytes(&bytes)
+                .with_context(|| format!("parse shard {}", path.display()))?;
+            let t = tf
+                .tensors
+                .remove("packed")
+                .with_context(|| format!("shard {}: missing 'packed' tensor", path.display()))?;
+            anyhow::ensure!(
+                t.numel() == meta.elems,
+                "shard {}: {} elems, index says {}",
+                path.display(),
+                t.numel(),
+                meta.elems
+            );
+            let ns = t0.elapsed().as_nanos() as u64;
+            self.inner.stats.on_load(t.data.len() * 4, ns);
+            return Ok(ShardBuf { data: t.data, store: self.inner.clone() });
+        }
+        Err(last.unwrap_or_else(|| {
+            anyhow::anyhow!("shard {}: unreachable retry exit", path.display())
+        }))
     }
 
     /// Load the embedding/head shard.
@@ -762,10 +820,15 @@ impl StreamingParams {
         {
             let l = self.next_spawn;
             let st = self.store.clone();
+            // prefetch threads inherit the spawner's fault scope, so an
+            // armed shard fault fires on the Nth read no matter which
+            // thread performs it
+            let fh = crate::fault::handle();
             self.pending.push_back((
                 l,
                 std::thread::spawn(move || -> Result<(ShardBuf, TrackedPacks)> {
                     let _serial = crate::util::pool::enter(crate::util::pool::serial());
+                    let _faults = crate::fault::adopt(fh);
                     let buf = st.load_layer(l)?;
                     let packs = StoreInner::pack_layer(&st.inner, l, &buf.data);
                     Ok((buf, packs))
@@ -984,6 +1047,26 @@ mod tests {
             params,
             layer_dims,
         }
+    }
+
+    #[test]
+    fn clean_stale_tmp_counts_skipped_debris() {
+        let dir = std::env::temp_dir().join("fasp_store_tmp_sweep");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.tmp"), b"debris").unwrap();
+        std::fs::write(dir.join("keep.ftns"), b"live").unwrap();
+        // a directory squatting on a .tmp name defeats remove_file even
+        // as root — the locked/undeletable-debris stand-in
+        std::fs::create_dir(dir.join("stale.tmp")).unwrap();
+        let sweep = clean_stale_tmp(&dir);
+        assert_eq!(sweep, TmpSweep { removed: 1, skipped: 1 });
+        assert!(!dir.join("a.tmp").exists());
+        assert!(dir.join("keep.ftns").exists(), "sweep must not touch live files");
+        assert!(dir.join("stale.tmp").exists(), "skipped debris stays on disk");
+        // second sweep: nothing removable left, debris still reported
+        assert_eq!(clean_stale_tmp(&dir), TmpSweep { removed: 0, skipped: 1 });
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -37,6 +37,23 @@
 //! request that could never fit is rejected up front, and one that
 //! merely has to wait stays queued (FIFO, head-of-line) until
 //! retirements or prefix-cache evictions free enough pages.
+//!
+//! **Graceful degradation** (locked by `rust/tests/test_chaos.rs` and
+//! the `fasp chaos` CLI): the engine degrades per session instead of
+//! dying. A bounded admission queue ([`ServeConfig::queue_cap`]) sheds
+//! excess requests deterministically from the back; per-request
+//! deadlines count scheduler *ticks*, never wall clock
+//! ([`ServeRequest::deadline_ticks`]), so expiry replays
+//! bit-identically; a mid-step fault — a panicking pool worker, an
+//! arena exhaustion, a failed shard load — is caught at the engine's
+//! fault boundary ([`run_caught`]), rolled back
+//! ([`PagedKv::rollback`]), retried up to [`ServeConfig::tick_retries`]
+//! times, and finally turned into a per-session failed [`ServeOutput`]
+//! (`error: Some(..)`). Surviving lanes finish **bit-identical** to the
+//! fault-free run — forward rows are lane-independent and sampling is
+//! per-session seeded, so a neighbor's death can't perturb anyone —
+//! and the drain stays clean: zero leaked arena pages
+//! ([`ServeReport::leaked_pages`]).
 
 use super::prefix::PrefixCache;
 use crate::model::decode::{decode_chunk_paged, decode_step_paged, sample_row, PagedLane, Sampler};
@@ -55,6 +72,23 @@ pub struct ServeRequest {
     pub sampler: Sampler,
     /// Seed of this session's own sampling [`Rng`] stream.
     pub seed: u64,
+    /// Scheduler-tick budget: a session still unfinished after
+    /// participating in this many batched ticks retires with a
+    /// per-session deadline error (never wall clock — tick deadlines
+    /// replay bit-identically). `usize::MAX` = no deadline.
+    pub deadline_ticks: usize,
+}
+
+impl Default for ServeRequest {
+    fn default() -> Self {
+        ServeRequest {
+            prompt: Vec::new(),
+            max_new: 1,
+            sampler: Sampler::Greedy,
+            seed: 0,
+            deadline_ticks: usize::MAX,
+        }
+    }
 }
 
 /// Engine shape knobs.
@@ -73,6 +107,14 @@ pub struct ServeConfig {
     /// 1 disables chunking and reproduces the token-per-tick engine
     /// exactly; any value yields bit-identical outputs.
     pub prefill_chunk: usize,
+    /// Bound on the admission queue: excess requests shed
+    /// deterministically from the back (newest first) with per-session
+    /// shed errors before any forward work. `usize::MAX` = unbounded.
+    pub queue_cap: usize,
+    /// Retries a batched step gets after an absorbed mid-step fault
+    /// (pool worker panic) before the step's sessions retire with
+    /// per-session errors.
+    pub tick_retries: usize,
 }
 
 impl Default for ServeConfig {
@@ -83,6 +125,8 @@ impl Default for ServeConfig {
             max_batch: 8,
             prefix_cache: true,
             prefill_chunk: 4,
+            queue_cap: usize::MAX,
+            tick_retries: 2,
         }
     }
 }
@@ -93,12 +137,18 @@ pub struct ServeOutput {
     /// Index of the originating request.
     pub id: usize,
     /// Prompt + sampled continuation — the exact layout one row of
-    /// `generate`'s output uses.
+    /// `generate`'s output uses. For a failed session: the prompt plus
+    /// whatever was generated before the fault.
     pub tokens: Vec<i32>,
     pub prompt_len: usize,
     pub generated: usize,
     /// Prompt positions adopted from the prefix cache (0 on a miss).
     pub prefix_hit_positions: usize,
+    /// `Some(reason)` when the session failed (shed, deadline, or an
+    /// unabsorbed fault) instead of completing. A failed session never
+    /// fails the batch: surviving lanes finish bit-identically to a
+    /// fault-free run.
+    pub error: Option<String>,
 }
 
 /// What a full drive of the engine produced, with the throughput /
@@ -129,6 +179,17 @@ pub struct ServeReport {
     pub page_bytes: usize,
     /// Allocated bytes of the whole arena pool.
     pub kv_bytes: usize,
+    /// Sessions that retired with an error (shed + deadline + faulted).
+    pub failed_sessions: usize,
+    /// Sessions shed by the bounded admission queue.
+    pub shed_sessions: usize,
+    /// Sessions that hit their tick deadline.
+    pub deadline_failures: usize,
+    /// Step retries taken after absorbed mid-step faults.
+    pub tick_retries: usize,
+    /// Arena pages still resident after drain — always 0 unless the
+    /// engine leaked (the chaos receipt).
+    pub leaked_pages: usize,
 }
 
 /// A session resident in the running batch.
@@ -148,6 +209,9 @@ struct Active {
     pages_total: usize,
     prefix_hit_positions: usize,
     inserted: bool,
+    /// Batched ticks this session has participated in.
+    age_ticks: usize,
+    deadline_ticks: usize,
 }
 
 /// Drive every request to completion over `model`'s shared packed plan
@@ -209,10 +273,34 @@ pub fn serve(
     let mut token_s: Vec<f64> = Vec::new();
     let mut ticks = 0usize;
     let mut max_batch_seen = 0usize;
+    let mut failed_sessions = 0usize;
+    let mut shed_sessions = 0usize;
+    let mut deadline_failures = 0usize;
+    let mut tick_retries_total = 0usize;
     let mut src = model.source();
 
+    // ---- bounded admission: shed the newest requests over the queue
+    // cap deterministically, before any forward work
+    while queue.len() > cfg.queue_cap {
+        let Some(rid) = queue.pop_back() else { break };
+        shed_sessions += 1;
+        failed_sessions += 1;
+        let r = &requests[rid];
+        outputs[rid] = Some(ServeOutput {
+            id: rid,
+            tokens: r.prompt.clone(),
+            prompt_len: r.prompt.len(),
+            generated: 0,
+            prefix_hit_positions: 0,
+            error: Some(format!(
+                "shed: admission queue over capacity {}",
+                cfg.queue_cap
+            )),
+        });
+    }
+
     let wall = std::time::Instant::now();
-    loop {
+    'sched: loop {
         // ---- admission (FIFO, every tick — token-granularity joins)
         while active.len() < cfg.max_batch && !queue.is_empty() {
             let rid = queue[0];
@@ -259,6 +347,8 @@ pub fn serve(
                 pages_total,
                 prefix_hit_positions: fed,
                 inserted: false,
+                age_ticks: 0,
+                deadline_ticks: r.deadline_ticks,
             });
         }
         if active.is_empty() {
@@ -273,6 +363,27 @@ pub fn serve(
                 queue.len()
             );
         }
+
+        // ---- tick deadlines: a session over its budget retires with a
+        // per-session error; its pages free immediately for the queue
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].age_ticks >= active[i].deadline_ticks {
+                let s = active.remove(i);
+                deadline_failures += 1;
+                failed_sessions += 1;
+                let reason = format!(
+                    "deadline exceeded: {} ticks (limit {})",
+                    s.age_ticks, s.deadline_ticks
+                );
+                fail_active(&mut arena, &mut outputs, s, reason);
+            } else {
+                i += 1;
+            }
+        }
+        if active.is_empty() {
+            continue 'sched; // freed slots go back through admission
+        }
         max_batch_seen = max_batch_seen.max(active.len());
 
         // ---- chunked prefill: sessions still >= 2 tokens from the end
@@ -280,41 +391,136 @@ pub fn serve(
         // its forward produces the first sampling logits and stays on
         // the lane path) before contributing their lane token below.
         // Admission already reserved every page this can grow into.
+        // The chunk runs one session at a time, so a chunk fault is
+        // per-session by construction: an `Err` (e.g. injected arena
+        // exhaustion) retires that session; a caught panic rolls its
+        // cache back and retries before retiring it. Neighbors never
+        // notice either way.
         if cfg.prefill_chunk > 1 {
-            for s in active.iter_mut() {
-                let t_prompt = s.prompt.len();
-                if s.fed + 1 < t_prompt {
-                    let c = (cfg.prefill_chunk - 1).min(t_prompt - 1 - s.fed);
+            let mut i = 0;
+            while i < active.len() {
+                let t_prompt = active[i].prompt.len();
+                if active[i].fed + 1 >= t_prompt {
+                    i += 1;
+                    continue;
+                }
+                let c = (cfg.prefill_chunk - 1).min(t_prompt - 1 - active[i].fed);
+                let len0 = active[i].kv.len();
+                let mut attempt = 0usize;
+                let fate: Option<String> = loop {
                     src.rewind()?;
-                    decode_chunk_paged(
-                        &mut src,
-                        &mut arena,
-                        &mut s.kv,
-                        &s.prompt[s.fed..s.fed + c],
-                    )?;
-                    s.fed += c;
+                    let s = &mut active[i];
+                    let (kv, prompt, fed) = (&mut s.kv, &s.prompt, s.fed);
+                    match run_caught(|| {
+                        decode_chunk_paged(&mut src, &mut arena, kv, &prompt[fed..fed + c])
+                    }) {
+                        TickFate::Done(()) => break None,
+                        TickFate::Failed(e) => break Some(format!("prefill fault: {e:#}")),
+                        TickFate::Panicked(m) => {
+                            active[i].kv.rollback(len0);
+                            if attempt < cfg.tick_retries {
+                                attempt += 1;
+                                tick_retries_total += 1;
+                                continue;
+                            }
+                            break Some(format!(
+                                "prefill fault after {attempt} retries: {m}"
+                            ));
+                        }
+                    }
+                };
+                match fate {
+                    None => {
+                        active[i].fed += c;
+                        i += 1;
+                    }
+                    Some(reason) => {
+                        let s = active.remove(i);
+                        failed_sessions += 1;
+                        fail_active(&mut arena, &mut outputs, s, reason);
+                    }
                 }
             }
+            if active.is_empty() {
+                continue 'sched;
+            }
+        }
+
+        // ---- per-lane pre-grow: allocate this tick's page (if any)
+        // lane by lane, so arena exhaustion — real or injected — is
+        // attributable to exactly one session and retires only it.
+        // After this, every grow inside the step is covered and cannot
+        // allocate, so no mid-step fan-out can see an arena fault.
+        let mut i = 0;
+        while i < active.len() {
+            let need = active[i].kv.len() + 1;
+            match arena.grow(&mut active[i].kv, need) {
+                Ok(()) => i += 1,
+                Err(e) => {
+                    let s = active.remove(i);
+                    failed_sessions += 1;
+                    fail_active(&mut arena, &mut outputs, s, format!("kv page fault: {e:#}"));
+                }
+            }
+        }
+        if active.is_empty() {
+            continue 'sched;
         }
 
         // ---- one batched step: every active session advances one token
         ticks += 1;
         let t_tick = std::time::Instant::now();
-        src.rewind()?;
         {
-            let mut lanes: Vec<PagedLane<'_>> = Vec::with_capacity(active.len());
-            for s in active.iter_mut() {
-                let token = next_token(s.fed, &s.prompt, s.pending, s.id)?;
-                lanes.push(PagedLane { kv: &mut s.kv, token });
-            }
-            let logits = decode_step_paged(&mut src, &mut arena, &mut lanes)?;
-            drop(lanes);
+            // Snapshot every lane's write cursor: a caught mid-step
+            // fault (pool worker panic) rolls all lanes back to it and
+            // the step retries — the retried step rewrites the same
+            // slots with the same deterministic kernels, so an absorbed
+            // fault leaves outputs bit-identical to a fault-free run.
+            let len0: Vec<usize> = active.iter().map(|s| s.kv.len()).collect();
+            let mut attempt = 0usize;
+            let logits = loop {
+                src.rewind()?;
+                let msg: String;
+                {
+                    let mut lanes: Vec<PagedLane<'_>> = Vec::with_capacity(active.len());
+                    for s in active.iter_mut() {
+                        let token = next_token(s.fed, &s.prompt, s.pending, s.id)?;
+                        lanes.push(PagedLane { kv: &mut s.kv, token });
+                    }
+                    match run_caught(|| decode_step_paged(&mut src, &mut arena, &mut lanes)) {
+                        TickFate::Done(l) => break l,
+                        TickFate::Failed(e) => msg = format!("{e:#}"),
+                        TickFate::Panicked(m) => msg = m,
+                    }
+                }
+                for (s, &l0) in active.iter_mut().zip(&len0) {
+                    s.kv.rollback(l0);
+                }
+                if attempt < cfg.tick_retries {
+                    attempt += 1;
+                    tick_retries_total += 1;
+                    continue;
+                }
+                // retries exhausted: the step's sessions retire with
+                // per-session errors — the engine itself keeps running
+                failed_sessions += active.len();
+                for s in active.drain(..) {
+                    fail_active(
+                        &mut arena,
+                        &mut outputs,
+                        s,
+                        format!("tick fault after {attempt} retries: {msg}"),
+                    );
+                }
+                continue 'sched;
+            };
             let dt = t_tick.elapsed().as_secs_f64();
 
             // ---- per-session bookkeeping + sampling
             let mut sampled = 0usize;
             let mut retired: Vec<usize> = Vec::new();
             for (i, s) in active.iter_mut().enumerate() {
+                s.age_ticks += 1;
                 let t_prompt = s.prompt.len();
                 let pos = s.kv.len() - 1; // the position this tick processed
                 if s.fed < t_prompt {
@@ -354,15 +560,18 @@ pub fn serve(
                     prompt_len: s.prompt.len(),
                     generated: s.out.len(),
                     prefix_hit_positions: s.prefix_hit_positions,
+                    error: None,
                 });
             }
         }
     }
     let wall_s = wall.elapsed().as_secs_f64();
 
-    // teardown: drop the prefix pins; every page must come home
+    // teardown: drop the prefix pins; every page must come home — even
+    // after shed/deadline/faulted retirements (the chaos receipt)
     prefix.clear(&mut arena);
-    debug_assert_eq!(arena.used_pages(), 0, "serve leaked arena pages");
+    let leaked_pages = arena.used_pages();
+    debug_assert_eq!(leaked_pages, 0, "serve leaked arena pages");
 
     // total_cmp: no panic path even if a tick duration came out NaN
     // (it can't — but R1 bans the expect, and total order is free).
@@ -390,7 +599,70 @@ pub fn serve(
         peak_pages: arena.peak_pages(),
         page_bytes: arena.page_bytes(),
         kv_bytes: arena.kv_bytes(),
+        failed_sessions,
+        shed_sessions,
+        deadline_failures,
+        tick_retries: tick_retries_total,
+        leaked_pages,
     })
+}
+
+/// What one guarded engine step came to: a value, a proper `Err`, or a
+/// panic caught at the engine's fault boundary.
+enum TickFate<T> {
+    Done(T),
+    Failed(anyhow::Error),
+    Panicked(String),
+}
+
+/// Run one engine step with both failure channels absorbed: `Err`s pass
+/// through as [`TickFate::Failed`], and a panic a pool worker re-raised
+/// (see `util/pool.rs::join_all`) is caught as [`TickFate::Panicked`]
+/// instead of killing the process. `AssertUnwindSafe` is sound here
+/// because every caller either rolls the touched lanes back to a
+/// pre-step snapshot (retry) or retires them (release + error output) —
+/// no state survives a caught panic unreconciled.
+fn run_caught<T>(f: impl FnOnce() -> Result<T>) -> TickFate<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(Ok(v)) => TickFate::Done(v),
+        Ok(Err(e)) => TickFate::Failed(e),
+        Err(p) => TickFate::Panicked(panic_text(&p)),
+    }
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Retire a faulted/shed/expired session: release its pages back to the
+/// arena and record a failed [`ServeOutput`] (prompt + whatever was
+/// generated pre-fault, `error: Some(reason)`) in its slot. The batch
+/// and its surviving lanes never see the fault.
+fn fail_active(
+    arena: &mut KvArena,
+    outputs: &mut [Option<ServeOutput>],
+    mut s: Active,
+    reason: String,
+) {
+    arena.release(&mut s.kv);
+    let prompt_len = s.prompt.len();
+    let mut tokens = std::mem::take(&mut s.prompt);
+    tokens.extend_from_slice(&s.out);
+    outputs[s.id] = Some(ServeOutput {
+        id: s.id,
+        tokens,
+        prompt_len,
+        generated: s.out.len(),
+        prefix_hit_positions: s.prefix_hit_positions,
+        error: Some(reason),
+    });
 }
 
 /// The token a session contributes to this tick: the next unfed
@@ -460,6 +732,7 @@ mod tests {
             prompt_len: 1,
             generated: 1,
             prefix_hit_positions: 0,
+            error: None,
         };
         let ok = collect_outputs(vec![Some(full.clone())]).unwrap();
         assert_eq!(ok.len(), 1);

@@ -21,7 +21,7 @@
 //! for the duration of an entry execution.
 
 use once_cell::sync::OnceCell;
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -79,6 +79,57 @@ fn jitter_start(max_us: u64, worker: usize) {
     std::thread::sleep(std::time::Duration::from_micros(z % (max_us + 1)));
 }
 
+// ------------------------------------------------------- fault injection
+//
+// Each *top-level* entry into `map`/`run_rows1`/`run_rows2` on a thread
+// holding a fault scope counts one `crate::fault` pool event; nested
+// entries (a parallel matmul inside a fan-out's work section, which the
+// serial-nested-pool rule routes through the shortcut paths) are
+// suppressed by the IN_FANOUT flag, so event numbering is a function of
+// the call graph, not of how the work happens to be partitioned. An
+// armed event detonates an injected panic *inside the pool* — on a
+// spawned worker for parallel fan-outs (re-raised on the caller by
+// `join_all`), on the calling thread for serial shortcuts — which is
+// exactly the failure shape a real worker bug produces and what the
+// serve engine must catch and absorb.
+
+thread_local! {
+    static IN_FANOUT: Cell<bool> = Cell::new(false);
+}
+
+/// RAII flag marking this thread as inside a fan-out's work section.
+struct FanoutScope {
+    was: bool,
+}
+
+impl FanoutScope {
+    fn begin() -> FanoutScope {
+        FanoutScope { was: IN_FANOUT.with(|c| c.replace(true)) }
+    }
+}
+
+impl Drop for FanoutScope {
+    fn drop(&mut self) {
+        let was = self.was;
+        IN_FANOUT.with(|c| c.set(was));
+    }
+}
+
+/// Count one pool fault event (top-level entries only); `true` = this
+/// fan-out must raise the injected worker panic.
+fn fanout_bomb() -> bool {
+    if IN_FANOUT.with(|c| c.get()) {
+        return false;
+    }
+    crate::fault::pool_fanout_bomb()
+}
+
+/// The injected worker panic (P1-home: panics may originate in the pool,
+/// never in request paths — request paths must *absorb* this one).
+fn detonate() -> ! {
+    panic!("injected fault: pool worker panic");
+}
+
 impl Pool {
     pub fn new(workers: usize) -> Pool {
         Pool { workers: workers.max(1) }
@@ -97,7 +148,12 @@ impl Pool {
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
+        let bomb = fanout_bomb();
+        let _fan = FanoutScope::begin();
         if self.workers == 1 || n <= 1 {
+            if bomb {
+                detonate();
+            }
             return (0..n).map(f).collect();
         }
         let w = self.workers.min(n);
@@ -111,6 +167,9 @@ impl Pool {
             let mut handles = Vec::with_capacity(w - 1);
             for wi in 0..w - 1 {
                 handles.push(s.spawn(move || {
+                    if bomb && wi == 0 {
+                        detonate();
+                    }
                     jitter_start(jit, wi);
                     let _serial = enter(serial());
                     let mut got: Vec<(usize, T)> = Vec::new();
@@ -154,10 +213,15 @@ impl Pool {
     where
         F: Fn(usize, &mut [f32]) + Sync,
     {
+        let bomb = fanout_bomb();
+        let _fan = FanoutScope::begin();
         let rows = if row_len == 0 { 0 } else { data.len() / row_len };
         debug_assert_eq!(rows * row_len, data.len(), "run_rows1: ragged data");
         let w = self.workers.min(rows.max(1));
         if w <= 1 {
+            if bomb {
+                detonate();
+            }
             f(0, data);
             return;
         }
@@ -181,6 +245,9 @@ impl Pool {
                     f(r0, chunk);
                 } else {
                     handles.push(s.spawn(move || {
+                        if bomb && wi == 0 {
+                            detonate();
+                        }
                         jitter_start(jit, wi);
                         let _serial = enter(serial());
                         f(r0, chunk);
@@ -206,11 +273,16 @@ impl Pool {
     ) where
         F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
     {
+        let bomb = fanout_bomb();
+        let _fan = FanoutScope::begin();
         let rows = if a_len == 0 { 0 } else { a.len() / a_len };
         debug_assert_eq!(rows * a_len, a.len(), "run_rows2: ragged a");
         debug_assert_eq!(rows * b_len, b.len(), "run_rows2: b rows mismatch");
         let w = self.workers.min(rows.max(1));
         if w <= 1 {
+            if bomb {
+                detonate();
+            }
             f(0, a, b);
             return;
         }
@@ -236,6 +308,9 @@ impl Pool {
                     f(r0, ca, cb);
                 } else {
                     handles.push(s.spawn(move || {
+                        if bomb && wi == 0 {
+                            detonate();
+                        }
                         jitter_start(jit, wi);
                         let _serial = enter(serial());
                         f(r0, ca, cb);
@@ -401,6 +476,38 @@ mod tests {
         let pool = Pool::new(4);
         let nested = pool.map(8, |_| current().workers());
         assert!(nested.iter().all(|&w| w == 1), "nested pools must be serial");
+    }
+
+    #[test]
+    fn injected_pool_fault_panics_and_is_catchable() {
+        use crate::fault::{install, FaultPlan, Site};
+        let scope = install(&FaultPlan::parse("pool@2=panic").unwrap());
+        let pool = Pool::new(3);
+        assert_eq!(pool.map(4, |i| i), vec![0, 1, 2, 3]); // event 1: clean
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let caught =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.map(4, |i| i)));
+        std::panic::set_hook(prev);
+        assert!(caught.is_err(), "armed fan-out must raise the injected panic");
+        assert_eq!(scope.report().injected_at(Site::Pool), 1);
+        // one-shot fault is spent; later fan-outs run clean
+        assert_eq!(pool.map(2, |i| i), vec![0, 1]);
+        assert_eq!(scope.report().events_at(Site::Pool), 3);
+    }
+
+    #[test]
+    fn nested_fanouts_do_not_count_pool_events() {
+        use crate::fault::{install, FaultPlan, Site};
+        let scope = install(&FaultPlan::default());
+        let pool = Pool::new(1);
+        pool.map(3, |_| {
+            // nested entry through the serial shortcut on this thread —
+            // must not count as a top-level pool event
+            serial().map(2, |j| j);
+            0usize
+        });
+        assert_eq!(scope.report().events_at(Site::Pool), 1);
     }
 
     #[test]

@@ -1,0 +1,497 @@
+//! Fault-injection & graceful-degradation contract: a seeded
+//! [`FaultPlan`] fires on exact event counters (never wall clock), so
+//! every injected failure replays bit-identically; the serve engine
+//! degrades per-session — a faulted session comes back as a failed
+//! [`ServeOutput`] while survivors stay bit-identical to the fault-free
+//! run — and always drains with zero leaked arena pages; an injected
+//! prefetch-thread failure in the shard store surfaces as a proper
+//! `Err` and `rewind()` recovers; the KV arena's accounting stays exact
+//! through injected exhaustion across page sizes and pool widths.
+
+use fasp::eval::speed::chaos_shard_probe;
+use fasp::fault::{self, FaultPlan, Site};
+use fasp::model::compact::{build_params, compact_from_mask};
+use fasp::model::decode::Sampler;
+use fasp::model::weights::ParamSource;
+use fasp::model::{KvArena, PagedKv, PackedWeights, PruneMask, Weights};
+use fasp::runtime::manifest::LayerDims;
+use fasp::runtime::store::{write_shards, ShardedWeights, StreamingParams};
+use fasp::runtime::ModelSpec;
+use fasp::serve::{serve, ServeConfig, ServeOutput, ServeRequest};
+use fasp::util::pool;
+use fasp::util::rng::Rng;
+use std::sync::Arc;
+
+/// Same ragged toy as `test_serve` — small enough that nothing crosses
+/// the pool's parallel threshold, so its serve runs see zero pool
+/// events and fault census stays pool-free at every worker count.
+fn toy_spec() -> ModelSpec {
+    let layer_dims = vec![
+        LayerDims { d_ff: 20, d_ov: 10, head_splits: vec![6, 4] },
+        LayerDims { d_ff: 12, d_ov: 5, head_splits: vec![5, 0] },
+        LayerDims { d_ff: 16, d_ov: 16, head_splits: vec![8, 8] },
+    ];
+    let params = build_params("llama", 16, 3, 48, 24, &layer_dims);
+    ModelSpec {
+        name: "chaos_toy".into(),
+        family: "llama".into(),
+        d_model: 16,
+        n_heads: 2,
+        n_layers: 3,
+        d_ff: 20,
+        vocab: 48,
+        seq: 24,
+        batch: 2,
+        params,
+        layer_dims,
+    }
+}
+
+/// A spec whose head-logits matmul crosses [`pool`]'s parallel
+/// threshold exactly when 4 lanes step together (4 · 2048 · 128 = 2^20
+/// flops), so pool fan-out events fire on the serve path and nowhere
+/// else — the smallest shape where pool faults are reachable.
+fn big_vocab_spec() -> ModelSpec {
+    let layer_dims = vec![LayerDims { d_ff: 64, d_ov: 128, head_splits: vec![64, 64] }];
+    let params = build_params("llama", 128, 1, 2048, 32, &layer_dims);
+    ModelSpec {
+        name: "chaos_big_vocab".into(),
+        family: "llama".into(),
+        d_model: 128,
+        n_heads: 2,
+        n_layers: 1,
+        d_ff: 64,
+        vocab: 2048,
+        seq: 32,
+        batch: 2,
+        params,
+        layer_dims,
+    }
+}
+
+/// Staggered mixed load (same shape as `test_serve::toy_requests`).
+fn toy_requests(spec: &ModelSpec, n: usize) -> Vec<ServeRequest> {
+    let mut rng = Rng::new(0x10ad);
+    let mut reqs = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = 3 + i % 4;
+        let prompt: Vec<i32> = (0..t).map(|_| rng.below(spec.vocab) as i32).collect();
+        let sampler = if i % 2 == 0 {
+            Sampler::Greedy
+        } else {
+            Sampler::TopK { k: 4, temperature: 0.9 }
+        };
+        reqs.push(ServeRequest {
+            prompt,
+            max_new: 2 + i % 3,
+            sampler,
+            seed: 1000 + i as u64,
+            ..Default::default()
+        });
+    }
+    reqs
+}
+
+/// A lockstep load: every session has the same prompt length and
+/// generation budget, so all of them prefill, step and retire on the
+/// same ticks — the batched step always runs with `n` lanes.
+fn aligned_requests(spec: &ModelSpec, n: usize) -> Vec<ServeRequest> {
+    let mut rng = Rng::new(0xa11e);
+    (0..n)
+        .map(|i| ServeRequest {
+            prompt: (0..6).map(|_| rng.below(spec.vocab) as i32).collect(),
+            max_new: 4,
+            sampler: Sampler::Greedy,
+            seed: 2000 + i as u64,
+            ..Default::default()
+        })
+        .collect()
+}
+
+fn toy_cfg() -> ServeConfig {
+    ServeConfig {
+        page: 3,
+        n_pages: 64,
+        max_batch: 3,
+        prefix_cache: false,
+        prefill_chunk: 2,
+        ..Default::default()
+    }
+}
+
+fn big_cfg() -> ServeConfig {
+    ServeConfig {
+        page: 4,
+        n_pages: 64,
+        max_batch: 8,
+        prefix_cache: false,
+        prefill_chunk: 4,
+        ..Default::default()
+    }
+}
+
+/// Run `f` with the panic hook silenced (injected pool-worker panics
+/// are caught by the engine, but the default hook would still spew
+/// backtraces into the test output).
+fn quiet_panics<T>(f: impl FnOnce() -> T) -> T {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let out = f();
+    std::panic::set_hook(prev);
+    out
+}
+
+fn errors(outputs: &[ServeOutput]) -> Vec<&ServeOutput> {
+    outputs.iter().filter(|o| o.error.is_some()).collect()
+}
+
+// ------------------------------------------------------ plan determinism
+
+/// Synthesized plans are a pure function of (seed, event counts) and
+/// round-trip through the textual grammar unchanged.
+#[test]
+fn synth_plan_is_seed_deterministic_and_round_trips() {
+    let a = fault::synth_serve_plan(7, 40, 9, 2);
+    let b = fault::synth_serve_plan(7, 40, 9, 2);
+    assert_eq!(a, b, "same seed + census must synthesize the same plan");
+    assert_eq!(a.specs.len(), 3, "one arena exhaust + two pool panics");
+    assert_eq!(a.specs[0].site, Site::Arena);
+    assert!(1 <= a.specs[0].nth && a.specs[0].nth <= 9);
+    for s in &a.specs[1..] {
+        assert_eq!(s.site, Site::Pool);
+        assert!(1 <= s.nth && s.nth <= 40);
+    }
+    let back = FaultPlan::parse(&a.render()).unwrap();
+    assert_eq!(back, a, "parse(render(p)) != p");
+
+    // no pool events observed -> no pool faults synthesized
+    let dry = fault::synth_serve_plan(7, 0, 9, 2);
+    assert!(dry.specs.iter().all(|s| s.site != Site::Pool));
+}
+
+// ----------------------------------- arena exhaustion: one session fails
+
+/// A single-shot injected arena exhaustion retires exactly one session
+/// with a failed output; every survivor is bit-identical to the
+/// fault-free run, nothing leaks, and an identical plan replays to
+/// identical bits and an identical fault trace.
+#[test]
+fn one_shot_arena_exhaust_fails_exactly_one_session() {
+    let spec = toy_spec();
+    let pw = PackedWeights::new(Weights::init(&spec, 77));
+    let reqs = toy_requests(&spec, 6);
+    let cfg = toy_cfg();
+    let _g = pool::enter(pool::serial());
+
+    // fault-free census + baseline bits
+    let (clean, arena_events) = {
+        let scope = fault::install(&FaultPlan::default());
+        let rep = serve(&pw, &reqs, &cfg).unwrap();
+        (rep, scope.report().events_at(Site::Arena))
+    };
+    assert!(arena_events >= 1, "toy serve load must grow the arena at least once");
+    assert_eq!(clean.failed_sessions, 0);
+    assert_eq!(clean.leaked_pages, 0);
+
+    let plan = FaultPlan::parse(&format!("arena@{}=exhaust", arena_events / 2 + 1)).unwrap();
+    let run = |plan: &FaultPlan| {
+        let scope = fault::install(plan);
+        let rep = serve(&pw, &reqs, &cfg).unwrap();
+        (rep, scope.report())
+    };
+    let (chaos, fr1) = run(&plan);
+    let (replay, fr2) = run(&plan);
+
+    assert_eq!(fr1.total_injected(), 1);
+    let failed = errors(&chaos.outputs);
+    assert_eq!(failed.len(), 1, "one-shot exhaust must fail exactly one session");
+    assert_eq!(chaos.failed_sessions, 1);
+    let msg = failed[0].error.as_deref().unwrap();
+    assert!(msg.contains("injected fault"), "unexpected failure reason: {msg}");
+    for (c, cl) in chaos.outputs.iter().zip(&clean.outputs) {
+        if c.error.is_none() {
+            assert_eq!(c.tokens, cl.tokens, "survivor {} diverged from fault-free run", c.id);
+        }
+    }
+    assert_eq!(chaos.leaked_pages, 0, "failed session leaked arena pages");
+
+    // replay identity: same bits, same counters, same trace
+    assert_eq!(fr1, fr2, "fault reports diverged across replay");
+    for (a, b) in chaos.outputs.iter().zip(&replay.outputs) {
+        assert_eq!((a.id, &a.tokens, &a.error), (b.id, &b.tokens, &b.error));
+    }
+    assert_eq!(chaos.failed_sessions, replay.failed_sessions);
+    assert_eq!(chaos.tick_retries, replay.tick_retries);
+}
+
+// ------------------------------------------- pool panics: absorb / drain
+
+/// A single-shot pool-worker panic is absorbed by the bounded tick
+/// retry: the faulted tick rolls back and reruns, every session
+/// finishes with bits identical to the fault-free run, and the retry
+/// counter is the only trace the fault ever happened.
+#[test]
+fn one_shot_pool_panic_is_absorbed_bit_identically() {
+    quiet_panics(|| {
+        let spec = big_vocab_spec();
+        let pw = PackedWeights::new(Weights::init(&spec, 77));
+        let reqs = aligned_requests(&spec, 4);
+        let cfg = big_cfg();
+        let _g = pool::enter(Arc::new(pool::Pool::new(4)));
+
+        let (clean, pool_events) = {
+            let scope = fault::install(&FaultPlan::default());
+            let rep = serve(&pw, &reqs, &cfg).unwrap();
+            (rep, scope.report().events_at(Site::Pool))
+        };
+        assert!(pool_events >= 1, "4-lane big-vocab steps must fan out on the pool");
+        assert_eq!(clean.failed_sessions, 0);
+
+        let plan = FaultPlan::parse(&format!("pool@{}=panic", pool_events / 2 + 1)).unwrap();
+        let scope = fault::install(&plan);
+        let chaos = serve(&pw, &reqs, &cfg).unwrap();
+        assert_eq!(scope.report().injected_at(Site::Pool), 1);
+        drop(scope);
+
+        assert!(chaos.tick_retries >= 1, "absorbed fault must show up in the retry counter");
+        assert_eq!(chaos.failed_sessions, 0, "one-shot panic must not fail any session");
+        for (c, cl) in chaos.outputs.iter().zip(&clean.outputs) {
+            assert!(c.error.is_none());
+            assert_eq!(c.tokens, cl.tokens, "session {} diverged after absorbed panic", c.id);
+        }
+        assert_eq!(chaos.leaked_pages, 0);
+    });
+}
+
+/// A persistent pool panic exhausts the bounded retries: every stepping
+/// session is retired with a failed output carrying the panic payload —
+/// but the engine itself returns `Ok` and drains every arena page.
+#[test]
+fn persistent_pool_panic_fails_sessions_not_the_engine() {
+    quiet_panics(|| {
+        let spec = big_vocab_spec();
+        let pw = PackedWeights::new(Weights::init(&spec, 77));
+        let reqs = aligned_requests(&spec, 4);
+        let cfg = big_cfg();
+        let _g = pool::enter(Arc::new(pool::Pool::new(4)));
+
+        let _scope = fault::install(&FaultPlan::parse("pool@1=panic*always").unwrap());
+        let report = serve(&pw, &reqs, &cfg).unwrap();
+        assert_eq!(report.failed_sessions, reqs.len(), "every lockstep session steps, so all fail");
+        for o in &report.outputs {
+            let msg = o.error.as_deref().expect("session should have failed");
+            assert!(msg.contains("tick fault"), "unexpected reason: {msg}");
+            assert!(msg.contains("pool worker panic"), "lost panic payload: {msg}");
+            assert_eq!(o.generated, 0, "first step already faults — nothing generated");
+        }
+        assert_eq!(report.leaked_pages, 0, "drain after persistent faults leaked pages");
+    });
+}
+
+// ----------------------------------------- admission shedding & deadlines
+
+/// Arrivals beyond `queue_cap` are shed from the back of the queue
+/// before any forward work: highest ids come back as failed outputs
+/// with zero tokens generated, admitted sessions are bit-identical to
+/// the uncapped run.
+#[test]
+fn bounded_admission_queue_sheds_from_the_back() {
+    let spec = toy_spec();
+    let pw = PackedWeights::new(Weights::init(&spec, 77));
+    let reqs = toy_requests(&spec, 6);
+    let _g = pool::enter(pool::serial());
+
+    let clean = serve(&pw, &reqs, &toy_cfg()).unwrap();
+    let cfg = ServeConfig { queue_cap: 4, ..toy_cfg() };
+    let capped = serve(&pw, &reqs, &cfg).unwrap();
+
+    assert_eq!(capped.shed_sessions, 2);
+    assert_eq!(capped.failed_sessions, 2, "shed sessions count as failed");
+    for o in &capped.outputs {
+        if o.id >= 4 {
+            let msg = o.error.as_deref().expect("over-cap arrival should be shed");
+            assert!(msg.contains("shed"), "unexpected shed reason: {msg}");
+            assert_eq!(o.generated, 0, "shed before any forward work");
+        } else {
+            assert!(o.error.is_none());
+            assert_eq!(o.tokens, clean.outputs[o.id].tokens, "admitted session {} diverged", o.id);
+        }
+    }
+    assert_eq!(capped.leaked_pages, 0);
+}
+
+/// Tick-counted deadlines retire only the late session: a zero-tick
+/// deadline fails before any forward work, a small one fails with a
+/// partial generation, and sessions without deadlines are untouched.
+#[test]
+fn tick_deadlines_retire_only_the_late_session() {
+    let spec = toy_spec();
+    let pw = PackedWeights::new(Weights::init(&spec, 77));
+    let mut reqs = toy_requests(&spec, 3);
+    let _g = pool::enter(pool::serial());
+    let clean = serve(&pw, &reqs, &toy_cfg()).unwrap();
+
+    // zero budget: retired at the very first deadline sweep
+    reqs[1].deadline_ticks = 0;
+    let report = serve(&pw, &reqs, &toy_cfg()).unwrap();
+    assert_eq!(report.deadline_failures, 1);
+    let late = &report.outputs[1];
+    let msg = late.error.as_deref().expect("deadline 0 must fail");
+    assert!(msg.contains("deadline exceeded"), "unexpected reason: {msg}");
+    assert_eq!(late.generated, 0);
+    for id in [0usize, 2] {
+        assert!(report.outputs[id].error.is_none());
+        assert_eq!(report.outputs[id].tokens, clean.outputs[id].tokens);
+    }
+
+    // a 2-tick budget on a session that needs many more: partial output
+    reqs[1] = ServeRequest {
+        prompt: reqs[0].prompt.clone(),
+        max_new: 6,
+        sampler: Sampler::Greedy,
+        seed: 9,
+        deadline_ticks: 2,
+    };
+    let report = serve(&pw, &reqs, &toy_cfg()).unwrap();
+    let late = &report.outputs[1];
+    assert!(late.error.as_deref().unwrap_or("").contains("deadline exceeded"));
+    assert!(late.generated < 6, "2 ticks cannot produce 6 tokens");
+    assert_eq!(report.leaked_pages, 0);
+}
+
+// ------------------------------------------- leak-freedom (satellite 3)
+
+/// Whatever mix of faults hits mid-generation, the drained engine owns
+/// zero arena pages afterwards — across page sizes and pool widths.
+#[test]
+fn faulted_drains_leak_no_pages_across_page_sizes_and_widths() {
+    quiet_panics(|| {
+        // serial width: arena faults only (toy load never crosses the
+        // pool threshold)
+        let spec = toy_spec();
+        let pw = PackedWeights::new(Weights::init(&spec, 77));
+        let reqs = toy_requests(&spec, 6);
+        for page in [1usize, 2, 4, 8] {
+            let _g = pool::enter(pool::serial());
+            let cfg = ServeConfig { page, ..toy_cfg() };
+            let _scope = fault::install(&FaultPlan::parse("arena@3=exhaust*always").unwrap());
+            let report = serve(&pw, &reqs, &cfg).unwrap();
+            assert!(report.failed_sessions >= 1, "page={page}: persistent exhaust must bite");
+            assert_eq!(report.leaked_pages, 0, "page={page}: drain leaked pages");
+            assert_eq!(report.outputs.len(), reqs.len());
+        }
+
+        // parallel width: arena exhaust + persistent pool panic together
+        let spec = big_vocab_spec();
+        let pw = PackedWeights::new(Weights::init(&spec, 77));
+        let reqs = aligned_requests(&spec, 5);
+        for page in [1usize, 4] {
+            let _g = pool::enter(Arc::new(pool::Pool::new(4)));
+            let cfg = ServeConfig { page, ..big_cfg() };
+            let _scope =
+                fault::install(&FaultPlan::parse("arena@2=exhaust,pool@2=panic*always").unwrap());
+            let report = serve(&pw, &reqs, &cfg).unwrap();
+            assert!(report.failed_sessions >= 1, "page={page}: faults must bite");
+            assert_eq!(report.leaked_pages, 0, "page={page}: drain leaked pages");
+        }
+    });
+}
+
+/// Arena-level accounting through an injected exhaustion: the failed
+/// grow takes nothing, prior pages stay owned, and releasing every
+/// session returns the pool to exactly full — for every page size.
+#[test]
+fn arena_accounting_is_exact_through_injected_exhaustion() {
+    let spec = toy_spec();
+    for page in [1usize, 2, 4, 8] {
+        let mut arena = KvArena::for_spec(&spec, 16, page).unwrap();
+        let mut a = PagedKv::new();
+        let mut b = PagedKv::new();
+        arena.grow(&mut a, 2 * page + 1).unwrap(); // 3 pages
+        arena.grow(&mut b, page).unwrap(); // 1 page
+        assert_eq!(arena.used_pages(), 4);
+        {
+            let _scope = fault::install(&FaultPlan::parse("arena@1=exhaust*always").unwrap());
+            // within already-granted capacity: no allocation, no fault
+            arena.grow(&mut a, 2 * page).unwrap();
+            // allocating grow: injected exhaustion, b keeps its page
+            assert!(arena.grow(&mut b, 3 * page).is_err(), "page={page}");
+        }
+        assert_eq!(arena.used_pages(), 4, "page={page}: failed grow changed ownership");
+        arena.release(&mut a);
+        arena.release(&mut b);
+        assert_eq!(arena.used_pages(), 0, "page={page}");
+        assert_eq!(arena.free_pages(), arena.n_pages(), "page={page}: pool not whole again");
+    }
+}
+
+// --------------------------------- streaming prefetch fault (satellite 1)
+
+/// An injected corruption on the prefetch thread surfaces as a proper
+/// `Err` on the next layer access (never a hang or abort), and
+/// `rewind()` recovers the stream: the post-recovery pass hands back
+/// the exact bytes of a fault-free pass.
+#[test]
+fn prefetch_fault_surfaces_as_err_and_rewind_recovers() {
+    let spec = toy_spec();
+    let w = Weights::init(&spec, 77);
+    let cm = compact_from_mask(&w, &PruneMask::full(&spec), "chaos_stream_toy").unwrap();
+    let dir = std::env::temp_dir().join(format!("fasp_test_chaos_stream_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let index = write_shards(&dir, &cm).unwrap();
+    let store = ShardedWeights::open(cm.spec.clone(), dir.clone(), index).unwrap();
+
+    // fault-free baseline bytes, one tensor per layer
+    let baseline: Vec<Vec<f32>> = {
+        let mut src = StreamingParams::new(&store, 1).unwrap();
+        (0..spec.n_layers)
+            .map(|l| {
+                let t = src.get_l(l, "wo").unwrap();
+                src.layer_done(l).unwrap();
+                t.data
+            })
+            .collect()
+    };
+
+    let mut src = StreamingParams::new(&store, 1).unwrap();
+    {
+        // layer 0's prefetch was spawned at construction, before the
+        // scope existed — it reads clean. The layer-1 prefetch spawned
+        // while consuming layer 0 inherits the armed plan and corrupts.
+        let _scope = fault::install(&FaultPlan::parse("shard@1=corrupt*always").unwrap());
+        let t0 = src.get_l(0, "wo").unwrap();
+        assert_eq!(t0.data, baseline[0]);
+        src.layer_done(0).unwrap();
+        let err = src.get_l(1, "wo").expect_err("corrupted prefetch must surface as Err");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("checksum"), "expected a checksum failure, got: {msg}");
+    }
+
+    // scope dropped: rewind respawns prefetch under a clean plan
+    src.rewind().unwrap();
+    for (l, want) in baseline.iter().enumerate() {
+        let t = src.get_l(l, "wo").unwrap();
+        assert_eq!(&t.data, want, "layer {l} bytes changed across fault + rewind");
+        src.layer_done(l).unwrap();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ------------------------------------------------- shard-store probe
+
+/// The `fasp chaos` shard probe holds at test scale: a one-shot
+/// checksum corruption is absorbed by the bounded re-read while a
+/// persistent truncation surfaces as a per-call `Err`.
+#[test]
+fn shard_probe_absorbs_one_shot_and_errs_on_persistent() {
+    let spec = toy_spec();
+    let w = Weights::init(&spec, 77);
+    let dir = std::env::temp_dir().join(format!("fasp_test_chaos_probe_{}", std::process::id()));
+    let probe = chaos_shard_probe(&w, &dir);
+    std::fs::remove_dir_all(&dir).ok();
+    let probe = probe.unwrap();
+    assert_eq!(probe.shard_events, 1 + spec.n_layers as u64, "embed + one event per layer");
+    assert!(probe.absorbed_ok, "one-shot corruption must be absorbed by the re-read");
+    assert!(probe.retries_absorbed >= 1, "absorbed pass must show the retry");
+    assert!(probe.fatal_is_err, "persistent truncation must surface as Err");
+}

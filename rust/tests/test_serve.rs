@@ -59,7 +59,13 @@ fn toy_requests(spec: &ModelSpec, n: usize) -> Vec<ServeRequest> {
         } else {
             Sampler::TopK { k: 4, temperature: 0.9 }
         };
-        reqs.push(ServeRequest { prompt, max_new: 2 + i % 3, sampler, seed: 1000 + i as u64 });
+        reqs.push(ServeRequest {
+            prompt,
+            max_new: 2 + i % 3,
+            sampler,
+            seed: 1000 + i as u64,
+            ..Default::default()
+        });
     }
     if n >= 2 {
         reqs[n - 1].prompt = reqs[0].prompt.clone();
@@ -115,7 +121,14 @@ fn serve_bit_identical_to_sequential_across_compositions() {
         ] {
             let _g = pool::enter(Arc::new(pool::Pool::new(workers)));
             let n_pages = 64;
-            let cfg = ServeConfig { page, n_pages, max_batch, prefix_cache: true, prefill_chunk };
+            let cfg = ServeConfig {
+                page,
+                n_pages,
+                max_batch,
+                prefix_cache: true,
+                prefill_chunk,
+                ..Default::default()
+            };
             let report = serve(&pw, &reqs, &cfg).unwrap();
             assert_eq!(report.outputs.len(), reqs.len());
             for (o, want) in report.outputs.iter().zip(&expect) {
@@ -162,12 +175,19 @@ fn session_output_independent_of_batch_neighbors() {
                 max_batch: 1,
                 prefix_cache: false,
                 prefill_chunk: 2,
+                ..Default::default()
             };
             serve(&pw, std::slice::from_ref(r), &cfg).unwrap().outputs[0].tokens.clone()
         })
         .collect();
-    let cfg =
-        ServeConfig { page: 4, n_pages: 32, max_batch: 5, prefix_cache: false, prefill_chunk: 3 };
+    let cfg = ServeConfig {
+        page: 4,
+        n_pages: 32,
+        max_batch: 5,
+        prefix_cache: false,
+        prefill_chunk: 3,
+        ..Default::default()
+    };
     let batched = serve(&pw, &reqs, &cfg).unwrap();
     for (o, want) in batched.outputs.iter().zip(&solo) {
         assert_eq!(&o.tokens, want, "session {}: neighbors perturbed its output", o.id);
@@ -194,11 +214,19 @@ fn prefix_hit_bit_identical_to_cold_prefill() {
             max_new: 3,
             sampler: Sampler::TopK { k: 3, temperature: 1.1 },
             seed: 40 + i as u64,
+            ..Default::default()
         })
         .collect();
     let expect = sequential_reference(&pw, &reqs);
     let page = 2;
-    let cfg = ServeConfig { page, n_pages: 32, max_batch: 1, prefix_cache: true, prefill_chunk: 2 };
+    let cfg = ServeConfig {
+        page,
+        n_pages: 32,
+        max_batch: 1,
+        prefix_cache: true,
+        prefill_chunk: 2,
+        ..Default::default()
+    };
     let report = serve(&pw, &reqs, &cfg).unwrap();
     for (o, want) in report.outputs.iter().zip(&expect) {
         assert_eq!(&o.tokens, want, "session {}: prefix hit changed the bits", o.id);
@@ -231,7 +259,14 @@ fn arena_pages_are_reused_across_waves() {
     let reqs = toy_requests(&spec, 9);
     let page = 2;
     let max_batch = 2;
-    let cfg = ServeConfig { page, n_pages: 48, max_batch, prefix_cache: false, prefill_chunk: 4 };
+    let cfg = ServeConfig {
+        page,
+        n_pages: 48,
+        max_batch,
+        prefix_cache: false,
+        prefill_chunk: 4,
+        ..Default::default()
+    };
     let report = serve(&pw, &reqs, &cfg).unwrap();
     let total: usize = reqs
         .iter()
@@ -271,11 +306,25 @@ fn serve_rejects_unservable_requests_up_front() {
         max_new: 2,
         sampler: Sampler::Greedy,
         seed: 0,
+        ..Default::default()
     };
 
     // needs more pages than the whole arena
-    let big = ServeRequest { prompt: vec![1; 10], max_new: 10, sampler: Sampler::Greedy, seed: 0 };
-    let cfg = ServeConfig { page: 2, n_pages: 4, max_batch: 2, prefix_cache: true, prefill_chunk: 2 };
+    let big = ServeRequest {
+        prompt: vec![1; 10],
+        max_new: 10,
+        sampler: Sampler::Greedy,
+        seed: 0,
+        ..Default::default()
+    };
+    let cfg = ServeConfig {
+        page: 2,
+        n_pages: 4,
+        max_batch: 2,
+        prefix_cache: true,
+        prefill_chunk: 2,
+        ..Default::default()
+    };
     let err = serve(&pw, &[ok.clone(), big], &cfg).unwrap_err();
     assert!(
         format!("{err:#}").contains("rejected before any forward work"),
@@ -288,8 +337,14 @@ fn serve_rejects_unservable_requests_up_front() {
     assert!(format!("{err:#}").contains("prefill_chunk"), "{err:#}");
 
     // empty prompt / zero generation / out-of-vocab token
-    let cfg =
-        ServeConfig { page: 4, n_pages: 32, max_batch: 2, prefix_cache: true, prefill_chunk: 1 };
+    let cfg = ServeConfig {
+        page: 4,
+        n_pages: 32,
+        max_batch: 2,
+        prefix_cache: true,
+        prefill_chunk: 1,
+        ..Default::default()
+    };
     let empty = ServeRequest { prompt: vec![], ..ok.clone() };
     assert!(format!("{:#}", serve(&pw, &[empty], &cfg).unwrap_err()).contains("empty prompt"));
     let zero = ServeRequest { max_new: 0, ..ok.clone() };
@@ -305,16 +360,29 @@ fn serve_rejects_unservable_requests_up_front() {
         max_new: 2,
         sampler: Sampler::Greedy,
         seed: 0,
+        ..Default::default()
     };
-    let cfg =
-        ServeConfig { page: 8, n_pages: 64, max_batch: 1, prefix_cache: false, prefill_chunk: 4 };
+    let cfg = ServeConfig {
+        page: 8,
+        n_pages: 64,
+        max_batch: 1,
+        prefix_cache: false,
+        prefill_chunk: 4,
+        ..Default::default()
+    };
     let err = serve(&opw, &[long], &cfg).unwrap_err();
     assert!(format!("{err:#}").contains("learned positions"), "{err:#}");
 
     // ...and a request that merely has to WAIT for pages is fine: the
     // arena fits one session at a time, the queue drains in waves
-    let tight =
-        ServeConfig { page: 2, n_pages: 2, max_batch: 4, prefix_cache: false, prefill_chunk: 3 };
+    let tight = ServeConfig {
+        page: 2,
+        n_pages: 2,
+        max_batch: 4,
+        prefix_cache: false,
+        prefill_chunk: 3,
+        ..Default::default()
+    };
     let reqs = vec![ok.clone(), ok.clone(), ok];
     let expect = sequential_reference(&pw, &reqs);
     let report = serve(&pw, &reqs, &tight).unwrap();

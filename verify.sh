@@ -54,6 +54,14 @@
 #   8. a `fasp serve --check` smoke under both backends: the serve
 #      engine drives a self-generated session load end to end and
 #      re-verifies every session bit-identical to sequential generate.
+#   9. a `fasp chaos --check` smoke under both backends: the same serve
+#      load runs fault-free for a census, then twice under one seeded
+#      fault plan (pool-worker panics + KV-arena exhaustion) plus a
+#      shard-store corruption/truncation probe — asserting survivors
+#      bit-identical to the fault-free run, bit-identical replay, zero
+#      leaked arena pages, one-shot corruption absorbed by the bounded
+#      re-read and persistent truncation surfacing as a proper error.
+#      Writes BENCH_chaos.json.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -95,6 +103,14 @@ echo "== fasp serve smoke (default threaded backend) =="
 cargo run --release --quiet -- serve \
   --model llama_tiny --init --sessions 6 --prompt-len 8 --max-new 6 --check --fast
 
+echo "== fasp chaos smoke (FASP_THREADS=1, serial backend) =="
+FASP_THREADS=1 cargo run --release --quiet -- chaos \
+  --model llama_tiny --init --sessions 6 --prompt-len 8 --max-new 6 --check --fast
+
+echo "== fasp chaos smoke (default threaded backend) =="
+cargo run --release --quiet -- chaos \
+  --model llama_tiny --init --sessions 6 --prompt-len 8 --max-new 6 --check --fast
+
 echo "== bench_prune_time (check mode) =="
 FASP_BENCH_CHECK=1 cargo bench --bench bench_prune_time
 
@@ -110,3 +126,4 @@ echo "== verify OK =="
 [ -f BENCH_pack.json ] && echo "perf record: BENCH_pack.json"
 [ -f BENCH_serve.json ] && echo "perf record: BENCH_serve.json"
 [ -f BENCH_spec.json ] && echo "perf record: BENCH_spec.json"
+[ -f BENCH_chaos.json ] && echo "perf record: BENCH_chaos.json"
