@@ -397,6 +397,11 @@ fn main() {
              per-token transpose work is allowed after session build",
             cmp.decode_bt_transposes
         );
+        assert!(
+            cmp.int8_deterministic,
+            "int8 greedy decode diverged across replay or pool widths — \
+             the quantized lane kernel must stay deterministic"
+        );
         println!(
             "\npack {model} (x{} workers): plan {:.3}ms / {:.2}MB / {} weights; \
              fwd unpacked {:.3}ms vs packed {:.3}ms ({:.2}x); prefill \
@@ -420,6 +425,20 @@ fn main() {
             cmp.decode_bt_transposes,
             cmp.identical
         );
+        println!(
+            "pack int8 {model}: plan {:.3}ms / {:.2}MB ({:.2}x of f32); fwd \
+             {:.3}ms; prefill {:.3}ms; per-token {:.3}ms ({:.2}x of f32 \
+             packed); nll delta {:+.3e}; deterministic: {}",
+            cmp.int8_pack_build_ms,
+            cmp.int8_pack_bytes as f64 / 1e6,
+            cmp.int8_pack_bytes as f64 / cmp.pack_bytes.max(1) as f64,
+            cmp.int8_fwd_ms,
+            cmp.int8_prefill_ms,
+            cmp.int8_per_token_ms,
+            cmp.int8_per_token_ms / cmp.packed_per_token_ms.max(1e-12),
+            cmp.int8_nll_delta,
+            cmp.int8_deterministic
+        );
         if check {
             // the packed paths must strictly beat the per-call-transpose
             // baseline — the whole point of the persistent plan
@@ -434,6 +453,22 @@ fn main() {
                 "packed per-token decode {:.3}ms !< unpacked {:.3}ms",
                 cmp.packed_per_token_ms,
                 cmp.unpacked_per_token_ms
+            );
+            // int8 receipts: the quantized plan must roughly halve (in
+            // fact quarter) the resident pack bytes and must not regress
+            // per-token decode past the f32 packed path
+            assert!(
+                cmp.int8_pack_bytes as f64 <= 0.55 * cmp.pack_bytes as f64,
+                "int8 pack bytes {} !<= 0.55x f32 pack bytes {}",
+                cmp.int8_pack_bytes,
+                cmp.pack_bytes
+            );
+            assert!(
+                cmp.int8_per_token_ms <= 1.0 * cmp.packed_per_token_ms,
+                "int8 per-token decode {:.3}ms regressed past f32 packed \
+                 {:.3}ms — dequant must stay in-register on the hot path",
+                cmp.int8_per_token_ms,
+                cmp.packed_per_token_ms
             );
             let record = Json::obj(vec![
                 ("bench", Json::Str("pack".into())),
@@ -457,6 +492,19 @@ fn main() {
                     Json::Num(cmp.decode_bt_transposes as f64),
                 ),
                 ("identical", Json::Bool(cmp.identical)),
+                ("int8_pack_build_ms", Json::Num(cmp.int8_pack_build_ms)),
+                ("int8_pack_bytes", Json::Num(cmp.int8_pack_bytes as f64)),
+                (
+                    "int8_bytes_ratio",
+                    Json::Num(
+                        cmp.int8_pack_bytes as f64 / cmp.pack_bytes.max(1) as f64,
+                    ),
+                ),
+                ("int8_fwd_ms", Json::Num(cmp.int8_fwd_ms)),
+                ("int8_prefill_ms", Json::Num(cmp.int8_prefill_ms)),
+                ("int8_per_token_ms", Json::Num(cmp.int8_per_token_ms)),
+                ("int8_nll_delta", Json::Num(cmp.int8_nll_delta)),
+                ("int8_deterministic", Json::Bool(cmp.int8_deterministic)),
             ]);
             let path = fasp::repo_root().join("BENCH_pack.json");
             std::fs::write(&path, record.pretty()).unwrap();

@@ -6,5 +6,5 @@ pub mod perplexity;
 pub mod zeroshot;
 pub mod speed;
 
-pub use perplexity::{perplexity, perplexity_streamed};
+pub use perplexity::{perplexity, perplexity_as, perplexity_streamed};
 pub use zeroshot::eval_suite;

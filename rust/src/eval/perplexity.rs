@@ -4,16 +4,30 @@
 use crate::data::Batch;
 use crate::model::Weights;
 use crate::runtime::Session;
+use crate::tensor::pack::Quant;
 use anyhow::Result;
 
-/// Perplexity of `weights` on the given batches.
+/// Perplexity of `weights` on the given batches (exact f32 panels).
 pub fn perplexity(
     session: &Session,
     weights: &Weights,
     batches: &[Batch],
 ) -> Result<f64> {
+    perplexity_as(session, weights, batches, Quant::F32)
+}
+
+/// [`perplexity`] with an explicit packed-panel dtype — `Quant::Int8`
+/// evaluates the model through quantized panels (what a deployed int8
+/// plan actually computes), so the int8-vs-f32 ppl delta the quant
+/// experiment reports is measured on the real inference path.
+pub fn perplexity_as(
+    session: &Session,
+    weights: &Weights,
+    batches: &[Batch],
+    quant: Quant,
+) -> Result<f64> {
     anyhow::ensure!(!batches.is_empty(), "need at least one eval batch");
-    let params = session.pack(&weights.packed)?; // pack once
+    let params = session.pack_as(&weights.packed, quant)?; // pack once
     let mut total = 0.0f64;
     let mut count = 0usize;
     for b in batches {

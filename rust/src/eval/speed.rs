@@ -907,6 +907,25 @@ pub struct PackCompare {
     /// Packed ≡ unpacked, bitwise: token NLL of the forward AND the
     /// greedy decode token streams.
     pub identical: bool,
+    /// One-time cost of building the int8 plan (`Session::pack_as`), ms.
+    pub int8_pack_build_ms: f64,
+    /// Resident bytes of the int8 plan's panels (q codes + per-group
+    /// scale tables) — the ≤0.55× receipt vs `pack_bytes`.
+    pub int8_pack_bytes: usize,
+    /// Best-of-reps full forward over the int8 plan.
+    pub int8_fwd_ms: f64,
+    pub int8_prefill_ms: f64,
+    /// Mean cached-decode wall-time per token over the int8 plan — must
+    /// not regress past the f32 packed path (dequant rides in-register).
+    pub int8_per_token_ms: f64,
+    /// Greedy int8 decode determinism: token streams bit-identical
+    /// across a replay on the same backend AND across `HostBackend` vs
+    /// `ThreadedHostBackend` (pool-width independence). Int8 is *not*
+    /// bit-matched against f32 — its contract is self-consistency.
+    pub int8_deterministic: bool,
+    /// Mean-NLL delta, int8 forward minus exact-f32 forward (bounded
+    /// quantization error; reported, never bit-asserted).
+    pub int8_nll_delta: f64,
 }
 
 /// Measure the packed operator plan against the legacy unpacked path on
@@ -1017,6 +1036,45 @@ pub fn compare_packed(
         None => 0.0,
     };
 
+    // ---- int8 plan: bytes, latency, determinism, nll delta -------------
+    let t8 = std::time::Instant::now();
+    let params8 = session.pack_as(&w.packed, pack::Quant::Int8)?;
+    let int8_pack_build_ms = t8.elapsed().as_secs_f64() * 1e3;
+    let o8 = session.fwd_loss(&params8, &b.tokens, &b.targets)?; // warmup
+    let int8_nll_delta = o8.mean_nll as f64 - o_packed.mean_nll as f64;
+    let mut int8_fwd_ms = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t = std::time::Instant::now();
+        session.fwd_loss(&params8, &b.tokens, &b.targets)?;
+        int8_fwd_ms = int8_fwd_ms.min(t.elapsed().as_secs_f64() * 1e3);
+    }
+    session.generate(&params8, &prompt, &opts)?; // warmup
+    let mut int8_prefill_ms = f64::INFINITY;
+    let mut int8_per_token_ms = f64::INFINITY;
+    let mut toks8: Option<crate::tensor::IntTensor> = None;
+    let mut replay_eq = true;
+    for _ in 0..reps.max(1) {
+        let gen = session.generate(&params8, &prompt, &opts)?;
+        int8_prefill_ms = int8_prefill_ms.min(gen.prefill_s * 1e3);
+        int8_per_token_ms = int8_per_token_ms.min(gen.per_token_s() * 1e3);
+        if let Some(prev) = &toks8 {
+            replay_eq = replay_eq && gen.tokens.data == prev.data;
+        }
+        toks8 = Some(gen.tokens);
+    }
+    // pool-width independence: the same weights quantized + decoded on a
+    // serial and a threaded backend must emit one token stream (and match
+    // the process-default backend's stream above)
+    let single = Session::with_backend(manifest, model, Arc::new(HostBackend::new()))?;
+    let threaded =
+        Session::with_backend(manifest, model, Arc::new(ThreadedHostBackend::new(4)))?;
+    let g1 = single.generate(&single.pack_as(&w.packed, pack::Quant::Int8)?, &prompt, &opts)?;
+    let g2 =
+        threaded.generate(&threaded.pack_as(&w.packed, pack::Quant::Int8)?, &prompt, &opts)?;
+    let int8_deterministic = replay_eq
+        && toks8.map(|t| t.data == g1.tokens.data).unwrap_or(false)
+        && g1.tokens.data == g2.tokens.data;
+
     Ok(PackCompare {
         threads,
         pack_build_ms,
@@ -1034,5 +1092,12 @@ pub fn compare_packed(
         decode_pack_ops,
         decode_bt_transposes,
         identical,
+        int8_pack_build_ms,
+        int8_pack_bytes: params8.pack_bytes(),
+        int8_fwd_ms,
+        int8_prefill_ms,
+        int8_per_token_ms,
+        int8_deterministic,
+        int8_nll_delta,
     })
 }

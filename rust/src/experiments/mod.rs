@@ -12,6 +12,7 @@ pub mod table5;
 pub mod table6;
 pub mod fig34;
 pub mod extensions;
+pub mod quant;
 
 use crate::Result;
 use common::ExpCtx;
@@ -35,6 +36,7 @@ pub fn registry() -> Vec<Experiment> {
         Experiment { id: "ext_adaptive", paper_ref: "Extension: adaptive per-layer sparsity (§5 future work)", run: extensions::run_adaptive },
         Experiment { id: "ext_admm", paper_ref: "Extension: ADMM-vs-closed-form trade-off (§3.3)", run: extensions::run_admm },
         Experiment { id: "ext_calib", paper_ref: "Extension: calibration-budget sensitivity", run: extensions::run_calib },
+        Experiment { id: "quant", paper_ref: "Perf iteration: int8 packed panels, ppl-vs-bytes", run: quant::run },
     ]
 }
 

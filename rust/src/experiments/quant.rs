@@ -1,0 +1,61 @@
+//! `quant` — int8 packed-panel quality/bytes receipt (perf iteration):
+//! the same weights evaluated through exact-f32 panels and through the
+//! int8 quantized plan, dense and FASP-pruned, on both families. The
+//! int8 path is what a deployed quantized plan actually computes
+//! (dequant-in-register product kernels), so the ppl delta here is the
+//! honest cost of halving (in fact quartering) resident weight bytes.
+
+use super::common::{fmt_ppl, ExpCtx};
+use crate::bench_support::table::Table;
+use crate::eval::perplexity_as;
+use crate::prune::Method;
+use crate::tensor::pack::Quant;
+use crate::Result;
+
+pub fn run(ctx: &ExpCtx) -> Result<String> {
+    let mut out = String::new();
+    for model in ["opt_tiny", "llama_tiny"] {
+        let p = ctx.prepared(model)?;
+        let eval_b = p.dataset.valid_batches(ctx.eval_batches);
+        let mut t = Table::new(
+            &format!("Int8 packed panels vs f32 — {model} (FASP, PPL ↓)"),
+            &["sparsity", "f32 ppl", "int8 ppl", "delta", "f32 pack", "int8 pack"],
+        );
+        for &s in &[0.0, 0.30, 0.50] {
+            let w = if s == 0.0 {
+                p.weights.clone()
+            } else {
+                p.prune_only(ctx, Method::Fasp, s)?.0
+            };
+            let ppl_f32 = perplexity_as(&p.session, &w, &eval_b, Quant::F32)?;
+            let ppl_int8 = perplexity_as(&p.session, &w, &eval_b, Quant::Int8)?;
+            let b_f32 = p.session.pack_as(&w.packed, Quant::F32)?.pack_bytes();
+            let b_int8 = p.session.pack_as(&w.packed, Quant::Int8)?.pack_bytes();
+            crate::info!(
+                "{model} s={:.0}%: f32 ppl {:.3} vs int8 {:.3} ({:+.3}), \
+                 pack {:.2}MB → {:.2}MB ({:.2}x)",
+                s * 100.0,
+                ppl_f32,
+                ppl_int8,
+                ppl_int8 - ppl_f32,
+                b_f32 as f64 / 1e6,
+                b_int8 as f64 / 1e6,
+                b_int8 as f64 / b_f32.max(1) as f64
+            );
+            t.row(vec![
+                format!("{:.0}%", s * 100.0),
+                fmt_ppl(ppl_f32),
+                fmt_ppl(ppl_int8),
+                format!("{:+.3}", ppl_int8 - ppl_f32),
+                format!("{:.2}MB", b_f32 as f64 / 1e6),
+                format!(
+                    "{:.2}MB ({:.2}x)",
+                    b_int8 as f64 / 1e6,
+                    b_int8 as f64 / b_f32.max(1) as f64
+                ),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    Ok(out)
+}

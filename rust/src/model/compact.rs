@@ -344,6 +344,19 @@ pub fn save_compact_sharded(dir: &Path, cm: &CompactModel) -> Result<PathBuf> {
     write_spec_json(dir, cm, ("shards", index.to_json()))
 }
 
+/// [`save_compact_sharded`] with an explicit layer-shard payload dtype:
+/// `Quant::Int8` writes quantized layer shards (~0.27× the f32 stream
+/// bytes; the embed/head shard stays f32). The shard index records the
+/// dtype, so `ShardedWeights::open` serves the store transparently.
+pub fn save_compact_sharded_q(
+    dir: &Path,
+    cm: &CompactModel,
+    quant: crate::tensor::pack::Quant,
+) -> Result<PathBuf> {
+    let index = crate::runtime::store::write_shards_q(dir, cm, quant)?;
+    write_spec_json(dir, cm, ("shards", index.to_json()))
+}
+
 /// Save in the process-default [`ExportMode`] (`FASP_EXPORT`).
 pub fn save_compact_auto(dir: &Path, cm: &CompactModel) -> Result<PathBuf> {
     match ExportMode::from_env() {

@@ -7,7 +7,7 @@
 
 use crate::runtime::manifest::ModelSpec;
 use crate::tensor::io::TensorFile;
-use crate::tensor::pack::PackedMat;
+use crate::tensor::pack::{PackedMat, Quant};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
@@ -185,14 +185,25 @@ pub fn linear_shorts(family: &str) -> &'static [&'static str] {
 pub struct PackCache {
     global: BTreeMap<String, Arc<PackedMat>>,
     layers: Vec<BTreeMap<String, Arc<PackedMat>>>,
+    quant: Quant,
 }
 
 impl PackCache {
     /// Pack every linear weight (per [`linear_shorts`]) and the tied
     /// head of `w`, fanning the per-weight packs out on the ambient
     /// worker pool. Each pack is a pure relayout, so the cache holds
-    /// identical bytes at any pool width.
+    /// identical bytes at any pool width. Exact f32 panels — the
+    /// reference every bit-identity contract measures against.
     pub fn build(w: &Weights) -> PackCache {
+        Self::build_q(w, Quant::F32)
+    }
+
+    /// [`PackCache::build`] with an explicit panel dtype: `Int8`
+    /// quantizes each panel at pack time (~0.27× resident bytes,
+    /// bounded error — see `crate::tensor::pack`). Quantized bytes are
+    /// pool-width-independent just like the f32 relayout
+    /// (`test_backend.rs`).
+    pub fn build_q(w: &Weights, quant: Quant) -> PackCache {
         let shorts = linear_shorts(&w.spec.family);
         // job list: (layer/global target, packed-vector offset, rows, cols)
         struct Job {
@@ -226,15 +237,17 @@ impl PackCache {
         let pool = crate::util::pool::current();
         let packed: Vec<Arc<PackedMat>> = pool.map(jobs.len(), |i| {
             let j = &jobs[i];
-            Arc::new(PackedMat::pack_bt_raw(
+            Arc::new(PackedMat::pack_bt_raw_q(
                 &w.packed.data[j.off..j.off + j.rows * j.cols],
                 j.rows,
                 j.cols,
+                quant,
             ))
         });
         let mut cache = PackCache {
             global: BTreeMap::new(),
             layers: (0..w.spec.n_layers).map(|_| BTreeMap::new()).collect(),
+            quant,
         };
         for (job, pm) in jobs.into_iter().zip(packed) {
             match job.layer {
@@ -255,6 +268,11 @@ impl PackCache {
 
     pub fn get_l(&self, l: usize, short: &str) -> Option<Arc<PackedMat>> {
         self.layers.get(l).and_then(|m| m.get(short).cloned())
+    }
+
+    /// Panel dtype every pack in this cache was built with.
+    pub fn quant(&self) -> Quant {
+        self.quant
     }
 
     /// Number of packed weights held.
@@ -284,9 +302,14 @@ pub struct PackedWeights {
 }
 
 impl PackedWeights {
-    /// Build the pack cache for `w` on the ambient pool.
+    /// Build the (exact f32) pack cache for `w` on the ambient pool.
     pub fn new(w: Weights) -> PackedWeights {
-        let packs = PackCache::build(&w);
+        Self::new_q(w, Quant::F32)
+    }
+
+    /// [`PackedWeights::new`] with an explicit panel dtype.
+    pub fn new_q(w: Weights, quant: Quant) -> PackedWeights {
+        let packs = PackCache::build_q(&w, quant);
         PackedWeights { w, packs }
     }
 

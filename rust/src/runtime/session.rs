@@ -48,6 +48,7 @@ use crate::model::host;
 use crate::model::spec_decode::{self, SpecGeneration, SpecOpts};
 use crate::model::weights::{PackCache, PackedWeights};
 use crate::model::Weights;
+use crate::tensor::pack::Quant;
 use crate::tensor::ops::add_assign;
 use crate::tensor::{IntTensor, Tensor};
 use crate::util::pool::PoolScope;
@@ -173,7 +174,8 @@ pub struct PackedParams {
 }
 
 impl PackedParams {
-    /// Resident bytes of the pre-packed panels (the pack-cache receipt).
+    /// Resident bytes of the pre-packed panels (the pack-cache receipt;
+    /// int8 plans count quantized bytes + scale tables).
     pub fn pack_bytes(&self) -> usize {
         self.model.packs.bytes()
     }
@@ -181,6 +183,12 @@ impl PackedParams {
     /// Number of pre-packed weights in the plan.
     pub fn pack_count(&self) -> usize {
         self.model.packs.count()
+    }
+
+    /// Panel dtype of the plan ([`Quant::F32`] unless built with
+    /// [`Session::pack_as`]).
+    pub fn quant(&self) -> Quant {
+        self.model.packs.quant()
     }
 }
 
@@ -253,6 +261,20 @@ impl<'m> Session<'m> {
     /// `generate`) consumes the plan with zero per-call transpose or
     /// pack work.
     pub fn pack(&self, params: &Tensor) -> Result<PackedParams> {
+        // Always exact f32 — the reference every packed≡unpacked and
+        // decode≡re-forward bit contract measures against. Quantized
+        // plans are an explicit opt-in ([`Session::pack_as`]); `pack`
+        // never reads the environment.
+        self.pack_as(params, Quant::F32)
+    }
+
+    /// [`Session::pack`] with an explicit panel dtype: [`Quant::Int8`]
+    /// quantizes every linear panel (and the tied logits head) at pack
+    /// time — ~0.27× resident pack bytes, bounded error, deterministic
+    /// (int8 outputs are bit-identical across backends/pool widths,
+    /// just not bit-matched to f32). CLI entry points pass
+    /// [`Quant::from_env`] here; library callers choose explicitly.
+    pub fn pack_as(&self, params: &Tensor, quant: Quant) -> Result<PackedParams> {
         anyhow::ensure!(
             params.numel() == self.spec.n_params_elems(),
             "param length {} != {} ({})",
@@ -263,7 +285,7 @@ impl<'m> Session<'m> {
         let w = Weights::from_packed(&self.spec, params.data.clone())?;
         let packs = {
             let _exec = self.backend.enter();
-            PackCache::build(&w)
+            PackCache::build_q(&w, quant)
         };
         Ok(PackedParams { model: Arc::new(PackedWeights { w, packs }) })
     }

@@ -12,11 +12,17 @@
 //!   parameters are contiguous in manifest order, so every layer shard
 //!   is a contiguous slice of the monolithic packed vector.
 //! * [`ShardIndex`] / [`ShardMeta`] — the on-disk index (file names,
-//!   element counts, FNV-1a checksums of the exact file bytes), stored
-//!   in the compact spec so a stale or truncated shard fails loudly.
-//! * [`write_shards`] — the export side: serializes + checksums every
-//!   shard on the ambient worker pool (pure per-shard work, so the bytes
-//!   are pool-width-independent), then publishes via temp-file + rename.
+//!   element counts, payload dtype, FNV-1a checksums of the exact file
+//!   bytes), stored in the compact spec so a stale or truncated shard
+//!   fails loudly. Layer shards may carry an int8 payload
+//!   ([`Quant::Int8`]): group-of-64 symmetric quantization with per-
+//!   group f32 scales, ~0.27× the f32 stream bytes. The embed/head
+//!   shard stays f32 (it feeds the gather table). An index written
+//!   before the dtype field existed loads as f32.
+//! * [`write_shards`] / [`write_shards_q`] — the export side: serializes
+//!   + checksums every shard on the ambient worker pool (pure per-shard
+//!   work, so the bytes are pool-width-independent), then publishes via
+//!   temp-file + rename.
 //! * [`ShardedWeights`] — the lazy handle: per-shard loads with checksum
 //!   verification, full [`ShardedWeights::assemble`] for non-streaming
 //!   callers, and resident/peak-byte accounting ([`StreamSnapshot`]).
@@ -30,7 +36,9 @@ use crate::model::compact::CompactModel;
 use crate::model::weights::{gather_rows, linear_shorts, ParamSource, Weights};
 use crate::runtime::manifest::ModelSpec;
 use crate::tensor::io::TensorFile;
-use crate::tensor::pack::PackedMat;
+use crate::tensor::pack::{
+    dequantize_flat_range, quantize_flat, PackedMat, Quant, Q8_GROUP,
+};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -66,10 +74,29 @@ pub struct ShardMeta {
     pub kind: ShardKind,
     /// File name relative to the compact spec's directory.
     pub file: String,
-    /// f32 element count of the shard's packed tensor.
+    /// Element count of the shard's packed tensor (logical f32 elems,
+    /// whatever the payload dtype).
     pub elems: usize,
+    /// On-disk payload dtype. F32 shards are `.ftns` tensor files; Int8
+    /// shards are FQ8S blobs (q bytes + per-group f32 scales). The
+    /// checksum always covers the written bytes, so corruption detection
+    /// is dtype-agnostic.
+    pub dtype: Quant,
     /// FNV-1a of the shard file's exact bytes.
     pub checksum: u64,
+}
+
+impl ShardMeta {
+    /// Exact on-disk payload bytes this shard's tensor data occupies
+    /// (f32: 4·elems; int8: q bytes + scale table + blob header).
+    pub fn payload_bytes(&self) -> usize {
+        match self.dtype {
+            Quant::F32 => self.elems * 4,
+            Quant::Int8 => {
+                FQ8S_HEADER + self.elems + ((self.elems + Q8_GROUP - 1) / Q8_GROUP) * 4
+            }
+        }
+    }
 }
 
 /// The shard index written into the compact spec: embed shard first,
@@ -100,6 +127,7 @@ impl ShardIndex {
                     }
                     fields.push(("file", Json::Str(s.file.clone())));
                     fields.push(("elems", Json::Num(s.elems as f64)));
+                    fields.push(("dtype", Json::Str(s.dtype.label().to_string())));
                     fields.push(("checksum", Json::Str(format!("{:016x}", s.checksum))));
                     Json::obj(fields)
                 })
@@ -129,13 +157,20 @@ impl ShardIndex {
                 .get("elems")
                 .as_usize()
                 .with_context(|| format!("shard {i}: 'elems' field"))?;
+            // indices written before quantized shards existed carry no
+            // dtype field: those stores are f32 by construction
+            let dtype = match e.get("dtype").as_str() {
+                None => Quant::F32,
+                Some(s) => Quant::parse(s)
+                    .with_context(|| format!("shard {i}: unknown dtype '{s}'"))?,
+            };
             let csum = e
                 .get("checksum")
                 .as_str()
                 .with_context(|| format!("shard {i}: 'checksum' field"))?;
             let checksum = u64::from_str_radix(csum, 16)
                 .with_context(|| format!("shard {i}: bad checksum '{csum}'"))?;
-            shards.push(ShardMeta { kind, file, elems, checksum });
+            shards.push(ShardMeta { kind, file, elems, dtype, checksum });
         }
         Ok(ShardIndex { shards })
     }
@@ -163,6 +198,12 @@ impl ShardIndex {
             self.shards[0].elems,
             layout.embed_elems()
         );
+        anyhow::ensure!(
+            self.shards[0].dtype == Quant::F32,
+            "compact '{model}': embed shard must be f32 (it feeds the \
+             gather table), got {}",
+            self.shards[0].dtype.label()
+        );
         for l in 0..layout.layers.len() {
             let s = &self.shards[1 + l];
             anyhow::ensure!(
@@ -179,8 +220,21 @@ impl ShardIndex {
                 s.elems,
                 layout.layer_elems(l)
             );
+            anyhow::ensure!(
+                s.dtype == self.quant(),
+                "compact '{model}' layer {l}: shard dtype {} differs from \
+                 layer 0's {} — mixed-dtype stores are not supported",
+                s.dtype.label(),
+                self.quant().label()
+            );
         }
         Ok(())
+    }
+
+    /// The store's layer-shard dtype (layer shards are validated
+    /// uniform; an index with no layer shards is f32).
+    pub fn quant(&self) -> Quant {
+        self.shards.get(1).map(|s| s.dtype).unwrap_or(Quant::F32)
     }
 }
 
@@ -333,6 +387,77 @@ pub fn clean_stale_tmp(dir: &Path) -> TmpSweep {
     sweep
 }
 
+/// Int8 shard blob: `b"FQ8S"` magic, logical element count (u64 LE),
+/// quant group size (u32 LE), the i8 codes, then the per-group f32
+/// scales (LE) — no padding. ~elems + 4·⌈elems/group⌉ bytes vs 4·elems
+/// for f32.
+const FQ8S_MAGIC: &[u8; 4] = b"FQ8S";
+/// Fixed FQ8S header bytes: magic + elems (u64) + group (u32).
+const FQ8S_HEADER: usize = 4 + 8 + 4;
+
+/// Quantize a flat f32 shard payload into an FQ8S blob. Deterministic
+/// (serial per-element math), so shard bytes — and their checksums —
+/// are pool-width-independent.
+fn encode_fq8s(data: &[f32]) -> Vec<u8> {
+    let (q, scales) = quantize_flat(data, Q8_GROUP);
+    let mut out = Vec::with_capacity(FQ8S_HEADER + q.len() + scales.len() * 4);
+    out.extend_from_slice(FQ8S_MAGIC);
+    out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(Q8_GROUP as u32).to_le_bytes());
+    for &v in &q {
+        out.push(v as u8);
+    }
+    for &s in &scales {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    out
+}
+
+/// Parse an FQ8S blob back into (codes, scales, group). Every malformed
+/// shape — bad magic, short header, truncated or oversized payload —
+/// is a structural `Err` (never a panic: this sits on the serve path's
+/// shard-load route).
+fn decode_fq8s(bytes: &[u8], path: &Path) -> Result<(Vec<i8>, Vec<f32>, usize)> {
+    anyhow::ensure!(
+        bytes.len() >= FQ8S_HEADER,
+        "shard {}: int8 blob shorter than its {FQ8S_HEADER}-byte header",
+        path.display()
+    );
+    anyhow::ensure!(
+        &bytes[..4] == FQ8S_MAGIC,
+        "shard {}: bad int8 blob magic {:02x?}",
+        path.display(),
+        &bytes[..4]
+    );
+    let mut e8 = [0u8; 8];
+    e8.copy_from_slice(&bytes[4..12]);
+    let elems = u64::from_le_bytes(e8) as usize;
+    let mut g4 = [0u8; 4];
+    g4.copy_from_slice(&bytes[12..16]);
+    let group = u32::from_le_bytes(g4) as usize;
+    anyhow::ensure!(group >= 1, "shard {}: zero quant group", path.display());
+    let groups = (elems + group - 1) / group;
+    let want = FQ8S_HEADER + elems + groups * 4;
+    anyhow::ensure!(
+        bytes.len() == want,
+        "shard {}: int8 blob is {} bytes, header implies {want} — \
+         truncated or corrupt shard file",
+        path.display(),
+        bytes.len()
+    );
+    let q: Vec<i8> = bytes[FQ8S_HEADER..FQ8S_HEADER + elems]
+        .iter()
+        .map(|&b| b as i8)
+        .collect();
+    let mut scales = Vec::with_capacity(groups);
+    for c in bytes[FQ8S_HEADER + elems..].chunks_exact(4) {
+        let mut s4 = [0u8; 4];
+        s4.copy_from_slice(c);
+        scales.push(f32::from_le_bytes(s4));
+    }
+    Ok((q, scales, group))
+}
+
 /// Write one shard file per entry of the canonical index for `cm` under
 /// `dir` (created on demand). Serialization + checksumming fan out on
 /// the ambient worker pool — per-shard work is pure, so the bytes are
@@ -342,6 +467,14 @@ pub fn clean_stale_tmp(dir: &Path) -> TmpSweep {
 /// from older crashed publishes is cleared up front.
 /// Returns the index to embed in the compact spec.
 pub fn write_shards(dir: &Path, cm: &CompactModel) -> Result<ShardIndex> {
+    write_shards_q(dir, cm, Quant::F32)
+}
+
+/// [`write_shards`] with an explicit layer-shard payload dtype.
+/// `Quant::Int8` writes layer shards as FQ8S blobs (group-of-64
+/// symmetric quantization, ~0.27× the f32 bytes); the embed/head shard
+/// is always f32 — it feeds the token gather table directly.
+pub fn write_shards_q(dir: &Path, cm: &CompactModel, quant: Quant) -> Result<ShardIndex> {
     std::fs::create_dir_all(dir)
         .with_context(|| format!("create {}", dir.display()))?;
     let sweep = clean_stale_tmp(dir);
@@ -377,10 +510,19 @@ pub fn write_shards(dir: &Path, cm: &CompactModel) -> Result<ShardIndex> {
                 packed[layout.layers[l].0..layout.layers[l].1].to_vec()
             }
         };
-        let mut tf = TensorFile::new();
-        let n = data.len();
-        tf.insert("packed", Tensor::new(vec![n], data));
-        tf.to_bytes()
+        let dtype = match kinds[i] {
+            ShardKind::Embed => Quant::F32,
+            ShardKind::Layer(_) => quant,
+        };
+        match dtype {
+            Quant::F32 => {
+                let mut tf = TensorFile::new();
+                let n = data.len();
+                tf.insert("packed", Tensor::new(vec![n], data));
+                tf.to_bytes()
+            }
+            Quant::Int8 => Ok(encode_fq8s(&data)),
+        }
     });
     let mut shards = Vec::with_capacity(kinds.len());
     for (kind, blob) in kinds.into_iter().zip(blobs) {
@@ -388,6 +530,10 @@ pub fn write_shards(dir: &Path, cm: &CompactModel) -> Result<ShardIndex> {
         let elems = match kind {
             ShardKind::Embed => layout.embed_elems(),
             ShardKind::Layer(l) => layout.layer_elems(l),
+        };
+        let dtype = match kind {
+            ShardKind::Embed => Quant::F32,
+            ShardKind::Layer(_) => quant,
         };
         let file = shard_file(&cm.spec.name, kind);
         let tmp = dir.join(format!("{file}.tmp"));
@@ -399,7 +545,7 @@ pub fn write_shards(dir: &Path, cm: &CompactModel) -> Result<ShardIndex> {
             let _ = std::fs::remove_file(&tmp);
             return Err(anyhow::Error::new(e).context(format!("publish {file}")));
         }
-        shards.push(ShardMeta { kind, file, elems, checksum: fnv1a64(&bytes) });
+        shards.push(ShardMeta { kind, file, elems, dtype, checksum: fnv1a64(&bytes) });
     }
     Ok(ShardIndex { shards })
 }
@@ -449,6 +595,10 @@ impl StreamStats {
 /// A point-in-time view of a store's load/residency counters.
 #[derive(Debug, Clone, Copy)]
 pub struct StreamSnapshot {
+    /// Layer-shard payload dtype this store streams (f32 or int8). The
+    /// byte counters below measure payloads as stored, so an int8 store
+    /// reports the quantized sizes.
+    pub quant: Quant,
     /// Resident shard-payload bytes (raw weights).
     pub resident_bytes: usize,
     pub peak_resident_bytes: usize,
@@ -515,9 +665,15 @@ impl StoreInner {
     /// free (and on the synchronous path it simply replaces the per-call
     /// transpose `matmul_bt` used to pay). Pure relayout: bytes are
     /// thread- and pool-width-independent, and register in the store's
-    /// pack-residency counters.
-    fn pack_layer(inner: &Arc<StoreInner>, l: usize, shard: &[f32]) -> TrackedPacks {
+    /// pack-residency counters. On an int8 store each weight is
+    /// dequantized out of the shard and re-quantized into int8 panels
+    /// (shard groups run along the flat layer vector, panel groups along
+    /// k per output lane — different grids, so a requantization is
+    /// unavoidable); both steps bound their error by half a scale, and
+    /// the result stays deterministic for any pool width.
+    fn pack_layer(inner: &Arc<StoreInner>, l: usize, buf: &ShardBuf) -> Result<TrackedPacks> {
         let (start, _end) = inner.layout.layers[l];
+        let quant = inner.index.quant();
         let mut packs = PackMap::new();
         for short in linear_shorts(&inner.spec.family) {
             let name = Weights::pname(l, short);
@@ -525,14 +681,23 @@ impl StoreInner {
                 if shape.len() == 2 {
                     let (n, k) = (shape[0], shape[1]);
                     let local = off - start;
-                    packs.insert(
-                        (*short).to_string(),
-                        Arc::new(PackedMat::pack_bt_raw(&shard[local..local + n * k], n, k)),
-                    );
+                    let pm = match buf.as_f32() {
+                        Some(data) => PackedMat::pack_bt_raw_q(
+                            &data[local..local + n * k],
+                            n,
+                            k,
+                            quant,
+                        ),
+                        None => {
+                            let w = buf.slice_f32(local, n * k)?;
+                            PackedMat::pack_bt_raw_q(&w, n, k, quant)
+                        }
+                    };
+                    packs.insert((*short).to_string(), Arc::new(pm));
                 }
             }
         }
-        TrackedPacks::new(packs, inner.clone())
+        Ok(TrackedPacks::new(packs, inner.clone()))
     }
 }
 
@@ -553,22 +718,66 @@ pub struct ShardedWeights {
     inner: Arc<StoreInner>,
 }
 
+/// A loaded shard's in-memory payload: raw f32, or the int8 codes +
+/// per-group scales exactly as stored (dequantization happens at the
+/// point of use, so resident bytes stay at the quantized size).
+enum ShardPayload {
+    F32(Vec<f32>),
+    Int8 { q: Vec<i8>, scales: Vec<f32>, group: usize },
+}
+
 /// One loaded shard's packed payload. Dropping it releases the bytes in
 /// the store's residency accounting.
 pub struct ShardBuf {
-    data: Vec<f32>,
+    payload: ShardPayload,
+    /// Logical f32 element count (q code count for int8).
+    elems: usize,
     store: Arc<StoreInner>,
 }
 
 impl ShardBuf {
-    pub fn data(&self) -> &[f32] {
-        &self.data
+    /// Logical element count of the shard's packed tensor.
+    pub fn elems(&self) -> usize {
+        self.elems
+    }
+
+    /// Borrow the raw f32 payload — `None` for int8 shards.
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match &self.payload {
+            ShardPayload::F32(d) => Some(d),
+            ShardPayload::Int8 { .. } => None,
+        }
+    }
+
+    /// Resident bytes of the payload as held in memory.
+    fn payload_bytes(&self) -> usize {
+        match &self.payload {
+            ShardPayload::F32(d) => d.len() * 4,
+            ShardPayload::Int8 { q, scales, .. } => q.len() + scales.len() * 4,
+        }
+    }
+
+    /// Materialize elements `[off, off+n)` as f32 — a copy for f32
+    /// payloads, a dequantization (`q·scale`) for int8.
+    pub fn slice_f32(&self, off: usize, n: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            off + n <= self.elems,
+            "shard slice [{off}, {}) outside {} elems",
+            off + n,
+            self.elems
+        );
+        Ok(match &self.payload {
+            ShardPayload::F32(d) => d[off..off + n].to_vec(),
+            ShardPayload::Int8 { q, scales, group } => {
+                dequantize_flat_range(q, scales, *group, off, n)
+            }
+        })
     }
 }
 
 impl Drop for ShardBuf {
     fn drop(&mut self) {
-        self.store.stats.on_drop(self.data.len() * 4);
+        self.store.stats.on_drop(self.payload_bytes());
     }
 }
 
@@ -626,9 +835,31 @@ impl ShardedWeights {
         self.inner.layout.total_elems() * 4
     }
 
+    /// On-disk payload dtype of the layer shards.
+    pub fn quant(&self) -> Quant {
+        self.inner.index.quant()
+    }
+
+    /// Exact stream bytes: the sum of every shard's stored payload
+    /// bytes. Equal to `total_param_bytes` (+ small headers) on an f32
+    /// store; ~0.27× on int8.
+    pub fn total_payload_bytes(&self) -> usize {
+        self.inner.index.shards.iter().map(|s| s.payload_bytes()).sum()
+    }
+
+    /// Largest single layer shard's stored payload bytes.
+    pub fn max_layer_payload_bytes(&self) -> usize {
+        self.inner.index.shards[1..]
+            .iter()
+            .map(|s| s.payload_bytes())
+            .max()
+            .unwrap_or(0)
+    }
+
     pub fn stats(&self) -> StreamSnapshot {
         let s = &self.inner.stats;
         StreamSnapshot {
+            quant: self.inner.index.quant(),
             resident_bytes: s.resident.load(Ordering::Relaxed),
             peak_resident_bytes: s.peak.load(Ordering::Relaxed),
             pack_resident_bytes: s.pack_resident.load(Ordering::Relaxed),
@@ -677,22 +908,42 @@ impl ShardedWeights {
                 ));
                 continue;
             }
-            let mut tf = TensorFile::from_bytes(&bytes)
-                .with_context(|| format!("parse shard {}", path.display()))?;
-            let t = tf
-                .tensors
-                .remove("packed")
-                .with_context(|| format!("shard {}: missing 'packed' tensor", path.display()))?;
-            anyhow::ensure!(
-                t.numel() == meta.elems,
-                "shard {}: {} elems, index says {}",
-                path.display(),
-                t.numel(),
-                meta.elems
-            );
+            let payload = match meta.dtype {
+                Quant::F32 => {
+                    let mut tf = TensorFile::from_bytes(&bytes)
+                        .with_context(|| format!("parse shard {}", path.display()))?;
+                    let t = tf.tensors.remove("packed").with_context(|| {
+                        format!("shard {}: missing 'packed' tensor", path.display())
+                    })?;
+                    anyhow::ensure!(
+                        t.numel() == meta.elems,
+                        "shard {}: {} elems, index says {}",
+                        path.display(),
+                        t.numel(),
+                        meta.elems
+                    );
+                    ShardPayload::F32(t.data)
+                }
+                Quant::Int8 => {
+                    let (q, scales, group) = decode_fq8s(&bytes, &path)?;
+                    anyhow::ensure!(
+                        q.len() == meta.elems,
+                        "shard {}: {} elems, index says {}",
+                        path.display(),
+                        q.len(),
+                        meta.elems
+                    );
+                    ShardPayload::Int8 { q, scales, group }
+                }
+            };
+            let buf = ShardBuf {
+                payload,
+                elems: meta.elems,
+                store: self.inner.clone(),
+            };
             let ns = t0.elapsed().as_nanos() as u64;
-            self.inner.stats.on_load(t.data.len() * 4, ns);
-            return Ok(ShardBuf { data: t.data, store: self.inner.clone() });
+            self.inner.stats.on_load(buf.payload_bytes(), ns);
+            return Ok(buf);
         }
         Err(last.unwrap_or_else(|| {
             anyhow::anyhow!("shard {}: unreachable retry exit", path.display())
@@ -716,19 +967,25 @@ impl ShardedWeights {
 
     /// Materialize the full monolithic [`Weights`] (for non-streaming
     /// callers: re-pruning, checkpoints, equivalence tests). Shards load
-    /// one at a time, so even assembly never holds two copies.
+    /// one at a time, so even assembly never holds two copies. An int8
+    /// store assembles to its dequantized values — the exact f32 numbers
+    /// every streamed read of the same store serves.
     pub fn assemble(&self) -> Result<Weights> {
         let layout = &self.inner.layout;
         let mut packed = vec![0.0f32; layout.total_elems()];
         {
             let embed = self.load_embed()?;
             let plen = layout.prefix.1 - layout.prefix.0;
-            packed[layout.prefix.0..layout.prefix.1].copy_from_slice(&embed.data[..plen]);
-            packed[layout.tail.0..layout.tail.1].copy_from_slice(&embed.data[plen..]);
+            let tlen = layout.tail.1 - layout.tail.0;
+            packed[layout.prefix.0..layout.prefix.1]
+                .copy_from_slice(&embed.slice_f32(0, plen)?);
+            packed[layout.tail.0..layout.tail.1]
+                .copy_from_slice(&embed.slice_f32(plen, tlen)?);
         }
         for l in 0..layout.layers.len() {
             let shard = self.load_layer(l)?;
-            packed[layout.layers[l].0..layout.layers[l].1].copy_from_slice(&shard.data);
+            packed[layout.layers[l].0..layout.layers[l].1]
+                .copy_from_slice(&shard.slice_f32(0, layout.layer_elems(l))?);
         }
         Weights::from_packed(&self.inner.spec, packed)
     }
@@ -775,8 +1032,15 @@ pub struct StreamingParams {
 impl StreamingParams {
     pub fn new(store: &ShardedWeights, prefetch: usize) -> Result<StreamingParams> {
         let embed = store.load_embed()?;
+        // the tied logits head packs at the store's dtype: on an int8
+        // store it quantizes here exactly once, straight from the f32
+        // embed shard (no shard-side requantization for the head)
+        let quant = store.quant();
         let embed_packs = {
             let inner = &store.inner;
+            let emb = embed
+                .as_f32()
+                .context("embed shard must carry an f32 payload")?;
             let mut packs = PackMap::new();
             if let Some((off, shape)) = inner.offsets.get("tok_emb") {
                 if shape.len() == 2
@@ -787,10 +1051,11 @@ impl StreamingParams {
                     let local = off - inner.layout.prefix.0;
                     packs.insert(
                         "tok_emb".to_string(),
-                        Arc::new(PackedMat::pack_bt_raw(
-                            &embed.data[local..local + v * d],
+                        Arc::new(PackedMat::pack_bt_raw_q(
+                            &emb[local..local + v * d],
                             v,
                             d,
+                            quant,
                         )),
                     );
                 }
@@ -830,7 +1095,7 @@ impl StreamingParams {
                     let _serial = crate::util::pool::enter(crate::util::pool::serial());
                     let _faults = crate::fault::adopt(fh);
                     let buf = st.load_layer(l)?;
-                    let packs = StoreInner::pack_layer(&st.inner, l, &buf.data);
+                    let packs = StoreInner::pack_layer(&st.inner, l, &buf)?;
                     Ok((buf, packs))
                 }),
             ));
@@ -860,7 +1125,7 @@ impl StreamingParams {
                 // pack synchronously and restart any prefetch after `l`
                 self.next_spawn = self.next_spawn.max(l + 1);
                 let buf = self.store.load_layer(l)?;
-                let packs = StoreInner::pack_layer(&self.store.inner, l, &buf.data);
+                let packs = StoreInner::pack_layer(&self.store.inner, l, &buf)?;
                 (buf, packs)
             }
         };
@@ -899,7 +1164,7 @@ impl ParamSource for StreamingParams {
         } else {
             bail!("param '{name}' is a layer parameter — read it via get_l");
         };
-        Ok(Tensor::new(shape, self.embed.data[local..local + n].to_vec()))
+        Ok(Tensor::new(shape, self.embed.slice_f32(local, n)?))
     }
 
     fn get_l(&mut self, l: usize, short: &str) -> Result<Tensor> {
@@ -922,7 +1187,9 @@ impl ParamSource for StreamingParams {
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("layer {l} not resident after ensure_layer"))?
             .1;
-        Ok(Tensor::new(shape, buf.data[off - start..off - start + n].to_vec()))
+        // int8 stores dequantize here — one bounded quantization step
+        // between the exported f32 values and what the forward sees
+        Ok(Tensor::new(shape, buf.slice_f32(off - start, n)?))
     }
 
     fn get_packed(
@@ -961,7 +1228,11 @@ impl ParamSource for StreamingParams {
             "'tok_emb' lies outside the embed shard"
         );
         let local = off - lay.prefix.0;
-        gather_rows(&self.embed.data[local..local + n], shape[0], shape[1], ids)
+        let emb = self
+            .embed
+            .as_f32()
+            .context("embed shard must carry an f32 payload")?;
+        gather_rows(&emb[local..local + n], shape[0], shape[1], ids)
     }
 
     fn with_rows(
@@ -995,7 +1266,11 @@ impl ParamSource for StreamingParams {
         } else {
             bail!("param '{name}' is a layer parameter — read it via get_l");
         };
-        f(&self.embed.data[local + row0 * c..local + (row0 + count) * c]);
+        let emb = self
+            .embed
+            .as_f32()
+            .context("embed shard must carry an f32 payload")?;
+        f(&emb[local + row0 * c..local + (row0 + count) * c]);
         Ok(())
     }
 
@@ -1101,18 +1376,77 @@ mod tests {
                     kind: ShardKind::Embed,
                     file: "m.embed.ftns".into(),
                     elems: 10,
+                    dtype: Quant::F32,
                     checksum: 0xdead_beef_0102_0304,
                 },
                 ShardMeta {
                     kind: ShardKind::Layer(0),
                     file: "m.layer000.ftns".into(),
                     elems: 20,
+                    dtype: Quant::Int8,
                     checksum: 7,
                 },
             ],
         };
         let re = ShardIndex::from_json(&idx.to_json()).unwrap();
         assert_eq!(re, idx);
+        assert_eq!(re.quant(), Quant::Int8);
+    }
+
+    #[test]
+    fn index_json_without_dtype_loads_as_f32() {
+        // an index serialized before quantized shards existed: no
+        // "dtype" field anywhere — must load as an f32 store
+        let legacy = Json::Arr(vec![
+            Json::obj(vec![
+                ("kind", Json::Str("embed".into())),
+                ("file", Json::Str("m.embed.ftns".into())),
+                ("elems", Json::Num(10.0)),
+                ("checksum", Json::Str(format!("{:016x}", 3u64))),
+            ]),
+            Json::obj(vec![
+                ("kind", Json::Str("layer".into())),
+                ("layer", Json::Num(0.0)),
+                ("file", Json::Str("m.layer000.ftns".into())),
+                ("elems", Json::Num(20.0)),
+                ("checksum", Json::Str(format!("{:016x}", 7u64))),
+            ]),
+        ]);
+        let idx = ShardIndex::from_json(&legacy).unwrap();
+        assert!(idx.shards.iter().all(|s| s.dtype == Quant::F32));
+        assert_eq!(idx.quant(), Quant::F32);
+        // and a current-format serialization round-trips it unchanged
+        assert_eq!(ShardIndex::from_json(&idx.to_json()).unwrap(), idx);
+    }
+
+    #[test]
+    fn fq8s_blob_roundtrips_and_rejects_corruption() {
+        let data: Vec<f32> =
+            (0..150).map(|i| ((i * 37 % 101) as f32 - 50.0) / 9.0).collect();
+        let blob = encode_fq8s(&data);
+        assert_eq!(
+            blob.len(),
+            FQ8S_HEADER + 150 + ((150 + Q8_GROUP - 1) / Q8_GROUP) * 4
+        );
+        let p = Path::new("unit.fq8s");
+        let (q, scales, group) = decode_fq8s(&blob, p).unwrap();
+        assert_eq!(group, Q8_GROUP);
+        assert_eq!(q.len(), 150);
+        for (i, (&qv, &x)) in q.iter().zip(&data).enumerate() {
+            let s = scales[i / group];
+            assert!(
+                (x - qv as f32 * s).abs() <= s * 0.5 + 1e-6,
+                "elem {i}: {x} vs {}·{}",
+                qv,
+                s
+            );
+        }
+        // truncated payload and bad magic are structural errors
+        assert!(decode_fq8s(&blob[..blob.len() - 1], p).is_err());
+        let mut bad = blob.clone();
+        bad[0] = b'X';
+        assert!(decode_fq8s(&bad, p).is_err());
+        assert!(decode_fq8s(&blob[..6], p).is_err());
     }
 
     #[test]
@@ -1124,6 +1458,7 @@ mod tests {
                 kind: ShardKind::Embed,
                 file: "x.embed.ftns".into(),
                 elems: lay.embed_elems(),
+                dtype: Quant::F32,
                 checksum: 0,
             }],
         };

@@ -20,7 +20,11 @@
 //!   linear weight), unrolled over output-column lanes so the serial
 //!   accumulator chain of one column no longer bounds throughput;
 //! * [`matmul_at`] — the Aᵀ-indexed instance (transpose-free Gram /
-//!   backward products).
+//!   backward products);
+//! * [`lane_accum_q8`] — the int8-panel instance (dequant-in-register:
+//!   elementwise `q·scale` before the same ascending-k accumulation),
+//!   so quantized products keep the determinism contract while storing
+//!   one byte per weight.
 //!
 //! Because the per-element order is shared, all of these are
 //! **bit-identical** to each other on the same logical product — across
@@ -89,6 +93,48 @@ pub fn lane_accum(
         let br = &b[kk * ldb + col0..kk * ldb + col0 + out.len()];
         for (o, bv) in out.iter_mut().zip(br) {
             *o += av * bv;
+        }
+    }
+}
+
+/// The int8 instance of [`lane_accum`]: the panel stores quantized
+/// bytes `q[kk·ldb + j]` with one f32 scale per (k-group, lane) —
+/// `scales[(kk / group)·ldb + j]` — and each contribution dequantizes
+/// **in register** before accumulating:
+///
+/// ```text
+/// out[j] += Σ_{kk = k0..k1, ascending} a[kk] · (q[kk·ldb + col0 + j] as f32 · s[(kk/group)·ldb + col0 + j])
+/// ```
+///
+/// Dequantization is elementwise (no reduction of its own), so the
+/// accumulation order is exactly [`lane_accum`]'s: ascending-k, one
+/// accumulator per lane, zero-skip on the activation. Int8 products are
+/// therefore bit-identical to themselves across pool widths and jitter
+/// — the same partition-disjointness argument as f32. They are *not*
+/// bit-matched to f32 (quantization error is bounded, not zero); f32
+/// mode stays the exact reference.
+#[inline]
+pub fn lane_accum_q8(
+    a: &[f32],
+    k0: usize,
+    k1: usize,
+    q: &[i8],
+    scales: &[f32],
+    group: usize,
+    ldb: usize,
+    col0: usize,
+    out: &mut [f32],
+) {
+    for kk in k0..k1 {
+        let av = a[kk];
+        if av == 0.0 {
+            continue;
+        }
+        let qr = &q[kk * ldb + col0..kk * ldb + col0 + out.len()];
+        let g = kk / group;
+        let sr = &scales[g * ldb + col0..g * ldb + col0 + out.len()];
+        for ((o, qv), sv) in out.iter_mut().zip(qr).zip(sr) {
+            *o += av * ((*qv as f32) * *sv);
         }
     }
 }
@@ -226,6 +272,46 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
                     k0,
                     k1,
                     b,
+                    n,
+                    0,
+                    &mut c[i * n..(i + 1) * n],
+                );
+            }
+        }
+    }
+}
+
+/// Blocked C += A·(int8 panel) on raw slices: [`lane_accum_q8`] per
+/// (row, k-block), k-blocks ascending — so each output row accumulates
+/// in exactly the order the single-row decode path
+/// (`matvec_packed_into` → one unblocked `lane_accum_q8` sweep) uses,
+/// and prefill rows are bit-identical to decode steps under int8 just
+/// as [`matmul_into`] rows are under f32.
+pub fn matmul_q8_into(
+    a: &[f32],
+    q: &[i8],
+    scales: &[f32],
+    group: usize,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(q.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for i in i0..i1 {
+                lane_accum_q8(
+                    &a[i * k..(i + 1) * k],
+                    k0,
+                    k1,
+                    q,
+                    scales,
+                    group,
                     n,
                     0,
                     &mut c[i * n..(i + 1) * n],

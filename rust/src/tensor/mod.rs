@@ -11,4 +11,4 @@ pub mod pack;
 pub mod io;
 
 pub use core::{IntTensor, Tensor};
-pub use pack::PackedMat;
+pub use pack::{PackedMat, Quant};

@@ -4,22 +4,33 @@
 //! streamed eval — killing the per-call transpose copy `matmul_bt` pays
 //! and the per-call weight copy `ParamSource::get_l` pays.
 //!
-//! A [`PackedMat`] is a pure relayout: the product kernels
-//! ([`matmul_packed`], [`matvec_packed_into`]) run the same canonical
-//! lane reduction order (`lane_accum`: ascending-k, one accumulator per
-//! output lane, zero-skip on the activation) the unpacked paths run, so
-//! packed and unpacked products are **bit-identical** — packing is
-//! purely a latency decision, never a numerics one
-//! (`rust/tests/test_pack.rs`).
+//! A [`PackedMat`] holds one of two payloads ([`Quant`]):
 //!
-//! Packing is pool-parallel (scatter over disjoint k-rows → bytes are
-//! pool-width-independent, locked in by `test_backend.rs`) and counted
-//! process-wide ([`pack_ops`]): the `bench_hot_paths` packing section
-//! asserts a decode loop performs **zero** pack work after its session
-//! is built.
+//! * **F32** — a pure relayout: the product kernels ([`matmul_packed`],
+//!   [`matvec_packed_into`]) run the same canonical lane reduction order
+//!   (`lane_accum`: ascending-k, one accumulator per output lane,
+//!   zero-skip on the activation) the unpacked paths run, so packed and
+//!   unpacked products are **bit-identical** — packing is purely a
+//!   latency decision, never a numerics one (`rust/tests/test_pack.rs`).
+//! * **Int8** — the f32 panel symmetrically quantized at pack time to
+//!   one byte per weight plus an f32 scale per ([`Q8_GROUP`]-deep
+//!   k-group, output lane), rounding to nearest-even. Products
+//!   dequantize **in register** (`lane_accum_q8`: the elementwise
+//!   `q·scale` feeds the same ascending-k single-accumulator order), so
+//!   int8 results are bit-identical *to themselves* across pool widths,
+//!   jitter and packed sources — while int8-vs-f32 deltas are bounded by
+//!   the quantization step (asserted as a bound, never bit-matched; f32
+//!   stays the exact reference). Resident bytes drop to
+//!   `k·n + 4·⌈k/64⌉·n` ≈ 0.27× the f32 panel.
+//!
+//! Packing is pool-parallel (scatter over disjoint k-rows, quantization
+//! over disjoint k-groups → bytes are pool-width-independent, locked in
+//! by `test_backend.rs`) and counted process-wide ([`pack_ops`]): the
+//! `bench_hot_paths` packing section asserts a decode loop performs
+//! **zero** pack work after its session is built.
 
 use crate::util::pool;
-use super::matmul::{lane_accum, matmul_into};
+use super::matmul::{lane_accum, lane_accum_q8, matmul_into, matmul_q8_into};
 use super::Tensor;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -30,6 +41,53 @@ static PACK_OPS: AtomicU64 = AtomicU64::new(0);
 /// per-token decode hot loop does no packing after session build.
 pub fn pack_ops() -> u64 {
     PACK_OPS.load(Ordering::Relaxed)
+}
+
+/// k-rows per quantization scale group: each [`Q8_GROUP`]-deep slab of a
+/// panel's reduction axis shares one f32 scale per output lane. Matches
+/// the matmul cache block, so blocked products never straddle a group
+/// mid-block.
+pub const Q8_GROUP: usize = 64;
+
+/// Payload dtype of a [`PackedMat`] (and of a shard store built from
+/// one). `F32` is the exact reference; `Int8` trades bounded error for
+/// ~0.27× the bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Quant {
+    F32,
+    Int8,
+}
+
+impl Quant {
+    /// Parse a dtype name ("f32" / "int8", few aliases); `None` when
+    /// unrecognized so callers can surface a proper error.
+    pub fn parse(s: &str) -> Option<Quant> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Some(Quant::F32),
+            "int8" | "i8" | "q8" => Some(Quant::Int8),
+            _ => None,
+        }
+    }
+
+    /// Canonical short name (index JSON, CLI tables, bench rows).
+    pub fn label(self) -> &'static str {
+        match self {
+            Quant::F32 => "f32",
+            Quant::Int8 => "int8",
+        }
+    }
+
+    /// The `FASP_QUANT` env knob, read at CLI boundaries **only**
+    /// (`fasp generate/serve/chaos/shard`): library entry points take
+    /// the dtype explicitly (`Session::pack_as`, `write_shards_q`), and
+    /// `Session::pack` is pinned to `F32` so every packed≡unpacked bit
+    /// contract stays env-insensitive. Unset/unknown → `F32`.
+    pub fn from_env() -> Quant {
+        std::env::var("FASP_QUANT")
+            .ok()
+            .and_then(|s| Quant::parse(&s))
+            .unwrap_or(Quant::F32)
+    }
 }
 
 /// Which operand layout a [`PackedMat`] was packed from (the pack is a
@@ -43,21 +101,162 @@ pub enum Orient {
     Ab,
 }
 
+/// The dtype-specific panel storage. Both variants are k-major [k, n]:
+/// element (kk, j) multiplies activation kk into lane j.
+enum Payload {
+    F32(Vec<f32>),
+    Int8 {
+        /// `q[kk·n + j]`, one byte per weight.
+        q: Vec<i8>,
+        /// `scales[(kk / Q8_GROUP)·n + j]`, ⌈k/64⌉·n entries.
+        scales: Vec<f32>,
+    },
+}
+
 /// A weight packed once into the k-major [k, n] panel layout the blocked
-/// kernel consumes: `data[kk·n + j]` multiplies activation element `kk`
-/// into output lane `j`.
+/// kernel consumes (f32 exact, or int8 + per-group scales).
 pub struct PackedMat {
-    data: Vec<f32>,
+    payload: Payload,
     k: usize,
     n: usize,
     orient: Orient,
 }
 
+/// Round half to even — the quantizer's tie-break, implemented manually
+/// so it cannot drift with toolchain intrinsics. Exact for the
+/// magnitudes the quantizer produces (|x| ≤ 127 + ε, far below 2²³
+/// where `floor`/subtract stay exact in f32).
+fn rne(x: f32) -> f32 {
+    let fl = x.floor();
+    let frac = x - fl;
+    if frac > 0.5 {
+        fl + 1.0
+    } else if frac < 0.5 {
+        fl
+    } else if (fl as i64) % 2 == 0 {
+        fl
+    } else {
+        fl + 1.0
+    }
+}
+
+/// Quantize k-rows [kk0, kk1) of a k-major panel: per-lane amax over the
+/// group, symmetric scale `amax/127`, round-to-nearest-even, clamp to
+/// [-127, 127]. An all-zero lane keeps scale 0 and quantizes to 0
+/// (exact zeros survive quantization, preserving the kernels' zero-skip
+/// semantics on the activation side and sparsity in the panel).
+fn quantize_group(panel: &[f32], n: usize, kk0: usize, kk1: usize) -> (Vec<i8>, Vec<f32>) {
+    let mut amax = vec![0.0f32; n];
+    for kk in kk0..kk1 {
+        let row = &panel[kk * n..(kk + 1) * n];
+        for (m, &v) in amax.iter_mut().zip(row) {
+            let a = v.abs();
+            if a > *m {
+                *m = a;
+            }
+        }
+    }
+    let mut scales = vec![0.0f32; n];
+    for (s, &m) in scales.iter_mut().zip(&amax) {
+        *s = m / 127.0;
+    }
+    let mut q = vec![0i8; (kk1 - kk0) * n];
+    for kk in kk0..kk1 {
+        let row = &panel[kk * n..(kk + 1) * n];
+        let qrow = &mut q[(kk - kk0) * n..(kk - kk0 + 1) * n];
+        for ((qv, &v), &s) in qrow.iter_mut().zip(row).zip(&scales) {
+            if s > 0.0 {
+                *qv = rne(v / s).clamp(-127.0, 127.0) as i8;
+            }
+        }
+    }
+    (q, scales)
+}
+
+/// Quantize a whole k-major [k, n] panel into (q, scales). Groups are
+/// independent (disjoint k-slabs, each computed with identical serial
+/// arithmetic), so the pooled fan-out returns the exact bytes of the
+/// serial loop at any width ([`pool::Pool::map`] slots by index).
+fn quantize_panel(panel: &[f32], k: usize, n: usize) -> (Vec<i8>, Vec<f32>) {
+    let groups = (k + Q8_GROUP - 1) / Q8_GROUP;
+    let part = |g: usize| {
+        let kk0 = g * Q8_GROUP;
+        let kk1 = (kk0 + Q8_GROUP).min(k);
+        quantize_group(panel, n, kk0, kk1)
+    };
+    let p = pool::current();
+    let parts: Vec<(Vec<i8>, Vec<f32>)> =
+        if p.workers() > 1 && groups >= 2 && k * n >= pool::PAR_THRESHOLD {
+            p.map(groups, part)
+        } else {
+            (0..groups).map(part).collect()
+        };
+    let mut q = Vec::with_capacity(k * n);
+    let mut scales = Vec::with_capacity(groups * n);
+    for (qg, sg) in parts {
+        q.extend_from_slice(&qg);
+        scales.extend_from_slice(&sg);
+    }
+    (q, scales)
+}
+
+/// Symmetric int8 quantization of a flat vector in groups of `group`
+/// consecutive elements, one f32 scale per group — the shard-payload
+/// quantizer (`runtime/store.rs` int8 shards). Same round-to-nearest-
+/// even + clamp discipline as the panel quantizer, so
+/// `|v[i] - q[i]·scales[i/group]| ≤ scales[i/group]/2` per element and
+/// exact zeros stay exact.
+pub fn quantize_flat(v: &[f32], group: usize) -> (Vec<i8>, Vec<f32>) {
+    let groups = (v.len() + group - 1) / group;
+    let mut q = vec![0i8; v.len()];
+    let mut scales = vec![0.0f32; groups];
+    for g in 0..groups {
+        let a = g * group;
+        let b = (a + group).min(v.len());
+        let mut amax = 0.0f32;
+        for &x in &v[a..b] {
+            let ax = x.abs();
+            if ax > amax {
+                amax = ax;
+            }
+        }
+        let s = amax / 127.0;
+        scales[g] = s;
+        if s > 0.0 {
+            for (qv, &x) in q[a..b].iter_mut().zip(&v[a..b]) {
+                *qv = rne(x / s).clamp(-127.0, 127.0) as i8;
+            }
+        }
+    }
+    (q, scales)
+}
+
+/// Dequantize the sub-range [off, off+n) of a [`quantize_flat`] payload:
+/// `q[i]·scales[i/group]`. Callers bounds-check `off + n ≤ q.len()`.
+pub fn dequantize_flat_range(
+    q: &[i8],
+    scales: &[f32],
+    group: usize,
+    off: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = (q[off + i] as f32) * scales[(off + i) / group];
+    }
+    out
+}
+
 impl PackedMat {
-    /// Pack a [n, k] linear weight (A·Bᵀ orientation).
+    /// Pack a [n, k] linear weight (A·Bᵀ orientation), exact f32.
     pub fn pack_bt(w: &Tensor) -> PackedMat {
+        Self::pack_bt_q(w, Quant::F32)
+    }
+
+    /// [`PackedMat::pack_bt`] with an explicit payload dtype.
+    pub fn pack_bt_q(w: &Tensor, quant: Quant) -> PackedMat {
         let (n, k) = w.dims2();
-        Self::pack_bt_raw(&w.data, n, k)
+        Self::pack_bt_raw_q(&w.data, n, k, quant)
     }
 
     /// [`PackedMat::pack_bt`] over a raw row-major [n, k] slice — lets
@@ -67,6 +266,16 @@ impl PackedMat {
     /// pool; every output element is written exactly once with no
     /// arithmetic, so the bytes are identical at any pool width.
     pub fn pack_bt_raw(w: &[f32], n: usize, k: usize) -> PackedMat {
+        Self::pack_bt_raw_q(w, n, k, Quant::F32)
+    }
+
+    /// [`PackedMat::pack_bt_raw`] with an explicit payload dtype:
+    /// `Int8` builds the f32 panel first (same scatter), then quantizes
+    /// it group-by-group ([`Q8_GROUP`] k-rows per scale) and drops the
+    /// f32 copy. Quantization is round-to-nearest-even against a
+    /// symmetric per-(group, lane) scale, so `|w - q·s| ≤ s/2` per
+    /// element — the bound `test_pack.rs` propertizes.
+    pub fn pack_bt_raw_q(w: &[f32], n: usize, k: usize, quant: Quant) -> PackedMat {
         assert_eq!(w.len(), n * k, "pack_bt_raw: {} elems for [{n}, {k}]", w.len());
         PACK_OPS.fetch_add(1, Ordering::Relaxed);
         let mut data = vec![0.0f32; k * n];
@@ -79,20 +288,29 @@ impl PackedMat {
             }
         };
         let p = pool::current();
-        if p.workers() > 1 && n >= 1 && k >= 2 && k * n >= pool::PAR_THRESHOLD {
+        if p.workers() > 1 && k >= 2 && k * n >= pool::PAR_THRESHOLD {
             p.run_rows1(&mut data, n, fill);
         } else {
             fill(0, &mut data);
         }
-        PackedMat { data, k, n, orient: Orient::Bt }
+        let payload = match quant {
+            Quant::F32 => Payload::F32(data),
+            Quant::Int8 => {
+                let (q, scales) = quantize_panel(&data, k, n);
+                Payload::Int8 { q, scales }
+            }
+        };
+        PackedMat { payload, k, n, orient: Orient::Bt }
     }
 
     /// Pack a [k, n] right operand (A·B orientation) — already k-major,
-    /// so this is a plain copy into the persistent layout.
+    /// so this is a plain copy into the persistent layout (f32 only:
+    /// the A·B orientation packs activations and graph intermediates,
+    /// which stay exact).
     pub fn pack_ab(b: &Tensor) -> PackedMat {
         let (k, n) = b.dims2();
         PACK_OPS.fetch_add(1, Ordering::Relaxed);
-        PackedMat { data: b.data.clone(), k, n, orient: Orient::Ab }
+        PackedMat { payload: Payload::F32(b.data.clone()), k, n, orient: Orient::Ab }
     }
 
     /// Output width n (lanes per activation row).
@@ -109,27 +327,80 @@ impl PackedMat {
         self.orient
     }
 
-    /// Resident bytes of the packed panel.
-    pub fn bytes(&self) -> usize {
-        self.data.len() * std::mem::size_of::<f32>()
+    /// Payload dtype.
+    pub fn quant(&self) -> Quant {
+        match self.payload {
+            Payload::F32(_) => Quant::F32,
+            Payload::Int8 { .. } => Quant::Int8,
+        }
     }
 
-    /// The k-major panel data (tests and kernels).
+    /// Resident bytes of the packed panel (int8: quantized bytes plus
+    /// the f32 scale table).
+    pub fn bytes(&self) -> usize {
+        match &self.payload {
+            Payload::F32(d) => d.len() * std::mem::size_of::<f32>(),
+            Payload::Int8 { q, scales } => {
+                q.len() + scales.len() * std::mem::size_of::<f32>()
+            }
+        }
+    }
+
+    /// The k-major f32 panel data (tests and kernels). Panics on an
+    /// int8 payload — quantized panels expose [`PackedMat::q_data`]
+    /// instead (pack.rs is not a request path; a wrong-dtype access is
+    /// a programming error, not a runtime condition).
     pub fn data(&self) -> &[f32] {
-        &self.data
+        match &self.payload {
+            Payload::F32(d) => d,
+            Payload::Int8 { .. } => {
+                panic!("PackedMat::data on an int8 payload; use q_data()")
+            }
+        }
+    }
+
+    /// The quantized panel (q bytes, scale table), `None` for f32.
+    pub fn q_data(&self) -> Option<(&[i8], &[f32])> {
+        match &self.payload {
+            Payload::F32(_) => None,
+            Payload::Int8 { q, scales } => Some((q, scales)),
+        }
+    }
+
+    /// The k-major panel as f32 values: borrowed data for `F32`,
+    /// dequantized (`q·scale`) for `Int8`.
+    fn panel_f32(&self) -> std::borrow::Cow<'_, [f32]> {
+        match &self.payload {
+            Payload::F32(d) => std::borrow::Cow::Borrowed(d),
+            Payload::Int8 { q, scales } => {
+                let mut out = vec![0.0f32; self.k * self.n];
+                for kk in 0..self.k {
+                    let g = kk / Q8_GROUP;
+                    for j in 0..self.n {
+                        out[kk * self.n + j] =
+                            (q[kk * self.n + j] as f32) * scales[g * self.n + j];
+                    }
+                }
+                std::borrow::Cow::Owned(out)
+            }
+        }
     }
 
     /// Invert the pack: returns the tensor in its original layout
-    /// ([n, k] for [`Orient::Bt`], [k, n] for [`Orient::Ab`]) — a pure
-    /// relayout, so the roundtrip is bit-exact (proptested).
+    /// ([n, k] for [`Orient::Bt`], [k, n] for [`Orient::Ab`]). For f32 a
+    /// pure relayout, so the roundtrip is bit-exact (proptested); for
+    /// int8 the values are the dequantized `q·scale` — exactly what the
+    /// product kernels multiply by, so an unpacked-reference product
+    /// over `unpack()` reproduces the packed int8 product bits.
     pub fn unpack(&self) -> Tensor {
+        let panel = self.panel_f32();
         match self.orient {
-            Orient::Ab => Tensor::new(vec![self.k, self.n], self.data.clone()),
+            Orient::Ab => Tensor::new(vec![self.k, self.n], panel.into_owned()),
             Orient::Bt => {
                 let mut out = vec![0.0f32; self.n * self.k];
                 for kk in 0..self.k {
                     for j in 0..self.n {
-                        out[j * self.k + kk] = self.data[kk * self.n + j];
+                        out[j * self.k + kk] = panel[kk * self.n + j];
                     }
                 }
                 Tensor::new(vec![self.n, self.k], out)
@@ -140,14 +411,15 @@ impl PackedMat {
 
 /// C = A·(packed) for A [m, k]: the packed replacement for both
 /// `matmul_bt(a, w)` (when packed from `w` via [`PackedMat::pack_bt`])
-/// and `matmul(a, b)` (via [`PackedMat::pack_ab`]), bit-identical to
-/// either, with zero per-call transpose or pack work.
+/// and `matmul(a, b)` (via [`PackedMat::pack_ab`]) — bit-identical to
+/// either for f32 payloads, dequant-in-register with the same reduction
+/// order for int8 — with zero per-call transpose or pack work.
 ///
 /// Multi-row products fan out over output-row chunks; single-row
 /// products (the per-token decode hot path) fan out over output-column
 /// chunks through the lane kernel. Same gates as the unpacked paths;
 /// each output element is computed by one worker with the canonical
-/// order, so results are pool-width-independent.
+/// order, so results are pool-width-independent for both dtypes.
 pub fn matmul_packed(a: &Tensor, p: &PackedMat) -> Tensor {
     let (m, k) = a.dims2();
     assert_eq!(
@@ -167,13 +439,22 @@ pub fn matmul_packed(a: &Tensor, p: &PackedMat) -> Tensor {
         } else {
             matvec_packed_into(&a.data, p, &mut c, 0);
         }
-    } else if pl.workers() > 1 && flops >= pool::PAR_THRESHOLD {
-        pl.run_rows1(&mut c, n, |r0, chunk| {
-            let rows = chunk.len() / n;
-            matmul_into(&a.data[r0 * k..(r0 + rows) * k], &p.data, chunk, rows, k, n);
-        });
     } else {
-        matmul_into(&a.data, &p.data, &mut c, m, k, n);
+        let rows_into = |r0: usize, chunk: &mut [f32]| {
+            let rows = chunk.len() / n;
+            let ar = &a.data[r0 * k..(r0 + rows) * k];
+            match &p.payload {
+                Payload::F32(d) => matmul_into(ar, d, chunk, rows, k, n),
+                Payload::Int8 { q, scales } => {
+                    matmul_q8_into(ar, q, scales, Q8_GROUP, chunk, rows, k, n)
+                }
+            }
+        };
+        if pl.workers() > 1 && flops >= pool::PAR_THRESHOLD {
+            pl.run_rows1(&mut c, n, rows_into);
+        } else {
+            rows_into(0, &mut c);
+        }
     }
     Tensor::new(vec![m, n], c)
 }
@@ -181,11 +462,17 @@ pub fn matmul_packed(a: &Tensor, p: &PackedMat) -> Tensor {
 /// Single-row packed product into a caller buffer: columns
 /// [j0, j0+out.len()) of `a · packed` — the kernel [`matmul_packed`]'s
 /// m == 1 (decode) path runs, exposed for callers with preallocated
-/// output segments (canonical lane order, zero allocations).
+/// output segments (canonical lane order for either dtype, zero
+/// allocations).
 pub fn matvec_packed_into(a: &[f32], p: &PackedMat, out: &mut [f32], j0: usize) {
     debug_assert_eq!(a.len(), p.k);
     debug_assert!(j0 + out.len() <= p.n);
-    lane_accum(a, 0, p.k, &p.data, p.n, j0, out);
+    match &p.payload {
+        Payload::F32(d) => lane_accum(a, 0, p.k, d, p.n, j0, out),
+        Payload::Int8 { q, scales } => {
+            lane_accum_q8(a, 0, p.k, q, scales, Q8_GROUP, p.n, j0, out)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -277,6 +564,159 @@ mod tests {
                     .all(|(x, y)| x.to_bits() == y.to_bits()),
                 "pack bytes diverged at {workers} workers"
             );
+        }
+    }
+
+    #[test]
+    fn int8_pack_bytes_pool_width_independent() {
+        let mut rng = Rng::new(29);
+        // 1100 k-rows → 18 scale groups, k·n ≥ PAR_THRESHOLD so the
+        // pooled quantization path actually engages
+        let w = Tensor::randn(&[1024, 1100], 1.0, &mut rng);
+        let serial = {
+            let _g = pool::enter(pool::serial());
+            PackedMat::pack_bt_q(&w, Quant::Int8)
+        };
+        let (sq, ss) = serial.q_data().unwrap();
+        for workers in [2usize, 8] {
+            let par = {
+                let _g = pool::enter(Arc::new(pool::Pool::new(workers)));
+                PackedMat::pack_bt_q(&w, Quant::Int8)
+            };
+            assert_eq!(serial.bytes(), par.bytes());
+            let (pq, ps) = par.q_data().unwrap();
+            assert!(sq == pq, "int8 q bytes diverged at {workers} workers");
+            assert!(
+                ss.iter().zip(ps).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "int8 scales diverged at {workers} workers"
+            );
+        }
+    }
+
+    #[test]
+    fn int8_product_pool_width_independent_and_matches_dequant_reference() {
+        let mut rng = Rng::new(31);
+        let w = Tensor::randn(&[1024, 1100], 1.0, &mut rng);
+        let pm = {
+            let _g = pool::enter(pool::serial());
+            PackedMat::pack_bt_q(&w, Quant::Int8)
+        };
+        // the dequantized weights: an unpacked product over them must
+        // reproduce the packed int8 bits (dequant is elementwise, the
+        // reduction order is shared)
+        let wd = pm.unpack();
+        for &m in &[1usize, 5] {
+            let mut a = Tensor::randn(&[m, 1100], 1.0, &mut rng);
+            a.data[0] = 0.0; // zero-skip parity under int8 too
+            let serial = {
+                let _g = pool::enter(pool::serial());
+                matmul_packed(&a, &pm)
+            };
+            let reference = {
+                let _g = pool::enter(pool::serial());
+                matmul_bt(&a, &wd)
+            };
+            assert!(
+                bits_eq(&serial, &reference),
+                "m={m}: int8 product != product over dequantized weights"
+            );
+            for workers in [2usize, 4, 8] {
+                let par = {
+                    let _g = pool::enter(Arc::new(pool::Pool::new(workers)));
+                    matmul_packed(&a, &pm)
+                };
+                assert!(
+                    bits_eq(&serial, &par),
+                    "m={m}: int8 product diverged at {workers} workers"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int8_matvec_segments_compose() {
+        let mut rng = Rng::new(37);
+        let (k, n) = (150usize, 21usize); // spans 3 scale groups
+        let a = Tensor::randn(&[1, k], 1.0, &mut rng);
+        let w = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let pm = PackedMat::pack_bt_q(&w, Quant::Int8);
+        let whole = matmul_packed(&a, &pm);
+        let mut seg = vec![0.0f32; n];
+        matvec_packed_into(&a.data, &pm, &mut seg[..8], 0);
+        matvec_packed_into(&a.data, &pm, &mut seg[8..15], 8);
+        matvec_packed_into(&a.data, &pm, &mut seg[15..], 15);
+        assert!(
+            whole.data.iter().zip(&seg).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "segmented int8 matvec diverged from the whole row"
+        );
+    }
+
+    #[test]
+    fn int8_bytes_ratio_and_error_bound() {
+        let mut rng = Rng::new(41);
+        let w = Tensor::randn(&[96, 200], 1.0, &mut rng);
+        let f = PackedMat::pack_bt(&w);
+        let q = PackedMat::pack_bt_q(&w, Quant::Int8);
+        // 1 byte + scales (4·⌈k/64⌉/k per weight) ≪ 0.55×4 bytes
+        assert!(
+            (q.bytes() as f64) <= 0.55 * (f.bytes() as f64),
+            "int8 bytes {} not ≤ 0.55× f32 bytes {}",
+            q.bytes(),
+            f.bytes()
+        );
+        // per-element: |w - q·s| ≤ s/2 (+ tiny float slack)
+        let (qd, scales) = q.q_data().unwrap();
+        let (n, k) = w.dims2();
+        for kk in 0..k {
+            let g = kk / Q8_GROUP;
+            for j in 0..n {
+                let orig = w.data[j * k + kk];
+                let s = scales[g * n + j];
+                let deq = (qd[kk * n + j] as f32) * s;
+                assert!(
+                    (orig - deq).abs() <= 0.5 * s + 1e-6,
+                    "({kk},{j}): |{orig} - {deq}| > s/2 (s={s})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rne_rounds_half_to_even() {
+        for (x, want) in [
+            (2.5f32, 2.0f32),
+            (3.5, 4.0),
+            (-2.5, -2.0),
+            (-3.5, -4.0),
+            (0.5, 0.0),
+            (-0.5, 0.0),
+            (1.49, 1.0),
+            (1.51, 2.0),
+            (-1.49, -1.0),
+            (126.5, 126.0),
+            (0.0, 0.0),
+        ] {
+            assert_eq!(rne(x).to_bits(), want.to_bits(), "rne({x})");
+        }
+    }
+
+    #[test]
+    fn int8_zero_lanes_quantize_exactly() {
+        // an all-zero output lane keeps scale 0 and dequantizes to exact
+        // zeros; exact-zero weights inside a live lane stay exactly zero
+        let (n, k) = (3usize, 70usize);
+        let mut w = vec![0.0f32; n * k];
+        for kk in 0..k {
+            w[kk] = 0.25 * ((kk % 7) as f32 - 3.0); // lane 0 live (has zeros at kk%7==3)
+        }
+        let pm = PackedMat::pack_bt_raw_q(&w, n, k, Quant::Int8);
+        let deq = pm.unpack();
+        for kk in 0..k {
+            if w[kk] == 0.0 {
+                assert_eq!(deq.data[kk].to_bits(), 0.0f32.to_bits());
+            }
+            assert_eq!(deq.data[k + kk].to_bits(), 0.0f32.to_bits(), "zero lane 1");
+            assert_eq!(deq.data[2 * k + kk].to_bits(), 0.0f32.to_bits(), "zero lane 2");
         }
     }
 

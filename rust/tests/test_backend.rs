@@ -252,6 +252,121 @@ fn compare_backends_reports_identity() {
     assert!(cmp.single_ms > 0.0 && cmp.threaded_ms > 0.0);
 }
 
+/// Int8 pack bytes are pool-width-independent: quantized panels (q
+/// bytes AND per-group scales) built on a wide pool are bit-identical
+/// to the serial build — quantization is per-lane-group arithmetic over
+/// a fixed index partition, never a reduction race.
+#[test]
+fn int8_pack_cache_bytes_identical_across_pool_widths() {
+    use fasp::model::weights::linear_shorts;
+    use fasp::model::PackCache;
+    use fasp::tensor::Quant;
+    use fasp::util::pool;
+    let m = manifest();
+    let spec = m.model("llama_tiny").unwrap().clone();
+    let w = Weights::init(&spec, 33);
+    let serial = {
+        let _g = pool::enter(pool::serial());
+        PackCache::build_q(&w, Quant::Int8)
+    };
+    assert_eq!(serial.quant(), Quant::Int8);
+    let f32_cache = {
+        let _g = pool::enter(pool::serial());
+        PackCache::build(&w)
+    };
+    assert!(
+        (serial.bytes() as f64) <= 0.55 * f32_cache.bytes() as f64,
+        "int8 cache {} !<= 0.55x f32 cache {}",
+        serial.bytes(),
+        f32_cache.bytes()
+    );
+    for workers in [2usize, 8] {
+        let pooled = {
+            let _g = pool::enter(Arc::new(pool::Pool::new(workers)));
+            PackCache::build_q(&w, Quant::Int8)
+        };
+        assert_eq!(serial.bytes(), pooled.bytes(), "int8 pack bytes at {workers} workers");
+        assert_eq!(serial.count(), pooled.count());
+        for l in 0..spec.n_layers {
+            for short in linear_shorts(&spec.family) {
+                let a = serial.get_l(l, short).unwrap();
+                let b = pooled.get_l(l, short).unwrap();
+                let (aq, asc) = a.q_data().expect("serial panel not int8");
+                let (bq, bsc) = b.q_data().expect("pooled panel not int8");
+                assert_eq!(aq, bq, "layer {l} {short}: q bytes diverged at {workers} workers");
+                assert!(
+                    bits_eq(asc, bsc),
+                    "layer {l} {short}: scales diverged at {workers} workers"
+                );
+            }
+        }
+        let a = serial.get("tok_emb").unwrap();
+        let b = pooled.get("tok_emb").unwrap();
+        let (aq, asc) = a.q_data().unwrap();
+        let (bq, bsc) = b.q_data().unwrap();
+        assert_eq!(aq, bq, "head q bytes diverged at {workers} workers");
+        assert!(bits_eq(asc, bsc), "head scales diverged at {workers} workers");
+    }
+}
+
+/// Int8 greedy decode is deterministic: generation over a quantized
+/// plan is bit-identical across pool widths AND under `FASP_POOL_JITTER`
+/// schedule perturbation — the dequant-in-register kernels keep the
+/// canonical ascending-k one-accumulator-per-lane order, so int8
+/// inherits the exact determinism contract of f32. (Int8 vs *f32*
+/// values differ by the bounded quantization error; int8 vs int8 never
+/// differs.)
+#[test]
+fn int8_generate_bit_identical_across_pool_widths_and_jitter() {
+    use fasp::model::decode::{GenerateOpts, Sampler};
+    use fasp::tensor::{IntTensor, Quant};
+
+    let m = manifest();
+    let (single, threaded) = sessions(&m, "llama_tiny");
+    let spec = single.spec.clone();
+    let w = Weights::init(&spec, 37);
+    let prompt = IntTensor::new(
+        vec![2, 5],
+        (0..10).map(|i| (i * 11 + 2) % spec.vocab as i32).collect(),
+    );
+    let opts = GenerateOpts { max_new: 6, sampler: Sampler::Greedy, seed: 0 };
+
+    let p1 = single.pack_as(&w.packed, Quant::Int8).unwrap();
+    let p2 = threaded.pack_as(&w.packed, Quant::Int8).unwrap();
+    assert_eq!(p1.quant(), Quant::Int8);
+    let pf = single.pack(&w.packed).unwrap();
+    assert!(
+        (p1.pack_bytes() as f64) <= 0.55 * pf.pack_bytes() as f64,
+        "int8 plan {} !<= 0.55x f32 plan {}",
+        p1.pack_bytes(),
+        pf.pack_bytes()
+    );
+
+    let g1 = single.generate(&p1, &prompt, &opts).unwrap();
+    let g2 = threaded.generate(&p2, &prompt, &opts).unwrap();
+    assert_eq!(g1.generated, 6, "int8 generation truncated");
+    assert_eq!(
+        g1.tokens.data, g2.tokens.data,
+        "int8 decode diverged across pool widths 1 vs {THREADS}"
+    );
+
+    let wide =
+        Session::with_backend(&m, "llama_tiny", Arc::new(ThreadedHostBackend::new(8))).unwrap();
+    let p8 = wide.pack_as(&w.packed, Quant::Int8).unwrap();
+    let g8 = wide.generate(&p8, &prompt, &opts).unwrap();
+    assert_eq!(g1.tokens.data, g8.tokens.data, "int8 decode diverged at 8 workers");
+
+    std::env::set_var("FASP_POOL_JITTER", "400");
+    for i in 0..3 {
+        let gj = threaded.generate(&p2, &prompt, &opts).unwrap();
+        assert_eq!(
+            g1.tokens.data, gj.tokens.data,
+            "jitter run {i}: int8 decode diverged"
+        );
+    }
+    std::env::remove_var("FASP_POOL_JITTER");
+}
+
 /// Schedule perturbation: `FASP_POOL_JITTER` delays every spawned pool
 /// worker by a pseudorandom start offset, shuffling fan-out
 /// interleavings — the dynamic complement to the `fasp lint` static

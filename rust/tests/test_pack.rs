@@ -172,6 +172,75 @@ fn toy_spec(family: &str) -> ModelSpec {
     }
 }
 
+/// Quantize → dequantize error-bound property: every element of an int8
+/// panel (and of the flat shard quantizer) reconstructs within half a
+/// scale step of its original, exact zeros reconstruct to exact zero,
+/// `unpack()` agrees bitwise with elementwise dequant, and wide panels
+/// land well under the 0.55× byte budget.
+#[test]
+fn int8_quantize_dequantize_error_bound_property() {
+    use fasp::tensor::pack::{
+        dequantize_flat_range, quantize_flat, PackedMat, Quant, Q8_GROUP,
+    };
+    let mut rng = Rng::new(0x51);
+    for &(n, k) in &[(7usize, 64usize), (33, 150), (64, 256), (10, 1)] {
+        // mixed magnitudes with sprinkled exact zeros and one zero lane
+        let mut w: Vec<f32> = (0..n * k)
+            .map(|_| (rng.below(2000) as f32 - 1000.0) / 97.0)
+            .collect();
+        for i in (0..w.len()).step_by(13) {
+            w[i] = 0.0;
+        }
+        for v in w[..k].iter_mut() {
+            *v = 0.0;
+        }
+        let pm = PackedMat::pack_bt_raw_q(&w, n, k, Quant::Int8);
+        let (q, scales) = pm.q_data().expect("int8 payload");
+        if k >= 64 {
+            assert!(
+                pm.bytes() as f64 <= 0.55 * (4 * n * k) as f64,
+                "[{n}x{k}] int8 panel bytes {} !<= 0.55x f32 {}",
+                pm.bytes(),
+                4 * n * k
+            );
+        }
+        let up = pm.unpack();
+        for j in 0..n {
+            for kk in 0..k {
+                let orig = w[j * k + kk];
+                let s = scales[(kk / Q8_GROUP) * n + j];
+                let deq = q[kk * n + j] as f32 * s;
+                assert!(
+                    (orig - deq).abs() <= 0.5 * s + 1e-6,
+                    "[{n}x{k}] ({j},{kk}): {orig} vs {deq} (scale {s})"
+                );
+                if orig == 0.0 {
+                    assert_eq!(
+                        deq.to_bits(),
+                        0.0f32.to_bits(),
+                        "[{n}x{k}] ({j},{kk}): exact zero must stay exact"
+                    );
+                }
+                assert_eq!(
+                    up.data[j * k + kk].to_bits(),
+                    deq.to_bits(),
+                    "[{n}x{k}] ({j},{kk}): unpack != elementwise dequant"
+                );
+            }
+        }
+        // the flat shard quantizer honors the same per-element bound
+        let (fq, fs) = quantize_flat(&w, Q8_GROUP);
+        let deq = dequantize_flat_range(&fq, &fs, Q8_GROUP, 0, w.len());
+        for (i, (&x, &d)) in w.iter().zip(&deq).enumerate() {
+            let s = fs[i / Q8_GROUP];
+            assert!(
+                (x - d).abs() <= 0.5 * s + 1e-6,
+                "flat elem {i}: {x} vs {d} (scale {s})"
+            );
+        }
+    }
+}
+
 /// `loss_and_grad` with and without a pack cache produce bit-identical
 /// loss and gradients — the gradcol entry's packed forward is exact,
 /// even on ragged (compact-style) specs with a fully sliced head.

@@ -346,6 +346,197 @@ fn compact_registration_synthesizes_metric_entries() {
     std::fs::remove_dir_all(&d).ok();
 }
 
+// ---- int8 quantized shards -----------------------------------------------
+
+/// Int8 sharded export round trip: the index records the dtype per
+/// shard, layer payloads shrink to ~0.27× of f32 (int8 q bytes +
+/// per-group f32 scales + FQ8S header), the embed/head shard stays
+/// exact f32, every assembled (dequantized) weight lands within half a
+/// scale step of its original, and streamed evaluation over the
+/// quantized store is bit-identical across pool widths.
+#[test]
+fn int8_shard_roundtrip_dtype_payload_and_error_bound() {
+    use fasp::runtime::store::ShardKind;
+    use fasp::tensor::pack::{Quant, Q8_GROUP};
+    let name = "lt_store_int8";
+    let cm = make_compact("llama_tiny", name, 19);
+    let d = tmpdir("int8_rt");
+    let jp = compact::save_compact_sharded_q(&d, &cm, Quant::Int8).unwrap();
+    let mut m = manifest();
+    m.register_compact(&jp).unwrap();
+    let store = m.compact_store(name).unwrap();
+    assert_eq!(store.quant(), Quant::Int8);
+    for s in &store.index().shards {
+        match s.kind {
+            ShardKind::Embed => {
+                assert_eq!(s.dtype, Quant::F32, "embed shard must stay f32");
+                assert_eq!(s.payload_bytes(), s.elems * 4);
+            }
+            ShardKind::Layer(_) => {
+                assert_eq!(s.dtype, Quant::Int8, "{}: layer shard not int8", s.file);
+                let groups = (s.elems + Q8_GROUP - 1) / Q8_GROUP;
+                assert_eq!(s.payload_bytes(), 16 + s.elems + 4 * groups);
+                assert!(
+                    (s.payload_bytes() as f64) < 0.30 * (s.elems * 4) as f64,
+                    "{}: int8 payload {} not ~quarter of f32 {}",
+                    s.file,
+                    s.payload_bytes(),
+                    s.elems * 4
+                );
+            }
+        }
+    }
+    assert!(
+        store.total_payload_bytes() < store.total_param_bytes(),
+        "quantized store does not stream fewer bytes than f32"
+    );
+    assert!(store.max_layer_payload_bytes() < store.max_layer_bytes());
+
+    // assembled weights dequantize within half a scale step of the
+    // originals (every group scale is <= global amax / 127), and exact
+    // zeros survive exactly
+    let re = m.compact_weights(name).unwrap();
+    let orig = &cm.weights.packed.data;
+    assert_eq!(re.packed.data.len(), orig.len());
+    let amax = orig.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    let bound = 0.5 * amax / 127.0 + 1e-6;
+    for (i, (&x, &y)) in orig.iter().zip(&re.packed.data).enumerate() {
+        assert!(
+            (x - y).abs() <= bound,
+            "elem {i}: {x} vs dequantized {y} exceeds bound {bound}"
+        );
+        if x == 0.0 {
+            assert_eq!(y.to_bits(), 0.0f32.to_bits(), "elem {i}: exact zero must survive");
+        }
+    }
+
+    // streamed ppl over the int8 store: finite, and f64-bit-identical
+    // across pool widths / prefetch depths
+    let spec = m.model(name).unwrap().clone();
+    let ds = Dataset::new(Corpus::new(spec.vocab, 23), spec.batch, spec.seq, 4);
+    let eval_b = ds.valid_batches(2);
+    let s1 = Session::with_backend(&m, name, Arc::new(HostBackend::new())).unwrap();
+    let s2 = Session::with_backend(&m, name, Arc::new(ThreadedHostBackend::new(4))).unwrap();
+    let ppl1 = perplexity_streamed(&s1, &store, &eval_b).unwrap();
+    let ppl2 = perplexity_streamed(&s2, &store, &eval_b).unwrap();
+    assert!(ppl1.is_finite() && ppl1 > 0.0, "int8 streamed ppl not finite: {ppl1}");
+    assert_eq!(
+        ppl1.to_bits(),
+        ppl2.to_bits(),
+        "int8 streamed ppl diverged across pool widths: {ppl1} vs {ppl2}"
+    );
+    std::fs::remove_dir_all(&d).ok();
+}
+
+/// Streamed int8 decode: `generate_streamed` over a quantized store is
+/// bit-identical across pool widths / prefetch depths and across
+/// replays — the prefetch thread quantizes panels with the same
+/// fixed-partition arithmetic as the synchronous path.
+#[test]
+fn int8_streamed_decode_bit_identical_across_pool_widths() {
+    use fasp::model::decode::{GenerateOpts, Sampler};
+    use fasp::tensor::pack::Quant;
+    use fasp::tensor::IntTensor;
+    let name = "lt_store_int8_gen";
+    let cm = make_compact("llama_tiny", name, 27);
+    let d = tmpdir("int8_gen");
+    let jp = compact::save_compact_sharded_q(&d, &cm, Quant::Int8).unwrap();
+    let mut m = manifest();
+    m.register_compact(&jp).unwrap();
+    let store = m.compact_store(name).unwrap();
+    let spec = m.model(name).unwrap().clone();
+    let prompt = IntTensor::new(
+        vec![2, 4],
+        (0..8).map(|i| (i * 5 + 1) % spec.vocab as i32).collect(),
+    );
+    let opts = GenerateOpts { max_new: 5, sampler: Sampler::Greedy, seed: 0 };
+    let single = Session::with_backend(&m, name, Arc::new(HostBackend::new())).unwrap();
+    let threaded =
+        Session::with_backend(&m, name, Arc::new(ThreadedHostBackend::new(4))).unwrap();
+    let g1 = single.generate_streamed(&store, &prompt, &opts).unwrap();
+    let g2 = threaded.generate_streamed(&store, &prompt, &opts).unwrap();
+    let g3 = threaded.generate_streamed(&store, &prompt, &opts).unwrap();
+    assert_eq!(g1.generated, 5, "int8 streamed generation truncated");
+    assert_eq!(
+        g1.tokens.data, g2.tokens.data,
+        "int8 streamed decode diverged across pool widths"
+    );
+    assert_eq!(g2.tokens.data, g3.tokens.data, "int8 streamed decode replay diverged");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+/// Int8 shard integrity: checksums cover the written (quantized) bytes,
+/// so a flipped byte or a truncation in an FQ8S layer shard is rejected
+/// exactly like an f32 shard.
+#[test]
+fn corrupt_and_truncated_int8_shards_rejected() {
+    use fasp::tensor::pack::Quant;
+    let name = "int8_corrupt";
+    let d = tmpdir("int8_fail");
+    let cm = make_compact("llama_tiny", name, 3);
+    let jp = compact::save_compact_sharded_q(&d, &cm, Quant::Int8).unwrap();
+    let spath = d.join(format!("{name}.layer001.ftns"));
+    let orig = std::fs::read(&spath).unwrap();
+
+    // flipped byte: same length, different payload
+    let mut bytes = orig.clone();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&spath, &bytes).unwrap();
+    let mut m = manifest();
+    m.register_compact(&jp).unwrap();
+    let err = m.compact_weights(name).unwrap_err();
+    assert!(format!("{err:#}").contains("checksum mismatch"), "{err:#}");
+
+    // truncation: half the file
+    std::fs::write(&spath, &orig[..orig.len() / 2]).unwrap();
+    let mut m2 = manifest();
+    m2.register_compact(&jp).unwrap();
+    let err2 = m2.compact_weights(name).unwrap_err();
+    assert!(format!("{err2:#}").contains("checksum mismatch"), "{err2:#}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+/// Old-format compat: an f32 shard index written before the dtype field
+/// existed (no "dtype" key on any shard entry) must load as `F32` with
+/// bit-identical weights — the quantization change cannot orphan
+/// existing sharded artifacts.
+#[test]
+fn legacy_shard_index_without_dtype_loads_as_f32() {
+    use fasp::tensor::pack::Quant;
+    let name = "legacy_dtype";
+    let d = tmpdir("legacy_dtype");
+    let cm = make_compact("llama_tiny", name, 29);
+    let jp = compact::save_compact_sharded(&d, &cm).unwrap();
+    // strip the dtype field from every shard entry, as an old writer
+    // would have produced
+    let j = Json::parse(&std::fs::read_to_string(&jp).unwrap()).unwrap();
+    let mut obj = j.as_obj().unwrap().clone();
+    let shards: Vec<Json> = obj["shards"]
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| {
+            let mut so = s.as_obj().unwrap().clone();
+            assert!(so.remove("dtype").is_some(), "new index should carry dtype");
+            Json::Obj(so)
+        })
+        .collect();
+    obj.insert("shards".to_string(), Json::Arr(shards));
+    std::fs::write(&jp, Json::Obj(obj).pretty()).unwrap();
+
+    let mut m = manifest();
+    m.register_compact(&jp).unwrap();
+    let store = m.compact_store(name).unwrap();
+    assert_eq!(store.quant(), Quant::F32, "legacy index must default to f32");
+    let w = m.compact_weights(name).unwrap();
+    assert!(
+        bits_eq(&w.packed.data, &cm.weights.packed.data),
+        "legacy f32 round trip diverged"
+    );
+    std::fs::remove_dir_all(&d).ok();
+}
+
 // ---- export-mode env axis ------------------------------------------------
 
 /// `verify.sh` runs the tier-1 suite under both `FASP_EXPORT=monolithic`

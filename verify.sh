@@ -8,15 +8,20 @@
 #      against the justified allowlist in rust/lint_allow.toml. Any
 #      non-allowlisted finding (or stale allowlist entry) fails verify
 #      before the test matrix even starts. Writes LINT_REPORT.json.
-#   3. full test suite (quiet), twice, crossing both matrix axes:
+#   3. full test suite (quiet), three times, crossing the matrix axes:
 #      - FASP_THREADS=1 + FASP_EXPORT=monolithic pins the serial
 #        HostBackend and the classic one-file compact export;
 #      - the default (threaded) run sets FASP_EXPORT=sharded so the
 #        env-sensitive export paths (save_compact_auto, `fasp compact`)
-#        exercise the sharded store.
-#      Outputs are bit-identical by contract across both axes
-#      (test_backend.rs for threads, test_store.rs for storage), so both
-#      runs must pass identically.
+#        exercise the sharded store;
+#      - FASP_QUANT=int8 re-runs the threaded+sharded leg with the
+#        quantized packed-panel dtype armed at every CLI boundary; the
+#        library pins its own dtypes (Session::pack is always f32), so
+#        all bitwise contracts must hold identically under this env.
+#      Outputs are bit-identical by contract across all axes
+#      (test_backend.rs for threads, test_store.rs for storage,
+#      test_pack.rs for the quantized panels), so all runs must pass
+#      identically.
 #   4. bench_prune_time in check mode — a shrunk matrix that writes
 #      BENCH_prune_time.json (method mean times + the repack stage's
 #      fraction of prune wall-time) so perf regressions in the pruning
@@ -46,7 +51,11 @@
 #      too.
 #   6. a `fasp generate` smoke (deterministic --init weights) under both
 #      FASP_THREADS=1 and the default threaded backend — the CLI decode
-#      path must run end to end on both backends.
+#      path must run end to end on both backends — plus an
+#      FASP_QUANT=int8 leg of the same smoke on both backends and an
+#      int8 `fasp serve --check` (the serve replay check compares two
+#      runs of the same quantized plan, so bit-identity holds at int8
+#      exactly as at f32).
 #   7. a `fasp generate --draft --check` smoke under both backends: a
 #      draft compact model is synthesized on the fly, decodes
 #      speculatively, and the greedy output is asserted bit-identical
@@ -77,12 +86,23 @@ FASP_THREADS=1 FASP_EXPORT=monolithic cargo test -q
 echo "== cargo test -q (default threaded backend; sharded export) =="
 FASP_EXPORT=sharded cargo test -q
 
+echo "== cargo test -q (FASP_QUANT=int8; threaded; sharded export) =="
+FASP_QUANT=int8 FASP_EXPORT=sharded cargo test -q
+
 echo "== fasp generate smoke (FASP_THREADS=1, serial backend) =="
 FASP_THREADS=1 cargo run --release --quiet -- generate \
   --model llama_tiny --init --prompt-len 8 --max-new 8 --fast
 
 echo "== fasp generate smoke (default threaded backend) =="
 cargo run --release --quiet -- generate \
+  --model llama_tiny --init --prompt-len 8 --max-new 8 --fast
+
+echo "== fasp generate smoke (FASP_QUANT=int8, serial backend) =="
+FASP_QUANT=int8 FASP_THREADS=1 cargo run --release --quiet -- generate \
+  --model llama_tiny --init --prompt-len 8 --max-new 8 --fast
+
+echo "== fasp generate smoke (FASP_QUANT=int8, threaded backend) =="
+FASP_QUANT=int8 cargo run --release --quiet -- generate \
   --model llama_tiny --init --prompt-len 8 --max-new 8 --fast
 
 echo "== fasp generate --draft smoke (FASP_THREADS=1, serial backend) =="
@@ -101,6 +121,10 @@ FASP_THREADS=1 cargo run --release --quiet -- serve \
 
 echo "== fasp serve smoke (default threaded backend) =="
 cargo run --release --quiet -- serve \
+  --model llama_tiny --init --sessions 6 --prompt-len 8 --max-new 6 --check --fast
+
+echo "== fasp serve smoke (FASP_QUANT=int8, threaded backend) =="
+FASP_QUANT=int8 cargo run --release --quiet -- serve \
   --model llama_tiny --init --sessions 6 --prompt-len 8 --max-new 6 --check --fast
 
 echo "== fasp chaos smoke (FASP_THREADS=1, serial backend) =="
